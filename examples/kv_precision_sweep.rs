@@ -1,0 +1,58 @@
+//! KV-precision sensitivity on the **real** engine (the Fig 21 analogue on
+//! this testbed): serve the same workload at KV16 / KV8 / KV4 and compare
+//! throughput and KV-pool footprint.
+//!
+//!     cargo run --release --example kv_precision_sweep
+
+use std::time::Instant;
+
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, Request};
+use turbomind::util::rng::Rng;
+
+fn run(precision: &str, artifacts: &str) -> anyhow::Result<(f64, usize, usize)> {
+    let cfg = EngineConfig {
+        artifacts_dir: artifacts.to_string(),
+        precision: precision.parse().map_err(|e| anyhow::anyhow!("{e}"))?,
+        max_batch: 4,
+        kv_pool_tokens: 16 * 512,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    engine.warmup()?;
+    let mut rng = Rng::new(9);
+    for i in 0..8 {
+        let prompt: Vec<i32> = (0..24 + 8 * i).map(|_| rng.below(2048) as i32).collect();
+        engine.submit(Request::new(prompt, 24))?;
+    }
+    let t0 = Instant::now();
+    let outs = engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let gen: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    // Bytes one full pool would occupy at this precision.
+    let pool = engine.kv_pool();
+    let pool_bytes = pool.total_blocks() * pool.block_tokens() * pool.token_code_bytes();
+    Ok((gen as f64 / wall, gen, pool_bytes))
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("KV-precision sweep on the real engine (W4 weights, 8 requests x 24 tokens)\n");
+    println!("{:<12} {:>12} {:>10} {:>16}", "precision", "tok/s", "tokens", "kv pool bytes");
+    let mut first = 0.0;
+    for (i, prec) in ["W4A16KV16", "W4A16KV8", "W4A16KV4"].iter().enumerate() {
+        let (thr, gen, pool_bytes) = run(prec, &artifacts)?;
+        if i == 0 {
+            first = thr;
+        }
+        println!(
+            "{:<12} {:>12.1} {:>10} {:>16} ({:+.1}% vs KV16)",
+            prec, thr, gen, pool_bytes,
+            (thr / first - 1.0) * 100.0
+        );
+    }
+    println!("\npaper Fig 21: KV8 avg +11.9%, KV4 avg +18.3% at scale;");
+    println!("on CPU-PJRT the win shows up as the 2-4x smaller pool footprint —");
+    println!("the same pool budget holds 2-4x more concurrent sequences.");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, serve a handful of requests through
+//! the mixed-precision engine, and print tokens + serving metrics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This exercises the whole stack: Rust coordinator → paged quantized KV
+//! pool → PJRT-compiled JAX graphs → Pallas mixed-precision kernels.
+
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, Request};
+use turbomind::metrics::MetricsCollector;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let cfg = EngineConfig {
+        artifacts_dir: artifacts,
+        precision: "W4A16KV8".parse().unwrap(),
+        max_batch: 4,
+        kv_pool_tokens: 16 * 512,
+        ..EngineConfig::default()
+    };
+    println!("loading engine ({} …)", cfg.precision);
+    let mut engine = Engine::new(cfg)?;
+    engine.warmup()?;
+    let m = engine.model().clone();
+    println!(
+        "model {}: {} layers, d_model {}, vocab {}",
+        m.name, m.n_layers, m.d_model, m.vocab_size
+    );
+
+    // Eight deterministic prompts (token ids; tokenization is out of scope).
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| (0..12 + i * 5).map(|j| ((i * 131 + j * 17 + 3) % 2048) as i32).collect())
+        .collect();
+    let t0 = std::time::Instant::now();
+    for p in &prompts {
+        engine.submit(Request::new(p.clone(), 16))?;
+    }
+    let outputs = engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut metrics = MetricsCollector::new();
+    for o in &outputs {
+        println!(
+            "req {:>2}  prompt {:>3} tok  ttft {:>6.3}s  latency {:>6.3}s  → {:?}",
+            o.id, o.prompt_len, o.ttft, o.latency,
+            &o.tokens[..o.tokens.len().min(8)]
+        );
+        metrics.record(o.latency, o.ttft, o.latency, o.prompt_len, o.tokens.len());
+    }
+    let lat = metrics.latency_percentiles().unwrap();
+    let (ptoks, gtoks) = metrics.total_tokens();
+    println!("\n{} requests in {wall:.2}s", outputs.len());
+    println!("latency p50 {:.3}s  p90 {:.3}s  p99 {:.3}s", lat.p50, lat.p90, lat.p99);
+    println!(
+        "prompt tokens {ptoks}, generated {gtoks} ({:.1} tok/s end-to-end)",
+        gtoks as f64 / wall
+    );
+    println!(
+        "engine: {} prefill iters, {} decode iters, {} padded slots",
+        engine.stats.prefill_iters, engine.stats.decode_iters, engine.stats.padded_slots
+    );
+    Ok(())
+}

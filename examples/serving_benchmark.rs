@@ -1,0 +1,86 @@
+//! End-to-end serving benchmark on the **real** engine: a Poisson arrival
+//! trace with ShareGPT-shaped lengths (scaled to the tiny model's context),
+//! reporting throughput, TTFT, and latency percentiles — the paper's §5.1
+//! metrics measured on this testbed. This is the repository's headline
+//! end-to-end validation run (EXPERIMENTS.md).
+//!
+//!     cargo run --release --example serving_benchmark -- \
+//!         --rate 2.0 --requests 24 --precision W4A16KV8
+
+use std::time::Instant;
+
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, Request};
+use turbomind::metrics::MetricsCollector;
+use turbomind::util::args::Args;
+use turbomind::workload::{WorkloadGen, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let rate = args.get_f64("rate", 2.0);
+    let n = args.get_usize("requests", 24);
+    let precision = args.get_or("precision", "W4A16KV8").to_string();
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+
+    let cfg = EngineConfig {
+        artifacts_dir: artifacts,
+        precision: precision.parse().map_err(|e| anyhow::anyhow!("{e}"))?,
+        max_batch: 8,
+        kv_pool_tokens: 16 * 1024,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    engine.warmup()?;
+    let vocab = engine.model().vocab_size;
+
+    // ShareGPT-shaped lengths scaled into the tiny model's 512 context.
+    let gen = WorkloadGen::new(WorkloadKind::Chat, rate, 42);
+    let trace = gen.generate_scaled(n, 128, 48);
+
+    println!("serving {n} requests at {rate} req/s, precision {precision}");
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut metrics = MetricsCollector::new();
+    let mut done = 0usize;
+    while done < n {
+        // Submit every request whose arrival time has passed (open-loop).
+        let now = t0.elapsed().as_secs_f64();
+        while submitted < n && trace[submitted].arrival_s <= now {
+            let r = &trace[submitted];
+            let prompt = gen.prompt_tokens(submitted, r.prompt_tokens, vocab);
+            engine.submit(Request::new(prompt, r.gen_tokens))?;
+            submitted += 1;
+        }
+        if engine.has_work() {
+            engine.step()?;
+        } else if submitted < n {
+            // Idle until the next arrival.
+            let wait = trace[submitted].arrival_s - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
+            }
+        }
+        for o in engine.take_outputs() {
+            let now = t0.elapsed().as_secs_f64();
+            metrics.record(o.latency, o.ttft, now, o.prompt_len, o.tokens.len());
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lat = metrics.latency_percentiles().unwrap();
+    let ttft = metrics.ttft_percentiles().unwrap();
+    let (ptoks, gtoks) = metrics.total_tokens();
+    println!("\n== serving results ({precision}) ==");
+    println!("wall time          : {wall:.2}s");
+    println!("request throughput : {:.3} req/s", n as f64 / wall);
+    println!("token throughput   : {:.1} tok/s generated ({ptoks} prompt, {gtoks} gen)",
+             gtoks as f64 / wall);
+    println!("TTFT    p50 {:>7.3}s  p90 {:>7.3}s  p99 {:>7.3}s", ttft.p50, ttft.p90, ttft.p99);
+    println!("latency p50 {:>7.3}s  p90 {:>7.3}s  p99 {:>7.3}s", lat.p50, lat.p90, lat.p99);
+    println!(
+        "engine stats: {} prefill iters, {} decode iters, {} aborted",
+        engine.stats.prefill_iters, engine.stats.decode_iters, engine.stats.aborted
+    );
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Networked serving demo: start the JSON-lines TCP server on a background
+//! engine and drive it with concurrent clients — the deployment shape a
+//! downstream user would run (`turbomind serve` wraps the same path).
+//!
+//!     cargo run --release --example tcp_server
+
+use std::thread;
+
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::Engine;
+use turbomind::server::{serve, Client};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let addr = "127.0.0.1:7181";
+    let n_clients = 3usize;
+    let per_client = 2usize;
+
+    let cfg = EngineConfig {
+        artifacts_dir: artifacts,
+        precision: "W4A16KV8".parse().unwrap(),
+        max_batch: 4,
+        kv_pool_tokens: 16 * 512,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(cfg)?;
+    engine.warmup()?;
+
+    // Client threads (the engine must own the main thread: PJRT handles are
+    // not Send).
+    let mut handles = vec![];
+    for c in 0..n_clients {
+        handles.push(thread::spawn(move || -> anyhow::Result<()> {
+            // Wait for the listener.
+            let mut client = loop {
+                match Client::connect(addr) {
+                    Ok(cl) => break cl,
+                    Err(_) => thread::sleep(std::time::Duration::from_millis(50)),
+                }
+            };
+            for r in 0..per_client {
+                let prompt: Vec<i32> =
+                    (0..16).map(|j| ((c * 997 + r * 131 + j * 7) % 2048) as i32).collect();
+                let resp = client.generate(&prompt, 8)?;
+                println!(
+                    "client {c} req {r}: finish={} tokens={}",
+                    resp.req_str("finish").unwrap_or("?"),
+                    resp.req_arr("tokens").map(|t| t.len()).unwrap_or(0),
+                );
+            }
+            Ok(())
+        }));
+    }
+
+    // Serve exactly the expected number of requests, then return.
+    serve(engine, addr, Some(n_clients * per_client))?;
+    for h in handles {
+        h.join().expect("client thread")?;
+    }
+    println!("tcp_server demo complete");
+    Ok(())
+}

@@ -1,0 +1,267 @@
+"""AOT compilation: lower every served graph variant to HLO **text** and
+emit the weight binaries + manifest the Rust runtime consumes.
+
+Run once via ``make artifacts``; Python never runs on the request path.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact matrix (DESIGN.md §2):
+
+* decode graphs: ``w4 × {kv16, kv8, kv4}`` + ``w16 × kv16``, each at batch
+  sizes {1, 2, 4, 8};
+* prefill graphs: the same four precision pairs at chunk lengths {32, 128};
+* microkernel graphs (integration-test fixtures): ``gemm_w4``, ``gemm_w8``,
+  ``attn_kv8``, ``attn_kv4``.
+
+Outputs in ``--out-dir``:
+  ``<name>.hlo.txt`` per graph, ``weights_w16.bin`` / ``weights_w4.bin``
+  (raw little-endian tensor concatenations), and ``manifest.json``
+  describing graphs (input/output signatures) and weight tensor layouts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantize as Q
+from .kernels import mp_attention, mp_gemm
+
+DECODE_BATCHES = (1, 2, 4, 8)
+# Decode context buckets: the engine picks the smallest padded KV extent
+# covering the batch's longest sequence, so short contexts do not pay for
+# a full max_seq_len attention scan (§Perf).
+DECODE_T = (128, 512)
+PREFILL_CHUNKS = (32, 128)
+# (weight precision, kv precision) pairs compiled for the engine.
+VARIANTS = (("w4", "kv16"), ("w4", "kv8"), ("w4", "kv4"), ("w16", "kv16"))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {
+        jnp.float32.dtype: "f32",
+        jnp.int32.dtype: "i32",
+        jnp.int8.dtype: "i8",
+        jnp.uint8.dtype: "u8",
+    }[np.dtype(dt)]
+
+
+def _spec(shape, dt):
+    return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+
+def _input_entry(name, spec):
+    return {"name": name, "dtype": _dtype_name(spec.dtype), "shape": list(spec.shape)}
+
+
+def weight_arg_specs(spec: M.ModelSpec, wprec: str, params: dict):
+    """(names, ShapeDtypeStructs) for the weight tail of every graph."""
+    names = M.weight_input_names(wprec)
+    specs = [_spec(params[n].shape, params[n].dtype) for n in names]
+    return names, specs
+
+
+def decode_arg_specs(spec: M.ModelSpec, kvprec: str, batch: int, t_pad: int):
+    kshape, sshape, kdt = M.kv_cache_shapes(spec, kvprec, batch, t_pad)
+    return [
+        ("tokens", _spec((batch,), jnp.int32)),
+        ("kv_len", _spec((batch,), jnp.int32)),
+        ("kv_k", _spec(kshape, kdt)),
+        ("kv_k_scale", _spec(sshape, jnp.float32)),
+        ("kv_v", _spec(kshape, kdt)),
+        ("kv_v_scale", _spec(sshape, jnp.float32)),
+    ]
+
+
+def prefill_arg_specs(spec: M.ModelSpec, kvprec: str, chunk: int):
+    kshape, sshape, kdt = M.kv_cache_shapes(spec, kvprec, 1)
+    return [
+        ("tokens", _spec((chunk,), jnp.int32)),
+        ("past_len", _spec((1,), jnp.int32)),
+        ("kv_k", _spec(kshape, kdt)),
+        ("kv_k_scale", _spec(sshape, jnp.float32)),
+        ("kv_v", _spec(kshape, kdt)),
+        ("kv_v_scale", _spec(sshape, jnp.float32)),
+    ]
+
+
+def lower_graph(fn, arg_specs, weight_specs):
+    # keep_unused=True: the kv16 variants ignore the scale inputs, but the
+    # Rust engine feeds a uniform signature — unused args must stay in the
+    # compiled program's parameter list.
+    args = [s for _, s in arg_specs] + list(weight_specs)
+    return jax.jit(fn, keep_unused=True).lower(*args)
+
+
+def write_weights_bin(path: str, names: list[str], params: dict) -> list[dict]:
+    """Concatenate tensors (row-major, little-endian) and return the layout
+    table for the manifest."""
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for n in names:
+            arr = np.ascontiguousarray(params[n])
+            raw = arr.tobytes()
+            table.append({
+                "name": n,
+                "dtype": _dtype_name(arr.dtype),
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            })
+            f.write(raw)
+            offset += len(raw)
+    return table
+
+
+def microkernel_graphs(spec: M.ModelSpec):
+    """Small standalone kernel graphs used by Rust integration tests."""
+    m, k, n, g = 8, 256, 256, spec.group_size
+    b, h, hkv, t, d = 2, spec.n_heads, spec.n_kv_heads, 128, spec.head_dim
+
+    def gemm_w4(x, wp, s):
+        return (mp_gemm.gemm_w4(x, wp, s, group_size=g),)
+
+    def gemm_w8(x, wc, s):
+        return (mp_gemm.gemm_w8(x, wc, s, group_size=g),)
+
+    def attn_kv8(q, kq, ks, vq, vs, ln):
+        return (mp_attention.attention_decode_kv8(q, kq, ks, vq, vs, ln),)
+
+    def attn_kv4(q, kp, ks, vp, vs, ln):
+        return (mp_attention.attention_decode_kv4(q, kp, ks, vp, vs, ln),)
+
+    return {
+        "kernel_gemm_w4": (gemm_w4, [
+            ("x", _spec((m, k), jnp.float32)),
+            ("w_packed", _spec((k // 2, n), jnp.uint8)),
+            ("scales", _spec((k // g, n), jnp.float32)),
+        ]),
+        "kernel_gemm_w8": (gemm_w8, [
+            ("x", _spec((m, k), jnp.float32)),
+            ("w_codes", _spec((k, n), jnp.int8)),
+            ("scales", _spec((k // g, n), jnp.float32)),
+        ]),
+        "kernel_attn_kv8": (attn_kv8, [
+            ("q", _spec((b, h, d), jnp.float32)),
+            ("k_q", _spec((b, hkv, t, d), jnp.int8)),
+            ("k_scale", _spec((b, hkv, t), jnp.float32)),
+            ("v_q", _spec((b, hkv, t, d), jnp.int8)),
+            ("v_scale", _spec((b, hkv, t), jnp.float32)),
+            ("kv_len", _spec((b,), jnp.int32)),
+        ]),
+        "kernel_attn_kv4": (attn_kv4, [
+            ("q", _spec((b, h, d), jnp.float32)),
+            ("k_p", _spec((b, hkv, t, d // 2), jnp.uint8)),
+            ("k_scale", _spec((b, hkv, t), jnp.float32)),
+            ("v_p", _spec((b, hkv, t, d // 2), jnp.uint8)),
+            ("v_scale", _spec((b, hkv, t), jnp.float32)),
+            ("kv_len", _spec((b,), jnp.int32)),
+        ]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="only compile batch-1 decode + one prefill per variant")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    spec = M.ModelSpec()
+    params16 = M.init_params(spec, seed=args.seed)
+    params4 = M.quantize_params_w4(spec, params16)
+    by_prec = {"w16": params16, "w4": params4}
+
+    manifest: dict = {
+        "model": {
+            "name": "tiny-qwen",
+            "n_layers": spec.n_layers,
+            "d_model": spec.d_model,
+            "n_heads": spec.n_heads,
+            "n_kv_heads": spec.n_kv_heads,
+            "head_dim": spec.head_dim,
+            "d_ff": spec.d_ff,
+            "vocab_size": spec.vocab_size,
+            "max_seq_len": spec.max_seq_len,
+            "group_size": spec.group_size,
+            "seed": args.seed,
+        },
+        "decode_batches": list(DECODE_BATCHES),
+        "decode_t": list(DECODE_T),
+        "prefill_chunks": list(PREFILL_CHUNKS),
+        "graphs": [],
+        "weights": {},
+    }
+
+    # Weight binaries.
+    for wprec, params in by_prec.items():
+        names = M.weight_input_names(wprec)
+        bin_name = f"weights_{wprec}.bin"
+        table = write_weights_bin(os.path.join(args.out_dir, bin_name), names, params)
+        manifest["weights"][wprec] = {"file": bin_name, "tensors": table}
+        print(f"wrote {bin_name} ({sum(t['nbytes'] for t in table)} bytes)")
+
+    batches = DECODE_BATCHES[:1] if args.quick else DECODE_BATCHES
+    chunks = PREFILL_CHUNKS[:1] if args.quick else PREFILL_CHUNKS
+
+    def emit(name: str, lowered, arg_specs, weight_names):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["graphs"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [_input_entry(n, s) for n, s in arg_specs],
+            "weight_inputs": weight_names,
+        })
+        print(f"lowered {fname} ({len(text)} chars)")
+
+    for wprec, kvprec in VARIANTS:
+        params = by_prec[wprec]
+        wnames, wspecs = weight_arg_specs(spec, wprec, params)
+        for b in batches:
+            for t_pad in DECODE_T:
+                fn = M.make_decode_step(spec, wprec, kvprec)
+                arg_specs = decode_arg_specs(spec, kvprec, b, t_pad)
+                lowered = lower_graph(fn, arg_specs, wspecs)
+                emit(f"decode_{wprec}_{kvprec}_b{b}_t{t_pad}", lowered, arg_specs, wnames)
+        for s in chunks:
+            fn = M.make_prefill(spec, wprec, kvprec)
+            arg_specs = prefill_arg_specs(spec, kvprec, s)
+            lowered = lower_graph(fn, arg_specs, wspecs)
+            emit(f"prefill_{wprec}_{kvprec}_s{s}", lowered, arg_specs, wnames)
+
+    for name, (fn, arg_specs) in microkernel_graphs(spec).items():
+        lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in arg_specs])
+        emit(name, lowered, arg_specs, [])
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['graphs'])} graphs")
+
+
+if __name__ == "__main__":
+    main()

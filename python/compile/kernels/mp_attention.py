@@ -1,0 +1,143 @@
+"""Layer-1 Pallas kernel: the paper's **attention pipeline** (§3.4, §4.2, §4.4).
+
+Single-token decode attention over a *quantized* KV history. Structure maps
+the paper's mechanisms onto the TPU model (DESIGN.md §Hardware-Adaptation):
+
+* **Arbitrary Q/K/V precision combinations** — one kernel body parameterized
+  over KV16 / KV8 / KV4; Q stays full precision and is aligned to the K tile
+  layout once per head by the BlockSpec index map (the §4.2 adaptive head
+  alignment: alignment is a *load-layout* decision, not an extra dequant
+  pass over the KV cache).
+* **KV memory loading pipeline (§4.4)** — the kernel streams the KV history
+  in 64-token macro-tiles (Figure 10) with an online-softmax accumulator;
+  dequantization (I2F + scale FMA) happens per-tile between the load and
+  the MXU contraction, and the Pallas grid pipeline overlaps the next
+  tile's HBM→VMEM DMA with current compute.
+* **GQA routing** — grid programs are (batch, query-head); the index map
+  folds the query head onto its KV head, so no repeated-KV materialization.
+
+Runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Macro-tile size of the KV loading pipeline (paper Figure 10: 64-token
+# macro-tiles processed as 16-value micro-tiles; interpret mode models the
+# macro level).
+KV_TILE = 64
+
+
+def _deq_tile(kind: str, k_tile, scale_tile):
+    """Dequantize one KV tile. ``k_tile``: [TC, D] codes (or [TC, D/2] packed
+    for int4, or f32 for kv16); ``scale_tile``: [TC] f32."""
+    if kind == "f32":
+        return k_tile
+    if kind == "int8":
+        return k_tile.astype(jnp.float32) * scale_tile[:, None]
+    if kind == "int4":
+        lo = (k_tile & 0x0F).astype(jnp.int32)
+        hi = (k_tile >> 4).astype(jnp.int32)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        tc, d2 = k_tile.shape
+        codes = jnp.stack([lo, hi], axis=-1).reshape(tc, d2 * 2)
+        return codes.astype(jnp.float32) * scale_tile[:, None]
+    raise ValueError(kind)
+
+
+def _attn_decode_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, len_ref, o_ref,
+                        *, kind: str, t_pad: int, d: int):
+    """One (batch, head) program: stream KV tiles with online softmax."""
+    q = q_ref[0, 0, :]  # [D]
+    kv_len = len_ref[0]
+    scale = 1.0 / (d ** 0.5)
+
+    n_tiles = t_pad // KV_TILE
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        ts = i * KV_TILE
+        k_tile = pl.load(k_ref, (0, 0, pl.dslice(ts, KV_TILE), slice(None)))
+        ks_tile = pl.load(ks_ref, (0, 0, pl.dslice(ts, KV_TILE)))
+        v_tile = pl.load(v_ref, (0, 0, pl.dslice(ts, KV_TILE), slice(None)))
+        vs_tile = pl.load(vs_ref, (0, 0, pl.dslice(ts, KV_TILE)))
+
+        # I2F + scale FMA on the tile already in VMEM — overlapped with the
+        # next tile's DMA by the pipeline.
+        k_f = _deq_tile(kind, k_tile, ks_tile)  # [TC, D]
+        v_f = _deq_tile(kind, v_tile, vs_tile)
+
+        s = (k_f @ q) * scale  # [TC]
+        mask = (ts + jax.lax.iota(jnp.int32, KV_TILE)) < kv_len
+        s = jnp.where(mask, s, -1e30)
+
+        m_new = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # [TC]
+        l_new = l_prev * alpha + p.sum()
+        acc_new = acc_prev * alpha + p @ v_f  # [D]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(-1e30)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    # kv_len >= 1 always holds on the decode path (the prompt has at least
+    # one token); guard anyway so padding-only programs emit zeros.
+    o_ref[0, 0, :] = jnp.where(l > 0, acc / l, 0.0)
+
+
+def _attention_decode(q, k, ks, v, vs, kv_len, *, kind: str):
+    b, h, d = q.shape
+    hkv, t_pad = k.shape[1], k.shape[2]
+    group = h // hkv
+    assert t_pad % KV_TILE == 0, f"T={t_pad} must be a multiple of {KV_TILE}"
+    kd = k.shape[3]  # D or D/2 (int4-packed)
+
+    grid = (b, h)
+    return pl.pallas_call(
+        functools.partial(_attn_decode_kernel, kind=kind, t_pad=t_pad, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            # §4.2: the Q-head program indexes its KV head directly — the
+            # "head alignment" is baked into the load layout.
+            pl.BlockSpec((1, 1, t_pad, kd), lambda i, j, g=group: (i, j // g, 0, 0)),
+            pl.BlockSpec((1, 1, t_pad), lambda i, j, g=group: (i, j // g, 0)),
+            pl.BlockSpec((1, 1, t_pad, kd), lambda i, j, g=group: (i, j // g, 0, 0)),
+            pl.BlockSpec((1, 1, t_pad), lambda i, j, g=group: (i, j // g, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=True,
+    )(q, k, ks, v, vs, kv_len)
+
+
+@jax.jit
+def attention_decode_kv16(q, k, v, kv_len):
+    """Full-precision KV decode attention.
+
+    q ``[B, H, D]`` f32; k, v ``[B, Hkv, T, D]`` f32; kv_len ``[B]`` i32.
+    """
+    dummy = jnp.ones(k.shape[:3], jnp.float32)
+    return _attention_decode(q, k, dummy, v, dummy, kv_len, kind="f32")
+
+
+@jax.jit
+def attention_decode_kv8(q, k_q, k_scale, v_q, v_scale, kv_len):
+    """INT8-KV decode attention: k_q/v_q ``[B, Hkv, T, D]`` int8 codes with
+    per-(token, head) scales ``[B, Hkv, T]`` f32."""
+    return _attention_decode(q, k_q, k_scale, v_q, v_scale, kv_len, kind="int8")
+
+
+@jax.jit
+def attention_decode_kv4(q, k_p, k_scale, v_p, v_scale, kv_len):
+    """INT4-KV decode attention: k_p/v_p ``[B, Hkv, T, D/2]`` packed uint8."""
+    return _attention_decode(q, k_p, k_scale, v_p, v_scale, kv_len, kind="int4")

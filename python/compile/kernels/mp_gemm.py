@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernel: the paper's **GEMM pipeline** (§3.4, §4.1, §4.3).
+
+Mixed-precision GEMM with dequantization *fused into the kernel body*: the
+quantized weight block is DMA'd HBM→VMEM by the Pallas grid pipeline, the
+Integer-to-Float (I2F) conversion + scale FMA runs between the copy and the
+MXU contraction, and the next block's DMA overlaps the current compute —
+the TPU analogue of the paper's three-way cp.async / I2F / mma.sync overlap
+(Figure 9, DESIGN.md §Hardware-Adaptation).
+
+Layout notes (the §4.1 analogue): weights arrive in the *offline-packed*
+K-major layout produced by ``quantize.pack_int4_along_k`` — each VMEM block
+``[K, bn]`` is one contiguous DMA, no gather, no runtime swizzle. Tiles are
+sized in multiples of 128 along N so the MXU sees aligned operands
+(Challenge-V analogue).
+
+All kernels run under ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Performance on real hardware
+is estimated from the BlockSpec structure in DESIGN.md, not measured here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. N is tiled in multiples of 128 (MXU lane width);
+# M tiles stay small because serving decode batches are small.
+BLOCK_M = 8
+BLOCK_N = 256
+
+
+def _gemm_w4_kernel(x_ref, w_ref, s_ref, o_ref, *, group_size: int):
+    """One (M-tile, N-tile) program: dequant W4 block then contract.
+
+    x_ref: ``[bm, K]`` f32 activations.
+    w_ref: ``[K/2, bn]`` uint8 packed INT4 (K-major, offline-packed).
+    s_ref: ``[K/G, bn]`` f32 groupwise scales.
+    o_ref: ``[bm, bn]`` f32 out.
+    """
+    w_packed = w_ref[...]
+    # I2F: nibble extraction + sign-extension (the lop3 idiom's effect).
+    lo = (w_packed & 0x0F).astype(jnp.int32)
+    hi = (w_packed >> 4).astype(jnp.int32)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    k2, bn = w_packed.shape
+    codes = jnp.stack([lo, hi], axis=1).reshape(k2 * 2, bn).astype(jnp.float32)
+    # FMA: apply groupwise scales (broadcast each scale row over its group).
+    scales = jnp.repeat(s_ref[...], group_size, axis=0)
+    w = codes * scales
+    # MXU contraction on the dequantized block.
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _gemm_w8_kernel(x_ref, w_ref, s_ref, o_ref, *, group_size: int):
+    """W8A16 variant: ``w_ref [K, bn]`` int8 codes."""
+    codes = w_ref[...].astype(jnp.float32)
+    scales = jnp.repeat(s_ref[...], group_size, axis=0)
+    o_ref[...] = jnp.dot(
+        x_ref[...], codes * scales, preferred_element_type=jnp.float32
+    )
+
+
+def _block(m: int, bm: int) -> int:
+    """Largest tile ≤ bm that divides m (grids must tile exactly)."""
+    b = min(bm, m)
+    while m % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_m", "block_n"))
+def gemm_w4(x, w_packed, scales, *, group_size: int = 64,
+            block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """W4A16 groupwise GEMM. ``x [M, K] f32``, ``w_packed [K/2, N] u8``,
+    ``scales [K/G, N] f32`` → ``[M, N] f32``.
+
+    Grid: (M/bm, N/bn). The full K extent rides inside each block — K per
+    projection in the served models is ≤ a few thousand, so an
+    ``[K, bn]``-sized weight block stays well under the 16 MB VMEM budget
+    (DESIGN.md §Perf).
+    """
+    m, k = x.shape
+    k2, n = w_packed.shape
+    assert k == k2 * 2, f"packed K mismatch: {k} vs {k2}*2"
+    assert k % group_size == 0
+    bm, bn = _block(m, block_m), _block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_gemm_w4_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k2, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // group_size, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_packed, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_m", "block_n"))
+def gemm_w8(x, w_codes, scales, *, group_size: int = 64,
+            block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """W8A16 groupwise GEMM. ``w_codes [K, N] int8``."""
+    m, k = x.shape
+    k2, n = w_codes.shape
+    assert k == k2
+    assert k % group_size == 0
+    bm, bn = _block(m, block_m), _block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_gemm_w8_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // group_size, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_codes, scales)

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the pytest suite checks ``mp_gemm`` and
+``mp_attention`` against (``assert_allclose``); they implement the same
+mixed-precision math with no tiling, no pipelines, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dequant_w4(w_packed: jnp.ndarray, scales: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Dequantize K-packed INT4 weights: ``[K/2, N]`` u8 + ``[K/G, N]`` f32 → ``[K, N]`` f32."""
+    lo = (w_packed & 0x0F).astype(jnp.int32)
+    hi = (w_packed >> 4).astype(jnp.int32)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    k2, n = w_packed.shape
+    codes = jnp.stack([lo, hi], axis=1).reshape(k2 * 2, n).astype(jnp.float32)
+    s = jnp.repeat(scales, group_size, axis=0)
+    return codes * s
+
+
+def gemm_w4_ref(x, w_packed, scales, group_size: int):
+    """Reference W4A16 GEMM: dequantize then matmul. ``x: [M, K] f32``."""
+    w = dequant_w4(w_packed, scales, group_size)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def gemm_w8_ref(x, w_codes, scales, group_size: int):
+    """Reference W8A16 GEMM. ``w_codes: [K, N] int8``."""
+    s = jnp.repeat(scales, group_size, axis=0)
+    w = w_codes.astype(jnp.float32) * s
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dequant_kv_int8(kv_q, kv_scale):
+    """``[..., T, D] int8`` codes × ``[..., T]`` scales → f32."""
+    return kv_q.astype(jnp.float32) * kv_scale[..., None]
+
+
+def dequant_kv_int4(kv_packed, kv_scale):
+    """``[..., T, D/2] uint8`` packed codes × ``[..., T]`` scales → ``[..., T, D]`` f32."""
+    lo = (kv_packed & 0x0F).astype(jnp.int32)
+    hi = (kv_packed >> 4).astype(jnp.int32)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(
+        kv_packed.shape[:-1] + (kv_packed.shape[-1] * 2,)
+    )
+    return codes.astype(jnp.float32) * kv_scale[..., None]
+
+
+def softmax_lastdim(s):
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+def attention_decode_ref(q, k, v, kv_len):
+    """Reference single-token decode attention with a length mask.
+
+    q: ``[B, H, D]`` f32 — current-token queries.
+    k, v: ``[B, Hkv, T, D]`` f32 — (dequantized) KV history, padded to T.
+    kv_len: ``[B]`` int32 — valid history length per sequence.
+    Returns ``[B, H, D]``.
+    """
+    b, h, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    t = k.shape[2]
+    kg = jnp.repeat(k, group, axis=1)  # [B, H, T, D]
+    vg = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhtd->bht", q, kg) / np.float32(np.sqrt(d))
+    mask = jnp.arange(t)[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = softmax_lastdim(s)
+    return jnp.einsum("bht,bhtd->bhd", p, vg)
+
+
+def attention_prefill_ref(q, k, v, past_k, past_v, past_len):
+    """Reference chunked-prefill attention: causal within the chunk plus
+    full attention to the (dequantized) past context.
+
+    q: ``[S, H, D]``; k, v: ``[S, Hkv, D]`` f32 for the current chunk.
+    past_k, past_v: ``[Hkv, T, D]`` f32 padded history; ``past_len`` valid.
+    Returns ``[S, H, D]``.
+    """
+    s_len, h, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    t = past_k.shape[1]
+
+    kg = jnp.repeat(k, group, axis=1)  # [S, H, D]
+    vg = jnp.repeat(v, group, axis=1)
+    pkg = jnp.repeat(past_k, group, axis=0)  # [H, T, D]
+    pvg = jnp.repeat(past_v, group, axis=0)
+
+    scale = np.float32(1.0 / np.sqrt(d))
+    s_past = jnp.einsum("shd,htd->sht", q, pkg) * scale  # [S, H, T]
+    s_cur = jnp.einsum("shd,thd->sht", q, kg) * scale  # [S, H, S]
+
+    past_mask = jnp.arange(t)[None, None, :] < past_len
+    s_past = jnp.where(past_mask, s_past, -jnp.inf)
+    causal = jnp.arange(s_len)[:, None] >= jnp.arange(s_len)[None, :]
+    s_cur = jnp.where(causal[:, None, :], s_cur, -jnp.inf)
+
+    s_all = jnp.concatenate([s_past, s_cur], axis=-1)
+    p = softmax_lastdim(s_all)
+    p_past, p_cur = p[..., :t], p[..., t:]
+    out = jnp.einsum("sht,htd->shd", p_past, pvg) + jnp.einsum("sht,thd->shd", p_cur, vg)
+    return out

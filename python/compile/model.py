@@ -1,0 +1,379 @@
+"""Layer-2: the served transformer, written in JAX over the Layer-1 kernels.
+
+A Qwen-shaped decoder-only GQA transformer (RMSNorm, RoPE, SwiGLU) with two
+AOT-compiled graph families:
+
+* ``prefill`` — processes one prompt chunk (batch 1, chunked Sarathi-style),
+  attending causally within the chunk and fully to the *quantized* past
+  context; returns last-position logits plus the chunk's quantized KV for
+  the Rust pool to store.
+* ``decode_step`` — one token for a batch of sequences; quantizes the new
+  K/V in-graph (so the codes the Rust pool stores are exactly the codes the
+  kernel will later consume), scatters them into the padded cache view, and
+  runs the Layer-1 quantized-KV attention kernel.
+
+Weight precision variants: ``w16`` (f32 stand-in for FP16) and ``w4``
+(groupwise INT4 via the Layer-1 GEMM pipeline kernel). KV precision
+variants: ``kv16`` / ``kv8`` / ``kv4``.
+
+Python here runs only at ``make artifacts`` time; the graphs are lowered to
+HLO text and executed from Rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import mp_attention, mp_gemm
+from . import quantize as Q
+
+RMS_EPS = 1e-5
+ROPE_THETA = 10000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Architecture hyperparameters (mirror of Rust ``ModelConfig::tiny``)."""
+
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 768
+    vocab_size: int = 2048
+    max_seq_len: int = 512
+    group_size: int = 64
+
+    @property
+    def q_out(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_out(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# The seven per-layer projection matrices, with (in_dim, out_dim) getters.
+PROJS = (
+    ("wq", lambda s: (s.d_model, s.q_out)),
+    ("wk", lambda s: (s.d_model, s.kv_out)),
+    ("wv", lambda s: (s.d_model, s.kv_out)),
+    ("wo", lambda s: (s.q_out, s.d_model)),
+    ("w_gate", lambda s: (s.d_model, s.d_ff)),
+    ("w_up", lambda s: (s.d_model, s.d_ff)),
+    ("w_down", lambda s: (s.d_ff, s.d_model)),
+)
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> dict[str, np.ndarray]:
+    """Deterministic synthetic weights (layer-stacked), float32.
+
+    Scaled-down Xavier-ish init so activations stay O(1) through the stack —
+    the substitution for a real checkpoint (DESIGN.md §1).
+    """
+    rng = np.random.default_rng(seed)
+
+    def mat(shape, fan_in):
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    p: dict[str, np.ndarray] = {
+        "embed": mat((spec.vocab_size, spec.d_model), spec.d_model),
+        "final_norm": np.ones(spec.d_model, np.float32),
+        "lm_head": mat((spec.d_model, spec.vocab_size), spec.d_model),
+        "attn_norm": np.ones((spec.n_layers, spec.d_model), np.float32),
+        "ffn_norm": np.ones((spec.n_layers, spec.d_model), np.float32),
+    }
+    for name, dims in PROJS:
+        k, n = dims(spec)
+        p[name] = np.stack([mat((k, n), k) for _ in range(spec.n_layers)])
+    return p
+
+
+def quantize_params_w4(spec: ModelSpec, params: dict[str, np.ndarray]):
+    """Groupwise-INT4 quantize the seven projections (embeddings, norms and
+    the LM head stay full precision, the standard W4A16 recipe)."""
+    out: dict[str, np.ndarray] = {
+        k: params[k] for k in ("embed", "final_norm", "lm_head", "attn_norm", "ffn_norm")
+    }
+    for name, _ in PROJS:
+        packs, scales = [], []
+        for l in range(spec.n_layers):
+            codes, s = Q.quantize_groupwise_int4(params[name][l], spec.group_size)
+            packs.append(Q.pack_int4_along_k(codes))
+            scales.append(s)
+        out[name + "_p"] = np.stack(packs)
+        out[name + "_s"] = np.stack(scales)
+    return out
+
+
+def weight_input_names(wprec: str) -> list[str]:
+    """Canonical weight-argument order for the AOT graphs (recorded in the
+    manifest; the Rust runtime feeds buffers in exactly this order)."""
+    names = ["embed", "attn_norm", "ffn_norm", "final_norm", "lm_head"]
+    for name, _ in PROJS:
+        if wprec == "w4":
+            names += [name + "_p", name + "_s"]
+        else:
+            names.append(name)
+    return names
+
+
+# ---- building blocks -------------------------------------------------------
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + RMS_EPS) * g
+
+
+def rope(x, positions, head_dim: int):
+    """Rotary embedding, half-split convention. ``x: [..., n_heads, D]``,
+    ``positions: [...]`` (one position per leading index)."""
+    half = head_dim // 2
+    freqs = ROPE_THETA ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _proj(x, weights, name, layer, wprec, group_size):
+    """Project ``x [M, K]`` with layer ``layer``'s ``name`` matrix, through
+    the Layer-1 GEMM pipeline kernel when quantized."""
+    if wprec == "w4":
+        return mp_gemm.gemm_w4(
+            x, weights[name + "_p"][layer], weights[name + "_s"][layer],
+            group_size=group_size,
+        )
+    return jnp.dot(x, weights[name][layer], preferred_element_type=jnp.float32)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _quantize_kv_ingraph(x, kvprec: str):
+    """Quantize new KV rows inside the graph so pool codes == kernel codes.
+
+    ``x: [..., D]`` → (codes, scales) matching ``quantize.quantize_kv_*``.
+    """
+    maxabs = jnp.max(jnp.abs(x), axis=-1)
+    if kvprec == "kv8":
+        scale = jnp.where(maxabs > 0, maxabs / 127.0, 1.0)
+        codes = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+        return codes, scale.astype(jnp.float32)
+    if kvprec == "kv4":
+        scale = jnp.where(maxabs > 0, maxabs / 7.0, 1.0)
+        c = jnp.clip(jnp.round(x / scale[..., None]), -7, 7).astype(jnp.int32)
+        u = c.astype(jnp.uint8) & 0x0F
+        packed = u[..., 0::2] | (u[..., 1::2] << 4)
+        return packed.astype(jnp.uint8), scale.astype(jnp.float32)
+    raise ValueError(kvprec)
+
+
+# ---- decode step -----------------------------------------------------------
+
+
+def make_decode_step(spec: ModelSpec, wprec: str, kvprec: str):
+    """Build the single-step decode function for a (weight, kv) precision
+    pair. Signature (positional, AOT-friendly):
+
+    ``fn(tokens[B] i32, kv_len[B] i32, kv_k, kv_ks, kv_v, kv_vs, *weights)``
+
+    kv16: ``kv_k/v [L,B,Hkv,T,D] f32``; ``kv_ks/vs [L,B,Hkv,T] f32`` (unused
+    dummies kept for a uniform signature).
+    kv8:  codes int8 + scales. kv4: packed uint8 ``[...,D/2]`` + scales.
+
+    Returns ``(logits [B,V], k_new, k_new_scale, v_new, v_new_scale)`` where
+    ``k_new/v_new`` are quantized codes ``[L,B,Hkv,D(/2)]`` (f32 for kv16)
+    and scales are ``[L,B,Hkv]`` (dummy ones for kv16).
+    """
+    wnames = weight_input_names(wprec)
+
+    def step(tokens, kv_len, kv_k, kv_ks, kv_v, kv_vs, *wflat):
+        weights = dict(zip(wnames, wflat))
+        b = tokens.shape[0]
+        x = jnp.take(weights["embed"], tokens, axis=0)  # [B, D]
+
+        new_ks, new_kss, new_vs_, new_vss = [], [], [], []
+        for l in range(spec.n_layers):
+            h = rmsnorm(x, weights["attn_norm"][l])
+            q = _proj(h, weights, "wq", l, wprec, spec.group_size)
+            k = _proj(h, weights, "wk", l, wprec, spec.group_size)
+            v = _proj(h, weights, "wv", l, wprec, spec.group_size)
+            q = q.reshape(b, spec.n_heads, spec.head_dim)
+            k = k.reshape(b, spec.n_kv_heads, spec.head_dim)
+            v = v.reshape(b, spec.n_kv_heads, spec.head_dim)
+            q = rope(q, kv_len, spec.head_dim)  # new token sits at index kv_len
+            k = rope(k, kv_len, spec.head_dim)
+
+            if kvprec == "kv16":
+                k_store, k_scale = k, jnp.ones((b, spec.n_kv_heads), jnp.float32)
+                v_store, v_scale = v, jnp.ones((b, spec.n_kv_heads), jnp.float32)
+            else:
+                k_store, k_scale = _quantize_kv_ingraph(k, kvprec)
+                v_store, v_scale = _quantize_kv_ingraph(v, kvprec)
+
+            # Scatter the new row into the padded cache view at kv_len[b].
+            def ins_row(cache, row, idx):
+                return jax.lax.dynamic_update_slice(cache, row[:, None, :], (0, idx, 0))
+
+            def ins_scale(cache, s, idx):
+                return jax.lax.dynamic_update_slice(cache, s[:, None], (0, idx))
+
+            k_cache = jax.vmap(ins_row)(kv_k[l], k_store, kv_len)
+            v_cache = jax.vmap(ins_row)(kv_v[l], v_store, kv_len)
+            ks_cache = jax.vmap(ins_scale)(kv_ks[l], k_scale, kv_len)
+            vs_cache = jax.vmap(ins_scale)(kv_vs[l], v_scale, kv_len)
+
+            attn_len = kv_len + 1
+            if kvprec == "kv16":
+                o = mp_attention.attention_decode_kv16(q, k_cache, v_cache, attn_len)
+            elif kvprec == "kv8":
+                o = mp_attention.attention_decode_kv8(
+                    q, k_cache, ks_cache, v_cache, vs_cache, attn_len)
+            else:
+                o = mp_attention.attention_decode_kv4(
+                    q, k_cache, ks_cache, v_cache, vs_cache, attn_len)
+
+            o = o.reshape(b, spec.q_out)
+            x = x + _proj(o, weights, "wo", l, wprec, spec.group_size)
+
+            h2 = rmsnorm(x, weights["ffn_norm"][l])
+            gate = _proj(h2, weights, "w_gate", l, wprec, spec.group_size)
+            up = _proj(h2, weights, "w_up", l, wprec, spec.group_size)
+            x = x + _proj(silu(gate) * up, weights, "w_down", l, wprec, spec.group_size)
+
+            new_ks.append(k_store)
+            new_kss.append(k_scale)
+            new_vs_.append(v_store)
+            new_vss.append(v_scale)
+
+        x = rmsnorm(x, weights["final_norm"])
+        logits = jnp.dot(x, weights["lm_head"], preferred_element_type=jnp.float32)
+        return (
+            logits,
+            jnp.stack(new_ks),
+            jnp.stack(new_kss),
+            jnp.stack(new_vs_),
+            jnp.stack(new_vss),
+        )
+
+    return step
+
+
+# ---- prefill ---------------------------------------------------------------
+
+
+def make_prefill(spec: ModelSpec, wprec: str, kvprec: str):
+    """Build the chunked prefill function (batch 1).
+
+    ``fn(tokens[S] i32, past_len[1] i32, kv_k, kv_ks, kv_v, kv_vs, *weights)``
+
+    Past caches have batch dim 1: kv16 ``[L,1,Hkv,T,D]`` f32; kv8/kv4 codes
+    plus ``[L,1,Hkv,T]`` scales. Returns ``(logits[S,V], k_chunk, k_scales,
+    v_chunk, v_scales)`` with ``k_chunk [L,Hkv,S,D(/2)]`` quantized codes
+    (f32 for kv16) and scales ``[L,Hkv,S]``.
+
+    Logits cover **every** chunk position: prompts rarely fill a compiled
+    chunk bucket exactly, so the engine pads the tail and reads the logits
+    row of the last *real* token (causality makes the padding harmless).
+    """
+    wnames = weight_input_names(wprec)
+
+    from .kernels import ref as R
+
+    def dequant_past(kv, ks):
+        if kvprec == "kv16":
+            return kv
+        if kvprec == "kv8":
+            return R.dequant_kv_int8(kv, ks)
+        return R.dequant_kv_int4(kv, ks)
+
+    def prefill(tokens, past_len, kv_k, kv_ks, kv_v, kv_vs, *wflat):
+        weights = dict(zip(wnames, wflat))
+        s_len = tokens.shape[0]
+        p0 = past_len[0]
+        x = jnp.take(weights["embed"], tokens, axis=0)  # [S, D]
+        positions = p0 + jnp.arange(s_len, dtype=jnp.int32)
+
+        from .kernels import ref as R
+
+        out_k, out_ks, out_v, out_vs = [], [], [], []
+        for l in range(spec.n_layers):
+            h = rmsnorm(x, weights["attn_norm"][l])
+            q = _proj(h, weights, "wq", l, wprec, spec.group_size)
+            k = _proj(h, weights, "wk", l, wprec, spec.group_size)
+            v = _proj(h, weights, "wv", l, wprec, spec.group_size)
+            q = q.reshape(s_len, spec.n_heads, spec.head_dim)
+            k = k.reshape(s_len, spec.n_kv_heads, spec.head_dim)
+            v = v.reshape(s_len, spec.n_kv_heads, spec.head_dim)
+            q = rope(q, positions, spec.head_dim)
+            k = rope(k, positions, spec.head_dim)
+
+            past_k = dequant_past(kv_k[l, 0], kv_ks[l, 0])  # [Hkv, T, D]
+            past_v = dequant_past(kv_v[l, 0], kv_vs[l, 0])
+            o = R.attention_prefill_ref(q, k, v, past_k, past_v, p0)
+
+            o = o.reshape(s_len, spec.q_out)
+            x = x + _proj(o, weights, "wo", l, wprec, spec.group_size)
+
+            h2 = rmsnorm(x, weights["ffn_norm"][l])
+            gate = _proj(h2, weights, "w_gate", l, wprec, spec.group_size)
+            up = _proj(h2, weights, "w_up", l, wprec, spec.group_size)
+            x = x + _proj(silu(gate) * up, weights, "w_down", l, wprec, spec.group_size)
+
+            # Quantize the chunk's KV for storage ([Hkv, S, D] layout).
+            k_t = k.transpose(1, 0, 2)
+            v_t = v.transpose(1, 0, 2)
+            if kvprec == "kv16":
+                out_k.append(k_t)
+                out_ks.append(jnp.ones((spec.n_kv_heads, s_len), jnp.float32))
+                out_v.append(v_t)
+                out_vs.append(jnp.ones((spec.n_kv_heads, s_len), jnp.float32))
+            else:
+                kc, ks_ = _quantize_kv_ingraph(k_t, kvprec)
+                vc, vs_ = _quantize_kv_ingraph(v_t, kvprec)
+                out_k.append(kc)
+                out_ks.append(ks_)
+                out_v.append(vc)
+                out_vs.append(vs_)
+
+        x = rmsnorm(x, weights["final_norm"])
+        logits = jnp.dot(x, weights["lm_head"], preferred_element_type=jnp.float32)
+        return (
+            logits,
+            jnp.stack(out_k),
+            jnp.stack(out_ks),
+            jnp.stack(out_v),
+            jnp.stack(out_vs),
+        )
+
+    return prefill
+
+
+# ---- shape helpers shared with aot.py --------------------------------------
+
+
+def kv_cache_shapes(spec: ModelSpec, kvprec: str, batch: int, t_pad: int | None = None):
+    """(kv_codes_shape, kv_scales_shape, codes_dtype) for the padded cache.
+
+    ``t_pad`` defaults to the full context; decode graphs are also compiled
+    at smaller context buckets (see aot.DECODE_T).
+    """
+    t = t_pad if t_pad is not None else spec.max_seq_len
+    if kvprec == "kv16":
+        return ((spec.n_layers, batch, spec.n_kv_heads, t, spec.head_dim),
+                (spec.n_layers, batch, spec.n_kv_heads, t), jnp.float32)
+    if kvprec == "kv8":
+        return ((spec.n_layers, batch, spec.n_kv_heads, t, spec.head_dim),
+                (spec.n_layers, batch, spec.n_kv_heads, t), jnp.int8)
+    if kvprec == "kv4":
+        return ((spec.n_layers, batch, spec.n_kv_heads, t, spec.head_dim // 2),
+                (spec.n_layers, batch, spec.n_kv_heads, t), jnp.uint8)
+    raise ValueError(kvprec)

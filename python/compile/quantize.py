@@ -1,0 +1,121 @@
+"""Quantization utilities — the build-time mirror of ``rust/src/quant``.
+
+Groupwise symmetric weight quantization (AWQ/GPTQ-style) and per-token KV
+quantization, using the exact same code/scale conventions as the Rust side so
+the paged KV pool (Rust) and the Pallas kernels (here) agree bit-for-bit:
+
+* weights: ``[K, N]``, groups of ``group_size`` rows share one scale per
+  column; INT4 codes clamp to [-7, 7]; packing along **K** puts row ``2k`` in
+  the low nibble and row ``2k+1`` in the high nibble of byte ``[k, n]``.
+* KV rows: one symmetric scale per (token, kv-head); INT8 clamps to
+  [-127, 127]; INT4 packs along the head dim, low nibble = even element.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Default AWQ-style group size used across the stack.
+GROUP_SIZE = 64
+
+
+def quantize_groupwise_int4(w: np.ndarray, group_size: int = GROUP_SIZE):
+    """Quantize ``[K, N]`` f32 weights to INT4 codes + per-group scales.
+
+    Returns ``(codes, scales)`` where ``codes`` is int8 ``[K, N]`` in
+    [-7, 7] and ``scales`` is f32 ``[K/group_size, N]``.
+    """
+    k, n = w.shape
+    assert k % group_size == 0, f"group_size {group_size} must divide K={k}"
+    grouped = w.reshape(k // group_size, group_size, n)
+    maxabs = np.abs(grouped).max(axis=1)
+    scales = np.where(maxabs > 0, maxabs / 7.0, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(grouped / scales[:, None, :]), -7, 7).astype(np.int8)
+    return codes.reshape(k, n), scales
+
+
+def quantize_groupwise_int8(w: np.ndarray, group_size: int = GROUP_SIZE):
+    """INT8 variant of :func:`quantize_groupwise_int4` (codes in [-127, 127])."""
+    k, n = w.shape
+    assert k % group_size == 0
+    grouped = w.reshape(k // group_size, group_size, n)
+    maxabs = np.abs(grouped).max(axis=1)
+    scales = np.where(maxabs > 0, maxabs / 127.0, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(grouped / scales[:, None, :]), -127, 127).astype(np.int8)
+    return codes.reshape(k, n), scales
+
+
+def pack_int4_along_k(codes: np.ndarray) -> np.ndarray:
+    """Pack INT4 codes ``[K, N]`` two-per-byte along K → uint8 ``[K/2, N]``.
+
+    Row ``2k`` lands in the low nibble, row ``2k+1`` in the high nibble —
+    the layout ``kernels.mp_gemm`` unpacks inside the Pallas kernel.
+    """
+    k, n = codes.shape
+    assert k % 2 == 0
+    u = codes.astype(np.uint8) & 0x0F
+    return (u[0::2] | (u[1::2] << 4)).astype(np.uint8)
+
+
+def unpack_int4_along_k(packed: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_int4_along_k` → int8 codes ``[K, N]``."""
+    k2, n = packed.shape
+    lo = (packed & 0x0F).astype(np.int8)
+    hi = (packed >> 4).astype(np.int8)
+    lo = np.where(lo > 7, lo - 16, lo)
+    hi = np.where(hi > 7, hi - 16, hi)
+    out = np.empty((k2 * 2, n), dtype=np.int8)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out
+
+
+def dequantize_groupwise(codes: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Dequantize ``[K, N]`` codes with ``[K/G, N]`` scales back to f32."""
+    k, n = codes.shape
+    g = k // scales.shape[0]
+    return (codes.reshape(-1, g, n) * scales[:, None, :]).reshape(k, n).astype(np.float32)
+
+
+# ---- KV cache quantization (per-token, per-head) --------------------------
+
+
+def quantize_kv_int8(rows: np.ndarray):
+    """Quantize KV rows ``[..., D]`` to INT8 with one scale per row.
+
+    Returns ``(codes int8 [..., D], scales f32 [...])``.
+    """
+    maxabs = np.abs(rows).max(axis=-1)
+    scales = np.where(maxabs > 0, maxabs / 127.0, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(rows / scales[..., None]), -127, 127).astype(np.int8)
+    return codes, scales
+
+
+def quantize_kv_int4(rows: np.ndarray):
+    """Quantize KV rows ``[..., D]`` to packed INT4 (two per byte along D).
+
+    Returns ``(packed uint8 [..., D/2], scales f32 [...])``.
+    """
+    assert rows.shape[-1] % 2 == 0
+    maxabs = np.abs(rows).max(axis=-1)
+    scales = np.where(maxabs > 0, maxabs / 7.0, 1.0).astype(np.float32)
+    codes = np.clip(np.rint(rows / scales[..., None]), -7, 7).astype(np.int8)
+    u = codes.astype(np.uint8) & 0x0F
+    packed = (u[..., 0::2] | (u[..., 1::2] << 4)).astype(np.uint8)
+    return packed, scales
+
+
+def dequantize_kv_int8(codes: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    return (codes.astype(np.float32) * scales[..., None]).astype(np.float32)
+
+
+def dequantize_kv_int4(packed: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    lo = (packed & 0x0F).astype(np.int8)
+    hi = (packed >> 4).astype(np.int8)
+    lo = np.where(lo > 7, lo - 16, lo)
+    hi = np.where(hi > 7, hi - 16, hi)
+    d2 = packed.shape[-1]
+    out = np.empty(packed.shape[:-1] + (d2 * 2,), dtype=np.float32)
+    out[..., 0::2] = lo
+    out[..., 1::2] = hi
+    return out * scales[..., None]

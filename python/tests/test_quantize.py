@@ -1,0 +1,113 @@
+"""Quantization round-trip and cross-language format tests.
+
+The byte-level layout checks here pin the *exact* conventions the Rust side
+(`rust/src/quant`) implements — low nibble = even index, symmetric clamp
+ranges — so the two languages stay bit-compatible.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+def rand(shape, seed=0, scale=2.0):
+    return (np.random.default_rng(seed).standard_normal(shape) * scale).astype(np.float32)
+
+
+class TestGroupwise:
+    @pytest.mark.parametrize("group", [16, 32, 64])
+    def test_int4_roundtrip_error_bound(self, group):
+        w = rand((128, 32), seed=1)
+        codes, scales = Q.quantize_groupwise_int4(w, group)
+        deq = Q.dequantize_groupwise(codes, scales)
+        bound = scales.max() * 0.5 * 1.001
+        assert np.abs(w - deq).max() <= bound
+
+    def test_int8_roundtrip_error_bound(self):
+        w = rand((128, 32), seed=2)
+        codes, scales = Q.quantize_groupwise_int8(w, 64)
+        deq = Q.dequantize_groupwise(codes, scales)
+        assert np.abs(w - deq).max() <= scales.max() * 0.5 * 1.001
+
+    def test_int4_codes_in_range(self):
+        w = rand((64, 16), seed=3, scale=100.0)
+        codes, _ = Q.quantize_groupwise_int4(w, 64)
+        assert codes.min() >= -7 and codes.max() <= 7
+
+    def test_pack_unpack_identity(self):
+        w = rand((64, 24), seed=4)
+        codes, _ = Q.quantize_groupwise_int4(w, 32)
+        packed = Q.pack_int4_along_k(codes)
+        assert packed.shape == (32, 24)
+        assert np.array_equal(Q.unpack_int4_along_k(packed), codes)
+
+    def test_pack_nibble_convention(self):
+        # Row 2k in low nibble, row 2k+1 in high nibble — the layout the
+        # Pallas kernel and the Rust loader both assume.
+        codes = np.zeros((2, 1), np.int8)
+        codes[0, 0] = 3   # low
+        codes[1, 0] = -2  # high: -2 & 0xF = 14
+        packed = Q.pack_int4_along_k(codes)
+        assert packed[0, 0] == (14 << 4) | 3
+
+    def test_zero_weights_exact(self):
+        w = np.zeros((64, 8), np.float32)
+        codes, scales = Q.quantize_groupwise_int4(w, 64)
+        assert np.array_equal(Q.dequantize_groupwise(codes, scales), w)
+
+    def test_rejects_bad_group(self):
+        with pytest.raises(AssertionError):
+            Q.quantize_groupwise_int4(rand((100, 4)), 64)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        kg=st.integers(1, 4),
+        n=st.integers(1, 48),
+        group=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_roundtrip(self, kg, n, group, seed):
+        w = rand((kg * group, n), seed=seed, scale=3.0)
+        codes, scales = Q.quantize_groupwise_int4(w, group)
+        deq = Q.dequantize_groupwise(codes, scales)
+        assert np.abs(w - deq).max() <= scales.max() * 0.5 * 1.001
+
+
+class TestKv:
+    def test_int8_roundtrip(self):
+        rows = rand((4, 8, 32), seed=5)
+        codes, scales = Q.quantize_kv_int8(rows)
+        deq = Q.dequantize_kv_int8(codes, scales)
+        assert np.abs(rows - deq).max() <= scales.max() * 0.5 * 1.001
+
+    def test_int4_roundtrip(self):
+        rows = rand((4, 8, 32), seed=6)
+        packed, scales = Q.quantize_kv_int4(rows)
+        assert packed.shape == (4, 8, 16)
+        deq = Q.dequantize_kv_int4(packed, scales)
+        assert np.abs(rows - deq).max() <= scales.max() * 0.5 * 1.001
+
+    def test_per_row_scales_independent(self):
+        rows = np.stack([np.full(16, 0.1, np.float32), np.full(16, 50.0, np.float32)])
+        _, scales = Q.quantize_kv_int8(rows)
+        assert scales[0] < scales[1]
+
+    def test_zero_rows(self):
+        rows = np.zeros((2, 16), np.float32)
+        codes, scales = Q.quantize_kv_int8(rows)
+        assert np.array_equal(Q.dequantize_kv_int8(codes, scales), rows)
+        packed, s4 = Q.quantize_kv_int4(rows)
+        assert np.array_equal(Q.dequantize_kv_int4(packed, s4), rows)
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_kv_roundtrip(self, d, seed):
+        rows = rand((3, d), seed=seed, scale=5.0)
+        codes, scales = Q.quantize_kv_int8(rows)
+        assert np.abs(rows - Q.dequantize_kv_int8(codes, scales)).max() \
+            <= scales.max() * 0.5 * 1.001
+        packed, s4 = Q.quantize_kv_int4(rows)
+        assert np.abs(rows - Q.dequantize_kv_int4(packed, s4)).max() \
+            <= s4.max() * 0.5 * 1.001

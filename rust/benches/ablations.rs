@@ -1,0 +1,137 @@
+//! `cargo bench --bench ablations` — design-choice ablations (DESIGN.md §5).
+//!
+//! * packing        — §4.1 offline packing on/off: measured transactions +
+//!                    bank conflicts on real buffers, and the simulated GEMM
+//!                    latency consequence.
+//! * overlap        — §4.3 pipeline overlap fraction sweep: exposed dequant
+//!                    cycles as overlap degrades (the Figure 9 mechanism).
+//! * head_alignment — §4.2 Q-rearrange vs dequant-KV-before-load at each KV
+//!                    precision.
+//! * scheduler      — continuous vs static batching on the *real* engine
+//!                    (skipped without artifacts).
+
+use turbomind::config::{DeviceProfile, EngineConfig};
+use turbomind::config::engine::SchedulerPolicy;
+use turbomind::coordinator::{Engine, Request};
+use turbomind::gpusim::{
+    AttentionKernelModel, AttnWorkload, Framework, GemmKernelModel, GemmWorkload, PipelineSim,
+};
+use turbomind::quant::access::analyze_global;
+use turbomind::quant::packing::naive_fragment_access;
+use turbomind::quant::{pack_weights_hw_aware, GroupwiseQuant, QuantizedMatrix};
+use turbomind::util::rng::Rng;
+
+fn ablate_packing() {
+    println!("\n== ablation: §4.1 hardware-aware packing on/off ==");
+    let (k, n) = (256usize, 4096usize);
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+    let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int4(64));
+    let p = pack_weights_hw_aware(&q);
+
+    let packed = p.runtime_load_report(0, 128);
+    let naive = analyze_global(&naive_fragment_access(n, 0, 0), 128);
+    println!(
+        "  measured/tile-pair : packed {} tx, conflict {}  |  naive {} tx, conflict {}",
+        packed.transactions, packed.bank_conflict_degree,
+        naive.transactions * 2, naive.bank_conflict_degree
+    );
+
+    // Latency consequence via the GEMM model: packed = TurboMind traits;
+    // naive = coalescing/banks degraded to the measured ratios.
+    let dev = DeviceProfile::a100();
+    let mut tm = Framework::TurboMind.traits_on(&dev);
+    let g = GemmKernelModel::new(&dev, &tm).run(&GemmWorkload::w4a16(8, 8192, 8192)).time_s;
+    tm.coalescing_eff = packed.transactions as f64 * 2.0 / naive.transactions as f64;
+    tm.bank_conflict_factor = naive.bank_conflict_degree as f64 / 2.0;
+    let g_naive = GemmKernelModel::new(&dev, &tm).run(&GemmWorkload::w4a16(8, 8192, 8192)).time_s;
+    println!(
+        "  simulated GEMM (B=8, 8192^2): packed {:.3} ms | naive layout {:.3} ms ({:.1}x slower)",
+        g * 1e3, g_naive * 1e3, g_naive / g
+    );
+    assert!(g_naive / g > 2.0, "packing must matter");
+}
+
+fn ablate_overlap() {
+    println!("\n== ablation: §4.3 MMA-dequant overlap sweep (16384^3 INT4, A100) ==");
+    let dev = DeviceProfile::a100();
+    let mut tr = Framework::TurboMind.traits_on(&dev);
+    let f16 = PipelineSim::new(&dev, &tr).gemm(16384, 16384, 16384, 16).cycles;
+    println!("  {:<10} {:>14} {:>12}", "overlap", "int4 cycles", "overhead");
+    for ov in [0.0, 0.35, 0.55, 0.82, 0.95] {
+        tr.dequant_overlap = ov;
+        let c = PipelineSim::new(&dev, &tr).gemm(16384, 16384, 16384, 4).cycles;
+        println!(
+            "  {:<10.2} {:>14} {:>11.2}%",
+            ov, c, (c as f64 / f16 as f64 - 1.0) * 100.0
+        );
+    }
+    println!("  (paper Table 2 operating point: overlap ≈ 0.82 → +2.89% cycles)");
+}
+
+fn ablate_head_alignment() {
+    println!("\n== ablation: §4.2 Q-rearrange vs dequant-KV-before-load ==");
+    let dev = DeviceProfile::a100();
+    let mut aligned = Framework::TurboMind.traits_on(&dev);
+    let mut preload = Framework::TurboMind.traits_on(&dev);
+    preload.attn_dequant_before_load = true;
+    println!("  {:<8} {:>14} {:>16} {:>10}", "kv_bits", "aligned(ms)", "deq-before(ms)", "penalty");
+    for kv_bits in [16usize, 8, 4] {
+        let w = AttnWorkload::decode(32, 8192, 32, 8, 128, kv_bits);
+        let a = AttentionKernelModel::new(&dev, &aligned).run(&w).time_s;
+        let b = AttentionKernelModel::new(&dev, &preload).run(&w).time_s;
+        println!(
+            "  {:<8} {:>14.3} {:>16.3} {:>9.1}%",
+            kv_bits, a * 1e3, b * 1e3, (b / a - 1.0) * 100.0
+        );
+        if kv_bits < 16 {
+            assert!(b > a, "alignment must win for quantized KV");
+        }
+    }
+    let _ = &mut aligned; // symmetry
+}
+
+fn ablate_scheduler() {
+    println!("\n== ablation: continuous vs static batching (real engine) ==");
+    let dir = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("  SKIP: artifacts not built");
+        return;
+    }
+    for (name, policy) in [
+        ("continuous", SchedulerPolicy::Continuous),
+        ("static", SchedulerPolicy::Static),
+    ] {
+        let cfg = EngineConfig {
+            artifacts_dir: dir.clone(),
+            precision: "W4A16KV8".parse().unwrap(),
+            max_batch: 4,
+            kv_pool_tokens: 16 * 256,
+            scheduler: policy,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg).unwrap();
+        e.warmup().unwrap();
+        let t0 = std::time::Instant::now();
+        let mut rng = Rng::new(3);
+        for i in 0..8 {
+            let prompt: Vec<i32> = (0..20 + i * 3).map(|_| rng.below(2048) as i32).collect();
+            e.submit(Request::new(prompt, 12)).unwrap();
+        }
+        let outs = e.run_to_completion().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let mean_ttft: f64 =
+            outs.iter().map(|o| o.ttft).sum::<f64>() / outs.len() as f64;
+        println!(
+            "  {:<12} makespan {:>6.2}s  mean TTFT {:>6.3}s  decode iters {}",
+            name, dt, mean_ttft, e.stats.decode_iters
+        );
+    }
+}
+
+fn main() {
+    ablate_packing();
+    ablate_overlap();
+    ablate_head_alignment();
+    ablate_scheduler();
+}

@@ -1,0 +1,100 @@
+//! `cargo bench --bench engine_hotpath` — L3 request-path micro-benchmarks
+//! on the real engine (the §Perf targets in DESIGN.md).
+//!
+//! Times the decode iteration end-to-end and its components: KV gather
+//! (pool → padded batch tensors), PJRT execute, and KV append, across
+//! compiled batch sizes. The coordinator target: everything except PJRT
+//! execute stays a small fraction of the iteration.
+
+use std::time::Instant;
+
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, Request};
+use turbomind::kvcache::{KvPool, KvPrecision};
+use turbomind::util::rng::Rng;
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_gather() {
+    println!("\n== kv gather: pool -> padded batch tensors (tiny-qwen dims) ==");
+    // tiny-qwen: L=4, Hkv=4, D=32, T=512.
+    let (l, hkv, d, t_pad) = (4usize, 4usize, 32usize, 512usize);
+    for &b in &[1usize, 4, 8] {
+        let mut pool = KvPool::new(KvPrecision::Int8, l, hkv, d, 16, 16 * 512).unwrap();
+        let mut handles = vec![];
+        let rb = pool.row_bytes();
+        let mut rng = Rng::new(1);
+        for _ in 0..b {
+            let h = pool.alloc_seq();
+            for _ in 0..400 {
+                let k: Vec<u8> = (0..l * hkv * rb).map(|_| rng.next_u64() as u8).collect();
+                let s: Vec<f32> = (0..l * hkv).map(|_| rng.next_f32()).collect();
+                pool.append_token(h, &k, &s, &k, &s).unwrap();
+            }
+            handles.push(Some(h));
+        }
+        let kdim = l * b * hkv * t_pad;
+        let mut k_out = vec![0u8; kdim * rb];
+        let mut v_out = k_out.clone();
+        let mut ks = vec![0f32; kdim];
+        let mut vs = ks.clone();
+        let dt = time_it(50, || {
+            pool.gather_batch(&handles, t_pad, &mut k_out, &mut ks, &mut v_out, &mut vs)
+                .unwrap();
+        });
+        println!("  B={b}: {:.1} µs ({:.1} MB touched)", dt * 1e6,
+                 (2 * k_out.len()) as f64 / 1e6);
+    }
+}
+
+fn bench_engine_steps() {
+    let dir = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("SKIP engine steps: artifacts not built");
+        return;
+    }
+    println!("\n== engine iteration latency (real PJRT, W4A16KV8) ==");
+    for &b in &[1usize, 2, 4, 8] {
+        let cfg = EngineConfig {
+            artifacts_dir: dir.clone(),
+            precision: "W4A16KV8".parse().unwrap(),
+            max_batch: b,
+            kv_pool_tokens: 16 * 512,
+            max_new_tokens: 1 << 20,
+            ..EngineConfig::default()
+        };
+        let mut e = Engine::new(cfg).unwrap();
+        e.warmup().unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..b {
+            let prompt: Vec<i32> = (0..24).map(|_| rng.below(2048) as i32).collect();
+            e.submit(Request::new(prompt, 200)).unwrap();
+        }
+        // Drain prefills.
+        while e.stats.decode_iters == 0 {
+            e.step().unwrap();
+        }
+        let t0 = Instant::now();
+        let iters = 30;
+        for _ in 0..iters {
+            e.step().unwrap();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "  decode B={b}: {:.2} ms/iter  ({:.1} tok/s)",
+            per * 1e3,
+            b as f64 / per
+        );
+    }
+}
+
+fn main() {
+    bench_gather();
+    bench_engine_steps();
+}

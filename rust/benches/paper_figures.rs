@@ -1,0 +1,18 @@
+//! `cargo bench --bench paper_figures` — regenerate every gpusim-backed
+//! paper exhibit (Figs 11-21, 26-28, Table 2) and print the paper-style
+//! tables, with generation wall-time per exhibit.
+
+use std::time::Instant;
+
+fn main() {
+    let mut total = 0.0;
+    for (name, f) in turbomind::bench::registry() {
+        let t0 = Instant::now();
+        let table = f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        table.print();
+        println!("  [generated {name} in {:.2}s]", dt);
+    }
+    println!("\nall exhibits regenerated in {total:.2}s");
+}

@@ -1,0 +1,279 @@
+//! Kernel-level paper exhibits: Figs 11, 12, 13, 26 and Table 2.
+//!
+//! Each function regenerates one exhibit from the gpusim kernel models at
+//! the paper's configuration (Qwen3-8B AWQ, W4A16KV8, A100 unless the
+//! exhibit says otherwise) and prints the same rows/series the paper
+//! reports, with the paper's reference numbers in the footnotes.
+
+use super::table::{ms, pct_improvement, Table};
+use crate::config::model::find_model;
+use crate::config::DeviceProfile;
+use crate::gpusim::{
+    AttentionKernelModel, AttnWorkload, Framework, GemmKernelModel, GemmWorkload, PipelineSim,
+};
+
+/// Sum of one layer's projection GEMM times for the given m.
+fn layer_gemm_time(dev: &DeviceProfile, fw: Framework, model: &str, m: usize, w_bits: usize) -> f64 {
+    let cfg = find_model(model).unwrap();
+    let tr = fw.traits_on(dev);
+    let g = GemmKernelModel::new(dev, &tr);
+    cfg.layer_gemms()
+        .iter()
+        .map(|&(_, k, n)| {
+            g.run(&GemmWorkload { m, k, n, w_bits, a_bits: 16, group_size: 128 }).time_s
+        })
+        .sum()
+}
+
+fn attn_time(
+    dev: &DeviceProfile,
+    fw: Framework,
+    model: &str,
+    batch: usize,
+    q_tokens: usize,
+    kv_len: usize,
+    kv_bits: usize,
+) -> f64 {
+    let cfg = find_model(model).unwrap();
+    let tr = fw.traits_on(dev);
+    AttentionKernelModel::new(dev, &tr)
+        .run(&AttnWorkload {
+            batch,
+            q_tokens,
+            kv_len,
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim,
+            kv_bits,
+        })
+        .time_s
+}
+
+/// Fig 11: prefill/decoding attention + GEMM kernel latency within a single
+/// request (Qwen3-8B AWQ, 8-bit KV, vs vLLM+MARLIN, A100).
+pub fn fig11() -> Table {
+    let dev = DeviceProfile::a100();
+    let model = "qwen3-8b";
+    let mut t = Table::new(
+        "Fig 11 — per-request kernel latency, Qwen3-8B AWQ W4A16KV8 (A100)",
+        &["phase", "kernel", "seq_len", "LMDeploy(ms)", "vLLM+MARLIN(ms)", "reduction"],
+    );
+    for &s in &[1024usize, 2048, 4096, 8192] {
+        // Prefill: chunk of s tokens; attention sees the causal chunk.
+        let a_tm = attn_time(&dev, Framework::TurboMind, model, 1, s, 0, 8);
+        let a_vm = attn_time(&dev, Framework::VllmMarlin, model, 1, s, 0, 8);
+        t.row(vec![
+            "prefill".into(), "attention".into(), s.to_string(),
+            ms(a_tm), ms(a_vm), pct_improvement(a_vm, a_tm),
+        ]);
+        let g_tm = layer_gemm_time(&dev, Framework::TurboMind, model, s, 4);
+        let g_vm = layer_gemm_time(&dev, Framework::VllmMarlin, model, s, 4);
+        t.row(vec![
+            "prefill".into(), "gemm".into(), s.to_string(),
+            ms(g_tm), ms(g_vm), pct_improvement(g_vm, g_tm),
+        ]);
+    }
+    for &s in &[1024usize, 2048, 4096, 8192] {
+        // Decode: one token attending a history of s.
+        let a_tm = attn_time(&dev, Framework::TurboMind, model, 1, 1, s, 8);
+        let a_vm = attn_time(&dev, Framework::VllmMarlin, model, 1, 1, s, 8);
+        t.row(vec![
+            "decode".into(), "attention".into(), s.to_string(),
+            ms(a_tm), ms(a_vm), pct_improvement(a_vm, a_tm),
+        ]);
+        let g_tm = layer_gemm_time(&dev, Framework::TurboMind, model, 1, 4);
+        let g_vm = layer_gemm_time(&dev, Framework::VllmMarlin, model, 1, 4);
+        t.row(vec![
+            "decode".into(), "gemm".into(), s.to_string(),
+            ms(g_tm), ms(g_vm), pct_improvement(g_vm, g_tm),
+        ]);
+    }
+    t.note("paper: attention prefill avg -22.1% (max -48.7%); decode avg -7.6% (max -29.9%); GEMM avg -19.2% (max -25.5%)");
+    t
+}
+
+/// Fig 12: accumulated attention + GEMM kernel latency across batch sizes.
+pub fn fig12() -> Table {
+    let dev = DeviceProfile::a100();
+    let model = "qwen3-8b";
+    let cfg = find_model(model).unwrap();
+    let mut t = Table::new(
+        "Fig 12 — accumulated kernel latency per decode step vs batch (Qwen3-8B AWQ W4A16KV8, A100)",
+        &["batch", "LMDeploy(ms)", "vLLM+MARLIN(ms)", "reduction"],
+    );
+    for &b in &[1usize, 2, 4, 8, 16, 32, 64] {
+        let total = |fw: Framework| {
+            (attn_time(&dev, fw, model, b, 1, 2048, 8)
+                + layer_gemm_time(&dev, fw, model, b, 4))
+                * cfg.n_layers as f64
+        };
+        let tm = total(Framework::TurboMind);
+        let vm = total(Framework::VllmMarlin);
+        t.row(vec![b.to_string(), ms(tm), ms(vm), pct_improvement(vm, tm)]);
+    }
+    t.note("paper: avg -88.5% accumulated latency across batch sizes (max -381.5% i.e. 4.8x)");
+    t
+}
+
+/// Fig 13: INT4×FP16 vs FP16×FP16 GEMM across batch sizes (A100,
+/// 8192×8192 projection — the crossover exhibit).
+pub fn fig13() -> Table {
+    let dev = DeviceProfile::a100();
+    let tm = Framework::TurboMind.traits_on(&dev);
+    let ml = Framework::VllmMarlin.traits_on(&dev);
+    let g_tm = GemmKernelModel::new(&dev, &tm);
+    let g_ml = GemmKernelModel::new(&dev, &ml);
+    let (k, n) = (8192usize, 8192usize);
+    let mut t = Table::new(
+        "Fig 13 — INT4xFP16 vs FP16xFP16 GEMM (A100, 8192x8192)",
+        &["batch", "int4(ms)", "f16(ms)", "int4_speedup", "marlin_int4(ms)"],
+    );
+    for &m in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+        let t4 = g_tm.run(&GemmWorkload::w4a16(m, k, n)).time_s;
+        let t16 = g_tm.run(&GemmWorkload::f16(m, k, n)).time_s;
+        let tml = g_ml.run(&GemmWorkload::w4a16(m, k, n)).time_s;
+        t.row(vec![
+            m.to_string(),
+            ms(t4),
+            ms(t16),
+            format!("{:.2}x", t16 / t4),
+            ms(tml),
+        ]);
+    }
+    t.note("paper: avg +134% (max +220.3%) speedup at batch 1-16; parity at batch 64; MARLIN degrades up to 20.3% at batch 64");
+    t.note("roofline model: the compute/bandwidth crossover lands at batch ~256 for this 8192^2 shape; the paper's earlier crossover reflects sub-peak fp16 baselines at mid batch");
+    t
+}
+
+/// Table 2: instruction/cycle counts INT4×FP16 vs cuBLAS FP16 at 16384³.
+pub fn table2() -> Table {
+    let dev = DeviceProfile::a100();
+    let tr = Framework::TurboMind.traits_on(&dev);
+    let sim = PipelineSim::new(&dev, &tr);
+    let int4 = sim.gemm(16384, 16384, 16384, 4);
+    let f16 = sim.gemm(16384, 16384, 16384, 16);
+    let mut t = Table::new(
+        "Table 2 — INT4xFP16 vs FP16xFP16 (cuBLAS proxy) at 16384^3, A100",
+        &["metric", "LMDeploy INT4xFP16", "cuBLAS FP16xFP16", "overhead"],
+    );
+    let oi = int4.total_instrs() as f64 / f16.total_instrs() as f64 - 1.0;
+    let oc = int4.cycles as f64 / f16.cycles as f64 - 1.0;
+    let ot = int4.runtime_s(&dev) / f16.runtime_s(&dev) - 1.0;
+    t.row(vec![
+        "instr count".into(),
+        int4.total_instrs().to_string(),
+        f16.total_instrs().to_string(),
+        format!("{:+.2}%", oi * 100.0),
+    ]);
+    t.row(vec![
+        "cycle count".into(),
+        int4.cycles.to_string(),
+        f16.cycles.to_string(),
+        format!("{:+.2}%", oc * 100.0),
+    ]);
+    t.row(vec![
+        "runtime (ms)".into(),
+        ms(int4.runtime_s(&dev)),
+        ms(f16.runtime_s(&dev)),
+        format!("{:+.2}%", ot * 100.0),
+    ]);
+    t.note("paper: +64.66% instructions, +2.89% cycles, +2.45% runtime (30.28 vs 29.55 ms)");
+    t
+}
+
+/// Fig 26 (Appendix G): attention kernel memory bandwidth utilization.
+pub fn fig26() -> Table {
+    let model = "qwen3-8b";
+    let cfg = find_model(model).unwrap();
+    let mut t = Table::new(
+        "Fig 26 — attention kernel HBM bandwidth utilization (LMDeploy)",
+        &["gpu", "kv_bits", "batch", "bw_utilization"],
+    );
+    for dev in [DeviceProfile::a100(), DeviceProfile::h100()] {
+        let tr = Framework::TurboMind.traits_on(&dev);
+        let m = AttentionKernelModel::new(&dev, &tr);
+        for kv_bits in [16usize, 8] {
+            for &b in &[1usize, 4, 16, 64] {
+                let r = m.run(&AttnWorkload {
+                    batch: b,
+                    q_tokens: 1,
+                    kv_len: 4096,
+                    n_heads: cfg.n_heads,
+                    n_kv_heads: cfg.n_kv_heads,
+                    head_dim: cfg.head_dim,
+                    kv_bits,
+                });
+                t.row(vec![
+                    dev.name.into(),
+                    kv_bits.to_string(),
+                    b.to_string(),
+                    format!("{:.1}%", r.bw_utilization * 100.0),
+                ]);
+            }
+        }
+    }
+    t.note("paper: up to 91/95% (16-bit KV) and 86/93% (8-bit KV) on the two GPUs");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(t: &Table, name: &str) -> usize {
+        t.headers.iter().position(|h| h == name).unwrap()
+    }
+
+    #[test]
+    fn fig11_lmdeploy_wins_every_row() {
+        let t = fig11();
+        let c = col(&t, "reduction");
+        for row in &t.rows {
+            assert!(row[c].starts_with('+'), "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn fig13_crossover_shape() {
+        let t = fig13();
+        let c = col(&t, "int4_speedup");
+        let speedup = |i: usize| t.rows[i][c].trim_end_matches('x').parse::<f64>().unwrap();
+        // Small batch: >1.5x; monotonically approaching parity by B=128.
+        assert!(speedup(0) > 1.5, "B=1 speedup {}", speedup(0));
+        let last = speedup(t.rows.len() - 1);
+        assert!((0.85..=1.2).contains(&last), "B=512 ratio {last}");
+        assert!(speedup(0) > last);
+    }
+
+    #[test]
+    fn table2_matches_paper_band() {
+        let t = table2();
+        let c = col(&t, "overhead");
+        let parse = |s: &str| s.trim_start_matches('+').trim_end_matches('%').parse::<f64>().unwrap();
+        let instr = parse(&t.rows[0][c]);
+        let cycles = parse(&t.rows[1][c]);
+        assert!((40.0..90.0).contains(&instr), "instr {instr} (paper 64.66)");
+        assert!((0.0..10.0).contains(&cycles), "cycles {cycles} (paper 2.89)");
+    }
+
+    #[test]
+    fn fig26_utilization_band() {
+        let t = fig26();
+        let c = col(&t, "bw_utilization");
+        let best: f64 = t
+            .rows
+            .iter()
+            .map(|r| r[c].trim_end_matches('%').parse::<f64>().unwrap())
+            .fold(0.0, f64::max);
+        assert!((80.0..=96.0).contains(&best), "best util {best} (paper up to 95%)");
+    }
+
+    #[test]
+    fn fig12_scales_with_batch() {
+        let t = fig12();
+        let c = col(&t, "LMDeploy(ms)");
+        let first: f64 = t.rows[0][c].parse().unwrap();
+        let last: f64 = t.rows.last().unwrap()[c].parse().unwrap();
+        assert!(last > first);
+    }
+}

@@ -1,0 +1,56 @@
+//! Bench harness: one generator per paper table/figure (DESIGN.md §3).
+//!
+//! Each generator returns a [`table::Table`] with the same rows/series the
+//! paper reports, plus the paper's reference numbers as footnotes. The
+//! `cargo bench` binaries and the `turbomind bench` CLI subcommand both
+//! dispatch through [`registry`].
+
+pub mod kernel_figures;
+pub mod serving_figures;
+pub mod table;
+
+pub use table::Table;
+
+/// All figure/table generators by paper exhibit id.
+pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
+    vec![
+        ("fig11", kernel_figures::fig11 as fn() -> Table),
+        ("fig12", kernel_figures::fig12),
+        ("fig13", kernel_figures::fig13),
+        ("table2", kernel_figures::table2),
+        ("fig26", kernel_figures::fig26),
+        ("fig14", serving_figures::fig14),
+        ("fig15", serving_figures::fig15),
+        ("fig16", serving_figures::fig16),
+        ("fig17", serving_figures::fig17),
+        ("fig18", serving_figures::fig18),
+        ("fig19", serving_figures::fig19),
+        ("fig20", serving_figures::fig20),
+        ("fig21", serving_figures::fig21),
+        ("fig27", serving_figures::fig27),
+        ("fig28", serving_figures::fig28),
+    ]
+}
+
+/// Run one generator by name.
+pub fn run(name: &str) -> Option<Table> {
+    registry().into_iter().find(|(n, _)| *n == name).map(|(_, f)| f())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_covers_all_gpusim_exhibits() {
+        let names: Vec<_> = super::registry().iter().map(|(n, _)| *n).collect();
+        for f in ["fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
+                  "fig18", "fig19", "fig20", "fig21", "fig26", "fig27", "fig28",
+                  "table2"] {
+            assert!(names.contains(&f), "{f} missing");
+        }
+    }
+
+    #[test]
+    fn run_unknown_is_none() {
+        assert!(super::run("fig99").is_none());
+    }
+}

@@ -1,0 +1,242 @@
+//! GPU device profiles for the four architectures the paper evaluates
+//! (§5.1: RTX 4090, L40S, A100, H100).
+//!
+//! These numbers parameterize `gpusim` — the cost simulator substituted for
+//! the CUDA testbed (DESIGN.md §1). All figures come from the public
+//! datasheets; tensor-core numbers are *dense* (no sparsity marketing 2×).
+
+/// GPU micro-architecture generation. Determines tensor-core MMA tile shapes
+/// and which layouts MARLIN's static Ampere tuning matches (§2: MARLIN
+/// "fails to adapt ... to GPU generations other than Ampere").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuArch {
+    /// SM80/86 (A100, RTX 30xx).
+    Ampere,
+    /// SM89 (RTX 4090, L40S).
+    Ada,
+    /// SM90 (H100).
+    Hopper,
+}
+
+impl GpuArch {
+    /// Tensor-core MMA K extent for INT8 operands (16x8xK tiles; §3.3
+    /// Challenge-V: 16x8x32 Ampere/Ada, 16x8x64 Hopper).
+    pub const fn mma_k_int8(self) -> usize {
+        match self {
+            GpuArch::Ampere | GpuArch::Ada => 32,
+            GpuArch::Hopper => 64,
+        }
+    }
+
+    /// MMA K extent for FP16 operands (16x8x16 everywhere through Hopper).
+    pub const fn mma_k_f16(self) -> usize {
+        16
+    }
+}
+
+/// Performance-relevant device parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub arch: GpuArch,
+    /// HBM/GDDR peak bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Achievable fraction of peak bandwidth for well-coalesced streams.
+    pub mem_eff: f64,
+    /// Dense FP16 tensor-core throughput, FLOP/s.
+    pub tc_f16_flops: f64,
+    /// Dense INT8 tensor-core throughput, OP/s.
+    pub tc_int8_ops: f64,
+    /// FP8 tensor-core throughput, FLOP/s (0.0 when unsupported).
+    pub tc_fp8_flops: f64,
+    /// CUDA-core (ALU) FP32 throughput, FLOP/s — bounds I2F + FMA dequant.
+    pub alu_f32_flops: f64,
+    /// Shared memory bandwidth per SM, bytes/clock (128B/clk typical).
+    pub smem_bytes_per_clk: f64,
+    /// Number of SMs.
+    pub sm_count: usize,
+    /// Boost clock, Hz.
+    pub clock_hz: f64,
+    /// Global memory transaction segment size, bytes.
+    pub segment_bytes: usize,
+    /// Shared-memory banks (32 on every generation we model).
+    pub smem_banks: usize,
+    /// Device-memory capacity, bytes.
+    pub mem_capacity: usize,
+    /// Interconnect bandwidth for tensor parallelism, bytes/s per direction
+    /// (NVLink for A100/H100; PCIe Gen4 for the workstation parts).
+    pub interconnect_bw: f64,
+    /// Kernel launch + runtime overhead per kernel, seconds.
+    pub launch_overhead_s: f64,
+}
+
+const GIB: usize = 1 << 30;
+
+impl DeviceProfile {
+    pub fn rtx4090() -> Self {
+        Self {
+            name: "RTX4090",
+            arch: GpuArch::Ada,
+            mem_bw: 1.008e12,
+            mem_eff: 0.86,
+            tc_f16_flops: 165.2e12,
+            tc_int8_ops: 330.3e12,
+            tc_fp8_flops: 330.3e12,
+            alu_f32_flops: 82.6e12,
+            smem_bytes_per_clk: 128.0,
+            sm_count: 128,
+            clock_hz: 2.52e9,
+            segment_bytes: 128,
+            smem_banks: 32,
+            mem_capacity: 24 * GIB,
+            interconnect_bw: 32e9, // PCIe Gen4 x16
+            launch_overhead_s: 4.0e-6,
+        }
+    }
+
+    pub fn l40s() -> Self {
+        Self {
+            name: "L40S",
+            arch: GpuArch::Ada,
+            mem_bw: 0.864e12,
+            mem_eff: 0.85,
+            tc_f16_flops: 181.0e12,
+            tc_int8_ops: 362.0e12,
+            tc_fp8_flops: 362.0e12,
+            alu_f32_flops: 91.6e12,
+            smem_bytes_per_clk: 128.0,
+            sm_count: 142,
+            clock_hz: 2.52e9,
+            segment_bytes: 128,
+            smem_banks: 32,
+            mem_capacity: 48 * GIB,
+            interconnect_bw: 32e9,
+            launch_overhead_s: 4.0e-6,
+        }
+    }
+
+    pub fn a100() -> Self {
+        Self {
+            name: "A100",
+            arch: GpuArch::Ampere,
+            mem_bw: 1.555e12, // 40GB SXM variant lineage; 80GB is 2.0e12
+            mem_eff: 0.88,
+            tc_f16_flops: 312.0e12,
+            tc_int8_ops: 624.0e12,
+            tc_fp8_flops: 0.0, // no FP8 tensor cores on Ampere
+            alu_f32_flops: 19.5e12,
+            smem_bytes_per_clk: 128.0,
+            sm_count: 108,
+            clock_hz: 1.41e9,
+            segment_bytes: 128,
+            smem_banks: 32,
+            mem_capacity: 80 * GIB,
+            interconnect_bw: 300e9, // NVLink3 per direction
+            launch_overhead_s: 3.5e-6,
+        }
+    }
+
+    pub fn h100() -> Self {
+        Self {
+            name: "H100",
+            arch: GpuArch::Hopper,
+            mem_bw: 3.35e12,
+            mem_eff: 0.90,
+            tc_f16_flops: 989.4e12 / 2.0, // dense
+            tc_int8_ops: 1978.9e12 / 2.0,
+            tc_fp8_flops: 1978.9e12 / 2.0,
+            alu_f32_flops: 66.9e12,
+            smem_bytes_per_clk: 128.0,
+            sm_count: 132,
+            clock_hz: 1.98e9,
+            segment_bytes: 128,
+            smem_banks: 32,
+            mem_capacity: 80 * GIB,
+            interconnect_bw: 450e9, // NVLink4 per direction
+            launch_overhead_s: 3.0e-6,
+        }
+    }
+
+    /// All four evaluation GPUs in the paper's order.
+    pub fn all() -> Vec<DeviceProfile> {
+        vec![Self::rtx4090(), Self::l40s(), Self::a100(), Self::h100()]
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        Self::all().into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Compute-to-bandwidth ratio (FLOP per byte) — the roofline ridge point
+    /// the paper's §3.2 references ("arithmetic intensity far below the
+    /// GPU's compute-to-bandwidth ratio").
+    pub fn ridge_point_f16(&self) -> f64 {
+        self.tc_f16_flops / self.mem_bw
+    }
+
+    /// Tensor-core throughput for a given operand bit-width, OP/s.
+    pub fn tc_ops_for_bits(&self, bits: usize) -> f64 {
+        match bits {
+            4 | 8 => self.tc_int8_ops, // INT4 MMA retired post-Ampere; use INT8 path
+            16 => self.tc_f16_flops,
+            _ => self.tc_f16_flops,
+        }
+    }
+
+    /// Aggregate shared-memory bandwidth, bytes/s.
+    pub fn smem_bw(&self) -> f64 {
+        self.smem_bytes_per_clk * self.clock_hz * self.sm_count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_profiles() {
+        let all = DeviceProfile::all();
+        assert_eq!(all.len(), 4);
+        let names: Vec<_> = all.iter().map(|d| d.name).collect();
+        assert_eq!(names, ["RTX4090", "L40S", "A100", "H100"]);
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(DeviceProfile::by_name("a100").is_some());
+        assert!(DeviceProfile::by_name("H100").is_some());
+        assert!(DeviceProfile::by_name("B200").is_none());
+    }
+
+    #[test]
+    fn ridge_points_ordering() {
+        // All modern GPUs have ridge points far above decode arithmetic
+        // intensity (~1-2 FLOP/byte), which is the paper's premise.
+        for d in DeviceProfile::all() {
+            assert!(d.ridge_point_f16() > 100.0, "{}: {}", d.name, d.ridge_point_f16());
+        }
+    }
+
+    #[test]
+    fn mma_tiles_per_arch() {
+        assert_eq!(GpuArch::Ampere.mma_k_int8(), 32);
+        assert_eq!(GpuArch::Hopper.mma_k_int8(), 64);
+        assert_eq!(GpuArch::Ada.mma_k_f16(), 16);
+    }
+
+    #[test]
+    fn hopper_fastest() {
+        let (a, h) = (DeviceProfile::a100(), DeviceProfile::h100());
+        assert!(h.mem_bw > a.mem_bw);
+        assert!(h.tc_f16_flops > a.tc_f16_flops);
+        assert_eq!(DeviceProfile::a100().tc_fp8_flops, 0.0);
+    }
+
+    #[test]
+    fn smem_bw_is_huge() {
+        // Shared memory aggregate bandwidth dwarfs HBM — bank conflicts, not
+        // raw capacity, are what matters (Challenge-II).
+        for d in DeviceProfile::all() {
+            assert!(d.smem_bw() > 5.0 * d.mem_bw, "{}", d.name);
+        }
+    }
+}

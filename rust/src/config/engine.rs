@@ -1,0 +1,121 @@
+//! Serving-engine configuration: the knobs a deployment would set.
+
+use super::precision::{DType, PrecisionFormat};
+
+/// Configuration of the real (PJRT-backed) serving engine.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt` + weight binaries.
+    pub artifacts_dir: String,
+    /// Mixed-precision format to serve with. Must match a compiled variant.
+    pub precision: PrecisionFormat,
+    /// Maximum concurrent decode batch (must be a compiled decode batch
+    /// size; smaller batches run padded to the next compiled size).
+    pub max_batch: usize,
+    /// KV block size in tokens (paged KV cache granularity).
+    pub kv_block_tokens: usize,
+    /// Total KV pool budget in tokens (across all sequences).
+    pub kv_pool_tokens: usize,
+    /// Maximum new tokens per request unless the request caps it lower.
+    pub max_new_tokens: usize,
+    /// Chunk size for prefill (longer prompts run in chunks, Sarathi-style).
+    pub prefill_chunk: usize,
+    /// Sampling temperature; 0 = greedy.
+    pub temperature: f32,
+    /// Top-k sampling cutoff (0 = disabled).
+    pub top_k: usize,
+    /// RNG seed for sampling.
+    pub seed: u64,
+    /// Scheduler policy.
+    pub scheduler: SchedulerPolicy,
+}
+
+/// Iteration-level scheduling policy (§5 serving comparisons; the
+/// `Static` policy exists as the ablation baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerPolicy {
+    /// vLLM/Orca-style continuous batching: decode-priority with prefill
+    /// admission whenever KV + batch budget allow.
+    Continuous,
+    /// Static batching: wait for a full batch, run it to completion.
+    Static,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            precision: PrecisionFormat::new(DType::Int4, DType::F16, DType::Int8),
+            max_batch: 8,
+            kv_block_tokens: 16,
+            kv_pool_tokens: 16 * 512,
+            max_new_tokens: 64,
+            prefill_chunk: 128,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            scheduler: SchedulerPolicy::Continuous,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Validate internal consistency; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("max_batch must be > 0".into());
+        }
+        if !self.max_batch.is_power_of_two() {
+            return Err(format!(
+                "max_batch {} must be a power of two (compiled decode batch sizes)",
+                self.max_batch
+            ));
+        }
+        if self.kv_block_tokens == 0 || self.kv_pool_tokens == 0 {
+            return Err("kv pool sizes must be > 0".into());
+        }
+        if self.kv_pool_tokens % self.kv_block_tokens != 0 {
+            return Err(format!(
+                "kv_pool_tokens {} must be a multiple of kv_block_tokens {}",
+                self.kv_pool_tokens, self.kv_block_tokens
+            ));
+        }
+        if self.prefill_chunk == 0 {
+            return Err("prefill_chunk must be > 0".into());
+        }
+        if self.temperature < 0.0 {
+            return Err("temperature must be >= 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = EngineConfig::default();
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = EngineConfig::default();
+        c.max_batch = 3;
+        assert!(c.validate().is_err());
+
+        let mut c = EngineConfig::default();
+        c.kv_pool_tokens = 100;
+        c.kv_block_tokens = 16;
+        assert!(c.validate().is_err());
+
+        let mut c = EngineConfig::default();
+        c.temperature = -1.0;
+        assert!(c.validate().is_err());
+    }
+}

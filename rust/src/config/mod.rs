@@ -1,0 +1,16 @@
+//! Configuration: precision formats, model architectures, device profiles,
+//! and engine settings.
+//!
+//! Everything the paper parameterizes its evaluation over lives here: the
+//! `WxAyKVz` precision notation (§1 footnote 1), the 16-model zoo (§5.1),
+//! the four GPU profiles (§5.1), and the serving-engine knobs.
+
+pub mod device;
+pub mod engine;
+pub mod model;
+pub mod precision;
+
+pub use device::{DeviceProfile, GpuArch};
+pub use engine::EngineConfig;
+pub use model::{model_zoo, ModelConfig};
+pub use precision::{DType, PrecisionFormat};

@@ -1,0 +1,251 @@
+//! Model architecture configs and the paper's evaluation model zoo (§5.1).
+//!
+//! The zoo entries carry the *real* architecture dimensions of the models the
+//! paper benchmarks (Qwen / Llama / DeepSeek / Mixtral / QwQ families); they
+//! drive the `gpusim` cost models at true scale. The `tiny()` config is the
+//! ~13M-parameter Qwen-shaped model that actually executes end-to-end through
+//! the PJRT runtime (DESIGN.md §1 substitutions).
+
+/// Transformer architecture description (decoder-only, GQA, SwiGLU).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Human-readable name, e.g. `qwen3-8b`.
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// Grouped-query attention KV heads (== n_heads for MHA).
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// SwiGLU intermediate size.
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq_len: usize,
+    /// MoE expert count (1 = dense). Mixtral-style top-2 routing assumed.
+    pub n_experts: usize,
+    /// Active experts per token for MoE (ignored when `n_experts == 1`).
+    pub experts_per_token: usize,
+}
+
+impl ModelConfig {
+    /// The tiny Qwen-shaped model compiled to HLO artifacts and executed by
+    /// the real engine. Dimensions chosen so every GEMM is MXU-tile friendly
+    /// (multiples of 128 where it matters) while keeping artifacts small.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny-qwen".into(),
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 32,
+            d_ff: 768,
+            vocab_size: 2048,
+            max_seq_len: 512,
+            n_experts: 1,
+            experts_per_token: 1,
+        }
+    }
+
+    fn dense(
+        name: &str,
+        n_layers: usize,
+        d_model: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        d_ff: usize,
+        vocab_size: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            n_layers,
+            d_model,
+            n_heads,
+            n_kv_heads,
+            head_dim: d_model / n_heads,
+            d_ff,
+            vocab_size,
+            max_seq_len: 32_768,
+            n_experts: 1,
+            experts_per_token: 1,
+        }
+    }
+
+    /// Q/K/V/O projection shapes per layer as `(name, rows_in, cols_out)`.
+    /// These are the GEMMs the paper's GEMM pipeline accelerates.
+    pub fn layer_gemms(&self) -> Vec<(&'static str, usize, usize)> {
+        let kv_out = self.n_kv_heads * self.head_dim;
+        let q_out = self.n_heads * self.head_dim;
+        let mut v = vec![
+            ("wq", self.d_model, q_out),
+            ("wk", self.d_model, kv_out),
+            ("wv", self.d_model, kv_out),
+            ("wo", q_out, self.d_model),
+        ];
+        // SwiGLU: gate + up + down. For MoE these exist per active expert.
+        let ff_mult = self.experts_per_token.max(1);
+        for _ in 0..ff_mult {
+            v.push(("w_gate", self.d_model, self.d_ff));
+            v.push(("w_up", self.d_model, self.d_ff));
+            v.push(("w_down", self.d_ff, self.d_model));
+        }
+        v
+    }
+
+    /// Total parameter count (embeddings + layers + head), for sizing checks.
+    pub fn param_count(&self) -> usize {
+        let embed = self.vocab_size * self.d_model * 2; // tok embed + lm head
+        let per_layer: usize = self
+            .layer_gemms_all_experts()
+            .iter()
+            .map(|(_, r, c)| r * c)
+            .sum::<usize>()
+            + 2 * self.d_model; // rmsnorm scales
+        embed + self.n_layers * per_layer + self.d_model
+    }
+
+    /// Like `layer_gemms` but counting *all* experts (for memory footprint).
+    fn layer_gemms_all_experts(&self) -> Vec<(&'static str, usize, usize)> {
+        let kv_out = self.n_kv_heads * self.head_dim;
+        let q_out = self.n_heads * self.head_dim;
+        let mut v = vec![
+            ("wq", self.d_model, q_out),
+            ("wk", self.d_model, kv_out),
+            ("wv", self.d_model, kv_out),
+            ("wo", q_out, self.d_model),
+        ];
+        for _ in 0..self.n_experts.max(1) {
+            v.push(("w_gate", self.d_model, self.d_ff));
+            v.push(("w_up", self.d_model, self.d_ff));
+            v.push(("w_down", self.d_ff, self.d_model));
+        }
+        v
+    }
+
+    /// Weight bytes at `w_bits` weight precision (scales excluded).
+    pub fn weight_bytes(&self, w_bits: usize) -> usize {
+        self.param_count() * w_bits / 8
+    }
+
+    /// KV cache bytes per token at `kv_bits` (both K and V, all layers).
+    pub fn kv_bytes_per_token(&self, kv_bits: usize) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim * kv_bits / 8
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 1
+    }
+}
+
+/// The 16-model evaluation zoo of §5.1 / Fig 15, with true architecture
+/// dimensions from the public model cards.
+pub fn model_zoo() -> Vec<ModelConfig> {
+    let mut zoo = vec![
+        // Qwen3 family (dense)
+        ModelConfig::dense("qwen3-8b", 36, 4096, 32, 8, 12288, 151_936),
+        ModelConfig::dense("qwen3-14b", 40, 5120, 40, 8, 17408, 151_936),
+        ModelConfig::dense("qwen3-32b", 64, 5120, 64, 8, 25600, 151_936),
+        // Qwen2.5 family
+        ModelConfig::dense("qwen2.5-7b", 28, 3584, 28, 4, 18944, 152_064),
+        ModelConfig::dense("qwen2.5-14b", 48, 5120, 40, 8, 13824, 152_064),
+        ModelConfig::dense("qwen2.5-32b", 64, 5120, 40, 8, 27648, 152_064),
+        ModelConfig::dense("qwen2.5-72b", 80, 8192, 64, 8, 29568, 152_064),
+        // Llama-3 family
+        ModelConfig::dense("llama3-8b", 32, 4096, 32, 8, 14336, 128_256),
+        ModelConfig::dense("llama3-70b", 80, 8192, 64, 8, 28672, 128_256),
+        // DeepSeek distills (Qwen/Llama backbones)
+        ModelConfig::dense("deepseek-r1-distill-7b", 28, 3584, 28, 4, 18944, 152_064),
+        ModelConfig::dense("deepseek-r1-distill-70b", 80, 8192, 64, 8, 28672, 128_256),
+        // Reasoning model (Fig 16)
+        ModelConfig::dense("qwq-32b", 64, 5120, 40, 8, 27648, 152_064),
+    ];
+
+    // MoE models (Mixtral family + Qwen3 235B), §5.1.
+    let mut mixtral_8x7b = ModelConfig::dense("mixtral-8x7b", 32, 4096, 32, 8, 14336, 32_000);
+    mixtral_8x7b.n_experts = 8;
+    mixtral_8x7b.experts_per_token = 2;
+    let mut mixtral_8x22b = ModelConfig::dense("mixtral-8x22b", 56, 6144, 48, 8, 16384, 32_768);
+    mixtral_8x22b.n_experts = 8;
+    mixtral_8x22b.experts_per_token = 2;
+    let mut qwen3_235b = ModelConfig::dense("qwen3-235b-a22b", 94, 4096, 64, 4, 1536, 151_936);
+    qwen3_235b.n_experts = 128;
+    qwen3_235b.experts_per_token = 8;
+
+    zoo.push(mixtral_8x7b);
+    zoo.push(mixtral_8x22b);
+    zoo.push(qwen3_235b);
+    zoo.push(ModelConfig::tiny());
+    zoo
+}
+
+/// Look up a zoo model by name.
+pub fn find_model(name: &str) -> Option<ModelConfig> {
+    model_zoo().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_16_models() {
+        assert_eq!(model_zoo().len(), 16);
+    }
+
+    #[test]
+    fn zoo_names_unique() {
+        let zoo = model_zoo();
+        let mut names: Vec<_> = zoo.iter().map(|m| m.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), zoo.len());
+    }
+
+    #[test]
+    fn param_counts_roughly_match_names() {
+        // Sanity: the "8B" model should be within 25% of 8e9 params.
+        let m = find_model("qwen3-8b").unwrap();
+        let p = m.param_count() as f64;
+        assert!((6e9..1.05e10).contains(&p), "qwen3-8b params {p:e}");
+        let m70 = find_model("llama3-70b").unwrap();
+        let p70 = m70.param_count() as f64;
+        assert!((6e10..8.5e10).contains(&p70), "llama3-70b params {p70:e}");
+    }
+
+    #[test]
+    fn tiny_model_is_small_and_aligned() {
+        let t = ModelConfig::tiny();
+        assert!(t.param_count() < 20_000_000, "params {}", t.param_count());
+        assert_eq!(t.n_heads * t.head_dim, t.d_model);
+        assert_eq!(t.d_model % 128, 0);
+    }
+
+    #[test]
+    fn gqa_ratio_divides() {
+        for m in model_zoo() {
+            assert_eq!(m.n_heads % m.n_kv_heads, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_precision() {
+        let m = find_model("qwen3-8b").unwrap();
+        let kv16 = m.kv_bytes_per_token(16);
+        let kv8 = m.kv_bytes_per_token(8);
+        let kv4 = m.kv_bytes_per_token(4);
+        assert_eq!(kv16, 2 * kv8);
+        assert_eq!(kv8, 2 * kv4);
+    }
+
+    #[test]
+    fn moe_flagged() {
+        assert!(find_model("mixtral-8x22b").unwrap().is_moe());
+        assert!(!find_model("qwen3-8b").unwrap().is_moe());
+    }
+
+    #[test]
+    fn weight_bytes_compression() {
+        let m = find_model("qwen3-8b").unwrap();
+        assert_eq!(m.weight_bytes(16), 4 * m.weight_bytes(4));
+    }
+}

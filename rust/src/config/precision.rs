@@ -1,0 +1,217 @@
+//! Precision formats: element dtypes and the paper's `WxAyKVz` notation.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Element data types used across weights, activations, and KV cache.
+///
+/// `F32` stands in for the paper's FP16 "full precision" on the CPU-PJRT
+/// testbed (see DESIGN.md §1); the *relative* behaviour of the quantized
+/// formats against it is what the experiments measure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    /// 4-bit signed integer (packed two-per-byte).
+    Int4,
+    /// 8-bit signed integer.
+    Int8,
+    /// 8-bit float (e5m2); modeled in gpusim, stored as one byte.
+    Fp8,
+    /// 16-bit float (the paper's FP16/BF16 tier).
+    F16,
+    /// 32-bit float (CPU-PJRT stand-in for full precision).
+    F32,
+}
+
+impl DType {
+    /// Number of bits per element.
+    pub const fn bits(self) -> usize {
+        match self {
+            DType::Int4 => 4,
+            DType::Int8 | DType::Fp8 => 8,
+            DType::F16 => 16,
+            DType::F32 => 32,
+        }
+    }
+
+    /// Bytes needed to store `n` elements of this dtype (Int4 packs two per
+    /// byte; `n` odd rounds up).
+    pub const fn bytes_for(self, n: usize) -> usize {
+        (n * self.bits()).div_ceil(8)
+    }
+
+    /// True for integer quantized formats that need scales + I2F dequant.
+    pub const fn is_quantized(self) -> bool {
+        matches!(self, DType::Int4 | DType::Int8 | DType::Fp8)
+    }
+
+    /// The maximum representable magnitude for symmetric integer quant.
+    pub const fn qmax(self) -> i32 {
+        match self {
+            DType::Int4 => 7,
+            DType::Int8 => 127,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::Int4 => "int4",
+            DType::Int8 => "int8",
+            DType::Fp8 => "fp8",
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A `WxAyKVz` mixed-precision format: x-bit weights, y-bit activations,
+/// z-bit KV cache (paper §1, footnote 1). Examples: `W4A16KV8`, `W16A16KV16`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrecisionFormat {
+    pub weight: DType,
+    pub activation: DType,
+    pub kv: DType,
+}
+
+impl PrecisionFormat {
+    pub const fn new(weight: DType, activation: DType, kv: DType) -> Self {
+        Self { weight, activation, kv }
+    }
+
+    /// The paper's headline TurboMind format (Fig 20): W4A16KV4.
+    pub const fn w4a16kv4() -> Self {
+        Self::new(DType::Int4, DType::F16, DType::Int4)
+    }
+
+    /// The micro-benchmark format of Figs 11-12: W4A16KV8.
+    pub const fn w4a16kv8() -> Self {
+        Self::new(DType::Int4, DType::F16, DType::Int8)
+    }
+
+    /// Full-precision baseline: W16A16KV16.
+    pub const fn full() -> Self {
+        Self::new(DType::F16, DType::F16, DType::F16)
+    }
+
+    /// QServe's hard-wired format (§2): W4A8KV4.
+    pub const fn w4a8kv4() -> Self {
+        Self::new(DType::Int4, DType::Int8, DType::Int4)
+    }
+
+    /// Weight compression ratio versus 16-bit weights (ignoring scales).
+    pub fn weight_compression(&self) -> f64 {
+        16.0 / self.weight.bits() as f64
+    }
+
+    /// KV compression ratio versus 16-bit KV.
+    pub fn kv_compression(&self) -> f64 {
+        16.0 / self.kv.bits() as f64
+    }
+}
+
+impl fmt::Display for PrecisionFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "W{}A{}KV{}",
+            self.weight.bits(),
+            self.activation.bits(),
+            self.kv.bits()
+        )
+    }
+}
+
+/// Errors from parsing a `WxAyKVz` string.
+#[derive(Debug, thiserror::Error)]
+#[error("invalid precision format `{0}` (expected e.g. W4A16KV8)")]
+pub struct ParsePrecisionError(String);
+
+impl FromStr for PrecisionFormat {
+    type Err = ParsePrecisionError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let err = || ParsePrecisionError(s.to_string());
+        let upper = s.to_ascii_uppercase();
+        let rest = upper.strip_prefix('W').ok_or_else(err)?;
+        let a_pos = rest.find('A').ok_or_else(err)?;
+        let (w_bits, rest) = rest.split_at(a_pos);
+        let rest = rest.strip_prefix('A').ok_or_else(err)?;
+        let kv_pos = rest.find("KV").ok_or_else(err)?;
+        let (a_bits, rest) = rest.split_at(kv_pos);
+        let kv_bits = rest.strip_prefix("KV").ok_or_else(err)?;
+
+        let parse_bits = |bits: &str, fp8_ok: bool| -> Result<DType, ParsePrecisionError> {
+            match bits {
+                "4" => Ok(DType::Int4),
+                "8" => Ok(DType::Int8),
+                "8F" if fp8_ok => Ok(DType::Fp8),
+                "16" => Ok(DType::F16),
+                "32" => Ok(DType::F32),
+                _ => Err(ParsePrecisionError(s.to_string())),
+            }
+        };
+        Ok(PrecisionFormat {
+            weight: parse_bits(w_bits, true)?,
+            activation: parse_bits(a_bits, true)?,
+            kv: parse_bits(kv_bits, true)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::Int4.bytes_for(8), 4);
+        assert_eq!(DType::Int4.bytes_for(7), 4); // rounds up
+        assert_eq!(DType::Int8.bytes_for(8), 8);
+        assert_eq!(DType::F16.bytes_for(8), 16);
+        assert_eq!(DType::F32.bytes_for(8), 32);
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(DType::Int4.qmax(), 7);
+        assert_eq!(DType::Int8.qmax(), 127);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["W4A16KV8", "W16A16KV16", "W4A8KV4", "W8A16KV16", "W4A16KV4"] {
+            let p: PrecisionFormat = s.parse().unwrap();
+            assert_eq!(p.to_string(), s, "roundtrip {s}");
+        }
+    }
+
+    #[test]
+    fn parse_case_insensitive() {
+        let p: PrecisionFormat = "w4a16kv8".parse().unwrap();
+        assert_eq!(p, PrecisionFormat::w4a16kv8());
+    }
+
+    #[test]
+    fn parse_fp8() {
+        let p: PrecisionFormat = "W8FA16KV8F".parse().unwrap();
+        assert_eq!(p.weight, DType::Fp8);
+        assert_eq!(p.kv, DType::Fp8);
+    }
+
+    #[test]
+    fn parse_rejects_invalid() {
+        for s in ["", "W4", "W4A16", "4A16KV8", "W3A16KV8", "W4A16KV2"] {
+            assert!(s.parse::<PrecisionFormat>().is_err(), "should reject {s}");
+        }
+    }
+
+    #[test]
+    fn compression_ratios() {
+        assert_eq!(PrecisionFormat::w4a16kv8().weight_compression(), 4.0);
+        assert_eq!(PrecisionFormat::w4a16kv8().kv_compression(), 2.0);
+        assert_eq!(PrecisionFormat::full().weight_compression(), 1.0);
+    }
+}

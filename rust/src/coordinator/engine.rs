@@ -1,0 +1,532 @@
+//! The serving engine: continuous batching over the PJRT-backed model.
+//!
+//! One `Engine` owns the runtime (compiled AOT graphs + weights), the paged
+//! quantized KV pool, the scheduler, and all in-flight sequence state. Each
+//! `step()` runs exactly one iteration — a prefill chunk or a decode batch —
+//! mirroring iteration-level scheduling (Orca) with chunked prefill
+//! (Sarathi) and paged KV (vLLM), the serving substrate the paper's §5
+//! evaluation assumes.
+//!
+//! Dataflow per decode step:
+//!   gather quantized KV from the pool → padded `[L,B,Hkv,T,·]` tensors →
+//!   PJRT execute (the Layer-1 attention kernel dequantizes on the fly) →
+//!   sample logits → append the graph-emitted quantized KV codes for the
+//!   new token back into the pool (no Rust-side re-quantization).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
+use super::sampler::Sampler;
+use super::scheduler::{Action, Scheduler};
+use crate::config::{DType, EngineConfig};
+use crate::kvcache::{KvPool, KvPrecision, SeqHandle};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Dt, HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// What one engine iteration did.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub action: Action,
+    /// (request id, token) pairs emitted this step.
+    pub emitted: Vec<(u64, i32)>,
+    /// Requests that finished this step.
+    pub finished: Vec<u64>,
+}
+
+/// Aggregate engine counters.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub prefill_iters: usize,
+    pub decode_iters: usize,
+    pub idle_iters: usize,
+    pub tokens_generated: usize,
+    pub prompt_tokens: usize,
+    /// Decode-batch slots wasted on padding (fixed compiled batch sizes).
+    pub padded_slots: usize,
+    pub aborted: usize,
+}
+
+/// The engine.
+pub struct Engine {
+    runtime: Runtime,
+    pool: KvPool,
+    cfg: EngineConfig,
+    wprec: &'static str,
+    kv_key: &'static str,
+    scheduler: Scheduler,
+    sampler: Sampler,
+    rng: Rng,
+    seqs: BTreeMap<u64, SeqState>,
+    waiting: VecDeque<u64>,
+    running: Vec<u64>,
+    next_id: u64,
+    outputs: Vec<RequestOutput>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Load artifacts and construct an engine for `cfg.precision`.
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let runtime = Runtime::load(&cfg.artifacts_dir)?;
+        let m = &runtime.manifest.model;
+
+        let wprec: &'static str = match cfg.precision.weight {
+            DType::Int4 => "w4",
+            DType::F16 | DType::F32 => "w16",
+            other => bail!("no compiled weight variant for {other} weights"),
+        };
+        let kv_prec = KvPrecision::from_dtype(cfg.precision.kv)?;
+        let kv_key = kv_prec.graph_key();
+
+        // Every (batch, context) graph the engine may need must exist.
+        for &b in &runtime.manifest.decode_batches {
+            for &t in &runtime.manifest.decode_t {
+                if b <= cfg.max_batch {
+                    let name = Manifest::decode_graph(wprec, kv_key, b, t);
+                    runtime.graph(&name).with_context(|| {
+                        format!("precision {} has no compiled variant", cfg.precision)
+                    })?;
+                }
+            }
+        }
+
+        let pool = KvPool::new(
+            kv_prec,
+            m.n_layers,
+            m.n_kv_heads,
+            m.head_dim,
+            cfg.kv_block_tokens,
+            cfg.kv_pool_tokens,
+        )?;
+
+        let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
+        Ok(Self {
+            runtime,
+            pool,
+            scheduler: Scheduler::new(cfg.scheduler),
+            sampler,
+            rng: Rng::new(cfg.seed),
+            wprec,
+            kv_key,
+            cfg,
+            seqs: BTreeMap::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            next_id: 0,
+            outputs: Vec::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Pre-compile the graphs this configuration uses.
+    pub fn warmup(&self) -> Result<()> {
+        let mut names = Vec::new();
+        for &b in &self.runtime.manifest.decode_batches {
+            for &t in &self.runtime.manifest.decode_t {
+                if b <= self.cfg.max_batch {
+                    names.push(Manifest::decode_graph(self.wprec, self.kv_key, b, t));
+                }
+            }
+        }
+        for &s in &self.runtime.manifest.prefill_chunks {
+            names.push(Manifest::prefill_graph(self.wprec, self.kv_key, s));
+        }
+        self.runtime.warmup(&names)
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &crate::runtime::manifest::ManifestModel {
+        &self.runtime.manifest.model
+    }
+
+    /// Submit a request; returns its id. Rejects requests that can never be
+    /// scheduled (longer than the model context or the whole pool).
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        let total = req.prompt.len() + req.max_new_tokens;
+        let m = &self.runtime.manifest.model;
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if total > m.max_seq_len {
+            bail!("request needs {total} tokens > context {}", m.max_seq_len);
+        }
+        if self.pool.blocks_for(total) > self.pool.total_blocks() {
+            bail!("request needs more KV than the entire pool");
+        }
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= m.vocab_size) {
+            bail!("prompt token {t} outside vocab {}", m.vocab_size);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(id, SeqState::new(id, req, Instant::now()));
+        self.waiting.push_back(id);
+        Ok(id)
+    }
+
+    /// Whether any work remains.
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Drain finished outputs.
+    pub fn take_outputs(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.outputs)
+    }
+
+    pub fn kv_pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// One engine iteration.
+    pub fn step(&mut self) -> Result<StepReport> {
+        let admissible = self.head_admissible();
+        let action = self.scheduler.next_action(
+            self.waiting.len(),
+            admissible,
+            self.running.len(),
+            self.cfg.max_batch,
+        );
+        match action {
+            Action::Prefill => self.step_prefill(),
+            Action::Decode => self.step_decode(),
+            Action::Idle => {
+                self.stats.idle_iters += 1;
+                Ok(StepReport { action, emitted: vec![], finished: vec![] })
+            }
+        }
+    }
+
+    /// Run until all submitted requests complete; returns their outputs.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestOutput>> {
+        let mut guard = 0usize;
+        while self.has_work() {
+            let r = self.step()?;
+            if r.action == Action::Idle {
+                guard += 1;
+                if guard > 4 {
+                    bail!(
+                        "engine stalled: {} waiting, {} running, {} free blocks",
+                        self.waiting.len(),
+                        self.running.len(),
+                        self.pool.free_blocks()
+                    );
+                }
+            } else {
+                guard = 0;
+            }
+        }
+        Ok(self.take_outputs())
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    fn head_admissible(&self) -> bool {
+        let Some(&id) = self.waiting.front() else { return false };
+        let s = &self.seqs[&id];
+        if s.handle.is_some() {
+            return true; // already admitted, mid-prefill
+        }
+        // Conservative reservation: full prompt + generation budget.
+        self.pool.can_reserve(s.prompt.len() + s.max_new_tokens)
+    }
+
+    /// Pick the compiled prefill bucket for `remaining` prompt tokens.
+    fn prefill_bucket(&self, remaining: usize) -> usize {
+        let chunks = &self.runtime.manifest.prefill_chunks;
+        *chunks
+            .iter()
+            .filter(|&&c| c >= remaining.min(self.cfg.prefill_chunk))
+            .min()
+            .unwrap_or_else(|| chunks.iter().max().expect("no prefill chunks"))
+    }
+
+    /// Pick the compiled decode batch for `n` live sequences.
+    fn decode_batch_size(&self, n: usize) -> Result<usize> {
+        self.runtime
+            .manifest
+            .decode_batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow!("no compiled decode batch >= {n}"))
+    }
+
+    /// Pick the compiled decode context bucket covering `need` tokens —
+    /// short contexts avoid the full max_seq_len attention scan (§Perf).
+    fn decode_t_bucket(&self, need: usize) -> Result<usize> {
+        self.runtime
+            .manifest
+            .decode_t
+            .iter()
+            .copied()
+            .filter(|&t| t >= need)
+            .min()
+            .ok_or_else(|| anyhow!("context {need} exceeds every compiled decode bucket"))
+    }
+
+    fn step_prefill(&mut self) -> Result<StepReport> {
+        self.stats.prefill_iters += 1;
+        let id = *self.waiting.front().expect("scheduler said Prefill");
+        let m = self.runtime.manifest.model.clone();
+        let t_pad = m.max_seq_len;
+        let rb = self.pool.row_bytes();
+
+        // Admit if new.
+        {
+            let s = self.seqs.get_mut(&id).unwrap();
+            if s.handle.is_none() {
+                s.handle = Some(self.pool.alloc_seq());
+                s.phase = Phase::Prefilling;
+            }
+        }
+
+        let (handle, pos, chunk_tokens, bucket, real) = {
+            let s = &self.seqs[&id];
+            let rem = s.remaining_prompt();
+            let bucket = self.prefill_bucket(rem);
+            let real = rem.min(bucket);
+            let mut toks: Vec<i32> = s.prompt[s.prefill_pos..s.prefill_pos + real].to_vec();
+            toks.resize(bucket, 0);
+            (s.handle.unwrap(), s.prefill_pos, toks, bucket, real)
+        };
+
+        // Gather the (possibly empty) past context for this sequence.
+        let kdim = m.n_layers * m.n_kv_heads * t_pad;
+        let mut k_codes = vec![0u8; kdim * rb];
+        let mut v_codes = vec![0u8; kdim * rb];
+        let mut k_scales = vec![1f32; kdim];
+        let mut v_scales = vec![1f32; kdim];
+        self.pool.gather_batch(
+            &[Some(handle)],
+            t_pad,
+            &mut k_codes,
+            &mut k_scales,
+            &mut v_codes,
+            &mut v_scales,
+        )?;
+
+        let code_dt = self.code_dt();
+        let cache_shape = vec![m.n_layers, 1, m.n_kv_heads, t_pad, rb / code_elem_size(code_dt)];
+        let scale_shape = vec![m.n_layers, 1, m.n_kv_heads, t_pad];
+        let graph = Manifest::prefill_graph(self.wprec, self.kv_key, bucket);
+        let outputs = self.runtime.execute(
+            &graph,
+            &[
+                HostTensor::from_i32(vec![bucket], &chunk_tokens)?,
+                HostTensor::from_i32(vec![1], &[pos as i32])?,
+                HostTensor::new(code_dt, cache_shape.clone(), k_codes)?,
+                HostTensor::new(Dt::F32, scale_shape.clone(), f32s_to_bytes(&k_scales))?,
+                HostTensor::new(code_dt, cache_shape, v_codes)?,
+                HostTensor::new(Dt::F32, scale_shape, f32s_to_bytes(&v_scales))?,
+            ],
+        )?;
+        let [logits, k_chunk, k_sc, v_chunk, v_sc] = take5(outputs)?;
+
+        // Store the real tokens' KV.
+        let k_sc = k_sc.as_f32()?;
+        let v_sc = v_sc.as_f32()?;
+        if let Err(e) = self.pool.append_chunk(
+            handle, real, bucket, &k_chunk.data, &k_sc, &v_chunk.data, &v_sc,
+        ) {
+            return self.abort(id, e);
+        }
+
+        let mut emitted = vec![];
+        let mut finished = vec![];
+        {
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.prefill_pos += real;
+            self.stats.prompt_tokens += real;
+            if s.remaining_prompt() == 0 {
+                // Prompt done: sample the first token from the last real row.
+                let lrow = logits.as_f32()?;
+                let v = m.vocab_size;
+                let row = &lrow[(real - 1) * v..real * v];
+                let tok = self.sampler.sample(row, &mut self.rng);
+                s.generated.push(tok);
+                s.first_token = Some(Instant::now());
+                s.phase = Phase::Decoding;
+                emitted.push((id, tok));
+                self.stats.tokens_generated += 1;
+                self.waiting.pop_front();
+                if let Some(reason) = s.should_finish() {
+                    finished.push(id);
+                    self.finish(id, reason);
+                } else {
+                    self.running.push(id);
+                }
+            }
+        }
+        Ok(StepReport { action: Action::Prefill, emitted, finished })
+    }
+
+    fn step_decode(&mut self) -> Result<StepReport> {
+        self.stats.decode_iters += 1;
+        let m = self.runtime.manifest.model.clone();
+        let rb = self.pool.row_bytes();
+        let ids: Vec<u64> = self.running.clone();
+        let n = ids.len();
+        assert!(n > 0, "scheduler said Decode with empty batch");
+        let bsize = self.decode_batch_size(n)?;
+        self.stats.padded_slots += bsize - n;
+
+        let mut tokens = vec![0i32; bsize];
+        let mut kv_len = vec![1i32; bsize];
+        let mut handles: Vec<Option<SeqHandle>> = vec![None; bsize];
+        let mut t_need = 2usize; // kv_len + 1 for the inserted token
+        for (i, id) in ids.iter().enumerate() {
+            let s = &self.seqs[id];
+            tokens[i] = s.next_input_token();
+            let len = self.pool.seq_len(s.handle.unwrap());
+            kv_len[i] = len as i32;
+            t_need = t_need.max(len + 1);
+            handles[i] = s.handle;
+        }
+        let t_pad = self.decode_t_bucket(t_need)?;
+
+        let kdim = m.n_layers * bsize * m.n_kv_heads * t_pad;
+        let mut k_codes = vec![0u8; kdim * rb];
+        let mut v_codes = vec![0u8; kdim * rb];
+        let mut k_scales = vec![1f32; kdim];
+        let mut v_scales = vec![1f32; kdim];
+        self.pool.gather_batch(
+            &handles, t_pad, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales,
+        )?;
+
+        let code_dt = self.code_dt();
+        let elem = code_elem_size(code_dt);
+        let cache_shape = vec![m.n_layers, bsize, m.n_kv_heads, t_pad, rb / elem];
+        let scale_shape = vec![m.n_layers, bsize, m.n_kv_heads, t_pad];
+        let graph = Manifest::decode_graph(self.wprec, self.kv_key, bsize, t_pad);
+        let outputs = self.runtime.execute(
+            &graph,
+            &[
+                HostTensor::from_i32(vec![bsize], &tokens)?,
+                HostTensor::from_i32(vec![bsize], &kv_len)?,
+                HostTensor::new(code_dt, cache_shape.clone(), k_codes)?,
+                HostTensor::new(Dt::F32, scale_shape.clone(), f32s_to_bytes(&k_scales))?,
+                HostTensor::new(code_dt, cache_shape, v_codes)?,
+                HostTensor::new(Dt::F32, scale_shape, f32s_to_bytes(&v_scales))?,
+            ],
+        )?;
+        let [logits, k_new, k_sc, v_new, v_sc] = take5(outputs)?;
+        let logits = logits.as_f32()?;
+        let k_sc = k_sc.as_f32()?;
+        let v_sc = v_sc.as_f32()?;
+
+        // Append each live sequence's new KV codes ([L,B,Hkv,rb] layout).
+        let mut emitted = vec![];
+        let mut finished = vec![];
+        for (i, id) in ids.iter().enumerate() {
+            let handle = self.seqs[id].handle.unwrap();
+            let per = m.n_kv_heads * rb;
+            let mut kc = vec![0u8; m.n_layers * per];
+            let mut vc = vec![0u8; m.n_layers * per];
+            let mut ks = vec![0f32; m.n_layers * m.n_kv_heads];
+            let mut vs = vec![0f32; m.n_layers * m.n_kv_heads];
+            for l in 0..m.n_layers {
+                let src = (l * bsize + i) * per;
+                kc[l * per..(l + 1) * per].copy_from_slice(&k_new.data[src..src + per]);
+                vc[l * per..(l + 1) * per].copy_from_slice(&v_new.data[src..src + per]);
+                let ssrc = (l * bsize + i) * m.n_kv_heads;
+                ks[l * m.n_kv_heads..(l + 1) * m.n_kv_heads]
+                    .copy_from_slice(&k_sc[ssrc..ssrc + m.n_kv_heads]);
+                vs[l * m.n_kv_heads..(l + 1) * m.n_kv_heads]
+                    .copy_from_slice(&v_sc[ssrc..ssrc + m.n_kv_heads]);
+            }
+            if let Err(_e) = self.pool.append_token(handle, &kc, &ks, &vc, &vs) {
+                // KV exhausted mid-flight (admission reserve should prevent
+                // this); abort the sequence and keep the batch going.
+                self.running.retain(|x| x != id);
+                self.finish(*id, FinishReason::Aborted);
+                self.stats.aborted += 1;
+                finished.push(*id);
+                continue;
+            }
+
+            let v = m.vocab_size;
+            let tok = self.sampler.sample(&logits[i * v..(i + 1) * v], &mut self.rng);
+            let s = self.seqs.get_mut(id).unwrap();
+            s.generated.push(tok);
+            emitted.push((*id, tok));
+            self.stats.tokens_generated += 1;
+            if let Some(reason) = s.should_finish() {
+                self.running.retain(|x| x != id);
+                self.finish(*id, reason);
+                finished.push(*id);
+            }
+        }
+        Ok(StepReport { action: Action::Decode, emitted, finished })
+    }
+
+    fn finish(&mut self, id: u64, reason: FinishReason) {
+        let s = self.seqs.get_mut(&id).unwrap();
+        if let Some(h) = s.handle.take() {
+            self.pool.free_seq(h);
+        }
+        s.phase = Phase::Finished(reason);
+        let now = Instant::now();
+        self.outputs.push(RequestOutput {
+            id,
+            tokens: s.generated.clone(),
+            finish: reason,
+            ttft: s
+                .first_token
+                .map(|t| t.duration_since(s.submitted).as_secs_f64())
+                .unwrap_or(f64::NAN),
+            latency: now.duration_since(s.submitted).as_secs_f64(),
+            prompt_len: s.prompt.len(),
+        });
+        self.seqs.remove(&id);
+    }
+
+    fn abort(&mut self, id: u64, err: anyhow::Error) -> Result<StepReport> {
+        self.waiting.retain(|x| *x != id);
+        self.running.retain(|x| *x != id);
+        self.finish(id, FinishReason::Aborted);
+        self.stats.aborted += 1;
+        eprintln!("request {id} aborted: {err}");
+        Ok(StepReport { action: Action::Prefill, emitted: vec![], finished: vec![id] })
+    }
+
+    fn code_dt(&self) -> Dt {
+        match self.pool.precision() {
+            KvPrecision::F32 => Dt::F32,
+            KvPrecision::Int8 => Dt::I8,
+            KvPrecision::Int4 => Dt::U8,
+        }
+    }
+}
+
+fn code_elem_size(dt: Dt) -> usize {
+    dt.size()
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn take5(mut v: Vec<HostTensor>) -> Result<[HostTensor; 5]> {
+    if v.len() != 5 {
+        bail!("expected 5 outputs, got {}", v.len());
+    }
+    let e = v.remove(4);
+    let d = v.remove(3);
+    let c = v.remove(2);
+    let b = v.remove(1);
+    let a = v.remove(0);
+    Ok([a, b, c, d, e])
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: the serving engine.
+//!
+//! Request admission, continuous batching (iteration-level scheduling with
+//! chunked prefill), paged quantized KV management, sampling, and lifecycle
+//! tracking. This is the Rust process that owns the request path; the
+//! AOT-compiled graphs (Layer 2 + Layer 1) are invoked through [`crate::runtime`].
+
+pub mod engine;
+pub mod request;
+pub mod sampler;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineStats, StepReport};
+pub use request::{FinishReason, Phase, Request, RequestOutput};
+pub use sampler::Sampler;
+pub use scheduler::{Action, Scheduler};

@@ -1,0 +1,138 @@
+//! Request and output types for the serving engine.
+
+use std::time::Instant;
+
+/// A generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Prompt token ids (tokenization is out of scope — the synthetic
+    /// workloads speak token ids directly).
+    pub prompt: Vec<i32>,
+    /// Maximum number of tokens to generate.
+    pub max_new_tokens: usize,
+    /// Optional stop token: generation ends early when sampled.
+    pub stop_token: Option<i32>,
+}
+
+impl Request {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self { prompt, max_new_tokens, stop_token: None }
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget.
+    Length,
+    /// Sampled the stop token.
+    Stop,
+    /// Evicted: the KV pool could not hold it (admission should prevent
+    /// this; reported rather than panicking if it happens).
+    Aborted,
+}
+
+/// Lifecycle phase of a sequence inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting in the admission queue (no KV allocated yet).
+    Waiting,
+    /// Admitted; prompt chunks still running through prefill.
+    Prefilling,
+    /// Generating tokens in the decode batch.
+    Decoding,
+    /// Done; output available.
+    Finished(FinishReason),
+}
+
+/// Completed output for a request.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Time to first token, seconds.
+    pub ttft: f64,
+    /// Total request latency (submit → finish), seconds.
+    pub latency: f64,
+    pub prompt_len: usize,
+}
+
+/// Internal per-sequence engine state.
+#[derive(Debug)]
+pub(crate) struct SeqState {
+    /// Request id (carried for diagnostics/logging).
+    #[allow(dead_code)]
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub stop_token: Option<i32>,
+    pub phase: Phase,
+    /// Prompt tokens prefilled so far.
+    pub prefill_pos: usize,
+    pub handle: Option<crate::kvcache::SeqHandle>,
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+}
+
+impl SeqState {
+    pub fn new(id: u64, req: Request, now: Instant) -> Self {
+        Self {
+            id,
+            prompt: req.prompt,
+            generated: Vec::new(),
+            max_new_tokens: req.max_new_tokens,
+            stop_token: req.stop_token,
+            phase: Phase::Waiting,
+            prefill_pos: 0,
+            handle: None,
+            submitted: now,
+            first_token: None,
+        }
+    }
+
+    /// The token to feed the next decode step (last generated).
+    pub fn next_input_token(&self) -> i32 {
+        *self.generated.last().expect("decode before first token")
+    }
+
+    pub fn remaining_prompt(&self) -> usize {
+        self.prompt.len() - self.prefill_pos
+    }
+
+    pub fn should_finish(&self) -> Option<FinishReason> {
+        if let (Some(stop), Some(&last)) = (self.stop_token, self.generated.last()) {
+            if last == stop {
+                return Some(FinishReason::Stop);
+            }
+        }
+        (self.generated.len() >= self.max_new_tokens).then_some(FinishReason::Length)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_conditions() {
+        let mut s = SeqState::new(1, Request::new(vec![1, 2], 3), Instant::now());
+        assert!(s.should_finish().is_none());
+        s.generated = vec![5, 6, 7];
+        assert_eq!(s.should_finish(), Some(FinishReason::Length));
+
+        let mut s = SeqState::new(2, Request { prompt: vec![1], max_new_tokens: 10,
+                                               stop_token: Some(0) }, Instant::now());
+        s.generated = vec![4, 0];
+        assert_eq!(s.should_finish(), Some(FinishReason::Stop));
+    }
+
+    #[test]
+    fn remaining_prompt_tracks_progress() {
+        let mut s = SeqState::new(1, Request::new(vec![1; 100], 3), Instant::now());
+        assert_eq!(s.remaining_prompt(), 100);
+        s.prefill_pos = 64;
+        assert_eq!(s.remaining_prompt(), 36);
+    }
+}

@@ -1,0 +1,36 @@
+//! GPU microarchitecture cost simulator — the substitute testbed for the
+//! paper's CUDA evaluation (DESIGN.md §1).
+//!
+//! The paper's figures measure the *performance consequences* of data-layout
+//! and overlap decisions on real GPUs. This simulator derives those
+//! consequences from first principles per device profile:
+//!
+//! * memory traffic (weights / activations / KV bytes at each precision)
+//!   against HBM bandwidth, scaled by each framework's **coalescing
+//!   efficiency** (Challenge-I);
+//! * a shared-memory stage scaled by **bank-conflict serialization**
+//!   (Challenge-II);
+//! * tensor-core MMA time at each framework's **tile-alignment efficiency**
+//!   (Challenges III & V);
+//! * dequantization ALU work, a fraction of which each framework's pipeline
+//!   **overlaps** behind the MMA stream (Challenges IV & VI, §4.3-§4.4);
+//! * a cycle/instruction-count pipeline model ([`pipeline`]) that reproduces
+//!   the paper's nsight numbers (Table 2).
+//!
+//! Framework parameterizations ([`framework`]) encode the *documented*
+//! design differences the paper attributes its wins to: MARLIN's
+//! Ampere-specific static layout, TensorRT-LLM's exposed runtime dequant,
+//! QServe's W4A8KV4-only path, and vLLM's dequant-before-`ldmatrix` fp8 KV
+//! attention. TurboMind's parameters are the measured properties of the
+//! §4.1 packed layout (see `quant::packing` tests: fully coalesced,
+//! conflict-free) plus its published overlap behaviour.
+
+pub mod attention;
+pub mod framework;
+pub mod gemm;
+pub mod pipeline;
+
+pub use attention::{AttentionKernelModel, AttentionReport, AttnWorkload};
+pub use framework::{Framework, KernelTraits};
+pub use gemm::{GemmKernelModel, GemmReport, GemmWorkload};
+pub use pipeline::{PipelineCounters, PipelineSim};

@@ -1,0 +1,192 @@
+//! Software-pipeline simulator: the §4.3 three-stage mainloop at
+//! tile granularity, with instruction and cycle accounting (Table 2).
+//!
+//! The mainloop iterates K-tiles; per tile three stages run on different
+//! execution units (LD/ST units, INT/FP ALUs, tensor cores) and the
+//! pipeline overlaps stage `i` of tile `k` with stage `i+1` of tile `k-1`
+//! (Figure 9). The simulator schedules tiles against per-unit availability
+//! and reports both the pipelined makespan and the instruction counts, so
+//! Table 2's "+64.66% instructions → +2.89% cycles" is *derived*, not
+//! asserted.
+
+use super::framework::KernelTraits;
+use crate::config::DeviceProfile;
+
+/// Instruction/cycle counters for one simulated kernel.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineCounters {
+    pub ld_instrs: u64,
+    pub mma_instrs: u64,
+    pub dequant_instrs: u64,
+    pub other_instrs: u64,
+    pub cycles: u64,
+}
+
+impl PipelineCounters {
+    pub fn total_instrs(&self) -> u64 {
+        self.ld_instrs + self.mma_instrs + self.dequant_instrs + self.other_instrs
+    }
+
+    pub fn runtime_s(&self, dev: &DeviceProfile) -> f64 {
+        self.cycles as f64 / dev.clock_hz
+    }
+}
+
+/// Pipeline simulator for a `[m, k] × [k, n]` GEMM mainloop.
+pub struct PipelineSim<'a> {
+    pub dev: &'a DeviceProfile,
+    pub traits: &'a KernelTraits,
+    /// Memory pipeline depth (prefetched tiles; ≥3 on SM80+, §4.4 fn 2).
+    pub depth: usize,
+}
+
+/// Per-warp MMA tile: m16n8k16 → 2·16·8·16 FLOP per instruction.
+const FLOP_PER_MMA: f64 = 2.0 * 16.0 * 8.0 * 16.0;
+/// 128-bit vectorized loads.
+const BYTES_PER_LD: f64 = 16.0;
+/// K-extent of one mainloop tile.
+const TILE_K: usize = 64;
+/// Address/branch/sync overhead instructions per (tile, SM) iteration.
+const OTHER_PER_TILE: f64 = 48.0;
+/// Weight register-reuse window along M (one dequant per element per pass).
+const M_REUSE: f64 = 2048.0;
+
+impl<'a> PipelineSim<'a> {
+    pub fn new(dev: &'a DeviceProfile, traits: &'a KernelTraits) -> Self {
+        Self { dev, traits, depth: 3 }
+    }
+
+    /// Simulate the mainloop for an `m×k×n` GEMM with `w_bits` weights.
+    pub fn gemm(&self, m: usize, k: usize, n: usize, w_bits: usize) -> PipelineCounters {
+        let dev = self.dev;
+        let tr = self.traits;
+
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let mma_instrs = flops / FLOP_PER_MMA;
+
+        let weight_bytes = k as f64 * n as f64 * w_bits as f64 / 8.0;
+        let act_bytes = (m * k) as f64 * 2.0 + (m * n) as f64 * 2.0;
+        let ld_instrs = (weight_bytes + act_bytes) / BYTES_PER_LD;
+
+        let dequant_instrs = if w_bits < 16 {
+            let reuse = (m as f64 / M_REUSE).ceil() * tr.dequant_reuse_mult;
+            k as f64 * n as f64 * reuse * tr.dequant_instrs_per_elem
+        } else {
+            0.0
+        };
+
+        let n_tiles = (k / TILE_K).max(1) as f64;
+        // Addressing / predication / ldsm companions issued per MMA (the
+        // cuBLAS f16 kernel in Table 2 retires ~2.02 instructions per
+        // mma.sync: 4.34e9 total for 2.15e9 MMAs at 16384³), plus per-tile
+        // loop control.
+        let other_instrs =
+            mma_instrs * 1.0 + n_tiles * OTHER_PER_TILE * dev.sm_count as f64;
+
+        // Per-unit issue rates (instructions per cycle, whole device).
+        let sm = dev.sm_count as f64;
+        let tc_ipc = 0.5 * sm; // one mma.sync per ~2 cycles per SM
+        let alu_ipc = 4.0 * sm; // 4 warp schedulers issuing ALU ops
+        let ld_ipc = 4.0 * sm; // LD/ST unit issue
+        // The LD stream is also bounded by HBM bandwidth.
+        let mem_cycles =
+            (weight_bytes / tr.coalescing_eff + act_bytes) / (dev.mem_bw * dev.mem_eff)
+                * dev.clock_hz;
+
+        // Pipelined schedule over tiles: per-tile stage costs in cycles.
+        let tiles = n_tiles.max(1.0);
+        let ld_tile = (ld_instrs / ld_ipc).max(mem_cycles) / tiles;
+        let deq_tile = dequant_instrs / alu_ipc / tiles;
+        let mma_tile = mma_instrs / tc_ipc / tiles;
+
+        // Three-stage pipeline with `depth` in-flight tiles: steady-state
+        // rate is the slowest stage; the dequant stage overlaps the MMA
+        // stage except for its exposed fraction.
+        let deq_exposed = deq_tile * (1.0 - tr.dequant_overlap);
+        let steady = ld_tile.max(mma_tile + deq_exposed);
+        let fill = ld_tile + deq_tile + mma_tile; // first tile through all stages
+        let cycles = fill + steady * (tiles - 1.0).max(0.0)
+            + self.depth as f64 * OTHER_PER_TILE;
+
+        PipelineCounters {
+            ld_instrs: ld_instrs as u64,
+            mma_instrs: mma_instrs as u64,
+            dequant_instrs: dequant_instrs as u64,
+            other_instrs: other_instrs as u64,
+            cycles: cycles as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+    use crate::gpusim::framework::Framework;
+
+    /// The Table 2 setting: 16384³ GEMM at full utilization on A100.
+    fn table2(fw: Framework, w_bits: usize) -> PipelineCounters {
+        let dev = DeviceProfile::a100();
+        let tr = fw.traits_on(&dev);
+        let sim = PipelineSim::new(&dev, &tr);
+        sim.gemm(16384, 16384, 16384, w_bits)
+    }
+
+    #[test]
+    fn table2_instruction_overhead_in_range() {
+        // Paper: INT4×FP16 needs ~64.66% more instructions than cuBLAS f16.
+        let int4 = table2(Framework::TurboMind, 4);
+        let f16 = table2(Framework::TurboMind, 16);
+        let overhead =
+            int4.total_instrs() as f64 / f16.total_instrs() as f64 - 1.0;
+        assert!(
+            (0.40..=0.90).contains(&overhead),
+            "instr overhead {overhead} (paper: 0.6466)"
+        );
+    }
+
+    #[test]
+    fn table2_cycle_overhead_small() {
+        // Paper: that instruction overhead costs only ~2.89% extra cycles.
+        let int4 = table2(Framework::TurboMind, 4);
+        let f16 = table2(Framework::TurboMind, 16);
+        let overhead = int4.cycles as f64 / f16.cycles as f64 - 1.0;
+        assert!(
+            (0.0..=0.10).contains(&overhead),
+            "cycle overhead {overhead} (paper: 0.0289)"
+        );
+    }
+
+    #[test]
+    fn table2_absolute_runtime_order_of_magnitude() {
+        // Paper: ~29.55 ms (cuBLAS) / 30.28 ms (LMDeploy) on A100.
+        let dev = DeviceProfile::a100();
+        let f16 = table2(Framework::TurboMind, 16);
+        let t = f16.runtime_s(&dev);
+        assert!((0.015..0.060).contains(&t), "runtime {t}s (paper 0.0296)");
+    }
+
+    #[test]
+    fn trt_exposes_far_more_cycles() {
+        let tm = table2(Framework::TurboMind, 4);
+        let trt = table2(Framework::TensorRtLlm, 4);
+        assert!(trt.cycles > tm.cycles, "trt {} tm {}", trt.cycles, tm.cycles);
+        // TRT's naive I2F also inflates the instruction count itself.
+        assert!(trt.dequant_instrs > 2 * tm.dequant_instrs);
+    }
+
+    #[test]
+    fn dequant_instrs_zero_for_f16() {
+        assert_eq!(table2(Framework::TurboMind, 16).dequant_instrs, 0);
+    }
+
+    #[test]
+    fn small_gemm_dominated_by_fill() {
+        let dev = DeviceProfile::a100();
+        let tr = Framework::TurboMind.traits_on(&dev);
+        let sim = PipelineSim::new(&dev, &tr);
+        let c = sim.gemm(1, 128, 128, 4);
+        assert!(c.cycles > 0);
+        assert!(c.mma_instrs < 100);
+    }
+}

@@ -1,0 +1,13 @@
+//! Paged, *quantized* KV-cache pool — the Rust-owned memory the paper's
+//! attention pipeline reads through (§3.4).
+//!
+//! Layout: fixed-size blocks of `block_tokens` tokens; each token slot holds
+//! the codes + scales for **all layers, both K and V, all KV heads** (so one
+//! append touches one block). Sequences own ordered block lists (block
+//! tables, vLLM-style). Codes are stored exactly as the AOT graphs emit
+//! them — the pool never re-quantizes — and gathered into the padded
+//! `[L, B, Hkv, T, …]` batch tensors the decode graphs consume.
+
+pub mod pool;
+
+pub use pool::{KvPool, KvPrecision, SeqHandle};

@@ -1,0 +1,565 @@
+//! The paged KV block pool.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::DType;
+
+/// Storage precision of the pool (mirrors the serving `KVz` format).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPrecision {
+    /// f32 rows (the paper's KV16 tier; f32 is the CPU stand-in).
+    F32,
+    /// int8 codes + per-(token, head) scale.
+    Int8,
+    /// packed int4 codes (two per byte along the head dim) + scale.
+    Int4,
+}
+
+impl KvPrecision {
+    pub fn from_dtype(dt: DType) -> Result<Self> {
+        Ok(match dt {
+            DType::F16 | DType::F32 => KvPrecision::F32,
+            DType::Int8 | DType::Fp8 => KvPrecision::Int8,
+            DType::Int4 => KvPrecision::Int4,
+        })
+    }
+
+    /// Bytes per KV row of `head_dim` elements.
+    pub fn row_bytes(self, head_dim: usize) -> usize {
+        match self {
+            KvPrecision::F32 => head_dim * 4,
+            KvPrecision::Int8 => head_dim,
+            KvPrecision::Int4 => head_dim / 2,
+        }
+    }
+
+    /// The kv-precision key used in graph names (`kv16`/`kv8`/`kv4`).
+    pub fn graph_key(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "kv16",
+            KvPrecision::Int8 => "kv8",
+            KvPrecision::Int4 => "kv4",
+        }
+    }
+}
+
+/// Handle to one sequence's cache state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SeqHandle(pub usize);
+
+#[derive(Debug)]
+struct SeqState {
+    blocks: Vec<usize>,
+    len: usize,
+    alive: bool,
+}
+
+/// The paged pool.
+#[derive(Debug)]
+pub struct KvPool {
+    precision: KvPrecision,
+    n_layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    block_tokens: usize,
+    n_blocks: usize,
+    /// codes arena: `n_blocks × block_tokens × token_code_bytes`.
+    codes: Vec<u8>,
+    /// scales arena: `n_blocks × block_tokens × (L × 2 × Hkv)`.
+    scales: Vec<f32>,
+    free: Vec<usize>,
+    seqs: Vec<SeqState>,
+}
+
+impl KvPool {
+    pub fn new(
+        precision: KvPrecision,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        block_tokens: usize,
+        pool_tokens: usize,
+    ) -> Result<Self> {
+        if block_tokens == 0 || pool_tokens % block_tokens != 0 {
+            bail!("pool_tokens {pool_tokens} must be a positive multiple of block_tokens {block_tokens}");
+        }
+        let n_blocks = pool_tokens / block_tokens;
+        let token_code_bytes = Self::token_code_bytes_for(precision, n_layers, kv_heads, head_dim);
+        let token_scales = n_layers * 2 * kv_heads;
+        Ok(Self {
+            precision,
+            n_layers,
+            kv_heads,
+            head_dim,
+            block_tokens,
+            n_blocks,
+            codes: vec![0u8; n_blocks * block_tokens * token_code_bytes],
+            scales: vec![1f32; n_blocks * block_tokens * token_scales],
+            free: (0..n_blocks).rev().collect(),
+            seqs: Vec::new(),
+        })
+    }
+
+    fn token_code_bytes_for(
+        precision: KvPrecision,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> usize {
+        n_layers * 2 * kv_heads * precision.row_bytes(head_dim)
+    }
+
+    /// Bytes of code storage per token slot (all layers, K+V, all heads).
+    pub fn token_code_bytes(&self) -> usize {
+        Self::token_code_bytes_for(self.precision, self.n_layers, self.kv_heads, self.head_dim)
+    }
+
+    fn token_scales(&self) -> usize {
+        self.n_layers * 2 * self.kv_heads
+    }
+
+    /// Bytes per KV row (one head's codes for one token).
+    pub fn row_bytes(&self) -> usize {
+        self.precision.row_bytes(self.head_dim)
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can `tokens` more tokens be stored right now (ignoring existing
+    /// sequences' unfilled block tails)?
+    pub fn can_reserve(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Allocate a new (empty) sequence.
+    pub fn alloc_seq(&mut self) -> SeqHandle {
+        // Reuse a dead slot if any.
+        for (i, s) in self.seqs.iter_mut().enumerate() {
+            if !s.alive {
+                *s = SeqState { blocks: Vec::new(), len: 0, alive: true };
+                return SeqHandle(i);
+            }
+        }
+        self.seqs.push(SeqState { blocks: Vec::new(), len: 0, alive: true });
+        SeqHandle(self.seqs.len() - 1)
+    }
+
+    /// Free a sequence's blocks back to the pool.
+    pub fn free_seq(&mut self, h: SeqHandle) {
+        if let Some(s) = self.seqs.get_mut(h.0) {
+            if s.alive {
+                self.free.extend(s.blocks.drain(..));
+                s.len = 0;
+                s.alive = false;
+            }
+        }
+    }
+
+    pub fn seq_len(&self, h: SeqHandle) -> usize {
+        self.seqs.get(h.0).map(|s| if s.alive { s.len } else { 0 }).unwrap_or(0)
+    }
+
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.iter().filter(|s| s.alive).count()
+    }
+
+    fn seq_mut(&mut self, h: SeqHandle) -> Result<&mut SeqState> {
+        let s = self.seqs.get_mut(h.0).ok_or_else(|| anyhow!("bad seq handle"))?;
+        if !s.alive {
+            bail!("sequence already freed");
+        }
+        Ok(s)
+    }
+
+    /// (block_index, slot_in_block) for token `t`, growing if needed.
+    fn slot_for_append(&mut self, h: SeqHandle) -> Result<(usize, usize)> {
+        let block_tokens = self.block_tokens;
+        let need_new = {
+            let s = self.seq_mut(h)?;
+            s.len % block_tokens == 0 && s.len / block_tokens == s.blocks.len()
+        };
+        if need_new {
+            let blk = self.free.pop().ok_or_else(|| anyhow!("KV pool exhausted"))?;
+            self.seq_mut(h)?.blocks.push(blk);
+        }
+        let s = self.seq_mut(h)?;
+        let t = s.len;
+        let blk = s.blocks[t / block_tokens];
+        s.len += 1;
+        Ok((blk, t % block_tokens))
+    }
+
+    /// Append one token's KV for **all layers**.
+    ///
+    /// `k_codes`/`v_codes`: `[L, Hkv, row_bytes]` flattened (exactly the
+    /// decode graph's per-sequence output layout). `k_scales`/`v_scales`:
+    /// `[L, Hkv]`.
+    pub fn append_token(
+        &mut self,
+        h: SeqHandle,
+        k_codes: &[u8],
+        k_scales: &[f32],
+        v_codes: &[u8],
+        v_scales: &[f32],
+    ) -> Result<()> {
+        let rb = self.row_bytes();
+        let per_side = self.n_layers * self.kv_heads * rb;
+        if k_codes.len() != per_side || v_codes.len() != per_side {
+            bail!("append_token codes size {} != {per_side}", k_codes.len());
+        }
+        let per_side_scales = self.n_layers * self.kv_heads;
+        if k_scales.len() != per_side_scales || v_scales.len() != per_side_scales {
+            bail!("append_token scales size mismatch");
+        }
+        let (blk, slot) = self.slot_for_append(h)?;
+
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        let code_base = (blk * self.block_tokens + slot) * tcb;
+        let scale_base = (blk * self.block_tokens + slot) * tsc;
+        // Token-slot layout: [L][side(K=0,V=1)][Hkv][row_bytes].
+        for l in 0..self.n_layers {
+            for hh in 0..self.kv_heads {
+                let src = (l * self.kv_heads + hh) * rb;
+                let dst_k = code_base + ((l * 2) * self.kv_heads + hh) * rb;
+                let dst_v = code_base + ((l * 2 + 1) * self.kv_heads + hh) * rb;
+                self.codes[dst_k..dst_k + rb].copy_from_slice(&k_codes[src..src + rb]);
+                self.codes[dst_v..dst_v + rb].copy_from_slice(&v_codes[src..src + rb]);
+                let ssrc = l * self.kv_heads + hh;
+                self.scales[scale_base + (l * 2) * self.kv_heads + hh] = k_scales[ssrc];
+                self.scales[scale_base + (l * 2 + 1) * self.kv_heads + hh] = v_scales[ssrc];
+            }
+        }
+        Ok(())
+    }
+
+    /// Append a prefill chunk's first `s_len` tokens.
+    ///
+    /// `k_codes`/`v_codes`: `[L, Hkv, S_stride, row_bytes]` flattened (the
+    /// prefill graph's output layout, where `s_stride` is the compiled chunk
+    /// bucket — possibly larger than `s_len` when the prompt tail was
+    /// padded); scales `[L, Hkv, S_stride]`. Only real tokens are stored.
+    pub fn append_chunk(
+        &mut self,
+        h: SeqHandle,
+        s_len: usize,
+        s_stride: usize,
+        k_codes: &[u8],
+        k_scales: &[f32],
+        v_codes: &[u8],
+        v_scales: &[f32],
+    ) -> Result<()> {
+        let rb = self.row_bytes();
+        if s_len > s_stride {
+            bail!("append_chunk: s_len {s_len} > s_stride {s_stride}");
+        }
+        let expect = self.n_layers * self.kv_heads * s_stride * rb;
+        if k_codes.len() < expect || v_codes.len() < expect {
+            bail!("append_chunk codes too small: {} < {expect}", k_codes.len());
+        }
+        // Re-slice per token and reuse append_token's layout logic.
+        let mut kc = vec![0u8; self.n_layers * self.kv_heads * rb];
+        let mut vc = vec![0u8; self.n_layers * self.kv_heads * rb];
+        let mut ks = vec![0f32; self.n_layers * self.kv_heads];
+        let mut vs = vec![0f32; self.n_layers * self.kv_heads];
+        for t in 0..s_len {
+            for l in 0..self.n_layers {
+                for hh in 0..self.kv_heads {
+                    // src layout [L][Hkv][S_stride][rb]
+                    let src = ((l * self.kv_heads + hh) * s_stride + t) * rb;
+                    let dst = (l * self.kv_heads + hh) * rb;
+                    kc[dst..dst + rb].copy_from_slice(&k_codes[src..src + rb]);
+                    vc[dst..dst + rb].copy_from_slice(&v_codes[src..src + rb]);
+                    let ssrc = (l * self.kv_heads + hh) * s_stride + t;
+                    ks[l * self.kv_heads + hh] = k_scales[ssrc];
+                    vs[l * self.kv_heads + hh] = v_scales[ssrc];
+                }
+            }
+            self.append_token(h, &kc, &ks, &vc, &vs)?;
+        }
+        Ok(())
+    }
+
+    /// Gather a batch of sequences into the padded decode-graph input
+    /// buffers: codes `[L, B, Hkv, T, row_bytes]`, scales `[L, B, Hkv, T]`.
+    /// Sequences shorter than `t_pad` leave zeros (masked by `kv_len`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather_batch(
+        &self,
+        handles: &[Option<SeqHandle>],
+        t_pad: usize,
+        k_out: &mut [u8],
+        ks_out: &mut [f32],
+        v_out: &mut [u8],
+        vs_out: &mut [f32],
+    ) -> Result<()> {
+        let b = handles.len();
+        let rb = self.row_bytes();
+        let expect = self.n_layers * b * self.kv_heads * t_pad * rb;
+        if k_out.len() != expect || v_out.len() != expect {
+            bail!("gather_batch: out buffer {} != {expect}", k_out.len());
+        }
+        k_out.fill(0);
+        v_out.fill(0);
+        ks_out.fill(1.0);
+        vs_out.fill(1.0);
+
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        for (bi, h) in handles.iter().enumerate() {
+            let Some(h) = h else { continue };
+            let s = self.seqs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
+            if !s.alive {
+                bail!("gather of freed sequence");
+            }
+            if s.len > t_pad {
+                bail!("sequence len {} exceeds padded T {t_pad}", s.len);
+            }
+            for t in 0..s.len {
+                let blk = s.blocks[t / self.block_tokens];
+                let slot = t % self.block_tokens;
+                let code_base = (blk * self.block_tokens + slot) * tcb;
+                let scale_base = (blk * self.block_tokens + slot) * tsc;
+                for l in 0..self.n_layers {
+                    for hh in 0..self.kv_heads {
+                        let src_k = code_base + ((l * 2) * self.kv_heads + hh) * rb;
+                        let src_v = code_base + ((l * 2 + 1) * self.kv_heads + hh) * rb;
+                        // dst layout [L][B][Hkv][T][rb]
+                        let dst =
+                            (((l * b + bi) * self.kv_heads + hh) * t_pad + t) * rb;
+                        k_out[dst..dst + rb].copy_from_slice(&self.codes[src_k..src_k + rb]);
+                        v_out[dst..dst + rb].copy_from_slice(&self.codes[src_v..src_v + rb]);
+                        let sdst = ((l * b + bi) * self.kv_heads + hh) * t_pad + t;
+                        ks_out[sdst] = self.scales[scale_base + (l * 2) * self.kv_heads + hh];
+                        vs_out[sdst] = self.scales[scale_base + (l * 2 + 1) * self.kv_heads + hh];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn pool(prec: KvPrecision) -> KvPool {
+        // 2 layers, 2 kv heads, head_dim 8, 4-token blocks, 32-token pool.
+        KvPool::new(prec, 2, 2, 8, 4, 32).unwrap()
+    }
+
+    fn tok_data(p: &KvPool, tag: u8) -> (Vec<u8>, Vec<f32>, Vec<u8>, Vec<f32>) {
+        let rb = p.row_bytes();
+        let n = 2 * 2 * rb;
+        let k: Vec<u8> = (0..n).map(|i| tag.wrapping_add(i as u8)).collect();
+        let v: Vec<u8> = (0..n).map(|i| tag.wrapping_add(100 + i as u8)).collect();
+        let ks: Vec<f32> = (0..4).map(|i| tag as f32 + i as f32 * 0.1).collect();
+        let vs: Vec<f32> = (0..4).map(|i| tag as f32 + 50.0 + i as f32 * 0.1).collect();
+        (k, ks, v, vs)
+    }
+
+    #[test]
+    fn append_and_gather_roundtrip() {
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        for t in 0..6 {
+            let (k, ks, v, vs) = tok_data(&p, t as u8);
+            p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        }
+        assert_eq!(p.seq_len(h), 6);
+
+        let t_pad = 8;
+        let rb = p.row_bytes();
+        let mut k_out = vec![0u8; 2 * 1 * 2 * t_pad * rb];
+        let mut v_out = k_out.clone();
+        let mut ks_out = vec![0f32; 2 * 1 * 2 * t_pad];
+        let mut vs_out = ks_out.clone();
+        p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+            .unwrap();
+
+        // Check token 5, layer 1, head 0 K codes.
+        let (k5, ks5, _, _) = tok_data(&p, 5);
+        let src = (1 * 2 + 0) * rb; // l=1,h=0 in [L][Hkv][rb]
+        let dst = (((1usize * 1 + 0) * 2 + 0) * t_pad + 5) * rb;
+        assert_eq!(&k_out[dst..dst + rb], &k5[src..src + rb]);
+        let sdst = ((1 * 1 + 0) * 2 + 0) * t_pad + 5;
+        assert_eq!(ks_out[sdst], ks5[1 * 2 + 0]);
+        // Padding slots stay zero / scale 1.
+        let dst7 = (((0usize * 1 + 0) * 2 + 0) * t_pad + 7) * rb;
+        assert!(k_out[dst7..dst7 + rb].iter().all(|&b| b == 0));
+        assert_eq!(vs_out[7], 1.0);
+    }
+
+    #[test]
+    fn blocks_allocated_lazily_and_freed() {
+        let mut p = pool(KvPrecision::Int8);
+        assert_eq!(p.free_blocks(), 8);
+        let h = p.alloc_seq();
+        assert_eq!(p.free_blocks(), 8, "no block until first token");
+        let (k, ks, v, vs) = tok_data(&p, 1);
+        for _ in 0..5 {
+            p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        }
+        assert_eq!(p.free_blocks(), 6, "5 tokens => 2 blocks of 4");
+        p.free_seq(h);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.live_seqs(), 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_errors() {
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 2);
+        for _ in 0..32 {
+            p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        }
+        assert!(!p.can_reserve(1));
+        let err = p.append_token(h, &k, &ks, &v, &vs).unwrap_err();
+        assert!(err.to_string().contains("exhausted"));
+    }
+
+    #[test]
+    fn freed_seq_rejects_ops() {
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        p.free_seq(h);
+        let (k, ks, v, vs) = tok_data(&p, 3);
+        assert!(p.append_token(h, &k, &ks, &v, &vs).is_err());
+        // Double free is a no-op.
+        p.free_seq(h);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn seq_slot_reuse() {
+        let mut p = pool(KvPrecision::Int8);
+        let h1 = p.alloc_seq();
+        p.free_seq(h1);
+        let h2 = p.alloc_seq();
+        assert_eq!(h1.0, h2.0, "dead slot reused");
+    }
+
+    #[test]
+    fn int4_rows_are_half_size() {
+        let p4 = pool(KvPrecision::Int4);
+        let p8 = pool(KvPrecision::Int8);
+        assert_eq!(p4.row_bytes() * 2, p8.row_bytes());
+        assert_eq!(p4.token_code_bytes() * 2, p8.token_code_bytes());
+    }
+
+    #[test]
+    fn f32_pool_stores_floats() {
+        let mut p = pool(KvPrecision::F32);
+        assert_eq!(p.row_bytes(), 32);
+        let h = p.alloc_seq();
+        let rb = p.row_bytes();
+        let k: Vec<u8> = 1.5f32.to_le_bytes().repeat(2 * 2 * rb / 4);
+        let ks = vec![1.0f32; 4];
+        p.append_token(h, &k, &ks, &k, &ks).unwrap();
+        assert_eq!(p.seq_len(h), 1);
+    }
+
+    #[test]
+    fn append_chunk_matches_tokenwise() {
+        // append_chunk([L,Hkv,S,rb]) == S × append_token.
+        let mut pa = pool(KvPrecision::Int8);
+        let mut pb = pool(KvPrecision::Int8);
+        let (s_len, l, hk) = (3usize, 2usize, 2usize);
+        let rb = pa.row_bytes();
+        let k_chunk: Vec<u8> = (0..l * hk * s_len * rb).map(|i| i as u8).collect();
+        let v_chunk: Vec<u8> = (0..l * hk * s_len * rb).map(|i| (i * 3) as u8).collect();
+        let ks_chunk: Vec<f32> = (0..l * hk * s_len).map(|i| i as f32).collect();
+        let vs_chunk: Vec<f32> = (0..l * hk * s_len).map(|i| i as f32 + 9.0).collect();
+
+        let ha = pa.alloc_seq();
+        pa.append_chunk(ha, s_len, s_len, &k_chunk, &ks_chunk, &v_chunk, &vs_chunk).unwrap();
+
+        let hb = pb.alloc_seq();
+        for t in 0..s_len {
+            let mut kc = vec![0u8; l * hk * rb];
+            let mut vc = vec![0u8; l * hk * rb];
+            let mut ks = vec![0f32; l * hk];
+            let mut vs = vec![0f32; l * hk];
+            for li in 0..l {
+                for hh in 0..hk {
+                    let src = ((li * hk + hh) * s_len + t) * rb;
+                    let dst = (li * hk + hh) * rb;
+                    kc[dst..dst + rb].copy_from_slice(&k_chunk[src..src + rb]);
+                    vc[dst..dst + rb].copy_from_slice(&v_chunk[src..src + rb]);
+                    ks[li * hk + hh] = ks_chunk[(li * hk + hh) * s_len + t];
+                    vs[li * hk + hh] = vs_chunk[(li * hk + hh) * s_len + t];
+                }
+            }
+            pb.append_token(hb, &kc, &ks, &vc, &vs).unwrap();
+        }
+
+        let t_pad = 4;
+        let mk = |p: &KvPool, h| {
+            let rb = p.row_bytes();
+            let mut k_out = vec![0u8; l * hk * t_pad * rb];
+            let mut v_out = k_out.clone();
+            let mut ks_out = vec![0f32; l * hk * t_pad];
+            let mut vs_out = ks_out.clone();
+            p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+                .unwrap();
+            (k_out, ks_out, v_out, vs_out)
+        };
+        assert_eq!(mk(&pa, ha), mk(&pb, hb));
+    }
+
+    #[test]
+    fn prop_pool_invariants() {
+        // Invariant: free + Σ allocated == total; seq_len tracks appends;
+        // gather returns exactly the appended bytes.
+        run_prop("kvpool-invariants", 0xD00D, 30, |g| {
+            let mut p = KvPool::new(KvPrecision::Int8, 1, 1, 4, 2, 16).unwrap();
+            let total = p.total_blocks();
+            let mut handles = vec![];
+            let mut lens = vec![];
+            for _ in 0..g.usize_in(1, 4) {
+                let h = p.alloc_seq();
+                let n = g.usize_in(0, 5);
+                for t in 0..n {
+                    let k = vec![t as u8; 4];
+                    let s = vec![1.0f32];
+                    if p.append_token(h, &k, &s, &k, &s).is_err() {
+                        break;
+                    }
+                }
+                handles.push(h);
+                lens.push(p.seq_len(h));
+            }
+            let used: usize = lens.iter().map(|&n| n.div_ceil(2)).sum();
+            assert_eq!(p.free_blocks() + used, total);
+            for (h, &n) in handles.iter().zip(&lens) {
+                assert_eq!(p.seq_len(*h), n);
+            }
+            for h in handles {
+                p.free_seq(h);
+            }
+            assert_eq!(p.free_blocks(), total);
+        });
+    }
+}

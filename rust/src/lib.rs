@@ -1,0 +1,39 @@
+//! # turbomind
+//!
+//! A reproduction of *Efficient Mixed-Precision Large Language Model
+//! Inference with TurboMind* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request routing,
+//!   continuous batching, a paged *quantized* KV-cache manager, a
+//!   prefill/decode scheduler, sampling, metrics, a workload generator, and
+//!   the GPU microarchitecture simulator (`gpusim`) used to regenerate the
+//!   paper's kernel- and cluster-level figures.
+//! * **Layer 2 (python/compile/model.py)** — a GQA transformer with prefill
+//!   and decode graphs, AOT-lowered to HLO text once at build time.
+//! * **Layer 1 (python/compile/kernels/)** — the paper's GEMM and attention
+//!   pipelines as Pallas kernels, fused into the Layer-2 graphs.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and the coordinator
+//! drives them from Rust.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-figure
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod kvcache;
+pub mod metrics;
+pub mod parallel;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod serving_sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

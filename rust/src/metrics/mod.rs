@@ -1,0 +1,152 @@
+//! Serving metrics: latency percentiles, TTFT, and throughput — the three
+//! evaluation metrics of §5.1.
+
+/// Accumulates per-request measurements and computes the paper's metrics.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsCollector {
+    latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+    /// (completion time, generated tokens) pairs for throughput windows.
+    completions: Vec<(f64, usize)>,
+    prompt_tokens: usize,
+    gen_tokens: usize,
+}
+
+/// A percentile summary of one latency series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one finished request.
+    pub fn record(&mut self, latency_s: f64, ttft_s: f64, done_at_s: f64,
+                  prompt_tokens: usize, gen_tokens: usize) {
+        self.latencies.push(latency_s);
+        if ttft_s.is_finite() {
+            self.ttfts.push(ttft_s);
+        }
+        self.completions.push((done_at_s, gen_tokens));
+        self.prompt_tokens += prompt_tokens;
+        self.gen_tokens += gen_tokens;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies.len()
+    }
+
+    pub fn latency_percentiles(&self) -> Option<Percentiles> {
+        percentiles(&self.latencies)
+    }
+
+    pub fn ttft_percentiles(&self) -> Option<Percentiles> {
+        percentiles(&self.ttfts)
+    }
+
+    /// Requests per second over the observed completion window.
+    pub fn request_throughput(&self) -> f64 {
+        let end = self.completions.iter().map(|c| c.0).fold(0.0, f64::max);
+        if end <= 0.0 {
+            return 0.0;
+        }
+        self.count() as f64 / end
+    }
+
+    /// Generated tokens per second over the observed window.
+    pub fn token_throughput(&self) -> f64 {
+        let end = self.completions.iter().map(|c| c.0).fold(0.0, f64::max);
+        if end <= 0.0 {
+            return 0.0;
+        }
+        self.gen_tokens as f64 / end
+    }
+
+    pub fn total_tokens(&self) -> (usize, usize) {
+        (self.prompt_tokens, self.gen_tokens)
+    }
+}
+
+/// Nearest-rank percentiles (the convention serving papers use).
+pub fn percentiles(xs: &[f64]) -> Option<Percentiles> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let pick = |p: f64| {
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
+    };
+    Some(Percentiles {
+        p50: pick(50.0),
+        p90: pick(90.0),
+        p95: pick(95.0),
+        p99: pick(99.0),
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        max: *v.last().unwrap(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = percentiles(&xs).unwrap();
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p90, 90.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(p.max, 100.0);
+        assert!((p.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_single_sample() {
+        let p = percentiles(&[3.0]).unwrap();
+        assert_eq!(p.p50, 3.0);
+        assert_eq!(p.p99, 3.0);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert!(percentiles(&[]).is_none());
+        assert!(MetricsCollector::new().latency_percentiles().is_none());
+    }
+
+    #[test]
+    fn throughput_over_window() {
+        let mut m = MetricsCollector::new();
+        m.record(1.0, 0.1, 5.0, 100, 50);
+        m.record(2.0, 0.2, 10.0, 100, 150);
+        assert!((m.request_throughput() - 0.2).abs() < 1e-9);
+        assert!((m.token_throughput() - 20.0).abs() < 1e-9);
+        assert_eq!(m.total_tokens(), (200, 200));
+    }
+
+    #[test]
+    fn nan_ttft_skipped() {
+        let mut m = MetricsCollector::new();
+        m.record(1.0, f64::NAN, 1.0, 10, 10);
+        m.record(1.0, 0.5, 2.0, 10, 10);
+        let p = m.ttft_percentiles().unwrap();
+        assert_eq!(p.p50, 0.5);
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let p = percentiles(&[5.0, 1.0, 3.0, 2.0, 4.0]).unwrap();
+        assert_eq!(p.p50, 3.0);
+        assert_eq!(p.max, 5.0);
+    }
+}

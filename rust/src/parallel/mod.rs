@@ -1,0 +1,112 @@
+//! Tensor parallelism: Megatron-style sharding plan + collective cost model
+//! (§5.1 "we utilize tensor parallelism to accommodate the large model
+//! size"; Appendix I scalability).
+//!
+//! Per transformer layer, TP splits the QKV/O and FFN GEMMs column/row-wise
+//! across `degree` GPUs and issues two all-reduces on the activations (one
+//! after attention output, one after the FFN down-projection). All-reduce
+//! cost follows the ring model: `2·(p-1)/p · bytes` crossing the
+//! interconnect per GPU pair direction.
+
+use crate::config::DeviceProfile;
+
+/// A tensor-parallel execution plan.
+#[derive(Debug, Clone, Copy)]
+pub struct TpPlan {
+    pub degree: usize,
+    /// Per-direction interconnect bandwidth, bytes/s (from the device
+    /// profile: NVLink on A100/H100, PCIe on workstation parts).
+    pub interconnect_bw: f64,
+    /// Per-collective launch latency, seconds (NCCL kernel + sync).
+    pub collective_latency_s: f64,
+}
+
+impl TpPlan {
+    pub fn single() -> Self {
+        Self { degree: 1, interconnect_bw: f64::INFINITY, collective_latency_s: 0.0 }
+    }
+
+    pub fn on(dev: &DeviceProfile, degree: usize) -> Self {
+        assert!(degree.is_power_of_two() && degree >= 1, "tp degree {degree}");
+        Self {
+            degree,
+            interconnect_bw: dev.interconnect_bw,
+            collective_latency_s: 10e-6,
+        }
+    }
+
+    /// Ring all-reduce time for `bytes` per GPU.
+    pub fn allreduce_time(&self, bytes: f64) -> f64 {
+        if self.degree <= 1 {
+            return 0.0;
+        }
+        let p = self.degree as f64;
+        self.collective_latency_s + 2.0 * (p - 1.0) / p * bytes / self.interconnect_bw
+    }
+
+    /// All-reduce volume per transformer layer for `tokens` activations of
+    /// width `d_model` (two f16 all-reduces per layer: attention out + FFN
+    /// out, the Megatron pattern).
+    pub fn layer_allreduce_time(&self, tokens: usize, d_model: usize) -> f64 {
+        let bytes = (tokens * d_model) as f64 * 2.0;
+        2.0 * self.allreduce_time(bytes)
+    }
+
+    /// Fraction of each sharded GEMM / attention-head workload per GPU.
+    pub fn shard(&self) -> f64 {
+        1.0 / self.degree as f64
+    }
+
+    /// Aggregate device memory available for weights + KV across the group.
+    pub fn total_memory(&self, dev: &DeviceProfile) -> f64 {
+        (self.degree * dev.mem_capacity) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+
+    #[test]
+    fn degree_one_is_free() {
+        let p = TpPlan::single();
+        assert_eq!(p.allreduce_time(1e9), 0.0);
+        assert_eq!(p.layer_allreduce_time(4096, 8192), 0.0);
+        assert_eq!(p.shard(), 1.0);
+    }
+
+    #[test]
+    fn ring_allreduce_scales() {
+        let dev = DeviceProfile::a100();
+        let p2 = TpPlan::on(&dev, 2);
+        let p8 = TpPlan::on(&dev, 8);
+        let b = 64.0 * 1024.0 * 1024.0;
+        // 2(p-1)/p grows with p: 1.0 at p=2 → 1.75 at p=8.
+        let t2 = p2.allreduce_time(b) - p2.collective_latency_s;
+        let t8 = p8.allreduce_time(b) - p8.collective_latency_s;
+        assert!((t8 / t2 - 1.75).abs() < 1e-6, "{}", t8 / t2);
+    }
+
+    #[test]
+    fn nvlink_beats_pcie() {
+        let a100 = DeviceProfile::a100();
+        let rtx = DeviceProfile::rtx4090();
+        let b = 1e8;
+        assert!(TpPlan::on(&a100, 4).allreduce_time(b) < TpPlan::on(&rtx, 4).allreduce_time(b));
+    }
+
+    #[test]
+    fn shard_and_memory() {
+        let dev = DeviceProfile::h100();
+        let p = TpPlan::on(&dev, 4);
+        assert_eq!(p.shard(), 0.25);
+        assert_eq!(p.total_memory(&dev), 4.0 * dev.mem_capacity as f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "tp degree")]
+    fn rejects_non_pow2() {
+        TpPlan::on(&DeviceProfile::a100(), 3);
+    }
+}

@@ -1,0 +1,237 @@
+//! Warp memory-access analyzer: global-memory transaction counting and
+//! shared-memory bank-conflict detection.
+//!
+//! Given the byte addresses each lane of a warp touches, this computes the
+//! quantities the paper's Challenges I and II are about:
+//!
+//! * **global transactions** — distinct aligned segments (32/64/128 B)
+//!   covered by the warp's accesses; 1 transaction per 128 B of useful data
+//!   is perfectly coalesced (Appendix B, Figure 22);
+//! * **bank conflicts** — the serialization degree when multiple lanes hit
+//!   different 32-bit words in the same shared-memory bank (Appendix B,
+//!   Figure 23).
+//!
+//! Both `gpusim` and the §4.1 packing verifier are built on this analyzer,
+//! so the "coalesced / conflict-free" guarantees of the packed layout are
+//! *measured properties*, not assumptions.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One lane's access: starting byte address and length in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneAccess {
+    pub addr: usize,
+    pub len: usize,
+}
+
+/// Result of analyzing one warp-wide access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessReport {
+    /// Number of global-memory transactions (distinct segments touched).
+    pub transactions: usize,
+    /// Minimum possible transactions for the bytes actually requested.
+    pub ideal_transactions: usize,
+    /// Shared-memory serialization degree: 1 = conflict-free, `n` = the
+    /// worst bank serves `n` distinct words sequentially.
+    pub bank_conflict_degree: usize,
+    /// Total useful bytes requested by the warp.
+    pub useful_bytes: usize,
+}
+
+impl AccessReport {
+    /// Coalescing efficiency in (0, 1]: ideal/actual transactions.
+    pub fn coalescing_efficiency(&self) -> f64 {
+        if self.transactions == 0 {
+            1.0
+        } else {
+            self.ideal_transactions as f64 / self.transactions as f64
+        }
+    }
+
+    pub fn is_fully_coalesced(&self) -> bool {
+        self.transactions == self.ideal_transactions
+    }
+
+    pub fn is_conflict_free(&self) -> bool {
+        self.bank_conflict_degree <= 1
+    }
+}
+
+/// Analyze a warp's global-memory access with the given segment size.
+pub fn analyze_global(accesses: &[LaneAccess], segment_bytes: usize) -> AccessReport {
+    assert!(segment_bytes.is_power_of_two());
+    let mut segments = BTreeSet::new();
+    let mut useful = 0usize;
+    for a in accesses {
+        if a.len == 0 {
+            continue;
+        }
+        useful += a.len;
+        let first = a.addr / segment_bytes;
+        let last = (a.addr + a.len - 1) / segment_bytes;
+        for s in first..=last {
+            segments.insert(s);
+        }
+    }
+    let transactions = segments.len();
+    let ideal = useful.div_ceil(segment_bytes).max(usize::from(useful > 0));
+    AccessReport {
+        transactions,
+        ideal_transactions: ideal,
+        bank_conflict_degree: bank_conflict_degree(accesses, 32),
+        useful_bytes: useful,
+    }
+}
+
+/// Shared-memory bank conflict degree for a warp access: banks are 4-byte
+/// words striped across `n_banks`; the degree is the max number of
+/// *distinct* words mapped to one bank (same-word broadcast is free).
+///
+/// Hardware splits wide per-lane accesses into phases — LDS.64 issues two
+/// half-warp transactions, LDS.128 four quarter-warp transactions — and
+/// conflicts only arise *within* a phase (CUDA C++ Programming Guide,
+/// shared-memory section). When every lane accesses the same width of 8 or
+/// 16 bytes we model those phases; other patterns are evaluated in a single
+/// phase (conservative for scattered sub-word gathers, which is exactly the
+/// naive-layout pathology the paper describes).
+pub fn bank_conflict_degree(accesses: &[LaneAccess], n_banks: usize) -> usize {
+    let uniform_len = match accesses.first() {
+        Some(a) if accesses.iter().all(|x| x.len == a.len) => a.len,
+        _ => 0,
+    };
+    let phase_lanes = match uniform_len {
+        8 => 16,  // LDS.64: half-warp phases
+        16 => 8,  // LDS.128: quarter-warp phases
+        _ => accesses.len().max(1),
+    };
+    let mut worst = 1usize;
+    for phase in accesses.chunks(phase_lanes) {
+        let mut bank_words: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+        for a in phase {
+            if a.len == 0 {
+                continue;
+            }
+            // Every 4-byte word the lane touches participates.
+            let first_word = a.addr / 4;
+            let last_word = (a.addr + a.len - 1) / 4;
+            for w in first_word..=last_word {
+                bank_words.entry(w % n_banks).or_default().insert(w);
+            }
+        }
+        worst = worst.max(bank_words.values().map(BTreeSet::len).max().unwrap_or(1));
+    }
+    worst
+}
+
+/// Convenience: the access pattern of a warp loading one `elem_bytes`-sized
+/// element per lane at stride `stride_bytes` starting from `base`.
+pub fn strided_warp_access(
+    base: usize,
+    stride_bytes: usize,
+    elem_bytes: usize,
+    lanes: usize,
+) -> Vec<LaneAccess> {
+    (0..lanes)
+        .map(|l| LaneAccess { addr: base + l * stride_bytes, len: elem_bytes })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_warp_is_one_transaction() {
+        // 32 lanes × 4 bytes contiguous = 128 B = 1 segment.
+        let acc = strided_warp_access(0, 4, 4, 32);
+        let r = analyze_global(&acc, 128);
+        assert_eq!(r.transactions, 1);
+        assert!(r.is_fully_coalesced());
+        assert!(r.is_conflict_free());
+    }
+
+    #[test]
+    fn misaligned_warp_needs_two_transactions() {
+        // Same 128 useful bytes but offset by 64: straddles two segments
+        // (paper Appendix B, Figure 22).
+        let acc = strided_warp_access(64, 4, 4, 32);
+        let r = analyze_global(&acc, 128);
+        assert_eq!(r.transactions, 2);
+        assert_eq!(r.ideal_transactions, 1);
+        assert!(!r.is_fully_coalesced());
+        assert!((r.coalescing_efficiency() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scattered_warp_is_fully_uncoalesced() {
+        // Each lane in its own segment: 32 transactions for 128 bytes.
+        let acc = strided_warp_access(0, 128, 4, 32);
+        let r = analyze_global(&acc, 128);
+        assert_eq!(r.transactions, 32);
+        assert_eq!(r.ideal_transactions, 1);
+    }
+
+    #[test]
+    fn full_row_stride_hits_one_bank() {
+        // The paper's Challenge-II: 32 lanes reading a column of 32-bit
+        // words with a 128-byte row stride all map to bank 0 → 32-way.
+        let acc = strided_warp_access(0, 128, 4, 32);
+        assert_eq!(bank_conflict_degree(&acc, 32), 32);
+    }
+
+    #[test]
+    fn unit_stride_is_conflict_free() {
+        let acc = strided_warp_access(0, 4, 4, 32);
+        assert_eq!(bank_conflict_degree(&acc, 32), 1);
+    }
+
+    #[test]
+    fn broadcast_same_word_is_free() {
+        let acc: Vec<_> = (0..32).map(|_| LaneAccess { addr: 16, len: 4 }).collect();
+        assert_eq!(bank_conflict_degree(&acc, 32), 1);
+    }
+
+    #[test]
+    fn eight_way_conflict_for_strided_word_column() {
+        // A column walk over a 32-byte-row layout with 32-bit loads: lanes
+        // l and l+4 share a bank with distinct words → 8-way serialization
+        // (the Figure 5 "before ldmatrix" pathology).
+        let acc = strided_warp_access(0, 32, 4, 32);
+        assert_eq!(bank_conflict_degree(&acc, 32), 8);
+    }
+
+    #[test]
+    fn lds64_consecutive_words_conflict_free() {
+        // LDS.64: each lane reads 8 consecutive bytes, lanes read adjacent
+        // 64-bit words. Hardware splits into two half-warp phases, each
+        // covering all 32 banks exactly once → conflict-free. This is the
+        // two-fragment storage read pattern of §4.1 step (iv).
+        let acc = strided_warp_access(0, 8, 8, 32);
+        assert_eq!(bank_conflict_degree(&acc, 32), 1);
+    }
+
+    #[test]
+    fn lds128_consecutive_conflict_free() {
+        let acc = strided_warp_access(0, 16, 16, 32);
+        assert_eq!(bank_conflict_degree(&acc, 32), 1);
+    }
+
+    #[test]
+    fn empty_access_is_neutral() {
+        let r = analyze_global(&[], 128);
+        assert_eq!(r.transactions, 0);
+        assert_eq!(r.useful_bytes, 0);
+        assert!(r.is_conflict_free());
+    }
+
+    #[test]
+    fn int4_packed_column_load_is_pathological() {
+        // Challenge-I instance: a warp gathering a *column* of packed INT4
+        // weights (N=4096 row stride → 2048 bytes between consecutive K
+        // elements of one column).
+        let acc = strided_warp_access(0, 2048, 4, 32);
+        let r = analyze_global(&acc, 128);
+        assert_eq!(r.transactions, 32, "every lane lands in its own segment");
+        assert_eq!(r.bank_conflict_degree, 32);
+    }
+}

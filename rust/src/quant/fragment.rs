@@ -1,0 +1,167 @@
+//! Warp fragment layouts and an `ldmatrix` emulator.
+//!
+//! This module models the lane-level data movement the paper's §4.1 packing
+//! relies on: the `mma.sync.m16n8k16` operand-A fragment layout (PTX ISA
+//! §9.7.13) and the `ldmatrix` crossbar redistribution (Figure 5 of the
+//! paper). Operating on emulated 32-lane warps lets the offline packing run
+//! — and be *verified* — on real buffers without a GPU.
+
+/// Lanes per warp on every modeled architecture.
+pub const WARP_SIZE: usize = 32;
+
+/// Elements each lane holds of a 16×16 16-bit operand-A fragment.
+pub const FRAG_ELEMS_PER_LANE: usize = 8;
+
+/// The (row, col) element coordinates lane `lane` holds for a 16×16
+/// `mma.sync.m16n8k16` operand-A tile, in register order `a0..a7`.
+///
+/// PTX layout: `groupID = lane >> 2`, `tid = lane % 4`;
+/// `a0,a1 -> (groupID, tid*2 + {0,1})`, `a2,a3 -> (groupID+8, tid*2 + {0,1})`,
+/// `a4,a5 -> (groupID, tid*2+8 + {0,1})`, `a6,a7 -> (groupID+8, tid*2+8+{0,1})`.
+pub fn mma_a_lane_coords(lane: usize) -> [(usize, usize); FRAG_ELEMS_PER_LANE] {
+    debug_assert!(lane < WARP_SIZE);
+    let group = lane >> 2;
+    let tid = lane & 3;
+    [
+        (group, tid * 2),
+        (group, tid * 2 + 1),
+        (group + 8, tid * 2),
+        (group + 8, tid * 2 + 1),
+        (group, tid * 2 + 8),
+        (group, tid * 2 + 8 + 1),
+        (group + 8, tid * 2 + 8),
+        (group + 8, tid * 2 + 8 + 1),
+    ]
+}
+
+/// A 16×16 tile of 16-bit-extended values in row-major "shared memory"
+/// order, plus fragment extraction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tile16x16 {
+    /// Row-major `[16][16]` values (bit-extended low-bit codes).
+    pub data: [u16; 256],
+}
+
+impl Tile16x16 {
+    pub fn from_fn(mut f: impl FnMut(usize, usize) -> u16) -> Self {
+        let mut data = [0u16; 256];
+        for r in 0..16 {
+            for c in 0..16 {
+                data[r * 16 + c] = f(r, c);
+            }
+        }
+        Self { data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u16 {
+        self.data[r * 16 + c]
+    }
+
+    /// Emulate `ldmatrix.x4`: produce each lane's 8-element register
+    /// fragment in the `mma.m16n8k16` operand-A layout. This is step (ii)
+    /// of §4.1 — the instruction's internal crossbar redistributes words
+    /// across lanes (paper Figure 5), which this function reproduces.
+    pub fn ldmatrix_fragments(&self) -> [[u16; FRAG_ELEMS_PER_LANE]; WARP_SIZE] {
+        let mut frags = [[0u16; FRAG_ELEMS_PER_LANE]; WARP_SIZE];
+        for (lane, frag) in frags.iter_mut().enumerate() {
+            for (i, (r, c)) in mma_a_lane_coords(lane).iter().enumerate() {
+                frag[i] = self.at(*r, *c);
+            }
+        }
+        frags
+    }
+
+    /// The shared-memory *row addresses* each lane supplies to `ldmatrix.x4`
+    /// (one 16-byte row of an 8×8 16-bit submatrix per lane), as
+    /// (byte_offset, byte_len) pairs relative to the tile base. Used by the
+    /// access analyzer to show the pre-redistribution conflict pattern the
+    /// paper's Figure 5 describes ("each thread loads one matrix row
+    /// (16-byte), resulting in 8-way bank conflict" under a naive layout).
+    pub fn ldmatrix_row_addresses(&self) -> [(usize, usize); WARP_SIZE] {
+        let mut addrs = [(0usize, 16usize); WARP_SIZE];
+        // .x4 loads four 8x8 submatrices; lanes 0-7 address submatrix 0
+        // (rows 0-7, cols 0-7), 8-15 submatrix 1 (rows 8-15, cols 0-7),
+        // 16-23 submatrix 2 (rows 0-7, cols 8-15), 24-31 submatrix 3.
+        for (lane, addr) in addrs.iter_mut().enumerate() {
+            let sub = lane / 8;
+            let row_in_sub = lane % 8;
+            let (row, col) = match sub {
+                0 => (row_in_sub, 0),
+                1 => (row_in_sub + 8, 0),
+                2 => (row_in_sub, 8),
+                _ => (row_in_sub + 8, 8),
+            };
+            *addr = ((row * 16 + col) * 2, 16);
+        }
+        addrs
+    }
+}
+
+/// Inverse of [`mma_a_lane_coords`]: map a (row, col) element to its
+/// (lane, register index).
+pub fn coord_to_lane(r: usize, c: usize) -> (usize, usize) {
+    let group = r % 8;
+    let tid = (c % 8) / 2;
+    let lane = group * 4 + tid;
+    let reg = (c % 2) + if r >= 8 { 2 } else { 0 } + if c >= 8 { 4 } else { 0 };
+    (lane, reg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_coords_cover_tile_exactly_once() {
+        let mut seen = [[false; 16]; 16];
+        for lane in 0..WARP_SIZE {
+            for (r, c) in mma_a_lane_coords(lane) {
+                assert!(!seen[r][c], "({r},{c}) covered twice");
+                seen[r][c] = true;
+            }
+        }
+        assert!(seen.iter().all(|row| row.iter().all(|&x| x)));
+    }
+
+    #[test]
+    fn coord_to_lane_inverts_lane_coords() {
+        for lane in 0..WARP_SIZE {
+            for (i, (r, c)) in mma_a_lane_coords(lane).iter().enumerate() {
+                assert_eq!(coord_to_lane(*r, *c), (lane, i), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn ldmatrix_fragments_match_layout() {
+        let tile = Tile16x16::from_fn(|r, c| (r * 16 + c) as u16);
+        let frags = tile.ldmatrix_fragments();
+        // Lane 0: a0,a1 = (0,0),(0,1); a2 = (8,0) = 128...
+        assert_eq!(frags[0][0], 0);
+        assert_eq!(frags[0][1], 1);
+        assert_eq!(frags[0][2], 128);
+        assert_eq!(frags[0][4], 8);
+        // Lane 5 (group 1, tid 1): a0 = (1, 2) = 18.
+        assert_eq!(frags[5][0], 18);
+    }
+
+    #[test]
+    fn row_addresses_are_16_byte_rows() {
+        let tile = Tile16x16::from_fn(|_, _| 0);
+        for (off, len) in tile.ldmatrix_row_addresses() {
+            assert_eq!(len, 16);
+            assert_eq!(off % 16, 0);
+            assert!(off < 512);
+        }
+    }
+
+    #[test]
+    fn row_addresses_distinct() {
+        let tile = Tile16x16::from_fn(|_, _| 0);
+        let mut offs: Vec<_> = tile.ldmatrix_row_addresses().iter().map(|a| a.0).collect();
+        offs.sort_unstable();
+        offs.dedup();
+        assert_eq!(offs.len(), WARP_SIZE);
+    }
+}

@@ -1,0 +1,253 @@
+//! Groupwise symmetric weight quantization (AWQ/GPTQ-style).
+//!
+//! A `[K, N]` weight matrix is split into groups of `group_size` consecutive
+//! rows per output column; each group gets one FP scale chosen so the max
+//! magnitude maps to the integer range. INT4 values are stored packed two
+//! per byte (low nibble first) — the storage format the GEMM pipeline's
+//! offline stage consumes.
+
+use crate::config::DType;
+
+/// Quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupwiseQuant {
+    pub dtype: DType,
+    /// Rows (along K) sharing one scale. Must divide K.
+    pub group_size: usize,
+}
+
+impl GroupwiseQuant {
+    pub fn int4(group_size: usize) -> Self {
+        Self { dtype: DType::Int4, group_size }
+    }
+
+    pub fn int8(group_size: usize) -> Self {
+        Self { dtype: DType::Int8, group_size }
+    }
+}
+
+/// A quantized `[K, N]` matrix: integer codes + per-group scales.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub k: usize,
+    pub n: usize,
+    pub quant: GroupwiseQuant,
+    /// Integer codes. INT8: `k*n` bytes (i8 as u8). INT4: `k*n/2` bytes,
+    /// element `(r, c)` in the low nibble of byte `(r*n + c) / 2` when
+    /// `(r*n + c)` even, high nibble otherwise (row-major element order).
+    pub codes: Vec<u8>,
+    /// Scales `[K/group_size, N]`, row-major.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a row-major `[K, N]` f32 matrix.
+    pub fn quantize(weights: &[f32], k: usize, n: usize, quant: GroupwiseQuant) -> Self {
+        assert_eq!(weights.len(), k * n, "weight buffer size mismatch");
+        assert!(quant.group_size > 0 && k % quant.group_size == 0, "group_size must divide K");
+        let n_groups = k / quant.group_size;
+        let qmax = quant.dtype.qmax() as f32;
+        assert!(qmax > 0.0, "dtype {:?} is not integer-quantizable", quant.dtype);
+
+        // Per-(group, col) max-abs → scale.
+        let mut scales = vec![0f32; n_groups * n];
+        for g in 0..n_groups {
+            for c in 0..n {
+                let mut maxabs = 0f32;
+                for r in g * quant.group_size..(g + 1) * quant.group_size {
+                    maxabs = maxabs.max(weights[r * n + c].abs());
+                }
+                scales[g * n + c] = if maxabs > 0.0 { maxabs / qmax } else { 1.0 };
+            }
+        }
+
+        // Quantize codes.
+        let total = k * n;
+        let mut codes = vec![0u8; quant.dtype.bytes_for(total)];
+        for r in 0..k {
+            let g = r / quant.group_size;
+            for c in 0..n {
+                let s = scales[g * n + c];
+                let q = (weights[r * n + c] / s).round().clamp(-qmax, qmax) as i8;
+                let idx = r * n + c;
+                match quant.dtype {
+                    DType::Int8 => codes[idx] = q as u8,
+                    DType::Int4 => {
+                        let nib = (q as u8) & 0x0F;
+                        if idx % 2 == 0 {
+                            codes[idx / 2] |= nib;
+                        } else {
+                            codes[idx / 2] |= nib << 4;
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        Self { k, n, quant, codes, scales }
+    }
+
+    /// Read the integer code at `(r, c)` as a signed value.
+    #[inline]
+    pub fn code_at(&self, r: usize, c: usize) -> i8 {
+        let idx = r * self.n + c;
+        match self.quant.dtype {
+            DType::Int8 => self.codes[idx] as i8,
+            DType::Int4 => {
+                let byte = self.codes[idx / 2];
+                let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                sign_extend4(nib)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Scale applying to element `(r, c)`.
+    #[inline]
+    pub fn scale_at(&self, r: usize, c: usize) -> f32 {
+        self.scales[(r / self.quant.group_size) * self.n + c]
+    }
+
+    /// Dequantize back to a dense `[K, N]` f32 matrix.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.k * self.n];
+        for r in 0..self.k {
+            for c in 0..self.n {
+                out[r * self.n + c] = self.code_at(r, c) as f32 * self.scale_at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Worst-case absolute quantization error bound: half an LSB per group.
+    pub fn error_bound(&self) -> f32 {
+        self.scales.iter().fold(0f32, |m, s| m.max(*s)) * 0.5
+    }
+
+    /// Storage bytes (codes + scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+}
+
+/// Sign-extend a 4-bit two's-complement nibble.
+#[inline]
+pub fn sign_extend4(nib: u8) -> i8 {
+    let v = nib & 0x0F;
+    if v & 0x08 != 0 {
+        (v | 0xF0) as i8
+    } else {
+        v as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn make_weights(k: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..k * n).map(|_| (rng.next_f32() - 0.5) * 2.0).collect()
+    }
+
+    #[test]
+    fn sign_extend_cases() {
+        assert_eq!(sign_extend4(0x0), 0);
+        assert_eq!(sign_extend4(0x7), 7);
+        assert_eq!(sign_extend4(0x8), -8);
+        assert_eq!(sign_extend4(0xF), -1);
+        assert_eq!(sign_extend4(0x9), -7);
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded() {
+        let (k, n) = (64, 32);
+        let w = make_weights(k, n, 1);
+        let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int8(32));
+        let dq = q.dequantize();
+        let bound = q.error_bound() * 1.001;
+        for (a, b) in w.iter().zip(&dq) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}, bound {bound}");
+        }
+    }
+
+    #[test]
+    fn int4_roundtrip_error_bounded() {
+        let (k, n) = (128, 16);
+        let w = make_weights(k, n, 2);
+        let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int4(64));
+        let dq = q.dequantize();
+        let bound = q.error_bound() * 1.001;
+        for (a, b) in w.iter().zip(&dq) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn int4_codes_stay_in_range() {
+        let (k, n) = (64, 8);
+        let w = make_weights(k, n, 3);
+        let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int4(64));
+        for r in 0..k {
+            for c in 0..n {
+                let v = q.code_at(r, c);
+                assert!((-7..=7).contains(&v), "code {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_boundary_scales() {
+        // Distinct magnitudes per group must give distinct scales.
+        let k = 8;
+        let n = 1;
+        let mut w = vec![0f32; k];
+        for (i, x) in w.iter_mut().enumerate() {
+            *x = if i < 4 { 1.0 } else { 100.0 };
+        }
+        let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int8(4));
+        assert!(q.scale_at(0, 0) < q.scale_at(4, 0));
+        assert_eq!(q.scales.len(), 2);
+    }
+
+    #[test]
+    fn zero_matrix_is_exact() {
+        let w = vec![0f32; 64];
+        let q = QuantizedMatrix::quantize(&w, 8, 8, GroupwiseQuant::int4(8));
+        assert_eq!(q.dequantize(), w);
+    }
+
+    #[test]
+    fn int4_storage_half_of_int8() {
+        let (k, n) = (64, 64);
+        let w = make_weights(k, n, 4);
+        let q4 = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int4(64));
+        let q8 = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int8(64));
+        assert_eq!(q4.codes.len() * 2, q8.codes.len());
+    }
+
+    #[test]
+    fn prop_roundtrip_error_within_bound() {
+        run_prop("groupwise-roundtrip", 0xBEEF, 40, |g| {
+            let group = *g.choose(&[8usize, 16, 32, 64]);
+            let k = group * g.usize_in(1, 4);
+            let n = g.usize_in(1, 24);
+            let dt = if g.bool() { GroupwiseQuant::int4(group) } else { GroupwiseQuant::int8(group) };
+            let w = g.f32_vec(k * n, -3.0, 3.0);
+            let q = QuantizedMatrix::quantize(&w, k, n, dt);
+            let dq = q.dequantize();
+            let bound = q.error_bound() * 1.001;
+            for (a, b) in w.iter().zip(&dq) {
+                assert!((a - b).abs() <= bound, "err {} bound {bound}", (a - b).abs());
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "group_size must divide K")]
+    fn rejects_nondividing_group() {
+        let w = vec![0f32; 10 * 4];
+        QuantizedMatrix::quantize(&w, 10, 4, GroupwiseQuant::int4(64));
+    }
+}

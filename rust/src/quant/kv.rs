@@ -1,0 +1,121 @@
+//! KV-cache quantization: per-token, per-KV-head symmetric scales.
+//!
+//! The engine quantizes each new (K, V) row as it is appended to the paged
+//! pool (`kvcache`), and the AOT decode graphs dequantize on the fly inside
+//! the attention kernel (the paper's attention pipeline, §3.4). The exact
+//! same scheme is implemented in `python/compile/quantize.py` so the Rust
+//! pool and the Pallas kernel agree bit-for-bit on the codes.
+
+/// Quantize one KV row (`head_dim` values) to INT8. Returns (codes, scale).
+pub fn quantize_kv_int8(row: &[f32]) -> (Vec<i8>, f32) {
+    let maxabs = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let codes = row.iter().map(|x| (x / scale).round().clamp(-127.0, 127.0) as i8).collect();
+    (codes, scale)
+}
+
+/// Quantize one KV row to INT4, packed two codes per byte (low nibble =
+/// even element). Returns (packed bytes, scale).
+pub fn quantize_kv_int4(row: &[f32]) -> (Vec<u8>, f32) {
+    let maxabs = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 7.0 } else { 1.0 };
+    let mut packed = vec![0u8; row.len().div_ceil(2)];
+    for (i, x) in row.iter().enumerate() {
+        let q = (x / scale).round().clamp(-7.0, 7.0) as i8;
+        let nib = (q as u8) & 0x0F;
+        if i % 2 == 0 {
+            packed[i / 2] |= nib;
+        } else {
+            packed[i / 2] |= nib << 4;
+        }
+    }
+    (packed, scale)
+}
+
+/// Dequantize INT8 codes with a scalar scale.
+pub fn dequantize_kv(codes: &[i8], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale).collect()
+}
+
+/// Dequantize INT4 packed codes (`n` original elements) with a scalar scale.
+pub fn dequantize_kv_int4(packed: &[u8], n: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        out.push(super::groupwise::sign_extend4(nib) as f32 * scale);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    #[test]
+    fn int8_roundtrip() {
+        let row: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.1).collect();
+        let (codes, scale) = quantize_kv_int8(&row);
+        let dq = dequantize_kv(&codes, scale);
+        for (a, b) in row.iter().zip(&dq) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn int4_roundtrip() {
+        let row: Vec<f32> = (0..32).map(|i| ((i * 7919) % 13) as f32 - 6.0).collect();
+        let (packed, scale) = quantize_kv_int4(&row);
+        assert_eq!(packed.len(), 16);
+        let dq = dequantize_kv_int4(&packed, 32, scale);
+        for (a, b) in row.iter().zip(&dq) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_row_exact() {
+        let row = vec![0f32; 16];
+        let (codes, scale) = quantize_kv_int8(&row);
+        assert_eq!(dequantize_kv(&codes, scale), row);
+        let (packed, scale4) = quantize_kv_int4(&row);
+        assert_eq!(dequantize_kv_int4(&packed, 16, scale4), row);
+    }
+
+    #[test]
+    fn extreme_value_maps_to_max_code() {
+        let mut row = vec![0.01f32; 8];
+        row[3] = -100.0;
+        let (codes, _) = quantize_kv_int8(&row);
+        assert_eq!(codes[3], -127);
+        let (packed, _) = quantize_kv_int4(&row);
+        let dq = dequantize_kv_int4(&packed, 8, 100.0 / 7.0);
+        assert!((dq[3] + 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn odd_length_int4() {
+        let row = vec![1.0f32, -2.0, 3.0];
+        let (packed, scale) = quantize_kv_int4(&row);
+        assert_eq!(packed.len(), 2);
+        let dq = dequantize_kv_int4(&packed, 3, scale);
+        assert_eq!(dq.len(), 3);
+    }
+
+    #[test]
+    fn prop_kv_roundtrip_error() {
+        run_prop("kv-roundtrip", 0xCAFE, 50, |g| {
+            let n = g.usize_in(1, 128);
+            let row = g.f32_vec(n, -8.0, 8.0);
+            let (c8, s8) = quantize_kv_int8(&row);
+            for (a, b) in row.iter().zip(dequantize_kv(&c8, s8)) {
+                assert!((a - b).abs() <= s8 * 0.5 + 1e-5);
+            }
+            let (c4, s4) = quantize_kv_int4(&row);
+            for (a, b) in row.iter().zip(dequantize_kv_int4(&c4, n, s4)) {
+                assert!((a - b).abs() <= s4 * 0.5 + 1e-5);
+            }
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Quantization substrate: groupwise weight quantization, per-token KV-cache
+//! quantization, and the paper's §4.1 *hardware-aware weight packing*.
+//!
+//! Layout notes
+//! ------------
+//! * Weights are quantized **groupwise along the input (K) dimension** with
+//!   symmetric scales (AWQ/GPTQ-style, group size 64 by default) — the same
+//!   scheme `python/compile/quantize.py` implements; the two are
+//!   cross-validated by shared test vectors.
+//! * KV cache entries are quantized **per token per KV-head** (asymmetric
+//!   max-abs symmetric scale), matching the paper's KV8/KV4 formats.
+//! * [`packing`] implements the four offline packing steps of §4.1 on an
+//!   emulated 32-lane warp, and [`access`] provides the transaction /
+//!   bank-conflict analyzer used to verify the packed layout's three
+//!   built-in guarantees (coalesced, conflict-free, MMA-aligned).
+
+pub mod access;
+pub mod fragment;
+pub mod groupwise;
+pub mod kv;
+pub mod packing;
+pub mod qrearrange;
+pub mod swizzle;
+
+pub use groupwise::{GroupwiseQuant, QuantizedMatrix};
+pub use kv::{dequantize_kv, quantize_kv_int4, quantize_kv_int8};
+pub use packing::{pack_weights_hw_aware, PackedWeights};

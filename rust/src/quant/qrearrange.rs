@@ -1,0 +1,245 @@
+//! §4.2 Adaptive head alignment — the Q rearrangement of Algorithm 1
+//! (Appendix D), lane-exact.
+//!
+//! Mixing FP16 Q with low-bit K misaligns warp fragments (Challenge-III):
+//! `ldmatrix` fetches wider K tiles per lane than Q tiles. TurboMind fixes
+//! the *Q side* once per head: each lane loads Q elements from shared
+//! memory at coordinates chosen so its registers line up with the
+//! quantized-K fragment the MMA instruction will consume.
+//!
+//! Algorithm 1's parameters for the `m16n8k16` instruction with head
+//! dimension `HeadDim`:
+//! * `OP_K` — tensor-core operand K-granularity at the KV precision
+//!   (16 for FP16 K, 8 for INT8, 4 for INT4 — §4.2 step (i));
+//! * `X = 16 / kv_bits` — sub-word batching factor (2 for 8-bit, 4 for
+//!   4-bit KV);
+//! * lane mapping (step (ii)): `hi = n·OP_N + lane/4`,
+//!   `di = k·OP_K + (lane mod 4)·2X + 2x + 8·d·X`.
+//!
+//! The tests verify the properties the paper claims: the rearrangement is
+//! a **bijection** onto the Q tile (no element read twice, none dropped)
+//! and every load phase targets **distinct elements** (step (ii)); full
+//! bank-conflict freedom additionally uses the swizzled SMEM placement
+//! demonstrated in [`super::swizzle`].
+
+use super::access::LaneAccess;
+#[cfg(test)]
+use super::access::bank_conflict_degree;
+use super::fragment::WARP_SIZE;
+
+/// MMA operand-N extent for `m16n8k16`.
+pub const OP_N: usize = 8;
+
+/// Q-rearrangement parameters for one KV precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QRearrange {
+    /// Attention head dimension (e.g. 128 in the paper's models).
+    pub head_dim: usize,
+    /// KV cache bits (16 / 8 / 4).
+    pub kv_bits: usize,
+}
+
+impl QRearrange {
+    pub fn new(head_dim: usize, kv_bits: usize) -> Self {
+        assert!(matches!(kv_bits, 16 | 8 | 4), "kv_bits {kv_bits}");
+        Self { head_dim, kv_bits }
+    }
+
+    /// Tensor-core operand K-granularity (§4.2 step (i)): FP16→16,
+    /// INT8→8, INT4→4.
+    pub fn op_k(&self) -> usize {
+        match self.kv_bits {
+            16 => 16,
+            8 => 8,
+            4 => 4,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Number of K-slices of the Q matrix (`K_K` in Algorithm 1):
+    /// 128-dim heads need 8 / 16 / 32 slices for FP16 / INT8 / INT4 K.
+    pub fn k_slices(&self) -> usize {
+        self.head_dim / self.op_k()
+    }
+
+    /// Sub-word batching factor `X = 16 / kv_bits` (Appendix D).
+    pub fn x(&self) -> usize {
+        16 / self.kv_bits
+    }
+
+    /// Dims covered per k-window: each window spans `16·X` consecutive Q
+    /// dims (X² K-slices of OP_K dims), fully tiled by one warp step.
+    pub fn window_dims(&self) -> usize {
+        16 * self.x()
+    }
+
+    /// The (row, dim) Q coordinates lane `lane` loads for warp-tile row
+    /// block `n` and K-window `kwin` — Algorithm 1's inner loops with the
+    /// 32-bit load granularity made explicit: each `Load(Q_sm[hi][di])`
+    /// fetches a **pair** of f16 elements `(di, di+1)`, so a lane holds
+    /// `4X` elements per window in register order
+    /// `frag_Q[n][k+x][2d], frag_Q[n][k+x][2d+1]`.
+    pub fn lane_coords(&self, lane: usize, n: usize, kwin: usize) -> Vec<(usize, usize)> {
+        assert!(lane < WARP_SIZE);
+        let x_max = self.x();
+        let base = kwin * self.window_dims();
+        let mut out = Vec::with_capacity(4 * x_max);
+        let hi = n * OP_N + lane / 4;
+        for x in 0..x_max {
+            for d in 0..2 {
+                let di = base + (lane % 4) * 2 * x_max + 2 * x + 8 * x_max * d;
+                out.push((hi, di));
+                out.push((hi, di + 1));
+            }
+        }
+        out
+    }
+
+    /// Run the full rearrangement over a Q warp tile of `rows` rows
+    /// (`rows` a multiple of OP_N): returns, per lane, the flat list of
+    /// (row, dim) elements in register order — `frag_Q` of Algorithm 1.
+    pub fn rearrange_coords(&self, rows: usize) -> Vec<Vec<(usize, usize)>> {
+        assert_eq!(rows % OP_N, 0);
+        assert_eq!(self.head_dim % self.window_dims(), 0);
+        let windows = self.head_dim / self.window_dims();
+        let mut frags = vec![Vec::new(); WARP_SIZE];
+        for n in 0..rows / OP_N {
+            for kwin in 0..windows {
+                for (lane, frag) in frags.iter_mut().enumerate() {
+                    frag.extend(self.lane_coords(lane, n, kwin));
+                }
+            }
+        }
+        frags
+    }
+
+    /// Shared-memory accesses of one `lane_coords` window under a
+    /// row-major f16 Q tile (each (x, d) pair is one 32-bit load). Step
+    /// (ii)'s guarantee as stated is *distinct elements per phase*; full
+    /// bank-conflict freedom additionally relies on the swizzled SMEM
+    /// placement of Q (Appendix C / `quant::swizzle`).
+    pub fn lane_accesses(&self, n: usize, kwin: usize) -> Vec<Vec<LaneAccess>> {
+        let x_max = self.x();
+        // One phase per (x, d) 32-bit load, across all 32 lanes.
+        (0..2 * x_max)
+            .map(|phase| {
+                (0..WARP_SIZE)
+                    .map(|lane| {
+                        let coords = self.lane_coords(lane, n, kwin);
+                        let (r, d0) = coords[phase * 2];
+                        LaneAccess { addr: (r * self.head_dim + d0) * 2, len: 4 }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn op_k_matches_paper() {
+        // §4.2: "128-dimensional Q heads require 8, 16, and 32 K-slices for
+        // FP16, INT8, and INT4 operands respectively (OP_K = 16, 8, 4)".
+        assert_eq!(QRearrange::new(128, 16).op_k(), 16);
+        assert_eq!(QRearrange::new(128, 8).op_k(), 8);
+        assert_eq!(QRearrange::new(128, 4).op_k(), 4);
+        assert_eq!(QRearrange::new(128, 16).k_slices(), 8);
+        assert_eq!(QRearrange::new(128, 8).k_slices(), 16);
+        assert_eq!(QRearrange::new(128, 4).k_slices(), 32);
+    }
+
+    #[test]
+    fn x_factor() {
+        // Appendix D: "X equals 2 for an 8-bit KV and 4 for a 4-bit KV".
+        assert_eq!(QRearrange::new(128, 8).x(), 2);
+        assert_eq!(QRearrange::new(128, 4).x(), 4);
+        assert_eq!(QRearrange::new(128, 16).x(), 1);
+    }
+
+    #[test]
+    fn rearrangement_is_a_bijection() {
+        // Every Q element of the (rows × head_dim) tile is assigned to
+        // exactly one (lane, register) slot — nothing dropped or doubled.
+        for kv_bits in [16usize, 8, 4] {
+            let q = QRearrange::new(128, kv_bits);
+            let rows = 16;
+            let frags = q.rearrange_coords(rows);
+            let mut seen = BTreeSet::new();
+            let mut total = 0usize;
+            for frag in &frags {
+                for &(r, d) in frag {
+                    assert!(r < rows && d < 128, "({r},{d}) out of tile");
+                    assert!(seen.insert((r, d)), "({r},{d}) duplicated [kv{kv_bits}]");
+                    total += 1;
+                }
+            }
+            assert_eq!(total, rows * 128, "kv{kv_bits}: coverage");
+        }
+    }
+
+    #[test]
+    fn per_phase_loads_hit_distinct_elements() {
+        // Step (ii): "each of the 32 threads computes unique row and column
+        // indices to target distinct Q matrix elements".
+        for kv_bits in [16usize, 8, 4] {
+            let q = QRearrange::new(128, kv_bits);
+            for n in 0..2 {
+                for kwin in 0..q.head_dim / q.window_dims() {
+                    for phase in q.lane_accesses(n, kwin) {
+                        let mut addrs: Vec<_> = phase.iter().map(|a| a.addr).collect();
+                        addrs.sort_unstable();
+                        addrs.dedup();
+                        assert_eq!(addrs.len(), WARP_SIZE, "kv{kv_bits} n{n} k{kwin}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase_conflict_degree_bounded() {
+        // Without SMEM swizzling a row-major Q tile serializes up to the
+        // row-group depth (8); the combination with Appendix C's swizzle
+        // (see `quant::swizzle`) removes the rest. Degree must never exceed
+        // the 8-row structure.
+        for kv_bits in [16usize, 8, 4] {
+            let q = QRearrange::new(128, kv_bits);
+            for phase in q.lane_accesses(0, 0) {
+                let deg = bank_conflict_degree(&phase, 32);
+                assert!(deg <= 8, "kv{kv_bits}: degree {deg}");
+            }
+        }
+    }
+
+    #[test]
+    fn register_count_matches_mma_operand() {
+        // Per (n, k) step each lane holds 2X values — one m16n8k16 operand-B
+        // fragment column pair per sub-word batch.
+        for kv_bits in [16usize, 8, 4] {
+            let q = QRearrange::new(128, kv_bits);
+            let coords = q.lane_coords(0, 0, 0);
+            assert_eq!(coords.len(), 4 * q.x());
+        }
+    }
+
+    #[test]
+    fn lanes_share_rows_within_groups_of_four() {
+        // hi = n·OP_N + lane/4: lanes 0-3 read row 0, lanes 4-7 row 1, …
+        let q = QRearrange::new(128, 8);
+        for lane in 0..WARP_SIZE {
+            for (r, _) in q.lane_coords(lane, 0, 0) {
+                assert_eq!(r, lane / 4);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "kv_bits")]
+    fn rejects_bad_bits() {
+        QRearrange::new(128, 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Appendix C: the 8×128-byte swizzled shared-memory layout — the runtime
+//! alternative that §4.1's offline packing makes unnecessary.
+//!
+//! `cp.async` writes rows (horizontal, coalesced); `ldmatrix` reads columns
+//! (vertical, per-lane). With a naive row-major tile those column reads pile
+//! onto the same banks. The classic fix permutes each 16-byte chunk within
+//! its row by XOR-ing the chunk index with the row index (the 8×128 B
+//! swizzle unit, Figure 25), making both access directions conflict-free.
+//!
+//! This module implements that swizzle and *measures* (tests below) the
+//! paper's Appendix C claims:
+//! 1. naive layout: row writes clean, ldmatrix column reads conflicted;
+//! 2. swizzled layout: both clean — but every read now needs the XOR
+//!    address arithmetic at runtime;
+//! 3. the §4.1 packed layout gets the same conflict-freedom with plain
+//!    linear addresses ("packing bakes the swizzle in offline").
+
+use super::access::LaneAccess;
+#[cfg(test)]
+use super::access::bank_conflict_degree;
+
+/// Chunk size the swizzle permutes (one `ldmatrix` row / lane load).
+pub const CHUNK: usize = 16;
+/// Bytes per swizzle-unit row (a 128-byte SMEM cache line).
+pub const ROW_BYTES: usize = 128;
+/// Rows per swizzle unit.
+pub const ROWS: usize = 8;
+
+/// Map a logical (row, byte-in-row) address to its swizzled physical byte
+/// offset within the 8×128 B unit: chunk index XOR row.
+pub fn swizzle_addr(row: usize, byte: usize) -> usize {
+    debug_assert!(row < ROWS && byte < ROW_BYTES);
+    let chunk = byte / CHUNK;
+    let within = byte % CHUNK;
+    let phys_chunk = chunk ^ row;
+    row * ROW_BYTES + phys_chunk * CHUNK + within
+}
+
+/// Apply the swizzle to an 8×128-byte tile (row-major input).
+pub fn swizzle_tile(data: &[u8]) -> Vec<u8> {
+    assert_eq!(data.len(), ROWS * ROW_BYTES);
+    let mut out = vec![0u8; data.len()];
+    for row in 0..ROWS {
+        for byte in 0..ROW_BYTES {
+            out[swizzle_addr(row, byte)] = data[row * ROW_BYTES + byte];
+        }
+    }
+    out
+}
+
+/// Inverse mapping (self-inverse per row since XOR is an involution).
+pub fn unswizzle_tile(data: &[u8]) -> Vec<u8> {
+    assert_eq!(data.len(), ROWS * ROW_BYTES);
+    let mut out = vec![0u8; data.len()];
+    for row in 0..ROWS {
+        for byte in 0..ROW_BYTES {
+            out[row * ROW_BYTES + byte] = data[swizzle_addr(row, byte)];
+        }
+    }
+    out
+}
+
+/// The warp's write pattern for one cp.async row store (lane `l` writes
+/// bytes `l*4..l*4+4` of `row`), under the given address mapping.
+pub fn row_write_accesses(row: usize, swizzled: bool) -> Vec<LaneAccess> {
+    (0..32)
+        .map(|lane| {
+            let byte = lane * 4;
+            let addr = if swizzled { swizzle_addr(row, byte) } else { row * ROW_BYTES + byte };
+            LaneAccess { addr, len: 4 }
+        })
+        .collect()
+}
+
+/// The `ldmatrix`-style column read: 8 lanes each fetch the same 16-byte
+/// *logical column chunk* across the 8 rows of the unit (lane `l` reads
+/// logical chunk `col_chunk` of row `l`).
+pub fn column_read_accesses(col_chunk: usize, swizzled: bool) -> Vec<LaneAccess> {
+    (0..ROWS)
+        .map(|row| {
+            let byte = col_chunk * CHUNK;
+            let addr = if swizzled { swizzle_addr(row, byte) } else { row * ROW_BYTES + byte };
+            LaneAccess { addr, len: CHUNK }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swizzle_roundtrips() {
+        let data: Vec<u8> = (0..ROWS * ROW_BYTES).map(|i| (i % 251) as u8).collect();
+        assert_eq!(unswizzle_tile(&swizzle_tile(&data)), data);
+    }
+
+    #[test]
+    fn swizzle_is_a_permutation() {
+        let mut seen = vec![false; ROWS * ROW_BYTES];
+        for row in 0..ROWS {
+            for byte in 0..ROW_BYTES {
+                let a = swizzle_addr(row, byte);
+                assert!(!seen[a], "address {a} hit twice");
+                seen[a] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn row_zero_is_identity() {
+        // chunk XOR 0 = chunk: the first row is unpermuted.
+        for byte in 0..ROW_BYTES {
+            assert_eq!(swizzle_addr(0, byte), byte);
+        }
+    }
+
+    #[test]
+    fn naive_column_reads_conflict() {
+        // Appendix C: "with a naive row-major layout, those vertical reads
+        // cause multiple lanes to hit the same shared memory bank".
+        // 8 lanes × 16-byte chunks at 128-byte row stride: every lane maps
+        // to the same four banks → 8-way serialization.
+        let acc = column_read_accesses(3, false);
+        assert_eq!(bank_conflict_degree(&acc, 32), 8);
+    }
+
+    #[test]
+    fn swizzled_column_reads_are_conflict_free() {
+        for col_chunk in 0..ROW_BYTES / CHUNK {
+            let acc = column_read_accesses(col_chunk, true);
+            assert_eq!(
+                bank_conflict_degree(&acc, 32),
+                1,
+                "chunk {col_chunk} conflicted"
+            );
+        }
+    }
+
+    #[test]
+    fn swizzled_row_writes_stay_coalesced_and_clean() {
+        // "the horizontal cp.async writes remain coalesced": a swizzled row
+        // write touches the same 128-byte line, permuted within it.
+        for row in 0..ROWS {
+            let acc = row_write_accesses(row, true);
+            let min = acc.iter().map(|a| a.addr).min().unwrap();
+            let max = acc.iter().map(|a| a.addr + a.len).max().unwrap();
+            assert_eq!(min / ROW_BYTES, (max - 1) / ROW_BYTES, "row {row} split lines");
+            assert_eq!(bank_conflict_degree(&acc, 32), 1);
+        }
+    }
+
+    #[test]
+    fn packed_layout_needs_no_swizzle() {
+        // The §4.1 contrast ("why does our packing avoid swizzling?"): the
+        // offline-packed layout's runtime loads are already conflict-free
+        // with *linear* addressing — no XOR arithmetic on the hot path.
+        use crate::quant::{pack_weights_hw_aware, GroupwiseQuant, QuantizedMatrix};
+        let w = vec![0.5f32; 64 * 64];
+        let q = QuantizedMatrix::quantize(&w, 64, 64, GroupwiseQuant::int4(16));
+        let p = pack_weights_hw_aware(&q);
+        for t in 0..p.n_tiles() {
+            let r = p.runtime_load_report(t, 128);
+            assert!(r.is_conflict_free() && r.is_fully_coalesced());
+        }
+    }
+}

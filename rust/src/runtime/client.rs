@@ -1,0 +1,188 @@
+//! PJRT runtime: load HLO-text artifacts, keep compiled executables and
+//! weight literals resident, execute graphs from the request path.
+//!
+//! Pattern from `/opt/xla-example/load_hlo/`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Weight literals are created once at load; graph executables are compiled
+//! lazily on first use and cached (one executable per (variant, batch/chunk)
+//! — the "one compiled executable per model variant" rule).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{GraphEntry, Manifest};
+use super::tensor::{Dt, HostTensor};
+
+/// Upload a host tensor as a device buffer (typed path; dims carry the
+/// element count, bytes are reinterpreted per dtype).
+fn upload(client: &PjRtClient, t: &HostTensor) -> Result<PjRtBuffer> {
+    let r = match t.dtype {
+        Dt::F32 => {
+            let v = t.as_f32()?;
+            client.buffer_from_host_buffer(&v, &t.shape, None)
+        }
+        Dt::I32 => {
+            let v = t.as_i32()?;
+            client.buffer_from_host_buffer(&v, &t.shape, None)
+        }
+        Dt::I8 => {
+            // i8 has the same layout as the raw bytes.
+            let v: Vec<i8> = t.data.iter().map(|&b| b as i8).collect();
+            client.buffer_from_host_buffer(&v, &t.shape, None)
+        }
+        Dt::U8 => client.buffer_from_host_buffer(&t.data, &t.shape, None),
+    };
+    r.map_err(|e| anyhow!("input upload: {e:?}"))
+}
+
+/// The runtime: PJRT client + manifest + resident weights + executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    /// Weight tensors resident as **device buffers** per precision key
+    /// ("w16"/"w4"), by tensor name. Uploaded once at load; `execute_b`
+    /// consumes them without per-call host→device copies (§Perf: weights
+    /// are by far the largest per-call operands).
+    weights: BTreeMap<String, BTreeMap<String, PjRtBuffer>>,
+    /// Compiled executables by graph name (interior mutability: compiling is
+    /// a caching detail, callers keep `&Runtime`).
+    executables: RefCell<BTreeMap<String, PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Load the manifest and weight binaries; no graphs compiled yet.
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+
+        let mut weights = BTreeMap::new();
+        for (prec, wf) in &manifest.weights {
+            let bin = std::fs::read(manifest.dir.join(&wf.file))
+                .with_context(|| format!("reading {}", wf.file))?;
+            let mut tensors = BTreeMap::new();
+            for t in &wf.tensors {
+                let slice = bin
+                    .get(t.offset..t.offset + t.nbytes)
+                    .ok_or_else(|| anyhow!("weight {} out of range in {}", t.name, wf.file))?;
+                let host = HostTensor::new(t.dtype, t.shape.clone(), slice.to_vec())?;
+                let buf = upload(&client, &host)
+                    .map_err(|e| anyhow!("uploading weight {}: {e}", t.name))?;
+                tensors.insert(t.name.clone(), buf);
+            }
+            weights.insert(prec.clone(), tensors);
+        }
+
+        Ok(Self { client, manifest, weights, executables: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Compile (or fetch cached) a graph by name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let graph = self.graph(name)?.clone();
+        let path = self.manifest.hlo_path(&graph);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of graphs (warm-up; keeps first-request latency flat).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphEntry> {
+        self.manifest
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph `{name}` not in manifest (available: {:?})",
+                self.manifest.graphs.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    /// Execute a graph: dynamic inputs (validated against the manifest
+    /// signature) followed by the resident weight literals. Returns the
+    /// tuple outputs as host tensors.
+    pub fn execute(&self, name: &str, dynamic_inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let graph = self.graph(name)?;
+
+        // Validate the dynamic inputs against the signature.
+        if dynamic_inputs.len() != graph.inputs.len() {
+            bail!(
+                "graph {name}: {} dynamic inputs given, signature has {}",
+                dynamic_inputs.len(),
+                graph.inputs.len()
+            );
+        }
+        for (got, spec) in dynamic_inputs.iter().zip(&graph.inputs) {
+            if got.shape != spec.shape || got.dtype != spec.dtype {
+                bail!(
+                    "graph {name}: input `{}` expects {:?}{:?}, got {:?}{:?}",
+                    spec.name, spec.dtype, spec.shape, got.dtype, got.shape
+                );
+            }
+        }
+
+        // Dynamic inputs become fresh device buffers; weights are already
+        // resident (uploaded once at load).
+        let dyn_bufs: Vec<PjRtBuffer> = dynamic_inputs
+            .iter()
+            .map(|t| self.host_to_buffer(t))
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&PjRtBuffer> = dyn_bufs.iter().collect();
+        if !graph.weight_inputs.is_empty() {
+            let prec = Manifest::weight_precision_of(name);
+            let wmap = self
+                .weights
+                .get(prec)
+                .ok_or_else(|| anyhow!("no weights for precision `{prec}`"))?;
+            for wname in &graph.weight_inputs {
+                let buf = wmap
+                    .get(wname)
+                    .ok_or_else(|| anyhow!("weight `{wname}` missing"))?;
+                args.push(buf);
+            }
+        }
+
+        let exes = self.executables.borrow();
+        let exe = exes.get(name).expect("ensured above");
+        let result = exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} outputs: {e:?}"))?;
+        // Graphs are lowered with return_tuple=True.
+        let parts = out_lit.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Upload a host tensor as a device buffer.
+    fn host_to_buffer(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        upload(&self.client, t)
+    }
+
+    /// Names of every graph in the manifest (for warmup / diagnostics).
+    pub fn graph_names(&self) -> Vec<String> {
+        self.manifest.graphs.keys().cloned().collect()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.borrow().len()
+    }
+}

@@ -1,0 +1,310 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `manifest.json` describes every lowered graph (input signature + weight
+//! tail) and the weight binary layouts. The runtime validates shapes against
+//! this before anything touches PJRT, so mismatches fail loudly at load
+//! time rather than as cryptic XLA errors mid-request.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor::Dt;
+use crate::util::json::Json;
+
+/// One graph input (or output) signature entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dt,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            name: v.req_str("name")?.to_string(),
+            dtype: Dt::parse(v.req_str("dtype")?)?,
+            shape,
+        })
+    }
+}
+
+/// One AOT-lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphEntry {
+    pub name: String,
+    pub file: String,
+    /// Dynamic (per-call) inputs, in positional order.
+    pub inputs: Vec<TensorSpec>,
+    /// Weight tensor names appended after the dynamic inputs.
+    pub weight_inputs: Vec<String>,
+}
+
+/// A tensor slice inside a weight binary.
+#[derive(Debug, Clone)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dtype: Dt,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One weight binary (per weight precision).
+#[derive(Debug, Clone)]
+pub struct WeightFile {
+    pub file: String,
+    pub tensors: Vec<WeightTensor>,
+}
+
+/// The served model's architecture as recorded by the AOT step.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq_len: usize,
+    pub group_size: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ManifestModel,
+    pub decode_batches: Vec<usize>,
+    /// Decode context buckets (padded KV extents the decode graphs were
+    /// compiled at; the engine picks the smallest covering the batch).
+    pub decode_t: Vec<usize>,
+    pub prefill_chunks: Vec<usize>,
+    pub graphs: BTreeMap<String, GraphEntry>,
+    pub weights: BTreeMap<String, WeightFile>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+
+        let m = v.get("model").ok_or_else(|| anyhow!("missing `model`"))?;
+        let model = ManifestModel {
+            name: m.req_str("name")?.to_string(),
+            n_layers: m.req_usize("n_layers")?,
+            d_model: m.req_usize("d_model")?,
+            n_heads: m.req_usize("n_heads")?,
+            n_kv_heads: m.req_usize("n_kv_heads")?,
+            head_dim: m.req_usize("head_dim")?,
+            d_ff: m.req_usize("d_ff")?,
+            vocab_size: m.req_usize("vocab_size")?,
+            max_seq_len: m.req_usize("max_seq_len")?,
+            group_size: m.req_usize("group_size")?,
+        };
+
+        let to_usizes = |key: &str| -> Result<Vec<usize>> {
+            v.req_arr(key)?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad `{key}` entry")))
+                .collect()
+        };
+
+        let mut graphs = BTreeMap::new();
+        for g in v.req_arr("graphs")? {
+            let name = g.req_str("name")?.to_string();
+            let inputs = g
+                .req_arr("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let weight_inputs = g
+                .req_arr("weight_inputs")?
+                .iter()
+                .map(|w| {
+                    w.as_str().map(String::from).ok_or_else(|| anyhow!("bad weight name"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            graphs.insert(
+                name.clone(),
+                GraphEntry { name, file: g.req_str("file")?.to_string(), inputs, weight_inputs },
+            );
+        }
+
+        let mut weights = BTreeMap::new();
+        let wobj = v
+            .get("weights")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing `weights`"))?;
+        for (prec, wf) in wobj {
+            let tensors = wf
+                .req_arr("tensors")?
+                .iter()
+                .map(|t| {
+                    Ok(WeightTensor {
+                        name: t.req_str("name")?.to_string(),
+                        dtype: Dt::parse(t.req_str("dtype")?)?,
+                        shape: t
+                            .req_arr("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?,
+                        offset: t.req_usize("offset")?,
+                        nbytes: t.req_usize("nbytes")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            weights.insert(
+                prec.clone(),
+                WeightFile { file: wf.req_str("file")?.to_string(), tensors },
+            );
+        }
+
+        let decode_t = to_usizes("decode_t").unwrap_or_else(|_| vec![model.max_seq_len]);
+        let manifest = Self {
+            dir,
+            model,
+            decode_batches: to_usizes("decode_batches")?,
+            decode_t,
+            prefill_chunks: to_usizes("prefill_chunks")?,
+            graphs,
+            weights,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.graphs.is_empty() {
+            bail!("manifest has no graphs");
+        }
+        for g in self.graphs.values() {
+            if !g.weight_inputs.is_empty() {
+                // Every weight name must resolve in some weight file.
+                let prec = if g.name.contains("_w4_") || g.name.ends_with("_w4") {
+                    "w4"
+                } else {
+                    "w16"
+                };
+                let wf = self
+                    .weights
+                    .get(prec)
+                    .ok_or_else(|| anyhow!("graph {} needs weights `{prec}`", g.name))?;
+                for w in &g.weight_inputs {
+                    if !wf.tensors.iter().any(|t| &t.name == w) {
+                        bail!("graph {}: weight `{w}` not in weights_{prec}", g.name);
+                    }
+                }
+            }
+        }
+        for (prec, wf) in &self.weights {
+            let mut cursor = 0usize;
+            for t in &wf.tensors {
+                if t.offset != cursor {
+                    bail!("weights_{prec}: tensor {} offset {} != cursor {cursor}", t.name, t.offset);
+                }
+                let expect: usize = t.shape.iter().product::<usize>() * t.dtype.size();
+                if expect != t.nbytes {
+                    bail!("weights_{prec}: tensor {} nbytes mismatch", t.name);
+                }
+                cursor += t.nbytes;
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight precision key a graph name implies (`w4` / `w16`).
+    pub fn weight_precision_of(graph_name: &str) -> &'static str {
+        if graph_name.contains("_w4_") {
+            "w4"
+        } else {
+            "w16"
+        }
+    }
+
+    /// Decode graph name for a precision pair + batch + context bucket.
+    pub fn decode_graph(wprec: &str, kvprec: &str, batch: usize, t_pad: usize) -> String {
+        format!("decode_{wprec}_{kvprec}_b{batch}_t{t_pad}")
+    }
+
+    /// Prefill graph name for a precision pair + chunk.
+    pub fn prefill_graph(wprec: &str, kvprec: &str, chunk: usize) -> String {
+        format!("prefill_{wprec}_{kvprec}_s{chunk}")
+    }
+
+    pub fn hlo_path(&self, graph: &GraphEntry) -> PathBuf {
+        self.dir.join(&graph.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that need real artifacts live in `rust/tests/`; here we cover
+    /// pure parsing with a synthetic manifest.
+    fn synthetic_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{
+            "model": {"name": "tiny", "n_layers": 1, "d_model": 8, "n_heads": 2,
+                      "n_kv_heads": 1, "head_dim": 4, "d_ff": 16, "vocab_size": 32,
+                      "max_seq_len": 64, "group_size": 8, "seed": 0},
+            "decode_batches": [1, 2],
+            "prefill_chunks": [8],
+            "graphs": [
+                {"name": "decode_w16_kv16_b1", "file": "d.hlo.txt",
+                 "inputs": [{"name": "tokens", "dtype": "i32", "shape": [1]}],
+                 "weight_inputs": ["embed"]}
+            ],
+            "weights": {
+                "w16": {"file": "weights_w16.bin", "tensors": [
+                    {"name": "embed", "dtype": "f32", "shape": [32, 8],
+                     "offset": 0, "nbytes": 1024}
+                ]}
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = synthetic_dir();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab_size, 32);
+        assert_eq!(m.decode_batches, vec![1, 2]);
+        let g = &m.graphs["decode_w16_kv16_b1"];
+        assert_eq!(g.inputs[0].dtype, Dt::I32);
+        assert_eq!(g.weight_inputs, vec!["embed"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn graph_name_helpers() {
+        assert_eq!(Manifest::decode_graph("w4", "kv8", 4, 128), "decode_w4_kv8_b4_t128");
+        assert_eq!(Manifest::prefill_graph("w16", "kv16", 32), "prefill_w16_kv16_s32");
+        assert_eq!(Manifest::weight_precision_of("decode_w4_kv8_b4_t128"), "w4");
+        assert_eq!(Manifest::weight_precision_of("decode_w16_kv16_b1"), "w16");
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime layer: artifact manifest, host tensors, and the executable
+//! cache that runs the AOT-compiled graphs from the request path.
+//!
+//! Python (`python/compile/aot.py`) lowers the Layer-2 graphs to HLO text at
+//! build time; this module loads and executes them via the `xla` crate's
+//! PJRT CPU client. No Python anywhere at runtime.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use manifest::{GraphEntry, Manifest, TensorSpec};
+pub use tensor::{Dt, HostTensor};

@@ -1,0 +1,241 @@
+//! Host-side tensors and conversions to/from PJRT `Literal`s.
+//!
+//! The engine moves four dtypes across the PJRT boundary: `f32` activations
+//! and scales, `i32` tokens/lengths, and `i8`/`u8` quantized codes. A
+//! [`HostTensor`] owns raw little-endian bytes plus shape/dtype metadata —
+//! the same layout the weight binaries use, so weight loading is a single
+//! read + slice.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ArrayShape, ElementType, Literal};
+
+/// Element types crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dt {
+    F32,
+    I32,
+    I8,
+    U8,
+}
+
+impl Dt {
+    pub fn size(self) -> usize {
+        match self {
+            Dt::F32 | Dt::I32 => 4,
+            Dt::I8 | Dt::U8 => 1,
+        }
+    }
+
+    pub fn to_element_type(self) -> ElementType {
+        match self {
+            Dt::F32 => ElementType::F32,
+            Dt::I32 => ElementType::S32,
+            Dt::I8 => ElementType::S8,
+            Dt::U8 => ElementType::U8,
+        }
+    }
+
+    /// Parse the manifest's dtype names.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dt::F32,
+            "i32" => Dt::I32,
+            "i8" => Dt::I8,
+            "u8" => Dt::U8,
+            other => bail!("unsupported dtype `{other}`"),
+        })
+    }
+}
+
+/// An owned host tensor: raw bytes + shape + dtype.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: Dt,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn new(dtype: Dt, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let expect: usize = shape.iter().product::<usize>() * dtype.size();
+        if data.len() != expect {
+            bail!("tensor data {} bytes, shape {:?} needs {}", data.len(), shape, expect);
+        }
+        Ok(Self { dtype, shape, data })
+    }
+
+    pub fn zeros(dtype: Dt, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product::<usize>() * dtype.size();
+        Self { dtype, shape, data: vec![0u8; n] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, vals: &[f32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::new(Dt::F32, shape, data)
+    }
+
+    pub fn from_i32(shape: Vec<usize>, vals: &[i32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::new(Dt::I32, shape, data)
+    }
+
+    pub fn from_i8(shape: Vec<usize>, vals: &[i8]) -> Result<Self> {
+        Self::new(Dt::I8, shape, vals.iter().map(|&v| v as u8).collect())
+    }
+
+    pub fn from_u8(shape: Vec<usize>, vals: &[u8]) -> Result<Self> {
+        Self::new(Dt::U8, shape, vals.to_vec())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dt::F32 {
+            bail!("tensor is {:?}, not f32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dt::I32 {
+            bail!("tensor is {:?}, not i32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i8(&self) -> Result<&[u8]> {
+        if self.dtype != Dt::I8 {
+            bail!("tensor is {:?}, not i8", self.dtype);
+        }
+        Ok(&self.data)
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != Dt::U8 {
+            bail!("tensor is {:?}, not u8", self.dtype);
+        }
+        Ok(&self.data)
+    }
+
+    /// Convert to a PJRT `Literal` (copies the bytes).
+    pub fn to_literal(&self) -> Result<Literal> {
+        Literal::create_from_shape_and_untyped_data(
+            self.dtype.to_element_type(),
+            &self.shape,
+            &self.data,
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    /// Convert a PJRT `Literal` back to a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let arr = ArrayShape::try_from(&shape).map_err(|e| anyhow!("array shape: {e:?}"))?;
+        let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+        let dtype = match arr.ty() {
+            ElementType::F32 => Dt::F32,
+            ElementType::S32 => Dt::I32,
+            ElementType::S8 => Dt::I8,
+            ElementType::U8 => Dt::U8,
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        let data = literal_bytes(lit, dtype, dims.iter().product())
+            .context("literal raw copy")?;
+        Ok(Self { dtype, shape: dims, data })
+    }
+}
+
+/// Copy a literal's elements out as little-endian bytes. Uses the crate's
+/// typed `copy_raw_to` (a direct memcpy) per dtype.
+fn literal_bytes(lit: &Literal, dtype: Dt, n: usize) -> Result<Vec<u8>> {
+    match dtype {
+        Dt::F32 => {
+            let mut v = vec![0f32; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("{e:?}"))?;
+            let mut out = Vec::with_capacity(n * 4);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            Ok(out)
+        }
+        Dt::I32 => {
+            let mut v = vec![0i32; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("{e:?}"))?;
+            let mut out = Vec::with_capacity(n * 4);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            Ok(out)
+        }
+        Dt::I8 => {
+            let mut v = vec![0i8; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("{e:?}"))?;
+            Ok(v.into_iter().map(|x| x as u8).collect())
+        }
+        Dt::U8 => {
+            let mut v = vec![0u8; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("{e:?}"))?;
+            Ok(v)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_bytes() {
+        let t = HostTensor::from_f32(vec![2, 2], &[1.0, -2.5, 3.25, 0.0]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.element_count(), 4);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::from_i32(vec![3], &[-1, 0, 7]).unwrap();
+        assert_eq!(t.as_i32().unwrap(), vec![-1, 0, 7]);
+    }
+
+    #[test]
+    fn i8_stores_twos_complement() {
+        let t = HostTensor::from_i8(vec![2], &[-1, 7]).unwrap();
+        assert_eq!(t.as_i8().unwrap(), &[0xFF, 7]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::new(Dt::F32, vec![2], vec![0u8; 4]).is_err());
+        assert!(HostTensor::new(Dt::U8, vec![4], vec![0u8; 4]).is_ok());
+    }
+
+    #[test]
+    fn wrong_dtype_accessors_fail() {
+        let t = HostTensor::zeros(Dt::U8, vec![4]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_u8().is_ok());
+    }
+
+    #[test]
+    fn dt_parse() {
+        assert_eq!(Dt::parse("f32").unwrap(), Dt::F32);
+        assert_eq!(Dt::parse("u8").unwrap(), Dt::U8);
+        assert!(Dt::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! JSON-lines TCP serving front-end.
+//!
+//! Protocol (one JSON object per line):
+//!   → `{"prompt": [1,2,3], "max_new_tokens": 16}`
+//!   ← `{"id": 0, "tokens": [...], "finish": "length", "ttft_s": ..., "latency_s": ...}`
+//!
+//! The listener thread accepts connections and forwards requests over a
+//! channel to the engine thread, which loops `engine.step()`; responses
+//! travel back through per-request channels. One engine thread (the PJRT
+//! executables are not thread-safe to share mutably) — concurrency comes
+//! from continuous batching, exactly like production single-GPU serving.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use crate::util::json::{arr, obj, Json};
+
+/// A request forwarded from a connection to the engine thread.
+struct Inbound {
+    req: Request,
+    reply: Sender<RequestOutput>,
+}
+
+/// Serve `engine` on `addr` (e.g. `127.0.0.1:7181`).
+///
+/// The engine loop runs on the **calling** thread (PJRT handles are not
+/// `Send`); a listener thread accepts connections and forwards requests
+/// over a channel. Blocks forever unless `max_requests` is set (tests /
+/// bounded runs): the loop returns after serving that many requests.
+pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("turbomind serving on {addr}");
+    let (tx, rx): (Sender<Inbound>, Receiver<Inbound>) = mpsc::channel();
+
+    // Listener thread: accept and spawn per-connection readers.
+    thread::spawn(move || {
+        let mut accepted = 0usize;
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, tx) {
+                    eprintln!("connection error: {e}");
+                }
+            });
+            accepted += 1;
+            if let Some(maxr) = max_requests {
+                if accepted >= maxr {
+                    break;
+                }
+            }
+        }
+        // tx dropped here once the accept loop ends.
+    });
+
+    // Engine loop on this thread: admit from the channel, step, dispatch.
+    let mut pending: Vec<(u64, Sender<RequestOutput>)> = Vec::new();
+    let mut served = 0usize;
+    loop {
+        // Admit all queued requests without blocking; block only when the
+        // engine is idle.
+        loop {
+            let inbound = if engine.has_work() {
+                match rx.try_recv() {
+                    Ok(i) => i,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+                }
+            } else {
+                match rx.recv() {
+                    Ok(i) => i,
+                    Err(_) => return Ok(()), // listener and all conns gone
+                }
+            };
+            match engine.submit(inbound.req) {
+                Ok(id) => pending.push((id, inbound.reply)),
+                Err(e) => {
+                    // Report rejection as an aborted output.
+                    let _ = inbound.reply.send(RequestOutput {
+                        id: u64::MAX,
+                        tokens: vec![],
+                        finish: FinishReason::Aborted,
+                        ttft: f64::NAN,
+                        latency: 0.0,
+                        prompt_len: 0,
+                    });
+                    eprintln!("rejected request: {e}");
+                }
+            }
+        }
+        engine.step()?;
+        for out in engine.take_outputs() {
+            if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
+                let (_, reply) = pending.remove(pos);
+                let _ = reply.send(out);
+                served += 1;
+            }
+        }
+        if let Some(maxr) = max_requests {
+            if served >= maxr && !engine.has_work() {
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Inbound>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Inbound { req, reply: rtx })
+                    .map_err(|_| anyhow!("engine gone"))?;
+                let out = rrx.recv().map_err(|_| anyhow!("engine dropped request"))?;
+                encode_output(&out)
+            }
+            Err(e) => obj([("error", Json::from(e.to_string()))]),
+        };
+        writer.write_all(response.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    eprintln!("connection {peer} closed");
+    Ok(())
+}
+
+/// Parse a request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let prompt = v
+        .req_arr("prompt")
+        .map_err(|e| anyhow!("{e}"))?
+        .iter()
+        .map(|t| t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow!("bad token")))
+        .collect::<Result<Vec<i32>>>()?;
+    let max_new = v.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(16);
+    let stop = v.get("stop_token").and_then(Json::as_i64).map(|x| x as i32);
+    Ok(Request { prompt, max_new_tokens: max_new, stop_token: stop })
+}
+
+/// Encode an output line.
+pub fn encode_output(out: &RequestOutput) -> Json {
+    let finish = match out.finish {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::Aborted => "aborted",
+    };
+    obj([
+        ("id", Json::from(out.id as f64)),
+        ("tokens", arr(out.tokens.iter().map(|&t| Json::from(t as i64)))),
+        ("finish", Json::from(finish)),
+        ("ttft_s", Json::from(out.ttft)),
+        ("latency_s", Json::from(out.latency)),
+        ("prompt_len", Json::from(out.prompt_len)),
+    ])
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    /// Send one request and wait for its response line.
+    pub fn generate(&mut self, prompt: &[i32], max_new_tokens: usize) -> Result<Json> {
+        let line = obj([
+            ("prompt", arr(prompt.iter().map(|&t| Json::from(t as i64)))),
+            ("max_new_tokens", Json::from(max_new_tokens)),
+        ]);
+        self.stream.write_all(line.dump().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Json::parse(&buf).map_err(|e| anyhow!("bad response: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_full() {
+        let r = parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 5, "stop_token": 0}"#)
+            .unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 5);
+        assert_eq!(r.stop_token, Some(0));
+    }
+
+    #[test]
+    fn parse_request_defaults() {
+        let r = parse_request(r#"{"prompt": [7]}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(r.stop_token, None);
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"max_new_tokens": 5}"#).is_err());
+        assert!(parse_request(r#"{"prompt": ["a"]}"#).is_err());
+    }
+
+    #[test]
+    fn encode_roundtrip() {
+        let out = RequestOutput {
+            id: 3,
+            tokens: vec![9, 8],
+            finish: FinishReason::Length,
+            ttft: 0.25,
+            latency: 1.5,
+            prompt_len: 4,
+        };
+        let j = encode_output(&out);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.req_usize("id").unwrap(), 3);
+        assert_eq!(parsed.req_str("finish").unwrap(), "length");
+        assert_eq!(parsed.req_arr("tokens").unwrap().len(), 2);
+    }
+}

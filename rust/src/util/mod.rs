@@ -1,0 +1,86 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The build environment is fully offline, so substrates that would normally
+//! come from crates.io (`rand`, `serde_json`, `clap`, `proptest`) are
+//! implemented here from scratch: a deterministic PRNG, a minimal JSON
+//! reader/writer, a CLI argument parser, and a tiny property-testing driver.
+
+pub mod args;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn ceil_to(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Ceiling division for `usize`.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Format a byte count with binary units (e.g. `1.50 MiB`).
+pub fn human_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit + 1 < UNITS.len() {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit (`ns`/`µs`/`ms`/`s`).
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_helpers() {
+        assert_eq!(ceil_to(0, 8), 0);
+        assert_eq!(ceil_to(1, 8), 8);
+        assert_eq!(ceil_to(8, 8), 8);
+        assert_eq!(ceil_to(9, 8), 16);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.5e-9).ends_with("ns"));
+        assert!(human_time(2.5e-6).ends_with("µs"));
+        assert!(human_time(2.5e-3).ends_with("ms"));
+        assert!(human_time(2.5).ends_with('s'));
+    }
+}

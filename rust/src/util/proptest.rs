@@ -1,0 +1,101 @@
+//! Minimal property-testing driver (the offline build has no `proptest`).
+//!
+//! A property is a closure over a [`Gen`]; the driver runs it for a fixed
+//! number of deterministic cases and, on failure, reports the case seed so
+//! the exact input can be replayed by seeding a `Gen` directly.
+//!
+//! This intentionally skips shrinking: cases are seeded independently, so a
+//! failure is already reproducible from its printed seed, which has proven
+//! sufficient for the coordinator/kv-cache invariants checked in this repo.
+
+use super::rng::Rng;
+
+/// Case-local generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.uniform(lo as f64, hi as f64) as f32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` deterministic cases derived from `base_seed`.
+/// Panics (failing the enclosing test) with the case seed on first failure.
+pub fn run_prop(name: &str, base_seed: u64, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64)
+            .wrapping_mul(0xD1B54A32D192ED03);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property `{name}` failed on case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("sum-commutes", 1, 50, |g| {
+            let a = g.usize_in(0, 1000);
+            let b = g.usize_in(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_prop("always-fails", 2, 3, |_| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<usize> = vec![];
+        run_prop("collect", 3, 10, |g| first.push(g.usize_in(0, 1 << 30)));
+        let mut second: Vec<usize> = vec![];
+        run_prop("collect", 3, 10, |g| second.push(g.usize_in(0, 1 << 30)));
+        assert_eq!(first, second);
+    }
+}

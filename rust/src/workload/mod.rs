@@ -1,0 +1,209 @@
+//! Workload generation: Poisson arrivals over synthetic length
+//! distributions matching the paper's §5.1 setup.
+//!
+//! * **ShareGPT-like chat** — log-normal prompt/generation lengths fitted
+//!   to the published ShareGPT statistics (mean prompt ≈ 161 tokens, mean
+//!   generation ≈ 338 tokens) used for the general serving figures.
+//! * **Reasoning (NuminaMath / AIMO-style)** — short prompts with long
+//!   chain-of-thought generations (QwQ workloads, Fig 16).
+//! * Requests arrive by a Poisson process at a configurable rate, exactly
+//!   the methodology the paper takes from AlpaServe/HexGen (§5.1).
+
+use crate::util::rng::Rng;
+
+/// One synthetic request in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+}
+
+/// Length distribution family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// ShareGPT-style chat (general serving figures).
+    Chat,
+    /// Mathematical reasoning (Fig 16 "math").
+    ReasoningMath,
+    /// AIMO validation (Fig 16 "validation").
+    ReasoningValidation,
+}
+
+impl WorkloadKind {
+    /// (prompt mu/sigma, gen mu/sigma) of the underlying log-normals, plus
+    /// clamping bounds. Parameters chosen so the means match the published
+    /// dataset statistics (see module docs).
+    fn params(self) -> LenParams {
+        match self {
+            // ln-mean ≈ ln(161) - σ²/2 keeps E[x] ≈ 161 at σ = 0.9.
+            WorkloadKind::Chat => LenParams {
+                prompt_mu: 4.68,
+                prompt_sigma: 0.9,
+                gen_mu: 5.42,
+                gen_sigma: 0.85,
+                min_prompt: 4,
+                max_prompt: 2048,
+                min_gen: 8,
+                max_gen: 2048,
+            },
+            // Short problem statements, long CoT generations.
+            WorkloadKind::ReasoningMath => LenParams {
+                prompt_mu: 4.6,
+                prompt_sigma: 0.5,
+                gen_mu: 7.0,
+                gen_sigma: 0.6,
+                min_prompt: 16,
+                max_prompt: 512,
+                min_gen: 256,
+                max_gen: 8192,
+            },
+            WorkloadKind::ReasoningValidation => LenParams {
+                prompt_mu: 5.0,
+                prompt_sigma: 0.5,
+                gen_mu: 6.6,
+                gen_sigma: 0.5,
+                min_prompt: 32,
+                max_prompt: 768,
+                min_gen: 128,
+                max_gen: 4096,
+            },
+        }
+    }
+}
+
+struct LenParams {
+    prompt_mu: f64,
+    prompt_sigma: f64,
+    gen_mu: f64,
+    gen_sigma: f64,
+    min_prompt: usize,
+    max_prompt: usize,
+    min_gen: usize,
+    max_gen: usize,
+}
+
+/// Trace generator.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub kind: WorkloadKind,
+    /// Poisson arrival rate, requests/second.
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(kind: WorkloadKind, rate: f64, seed: u64) -> Self {
+        Self { kind, rate, seed }
+    }
+
+    /// Generate `n` requests.
+    pub fn generate(&self, n: usize) -> Vec<TraceRequest> {
+        let p = self.kind.params();
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += rng.exp_gap(self.rate);
+                let prompt = (rng.lognormal(p.prompt_mu, p.prompt_sigma) as usize)
+                    .clamp(p.min_prompt, p.max_prompt);
+                let gen = (rng.lognormal(p.gen_mu, p.gen_sigma) as usize)
+                    .clamp(p.min_gen, p.max_gen);
+                TraceRequest { arrival_s: t, prompt_tokens: prompt, gen_tokens: gen }
+            })
+            .collect()
+    }
+
+    /// Generate with lengths rescaled to fit a smaller context (used to
+    /// drive the tiny PJRT model with the same *shape* of distribution).
+    pub fn generate_scaled(&self, n: usize, max_prompt: usize, max_gen: usize) -> Vec<TraceRequest> {
+        self.generate(n)
+            .into_iter()
+            .map(|r| TraceRequest {
+                arrival_s: r.arrival_s,
+                prompt_tokens: (r.prompt_tokens * max_prompt / 2048).clamp(1, max_prompt),
+                gen_tokens: (r.gen_tokens * max_gen / 2048).clamp(1, max_gen),
+            })
+            .collect()
+    }
+
+    /// Deterministic prompt token ids for a request (synthetic "content").
+    pub fn prompt_tokens(&self, req_index: usize, len: usize, vocab: usize) -> Vec<i32> {
+        let mut rng = Rng::new(self.seed ^ (req_index as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        (0..len).map(|_| rng.below(vocab) as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_poisson_at_rate() {
+        let g = WorkloadGen::new(WorkloadKind::Chat, 5.0, 1);
+        let n = 20_000;
+        let trace = g.generate(n);
+        let total = trace.last().unwrap().arrival_s;
+        let rate = n as f64 / total;
+        assert!((rate - 5.0).abs() < 0.2, "rate {rate}");
+        // Arrivals strictly increasing.
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn chat_lengths_match_sharegpt_stats() {
+        let g = WorkloadGen::new(WorkloadKind::Chat, 1.0, 2);
+        let trace = g.generate(20_000);
+        let pm: f64 =
+            trace.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / trace.len() as f64;
+        let gm: f64 =
+            trace.iter().map(|r| r.gen_tokens as f64).sum::<f64>() / trace.len() as f64;
+        assert!((120.0..210.0).contains(&pm), "prompt mean {pm} (ShareGPT ≈ 161)");
+        assert!((270.0..420.0).contains(&gm), "gen mean {gm} (ShareGPT ≈ 338)");
+    }
+
+    #[test]
+    fn reasoning_has_long_generations() {
+        let chat = WorkloadGen::new(WorkloadKind::Chat, 1.0, 3).generate(5000);
+        let math = WorkloadGen::new(WorkloadKind::ReasoningMath, 1.0, 3).generate(5000);
+        let mean = |t: &[TraceRequest]| {
+            t.iter().map(|r| r.gen_tokens as f64).sum::<f64>() / t.len() as f64
+        };
+        assert!(mean(&math) > 2.0 * mean(&chat), "math {} chat {}", mean(&math), mean(&chat));
+        // And short prompts relative to their generations.
+        let pmean =
+            math.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / math.len() as f64;
+        assert!(pmean < mean(&math) / 3.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadGen::new(WorkloadKind::Chat, 2.0, 9).generate(100);
+        let b = WorkloadGen::new(WorkloadKind::Chat, 2.0, 9).generate(100);
+        assert_eq!(a, b);
+        let c = WorkloadGen::new(WorkloadKind::Chat, 2.0, 10).generate(100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn scaled_lengths_fit_tiny_context() {
+        let g = WorkloadGen::new(WorkloadKind::Chat, 4.0, 5);
+        for r in g.generate_scaled(2000, 128, 64) {
+            assert!((1..=128).contains(&r.prompt_tokens));
+            assert!((1..=64).contains(&r.gen_tokens));
+        }
+    }
+
+    #[test]
+    fn prompt_tokens_in_vocab_and_deterministic() {
+        let g = WorkloadGen::new(WorkloadKind::Chat, 1.0, 7);
+        let a = g.prompt_tokens(3, 50, 2048);
+        let b = g.prompt_tokens(3, 50, 2048);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (0..2048).contains(&t)));
+        assert_ne!(a, g.prompt_tokens(4, 50, 2048));
+    }
+}

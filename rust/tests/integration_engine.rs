@@ -1,0 +1,209 @@
+//! End-to-end engine integration tests: submit → prefill → decode → finish
+//! against the real AOT artifacts, across precision variants and scheduler
+//! policies.
+
+use turbomind::config::engine::SchedulerPolicy;
+use turbomind::config::{DType, EngineConfig, PrecisionFormat};
+use turbomind::coordinator::{Engine, FinishReason, Request};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TM_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg(precision: &str) -> Option<EngineConfig> {
+    let dir = artifacts_dir()?;
+    Some(EngineConfig {
+        artifacts_dir: dir,
+        precision: precision.parse().unwrap(),
+        max_batch: 4,
+        kv_block_tokens: 16,
+        kv_pool_tokens: 16 * 256,
+        max_new_tokens: 8,
+        prefill_chunk: 128,
+        ..EngineConfig::default()
+    })
+}
+
+macro_rules! engine_or_skip {
+    ($prec:expr) => {
+        match cfg($prec) {
+            Some(c) => Engine::new(c).expect("engine"),
+            None => {
+                eprintln!("SKIP: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn single_request_completes() {
+    let mut e = engine_or_skip!("W4A16KV8");
+    let id = e.submit(Request::new(vec![5, 17, 99, 3], 6)).unwrap();
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    let o = &outs[0];
+    assert_eq!(o.id, id);
+    assert_eq!(o.tokens.len(), 6);
+    assert_eq!(o.finish, FinishReason::Length);
+    assert_eq!(o.prompt_len, 4);
+    assert!(o.ttft > 0.0 && o.ttft <= o.latency);
+    // All tokens in vocab.
+    assert!(o.tokens.iter().all(|&t| (0..2048).contains(&t)));
+    // Pool fully reclaimed.
+    assert_eq!(e.kv_pool().free_blocks(), e.kv_pool().total_blocks());
+}
+
+#[test]
+fn batch_of_requests_all_complete() {
+    let mut e = engine_or_skip!("W4A16KV8");
+    let mut ids = vec![];
+    for i in 0..6 {
+        ids.push(e.submit(Request::new(vec![i as i32 + 1, 40, 7], 5)).unwrap());
+    }
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 6);
+    for o in &outs {
+        assert_eq!(o.tokens.len(), 5, "req {}", o.id);
+    }
+    assert!(e.stats.decode_iters > 0);
+    assert!(e.stats.prefill_iters >= 6);
+}
+
+#[test]
+fn deterministic_given_seed_and_greedy() {
+    let run = || {
+        let mut e = engine_or_skip_val().expect("artifacts");
+        e.submit(Request::new(vec![11, 22, 33, 44, 55], 8)).unwrap();
+        e.run_to_completion().unwrap()[0].tokens.clone()
+    };
+    fn engine_or_skip_val() -> Option<Engine> {
+        cfg("W4A16KV8").map(|c| Engine::new(c).unwrap())
+    }
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn kv_precisions_agree_on_early_tokens() {
+    // The same greedy request under KV8 / KV4 / KV16 should agree on at
+    // least the first generated token (accuracy-equivalence smoke; the
+    // Table 1 analogue lives in the accuracy bench).
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let tok_of = |prec: &str| {
+        let mut e = Engine::new(cfg(prec).unwrap()).unwrap();
+        e.submit(Request::new(vec![9, 8, 7, 6, 5, 4], 3)).unwrap();
+        e.run_to_completion().unwrap()[0].tokens.clone()
+    };
+    let t16 = tok_of("W4A16KV16");
+    let t8 = tok_of("W4A16KV8");
+    let t4 = tok_of("W4A16KV4");
+    assert_eq!(t16[0], t8[0], "kv8 diverged at the first token");
+    assert_eq!(t16[0], t4[0], "kv4 diverged at the first token");
+}
+
+#[test]
+fn w16_baseline_runs() {
+    let mut e = engine_or_skip!("W16A16KV16");
+    e.submit(Request::new(vec![100, 200, 300], 4)).unwrap();
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs[0].tokens.len(), 4);
+}
+
+#[test]
+fn long_prompt_uses_chunked_prefill() {
+    let mut e = engine_or_skip!("W4A16KV8");
+    let prompt: Vec<i32> = (0..200).map(|i| (i * 7 + 3) % 2048).collect();
+    e.submit(Request::new(prompt, 4)).unwrap();
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs[0].tokens.len(), 4);
+    // 200 tokens at chunk 128 → 2 prefill iterations (128 + 72-pad-to-128).
+    assert!(e.stats.prefill_iters >= 2, "prefill iters {}", e.stats.prefill_iters);
+    assert_eq!(e.stats.prompt_tokens, 200);
+}
+
+#[test]
+fn stop_token_ends_generation() {
+    let mut e = engine_or_skip!("W4A16KV8");
+    // Discover the greedy continuation, then rerun with it as stop token.
+    e.submit(Request::new(vec![42, 43, 44], 4)).unwrap();
+    let first = e.run_to_completion().unwrap()[0].tokens.clone();
+
+    let mut e2 = Engine::new(cfg("W4A16KV8").unwrap()).unwrap();
+    let mut req = Request::new(vec![42, 43, 44], 10);
+    req.stop_token = Some(first[1]);
+    e2.submit(req).unwrap();
+    let outs = e2.run_to_completion().unwrap();
+    assert_eq!(outs[0].finish, FinishReason::Stop);
+    assert_eq!(outs[0].tokens.len(), 2);
+}
+
+#[test]
+fn rejects_invalid_requests() {
+    let mut e = engine_or_skip!("W4A16KV8");
+    assert!(e.submit(Request::new(vec![], 4)).is_err(), "empty prompt");
+    assert!(e.submit(Request::new(vec![1; 600], 4)).is_err(), "over context");
+    assert!(e.submit(Request::new(vec![5000], 4)).is_err(), "token out of vocab");
+    assert!(e.submit(Request::new(vec![-1], 4)).is_err(), "negative token");
+}
+
+#[test]
+fn static_scheduler_completes_all() {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut c = cfg("W4A16KV8").unwrap();
+    c.scheduler = SchedulerPolicy::Static;
+    let mut e = Engine::new(c).unwrap();
+    for i in 0..5 {
+        e.submit(Request::new(vec![i + 1, 2, 3], 4)).unwrap();
+    }
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 5);
+}
+
+#[test]
+fn greedy_outputs_match_across_schedulers() {
+    // Iteration-level batching must not change greedy results.
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let run = |policy| {
+        let mut c = cfg("W4A16KV8").unwrap();
+        c.scheduler = policy;
+        let mut e = Engine::new(c).unwrap();
+        for i in 0..3 {
+            e.submit(Request::new(vec![50 + i, 60, 70, 80], 5)).unwrap();
+        }
+        let mut outs = e.run_to_completion().unwrap();
+        outs.sort_by_key(|o| o.id);
+        outs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(
+        run(SchedulerPolicy::Continuous),
+        run(SchedulerPolicy::Static),
+        "scheduler changed greedy outputs"
+    );
+}
+
+#[test]
+fn precision_formats_parse_to_variants() {
+    // Engine creation must fail cleanly for formats with no artifacts.
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut c = cfg("W4A16KV8").unwrap();
+    c.precision = PrecisionFormat::new(DType::Int8, DType::F16, DType::F16);
+    assert!(Engine::new(c).is_err(), "w8 has no compiled graphs");
+}

@@ -1,0 +1,228 @@
+//! Integration tests: the PJRT runtime against real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skipped with a clear message
+//! otherwise). These tests prove the Python-AOT → Rust-PJRT bridge end to
+//! end: HLO text parses, compiles, executes, and the numerics match
+//! Rust-side references for the Layer-1 kernels.
+
+use turbomind::quant::{self, GroupwiseQuant, QuantizedMatrix};
+use turbomind::runtime::{Dt, HostTensor, Runtime};
+use turbomind::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! runtime_or_skip {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => Runtime::load(&dir).expect("runtime load"),
+            None => {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_lists_graphs() {
+    let rt = runtime_or_skip!();
+    assert!(rt.manifest.graphs.len() >= 20, "got {}", rt.manifest.graphs.len());
+    assert!(rt.manifest.graphs.contains_key("decode_w4_kv8_b1_t128"));
+    assert!(rt.manifest.graphs.contains_key("prefill_w4_kv8_s32"));
+    assert!(rt.manifest.graphs.contains_key("kernel_gemm_w4"));
+    assert_eq!(rt.manifest.model.vocab_size, 2048);
+}
+
+#[test]
+fn gemm_w8_kernel_matches_rust_reference() {
+    let rt = runtime_or_skip!();
+    let (m, k, n, g) = (8usize, 256usize, 256usize, 64usize);
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| (rng.next_f32() - 0.5) * 2.0).collect();
+    let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int8(g));
+
+    let codes_i8: Vec<i8> = (0..k)
+        .flat_map(|r| (0..n).map(move |c| (r, c)))
+        .map(|(r, c)| q.code_at(r, c))
+        .collect();
+
+    let out = rt
+        .execute(
+            "kernel_gemm_w8",
+            &[
+                HostTensor::from_f32(vec![m, k], &x).unwrap(),
+                HostTensor::from_i8(vec![k, n], &codes_i8).unwrap(),
+                HostTensor::from_f32(vec![k / g, n], &q.scales).unwrap(),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    let got = out[0].as_f32().unwrap();
+
+    // Rust reference: dequantize + naive matmul.
+    let wd = q.dequantize();
+    for row in 0..m {
+        for col in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += x[row * k + kk] * wd[kk * n + col];
+            }
+            let gotv = got[row * n + col];
+            assert!(
+                (gotv - acc).abs() <= 1e-3 + 1e-4 * acc.abs(),
+                "({row},{col}): {gotv} vs {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_w4_kernel_matches_rust_reference() {
+    let rt = runtime_or_skip!();
+    let (m, k, n, g) = (8usize, 256usize, 256usize, 64usize);
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| (rng.next_f32() - 0.5) * 2.0).collect();
+    let q = QuantizedMatrix::quantize(&w, k, n, GroupwiseQuant::int4(g));
+
+    // Pack along K as the kernel expects: byte [kk, c] = row 2kk (lo) | row
+    // 2kk+1 (hi) — the same convention as python quantize.pack_int4_along_k.
+    let mut packed = vec![0u8; (k / 2) * n];
+    for kk in 0..k / 2 {
+        for c in 0..n {
+            let lo = (q.code_at(2 * kk, c) as u8) & 0x0F;
+            let hi = (q.code_at(2 * kk + 1, c) as u8) & 0x0F;
+            packed[kk * n + c] = lo | (hi << 4);
+        }
+    }
+
+    let out = rt
+        .execute(
+            "kernel_gemm_w4",
+            &[
+                HostTensor::from_f32(vec![m, k], &x).unwrap(),
+                HostTensor::from_u8(vec![k / 2, n], &packed).unwrap(),
+                HostTensor::from_f32(vec![k / g, n], &q.scales).unwrap(),
+            ],
+        )
+        .expect("execute");
+    let got = out[0].as_f32().unwrap();
+
+    let wd = q.dequantize();
+    for row in [0usize, 3, 7] {
+        for col in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += x[row * k + kk] * wd[kk * n + col];
+            }
+            let gotv = got[row * n + col];
+            assert!(
+                (gotv - acc).abs() <= 1e-3 + 1e-4 * acc.abs(),
+                "({row},{col}): {gotv} vs {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn attention_kv8_kernel_matches_rust_reference() {
+    let rt = runtime_or_skip!();
+    // Shapes fixed by the microkernel artifact: B=2, H=8, Hkv=4, T=128, D=32.
+    let (b, h, hkv, t, d) = (2usize, 8usize, 4usize, 128usize, 32usize);
+    let group = h / hkv;
+    let mut rng = Rng::new(3);
+    let q: Vec<f32> = (0..b * h * d).map(|_| rng.next_f32() - 0.5).collect();
+    let kf: Vec<f32> = (0..b * hkv * t * d).map(|_| rng.next_f32() - 0.5).collect();
+    let vf: Vec<f32> = (0..b * hkv * t * d).map(|_| rng.next_f32() - 0.5).collect();
+    let kv_len = [37i32, 128i32];
+
+    // Quantize per (b, hkv, t) row with the Rust KV quantizer.
+    let mut kq = vec![0i8; b * hkv * t * d];
+    let mut ks = vec![0f32; b * hkv * t];
+    let mut vq = vec![0i8; b * hkv * t * d];
+    let mut vs = vec![0f32; b * hkv * t];
+    for row in 0..b * hkv * t {
+        let (c, s) = quant::quantize_kv_int8(&kf[row * d..(row + 1) * d]);
+        kq[row * d..(row + 1) * d].copy_from_slice(&c);
+        ks[row] = s;
+        let (c, s) = quant::quantize_kv_int8(&vf[row * d..(row + 1) * d]);
+        vq[row * d..(row + 1) * d].copy_from_slice(&c);
+        vs[row] = s;
+    }
+
+    let out = rt
+        .execute(
+            "kernel_attn_kv8",
+            &[
+                HostTensor::from_f32(vec![b, h, d], &q).unwrap(),
+                HostTensor::from_i8(vec![b, hkv, t, d], &kq).unwrap(),
+                HostTensor::from_f32(vec![b, hkv, t], &ks).unwrap(),
+                HostTensor::from_i8(vec![b, hkv, t, d], &vq).unwrap(),
+                HostTensor::from_f32(vec![b, hkv, t], &vs).unwrap(),
+                HostTensor::from_i32(vec![b], &kv_len).unwrap(),
+            ],
+        )
+        .expect("execute");
+    let got = out[0].as_f32().unwrap();
+
+    // Rust reference attention over the dequantized KV.
+    let scale = 1.0 / (d as f32).sqrt();
+    for bi in 0..b {
+        for hi in 0..h {
+            let kvh = hi / group;
+            let len = kv_len[bi] as usize;
+            let qv = &q[(bi * h + hi) * d..(bi * h + hi + 1) * d];
+            let mut scores = vec![0f32; len];
+            for ti in 0..len {
+                let row = (bi * hkv + kvh) * t + ti;
+                let s = ks[row];
+                let mut dot = 0f32;
+                for di in 0..d {
+                    dot += qv[di] * (kq[row * d + di] as f32 * s);
+                }
+                scores[ti] = dot * scale;
+            }
+            let m = scores.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let mut denom = 0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - m).exp();
+                denom += *s;
+            }
+            for di in 0..d {
+                let mut acc = 0f32;
+                for ti in 0..len {
+                    let row = (bi * hkv + kvh) * t + ti;
+                    acc += scores[ti] * (vq[row * d + di] as f32 * vs[row]);
+                }
+                acc /= denom;
+                let gotv = got[(bi * h + hi) * d + di];
+                assert!(
+                    (gotv - acc).abs() < 2e-4,
+                    "b{bi} h{hi} d{di}: {gotv} vs {acc}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn execute_validates_input_shapes() {
+    let rt = runtime_or_skip!();
+    let bad = HostTensor::zeros(Dt::F32, vec![1, 1]);
+    let err = rt.execute("kernel_gemm_w8", &[bad]).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("dynamic inputs"), "{msg}");
+}
+
+#[test]
+fn unknown_graph_is_helpful() {
+    let rt = runtime_or_skip!();
+    let err = rt.execute("no_such_graph", &[]).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"));
+}

@@ -1,0 +1,130 @@
+//! Server + failure-injection integration tests (need artifacts).
+
+use std::thread;
+
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, FinishReason, Request};
+use turbomind::server::{serve, Client};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TM_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg() -> Option<EngineConfig> {
+    Some(EngineConfig {
+        artifacts_dir: artifacts_dir()?,
+        precision: "W4A16KV8".parse().unwrap(),
+        max_batch: 4,
+        kv_pool_tokens: 16 * 256,
+        ..EngineConfig::default()
+    })
+}
+
+#[test]
+fn tcp_roundtrip_two_clients() {
+    let Some(c) = cfg() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let engine = Engine::new(c).unwrap();
+    let addr = "127.0.0.1:7391";
+
+    let mk_client = |tag: i32| {
+        thread::spawn(move || {
+            let mut client = loop {
+                match Client::connect(addr) {
+                    Ok(cl) => break cl,
+                    Err(_) => thread::sleep(std::time::Duration::from_millis(30)),
+                }
+            };
+            let prompt: Vec<i32> = (0..10).map(|j| (tag * 100 + j) % 2048).collect();
+            let resp = client.generate(&prompt, 4).unwrap();
+            assert_eq!(resp.req_str("finish").unwrap(), "length");
+            assert_eq!(resp.req_arr("tokens").unwrap().len(), 4);
+            assert!(resp.get("ttft_s").unwrap().as_f64().unwrap() > 0.0);
+        })
+    };
+    let h1 = mk_client(1);
+    let h2 = mk_client(2);
+    serve(engine, addr, Some(2)).unwrap();
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn tcp_rejects_malformed_and_oversized() {
+    let Some(c) = cfg() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let engine = Engine::new(c).unwrap();
+    let addr = "127.0.0.1:7392";
+    let h = thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = loop {
+            match std::net::TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) => thread::sleep(std::time::Duration::from_millis(30)),
+            }
+        };
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // Malformed JSON → error response, connection stays usable.
+        stream.write_all(b"this is not json\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+        // Oversized request → aborted output.
+        let toks: Vec<String> = (0..600).map(|i| (i % 2048).to_string()).collect();
+        let req = format!("{{\"prompt\": [{}], \"max_new_tokens\": 4}}\n", toks.join(","));
+        stream.write_all(req.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("aborted"), "{line}");
+        // A good request still works on the same connection.
+        stream.write_all(b"{\"prompt\": [5, 6, 7], \"max_new_tokens\": 3}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("length"), "{line}");
+    });
+    serve(engine, addr, Some(1)).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
+fn kv_pool_exhaustion_admission_control() {
+    // A pool that can only hold ~2 concurrent sequences: the engine must
+    // still finish everything (queuing, not crashing) and reclaim blocks.
+    let Some(mut c) = cfg() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    c.kv_pool_tokens = 16 * 8; // 128 tokens total
+    let mut e = Engine::new(c).unwrap();
+    for i in 0..4 {
+        // Each request needs 40 + 8 = 48 tokens → only 2 fit at once.
+        let prompt: Vec<i32> = (0..40).map(|j| (i * 37 + j) % 2048).collect();
+        e.submit(Request::new(prompt, 8)).unwrap();
+    }
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 4);
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+        assert_eq!(o.tokens.len(), 8);
+    }
+    assert_eq!(e.kv_pool().free_blocks(), e.kv_pool().total_blocks());
+    assert_eq!(e.stats.aborted, 0);
+}
+
+#[test]
+fn request_larger_than_pool_rejected_at_submit() {
+    let Some(mut c) = cfg() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    c.kv_pool_tokens = 16 * 4; // 64 tokens
+    let mut e = Engine::new(c).unwrap();
+    let err = e.submit(Request::new(vec![1; 100], 8)).unwrap_err();
+    assert!(err.to_string().contains("pool"), "{err}");
+}
