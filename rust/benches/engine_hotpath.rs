@@ -2,9 +2,11 @@
 //! on the real engine (the §Perf targets in DESIGN.md).
 //!
 //! Times the decode iteration end-to-end and its components: KV gather
-//! (pool → padded batch tensors), PJRT execute, and KV append, across
-//! compiled batch sizes. The coordinator target: everything except PJRT
-//! execute stays a small fraction of the iteration.
+//! (pool → padded batch tensors), backend execute, and KV append, across
+//! batch buckets. Runs hermetically on the sim backend; the coordinator
+//! target is that everything except backend execute stays a small fraction
+//! of the iteration. The modeled A100 column is the gpusim prediction the
+//! sim backend attaches per iteration.
 
 use std::time::Instant;
 
@@ -54,15 +56,9 @@ fn bench_gather() {
 }
 
 fn bench_engine_steps() {
-    let dir = std::env::var("TM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    if !std::path::Path::new(&dir).join("manifest.json").exists() {
-        println!("SKIP engine steps: artifacts not built");
-        return;
-    }
-    println!("\n== engine iteration latency (real PJRT, W4A16KV8) ==");
+    println!("\n== engine iteration latency (sim backend, W4A16KV8) ==");
     for &b in &[1usize, 2, 4, 8] {
         let cfg = EngineConfig {
-            artifacts_dir: dir.clone(),
             precision: "W4A16KV8".parse().unwrap(),
             max_batch: b,
             kv_pool_tokens: 16 * 512,
@@ -80,16 +76,19 @@ fn bench_engine_steps() {
         while e.stats.decode_iters == 0 {
             e.step().unwrap();
         }
+        let modeled_before = e.stats.sim_time_s;
         let t0 = Instant::now();
         let iters = 30;
         for _ in 0..iters {
             e.step().unwrap();
         }
         let per = t0.elapsed().as_secs_f64() / iters as f64;
+        let modeled_per = (e.stats.sim_time_s - modeled_before) / iters as f64;
         println!(
-            "  decode B={b}: {:.2} ms/iter  ({:.1} tok/s)",
+            "  decode B={b}: wall {:.3} ms/iter ({:.1} tok/s) | modeled A100 {:.3} ms/iter",
             per * 1e3,
-            b as f64 / per
+            b as f64 / per,
+            modeled_per * 1e3
         );
     }
 }

@@ -2,10 +2,47 @@
 
 use super::precision::{DType, PrecisionFormat};
 
-/// Configuration of the real (PJRT-backed) serving engine.
+/// Which execution backend the engine drives.
+///
+/// `Sim` is the default: the deterministic pure-Rust backend that runs
+/// everywhere with no artifacts. `Pjrt` executes the AOT-compiled HLO
+/// graphs and requires building with `--features pjrt` plus an artifacts
+/// directory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Sim,
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Ok(BackendKind::Sim),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend `{other}` (expected `sim` or `pjrt`)")),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Configuration of the serving engine.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// Directory holding `manifest.json` + `*.hlo.txt` + weight binaries.
+    /// Execution backend (see [`BackendKind`]).
+    pub backend: BackendKind,
+    /// Directory holding `manifest.json` + `*.hlo.txt` + weight binaries
+    /// (PJRT backend only).
     pub artifacts_dir: String,
     /// Mixed-precision format to serve with. Must match a compiled variant.
     pub precision: PrecisionFormat,
@@ -44,6 +81,7 @@ pub enum SchedulerPolicy {
 impl Default for EngineConfig {
     fn default() -> Self {
         Self {
+            backend: BackendKind::Sim,
             artifacts_dir: "artifacts".into(),
             precision: PrecisionFormat::new(DType::Int4, DType::F16, DType::Int8),
             max_batch: 8,
@@ -96,7 +134,17 @@ mod tests {
 
     #[test]
     fn default_is_valid() {
-        EngineConfig::default().validate().unwrap();
+        let c = EngineConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.backend, BackendKind::Sim, "hermetic default");
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("sim".parse::<BackendKind>().unwrap(), BackendKind::Sim);
+        assert_eq!("PJRT".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("tpu".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::Sim.to_string(), "sim");
     }
 
     #[test]

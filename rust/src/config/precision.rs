@@ -125,9 +125,16 @@ impl fmt::Display for PrecisionFormat {
 }
 
 /// Errors from parsing a `WxAyKVz` string.
-#[derive(Debug, thiserror::Error)]
-#[error("invalid precision format `{0}` (expected e.g. W4A16KV8)")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParsePrecisionError(String);
+
+impl fmt::Display for ParsePrecisionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid precision format `{}` (expected e.g. W4A16KV8)", self.0)
+    }
+}
+
+impl std::error::Error for ParsePrecisionError {}
 
 impl FromStr for PrecisionFormat {
     type Err = ParsePrecisionError;

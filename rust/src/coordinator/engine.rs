@@ -1,31 +1,32 @@
-//! The serving engine: continuous batching over the PJRT-backed model.
+//! The serving engine: continuous batching over a pluggable execution
+//! backend.
 //!
-//! One `Engine` owns the runtime (compiled AOT graphs + weights), the paged
-//! quantized KV pool, the scheduler, and all in-flight sequence state. Each
-//! `step()` runs exactly one iteration — a prefill chunk or a decode batch —
-//! mirroring iteration-level scheduling (Orca) with chunked prefill
-//! (Sarathi) and paged KV (vLLM), the serving substrate the paper's §5
-//! evaluation assumes.
+//! One `Engine` owns a backend (sim or PJRT — see [`crate::runtime`]), the
+//! paged quantized KV pool, the scheduler, and all in-flight sequence
+//! state. Each `step()` runs exactly one iteration — a prefill chunk or a
+//! decode batch — mirroring iteration-level scheduling (Orca) with chunked
+//! prefill (Sarathi) and paged KV (vLLM), the serving substrate the paper's
+//! §5 evaluation assumes.
 //!
 //! Dataflow per decode step:
-//!   gather quantized KV from the pool → padded `[L,B,Hkv,T,·]` tensors →
-//!   PJRT execute (the Layer-1 attention kernel dequantizes on the fly) →
-//!   sample logits → append the graph-emitted quantized KV codes for the
-//!   new token back into the pool (no Rust-side re-quantization).
+//!   gather quantized KV from the pool → padded `[L,B,Hkv,T,·]` buffers →
+//!   backend decode (the attention path dequantizes on the fly) → sample
+//!   logits → append the backend-emitted quantized KV codes for the new
+//!   token back into the pool (no engine-side re-quantization).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
 use super::sampler::Sampler;
 use super::scheduler::{Action, Scheduler};
-use crate::config::{DType, EngineConfig};
+use crate::config::{BackendKind, EngineConfig};
 use crate::kvcache::{KvPool, KvPrecision, SeqHandle};
-use crate::runtime::manifest::Manifest;
-use crate::runtime::{Dt, HostTensor, Runtime};
-use crate::util::rng::Rng;
+use crate::runtime::{
+    DecodeArgs, ExecutionBackend, ModelSpec, PrefillArgs, SimBackend, StepOutputs,
+};
 
 /// What one engine iteration did.
 #[derive(Debug, Clone)]
@@ -48,18 +49,20 @@ pub struct EngineStats {
     /// Decode-batch slots wasted on padding (fixed compiled batch sizes).
     pub padded_slots: usize,
     pub aborted: usize,
+    /// Modeled device time accumulated by the backend (sim backend only;
+    /// the PJRT path is wall-clock-timed by callers instead).
+    pub sim_time_s: f64,
 }
 
 /// The engine.
 pub struct Engine {
-    runtime: Runtime,
+    backend: Box<dyn ExecutionBackend>,
+    model: ModelSpec,
     pool: KvPool,
     cfg: EngineConfig,
-    wprec: &'static str,
-    kv_key: &'static str,
     scheduler: Scheduler,
     sampler: Sampler,
-    rng: Rng,
+    rng: crate::util::rng::Rng,
     seqs: BTreeMap<u64, SeqState>,
     waiting: VecDeque<u64>,
     running: Vec<u64>,
@@ -68,33 +71,58 @@ pub struct Engine {
     pub stats: EngineStats,
 }
 
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(cfg: &EngineConfig) -> Result<Box<dyn ExecutionBackend>> {
+    Ok(Box::new(crate::runtime::PjrtBackend::new(
+        &cfg.artifacts_dir,
+        cfg.precision,
+        cfg.max_batch,
+    )?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_cfg: &EngineConfig) -> Result<Box<dyn ExecutionBackend>> {
+    bail!("this build has no PJRT support (rebuild with `--features pjrt`), use backend `sim`")
+}
+
 impl Engine {
-    /// Load artifacts and construct an engine for `cfg.precision`.
+    /// Construct an engine for `cfg`, building the backend `cfg.backend`
+    /// names: the hermetic sim backend (default) or the PJRT artifact
+    /// runtime.
     pub fn new(cfg: EngineConfig) -> Result<Self> {
-        cfg.validate().map_err(|e| anyhow!(e))?;
-        let runtime = Runtime::load(&cfg.artifacts_dir)?;
-        let m = &runtime.manifest.model;
-
-        let wprec: &'static str = match cfg.precision.weight {
-            DType::Int4 => "w4",
-            DType::F16 | DType::F32 => "w16",
-            other => bail!("no compiled weight variant for {other} weights"),
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let backend: Box<dyn ExecutionBackend> = match cfg.backend {
+            BackendKind::Sim => Box::new(SimBackend::new(
+                ModelSpec::tiny(),
+                cfg.precision,
+                cfg.seed,
+                cfg.max_batch,
+            )?),
+            BackendKind::Pjrt => pjrt_backend(&cfg)?,
         };
-        let kv_prec = KvPrecision::from_dtype(cfg.precision.kv)?;
-        let kv_key = kv_prec.graph_key();
+        Self::with_backend(cfg, backend)
+    }
 
-        // Every (batch, context) graph the engine may need must exist.
-        for &b in &runtime.manifest.decode_batches {
-            for &t in &runtime.manifest.decode_t {
-                if b <= cfg.max_batch {
-                    let name = Manifest::decode_graph(wprec, kv_key, b, t);
-                    runtime.graph(&name).with_context(|| {
-                        format!("precision {} has no compiled variant", cfg.precision)
-                    })?;
-                }
-            }
+    /// Construct an engine around an already-built backend (tests, custom
+    /// deployments).
+    pub fn with_backend(cfg: EngineConfig, backend: Box<dyn ExecutionBackend>) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        if backend.precision() != cfg.precision {
+            bail!(
+                "backend precision {} != configured {}",
+                backend.precision(),
+                cfg.precision
+            );
         }
-
+        let m = backend.model().clone();
+        let plan = backend.plan();
+        if !plan.decode_batches.iter().any(|&b| b >= 1) {
+            bail!("backend plan has no decode batch buckets");
+        }
+        if plan.prefill_chunks.is_empty() {
+            bail!("backend plan has no prefill chunks");
+        }
+        let kv_prec = KvPrecision::from_dtype(cfg.precision.kv)?;
         let pool = KvPool::new(
             kv_prec,
             m.n_layers,
@@ -103,16 +131,15 @@ impl Engine {
             cfg.kv_block_tokens,
             cfg.kv_pool_tokens,
         )?;
-
         let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
+        let rng = crate::util::rng::Rng::new(cfg.seed);
         Ok(Self {
-            runtime,
+            backend,
+            model: m,
             pool,
             scheduler: Scheduler::new(cfg.scheduler),
             sampler,
-            rng: Rng::new(cfg.seed),
-            wprec,
-            kv_key,
+            rng,
             cfg,
             seqs: BTreeMap::new(),
             waiting: VecDeque::new(),
@@ -123,51 +150,58 @@ impl Engine {
         })
     }
 
-    /// Pre-compile the graphs this configuration uses.
+    /// Prepare the backend for serving (PJRT: compile every reachable
+    /// graph; sim: no-op).
     pub fn warmup(&self) -> Result<()> {
-        let mut names = Vec::new();
-        for &b in &self.runtime.manifest.decode_batches {
-            for &t in &self.runtime.manifest.decode_t {
-                if b <= self.cfg.max_batch {
-                    names.push(Manifest::decode_graph(self.wprec, self.kv_key, b, t));
-                }
-            }
-        }
-        for &s in &self.runtime.manifest.prefill_chunks {
-            names.push(Manifest::prefill_graph(self.wprec, self.kv_key, s));
-        }
-        self.runtime.warmup(&names)
+        self.backend.warmup()
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
     }
 
-    pub fn model(&self) -> &crate::runtime::manifest::ManifestModel {
-        &self.runtime.manifest.model
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
     }
 
-    /// Submit a request; returns its id. Rejects requests that can never be
-    /// scheduled (longer than the model context or the whole pool).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Submit a request; returns its id.
+    ///
+    /// Malformed requests (empty prompt, out-of-vocab tokens, longer than
+    /// the model context) are rejected with an error. A *valid* request
+    /// whose prompt + generation budget can never fit the KV pool is
+    /// accepted and immediately finished with [`FinishReason::Aborted`] —
+    /// queueing it would stall the scheduler forever (see
+    /// `scheduler::next_action`), and erroring would make pool sizing a
+    /// protocol-visible failure mode.
     pub fn submit(&mut self, req: Request) -> Result<u64> {
         let total = req.prompt.len() + req.max_new_tokens;
-        let m = &self.runtime.manifest.model;
+        let m = &self.model;
         if req.prompt.is_empty() {
             bail!("empty prompt");
         }
         if total > m.max_seq_len {
             bail!("request needs {total} tokens > context {}", m.max_seq_len);
         }
-        if self.pool.blocks_for(total) > self.pool.total_blocks() {
-            bail!("request needs more KV than the entire pool");
-        }
         if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= m.vocab_size) {
             bail!("prompt token {t} outside vocab {}", m.vocab_size);
         }
         let id = self.next_id;
         self.next_id += 1;
+        let oversized = self.pool.blocks_for(total) > self.pool.total_blocks();
         self.seqs.insert(id, SeqState::new(id, req, Instant::now()));
-        self.waiting.push_back(id);
+        if oversized {
+            // Reject at submit time instead of idling forever: the
+            // conservative admission reservation (prompt + generation) can
+            // never be satisfied, even by an empty pool.
+            self.finish(id, FinishReason::Aborted);
+            self.stats.aborted += 1;
+        } else {
+            self.waiting.push_back(id);
+        }
         Ok(id)
     }
 
@@ -240,7 +274,7 @@ impl Engine {
 
     /// Pick the compiled prefill bucket for `remaining` prompt tokens.
     fn prefill_bucket(&self, remaining: usize) -> usize {
-        let chunks = &self.runtime.manifest.prefill_chunks;
+        let chunks = &self.backend.plan().prefill_chunks;
         *chunks
             .iter()
             .filter(|&&c| c >= remaining.min(self.cfg.prefill_chunk))
@@ -250,8 +284,8 @@ impl Engine {
 
     /// Pick the compiled decode batch for `n` live sequences.
     fn decode_batch_size(&self, n: usize) -> Result<usize> {
-        self.runtime
-            .manifest
+        self.backend
+            .plan()
             .decode_batches
             .iter()
             .copied()
@@ -263,8 +297,8 @@ impl Engine {
     /// Pick the compiled decode context bucket covering `need` tokens —
     /// short contexts avoid the full max_seq_len attention scan (§Perf).
     fn decode_t_bucket(&self, need: usize) -> Result<usize> {
-        self.runtime
-            .manifest
+        self.backend
+            .plan()
             .decode_t
             .iter()
             .copied()
@@ -276,7 +310,7 @@ impl Engine {
     fn step_prefill(&mut self) -> Result<StepReport> {
         self.stats.prefill_iters += 1;
         let id = *self.waiting.front().expect("scheduler said Prefill");
-        let m = self.runtime.manifest.model.clone();
+        let m = self.model.clone();
         let t_pad = m.max_seq_len;
         let rb = self.pool.row_bytes();
 
@@ -314,28 +348,27 @@ impl Engine {
             &mut v_scales,
         )?;
 
-        let code_dt = self.code_dt();
-        let cache_shape = vec![m.n_layers, 1, m.n_kv_heads, t_pad, rb / code_elem_size(code_dt)];
-        let scale_shape = vec![m.n_layers, 1, m.n_kv_heads, t_pad];
-        let graph = Manifest::prefill_graph(self.wprec, self.kv_key, bucket);
-        let outputs = self.runtime.execute(
-            &graph,
-            &[
-                HostTensor::from_i32(vec![bucket], &chunk_tokens)?,
-                HostTensor::from_i32(vec![1], &[pos as i32])?,
-                HostTensor::new(code_dt, cache_shape.clone(), k_codes)?,
-                HostTensor::new(Dt::F32, scale_shape.clone(), f32s_to_bytes(&k_scales))?,
-                HostTensor::new(code_dt, cache_shape, v_codes)?,
-                HostTensor::new(Dt::F32, scale_shape, f32s_to_bytes(&v_scales))?,
-            ],
-        )?;
-        let [logits, k_chunk, k_sc, v_chunk, v_sc] = take5(outputs)?;
+        let out: StepOutputs = self.backend.prefill(&PrefillArgs {
+            tokens: &chunk_tokens,
+            real,
+            pos,
+            t_pad,
+            k_codes: &k_codes,
+            k_scales: &k_scales,
+            v_codes: &v_codes,
+            v_scales: &v_scales,
+        })?;
+        self.stats.sim_time_s += out.sim_time_s;
 
         // Store the real tokens' KV.
-        let k_sc = k_sc.as_f32()?;
-        let v_sc = v_sc.as_f32()?;
         if let Err(e) = self.pool.append_chunk(
-            handle, real, bucket, &k_chunk.data, &k_sc, &v_chunk.data, &v_sc,
+            handle,
+            real,
+            bucket,
+            &out.k_codes,
+            &out.k_scales,
+            &out.v_codes,
+            &out.v_scales,
         ) {
             return self.abort(id, e);
         }
@@ -348,9 +381,8 @@ impl Engine {
             self.stats.prompt_tokens += real;
             if s.remaining_prompt() == 0 {
                 // Prompt done: sample the first token from the last real row.
-                let lrow = logits.as_f32()?;
                 let v = m.vocab_size;
-                let row = &lrow[(real - 1) * v..real * v];
+                let row = &out.logits[(real - 1) * v..real * v];
                 let tok = self.sampler.sample(row, &mut self.rng);
                 s.generated.push(tok);
                 s.first_token = Some(Instant::now());
@@ -371,7 +403,7 @@ impl Engine {
 
     fn step_decode(&mut self) -> Result<StepReport> {
         self.stats.decode_iters += 1;
-        let m = self.runtime.manifest.model.clone();
+        let m = self.model.clone();
         let rb = self.pool.row_bytes();
         let ids: Vec<u64> = self.running.clone();
         let n = ids.len();
@@ -402,26 +434,16 @@ impl Engine {
             &handles, t_pad, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales,
         )?;
 
-        let code_dt = self.code_dt();
-        let elem = code_elem_size(code_dt);
-        let cache_shape = vec![m.n_layers, bsize, m.n_kv_heads, t_pad, rb / elem];
-        let scale_shape = vec![m.n_layers, bsize, m.n_kv_heads, t_pad];
-        let graph = Manifest::decode_graph(self.wprec, self.kv_key, bsize, t_pad);
-        let outputs = self.runtime.execute(
-            &graph,
-            &[
-                HostTensor::from_i32(vec![bsize], &tokens)?,
-                HostTensor::from_i32(vec![bsize], &kv_len)?,
-                HostTensor::new(code_dt, cache_shape.clone(), k_codes)?,
-                HostTensor::new(Dt::F32, scale_shape.clone(), f32s_to_bytes(&k_scales))?,
-                HostTensor::new(code_dt, cache_shape, v_codes)?,
-                HostTensor::new(Dt::F32, scale_shape, f32s_to_bytes(&v_scales))?,
-            ],
-        )?;
-        let [logits, k_new, k_sc, v_new, v_sc] = take5(outputs)?;
-        let logits = logits.as_f32()?;
-        let k_sc = k_sc.as_f32()?;
-        let v_sc = v_sc.as_f32()?;
+        let out: StepOutputs = self.backend.decode(&DecodeArgs {
+            tokens: &tokens,
+            kv_len: &kv_len,
+            t_pad,
+            k_codes: &k_codes,
+            k_scales: &k_scales,
+            v_codes: &v_codes,
+            v_scales: &v_scales,
+        })?;
+        self.stats.sim_time_s += out.sim_time_s;
 
         // Append each live sequence's new KV codes ([L,B,Hkv,rb] layout).
         let mut emitted = vec![];
@@ -435,13 +457,13 @@ impl Engine {
             let mut vs = vec![0f32; m.n_layers * m.n_kv_heads];
             for l in 0..m.n_layers {
                 let src = (l * bsize + i) * per;
-                kc[l * per..(l + 1) * per].copy_from_slice(&k_new.data[src..src + per]);
-                vc[l * per..(l + 1) * per].copy_from_slice(&v_new.data[src..src + per]);
+                kc[l * per..(l + 1) * per].copy_from_slice(&out.k_codes[src..src + per]);
+                vc[l * per..(l + 1) * per].copy_from_slice(&out.v_codes[src..src + per]);
                 let ssrc = (l * bsize + i) * m.n_kv_heads;
                 ks[l * m.n_kv_heads..(l + 1) * m.n_kv_heads]
-                    .copy_from_slice(&k_sc[ssrc..ssrc + m.n_kv_heads]);
+                    .copy_from_slice(&out.k_scales[ssrc..ssrc + m.n_kv_heads]);
                 vs[l * m.n_kv_heads..(l + 1) * m.n_kv_heads]
-                    .copy_from_slice(&v_sc[ssrc..ssrc + m.n_kv_heads]);
+                    .copy_from_slice(&out.v_scales[ssrc..ssrc + m.n_kv_heads]);
             }
             if let Err(_e) = self.pool.append_token(handle, &kc, &ks, &vc, &vs) {
                 // KV exhausted mid-flight (admission reserve should prevent
@@ -454,7 +476,7 @@ impl Engine {
             }
 
             let v = m.vocab_size;
-            let tok = self.sampler.sample(&logits[i * v..(i + 1) * v], &mut self.rng);
+            let tok = self.sampler.sample(&out.logits[i * v..(i + 1) * v], &mut self.rng);
             let s = self.seqs.get_mut(id).unwrap();
             s.generated.push(tok);
             emitted.push((*id, tok));
@@ -497,36 +519,4 @@ impl Engine {
         eprintln!("request {id} aborted: {err}");
         Ok(StepReport { action: Action::Prefill, emitted: vec![], finished: vec![id] })
     }
-
-    fn code_dt(&self) -> Dt {
-        match self.pool.precision() {
-            KvPrecision::F32 => Dt::F32,
-            KvPrecision::Int8 => Dt::I8,
-            KvPrecision::Int4 => Dt::U8,
-        }
-    }
-}
-
-fn code_elem_size(dt: Dt) -> usize {
-    dt.size()
-}
-
-fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(v.len() * 4);
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-    out
-}
-
-fn take5(mut v: Vec<HostTensor>) -> Result<[HostTensor; 5]> {
-    if v.len() != 5 {
-        bail!("expected 5 outputs, got {}", v.len());
-    }
-    let e = v.remove(4);
-    let d = v.remove(3);
-    let c = v.remove(2);
-    let b = v.remove(1);
-    let a = v.remove(0);
-    Ok([a, b, c, d, e])
 }

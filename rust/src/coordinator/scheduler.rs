@@ -56,13 +56,15 @@ impl Scheduler {
                     Action::Prefill
                 } else if running > 0 {
                     Action::Decode
-                } else if waiting > 0 && running < max_batch {
-                    // Waiting work that doesn't fit: decode would free KV,
-                    // but nothing is running — this is a deadlock unless the
-                    // caller rejects oversized requests up front. Report
-                    // Idle; the engine surfaces the stall.
-                    Action::Idle
                 } else {
+                    // Includes waiting > 0 with nothing running and nothing
+                    // admissible. That combination can only be transient:
+                    // `Engine::submit` rejects (FinishReason::Aborted) any
+                    // request whose prompt + generation budget exceeds the
+                    // whole pool, so a queued head always becomes admissible
+                    // once in-flight sequences drain. Idle here is a canary
+                    // the engine turns into a hard "stalled" error if it
+                    // ever persists.
                     Action::Idle
                 }
             }
@@ -125,6 +127,50 @@ mod tests {
         assert_eq!(s.next_action(2, true, 1, 2), Action::Decode);
         // Batch drained → back to admission.
         assert_eq!(s.next_action(2, true, 0, 2), Action::Prefill);
+    }
+
+    #[test]
+    fn full_batch_with_admissible_waiting_work_decodes() {
+        // running == max_batch: admissible waiting work must NOT preempt —
+        // both policies keep decoding until a slot frees.
+        let mut c = Scheduler::new(SchedulerPolicy::Continuous);
+        assert_eq!(c.next_action(3, true, 8, 8), Action::Decode);
+        let mut s = Scheduler::new(SchedulerPolicy::Static);
+        assert_eq!(s.next_action(3, true, 8, 8), Action::Decode);
+        // …and once a slot frees, Continuous admits immediately while
+        // Static finishes its drain first.
+        assert_eq!(c.next_action(3, true, 7, 8), Action::Prefill);
+        assert_eq!(s.next_action(3, true, 7, 8), Action::Decode);
+    }
+
+    #[test]
+    fn static_drain_reentry() {
+        // After a drain fully empties, Static must re-enter admission —
+        // and a second drain cycle must behave identically (the `draining`
+        // flag resets).
+        let mut s = Scheduler::new(SchedulerPolicy::Static);
+        for _cycle in 0..2 {
+            assert_eq!(s.next_action(2, true, 0, 2), Action::Prefill);
+            assert_eq!(s.next_action(1, true, 1, 2), Action::Prefill);
+            assert_eq!(s.next_action(0, true, 2, 2), Action::Decode);
+            assert_eq!(s.next_action(0, true, 1, 2), Action::Decode);
+            // Batch empty → drain ends; with an empty queue this is Idle,
+            // not a stuck drain state.
+            assert_eq!(s.next_action(0, true, 0, 2), Action::Idle);
+        }
+        // Drain interrupted by new admissible work after emptying: admit.
+        assert_eq!(s.next_action(5, true, 0, 2), Action::Prefill);
+    }
+
+    #[test]
+    fn idle_when_nothing_admissible_and_nothing_running() {
+        // The former deadlock shape: waiting work that can't be admitted
+        // with an empty batch. Submit-time rejection guarantees this is
+        // transient; the scheduler reports Idle either way.
+        let mut c = Scheduler::new(SchedulerPolicy::Continuous);
+        assert_eq!(c.next_action(3, false, 0, 8), Action::Idle);
+        let mut s = Scheduler::new(SchedulerPolicy::Static);
+        assert_eq!(s.next_action(3, false, 0, 8), Action::Idle);
     }
 
     #[test]

@@ -14,12 +14,24 @@
 //! * **Layer 1 (python/compile/kernels/)** — the paper's GEMM and attention
 //!   pipelines as Pallas kernels, fused into the Layer-2 graphs.
 //!
-//! Python never runs on the request path: the [`runtime`] module loads the
-//! AOT artifacts through the PJRT C API (`xla` crate) and the coordinator
-//! drives them from Rust.
+//! The coordinator drives a **pluggable execution backend**
+//! ([`runtime::ExecutionBackend`]):
 //!
-//! See `DESIGN.md` for the full system inventory and the per-figure
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! * the default build serves through [`runtime::SimBackend`] — a
+//!   deterministic pure-Rust model whose logits honor the configured
+//!   precision format via the `quant` round-trip error models and whose
+//!   iteration latency comes from the [`gpusim`] cost models. The entire
+//!   submit → prefill-chunk → paged-KV → decode → sample → finish path,
+//!   the JSON-lines TCP server, and the benches run hermetically: no
+//!   artifacts, no Python, no network;
+//! * with `--features pjrt`, `runtime::PjrtBackend` executes the AOT
+//!   artifacts through the PJRT C API (`xla` crate) — Python never runs on
+//!   the request path.
+//!
+//! See `DESIGN.md` (repo root) for the full system inventory, the backend
+//! contract, the JSON-lines serving protocol, and the per-figure
+//! experiment index; see `EXPERIMENTS.md` for how to run the tier-1
+//! verify, the benches, and the `pjrt` feature.
 
 pub mod bench;
 pub mod config;

@@ -8,12 +8,13 @@
 //!
 //! Examples:
 //!   turbomind serve --addr 127.0.0.1:7181 --precision W4A16KV8
+//!   turbomind serve --backend pjrt --artifacts artifacts   (needs --features pjrt)
 //!   turbomind bench fig13
 //!   turbomind pack --k 256 --n 4096
 
 use anyhow::{bail, Result};
 use turbomind::bench;
-use turbomind::config::{DeviceProfile, EngineConfig, PrecisionFormat};
+use turbomind::config::{BackendKind, DeviceProfile, EngineConfig, PrecisionFormat};
 use turbomind::coordinator::Engine;
 use turbomind::quant::{pack_weights_hw_aware, GroupwiseQuant, QuantizedMatrix};
 use turbomind::quant::access::analyze_global;
@@ -41,11 +42,15 @@ const HELP: &str = "\
 turbomind — mixed-precision LLM serving (TurboMind reproduction)
 
 USAGE:
-  turbomind serve [--addr HOST:PORT] [--precision WxAyKVz] [--artifacts DIR]
-                  [--max-batch N] [--max-requests N]
+  turbomind serve [--addr HOST:PORT] [--precision WxAyKVz] [--backend sim|pjrt]
+                  [--artifacts DIR] [--max-batch N] [--max-requests N]
   turbomind bench <fig11|fig12|...|fig28|table2|all>
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
+
+The default backend is `sim`: the deterministic pure-Rust execution backend
+(no artifacts needed). `--backend pjrt` drives the AOT HLO artifacts and
+requires a binary built with `--features pjrt`.
 ";
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -53,7 +58,12 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         .get_or("precision", "W4A16KV8")
         .parse()
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let backend: BackendKind = args
+        .get_or("backend", "sim")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(EngineConfig {
+        backend,
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         precision,
         max_batch: args.get_usize("max-batch", 8),
@@ -72,7 +82,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = Engine::new(cfg)?;
     engine.warmup()?;
     eprintln!(
-        "model {} | precision {} | max_batch {}",
+        "backend {} | model {} | precision {} | max_batch {}",
+        engine.backend_name(),
         engine.model().name,
         engine.config().precision,
         engine.config().max_batch

@@ -1,0 +1,175 @@
+//! The pluggable execution backend: the surface the serving coordinator
+//! drives, independent of *how* graphs execute.
+//!
+//! The engine owns request lifecycle, scheduling, sampling, and the paged
+//! quantized KV pool; a backend owns the model forward pass. Two
+//! implementations exist:
+//!
+//! * [`crate::runtime::SimBackend`] — deterministic pure-Rust execution:
+//!   seeded pseudo-transformer logits that honor the configured
+//!   [`PrecisionFormat`] through the `quant` round-trip error models, with
+//!   iteration latency from the `gpusim`/`serving_sim` cost models. Runs
+//!   everywhere, hermetically (no artifacts, no Python, no network).
+//! * `PjrtBackend` (behind the `pjrt` feature) — the AOT-compiled
+//!   HLO graphs executed through the PJRT C API, exactly the seed's
+//!   original request path.
+//!
+//! The contract mirrors the AOT graph signatures so the two backends are
+//! interchangeable: prefill/decode consume the *gathered* quantized KV
+//! batch tensors (`[L, B, Hkv, T, row_bytes]` codes + `[L, B, Hkv, T]`
+//! scales) and emit logits plus the new tokens' quantized KV codes, which
+//! the engine appends back into the pool untouched.
+
+use crate::config::PrecisionFormat;
+use crate::Result;
+
+/// The served model's architecture, as the backend reports it.
+///
+/// For the PJRT backend this comes from the artifact manifest; for the sim
+/// backend it is the same tiny Qwen-shaped config the artifacts are built
+/// from (`config::ModelConfig::tiny`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq_len: usize,
+    /// Groupwise weight-quantization group size.
+    pub group_size: usize,
+}
+
+impl ModelSpec {
+    /// The tiny Qwen-shaped model every hermetic test serves
+    /// (mirrors `config::ModelConfig::tiny`).
+    pub fn tiny() -> Self {
+        let m = crate::config::ModelConfig::tiny();
+        Self {
+            name: m.name,
+            n_layers: m.n_layers,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_kv_heads,
+            head_dim: m.head_dim,
+            d_ff: m.d_ff,
+            vocab_size: m.vocab_size,
+            max_seq_len: m.max_seq_len,
+            group_size: 64,
+        }
+    }
+}
+
+/// The shape buckets a backend can execute. The engine picks the smallest
+/// covering bucket per iteration (compiled-graph semantics: the PJRT
+/// backend genuinely has one executable per bucket; the sim backend adopts
+/// the same discipline so padding behaviour matches).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutionPlan {
+    /// Decode batch sizes, ascending.
+    pub decode_batches: Vec<usize>,
+    /// Decode context (padded KV length) buckets, ascending.
+    pub decode_t: Vec<usize>,
+    /// Prefill chunk lengths, ascending.
+    pub prefill_chunks: Vec<usize>,
+}
+
+/// One prefill invocation: a chunk of prompt tokens on top of the
+/// sequence's (possibly empty) gathered quantized past.
+#[derive(Debug)]
+pub struct PrefillArgs<'a> {
+    /// Chunk token ids, padded to the compiled bucket length.
+    pub tokens: &'a [i32],
+    /// Real (unpadded) token count in this chunk.
+    pub real: usize,
+    /// Tokens of this sequence already prefilled (the chunk's base position).
+    pub pos: usize,
+    /// Padded context extent of the gathered cache tensors.
+    pub t_pad: usize,
+    /// Gathered past KV codes, `[L, 1, Hkv, t_pad, row_bytes]`.
+    pub k_codes: &'a [u8],
+    /// Gathered past K scales, `[L, 1, Hkv, t_pad]`.
+    pub k_scales: &'a [f32],
+    pub v_codes: &'a [u8],
+    pub v_scales: &'a [f32],
+}
+
+/// One decode invocation over a padded batch.
+#[derive(Debug)]
+pub struct DecodeArgs<'a> {
+    /// Input token per slot (last sampled token), padded to the batch bucket.
+    pub tokens: &'a [i32],
+    /// Per-slot KV history length (1 for padding slots).
+    pub kv_len: &'a [i32],
+    /// Padded context extent of the gathered cache tensors.
+    pub t_pad: usize,
+    /// Gathered KV codes, `[L, B, Hkv, t_pad, row_bytes]`.
+    pub k_codes: &'a [u8],
+    pub k_scales: &'a [f32],
+    pub v_codes: &'a [u8],
+    pub v_scales: &'a [f32],
+}
+
+/// What one backend invocation produced.
+///
+/// Prefill: `logits` is `[bucket, vocab]` row-major (rows past `real` are
+/// padding); KV codes are `[L, Hkv, bucket, row_bytes]` with scales
+/// `[L, Hkv, bucket]` — the layout `KvPool::append_chunk` consumes.
+///
+/// Decode: `logits` is `[B, vocab]`; KV codes are `[L, B, Hkv, row_bytes]`
+/// with scales `[L, B, Hkv]` — the per-token append layout.
+#[derive(Debug, Clone)]
+pub struct StepOutputs {
+    pub logits: Vec<f32>,
+    pub k_codes: Vec<u8>,
+    pub k_scales: Vec<f32>,
+    pub v_codes: Vec<u8>,
+    pub v_scales: Vec<f32>,
+    /// Modeled device time for this invocation (0 when the backend measures
+    /// nothing — the PJRT path is wall-clock-timed by its callers instead).
+    pub sim_time_s: f64,
+}
+
+/// A model execution backend: load-weights at construction, then
+/// prefill/decode from the request path.
+pub trait ExecutionBackend {
+    /// Short human-readable backend name (`"sim"` / `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// The served model's architecture.
+    fn model(&self) -> &ModelSpec;
+
+    /// The shape buckets this backend executes.
+    fn plan(&self) -> &ExecutionPlan;
+
+    /// The precision format the weights were loaded at.
+    fn precision(&self) -> PrecisionFormat;
+
+    /// Prepare for serving (compile graphs, prime caches). Idempotent.
+    fn warmup(&self) -> Result<()>;
+
+    /// Run one prefill chunk.
+    fn prefill(&self, args: &PrefillArgs<'_>) -> Result<StepOutputs>;
+
+    /// Run one decode step over a padded batch.
+    fn decode(&self, args: &DecodeArgs<'_>) -> Result<StepOutputs>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_spec_matches_model_config() {
+        let s = ModelSpec::tiny();
+        let m = crate::config::ModelConfig::tiny();
+        assert_eq!(s.vocab_size, m.vocab_size);
+        assert_eq!(s.n_layers, m.n_layers);
+        assert_eq!(s.n_kv_heads, m.n_kv_heads);
+        assert_eq!(s.head_dim, m.head_dim);
+        assert_eq!(s.max_seq_len, m.max_seq_len);
+    }
+}

@@ -1,14 +1,36 @@
-//! PJRT runtime layer: artifact manifest, host tensors, and the executable
-//! cache that runs the AOT-compiled graphs from the request path.
+//! Execution layer: the pluggable backend trait, the artifact manifest, and
+//! the two backend implementations.
 //!
-//! Python (`python/compile/aot.py`) lowers the Layer-2 graphs to HLO text at
-//! build time; this module loads and executes them via the `xla` crate's
-//! PJRT CPU client. No Python anywhere at runtime.
+//! * [`backend`] — the [`ExecutionBackend`] trait the coordinator drives:
+//!   load-weights (construction), prefill, and decode over gathered
+//!   quantized-KV batch tensors.
+//! * [`sim`] — the default, hermetic [`SimBackend`]: deterministic seeded
+//!   logits honoring the configured precision format, with `gpusim`-modeled
+//!   iteration latency. No artifacts, no Python, no network.
+//! * [`manifest`] — the AOT artifact contract (`manifest.json`), always
+//!   compiled so artifact tooling and validation stay testable.
+//! * [`client`] / [`pjrt`] / [`tensor`]'s literal conversions — the PJRT
+//!   path (`python/compile/aot.py` lowers the Layer-2 graphs to HLO text;
+//!   these execute them via the `xla` crate), behind the `pjrt` feature.
 
-pub mod client;
+pub mod backend;
 pub mod manifest;
+pub mod sim;
 pub mod tensor;
 
-pub use client::Runtime;
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use backend::{
+    DecodeArgs, ExecutionBackend, ExecutionPlan, ModelSpec, PrefillArgs, StepOutputs,
+};
 pub use manifest::{GraphEntry, Manifest, TensorSpec};
+pub use sim::SimBackend;
 pub use tensor::{Dt, HostTensor};
+
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;

@@ -1,0 +1,219 @@
+//! `PjrtBackend`: the AOT-artifact execution backend (behind `pjrt`).
+//!
+//! Wraps [`client::Runtime`] (PJRT client + compiled-executable cache) in
+//! the [`ExecutionBackend`] surface: graph-name selection, host-tensor
+//! packing, and output unpacking all live here, so the coordinator never
+//! sees PJRT types. One compiled executable exists per (precision, bucket)
+//! variant; construction fails loudly when the configured precision has no
+//! compiled graphs.
+
+use anyhow::{bail, Context};
+
+use super::backend::{
+    DecodeArgs, ExecutionBackend, ExecutionPlan, ModelSpec, PrefillArgs, StepOutputs,
+};
+use super::client::Runtime;
+use super::manifest::Manifest;
+use super::tensor::{Dt, HostTensor};
+use crate::config::{DType, PrecisionFormat};
+use crate::kvcache::KvPrecision;
+use crate::Result;
+
+/// The PJRT-backed execution backend.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    model: ModelSpec,
+    plan: ExecutionPlan,
+    precision: PrecisionFormat,
+    wprec: &'static str,
+    kv_key: &'static str,
+    kv_prec: KvPrecision,
+    max_batch: usize,
+}
+
+impl PjrtBackend {
+    /// Load artifacts from `artifacts_dir` and validate that every
+    /// (batch ≤ `max_batch`, context) decode variant exists for `precision`.
+    pub fn new(artifacts_dir: &str, precision: PrecisionFormat, max_batch: usize) -> Result<Self> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let m = &runtime.manifest.model;
+
+        let wprec: &'static str = match precision.weight {
+            DType::Int4 => "w4",
+            DType::F16 | DType::F32 => "w16",
+            other => bail!("no compiled weight variant for {other} weights"),
+        };
+        let kv_prec = KvPrecision::from_dtype(precision.kv)?;
+        let kv_key = kv_prec.graph_key();
+
+        for &b in &runtime.manifest.decode_batches {
+            for &t in &runtime.manifest.decode_t {
+                if b <= max_batch {
+                    let name = Manifest::decode_graph(wprec, kv_key, b, t);
+                    runtime.graph(&name).with_context(|| {
+                        format!("precision {precision} has no compiled variant")
+                    })?;
+                }
+            }
+        }
+
+        let model = ModelSpec {
+            name: m.name.clone(),
+            n_layers: m.n_layers,
+            d_model: m.d_model,
+            n_heads: m.n_heads,
+            n_kv_heads: m.n_kv_heads,
+            head_dim: m.head_dim,
+            d_ff: m.d_ff,
+            vocab_size: m.vocab_size,
+            max_seq_len: m.max_seq_len,
+            group_size: m.group_size,
+        };
+        let plan = ExecutionPlan {
+            decode_batches: runtime.manifest.decode_batches.clone(),
+            decode_t: runtime.manifest.decode_t.clone(),
+            prefill_chunks: runtime.manifest.prefill_chunks.clone(),
+        };
+        Ok(Self { runtime, model, plan, precision, wprec, kv_key, kv_prec, max_batch })
+    }
+
+    fn code_dt(&self) -> Dt {
+        match self.kv_prec {
+            KvPrecision::F32 => Dt::F32,
+            KvPrecision::Int8 => Dt::I8,
+            KvPrecision::Int4 => Dt::U8,
+        }
+    }
+
+    fn rb(&self) -> usize {
+        self.kv_prec.row_bytes(self.model.head_dim)
+    }
+
+    /// Cache tensors for a gathered `[L, B, Hkv, t_pad, rb]` byte buffer.
+    ///
+    /// The borrowed backend args force one copy of the gathered buffers
+    /// here (`to_vec`) that the pre-refactor engine avoided by moving its
+    /// owned Vecs straight into tensors. Accepted tradeoff: borrowed args
+    /// keep the `ExecutionBackend` contract free of buffer-ownership
+    /// churn, and the upload to device copies these bytes again anyway.
+    fn cache_tensors(
+        &self,
+        b: usize,
+        t_pad: usize,
+        k_codes: &[u8],
+        k_scales: &[f32],
+        v_codes: &[u8],
+        v_scales: &[f32],
+    ) -> Result<[HostTensor; 4]> {
+        let m = &self.model;
+        let code_dt = self.code_dt();
+        let elem = code_dt.size();
+        let cache_shape = vec![m.n_layers, b, m.n_kv_heads, t_pad, self.rb() / elem];
+        let scale_shape = vec![m.n_layers, b, m.n_kv_heads, t_pad];
+        Ok([
+            HostTensor::new(code_dt, cache_shape.clone(), k_codes.to_vec())?,
+            HostTensor::from_f32(scale_shape.clone(), k_scales)?,
+            HostTensor::new(code_dt, cache_shape, v_codes.to_vec())?,
+            HostTensor::from_f32(scale_shape, v_scales)?,
+        ])
+    }
+
+    fn unpack(&self, outputs: Vec<HostTensor>, sim_time_s: f64) -> Result<StepOutputs> {
+        let [logits, k_new, k_sc, v_new, v_sc] = take5(outputs)?;
+        Ok(StepOutputs {
+            logits: logits.as_f32()?,
+            k_scales: k_sc.as_f32()?,
+            v_scales: v_sc.as_f32()?,
+            k_codes: k_new.data,
+            v_codes: v_new.data,
+            sim_time_s,
+        })
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    fn precision(&self) -> PrecisionFormat {
+        self.precision
+    }
+
+    /// Pre-compile every graph this configuration can reach (keeps
+    /// first-request latency flat).
+    fn warmup(&self) -> Result<()> {
+        let mut names = Vec::new();
+        for &b in &self.plan.decode_batches {
+            for &t in &self.plan.decode_t {
+                if b <= self.max_batch {
+                    names.push(Manifest::decode_graph(self.wprec, self.kv_key, b, t));
+                }
+            }
+        }
+        for &s in &self.plan.prefill_chunks {
+            names.push(Manifest::prefill_graph(self.wprec, self.kv_key, s));
+        }
+        self.runtime.warmup(&names)
+    }
+
+    fn prefill(&self, args: &PrefillArgs<'_>) -> Result<StepOutputs> {
+        let bucket = args.tokens.len();
+        let graph = Manifest::prefill_graph(self.wprec, self.kv_key, bucket);
+        let [kc, ks, vc, vs] = self.cache_tensors(
+            1, args.t_pad, args.k_codes, args.k_scales, args.v_codes, args.v_scales,
+        )?;
+        let outputs = self.runtime.execute(
+            &graph,
+            &[
+                HostTensor::from_i32(vec![bucket], args.tokens)?,
+                HostTensor::from_i32(vec![1], &[args.pos as i32])?,
+                kc,
+                ks,
+                vc,
+                vs,
+            ],
+        )?;
+        self.unpack(outputs, 0.0)
+    }
+
+    fn decode(&self, args: &DecodeArgs<'_>) -> Result<StepOutputs> {
+        let bsize = args.tokens.len();
+        let graph = Manifest::decode_graph(self.wprec, self.kv_key, bsize, args.t_pad);
+        let [kc, ks, vc, vs] = self.cache_tensors(
+            bsize, args.t_pad, args.k_codes, args.k_scales, args.v_codes, args.v_scales,
+        )?;
+        let outputs = self.runtime.execute(
+            &graph,
+            &[
+                HostTensor::from_i32(vec![bsize], args.tokens)?,
+                HostTensor::from_i32(vec![bsize], args.kv_len)?,
+                kc,
+                ks,
+                vc,
+                vs,
+            ],
+        )?;
+        self.unpack(outputs, 0.0)
+    }
+}
+
+fn take5(mut v: Vec<HostTensor>) -> Result<[HostTensor; 5]> {
+    if v.len() != 5 {
+        bail!("expected 5 outputs, got {}", v.len());
+    }
+    let e = v.remove(4);
+    let d = v.remove(3);
+    let c = v.remove(2);
+    let b = v.remove(1);
+    let a = v.remove(0);
+    Ok([a, b, c, d, e])
+}

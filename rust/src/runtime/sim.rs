@@ -1,0 +1,717 @@
+//! `SimBackend`: deterministic pure-Rust model execution.
+//!
+//! The hermetic stand-in for the PJRT backend: no artifacts, no Python, no
+//! network. It drives the *entire* engine path — gathered quantized KV in,
+//! logits + fresh quantized KV codes out — with three properties the tests
+//! rely on:
+//!
+//! 1. **Determinism.** Every value derives from the backend seed and the
+//!    request content. Same seed + greedy sampling ⇒ identical outputs,
+//!    regardless of batch composition or scheduler policy (each batch slot
+//!    is computed independently; padding slots never influence real ones).
+//! 2. **Precision fidelity.** The configured [`PrecisionFormat`] shapes the
+//!    numbers through the real `quant` round-trip error models: weights are
+//!    passed through [`QuantizedMatrix`] groupwise quantization at the
+//!    configured weight width, and KV rows are quantized per token per head
+//!    with [`quant::quantize_kv_int8`] / [`quant::quantize_kv_int4`] before
+//!    they enter the pool — decode reads them back *through the cache*, so
+//!    KV4/KV8/KV16 genuinely diverge the way the paper's Table 1 studies.
+//! 3. **Modeled latency.** Each invocation reports the iteration time the
+//!    `serving_sim`/`gpusim` cost models predict for the tiny model on an
+//!    A100 with TurboMind kernel traits (activation width participates
+//!    here: W4A8 times differently from W4A16 even though the sim numerics
+//!    model weights and KV only).
+//!
+//! The "transformer" itself is a seeded recency-weighted mixer: token
+//! (l, h, position) K/V rows are hash-seeded pseudo-random vectors; a
+//! per-position context is the exponentially-decayed sum of dequantized KV
+//! rows; logits are the context (plus the input token's embedding) projected
+//! through a seeded, precision-round-tripped output embedding. It is not a
+//! language model — it is a deterministic function with the same dataflow,
+//! shapes, and precision sensitivities as one.
+
+use anyhow::bail;
+
+use super::backend::{
+    DecodeArgs, ExecutionBackend, ExecutionPlan, ModelSpec, PrefillArgs, StepOutputs,
+};
+use crate::config::{DType, DeviceProfile, ModelConfig, PrecisionFormat};
+use crate::gpusim::Framework;
+use crate::kvcache::KvPrecision;
+use crate::quant::{self, GroupwiseQuant, QuantizedMatrix};
+use crate::serving_sim::{ServingSim, SimConfig, SimPrecision};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Exponential recency decay of the context mixer (per position step).
+const DECAY: f32 = 0.9;
+/// Weight of V rows relative to K rows in the context mixer.
+const V_WEIGHT: f32 = 0.5;
+
+/// The deterministic simulation backend.
+pub struct SimBackend {
+    model: ModelSpec,
+    plan: ExecutionPlan,
+    precision: PrecisionFormat,
+    kv_prec: KvPrecision,
+    seed: u64,
+    /// Input-token embedding `[vocab, head_dim]`, weight-round-tripped.
+    embed_in: Vec<f32>,
+    /// Output projection `[vocab, head_dim]`, weight-round-tripped.
+    embed_out: Vec<f32>,
+    /// Iteration-latency model (gpusim kernel models at the tiny scale).
+    timing: ServingSim,
+}
+
+impl SimBackend {
+    /// Build a sim backend for `model` at `precision`. `max_batch` sizes the
+    /// decode-batch buckets (mirroring "one compiled executable per batch
+    /// size"). Fails for formats the sim has no numeric model for (FP8
+    /// weights).
+    pub fn new(
+        model: ModelSpec,
+        precision: PrecisionFormat,
+        seed: u64,
+        max_batch: usize,
+    ) -> Result<Self> {
+        if precision.weight == DType::Fp8 {
+            bail!("sim backend has no numeric model for fp8 weights (format {precision})");
+        }
+        let kv_prec = KvPrecision::from_dtype(precision.kv)?;
+        let plan = plan_for(&model, max_batch);
+
+        let dim = model.head_dim;
+        let vocab = model.vocab_size;
+        let embed_in = embedding_table(seed ^ 0x5EED_E4B0, vocab, dim, &model, precision.weight);
+        let embed_out = embedding_table(seed ^ 0x0E0E_D00D, vocab, dim, &model, precision.weight);
+
+        let sim_prec = SimPrecision {
+            w_bits: precision.weight.bits(),
+            a_bits: precision.activation.bits(),
+            kv_bits: precision.kv.bits(),
+        };
+        let timing = ServingSim::new(SimConfig::new(
+            model_config_of(&model),
+            DeviceProfile::a100(),
+            Framework::TurboMind,
+            sim_prec,
+        ));
+
+        Ok(Self { model, plan, precision, kv_prec, seed, embed_in, embed_out, timing })
+    }
+
+    fn rb(&self) -> usize {
+        self.kv_prec.row_bytes(self.model.head_dim)
+    }
+
+    /// The deterministic "true" (pre-quantization) K and V rows for token
+    /// `tok` at absolute position `pos` in layer `l`, KV head `h`.
+    fn true_rows(&self, l: usize, h: usize, tok: i32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut s = self.seed ^ 0x7D0_C0FFEE;
+        for v in [l as u64, h as u64, tok as u32 as u64, pos as u64] {
+            s = s
+                .wrapping_mul(0x100_0000_01B3)
+                .wrapping_add(v)
+                .rotate_left(23)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        let mut rng = Rng::new(s);
+        let d = self.model.head_dim;
+        let k = (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let v = (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        (k, v)
+    }
+
+    /// Quantize one row to the pool's storage format: (codes, scale).
+    fn quantize_row(&self, row: &[f32]) -> (Vec<u8>, f32) {
+        match self.kv_prec {
+            KvPrecision::F32 => {
+                let mut bytes = Vec::with_capacity(row.len() * 4);
+                for x in row {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+                (bytes, 1.0)
+            }
+            KvPrecision::Int8 => {
+                let (codes, scale) = quant::quantize_kv_int8(row);
+                (codes.into_iter().map(|c| c as u8).collect(), scale)
+            }
+            KvPrecision::Int4 => quant::quantize_kv_int4(row),
+        }
+    }
+
+    /// Dequantize one cached row (`row_bytes` code bytes + scalar scale)
+    /// into a caller-owned scratch buffer of `head_dim` elements — the
+    /// context scans run this per (layer, head, token), so no per-row
+    /// allocation.
+    fn dequantize_row_into(&self, codes: &[u8], scale: f32, out: &mut [f32]) {
+        match self.kv_prec {
+            KvPrecision::F32 => {
+                for (o, c) in out.iter_mut().zip(codes.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            KvPrecision::Int8 => {
+                for (o, &b) in out.iter_mut().zip(codes) {
+                    *o = b as i8 as f32 * scale;
+                }
+            }
+            KvPrecision::Int4 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    let byte = codes[i / 2];
+                    let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                    *o = quant::groupwise::sign_extend4(nib) as f32 * scale;
+                }
+            }
+        }
+    }
+
+    /// Accumulate one (K, V) row into a decayed context sum.
+    fn fold_row(ctx: &mut [f32], k: &[f32], v: &[f32]) {
+        for (c, (kx, vx)) in ctx.iter_mut().zip(k.iter().zip(v)) {
+            *c = *c * DECAY + (kx + V_WEIGHT * vx);
+        }
+    }
+
+    /// Decayed normalization constant for a context of `len` rows.
+    fn norm(len: usize) -> f32 {
+        // Σ_{age=0..len-1} DECAY^age = (1 - DECAY^len) / (1 - DECAY)
+        (1.0 - DECAY.powi(len as i32)) / (1.0 - DECAY)
+    }
+
+    /// Logits for an input token given its (already normalized) context.
+    fn project_logits(&self, tok: i32, ctx: &[f32], out: &mut [f32]) {
+        let d = self.model.head_dim;
+        let e_in = &self.embed_in[tok as usize * d..(tok as usize + 1) * d];
+        for (v, o) in out.iter_mut().enumerate() {
+            let e_out = &self.embed_out[v * d..(v + 1) * d];
+            let mut acc = 0f32;
+            for i in 0..d {
+                acc += (e_in[i] + ctx[i]) * e_out[i];
+            }
+            *o = acc;
+        }
+    }
+
+    /// The per-(l, h) decayed sum of one sequence's cached rows
+    /// `[0, kv_len)` read back through the quantized cache, for batch slot
+    /// `bi` of a gathered `[L, B, Hkv, t_pad, rb]` tensor set.
+    #[allow(clippy::too_many_arguments)]
+    fn cached_context(
+        &self,
+        bi: usize,
+        b: usize,
+        kv_len: usize,
+        t_pad: usize,
+        k_codes: &[u8],
+        k_scales: &[f32],
+        v_codes: &[u8],
+        v_scales: &[f32],
+    ) -> Vec<f32> {
+        let m = &self.model;
+        let rb = self.rb();
+        let d = m.head_dim;
+        let mut ctx = vec![0f32; d];
+        let mut acc = vec![0f32; d];
+        let mut k = vec![0f32; d];
+        let mut v = vec![0f32; d];
+        for l in 0..m.n_layers {
+            for h in 0..m.n_kv_heads {
+                acc.iter_mut().for_each(|x| *x = 0.0);
+                for t in 0..kv_len {
+                    let base = (((l * b + bi) * m.n_kv_heads + h) * t_pad + t) * rb;
+                    let sbase = ((l * b + bi) * m.n_kv_heads + h) * t_pad + t;
+                    self.dequantize_row_into(&k_codes[base..base + rb], k_scales[sbase], &mut k);
+                    self.dequantize_row_into(&v_codes[base..base + rb], v_scales[sbase], &mut v);
+                    Self::fold_row(&mut acc, &k, &v);
+                }
+                for (c, a) in ctx.iter_mut().zip(&acc) {
+                    *c += a;
+                }
+            }
+        }
+        let heads = (m.n_layers * m.n_kv_heads) as f32;
+        ctx.iter_mut().for_each(|x| *x /= heads);
+        ctx
+    }
+
+    fn check_token(&self, tok: i32) -> Result<()> {
+        if tok < 0 || tok as usize >= self.model.vocab_size {
+            bail!("token {tok} outside vocab {}", self.model.vocab_size);
+        }
+        Ok(())
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    fn precision(&self) -> PrecisionFormat {
+        self.precision
+    }
+
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+
+    fn prefill(&self, args: &PrefillArgs<'_>) -> Result<StepOutputs> {
+        let m = &self.model;
+        let rb = self.rb();
+        let d = m.head_dim;
+        let bucket = args.tokens.len();
+        let expect = m.n_layers * m.n_kv_heads * args.t_pad * rb;
+        if args.k_codes.len() != expect || args.v_codes.len() != expect {
+            bail!("prefill cache size {} != expected {expect}", args.k_codes.len());
+        }
+        if args.real == 0 || args.real > bucket {
+            bail!("prefill real {} out of bucket {bucket}", args.real);
+        }
+        if args.pos + args.real > args.t_pad {
+            bail!("prefill chunk [{}, {}) exceeds t_pad {}", args.pos, args.pos + args.real, args.t_pad);
+        }
+
+        // Fresh (exact) rows for the chunk's real tokens, plus their
+        // quantized codes for the pool.
+        let mut k_out = vec![0u8; m.n_layers * m.n_kv_heads * bucket * rb];
+        let mut v_out = vec![0u8; m.n_layers * m.n_kv_heads * bucket * rb];
+        let mut ks_out = vec![1f32; m.n_layers * m.n_kv_heads * bucket];
+        let mut vs_out = vec![1f32; m.n_layers * m.n_kv_heads * bucket];
+        // chunk_rows[l][h][j] = (k, v) exact rows.
+        let mut chunk_rows: Vec<Vec<Vec<(Vec<f32>, Vec<f32>)>>> = Vec::with_capacity(m.n_layers);
+        for l in 0..m.n_layers {
+            let mut per_head = Vec::with_capacity(m.n_kv_heads);
+            for h in 0..m.n_kv_heads {
+                let mut rows = Vec::with_capacity(args.real);
+                for j in 0..args.real {
+                    let tok = args.tokens[j];
+                    self.check_token(tok)?;
+                    let (k, v) = self.true_rows(l, h, tok, args.pos + j);
+                    let (kc, ks) = self.quantize_row(&k);
+                    let (vc, vs) = self.quantize_row(&v);
+                    let base = ((l * m.n_kv_heads + h) * bucket + j) * rb;
+                    k_out[base..base + rb].copy_from_slice(&kc);
+                    v_out[base..base + rb].copy_from_slice(&vc);
+                    let sbase = (l * m.n_kv_heads + h) * bucket + j;
+                    ks_out[sbase] = ks;
+                    vs_out[sbase] = vs;
+                    rows.push((k, v));
+                }
+                per_head.push(rows);
+            }
+            chunk_rows.push(per_head);
+        }
+
+        // Per-(l, h) decayed sum of the quantized past, then advanced
+        // incrementally through the chunk's exact rows.
+        let mut sums: Vec<Vec<f32>> = Vec::with_capacity(m.n_layers * m.n_kv_heads);
+        let mut k_row = vec![0f32; d];
+        let mut v_row = vec![0f32; d];
+        for l in 0..m.n_layers {
+            for h in 0..m.n_kv_heads {
+                let mut acc = vec![0f32; d];
+                for t in 0..args.pos {
+                    let base = ((l * m.n_kv_heads + h) * args.t_pad + t) * rb;
+                    let sbase = (l * m.n_kv_heads + h) * args.t_pad + t;
+                    self.dequantize_row_into(
+                        &args.k_codes[base..base + rb],
+                        args.k_scales[sbase],
+                        &mut k_row,
+                    );
+                    self.dequantize_row_into(
+                        &args.v_codes[base..base + rb],
+                        args.v_scales[sbase],
+                        &mut v_row,
+                    );
+                    Self::fold_row(&mut acc, &k_row, &v_row);
+                }
+                sums.push(acc);
+            }
+        }
+
+        let vocab = m.vocab_size;
+        let heads = (m.n_layers * m.n_kv_heads) as f32;
+        let mut logits = vec![0f32; bucket * vocab];
+        let mut ctx = vec![0f32; d];
+        for j in 0..args.real {
+            for l in 0..m.n_layers {
+                for h in 0..m.n_kv_heads {
+                    let (k, v) = &chunk_rows[l][h][j];
+                    Self::fold_row(&mut sums[l * m.n_kv_heads + h], k, v);
+                }
+            }
+            let norm = Self::norm(args.pos + j + 1) * heads;
+            for x in ctx.iter_mut() {
+                *x = 0.0;
+            }
+            for s in &sums {
+                for (c, a) in ctx.iter_mut().zip(s) {
+                    *c += a;
+                }
+            }
+            ctx.iter_mut().for_each(|x| *x /= norm);
+            self.project_logits(args.tokens[j], &ctx, &mut logits[j * vocab..(j + 1) * vocab]);
+        }
+
+        Ok(StepOutputs {
+            logits,
+            k_codes: k_out,
+            k_scales: ks_out,
+            v_codes: v_out,
+            v_scales: vs_out,
+            sim_time_s: self.timing.prefill_iter_time(bucket, args.pos),
+        })
+    }
+
+    fn decode(&self, args: &DecodeArgs<'_>) -> Result<StepOutputs> {
+        let m = &self.model;
+        let rb = self.rb();
+        let b = args.tokens.len();
+        if args.kv_len.len() != b {
+            bail!("decode kv_len length {} != batch {b}", args.kv_len.len());
+        }
+        let expect = m.n_layers * b * m.n_kv_heads * args.t_pad * rb;
+        if args.k_codes.len() != expect || args.v_codes.len() != expect {
+            bail!("decode cache size {} != expected {expect}", args.k_codes.len());
+        }
+
+        let vocab = m.vocab_size;
+        let d = m.head_dim;
+        let heads = (m.n_layers * m.n_kv_heads) as f32;
+        let mut logits = vec![0f32; b * vocab];
+        let mut k_out = vec![0u8; m.n_layers * b * m.n_kv_heads * rb];
+        let mut v_out = vec![0u8; m.n_layers * b * m.n_kv_heads * rb];
+        let mut ks_out = vec![1f32; m.n_layers * b * m.n_kv_heads];
+        let mut vs_out = vec![1f32; m.n_layers * b * m.n_kv_heads];
+
+        let mut mean_kv = 0usize;
+        for bi in 0..b {
+            let tok = args.tokens[bi];
+            self.check_token(tok)?;
+            let kv_len = args.kv_len[bi].max(0) as usize;
+            if kv_len > args.t_pad {
+                bail!("decode kv_len {kv_len} exceeds t_pad {}", args.t_pad);
+            }
+            mean_kv += kv_len;
+
+            // Context: quantized history + this token's fresh (exact) rows;
+            // the fresh rows also become the appended cache codes.
+            let mut ctx = self.cached_context(
+                bi, b, kv_len, args.t_pad, args.k_codes, args.k_scales, args.v_codes,
+                args.v_scales,
+            );
+            // cached_context normalized by head count only; re-scale to add
+            // the fresh rows and apply the decayed norm uniformly.
+            ctx.iter_mut().for_each(|x| *x *= heads);
+            let mut fresh = vec![0f32; d];
+            for l in 0..m.n_layers {
+                for h in 0..m.n_kv_heads {
+                    let (k, v) = self.true_rows(l, h, tok, kv_len);
+                    for (f, (kx, vx)) in fresh.iter_mut().zip(k.iter().zip(&v)) {
+                        *f += kx + V_WEIGHT * vx;
+                    }
+                    let (kc, ks) = self.quantize_row(&k);
+                    let (vc, vs) = self.quantize_row(&v);
+                    let base = ((l * b + bi) * m.n_kv_heads + h) * rb;
+                    k_out[base..base + rb].copy_from_slice(&kc);
+                    v_out[base..base + rb].copy_from_slice(&vc);
+                    let sbase = (l * b + bi) * m.n_kv_heads + h;
+                    ks_out[sbase] = ks;
+                    vs_out[sbase] = vs;
+                }
+            }
+            let norm = Self::norm(kv_len + 1) * heads;
+            for (c, f) in ctx.iter_mut().zip(&fresh) {
+                *c = (*c * DECAY + f) / norm;
+            }
+            self.project_logits(tok, &ctx, &mut logits[bi * vocab..(bi + 1) * vocab]);
+        }
+
+        Ok(StepOutputs {
+            logits,
+            k_codes: k_out,
+            k_scales: ks_out,
+            v_codes: v_out,
+            v_scales: vs_out,
+            sim_time_s: self.timing.decode_iter_time(b, (mean_kv / b.max(1)).max(1)),
+        })
+    }
+}
+
+/// Shape buckets for a sim model: powers of two, PJRT-style.
+fn plan_for(model: &ModelSpec, max_batch: usize) -> ExecutionPlan {
+    let mut decode_batches = Vec::new();
+    let mut b = 1usize;
+    let cap = max_batch.max(1).next_power_of_two();
+    while b <= cap {
+        decode_batches.push(b);
+        b *= 2;
+    }
+    let mut decode_t = Vec::new();
+    let mut t = 64usize.min(model.max_seq_len);
+    loop {
+        decode_t.push(t);
+        if t >= model.max_seq_len {
+            break;
+        }
+        t = (t * 2).min(model.max_seq_len);
+    }
+    let chunk_cap = 256usize.min(model.max_seq_len);
+    let mut prefill_chunks = Vec::new();
+    let mut c = 32usize.min(chunk_cap);
+    loop {
+        prefill_chunks.push(c);
+        if c >= chunk_cap {
+            break;
+        }
+        c = (c * 2).min(chunk_cap);
+    }
+    ExecutionPlan { decode_batches, decode_t, prefill_chunks }
+}
+
+/// Seeded `[vocab, dim]` embedding table, round-tripped through groupwise
+/// quantization at the configured weight width (the §4.1 error model).
+fn embedding_table(
+    seed: u64,
+    vocab: usize,
+    dim: usize,
+    model: &ModelSpec,
+    weight: DType,
+) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let table: Vec<f32> = (0..vocab * dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let group = if model.group_size > 0 && vocab % model.group_size == 0 {
+        model.group_size
+    } else {
+        vocab
+    };
+    match weight {
+        DType::Int4 => {
+            QuantizedMatrix::quantize(&table, vocab, dim, GroupwiseQuant::int4(group)).dequantize()
+        }
+        DType::Int8 => {
+            QuantizedMatrix::quantize(&table, vocab, dim, GroupwiseQuant::int8(group)).dequantize()
+        }
+        _ => table,
+    }
+}
+
+fn model_config_of(spec: &ModelSpec) -> ModelConfig {
+    ModelConfig {
+        name: spec.name.clone(),
+        n_layers: spec.n_layers,
+        d_model: spec.d_model,
+        n_heads: spec.n_heads,
+        n_kv_heads: spec.n_kv_heads,
+        head_dim: spec.head_dim,
+        d_ff: spec.d_ff,
+        vocab_size: spec.vocab_size,
+        max_seq_len: spec.max_seq_len,
+        n_experts: 1,
+        experts_per_token: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(format: &str) -> SimBackend {
+        SimBackend::new(ModelSpec::tiny(), format.parse().unwrap(), 0, 4).unwrap()
+    }
+
+    fn empty_cache(b: &SimBackend, t_pad: usize) -> (Vec<u8>, Vec<f32>) {
+        let m = b.model();
+        let n = m.n_layers * m.n_kv_heads * t_pad;
+        (vec![0u8; n * b.rb()], vec![1f32; n])
+    }
+
+    fn prefill_chunk(b: &SimBackend, tokens: &[i32]) -> StepOutputs {
+        let t_pad = b.model().max_seq_len;
+        let (kc, ks) = empty_cache(b, t_pad);
+        let (vc, vs) = (kc.clone(), ks.clone());
+        let mut padded = tokens.to_vec();
+        padded.resize(32, 0);
+        b.prefill(&PrefillArgs {
+            tokens: &padded,
+            real: tokens.len(),
+            pos: 0,
+            t_pad,
+            k_codes: &kc,
+            k_scales: &ks,
+            v_codes: &vc,
+            v_scales: &vs,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn prefill_shapes_and_determinism() {
+        let b = backend("W4A16KV8");
+        let out1 = prefill_chunk(&b, &[5, 17, 99]);
+        let out2 = prefill_chunk(&b, &[5, 17, 99]);
+        let m = b.model();
+        assert_eq!(out1.logits.len(), 32 * m.vocab_size);
+        assert_eq!(out1.k_codes.len(), m.n_layers * m.n_kv_heads * 32 * b.rb());
+        assert_eq!(out1.k_scales.len(), m.n_layers * m.n_kv_heads * 32);
+        assert_eq!(out1.logits, out2.logits, "same seed+input must be bit-identical");
+        assert_eq!(out1.k_codes, out2.k_codes);
+        assert!(out1.sim_time_s > 0.0, "gpusim timing must be attached");
+    }
+
+    #[test]
+    fn logits_depend_on_tokens_and_weight_precision() {
+        let b = backend("W4A16KV8");
+        let a = prefill_chunk(&b, &[5, 17, 99]);
+        let c = prefill_chunk(&b, &[5, 17, 100]);
+        assert_ne!(a.logits[2 * 2048..3 * 2048], c.logits[2 * 2048..3 * 2048]);
+
+        let w16 = backend("W16A16KV8");
+        let d = prefill_chunk(&w16, &[5, 17, 99]);
+        assert_ne!(
+            a.logits[2 * 2048..3 * 2048],
+            d.logits[2 * 2048..3 * 2048],
+            "weight quantization must perturb logits"
+        );
+    }
+
+    #[test]
+    fn kv_precision_changes_row_bytes_not_first_chunk_logits() {
+        // Chunk-1 prefill never reads the cache: logits agree across KV
+        // precisions (the Table 1 "first token" equivalence) while the
+        // emitted codes differ in width.
+        let b8 = backend("W4A16KV8");
+        let b4 = backend("W4A16KV4");
+        let b16 = backend("W4A16KV16");
+        let o8 = prefill_chunk(&b8, &[9, 8, 7]);
+        let o4 = prefill_chunk(&b4, &[9, 8, 7]);
+        let o16 = prefill_chunk(&b16, &[9, 8, 7]);
+        assert_eq!(o8.logits, o4.logits);
+        assert_eq!(o8.logits, o16.logits);
+        assert_eq!(o4.k_codes.len() * 2, o8.k_codes.len());
+        assert_eq!(o8.k_codes.len() * 4, o16.k_codes.len());
+    }
+
+    #[test]
+    fn decode_reads_the_cache() {
+        // Same input token, different cached histories ⇒ different logits.
+        let b = backend("W4A16KV8");
+        let m = b.model();
+        let t_pad = 64;
+        let run = |hist_tok: i32| {
+            let n = m.n_layers * m.n_kv_heads * t_pad;
+            let mut kc = vec![0u8; n * b.rb()];
+            let mut ks = vec![1f32; n];
+            let mut vc = kc.clone();
+            let mut vs = ks.clone();
+            // Store one history token's rows at t=0 via the backend's own
+            // quantizer to mimic the pool contents.
+            for l in 0..m.n_layers {
+                for h in 0..m.n_kv_heads {
+                    let (k, v) = b.true_rows(l, h, hist_tok, 0);
+                    let (kq, kqs) = b.quantize_row(&k);
+                    let (vq, vqs) = b.quantize_row(&v);
+                    let base = ((l * m.n_kv_heads + h) * t_pad) * b.rb();
+                    kc[base..base + b.rb()].copy_from_slice(&kq);
+                    vc[base..base + b.rb()].copy_from_slice(&vq);
+                    let sbase = (l * m.n_kv_heads + h) * t_pad;
+                    ks[sbase] = kqs;
+                    vs[sbase] = vqs;
+                }
+            }
+            b.decode(&DecodeArgs {
+                tokens: &[42],
+                kv_len: &[1],
+                t_pad,
+                k_codes: &kc,
+                k_scales: &ks,
+                v_codes: &vc,
+                v_scales: &vs,
+            })
+            .unwrap()
+            .logits
+        };
+        assert_ne!(run(7), run(8), "decode logits must depend on cached KV");
+    }
+
+    #[test]
+    fn batch_slots_are_independent() {
+        // Slot 0's logits must not change when a second slot is added —
+        // the property that makes greedy outputs scheduler-invariant.
+        let b = backend("W4A16KV8");
+        let m = b.model();
+        let t_pad = 64;
+        let n1 = m.n_layers * m.n_kv_heads * t_pad;
+        let (kc1, ks1) = (vec![0u8; n1 * b.rb()], vec![1f32; n1]);
+        let solo = b
+            .decode(&DecodeArgs {
+                tokens: &[3],
+                kv_len: &[0],
+                t_pad,
+                k_codes: &kc1,
+                k_scales: &ks1,
+                v_codes: &kc1,
+                v_scales: &ks1,
+            })
+            .unwrap();
+        let n2 = m.n_layers * 2 * m.n_kv_heads * t_pad;
+        let (kc2, ks2) = (vec![0u8; n2 * b.rb()], vec![1f32; n2]);
+        let duo = b
+            .decode(&DecodeArgs {
+                tokens: &[3, 200],
+                kv_len: &[0, 0],
+                t_pad,
+                k_codes: &kc2,
+                k_scales: &ks2,
+                v_codes: &kc2,
+                v_scales: &ks2,
+            })
+            .unwrap();
+        assert_eq!(solo.logits[..2048], duo.logits[..2048]);
+    }
+
+    #[test]
+    fn plan_buckets_cover_the_model() {
+        let b = backend("W4A16KV8");
+        let p = b.plan();
+        assert!(p.decode_batches.contains(&4));
+        assert_eq!(*p.decode_t.last().unwrap(), b.model().max_seq_len);
+        assert!(p.prefill_chunks.contains(&128));
+    }
+
+    #[test]
+    fn fp8_weights_rejected() {
+        let err = SimBackend::new(ModelSpec::tiny(), "W8FA16KV8".parse().unwrap(), 0, 4)
+            .unwrap_err();
+        assert!(err.to_string().contains("fp8"), "{err}");
+    }
+
+    #[test]
+    fn bad_tokens_rejected() {
+        let b = backend("W4A16KV8");
+        let t_pad = b.model().max_seq_len;
+        let (kc, ks) = empty_cache(&b, t_pad);
+        let err = b
+            .prefill(&PrefillArgs {
+                tokens: &[9999; 32],
+                real: 1,
+                pos: 0,
+                t_pad,
+                k_codes: &kc,
+                k_scales: &ks,
+                v_codes: &kc,
+                v_scales: &ks,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("vocab"), "{err}");
+    }
+}

@@ -1,12 +1,16 @@
-//! Host-side tensors and conversions to/from PJRT `Literal`s.
+//! Host-side tensors (and, behind the `pjrt` feature, conversions to/from
+//! PJRT `Literal`s).
 //!
-//! The engine moves four dtypes across the PJRT boundary: `f32` activations
-//! and scales, `i32` tokens/lengths, and `i8`/`u8` quantized codes. A
-//! [`HostTensor`] owns raw little-endian bytes plus shape/dtype metadata —
-//! the same layout the weight binaries use, so weight loading is a single
-//! read + slice.
+//! The engine moves four dtypes across the backend boundary: `f32`
+//! activations and scales, `i32` tokens/lengths, and `i8`/`u8` quantized
+//! codes. A [`HostTensor`] owns raw little-endian bytes plus shape/dtype
+//! metadata — the same layout the weight binaries use, so weight loading is
+//! a single read + slice.
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
 use xla::{ArrayShape, ElementType, Literal};
 
 /// Element types crossing the PJRT boundary.
@@ -26,6 +30,7 @@ impl Dt {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_element_type(self) -> ElementType {
         match self {
             Dt::F32 => ElementType::F32,
@@ -134,6 +139,7 @@ impl HostTensor {
     }
 
     /// Convert to a PJRT `Literal` (copies the bytes).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         Literal::create_from_shape_and_untyped_data(
             self.dtype.to_element_type(),
@@ -144,6 +150,7 @@ impl HostTensor {
     }
 
     /// Convert a PJRT `Literal` back to a host tensor.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
         let arr = ArrayShape::try_from(&shape).map_err(|e| anyhow!("array shape: {e:?}"))?;
@@ -163,6 +170,7 @@ impl HostTensor {
 
 /// Copy a literal's elements out as little-endian bytes. Uses the crate's
 /// typed `copy_raw_to` (a direct memcpy) per dtype.
+#[cfg(feature = "pjrt")]
 fn literal_bytes(lit: &Literal, dtype: Dt, n: usize) -> Result<Vec<u8>> {
     match dtype {
         Dt::F32 => {

@@ -6,16 +6,23 @@
 //!
 //! The listener thread accepts connections and forwards requests over a
 //! channel to the engine thread, which loops `engine.step()`; responses
-//! travel back through per-request channels. One engine thread (the PJRT
-//! executables are not thread-safe to share mutably) — concurrency comes
-//! from continuous batching, exactly like production single-GPU serving.
+//! travel back through per-request channels. One engine thread (execution
+//! backends are not thread-safe to share mutably) — concurrency comes from
+//! continuous batching, exactly like production single-GPU serving. The
+//! engine's backend is whatever `EngineConfig.backend` selected: the
+//! hermetic sim backend by default, PJRT artifacts behind the feature.
+//!
+//! Protocol errors (malformed JSON, empty prompt, zero budget) produce a
+//! structured `{"error": ...}` line; the connection stays open. Engine
+//! rejections (oversized requests) come back as normal outputs with
+//! `"finish": "aborted"`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
 use crate::util::json::{arr, obj, Json};
@@ -58,12 +65,28 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
         // tx dropped here once the accept loop ends.
     });
 
-    // Engine loop on this thread: admit from the channel, step, dispatch.
+    // Engine loop on this thread: dispatch, admit from the channel, step.
     let mut pending: Vec<(u64, Sender<RequestOutput>)> = Vec::new();
     let mut served = 0usize;
     loop {
+        // Dispatch finished outputs FIRST — `submit` can finish a request
+        // immediately (pool-oversized → Aborted), so outputs may exist
+        // before any step runs, and the loop must never block on the
+        // channel while a client is still waiting for one.
+        for out in engine.take_outputs() {
+            if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
+                let (_, reply) = pending.remove(pos);
+                let _ = reply.send(out);
+                served += 1;
+            }
+        }
+        if let Some(maxr) = max_requests {
+            if served >= maxr && !engine.has_work() {
+                return Ok(());
+            }
+        }
         // Admit all queued requests without blocking; block only when the
-        // engine is idle.
+        // engine is idle (and, per the above, nothing awaits dispatch).
         loop {
             let inbound = if engine.has_work() {
                 match rx.try_recv() {
@@ -78,7 +101,13 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
                 }
             };
             match engine.submit(inbound.req) {
-                Ok(id) => pending.push((id, inbound.reply)),
+                Ok(id) => {
+                    pending.push((id, inbound.reply));
+                    if !engine.has_work() {
+                        // Finished at submit time: dispatch before blocking.
+                        break;
+                    }
+                }
                 Err(e) => {
                     // Report rejection as an aborted output.
                     let _ = inbound.reply.send(RequestOutput {
@@ -94,18 +123,6 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
             }
         }
         engine.step()?;
-        for out in engine.take_outputs() {
-            if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
-                let (_, reply) = pending.remove(pos);
-                let _ = reply.send(out);
-                served += 1;
-            }
-        }
-        if let Some(maxr) = max_requests {
-            if served >= maxr && !engine.has_work() {
-                return Ok(());
-            }
-        }
     }
 }
 
@@ -126,7 +143,9 @@ fn handle_conn(stream: TcpStream, tx: Sender<Inbound>) -> Result<()> {
                 let out = rrx.recv().map_err(|_| anyhow!("engine dropped request"))?;
                 encode_output(&out)
             }
-            Err(e) => obj([("error", Json::from(e.to_string()))]),
+            // Malformed input never drops the connection: the client gets a
+            // structured error line and the stream stays usable.
+            Err(e) => encode_error(&e.to_string()),
         };
         writer.write_all(response.dump().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -135,7 +154,10 @@ fn handle_conn(stream: TcpStream, tx: Sender<Inbound>) -> Result<()> {
     Ok(())
 }
 
-/// Parse a request line.
+/// Parse a request line. Rejects malformed JSON, non-integer tokens, empty
+/// prompts, and a zero `max_new_tokens` budget — all before anything
+/// reaches the engine, so protocol errors never consume scheduler
+/// iterations.
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let prompt = v
@@ -144,23 +166,40 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .iter()
         .map(|t| t.as_i64().map(|x| x as i32).ok_or_else(|| anyhow!("bad token")))
         .collect::<Result<Vec<i32>>>()?;
-    let max_new = v.get("max_new_tokens").and_then(Json::as_usize).unwrap_or(16);
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let max_new = match v.get("max_new_tokens") {
+        None => 16,
+        Some(m) => m.as_usize().ok_or_else(|| anyhow!("bad max_new_tokens"))?,
+    };
+    if max_new == 0 {
+        bail!("max_new_tokens must be >= 1");
+    }
     let stop = v.get("stop_token").and_then(Json::as_i64).map(|x| x as i32);
     Ok(Request { prompt, max_new_tokens: max_new, stop_token: stop })
 }
 
-/// Encode an output line.
+/// Encode a structured protocol-error line: `{"error": "..."}`.
+pub fn encode_error(msg: &str) -> Json {
+    obj([("error", Json::from(msg))])
+}
+
+/// Encode an output line. `ttft_s` is `null` when no token was ever
+/// emitted (aborted requests carry `ttft = NaN` internally, and JSON has
+/// no NaN — serializing it bare would corrupt the protocol line).
 pub fn encode_output(out: &RequestOutput) -> Json {
     let finish = match out.finish {
         FinishReason::Length => "length",
         FinishReason::Stop => "stop",
         FinishReason::Aborted => "aborted",
     };
+    let ttft = if out.ttft.is_finite() { Json::from(out.ttft) } else { Json::Null };
     obj([
         ("id", Json::from(out.id as f64)),
         ("tokens", arr(out.tokens.iter().map(|&t| Json::from(t as i64)))),
         ("finish", Json::from(finish)),
-        ("ttft_s", Json::from(out.ttft)),
+        ("ttft_s", ttft),
         ("latency_s", Json::from(out.latency)),
         ("prompt_len", Json::from(out.prompt_len)),
     ])
@@ -218,6 +257,53 @@ mod tests {
         assert!(parse_request("not json").is_err());
         assert!(parse_request(r#"{"max_new_tokens": 5}"#).is_err());
         assert!(parse_request(r#"{"prompt": ["a"]}"#).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_empty_prompt() {
+        let err = parse_request(r#"{"prompt": []}"#).unwrap_err();
+        assert!(err.to_string().contains("empty prompt"), "{err}");
+    }
+
+    #[test]
+    fn parse_request_rejects_zero_budget() {
+        let err = parse_request(r#"{"prompt": [1], "max_new_tokens": 0}"#).unwrap_err();
+        assert!(err.to_string().contains("max_new_tokens"), "{err}");
+        // …and a non-integer budget is an error, not a silent default.
+        assert!(parse_request(r#"{"prompt": [1], "max_new_tokens": "lots"}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new_tokens": 2.5}"#).is_err());
+    }
+
+    #[test]
+    fn parse_request_rejects_non_integer_tokens() {
+        assert!(parse_request(r#"{"prompt": [1, 2.5]}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1, null]}"#).is_err());
+        assert!(parse_request(r#"{"prompt": 7}"#).is_err());
+    }
+
+    #[test]
+    fn aborted_output_with_nan_ttft_is_valid_json() {
+        // Submit-time aborts never emit a first token, so ttft is NaN
+        // internally; the wire line must still be parseable JSON.
+        let out = RequestOutput {
+            id: 1,
+            tokens: vec![],
+            finish: FinishReason::Aborted,
+            ttft: f64::NAN,
+            latency: 0.0,
+            prompt_len: 9,
+        };
+        let line = encode_output(&out).dump();
+        let parsed = Json::parse(&line).expect("aborted line must parse");
+        assert_eq!(parsed.req_str("finish").unwrap(), "aborted");
+        assert_eq!(parsed.get("ttft_s"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn error_lines_are_structured_json() {
+        let j = encode_error("bad json: trailing characters at byte 3");
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert!(parsed.req_str("error").unwrap().contains("bad json"));
     }
 
     #[test]

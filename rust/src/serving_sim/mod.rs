@@ -370,6 +370,26 @@ mod tests {
     }
 
     #[test]
+    fn sim_precision_labels_match_paper_notation() {
+        assert_eq!(SimPrecision::w4a16kv16().label(), "W4A16KV16");
+        assert_eq!(SimPrecision::w4a16kv8().label(), "W4A16KV8");
+        assert_eq!(SimPrecision::w4a16kv4().label(), "W4A16KV4");
+        assert_eq!(SimPrecision::w4a8kv4().label(), "W4A8KV4");
+        assert_eq!(SimPrecision::w16a16kv16().label(), "W16A16KV16");
+        // Labels round-trip through the engine's PrecisionFormat notation.
+        for p in [
+            SimPrecision::w4a16kv16(),
+            SimPrecision::w4a16kv8(),
+            SimPrecision::w4a16kv4(),
+            SimPrecision::w4a8kv4(),
+            SimPrecision::w16a16kv16(),
+        ] {
+            let parsed: crate::config::PrecisionFormat = p.label().parse().unwrap();
+            assert_eq!(parsed.to_string(), p.label());
+        }
+    }
+
+    #[test]
     fn completes_all_requests() {
         let s = sim(Framework::TurboMind, SimPrecision::w4a16kv8(), 32);
         let trace = chat_trace(4.0, 200);

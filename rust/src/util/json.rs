@@ -44,7 +44,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity; emit null rather than a
+                    // bare token that corrupts the document.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -195,9 +199,16 @@ impl From<bool> for Json {
 }
 
 /// JSON parse/shape error.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json: {0}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError(pub String);
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json: {}", self.0)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
@@ -443,6 +454,15 @@ mod tests {
     fn integers_dump_without_fraction() {
         assert_eq!(Json::Num(42.0).dump(), "42");
         assert_eq!(Json::Num(2.5).dump(), "2.5");
+    }
+
+    #[test]
+    fn non_finite_dumps_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        // The resulting document stays parseable.
+        let doc = Json::Obj([("x".to_string(), Json::Num(f64::NAN))].into_iter().collect());
+        assert_eq!(Json::parse(&doc.dump()).unwrap().get("x"), Some(&Json::Null));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Server + failure-injection integration tests (need artifacts).
+//! Server + failure-injection integration tests on the hermetic sim
+//! backend: a real TCP listener, real client threads, the real engine loop.
 
 use std::thread;
 
@@ -6,29 +7,18 @@ use turbomind::config::EngineConfig;
 use turbomind::coordinator::{Engine, FinishReason, Request};
 use turbomind::server::{serve, Client};
 
-fn artifacts_dir() -> Option<String> {
-    let dir = std::env::var("TM_ARTIFACTS")
-        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
-    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
-}
-
-fn cfg() -> Option<EngineConfig> {
-    Some(EngineConfig {
-        artifacts_dir: artifacts_dir()?,
+fn cfg() -> EngineConfig {
+    EngineConfig {
         precision: "W4A16KV8".parse().unwrap(),
         max_batch: 4,
         kv_pool_tokens: 16 * 256,
         ..EngineConfig::default()
-    })
+    }
 }
 
 #[test]
 fn tcp_roundtrip_two_clients() {
-    let Some(c) = cfg() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
-    let engine = Engine::new(c).unwrap();
+    let engine = Engine::new(cfg()).unwrap();
     let addr = "127.0.0.1:7391";
 
     let mk_client = |tag: i32| {
@@ -55,11 +45,7 @@ fn tcp_roundtrip_two_clients() {
 
 #[test]
 fn tcp_rejects_malformed_and_oversized() {
-    let Some(c) = cfg() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
-    let engine = Engine::new(c).unwrap();
+    let engine = Engine::new(cfg()).unwrap();
     let addr = "127.0.0.1:7392";
     let h = thread::spawn(move || {
         use std::io::{BufRead, BufReader, Write};
@@ -70,22 +56,27 @@ fn tcp_rejects_malformed_and_oversized() {
             }
         };
         let mut reader = BufReader::new(stream.try_clone().unwrap());
-        // Malformed JSON → error response, connection stays usable.
-        stream.write_all(b"this is not json\n").unwrap();
         let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
+        let mut roundtrip = |req: &str, line: &mut String| {
+            stream.write_all(req.as_bytes()).unwrap();
+            line.clear();
+            reader.read_line(line).unwrap();
+        };
+        // Malformed JSON → structured error line, connection stays usable.
+        roundtrip("this is not json\n", &mut line);
         assert!(line.contains("error"), "{line}");
-        // Oversized request → aborted output.
+        // Empty prompt and zero budget → protocol errors, not engine work.
+        roundtrip("{\"prompt\": []}\n", &mut line);
+        assert!(line.contains("error") && line.contains("empty prompt"), "{line}");
+        roundtrip("{\"prompt\": [1], \"max_new_tokens\": 0}\n", &mut line);
+        assert!(line.contains("error") && line.contains("max_new_tokens"), "{line}");
+        // Oversized request (over model context) → aborted output.
         let toks: Vec<String> = (0..600).map(|i| (i % 2048).to_string()).collect();
         let req = format!("{{\"prompt\": [{}], \"max_new_tokens\": 4}}\n", toks.join(","));
-        stream.write_all(req.as_bytes()).unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
+        roundtrip(&req, &mut line);
         assert!(line.contains("aborted"), "{line}");
         // A good request still works on the same connection.
-        stream.write_all(b"{\"prompt\": [5, 6, 7], \"max_new_tokens\": 3}\n").unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
+        roundtrip("{\"prompt\": [5, 6, 7], \"max_new_tokens\": 3}\n", &mut line);
         assert!(line.contains("length"), "{line}");
     });
     serve(engine, addr, Some(1)).unwrap();
@@ -96,10 +87,7 @@ fn tcp_rejects_malformed_and_oversized() {
 fn kv_pool_exhaustion_admission_control() {
     // A pool that can only hold ~2 concurrent sequences: the engine must
     // still finish everything (queuing, not crashing) and reclaim blocks.
-    let Some(mut c) = cfg() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let mut c = cfg();
     c.kv_pool_tokens = 16 * 8; // 128 tokens total
     let mut e = Engine::new(c).unwrap();
     for i in 0..4 {
@@ -118,13 +106,44 @@ fn kv_pool_exhaustion_admission_control() {
 }
 
 #[test]
-fn request_larger_than_pool_rejected_at_submit() {
-    let Some(mut c) = cfg() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+fn request_larger_than_pool_aborts_at_submit() {
+    // Regression for the scheduler stall (see coordinator::scheduler): a
+    // request whose KV footprint exceeds the whole pool is finished as
+    // Aborted at submit time instead of idling the engine forever.
+    let mut c = cfg();
     c.kv_pool_tokens = 16 * 4; // 64 tokens
     let mut e = Engine::new(c).unwrap();
-    let err = e.submit(Request::new(vec![1; 100], 8)).unwrap_err();
-    assert!(err.to_string().contains("pool"), "{err}");
+    let id = e.submit(Request::new(vec![1; 100], 8)).unwrap();
+    assert!(!e.has_work(), "aborted request must not occupy the queue");
+    let outs = e.take_outputs();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].id, id);
+    assert_eq!(outs[0].finish, FinishReason::Aborted);
+    assert_eq!(e.stats.aborted, 1);
+}
+
+#[test]
+fn oversized_for_pool_reported_as_aborted_over_tcp() {
+    // The TCP surface of the same regression: the client gets a normal
+    // response line with "finish": "aborted", not a dropped connection.
+    let mut c = cfg();
+    c.kv_pool_tokens = 16 * 4; // 64 tokens
+    let engine = Engine::new(c).unwrap();
+    let addr = "127.0.0.1:7393";
+    let h = thread::spawn(move || {
+        let mut client = loop {
+            match Client::connect(addr) {
+                Ok(cl) => break cl,
+                Err(_) => thread::sleep(std::time::Duration::from_millis(30)),
+            }
+        };
+        let prompt: Vec<i32> = (0..100).map(|j| j % 2048).collect();
+        let resp = client.generate(&prompt, 8).unwrap();
+        assert_eq!(resp.req_str("finish").unwrap(), "aborted");
+        // …and the connection still serves a feasible request.
+        let resp = client.generate(&[5, 6, 7], 3).unwrap();
+        assert_eq!(resp.req_str("finish").unwrap(), "length");
+    });
+    serve(engine, addr, Some(2)).unwrap();
+    h.join().unwrap();
 }

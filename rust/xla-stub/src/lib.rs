@@ -1,0 +1,189 @@
+//! Hermetic stub of the `xla` PJRT bindings.
+//!
+//! The turbomind `pjrt` feature compiles against exactly the API surface
+//! below (see `runtime/client.rs` and `runtime/tensor.rs`). This stub keeps
+//! that path *compiling* in environments without the real PJRT C API or any
+//! network access; every runtime entry point fails with a clear error so a
+//! misconfigured deployment cannot silently produce garbage.
+//!
+//! To run real AOT artifacts, replace the `xla = { path = "xla-stub" }`
+//! dependency with the actual bindings (same crate name and API).
+
+use std::fmt;
+
+/// Error type returned by every stubbed entry point.
+#[derive(Clone)]
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: this build links the hermetic xla stub. \
+         Point the `xla` dependency at the real PJRT bindings to execute artifacts."
+    ))
+}
+
+/// Element types crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    U8,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+/// A device handle (opaque in the stub).
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A device buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A host-side literal.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self, Error> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn shape(&self) -> Result<Shape, Error> {
+        Err(unavailable("Literal::shape"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn copy_raw_to<T: Copy>(&self, _dst: &mut [T]) -> Result<(), Error> {
+        Err(unavailable("Literal::copy_raw_to"))
+    }
+}
+
+/// A literal's shape.
+#[derive(Debug, Clone)]
+pub struct Shape;
+
+/// A dense array shape: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+impl TryFrom<&Shape> for ArrayShape {
+    type Error = Error;
+
+    fn try_from(_shape: &Shape) -> Result<Self, Error> {
+        Err(unavailable("ArrayShape::try_from"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_clearly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
