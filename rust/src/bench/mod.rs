@@ -29,6 +29,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("fig21", serving_figures::fig21),
         ("fig27", serving_figures::fig27),
         ("fig28", serving_figures::fig28),
+        ("prefix_cache", serving_figures::fig_prefix),
     ]
 }
 

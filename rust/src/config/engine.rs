@@ -65,6 +65,14 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Scheduler policy.
     pub scheduler: SchedulerPolicy,
+    /// Enable the precision-keyed prefix-sharing KV cache: matched full
+    /// prompt blocks are reused from the pool (ref-counted, copy-on-write)
+    /// instead of being re-prefilled. Off by default — with it on, finished
+    /// requests intentionally leave their prompt blocks resident.
+    pub enable_prefix_cache: bool,
+    /// Prefix-cache budget in KV blocks (0 = bounded only by the pool).
+    /// Ignored unless `enable_prefix_cache` is set.
+    pub prefix_cache_blocks: usize,
 }
 
 /// Iteration-level scheduling policy (§5 serving comparisons; the
@@ -93,6 +101,8 @@ impl Default for EngineConfig {
             top_k: 0,
             seed: 0,
             scheduler: SchedulerPolicy::Continuous,
+            enable_prefix_cache: false,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -123,6 +133,15 @@ impl EngineConfig {
         }
         if self.temperature < 0.0 {
             return Err("temperature must be >= 0".into());
+        }
+        if self.enable_prefix_cache
+            && self.prefix_cache_blocks > self.kv_pool_tokens / self.kv_block_tokens
+        {
+            return Err(format!(
+                "prefix_cache_blocks {} exceeds the pool's {} blocks",
+                self.prefix_cache_blocks,
+                self.kv_pool_tokens / self.kv_block_tokens
+            ));
         }
         Ok(())
     }
@@ -165,5 +184,12 @@ mod tests {
         let mut c = EngineConfig::default();
         c.temperature = -1.0;
         assert!(c.validate().is_err());
+
+        let mut c = EngineConfig::default();
+        c.enable_prefix_cache = true;
+        c.prefix_cache_blocks = c.kv_pool_tokens / c.kv_block_tokens + 1;
+        assert!(c.validate().is_err(), "cache budget larger than the pool");
+        c.prefix_cache_blocks = 8;
+        c.validate().unwrap();
     }
 }

@@ -23,7 +23,8 @@ use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
 use super::sampler::Sampler;
 use super::scheduler::{Action, Scheduler};
 use crate::config::{BackendKind, EngineConfig};
-use crate::kvcache::{KvPool, KvPrecision, SeqHandle};
+use crate::kvcache::{KvPool, KvPrecision, PrefixCache, SeqHandle};
+use crate::metrics::PrefixCacheSummary;
 use crate::runtime::{
     DecodeArgs, ExecutionBackend, ModelSpec, PrefillArgs, SimBackend, StepOutputs,
 };
@@ -49,6 +50,8 @@ pub struct EngineStats {
     /// Decode-batch slots wasted on padding (fixed compiled batch sizes).
     pub padded_slots: usize,
     pub aborted: usize,
+    /// Prompt tokens served from the prefix cache instead of prefilling.
+    pub prefill_tokens_skipped: usize,
     /// Modeled device time accumulated by the backend (sim backend only;
     /// the PJRT path is wall-clock-timed by callers instead).
     pub sim_time_s: f64,
@@ -59,6 +62,8 @@ pub struct Engine {
     backend: Box<dyn ExecutionBackend>,
     model: ModelSpec,
     pool: KvPool,
+    /// Prefix-sharing index over `pool` (None when disabled in config).
+    prefix: Option<PrefixCache>,
     cfg: EngineConfig,
     scheduler: Scheduler,
     sampler: Sampler,
@@ -131,12 +136,18 @@ impl Engine {
             cfg.kv_block_tokens,
             cfg.kv_pool_tokens,
         )?;
+        // The index is keyed by the pool's KV precision, so a kv8 engine's
+        // cached blocks can never satisfy a kv4 lookup (and vice versa).
+        let prefix = cfg
+            .enable_prefix_cache
+            .then(|| PrefixCache::new(kv_prec, cfg.kv_block_tokens, cfg.prefix_cache_blocks));
         let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
         let rng = crate::util::rng::Rng::new(cfg.seed);
         Ok(Self {
             backend,
             model: m,
             pool,
+            prefix,
             scheduler: Scheduler::new(cfg.scheduler),
             sampler,
             rng,
@@ -219,6 +230,21 @@ impl Engine {
         &self.pool
     }
 
+    /// Fraction of pool blocks currently in use (shared blocks count once).
+    pub fn pool_utilization(&self) -> f64 {
+        self.pool.used_blocks() as f64 / self.pool.total_blocks() as f64
+    }
+
+    /// Prefix-cache effectiveness counters (None when the cache is off).
+    pub fn prefix_cache_summary(&self) -> Option<PrefixCacheSummary> {
+        self.prefix.as_ref().map(|pc| PrefixCacheSummary::from(pc.stats))
+    }
+
+    /// Blocks currently pinned by the prefix cache.
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map(PrefixCache::cached_blocks).unwrap_or(0)
+    }
+
     /// One engine iteration.
     pub fn step(&mut self) -> Result<StepReport> {
         let admissible = self.head_admissible();
@@ -268,8 +294,62 @@ impl Engine {
         if s.handle.is_some() {
             return true; // already admitted, mid-prefill
         }
-        // Conservative reservation: full prompt + generation budget.
-        self.pool.can_reserve(s.prompt.len() + s.max_new_tokens)
+        // Conservative reservation: full prompt + generation budget — minus
+        // whatever prefix the cache already holds resident (those blocks
+        // are adopted, not allocated), and counting unreferenced cached
+        // blocks as free since they evict on demand. The matched blocks
+        // themselves are excluded from the evictable credit: they are about
+        // to be adopted, so counting their tokens off `need` AND their
+        // blocks as evictable would double-count capacity.
+        let mut need = s.prompt.len() + s.max_new_tokens;
+        if self.pool.blocks_for(need) <= self.pool.free_blocks() {
+            return true; // fits without touching the cache at all
+        }
+        let mut avail = self.pool.free_blocks();
+        if let Some(pc) = &self.prefix {
+            let hit = pc.peek_hit_tokens(&s.prompt, self.prefix_match_cap(s.prompt.len()));
+            need -= hit;
+            avail += pc
+                .evictable_blocks(&self.pool)
+                .saturating_sub(hit / self.pool.block_tokens());
+        }
+        self.pool.blocks_for(need) <= avail
+    }
+
+    /// The effective prefill chunk: an uncached prefill's chunk boundaries
+    /// fall on multiples of this (the configured chunk, rounded to the
+    /// compiled bucket that actually executes it).
+    fn effective_prefill_chunk(&self) -> usize {
+        let chunks = &self.backend.plan().prefill_chunks;
+        chunks
+            .iter()
+            .copied()
+            .filter(|&c| c >= self.cfg.prefill_chunk)
+            .min()
+            .unwrap_or_else(|| chunks.iter().copied().max().expect("no prefill chunks"))
+    }
+
+    /// Longest prefix the cache may serve for a `prompt_len`-token prompt:
+    /// capped at the final chunk boundary — the last chunk always reruns,
+    /// so its logits (and the sampled first token) are bit-identical to an
+    /// uncached run at every KV precision — and rounded down to whole
+    /// blocks (the index only holds full blocks).
+    fn prefix_match_cap(&self, prompt_len: usize) -> usize {
+        let eff = self.effective_prefill_chunk();
+        let cap = (prompt_len.saturating_sub(1) / eff) * eff;
+        cap - cap % self.pool.block_tokens()
+    }
+
+    /// Evict unreferenced prefix-cache blocks until at least `needed`
+    /// blocks are free (or nothing more can be evicted).
+    fn make_room(&mut self, needed: usize) {
+        if let Some(pc) = self.prefix.as_mut() {
+            while self.pool.free_blocks() < needed {
+                if !pc.evict_one(&mut self.pool) {
+                    break;
+                }
+            }
+        }
     }
 
     /// Pick the compiled prefill bucket for `remaining` prompt tokens.
@@ -314,20 +394,42 @@ impl Engine {
         let t_pad = m.max_seq_len;
         let rb = self.pool.row_bytes();
 
-        // Admit if new.
-        {
-            let s = self.seqs.get_mut(&id).unwrap();
-            if s.handle.is_none() {
-                s.handle = Some(self.pool.alloc_seq());
-                s.phase = Phase::Prefilling;
+        // Admit if new: allocate the sequence and consult the prefix index
+        // before any prefill work — matched full blocks are adopted
+        // (ref-counted) and their tokens never rerun.
+        if self.seqs[&id].handle.is_none() {
+            let prompt_len = self.seqs[&id].prompt.len();
+            let cap = self.prefix_match_cap(prompt_len);
+            let handle = self.pool.alloc_seq();
+            let mut hit_tokens = 0usize;
+            if let Some(pc) = self.prefix.as_mut() {
+                let (tokens, blocks) = pc.lookup(&self.seqs[&id].prompt, cap);
+                if tokens > 0 {
+                    self.pool.adopt_blocks(handle, &blocks, tokens)?;
+                    hit_tokens = tokens;
+                }
             }
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.handle = Some(handle);
+            s.phase = Phase::Prefilling;
+            s.prefill_pos = hit_tokens;
+            s.prefix_hit_tokens = hit_tokens;
+            // Adopted blocks are already in the index by definition.
+            s.indexed_blocks = hit_tokens / self.pool.block_tokens();
+            self.stats.prefill_tokens_skipped += hit_tokens;
         }
 
         let (handle, pos, chunk_tokens, bucket, real) = {
             let s = &self.seqs[&id];
             let rem = s.remaining_prompt();
-            let bucket = self.prefill_bucket(rem);
-            let real = rem.min(bucket);
+            // Chunk ends align to absolute multiples of the effective
+            // chunk, so a prefix-seeded prefill (prefill_pos > 0) walks the
+            // same chunk boundaries — and computes the same logits — as an
+            // uncached run of the same prompt.
+            let eff = self.effective_prefill_chunk();
+            let want = rem.min(eff - s.prefill_pos % eff);
+            let bucket = self.prefill_bucket(want);
+            let real = want.min(bucket);
             let mut toks: Vec<i32> = s.prompt[s.prefill_pos..s.prefill_pos + real].to_vec();
             toks.resize(bucket, 0);
             (s.handle.unwrap(), s.prefill_pos, toks, bucket, real)
@@ -360,7 +462,13 @@ impl Engine {
         })?;
         self.stats.sim_time_s += out.sim_time_s;
 
-        // Store the real tokens' KV.
+        // Store the real tokens' KV, evicting unreferenced cached blocks
+        // if the free list can't cover the chunk's new blocks.
+        let new_blocks = self
+            .pool
+            .blocks_for(self.pool.seq_len(handle) + real)
+            .saturating_sub(self.pool.seq_blocks(handle).len());
+        self.make_room(new_blocks);
         if let Err(e) = self.pool.append_chunk(
             handle,
             real,
@@ -371,6 +479,22 @@ impl Engine {
             &out.v_scales,
         ) {
             return self.abort(id, e);
+        }
+
+        // Index the sequence's now-complete full prompt blocks so other
+        // requests can start sharing them immediately, even mid-prefill.
+        // Chunks that complete no new full block skip the chain walk.
+        if self.prefix.is_some() {
+            let bt = self.pool.block_tokens();
+            let n_full = (self.seqs[&id].prefill_pos + real) / bt;
+            if n_full > self.seqs[&id].indexed_blocks {
+                let blocks: Vec<usize> = self.pool.seq_blocks(handle)[..n_full].to_vec();
+                let s = &self.seqs[&id];
+                if let Some(pc) = self.prefix.as_mut() {
+                    pc.insert(&mut self.pool, &s.prompt[..n_full * bt], &blocks);
+                }
+                self.seqs.get_mut(&id).unwrap().indexed_blocks = n_full;
+            }
         }
 
         let mut emitted = vec![];
@@ -445,6 +569,18 @@ impl Engine {
         })?;
         self.stats.sim_time_s += out.sim_time_s;
 
+        // Sequences sitting at a block boundary will allocate on append;
+        // evict unreferenced cached blocks first if the free list is dry.
+        let bt = self.pool.block_tokens();
+        let mut need_blocks = 0usize;
+        for id in &ids {
+            let h = self.seqs[id].handle.unwrap();
+            if self.pool.seq_len(h) % bt == 0 {
+                need_blocks += 1;
+            }
+        }
+        self.make_room(need_blocks);
+
         // Append each live sequence's new KV codes ([L,B,Hkv,rb] layout).
         let mut emitted = vec![];
         let mut finished = vec![];
@@ -507,6 +643,7 @@ impl Engine {
                 .unwrap_or(f64::NAN),
             latency: now.duration_since(s.submitted).as_secs_f64(),
             prompt_len: s.prompt.len(),
+            prefix_hit_tokens: s.prefix_hit_tokens,
         });
         self.seqs.remove(&id);
     }

@@ -56,6 +56,9 @@ pub struct RequestOutput {
     /// Total request latency (submit → finish), seconds.
     pub latency: f64,
     pub prompt_len: usize,
+    /// Prompt tokens served from the prefix cache (prefill skipped); 0
+    /// when the cache is disabled or nothing matched.
+    pub prefix_hit_tokens: usize,
 }
 
 /// Internal per-sequence engine state.
@@ -69,8 +72,14 @@ pub(crate) struct SeqState {
     pub max_new_tokens: usize,
     pub stop_token: Option<i32>,
     pub phase: Phase,
-    /// Prompt tokens prefilled so far.
+    /// Prompt tokens prefilled so far (starts at the prefix-cache hit
+    /// length — matched tokens are already resident and never re-run).
     pub prefill_pos: usize,
+    /// Prompt tokens adopted from the prefix cache at admission.
+    pub prefix_hit_tokens: usize,
+    /// Full prompt blocks already registered in the prefix index (skips
+    /// re-walking the chain when a chunk completes no new full block).
+    pub indexed_blocks: usize,
     pub handle: Option<crate::kvcache::SeqHandle>,
     pub submitted: Instant,
     pub first_token: Option<Instant>,
@@ -86,6 +95,8 @@ impl SeqState {
             stop_token: req.stop_token,
             phase: Phase::Waiting,
             prefill_pos: 0,
+            prefix_hit_tokens: 0,
+            indexed_blocks: 0,
             handle: None,
             submitted: now,
             first_token: None,

@@ -40,7 +40,12 @@ impl Scheduler {
     ///
     /// * `waiting` — queued requests not yet admitted (or mid-prefill —
     ///   prefill continues until the prompt is fully processed).
-    /// * `admissible` — whether the head-of-queue request fits (KV budget).
+    /// * `admissible` — whether the head-of-queue request fits the KV
+    ///   budget. The engine computes this prefix-cache-aware: tokens whose
+    ///   blocks are already resident in the prefix index cost nothing, and
+    ///   unreferenced cached blocks count as free (they evict on demand),
+    ///   so shared-prefix requests admit earlier than their raw footprint
+    ///   suggests.
     /// * `running` — sequences currently decoding.
     /// * `max_batch` — decode batch capacity.
     pub fn next_action(

@@ -7,7 +7,15 @@
 //! tables, vLLM-style). Codes are stored exactly as the AOT graphs emit
 //! them — the pool never re-quantizes — and gathered into the padded
 //! `[L, B, Hkv, T, …]` batch tensors the decode graphs consume.
+//!
+//! Blocks are ref-counted so they can be **shared across sequences**: the
+//! [`prefix`] module keeps a precision-keyed radix index of full prompt
+//! blocks over the pool, giving copy-on-write prefix reuse (shared system
+//! prompts, multi-turn histories) with LRU eviction of unreferenced cached
+//! blocks when the free list runs dry.
 
 pub mod pool;
+pub mod prefix;
 
 pub use pool::{KvPool, KvPrecision, SeqHandle};
+pub use prefix::{PrefixCache, PrefixCacheStats};

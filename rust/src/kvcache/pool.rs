@@ -24,12 +24,15 @@ impl KvPrecision {
         })
     }
 
-    /// Bytes per KV row of `head_dim` elements.
+    /// Bytes per KV row of `head_dim` elements. Int4 packs two codes per
+    /// byte and rounds odd head dims *up* to a whole byte (the analogue of
+    /// the paper's adaptive head alignment) — `head_dim / 2` would silently
+    /// drop the last nibble.
     pub fn row_bytes(self, head_dim: usize) -> usize {
         match self {
             KvPrecision::F32 => head_dim * 4,
             KvPrecision::Int8 => head_dim,
-            KvPrecision::Int4 => head_dim / 2,
+            KvPrecision::Int4 => head_dim.div_ceil(2),
         }
     }
 
@@ -55,6 +58,14 @@ struct SeqState {
 }
 
 /// The paged pool.
+///
+/// Blocks are **ref-counted**: a block may be owned by several sequences
+/// at once (prefix sharing via [`KvPool::adopt_blocks`] / forking via
+/// [`KvPool::fork_seq`]) and additionally retained by an external index
+/// (the prefix cache, [`crate::kvcache::PrefixCache`]). A block returns to
+/// the free list only when its last reference drops. Appending into a
+/// *shared* partially-filled block copies it first (copy-on-write), so
+/// divergence never corrupts another owner's view.
 #[derive(Debug)]
 pub struct KvPool {
     precision: KvPrecision,
@@ -68,6 +79,8 @@ pub struct KvPool {
     /// scales arena: `n_blocks × block_tokens × (L × 2 × Hkv)`.
     scales: Vec<f32>,
     free: Vec<usize>,
+    /// Per-block reference count (0 = on the free list).
+    ref_count: Vec<u32>,
     seqs: Vec<SeqState>,
 }
 
@@ -83,6 +96,14 @@ impl KvPool {
         if block_tokens == 0 || pool_tokens % block_tokens != 0 {
             bail!("pool_tokens {pool_tokens} must be a positive multiple of block_tokens {block_tokens}");
         }
+        if n_layers == 0 || kv_heads == 0 || head_dim == 0 {
+            bail!(
+                "pool geometry must be non-zero (layers {n_layers}, kv heads {kv_heads}, head_dim {head_dim})"
+            );
+        }
+        // Odd head dims are legal at every precision: Int4 rows align up to
+        // a whole byte (`KvPrecision::row_bytes`), so the arena below is
+        // sized for the rounded row and no nibble is ever truncated.
         let n_blocks = pool_tokens / block_tokens;
         let token_code_bytes = Self::token_code_bytes_for(precision, n_layers, kv_heads, head_dim);
         let token_scales = n_layers * 2 * kv_heads;
@@ -96,6 +117,7 @@ impl KvPool {
             codes: vec![0u8; n_blocks * block_tokens * token_code_bytes],
             scales: vec![1f32; n_blocks * block_tokens * token_scales],
             free: (0..n_blocks).rev().collect(),
+            ref_count: vec![0; n_blocks],
             seqs: Vec::new(),
         })
     }
@@ -163,15 +185,120 @@ impl KvPool {
         SeqHandle(self.seqs.len() - 1)
     }
 
-    /// Free a sequence's blocks back to the pool.
+    /// Release a sequence's references; blocks with no remaining owner
+    /// (other sequences, the prefix index) return to the free list.
     pub fn free_seq(&mut self, h: SeqHandle) {
         if let Some(s) = self.seqs.get_mut(h.0) {
             if s.alive {
-                self.free.extend(s.blocks.drain(..));
+                let blocks = std::mem::take(&mut s.blocks);
                 s.len = 0;
                 s.alive = false;
+                for b in blocks {
+                    self.release_block(b);
+                }
             }
         }
+    }
+
+    /// Add one reference to an in-use block (the prefix index pinning a
+    /// cached block). Panics on a free block: retaining one would resurrect
+    /// storage another allocation may already have claimed.
+    pub fn retain_block(&mut self, blk: usize) {
+        assert!(
+            blk < self.n_blocks && self.ref_count[blk] > 0,
+            "retain of free/out-of-range KV block {blk}"
+        );
+        self.ref_count[blk] += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list when the
+    /// count reaches zero. Panics on double free.
+    pub fn release_block(&mut self, blk: usize) {
+        assert!(blk < self.n_blocks, "release of out-of-range KV block {blk}");
+        assert!(self.ref_count[blk] > 0, "double free of KV block {blk}");
+        self.ref_count[blk] -= 1;
+        if self.ref_count[blk] == 0 {
+            self.free.push(blk);
+        }
+    }
+
+    /// Current reference count of a block (0 = free).
+    pub fn block_ref_count(&self, blk: usize) -> u32 {
+        self.ref_count.get(blk).copied().unwrap_or(0)
+    }
+
+    /// Blocks currently out of the free list.
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// The ordered pool block ids backing a live sequence (empty for dead
+    /// or unknown handles).
+    pub fn seq_blocks(&self, h: SeqHandle) -> &[usize] {
+        match self.seqs.get(h.0) {
+            Some(s) if s.alive => &s.blocks,
+            _ => &[],
+        }
+    }
+
+    /// Clone a sequence's cache state. The fork shares every block with
+    /// the parent (ref-counted); whichever side appends into the shared
+    /// partial tail block first triggers copy-on-write.
+    pub fn fork_seq(&mut self, h: SeqHandle) -> Result<SeqHandle> {
+        let (blocks, len) = {
+            let s = self.seq_mut(h)?;
+            (s.blocks.clone(), s.len)
+        };
+        for &b in &blocks {
+            self.ref_count[b] += 1;
+        }
+        let nh = self.alloc_seq();
+        let s = self.seqs.get_mut(nh.0).expect("fresh handle");
+        s.blocks = blocks;
+        s.len = len;
+        Ok(nh)
+    }
+
+    /// Seed an **empty** sequence with already-resident shared blocks
+    /// covering exactly `tokens` tokens (full blocks only — the prefix
+    /// cache never indexes partial blocks). Each adopted block gains a
+    /// reference.
+    pub fn adopt_blocks(&mut self, h: SeqHandle, blocks: &[usize], tokens: usize) -> Result<()> {
+        if tokens != blocks.len() * self.block_tokens {
+            bail!(
+                "adopt_blocks: {tokens} tokens != {} full blocks of {}",
+                blocks.len(),
+                self.block_tokens
+            );
+        }
+        {
+            let s = self.seq_mut(h)?;
+            if s.len != 0 || !s.blocks.is_empty() {
+                bail!("adopt_blocks into a non-empty sequence");
+            }
+        }
+        for &b in blocks {
+            if b >= self.n_blocks || self.ref_count[b] == 0 {
+                bail!("adopt_blocks: block {b} is free or out of range");
+            }
+        }
+        for &b in blocks {
+            self.ref_count[b] += 1;
+        }
+        let s = self.seq_mut(h)?;
+        s.blocks = blocks.to_vec();
+        s.len = tokens;
+        Ok(())
+    }
+
+    /// Copy one block's codes + scales arena regions (CoW backing).
+    fn copy_block(&mut self, src: usize, dst: usize) {
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        let (cs, cd) = (src * self.block_tokens * tcb, dst * self.block_tokens * tcb);
+        self.codes.copy_within(cs..cs + self.block_tokens * tcb, cd);
+        let (ss, sd) = (src * self.block_tokens * tsc, dst * self.block_tokens * tsc);
+        self.scales.copy_within(ss..ss + self.block_tokens * tsc, sd);
     }
 
     pub fn seq_len(&self, h: SeqHandle) -> usize {
@@ -191,15 +318,32 @@ impl KvPool {
     }
 
     /// (block_index, slot_in_block) for token `t`, growing if needed.
+    ///
+    /// Appending into a block shared with other owners copies it first
+    /// (copy-on-write) so the other owners' views never change.
     fn slot_for_append(&mut self, h: SeqHandle) -> Result<(usize, usize)> {
         let block_tokens = self.block_tokens;
-        let need_new = {
+        let (len, n_owned) = {
             let s = self.seq_mut(h)?;
-            s.len % block_tokens == 0 && s.len / block_tokens == s.blocks.len()
+            (s.len, s.blocks.len())
         };
-        if need_new {
+        if len % block_tokens == 0 && len / block_tokens == n_owned {
             let blk = self.free.pop().ok_or_else(|| anyhow!("KV pool exhausted"))?;
+            self.ref_count[blk] = 1;
             self.seq_mut(h)?.blocks.push(blk);
+        } else {
+            let idx = len / block_tokens;
+            let cur = self.seq_mut(h)?.blocks[idx];
+            if self.ref_count[cur] > 1 {
+                let fresh = self
+                    .free
+                    .pop()
+                    .ok_or_else(|| anyhow!("KV pool exhausted (copy-on-write)"))?;
+                self.ref_count[fresh] = 1;
+                self.copy_block(cur, fresh);
+                self.ref_count[cur] -= 1; // other owners remain, never hits 0
+                self.seq_mut(h)?.blocks[idx] = fresh;
+            }
         }
         let s = self.seq_mut(h)?;
         let t = s.len;
@@ -560,6 +704,252 @@ mod tests {
                 p.free_seq(h);
             }
             assert_eq!(p.free_blocks(), total);
+        });
+    }
+
+    #[test]
+    fn int4_odd_head_dim_rounds_up() {
+        // head_dim 7 → 4 bytes/row; `head_dim / 2` would have dropped the
+        // 7th element's nibble.
+        assert_eq!(KvPrecision::Int4.row_bytes(7), 4);
+        assert_eq!(KvPrecision::Int4.row_bytes(1), 1);
+        assert_eq!(KvPrecision::Int4.row_bytes(8), 4);
+        let mut p = KvPool::new(KvPrecision::Int4, 1, 1, 7, 2, 8).unwrap();
+        let rb = p.row_bytes();
+        assert_eq!(rb, 4);
+        let h = p.alloc_seq();
+        let k: Vec<u8> = (0..rb).map(|i| 0xA0u8.wrapping_add(i as u8)).collect();
+        let v: Vec<u8> = (0..rb).map(|i| 0x50u8.wrapping_add(i as u8)).collect();
+        let s = vec![0.5f32];
+        p.append_token(h, &k, &s, &v, &s).unwrap();
+        // Gather returns the full rounded row including the tail-nibble byte.
+        let t_pad = 2;
+        let mut k_out = vec![0u8; t_pad * rb];
+        let mut v_out = k_out.clone();
+        let mut ks_out = vec![0f32; t_pad];
+        let mut vs_out = ks_out.clone();
+        p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+            .unwrap();
+        assert_eq!(&k_out[..rb], &k[..]);
+        assert_eq!(&v_out[..rb], &v[..]);
+    }
+
+    #[test]
+    fn odd_head_dims_valid_at_all_precisions() {
+        for prec in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+            for hd in [1usize, 3, 5, 7, 9, 31] {
+                let p = KvPool::new(prec, 2, 2, hd, 4, 16).unwrap();
+                // Arena is sized for the rounded row.
+                assert_eq!(p.token_code_bytes(), 2 * 2 * 2 * prec.row_bytes(hd));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_geometry_rejected_at_construction() {
+        assert!(KvPool::new(KvPrecision::Int8, 0, 2, 8, 4, 32).is_err());
+        assert!(KvPool::new(KvPrecision::Int8, 2, 0, 8, 4, 32).is_err());
+        assert!(KvPool::new(KvPrecision::Int8, 2, 2, 0, 4, 32).is_err());
+    }
+
+    #[test]
+    fn fork_shares_then_cow_on_divergence() {
+        let mut p = pool(KvPrecision::Int8); // 4-token blocks, 8 blocks
+        let h1 = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 1);
+        for _ in 0..6 {
+            p.append_token(h1, &k, &ks, &v, &vs).unwrap();
+        }
+        assert_eq!(p.free_blocks(), 6);
+        let h2 = p.fork_seq(h1).unwrap();
+        assert_eq!(p.free_blocks(), 6, "fork allocates nothing");
+        assert_eq!(p.seq_len(h2), 6);
+        assert_eq!(p.seq_blocks(h1), p.seq_blocks(h2));
+
+        // Divergence: h2 appends → its shared partial tail is copied.
+        let (k9, ks9, v9, vs9) = tok_data(&p, 9);
+        p.append_token(h2, &k9, &ks9, &v9, &vs9).unwrap();
+        assert_eq!(p.free_blocks(), 5, "CoW copied the tail block");
+        assert_eq!(p.seq_blocks(h1)[0], p.seq_blocks(h2)[0], "full block still shared");
+        assert_ne!(p.seq_blocks(h1)[1], p.seq_blocks(h2)[1], "tail diverged");
+        assert_eq!(p.seq_len(h1), 6, "parent view unchanged");
+        assert_eq!(p.seq_len(h2), 7);
+
+        // Parent's gathered bytes are untouched by the fork's append.
+        let t_pad = 8;
+        let rb = p.row_bytes();
+        let gather = |p: &KvPool, h| {
+            let mut k_out = vec![0u8; 2 * 2 * t_pad * rb];
+            let mut v_out = k_out.clone();
+            let mut ks_out = vec![0f32; 2 * 2 * t_pad];
+            let mut vs_out = ks_out.clone();
+            p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+                .unwrap();
+            k_out
+        };
+        let g1 = gather(&p, h1);
+        // Token 5 (slot 1 of the tail block) must still be tag-1 data.
+        assert_eq!(&g1[5 * rb..5 * rb + rb], &k[..rb]);
+
+        p.free_seq(h1);
+        assert_eq!(p.free_blocks(), 6, "h2 still holds its 2 blocks");
+        p.free_seq(h2);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn adopt_blocks_shares_full_blocks() {
+        let mut p = pool(KvPrecision::Int8); // 4-token blocks
+        let h1 = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 2);
+        for _ in 0..8 {
+            p.append_token(h1, &k, &ks, &v, &vs).unwrap();
+        }
+        let shared: Vec<usize> = p.seq_blocks(h1).to_vec();
+        assert_eq!(shared.len(), 2);
+
+        let h2 = p.alloc_seq();
+        p.adopt_blocks(h2, &shared, 8).unwrap();
+        assert_eq!(p.seq_len(h2), 8);
+        assert_eq!(p.free_blocks(), 6, "adoption allocates nothing");
+        for &b in &shared {
+            assert_eq!(p.block_ref_count(b), 2);
+        }
+        // Appending after a full adopted block opens a fresh block — no CoW
+        // needed, the shared blocks stay intact.
+        p.append_token(h2, &k, &ks, &v, &vs).unwrap();
+        assert_eq!(p.free_blocks(), 5);
+        assert_eq!(p.seq_blocks(h2)[..2], shared[..]);
+
+        // Partial adoption is rejected, as is adopting into non-empty seqs.
+        let h3 = p.alloc_seq();
+        assert!(p.adopt_blocks(h3, &shared, 7).is_err(), "non-block-multiple");
+        assert!(p.adopt_blocks(h2, &shared, 8).is_err(), "non-empty target");
+
+        p.free_seq(h1);
+        assert_eq!(p.free_blocks(), 5, "h2 keeps the shared blocks alive");
+        p.free_seq(h2);
+        p.free_seq(h3);
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn retain_release_pins_blocks_like_an_index() {
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 3);
+        for _ in 0..4 {
+            p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        }
+        let b = p.seq_blocks(h)[0];
+        p.retain_block(b);
+        p.free_seq(h);
+        assert_eq!(p.free_blocks(), 7, "retained block survives its sequence");
+        assert_eq!(p.block_ref_count(b), 1);
+        p.release_block(b);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.block_ref_count(b), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_release_panics() {
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 4);
+        p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        let b = p.seq_blocks(h)[0];
+        p.retain_block(b);
+        p.free_seq(h);
+        p.release_block(b); // last reference → block freed
+        p.release_block(b); // double free → panic
+    }
+
+    #[test]
+    fn prop_refcounted_blocks_never_leak_or_double_free() {
+        // Randomized alloc/append/fork/free interleavings, including an
+        // external retainer (the prefix index role). Invariants checked
+        // after every op:
+        //   * free + used == total;
+        //   * each block's ref count equals its occurrences across live
+        //     sequences plus external retains;
+        //   * exactly the zero-ref blocks are free.
+        run_prop("kvpool-refcount", 0x5EED_B10C, 40, |g| {
+            let mut p = KvPool::new(KvPrecision::Int8, 1, 1, 4, 2, 24).unwrap();
+            let total = p.total_blocks();
+            let mut live: Vec<SeqHandle> = Vec::new();
+            let mut retained: Vec<usize> = Vec::new();
+
+            let check = |p: &KvPool, live: &[SeqHandle], retained: &[usize]| {
+                assert_eq!(p.free_blocks() + p.used_blocks(), total);
+                let mut expect = vec![0u32; total];
+                for &h in live {
+                    for &b in p.seq_blocks(h) {
+                        expect[b] += 1;
+                    }
+                }
+                for &b in retained {
+                    expect[b] += 1;
+                }
+                let mut zero_ref = 0usize;
+                for b in 0..total {
+                    assert_eq!(p.block_ref_count(b), expect[b], "block {b} refcount");
+                    if expect[b] == 0 {
+                        zero_ref += 1;
+                    }
+                }
+                assert_eq!(p.free_blocks(), zero_ref, "free list == zero-ref blocks");
+            };
+
+            for _ in 0..g.usize_in(10, 50) {
+                match g.usize_in(0, 4) {
+                    0 => {
+                        live.push(p.alloc_seq());
+                    }
+                    1 if !live.is_empty() => {
+                        let h = *g.choose(&live);
+                        for t in 0..g.usize_in(1, 4) {
+                            let k = vec![t as u8; 4];
+                            let s = vec![1.0f32];
+                            if p.append_token(h, &k, &s, &k, &s).is_err() {
+                                break; // exhausted — fine, accounting must still hold
+                            }
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let h = *g.choose(&live);
+                        if let Ok(nh) = p.fork_seq(h) {
+                            live.push(nh);
+                        }
+                    }
+                    3 if !live.is_empty() => {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let h = live.remove(i);
+                        // Sometimes pin a block first, like the prefix index.
+                        if g.bool() {
+                            if let Some(&b) = p.seq_blocks(h).first() {
+                                p.retain_block(b);
+                                retained.push(b);
+                            }
+                        }
+                        p.free_seq(h);
+                    }
+                    4 if !retained.is_empty() => {
+                        let i = g.usize_in(0, retained.len() - 1);
+                        let b = retained.remove(i);
+                        p.release_block(b);
+                    }
+                    _ => {}
+                }
+                check(&p, &live, &retained);
+            }
+            for h in live.drain(..) {
+                p.free_seq(h);
+            }
+            for b in retained.drain(..) {
+                p.release_block(b);
+            }
+            assert_eq!(p.free_blocks(), total, "everything reclaimed");
         });
     }
 }

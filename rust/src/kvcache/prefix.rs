@@ -1,0 +1,433 @@
+//! Precision-aware prefix-sharing index over the paged KV pool.
+//!
+//! A radix (trie) index keyed by the **chain hash** of full token blocks:
+//! node key `k_i = H(k_{i-1}, tokens of block i)` with the root key derived
+//! from the pool's [`KvPrecision`] and block size. A node maps one full
+//! prompt block to the pool block id holding its quantized KV, so two
+//! requests sharing a prefix at the *same* KV precision reuse the resident
+//! blocks instead of re-prefilling them; KVmix-style mixed deployments
+//! where precision varies per request can never cross-match because the
+//! precision seeds the root of every chain.
+//!
+//! Lifecycle (see DESIGN.md §7):
+//! * the engine **inserts** a sequence's completed full prompt blocks after
+//!   each prefill chunk — each indexed block gains one pool reference
+//!   ([`KvPool::retain_block`]), so it survives its sequence;
+//! * admission **looks up** a new request's prompt and the engine seeds the
+//!   sequence with the matched blocks ([`KvPool::adopt_blocks`]);
+//! * when the free list runs dry, the engine **evicts** least-recently-used
+//!   cached blocks that no sequence references ([`PrefixCache::evict_one`]),
+//!   leaves before parents so every surviving chain stays matchable.
+//!
+//! Keys are 64-bit content hashes; a collision would alias two distinct
+//! prefixes (the standard trade of hash-keyed prefix caches, cf. vLLM's
+//! block hashing). The index never reads block *contents* — at a fixed
+//! (seed, precision) the quantized codes are a pure function of the token
+//! block and its position, which the chain hash pins.
+
+use std::collections::{HashMap, HashSet};
+
+use super::pool::{KvPool, KvPrecision};
+
+/// Effectiveness counters (exported through
+/// [`crate::metrics::PrefixCacheSummary`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Admission lookups performed.
+    pub lookups: usize,
+    /// Lookups that matched at least one block.
+    pub hits: usize,
+    /// Prompt tokens served from resident blocks (prefill skipped).
+    pub hit_tokens: usize,
+    /// Blocks handed out to requests instead of being re-prefilled.
+    pub blocks_shared: usize,
+    /// Blocks registered into the index.
+    pub inserted_blocks: usize,
+    /// Cached blocks evicted back to the free list.
+    pub evicted_blocks: usize,
+}
+
+#[derive(Debug)]
+struct Node {
+    /// Pool block id holding this prefix block's quantized KV.
+    block: usize,
+    /// Chain key of the parent node (the root key for depth-0 nodes).
+    parent: u64,
+    /// Child nodes in the index (eviction runs leaves-first).
+    children: usize,
+    /// LRU clock stamp.
+    last_used: u64,
+}
+
+/// The prefix index. One instance per pool — and therefore per precision.
+#[derive(Debug)]
+pub struct PrefixCache {
+    precision: KvPrecision,
+    block_tokens: usize,
+    /// Max blocks the index may pin (0 = bounded only by the pool).
+    budget_blocks: usize,
+    root: u64,
+    nodes: HashMap<u64, Node>,
+    clock: u64,
+    pub stats: PrefixCacheStats,
+}
+
+/// Root key: seeds every chain with the KV precision and block geometry so
+/// kv16/kv8/kv4 indexes can never alias each other's entries.
+pub(crate) fn root_key(precision: KvPrecision, block_tokens: usize) -> u64 {
+    let tag: u64 = match precision {
+        KvPrecision::F32 => 16,
+        KvPrecision::Int8 => 8,
+        KvPrecision::Int4 => 4,
+    };
+    (0xC0FF_EE00_D15E_A5E5u64 ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((block_tokens as u64).rotate_left(32))
+}
+
+/// FNV-style chain hash of one token block on top of its prefix's key.
+fn chain_key(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = prev ^ 0x9E37_79B9_7F4A_7C15;
+    for &t in tokens {
+        h = (h ^ (t as u32 as u64)).wrapping_mul(0x0100_0000_01B3);
+        h = h.rotate_left(17);
+    }
+    h
+}
+
+impl PrefixCache {
+    pub fn new(precision: KvPrecision, block_tokens: usize, budget_blocks: usize) -> Self {
+        Self {
+            precision,
+            block_tokens,
+            budget_blocks,
+            root: root_key(precision, block_tokens),
+            nodes: HashMap::new(),
+            clock: 0,
+            stats: PrefixCacheStats::default(),
+        }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
+    }
+
+    /// Blocks currently pinned by the index.
+    pub fn cached_blocks(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Matched prefix length for `prompt` without touching LRU state or
+    /// stats (admission feasibility checks run every scheduler iteration).
+    /// At most `max_tokens` tokens match, in whole blocks.
+    pub fn peek_hit_tokens(&self, prompt: &[i32], max_tokens: usize) -> usize {
+        let mut key = self.root;
+        let mut tokens = 0usize;
+        for chunk in prompt.chunks_exact(self.block_tokens) {
+            if tokens + self.block_tokens > max_tokens {
+                break;
+            }
+            key = chain_key(key, chunk);
+            if !self.nodes.contains_key(&key) {
+                break;
+            }
+            tokens += self.block_tokens;
+        }
+        tokens
+    }
+
+    /// Match `prompt`'s longest indexed full-block prefix (≤ `max_tokens`
+    /// tokens): returns the matched token count and the resident pool block
+    /// ids, in order. Bumps LRU stamps and records stats — call once per
+    /// admission; the caller adopts the blocks via [`KvPool::adopt_blocks`].
+    pub fn lookup(&mut self, prompt: &[i32], max_tokens: usize) -> (usize, Vec<usize>) {
+        self.stats.lookups += 1;
+        let mut key = self.root;
+        let mut tokens = 0usize;
+        let mut blocks = Vec::new();
+        for chunk in prompt.chunks_exact(self.block_tokens) {
+            if tokens + self.block_tokens > max_tokens {
+                break;
+            }
+            key = chain_key(key, chunk);
+            let Some(n) = self.nodes.get_mut(&key) else { break };
+            self.clock += 1;
+            n.last_used = self.clock;
+            blocks.push(n.block);
+            tokens += self.block_tokens;
+        }
+        if tokens > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += tokens;
+            self.stats.blocks_shared += blocks.len();
+        }
+        (tokens, blocks)
+    }
+
+    /// Register `prompt`'s full blocks (backed by `blocks`, one pool block
+    /// id per full block, in order) into the index. Already-indexed
+    /// prefixes just get their LRU stamps refreshed; new nodes retain their
+    /// pool block. Inserting stops early if the budget is full and nothing
+    /// is evictable.
+    pub fn insert(&mut self, pool: &mut KvPool, prompt: &[i32], blocks: &[usize]) {
+        let mut key = self.root;
+        for (i, chunk) in prompt.chunks_exact(self.block_tokens).enumerate() {
+            if i >= blocks.len() {
+                break;
+            }
+            let parent = key;
+            key = chain_key(key, chunk);
+            if let Some(n) = self.nodes.get_mut(&key) {
+                // Prefix already cached (possibly backed by another
+                // sequence's block) — keep the first mapping, refresh LRU.
+                self.clock += 1;
+                n.last_used = self.clock;
+                continue;
+            }
+            if self.budget_blocks > 0 && self.nodes.len() >= self.budget_blocks {
+                // Make room within the budget; if every cached block is in
+                // use, stop indexing this chain (deeper nodes would be
+                // unreachable anyway).
+                if !self.evict_one(pool) {
+                    break;
+                }
+            }
+            pool.retain_block(blocks[i]);
+            self.clock += 1;
+            self.nodes.insert(
+                key,
+                Node { block: blocks[i], parent, children: 0, last_used: self.clock },
+            );
+            if parent != self.root {
+                if let Some(p) = self.nodes.get_mut(&parent) {
+                    p.children += 1;
+                }
+            }
+            self.stats.inserted_blocks += 1;
+        }
+    }
+
+    /// Cached blocks that could be reclaimed by (possibly repeated)
+    /// [`PrefixCache::evict_one`] calls right now: nodes whose block no
+    /// sequence references and whose subtree holds no in-use block either.
+    /// The engine adds this to the free-block count when deciding
+    /// admissibility.
+    pub fn evictable_blocks(&self, pool: &KvPool) -> usize {
+        let mut pinned: HashSet<u64> = HashSet::new();
+        for (&key, node) in &self.nodes {
+            if pool.block_ref_count(node.block) > 1 {
+                // In use by a sequence: pin this node and all ancestors.
+                let mut cur = key;
+                while pinned.insert(cur) {
+                    match self.nodes.get(&cur) {
+                        Some(n) if n.parent != self.root => cur = n.parent,
+                        _ => break,
+                    }
+                }
+            }
+        }
+        self.nodes.len() - pinned.len()
+    }
+
+    /// Evict the least-recently-used unreferenced **leaf** back to the
+    /// pool's free list. Returns false when nothing is evictable (every
+    /// cached block is owned by a live sequence or shields one). Leaves go
+    /// first so every surviving chain remains matchable from the root.
+    pub fn evict_one(&mut self, pool: &mut KvPool) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.children == 0 && pool.block_ref_count(n.block) == 1)
+            .min_by_key(|(_, n)| n.last_used)
+            .map(|(&k, _)| k);
+        let Some(k) = victim else { return false };
+        let n = self.nodes.remove(&k).expect("victim exists");
+        if n.parent != self.root {
+            if let Some(p) = self.nodes.get_mut(&n.parent) {
+                p.children -= 1;
+            }
+        }
+        pool.release_block(n.block);
+        self.stats.evicted_blocks += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BT: usize = 4;
+
+    /// 1-layer, 1-head, head_dim-4 pool with 4-token blocks.
+    fn pool(blocks: usize) -> KvPool {
+        KvPool::new(KvPrecision::Int8, 1, 1, 4, BT, blocks * BT).unwrap()
+    }
+
+    /// Append `prompt` into a fresh sequence; returns its full-block ids.
+    fn fill(p: &mut KvPool, prompt: &[i32]) -> (crate::kvcache::SeqHandle, Vec<usize>) {
+        let h = p.alloc_seq();
+        for &t in prompt {
+            let k = vec![t as u8; 4];
+            let s = vec![1.0f32];
+            p.append_token(h, &k, &s, &k, &s).unwrap();
+        }
+        let full = prompt.len() / BT;
+        (h, p.seq_blocks(h)[..full].to_vec())
+    }
+
+    fn prompt(n: usize, tag: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| tag * 1000 + i).collect()
+    }
+
+    #[test]
+    fn insert_then_lookup_matches_whole_blocks() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(KvPrecision::Int8, BT, 0);
+        let pr = prompt(12, 1); // 3 full blocks
+        let (_h, blocks) = fill(&mut p, &pr);
+        c.insert(&mut p, &pr, &blocks);
+        assert_eq!(c.cached_blocks(), 3);
+
+        let (tokens, got) = c.lookup(&pr, usize::MAX);
+        assert_eq!(tokens, 12);
+        assert_eq!(got, blocks);
+
+        // Diverging in the last block matches only the first two.
+        let mut pr2 = pr.clone();
+        pr2[10] = -7;
+        let (tokens, got) = c.lookup(&pr2, usize::MAX);
+        assert_eq!(tokens, 8);
+        assert_eq!(got, blocks[..2]);
+
+        // Shorter than one block: no match, counted as a miss.
+        let (tokens, got) = c.lookup(&pr[..3], usize::MAX);
+        assert_eq!((tokens, got.len()), (0, 0));
+        assert_eq!(c.stats.lookups, 3);
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.hit_tokens, 20);
+    }
+
+    #[test]
+    fn lookup_respects_max_tokens_cap() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(KvPrecision::Int8, BT, 0);
+        let pr = prompt(16, 2);
+        let (_h, blocks) = fill(&mut p, &pr);
+        c.insert(&mut p, &pr, &blocks);
+        // Cap below one block → nothing; cap mid-block → whole blocks only.
+        assert_eq!(c.peek_hit_tokens(&pr, 3), 0);
+        assert_eq!(c.peek_hit_tokens(&pr, 9), 8);
+        let (tokens, got) = c.lookup(&pr, 9);
+        assert_eq!(tokens, 8);
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn peek_is_pure() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(KvPrecision::Int8, BT, 0);
+        let pr = prompt(8, 3);
+        let (_h, blocks) = fill(&mut p, &pr);
+        c.insert(&mut p, &pr, &blocks);
+        let stats_before = c.stats;
+        assert_eq!(c.peek_hit_tokens(&pr, usize::MAX), 8);
+        assert_eq!(c.stats, stats_before, "peek must not touch stats");
+    }
+
+    #[test]
+    fn precision_and_geometry_seed_distinct_key_spaces() {
+        // kv16/kv8/kv4 chains can never alias: the precision seeds the
+        // root, so the same token block hashes to different keys.
+        let roots = [
+            root_key(KvPrecision::F32, BT),
+            root_key(KvPrecision::Int8, BT),
+            root_key(KvPrecision::Int4, BT),
+            root_key(KvPrecision::Int8, 2 * BT),
+        ];
+        for i in 0..roots.len() {
+            for j in i + 1..roots.len() {
+                assert_ne!(roots[i], roots[j], "roots {i} and {j} collide");
+            }
+        }
+        let toks = prompt(BT, 4);
+        assert_ne!(
+            chain_key(root_key(KvPrecision::Int8, BT), &toks),
+            chain_key(root_key(KvPrecision::Int4, BT), &toks),
+            "same tokens at different KV precisions must never match"
+        );
+    }
+
+    #[test]
+    fn cached_blocks_survive_their_sequence_and_evict_lru() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(KvPrecision::Int8, BT, 0);
+        let pr_a = prompt(8, 5);
+        let (ha, blocks_a) = fill(&mut p, &pr_a);
+        c.insert(&mut p, &pr_a, &blocks_a);
+        let pr_b = prompt(8, 6);
+        let (hb, blocks_b) = fill(&mut p, &pr_b);
+        c.insert(&mut p, &pr_b, &blocks_b);
+
+        p.free_seq(ha);
+        p.free_seq(hb);
+        assert_eq!(p.used_blocks(), 4, "index keeps all 4 blocks resident");
+        assert_eq!(c.evictable_blocks(&p), 4);
+
+        // Touch chain A so B becomes the LRU chain; evictions then take
+        // B's leaf, then B's root, then A's leaf, then A's root.
+        let (tokens, _) = c.lookup(&pr_a, usize::MAX);
+        assert_eq!(tokens, 8);
+        assert!(c.evict_one(&mut p));
+        assert!(c.evict_one(&mut p));
+        assert_eq!(c.cached_blocks(), 2);
+        assert_eq!(c.lookup(&pr_b, usize::MAX).0, 0, "B fully evicted");
+        assert_eq!(c.lookup(&pr_a, usize::MAX).0, 8, "A untouched");
+        assert!(c.evict_one(&mut p));
+        assert!(c.evict_one(&mut p));
+        assert!(!c.evict_one(&mut p), "index empty");
+        assert_eq!(p.free_blocks(), p.total_blocks());
+        assert_eq!(c.stats.evicted_blocks, 4);
+    }
+
+    #[test]
+    fn in_use_blocks_are_never_evicted_and_pin_ancestors() {
+        let mut p = pool(8);
+        let mut c = PrefixCache::new(KvPrecision::Int8, BT, 0);
+        let pr = prompt(12, 7); // blocks: b0 → b1 → b2
+        let (h, blocks) = fill(&mut p, &pr);
+        c.insert(&mut p, &pr, &blocks);
+        p.free_seq(h);
+
+        // A second sequence adopts the first two blocks: b0, b1 in use.
+        let h2 = p.alloc_seq();
+        p.adopt_blocks(h2, &blocks[..2], 8).unwrap();
+        assert_eq!(c.evictable_blocks(&p), 1, "only the b2 leaf is free to go");
+        assert!(c.evict_one(&mut p), "evicts b2");
+        assert!(!c.evict_one(&mut p), "b0/b1 are in use");
+        assert_eq!(c.cached_blocks(), 2);
+
+        p.free_seq(h2);
+        assert_eq!(c.evictable_blocks(&p), 2);
+        assert!(c.evict_one(&mut p) && c.evict_one(&mut p));
+        assert_eq!(p.free_blocks(), p.total_blocks());
+    }
+
+    #[test]
+    fn budget_caps_the_index() {
+        let mut p = pool(16);
+        let mut c = PrefixCache::new(KvPrecision::Int8, BT, 2);
+        let pr_a = prompt(12, 8); // wants 3 nodes, budget is 2
+        let (ha, blocks_a) = fill(&mut p, &pr_a);
+        c.insert(&mut p, &pr_a, &blocks_a);
+        assert_eq!(c.cached_blocks(), 2, "third block skipped: nothing evictable");
+
+        // Once A's sequence is gone, a new chain displaces the old one.
+        p.free_seq(ha);
+        let pr_b = prompt(12, 9);
+        let (_hb, blocks_b) = fill(&mut p, &pr_b);
+        c.insert(&mut p, &pr_b, &blocks_b);
+        assert_eq!(c.cached_blocks(), 2);
+        assert!(c.stats.evicted_blocks >= 1);
+        assert_eq!(c.lookup(&pr_b, usize::MAX).0, 8);
+    }
+}

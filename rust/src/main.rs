@@ -24,7 +24,7 @@ use turbomind::util::args::Args;
 use turbomind::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help"]);
+    let args = Args::from_env(&["help", "prefix-cache"]);
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -44,13 +44,19 @@ turbomind — mixed-precision LLM serving (TurboMind reproduction)
 USAGE:
   turbomind serve [--addr HOST:PORT] [--precision WxAyKVz] [--backend sim|pjrt]
                   [--artifacts DIR] [--max-batch N] [--max-requests N]
-  turbomind bench <fig11|fig12|...|fig28|table2|all>
+                  [--prefix-cache] [--prefix-cache-blocks N]
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|all>
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
 
 The default backend is `sim`: the deterministic pure-Rust execution backend
 (no artifacts needed). `--backend pjrt` drives the AOT HLO artifacts and
 requires a binary built with `--features pjrt`.
+
+`--prefix-cache` enables the prefix-sharing KV cache: requests with a
+common prompt prefix (shared system prompts, multi-turn histories) reuse
+resident pool blocks instead of re-prefilling them; responses then report
+`prefix_hit_tokens` and `{\"stats\": true}` reports the hit rate.
 ";
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -71,6 +77,8 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         temperature: args.get_f64("temperature", 0.0) as f32,
         top_k: args.get_usize("top-k", 0),
         seed: args.get_u64("seed", 0),
+        enable_prefix_cache: args.flag("prefix-cache"),
+        prefix_cache_blocks: args.get_usize("prefix-cache-blocks", 0),
         ..EngineConfig::default()
     })
 }

@@ -1,5 +1,48 @@
 //! Serving metrics: latency percentiles, TTFT, and throughput — the three
-//! evaluation metrics of §5.1.
+//! evaluation metrics of §5.1 — plus the prefix-cache effectiveness summary
+//! (hit rate, blocks saved, prefill tokens skipped).
+
+use crate::kvcache::PrefixCacheStats;
+
+/// Prefix-cache effectiveness, derived from the engine's
+/// [`PrefixCacheStats`] counters. This is what the server's stats line and
+/// the bench tables report.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheSummary {
+    /// Admission lookups.
+    pub lookups: usize,
+    /// Lookups matching at least one block.
+    pub hits: usize,
+    /// Pool blocks reused instead of re-prefilled.
+    pub blocks_saved: usize,
+    /// Prompt tokens whose prefill was skipped entirely.
+    pub prefill_tokens_skipped: usize,
+    /// Cached blocks reclaimed under memory pressure.
+    pub evicted_blocks: usize,
+}
+
+impl PrefixCacheSummary {
+    /// Fraction of admissions that reused at least one resident block.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+impl From<PrefixCacheStats> for PrefixCacheSummary {
+    fn from(s: PrefixCacheStats) -> Self {
+        Self {
+            lookups: s.lookups,
+            hits: s.hits,
+            blocks_saved: s.blocks_shared,
+            prefill_tokens_skipped: s.hit_tokens,
+            evicted_blocks: s.evicted_blocks,
+        }
+    }
+}
 
 /// Accumulates per-request measurements and computes the paper's metrics.
 #[derive(Debug, Default, Clone)]
@@ -148,5 +191,22 @@ mod tests {
         let p = percentiles(&[5.0, 1.0, 3.0, 2.0, 4.0]).unwrap();
         assert_eq!(p.p50, 3.0);
         assert_eq!(p.max, 5.0);
+    }
+
+    #[test]
+    fn prefix_cache_summary_hit_rate() {
+        assert_eq!(PrefixCacheSummary::default().hit_rate(), 0.0, "no lookups → 0, not NaN");
+        let s = PrefixCacheSummary::from(PrefixCacheStats {
+            lookups: 4,
+            hits: 3,
+            hit_tokens: 96,
+            blocks_shared: 6,
+            inserted_blocks: 8,
+            evicted_blocks: 2,
+        });
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.blocks_saved, 6);
+        assert_eq!(s.prefill_tokens_skipped, 96);
+        assert_eq!(s.evicted_blocks, 2);
     }
 }

@@ -2,7 +2,11 @@
 //!
 //! Protocol (one JSON object per line):
 //!   → `{"prompt": [1,2,3], "max_new_tokens": 16}`
-//!   ← `{"id": 0, "tokens": [...], "finish": "length", "ttft_s": ..., "latency_s": ...}`
+//!   ← `{"id": 0, "tokens": [...], "finish": "length", "ttft_s": ..., "latency_s": ...,
+//!      "prefix_hit_tokens": 0}`
+//!   → `{"stats": true}`
+//!   ← `{"pool_blocks_total": ..., "pool_blocks_free": ..., "pool_utilization": ...,
+//!      "prefix_cache_enabled": ..., "prefix_cache_hit_rate": ..., ...}`
 //!
 //! The listener thread accepts connections and forwards requests over a
 //! channel to the engine thread, which loops `engine.step()`; responses
@@ -27,10 +31,13 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
 use crate::util::json::{arr, obj, Json};
 
-/// A request forwarded from a connection to the engine thread.
-struct Inbound {
-    req: Request,
-    reply: Sender<RequestOutput>,
+/// A message forwarded from a connection to the engine thread.
+enum Inbound {
+    /// A generation request; the output travels back on `reply`.
+    Gen { req: Request, reply: Sender<RequestOutput> },
+    /// A `{"stats": true}` probe: answered immediately from engine state
+    /// (pool utilization, prefix-cache hit rate), no scheduling involved.
+    Stats { reply: Sender<Json> },
 }
 
 /// Serve `engine` on `addr` (e.g. `127.0.0.1:7181`).
@@ -38,7 +45,8 @@ struct Inbound {
 /// The engine loop runs on the **calling** thread (PJRT handles are not
 /// `Send`); a listener thread accepts connections and forwards requests
 /// over a channel. Blocks forever unless `max_requests` is set (tests /
-/// bounded runs): the loop returns after serving that many requests.
+/// bounded runs): the loop returns after serving that many requests
+/// (generation responses and `{"stats": true}` probes both count).
 pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("turbomind serving on {addr}");
@@ -100,9 +108,23 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
                     Err(_) => return Ok(()), // listener and all conns gone
                 }
             };
-            match engine.submit(inbound.req) {
+            let (req, reply) = match inbound {
+                Inbound::Stats { reply } => {
+                    let _ = reply.send(stats_json(&engine));
+                    // Probes count toward `max_requests` (bounded runs stay
+                    // bounded) and break to the outer loop when idle so the
+                    // served-count exit check runs.
+                    served += 1;
+                    if !engine.has_work() {
+                        break;
+                    }
+                    continue;
+                }
+                Inbound::Gen { req, reply } => (req, reply),
+            };
+            match engine.submit(req) {
                 Ok(id) => {
-                    pending.push((id, inbound.reply));
+                    pending.push((id, reply));
                     if !engine.has_work() {
                         // Finished at submit time: dispatch before blocking.
                         break;
@@ -110,13 +132,14 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
                 }
                 Err(e) => {
                     // Report rejection as an aborted output.
-                    let _ = inbound.reply.send(RequestOutput {
+                    let _ = reply.send(RequestOutput {
                         id: u64::MAX,
                         tokens: vec![],
                         finish: FinishReason::Aborted,
                         ttft: f64::NAN,
                         latency: 0.0,
                         prompt_len: 0,
+                        prefix_hit_tokens: 0,
                     });
                     eprintln!("rejected request: {e}");
                 }
@@ -135,17 +158,23 @@ fn handle_conn(stream: TcpStream, tx: Sender<Inbound>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let response = match parse_request(&line) {
-            Ok(req) => {
-                let (rtx, rrx) = mpsc::channel();
-                tx.send(Inbound { req, reply: rtx })
-                    .map_err(|_| anyhow!("engine gone"))?;
-                let out = rrx.recv().map_err(|_| anyhow!("engine dropped request"))?;
-                encode_output(&out)
+        let response = if is_stats_request(&line) {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Inbound::Stats { reply: rtx }).map_err(|_| anyhow!("engine gone"))?;
+            rrx.recv().map_err(|_| anyhow!("engine dropped stats probe"))?
+        } else {
+            match parse_request(&line) {
+                Ok(req) => {
+                    let (rtx, rrx) = mpsc::channel();
+                    tx.send(Inbound::Gen { req, reply: rtx })
+                        .map_err(|_| anyhow!("engine gone"))?;
+                    let out = rrx.recv().map_err(|_| anyhow!("engine dropped request"))?;
+                    encode_output(&out)
+                }
+                // Malformed input never drops the connection: the client
+                // gets a structured error line and the stream stays usable.
+                Err(e) => encode_error(&e.to_string()),
             }
-            // Malformed input never drops the connection: the client gets a
-            // structured error line and the stream stays usable.
-            Err(e) => encode_error(&e.to_string()),
         };
         writer.write_all(response.dump().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -180,6 +209,38 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(Request { prompt, max_new_tokens: max_new, stop_token: stop })
 }
 
+/// Is this line a `{"stats": true}` probe? (Checked before request
+/// parsing; any JSON object carrying a truthy `stats` key qualifies.)
+fn is_stats_request(line: &str) -> bool {
+    Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("stats").and_then(Json::as_bool))
+        .unwrap_or(false)
+}
+
+/// Encode the engine-state stats line: pool utilization plus the
+/// prefix-cache effectiveness summary (hit rate / blocks saved / prefill
+/// tokens skipped — zeros with `"prefix_cache_enabled": false`).
+pub fn stats_json(engine: &Engine) -> Json {
+    let cache = engine.prefix_cache_summary();
+    let c = cache.unwrap_or_default();
+    obj([
+        ("pool_blocks_total", Json::from(engine.kv_pool().total_blocks())),
+        ("pool_blocks_free", Json::from(engine.kv_pool().free_blocks())),
+        ("pool_utilization", Json::from(engine.pool_utilization())),
+        ("prefix_cache_enabled", Json::from(cache.is_some())),
+        // "resident" (current occupancy), distinct from the
+        // `prefix_cache_blocks` config knob (the budget).
+        ("prefix_cache_resident_blocks", Json::from(engine.prefix_cached_blocks())),
+        ("prefix_cache_lookups", Json::from(c.lookups)),
+        ("prefix_cache_hits", Json::from(c.hits)),
+        ("prefix_cache_hit_rate", Json::from(c.hit_rate())),
+        ("prefix_cache_blocks_saved", Json::from(c.blocks_saved)),
+        ("prefill_tokens_skipped", Json::from(c.prefill_tokens_skipped)),
+        ("prefix_cache_evicted_blocks", Json::from(c.evicted_blocks)),
+    ])
+}
+
 /// Encode a structured protocol-error line: `{"error": "..."}`.
 pub fn encode_error(msg: &str) -> Json {
     obj([("error", Json::from(msg))])
@@ -202,6 +263,7 @@ pub fn encode_output(out: &RequestOutput) -> Json {
         ("ttft_s", ttft),
         ("latency_s", Json::from(out.latency)),
         ("prompt_len", Json::from(out.prompt_len)),
+        ("prefix_hit_tokens", Json::from(out.prefix_hit_tokens)),
     ])
 }
 
@@ -229,6 +291,14 @@ impl Client {
         let mut buf = String::new();
         self.reader.read_line(&mut buf)?;
         Json::parse(&buf).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// Probe engine stats (`{"stats": true}` → pool + prefix-cache line).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.stream.write_all(b"{\"stats\": true}\n")?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Json::parse(&buf).map_err(|e| anyhow!("bad stats response: {e}"))
     }
 }
 
@@ -292,6 +362,7 @@ mod tests {
             ttft: f64::NAN,
             latency: 0.0,
             prompt_len: 9,
+            prefix_hit_tokens: 0,
         };
         let line = encode_output(&out).dump();
         let parsed = Json::parse(&line).expect("aborted line must parse");
@@ -315,11 +386,34 @@ mod tests {
             ttft: 0.25,
             latency: 1.5,
             prompt_len: 4,
+            prefix_hit_tokens: 32,
         };
         let j = encode_output(&out);
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.req_usize("id").unwrap(), 3);
         assert_eq!(parsed.req_str("finish").unwrap(), "length");
         assert_eq!(parsed.req_arr("tokens").unwrap().len(), 2);
+        assert_eq!(parsed.req_usize("prefix_hit_tokens").unwrap(), 32);
+    }
+
+    #[test]
+    fn stats_probe_detection() {
+        assert!(is_stats_request(r#"{"stats": true}"#));
+        assert!(!is_stats_request(r#"{"stats": false}"#));
+        assert!(!is_stats_request(r#"{"prompt": [1]}"#), "generation is not a probe");
+        assert!(!is_stats_request("not json"));
+    }
+
+    #[test]
+    fn stats_json_round_trips_with_cache_disabled() {
+        let engine =
+            Engine::new(crate::config::EngineConfig::default()).expect("sim engine");
+        let line = stats_json(&engine).dump();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("prefix_cache_enabled").unwrap().as_bool(), Some(false));
+        assert_eq!(parsed.req_usize("pool_blocks_total").unwrap(), 512);
+        assert_eq!(parsed.req_usize("pool_blocks_free").unwrap(), 512);
+        assert_eq!(parsed.get("pool_utilization").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parsed.get("prefix_cache_hit_rate").unwrap().as_f64(), Some(0.0));
     }
 }

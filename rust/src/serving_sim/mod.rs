@@ -11,6 +11,8 @@
 //! Batch capacity is derived from device memory: weights at the serving
 //! precision plus KV at the serving KV precision must fit the TP group.
 
+use std::collections::HashMap;
+
 use crate::config::{DeviceProfile, ModelConfig};
 use crate::gpusim::{
     AttentionKernelModel, AttnWorkload, Framework, GemmKernelModel, GemmWorkload, KernelTraits,
@@ -60,11 +62,15 @@ pub struct SimConfig {
     pub max_batch: usize,
     /// Prefill chunk length (tokens per prefill iteration).
     pub chunk: usize,
+    /// Model the prefix-sharing KV cache: a request whose
+    /// [`TraceRequest::prefix_group`] prefix is already resident skips
+    /// that much prefill (abstract analogue of the engine's radix index).
+    pub prefix_cache: bool,
 }
 
 impl SimConfig {
     pub fn new(model: ModelConfig, dev: DeviceProfile, fw: Framework, precision: SimPrecision) -> Self {
-        Self { model, dev, fw, precision, tp: 1, max_batch: 0, chunk: 512 }
+        Self { model, dev, fw, precision, tp: 1, max_batch: 0, chunk: 512, prefix_cache: false }
     }
 }
 
@@ -78,6 +84,8 @@ pub struct SimResult {
     pub batch_capacity: usize,
     pub decode_iters: usize,
     pub prefill_iters: usize,
+    /// Prompt tokens skipped via prefix caching (0 when disabled).
+    pub prefill_tokens_skipped: usize,
 }
 
 impl SimResult {
@@ -246,15 +254,31 @@ impl ServingSim {
         let mut metrics = MetricsCollector::new();
         let mut decode_iters = 0usize;
         let mut prefill_iters = 0usize;
+        // Abstract prefix cache: group id → longest resident shared prefix.
+        let mut cached: HashMap<u64, usize> = HashMap::new();
+        let mut prefill_tokens_skipped = 0usize;
 
         let done = |q: &Vec<PendingSeq>, r: &Vec<LiveSeq>, next: usize| {
             q.is_empty() && r.is_empty() && next >= trace.len()
         };
 
         while !done(&queue, &running, next_arrival) {
-            // Admit arrivals up to the clock.
+            // Admit arrivals up to the clock; a request whose group prefix
+            // is already resident skips it (leaving ≥ 1 token to prefill,
+            // like the engine's match cap).
             while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-                queue.push(PendingSeq { idx: next_arrival, prefilled: 0 });
+                let r = &trace[next_arrival];
+                let mut pre = 0usize;
+                if self.cfg.prefix_cache && r.prefix_group != 0 {
+                    pre = cached
+                        .get(&r.prefix_group)
+                        .copied()
+                        .unwrap_or(0)
+                        .min(r.prefix_tokens)
+                        .min(r.prompt_tokens.saturating_sub(1));
+                    prefill_tokens_skipped += pre;
+                }
+                queue.push(PendingSeq { idx: next_arrival, prefilled: pre });
                 next_arrival += 1;
             }
             // Nothing runnable: jump to next arrival.
@@ -274,9 +298,14 @@ impl ServingSim {
                 prefill_iters += 1;
                 head.prefilled += chunk;
                 if head.prefilled >= req.prompt_tokens {
-                    // Prompt done → first token emitted this iteration.
+                    // Prompt done → first token emitted this iteration; its
+                    // shared prefix is now resident for later arrivals.
                     let idx = head.idx;
                     queue.remove(0);
+                    if self.cfg.prefix_cache && trace[idx].prefix_group != 0 {
+                        let e = cached.entry(trace[idx].prefix_group).or_insert(0);
+                        *e = (*e).max(trace[idx].prefix_tokens);
+                    }
                     running.push(LiveSeq {
                         idx,
                         kv_len: req.prompt_tokens,
@@ -335,6 +364,7 @@ impl ServingSim {
             batch_capacity: capacity,
             decode_iters,
             prefill_iters,
+            prefill_tokens_skipped,
         }
     }
 
@@ -342,7 +372,13 @@ impl ServingSim {
     /// available at t=0, report generated tokens/s.
     pub fn max_throughput(&self, n_requests: usize, prompt: usize, gen: usize) -> SimResult {
         let trace: Vec<TraceRequest> = (0..n_requests)
-            .map(|_| TraceRequest { arrival_s: 0.0, prompt_tokens: prompt, gen_tokens: gen })
+            .map(|_| TraceRequest {
+                arrival_s: 0.0,
+                prompt_tokens: prompt,
+                gen_tokens: gen,
+                prefix_group: 0,
+                prefix_tokens: 0,
+            })
             .collect();
         self.run(&trace)
     }
@@ -468,6 +504,40 @@ mod tests {
         assert!(sim(Framework::QServe, SimPrecision::w4a8kv4(), 8).supported());
         assert!(sim(Framework::TurboMind, SimPrecision::w4a16kv4(), 8).supported());
         assert!(!sim(Framework::VllmMarlin, SimPrecision::w4a16kv4(), 8).supported());
+    }
+
+    #[test]
+    fn prefix_cache_cuts_ttft_on_shared_prefix_workload() {
+        use crate::workload::SharedPrefixGen;
+        let trace = SharedPrefixGen {
+            shared_tokens: 2048,
+            users: 8,
+            turns: 3,
+            turn_tokens: 64,
+            gen_tokens: 32,
+            rate: 4.0,
+            seed: 9,
+        }
+        .generate();
+        let mut cfg = SimConfig::new(
+            find_model("qwen3-8b").unwrap(),
+            DeviceProfile::a100(),
+            Framework::TurboMind,
+            SimPrecision::w4a16kv8(),
+        );
+        cfg.max_batch = 16;
+        let off = ServingSim::new(cfg.clone()).run(&trace);
+        assert_eq!(off.prefill_tokens_skipped, 0, "cache off skips nothing");
+        cfg.prefix_cache = true;
+        let on = ServingSim::new(cfg).run(&trace);
+        assert_eq!(on.metrics.count(), trace.len());
+        assert!(on.prefill_tokens_skipped > 0, "warm cache must skip prefill");
+        let (t_on, t_off) = (
+            on.metrics.ttft_percentiles().unwrap().p50,
+            off.metrics.ttft_percentiles().unwrap().p50,
+        );
+        assert!(t_on < t_off, "cached TTFT {t_on} vs uncached {t_off}");
+        assert!(on.makespan_s < off.makespan_s, "less prefill → earlier finish");
     }
 
     #[test]

@@ -18,6 +18,13 @@ pub struct TraceRequest {
     pub arrival_s: f64,
     pub prompt_tokens: usize,
     pub gen_tokens: usize,
+    /// Prefix-sharing group (0 = none): requests in the same group open
+    /// with the same `prefix_tokens`-token prompt prefix, so a
+    /// prefix-caching engine prefills it once. Used by the serving
+    /// simulator's abstract cache model.
+    pub prefix_group: u64,
+    /// Shared-prefix length within `prefix_group`, tokens.
+    pub prefix_tokens: usize,
 }
 
 /// Length distribution family.
@@ -110,7 +117,13 @@ impl WorkloadGen {
                     .clamp(p.min_prompt, p.max_prompt);
                 let gen = (rng.lognormal(p.gen_mu, p.gen_sigma) as usize)
                     .clamp(p.min_gen, p.max_gen);
-                TraceRequest { arrival_s: t, prompt_tokens: prompt, gen_tokens: gen }
+                TraceRequest {
+                    arrival_s: t,
+                    prompt_tokens: prompt,
+                    gen_tokens: gen,
+                    prefix_group: 0,
+                    prefix_tokens: 0,
+                }
             })
             .collect()
     }
@@ -121,9 +134,9 @@ impl WorkloadGen {
         self.generate(n)
             .into_iter()
             .map(|r| TraceRequest {
-                arrival_s: r.arrival_s,
                 prompt_tokens: (r.prompt_tokens * max_prompt / 2048).clamp(1, max_prompt),
                 gen_tokens: (r.gen_tokens * max_gen / 2048).clamp(1, max_gen),
+                ..r
             })
             .collect()
     }
@@ -132,6 +145,80 @@ impl WorkloadGen {
     pub fn prompt_tokens(&self, req_index: usize, len: usize, vocab: usize) -> Vec<i32> {
         let mut rng = Rng::new(self.seed ^ (req_index as u64).wrapping_mul(0x9E3779B97F4A7C15));
         (0..len).map(|_| rng.below(vocab) as i32).collect()
+    }
+}
+
+/// Multi-turn chat over a shared system prompt — the ROADMAP's
+/// million-user traffic shape and the scenario the prefix-sharing KV cache
+/// exists for. Every request's prompt opens with the same
+/// `shared_tokens`-token system + few-shot prefix; each user then holds a
+/// conversation whose prompt grows by the running history (previous turns'
+/// prompts and responses).
+#[derive(Debug, Clone)]
+pub struct SharedPrefixGen {
+    /// Tokens of the common system prompt (shared across *all* users).
+    pub shared_tokens: usize,
+    /// Distinct users (concurrent conversations).
+    pub users: usize,
+    /// Turns per user.
+    pub turns: usize,
+    /// Fresh prompt tokens each user adds per turn.
+    pub turn_tokens: usize,
+    /// Response tokens generated per turn.
+    pub gen_tokens: usize,
+    /// Poisson arrival rate, requests/second.
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl SharedPrefixGen {
+    /// Generate the `users × turns` trace: users interleave round-robin so
+    /// a user's turn k+1 always arrives after its turn k. The advertised
+    /// `prefix_group`/`prefix_tokens` claim only the *system prompt* — the
+    /// conservative, content-safe assertion for the abstract simulator
+    /// model; the engine's radix index additionally matches each user's
+    /// growing history from the real token ids
+    /// ([`SharedPrefixGen::prompt_tokens`]).
+    pub fn generate(&self) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(self.users * self.turns);
+        for turn in 0..self.turns {
+            for _user in 0..self.users {
+                t += rng.exp_gap(self.rate);
+                let history = turn * (self.turn_tokens + self.gen_tokens);
+                out.push(TraceRequest {
+                    arrival_s: t,
+                    prompt_tokens: self.shared_tokens + history + self.turn_tokens,
+                    gen_tokens: self.gen_tokens,
+                    prefix_group: 1,
+                    prefix_tokens: self.shared_tokens,
+                });
+            }
+        }
+        out
+    }
+
+    /// Deterministic token ids for trace request `req_index` (requests are
+    /// ordered as [`SharedPrefixGen::generate`] emits them): the system
+    /// prefix depends only on the seed — bit-identical across every user —
+    /// and each user's history is drawn from one per-user stream, so a
+    /// user's turn-k prompt is a strict prefix of its turn-(k+1) prompt.
+    pub fn prompt_tokens(&self, req_index: usize, vocab: usize) -> Vec<i32> {
+        let user = req_index % self.users;
+        let turn = req_index / self.users;
+        let mut toks = Vec::new();
+        let mut sys = Rng::new(self.seed ^ 0x5957_EA11);
+        for _ in 0..self.shared_tokens {
+            toks.push(sys.below(vocab) as i32);
+        }
+        let mut hist =
+            Rng::new(self.seed ^ (user as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let n = turn * (self.turn_tokens + self.gen_tokens) + self.turn_tokens;
+        for _ in 0..n {
+            toks.push(hist.below(vocab) as i32);
+        }
+        toks
     }
 }
 
@@ -205,5 +292,65 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|&t| (0..2048).contains(&t)));
         assert_ne!(a, g.prompt_tokens(4, 50, 2048));
+    }
+
+    #[test]
+    fn plain_workloads_advertise_no_shared_prefix() {
+        for r in WorkloadGen::new(WorkloadKind::Chat, 2.0, 1).generate(50) {
+            assert_eq!((r.prefix_group, r.prefix_tokens), (0, 0));
+        }
+    }
+
+    fn sp() -> SharedPrefixGen {
+        SharedPrefixGen {
+            shared_tokens: 64,
+            users: 3,
+            turns: 4,
+            turn_tokens: 8,
+            gen_tokens: 6,
+            rate: 5.0,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn shared_prefix_trace_shape() {
+        let g = sp();
+        let trace = g.generate();
+        assert_eq!(trace.len(), 12);
+        for (i, r) in trace.iter().enumerate() {
+            let turn = i / g.users;
+            assert_eq!(r.prompt_tokens, 64 + turn * (8 + 6) + 8);
+            assert_eq!(r.gen_tokens, 6);
+            assert_eq!((r.prefix_group, r.prefix_tokens), (1, 64));
+        }
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_tokens_really_share() {
+        let g = sp();
+        // Every request opens with the identical system prompt…
+        let sys = g.prompt_tokens(0, 2048)[..64].to_vec();
+        for i in 1..12 {
+            assert_eq!(g.prompt_tokens(i, 2048)[..64], sys[..], "request {i}");
+        }
+        // …user 1's turn-0 prompt is a strict prefix of its turn-1 prompt…
+        let t0 = g.prompt_tokens(1, 2048); // user 1, turn 0
+        let t1 = g.prompt_tokens(1 + g.users, 2048); // user 1, turn 1
+        assert!(t1.len() > t0.len());
+        assert_eq!(t1[..t0.len()], t0[..]);
+        // …while different users diverge right after the system prompt.
+        let u2 = g.prompt_tokens(2, 2048);
+        assert_ne!(t0[64..], u2[64..]);
+        // Lengths match the trace, and all ids are in vocab.
+        let trace = g.generate();
+        for (i, r) in trace.iter().enumerate() {
+            let toks = g.prompt_tokens(i, 2048);
+            assert_eq!(toks.len(), r.prompt_tokens, "request {i}");
+            assert!(toks.iter().all(|&t| (0..2048).contains(&t)));
+        }
     }
 }

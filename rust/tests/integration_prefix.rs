@@ -1,0 +1,214 @@
+//! End-to-end tests of the prefix-sharing KV cache on the hermetic sim
+//! backend: block reuse across requests, prefill skipping, bit-identical
+//! outputs vs the cache-disabled engine across KV precisions and scheduler
+//! policies, and LRU eviction under pool pressure.
+
+use turbomind::config::engine::SchedulerPolicy;
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
+
+/// 32-token prefill chunks over 16-token blocks: a 64-token shared prefix
+/// spans 4 blocks and 2 chunks.
+fn cfg(precision: &str, policy: SchedulerPolicy, cache: bool, pool_blocks: usize) -> EngineConfig {
+    EngineConfig {
+        precision: precision.parse().unwrap(),
+        max_batch: 4,
+        kv_block_tokens: 16,
+        kv_pool_tokens: 16 * pool_blocks,
+        prefill_chunk: 32,
+        scheduler: policy,
+        enable_prefix_cache: cache,
+        ..EngineConfig::default()
+    }
+}
+
+fn shared_prefix() -> Vec<i32> {
+    (0..64).map(|i| (i * 7 + 11) % 2048).collect()
+}
+
+/// `shared ++ [base, base+1, …]` — two requests built with different
+/// `base` share exactly the 64-token prefix.
+fn prompt_with_suffix(base: i32) -> Vec<i32> {
+    let mut p = shared_prefix();
+    p.extend((0..8).map(|i| (base + i) % 2048));
+    p
+}
+
+/// Submit → drain one request at a time; returns (output, sim-time delta).
+fn run_one(e: &mut Engine, req: Request) -> (RequestOutput, f64) {
+    let before = e.stats.sim_time_s;
+    e.submit(req).unwrap();
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    (outs.into_iter().next().unwrap(), e.stats.sim_time_s - before)
+}
+
+#[test]
+fn shared_prefix_reuses_blocks_and_outputs_stay_bit_identical() {
+    // The acceptance matrix: kv16 / kv8 / kv4 × both scheduler policies.
+    for prec in ["W4A16KV16", "W4A16KV8", "W4A16KV4"] {
+        for policy in [SchedulerPolicy::Continuous, SchedulerPolicy::Static] {
+            let ctx = format!("{prec} {policy:?}");
+            let req1 = || Request::new(prompt_with_suffix(1000), 6);
+            let req2 = || Request::new(prompt_with_suffix(1500), 6);
+
+            // Cache-disabled baseline.
+            let mut base = Engine::new(cfg(prec, policy, false, 32)).unwrap();
+            let (b1, _) = run_one(&mut base, req1());
+            let (b2, t2_base) = run_one(&mut base, req2());
+            assert_eq!(base.kv_pool().free_blocks(), 32, "{ctx}: baseline reclaims all");
+
+            // Cache-enabled run of the identical workload.
+            let mut e = Engine::new(cfg(prec, policy, true, 32)).unwrap();
+            let (c1, _) = run_one(&mut e, req1());
+            assert_eq!(c1.prefix_hit_tokens, 0, "{ctx}: cold cache");
+            assert_eq!(
+                e.kv_pool().used_blocks(),
+                4,
+                "{ctx}: the 4 full prompt blocks stay resident"
+            );
+            let (c2, t2_cached) = run_one(&mut e, req2());
+
+            // The shared 64 tokens (4 blocks, capped at the final chunk
+            // boundary) are served from the cache…
+            assert_eq!(c2.prefix_hit_tokens, 64, "{ctx}");
+            assert_eq!(e.stats.prefill_tokens_skipped, 64, "{ctx}");
+            // …so the second request's prefill is strictly cheaper in
+            // modeled device time (1 chunk instead of 3).
+            assert!(
+                t2_cached < t2_base,
+                "{ctx}: cached sim time {t2_cached} !< uncached {t2_base}"
+            );
+            // …and decoded outputs are bit-identical to the uncached run.
+            assert_eq!(b1.tokens, c1.tokens, "{ctx}: request 1 diverged");
+            assert_eq!(b2.tokens, c2.tokens, "{ctx}: request 2 diverged");
+            assert_eq!(c1.finish, FinishReason::Length, "{ctx}");
+            assert_eq!(c2.finish, FinishReason::Length, "{ctx}");
+
+            // Only the same 4 shared blocks remain resident afterwards:
+            // request 2 duplicated nothing.
+            assert_eq!(e.kv_pool().used_blocks(), 4, "{ctx}");
+            assert_eq!(e.prefix_cached_blocks(), 4, "{ctx}");
+            let summary = e.prefix_cache_summary().unwrap();
+            assert_eq!(summary.lookups, 2, "{ctx}");
+            assert_eq!(summary.hits, 1, "{ctx}");
+            assert_eq!(summary.blocks_saved, 4, "{ctx}");
+            assert_eq!(summary.prefill_tokens_skipped, 64, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn free_block_count_proves_sharing_mid_flight() {
+    let mut e = Engine::new(cfg("W4A16KV8", SchedulerPolicy::Continuous, true, 32)).unwrap();
+    let (_, _) = run_one(&mut e, Request::new(prompt_with_suffix(1000), 6));
+    assert_eq!(e.kv_pool().used_blocks(), 4);
+
+    // One prefill step of the second request: it adopts the 4 resident
+    // blocks (ref count 2: index + sequence) and allocates exactly one
+    // block of its own for the 8-token suffix — not the 5 a private copy
+    // of the prompt would need.
+    e.submit(Request::new(prompt_with_suffix(1500), 6)).unwrap();
+    e.step().unwrap();
+    assert_eq!(e.kv_pool().used_blocks(), 5, "4 shared + 1 own");
+    let shared: usize = (0..e.kv_pool().total_blocks())
+        .filter(|&b| e.kv_pool().block_ref_count(b) >= 2)
+        .count();
+    assert_eq!(shared, 4, "exactly the prefix blocks are multiply-owned");
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].prefix_hit_tokens, 64);
+}
+
+#[test]
+fn concurrent_submissions_share_and_match_baseline() {
+    // Both requests in flight together: request 1's blocks are indexed
+    // chunk-by-chunk during its prefill, so request 2 hits mid-flight.
+    for policy in [SchedulerPolicy::Continuous, SchedulerPolicy::Static] {
+        let run = |cache: bool| {
+            let mut e = Engine::new(cfg("W4A16KV4", policy, cache, 32)).unwrap();
+            e.submit(Request::new(prompt_with_suffix(1000), 6)).unwrap();
+            e.submit(Request::new(prompt_with_suffix(1500), 6)).unwrap();
+            let mut outs = e.run_to_completion().unwrap();
+            outs.sort_by_key(|o| o.id);
+            let hits: Vec<usize> = outs.iter().map(|o| o.prefix_hit_tokens).collect();
+            let toks: Vec<Vec<i32>> = outs.iter().map(|o| o.tokens.clone()).collect();
+            (toks, hits)
+        };
+        let (toks_off, hits_off) = run(false);
+        let (toks_on, hits_on) = run(true);
+        assert_eq!(toks_off, toks_on, "{policy:?}: caching changed greedy outputs");
+        assert_eq!(hits_off, vec![0, 0], "{policy:?}");
+        assert_eq!(hits_on, vec![0, 64], "{policy:?}: second request hits mid-flight");
+    }
+}
+
+#[test]
+fn lru_eviction_frees_cached_blocks_under_pressure() {
+    // 6-block pool. Request 1 leaves 4 cached blocks; request 2 (different
+    // prompt, needs all 6 blocks) can only run by evicting them — and the
+    // engine admits it because unreferenced cached blocks count as free.
+    let mut e = Engine::new(cfg("W4A16KV8", SchedulerPolicy::Continuous, true, 6)).unwrap();
+    let p1: Vec<i32> = (0..64).map(|i| (i * 3 + 5) % 2048).collect();
+    let (o1, _) = run_one(&mut e, Request::new(p1, 4));
+    assert_eq!(o1.finish, FinishReason::Length);
+    assert_eq!(e.prefix_cached_blocks(), 4);
+    assert_eq!(e.kv_pool().free_blocks(), 2);
+
+    let p2: Vec<i32> = (0..80).map(|i| (i * 13 + 1) % 2048).collect();
+    let (o2, _) = run_one(&mut e, Request::new(p2, 16));
+    assert_eq!(o2.finish, FinishReason::Length, "eviction must make room");
+    assert_eq!(o2.tokens.len(), 16);
+    assert_eq!(o2.prefix_hit_tokens, 0, "different prefix: no reuse");
+    let summary = e.prefix_cache_summary().unwrap();
+    assert_eq!(summary.evicted_blocks, 4, "request 1's cached chain fully evicted");
+    // Request 2's own 5 full prompt blocks are the cache now.
+    assert_eq!(e.prefix_cached_blocks(), 5);
+    assert_eq!(e.kv_pool().free_blocks(), 1);
+}
+
+#[test]
+fn admission_counts_resident_prefix_blocks() {
+    // 6-block pool, identical 64-token prompt twice. Without the prefix
+    // credit the second request would reserve blocks_for(64 + 4) = 5 > 2
+    // free and stall the engine; with it, the 4 resident blocks cover the
+    // prompt and only the tail + generation need allocating.
+    let mut e = Engine::new(cfg("W4A16KV8", SchedulerPolicy::Continuous, true, 6)).unwrap();
+    let p: Vec<i32> = (0..64).map(|i| (i * 5 + 2) % 2048).collect();
+    let (o1, _) = run_one(&mut e, Request::new(p.clone(), 4));
+    assert_eq!(o1.finish, FinishReason::Length);
+    assert_eq!(e.kv_pool().free_blocks(), 2);
+
+    let (o2, _) = run_one(&mut e, Request::new(p, 4));
+    assert_eq!(o2.finish, FinishReason::Length, "must not stall");
+    // Prompt of exactly 64 → the final 32-token chunk reruns, so the hit
+    // is capped at 32 tokens (2 blocks).
+    assert_eq!(o2.prefix_hit_tokens, 32);
+    assert_eq!(o1.tokens, o2.tokens, "same prompt, same greedy outputs");
+}
+
+#[test]
+fn cache_disabled_engine_is_unchanged() {
+    // With the flag off there is no index: nothing stays resident and
+    // responses report zero hits.
+    let mut e = Engine::new(cfg("W4A16KV8", SchedulerPolicy::Continuous, false, 32)).unwrap();
+    let (o1, _) = run_one(&mut e, Request::new(prompt_with_suffix(1000), 6));
+    let (o2, _) = run_one(&mut e, Request::new(prompt_with_suffix(1000), 6));
+    assert_eq!(o1.prefix_hit_tokens, 0);
+    assert_eq!(o2.prefix_hit_tokens, 0);
+    assert_eq!(o1.tokens, o2.tokens);
+    assert!(e.prefix_cache_summary().is_none());
+    assert_eq!(e.kv_pool().free_blocks(), e.kv_pool().total_blocks());
+}
+
+#[test]
+fn prefix_cache_budget_bounds_resident_blocks() {
+    let mut c = cfg("W4A16KV8", SchedulerPolicy::Continuous, true, 32);
+    c.prefix_cache_blocks = 2;
+    let mut e = Engine::new(c).unwrap();
+    let (_, _) = run_one(&mut e, Request::new(prompt_with_suffix(1000), 6));
+    assert!(e.prefix_cached_blocks() <= 2, "budget respected");
+    // A matching request still reuses what fits the budget.
+    let (o2, _) = run_one(&mut e, Request::new(prompt_with_suffix(1500), 6));
+    assert_eq!(o2.prefix_hit_tokens, 32, "2 cached blocks of the shared prefix");
+}

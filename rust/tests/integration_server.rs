@@ -123,6 +123,60 @@ fn request_larger_than_pool_aborts_at_submit() {
 }
 
 #[test]
+fn prefix_hit_tokens_and_stats_round_trip_over_tcp() {
+    // Prefix cache on, 32-token chunks: the same 72-token prompt twice on
+    // one connection. The second response must report the 64 shared tokens
+    // as a hit, and the `{"stats": true}` probe must expose pool
+    // utilization plus the cache hit rate.
+    let mut c = cfg();
+    c.prefill_chunk = 32;
+    c.kv_block_tokens = 16;
+    c.enable_prefix_cache = true;
+    let engine = Engine::new(c).unwrap();
+    let addr = "127.0.0.1:7394";
+    let h = thread::spawn(move || {
+        let mut client = loop {
+            match Client::connect(addr) {
+                Ok(cl) => break cl,
+                Err(_) => thread::sleep(std::time::Duration::from_millis(30)),
+            }
+        };
+        let prompt: Vec<i32> = (0..72).map(|j| (j * 11 + 3) % 2048).collect();
+        let r1 = client.generate(&prompt, 4).unwrap();
+        assert_eq!(r1.req_str("finish").unwrap(), "length");
+        assert_eq!(r1.req_usize("prefix_hit_tokens").unwrap(), 0, "cold cache");
+
+        let r2 = client.generate(&prompt, 4).unwrap();
+        assert_eq!(r2.req_str("finish").unwrap(), "length");
+        // 72-token prompt, 32-token chunks: the final chunk reruns, so the
+        // hit is the first 64 tokens (4 full blocks).
+        assert_eq!(r2.req_usize("prefix_hit_tokens").unwrap(), 64);
+        // Identical prompt + greedy sampling ⇒ identical tokens either way.
+        assert_eq!(
+            r1.req_arr("tokens").unwrap(),
+            r2.req_arr("tokens").unwrap(),
+            "cache reuse changed outputs"
+        );
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("prefix_cache_enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(stats.req_usize("prefix_cache_lookups").unwrap(), 2);
+        assert_eq!(stats.req_usize("prefix_cache_hits").unwrap(), 1);
+        assert_eq!(stats.get("prefix_cache_hit_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(stats.req_usize("prefix_cache_blocks_saved").unwrap(), 4);
+        assert_eq!(stats.req_usize("prefill_tokens_skipped").unwrap(), 64);
+        // The cached blocks keep the pool partially utilized.
+        let total = stats.req_usize("pool_blocks_total").unwrap();
+        let free = stats.req_usize("pool_blocks_free").unwrap();
+        assert_eq!(total - free, 4, "4 prefix blocks resident");
+        assert!(stats.get("pool_utilization").unwrap().as_f64().unwrap() > 0.0);
+    });
+    // Two generations + one stats probe.
+    serve(engine, addr, Some(3)).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
 fn oversized_for_pool_reported_as_aborted_over_tcp() {
     // The TCP surface of the same regression: the client gets a normal
     // response line with "finish": "aborted", not a dropped connection.
