@@ -30,6 +30,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("fig27", serving_figures::fig27),
         ("fig28", serving_figures::fig28),
         ("prefix_cache", serving_figures::fig_prefix),
+        ("preempt", serving_figures::fig_preempt),
     ]
 }
 

@@ -36,6 +36,52 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
+/// What the engine does when the KV pool runs dry mid-flight (DESIGN.md
+/// §8): abort the victim (legacy), swap its blocks to the host-side store,
+/// or drop them and recompute the prefix on resume. Swap and recompute are
+/// **lossless**: the victim re-queues at the head and its final output is
+/// bit-identical to an unpressured run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptionMode {
+    /// Finish the victim with `FinishReason::Aborted` (partial generation
+    /// is still returned). The pre-preemption behavior, and the default.
+    #[default]
+    Abort,
+    /// Copy the victim's KV blocks to the host swap store and restore them
+    /// when blocks free up; falls back to recompute for victims whose
+    /// tokens the prefix index already holds (or when the swap budget is
+    /// full) — whichever the cost model prices cheaper.
+    Swap,
+    /// Release the victim's blocks and re-prefill its prompt + generated
+    /// prefix on resume (cheap for short or prefix-cached sequences).
+    Recompute,
+}
+
+impl std::str::FromStr for PreemptionMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "abort" => Ok(PreemptionMode::Abort),
+            "swap" => Ok(PreemptionMode::Swap),
+            "recompute" => Ok(PreemptionMode::Recompute),
+            other => Err(format!(
+                "unknown preemption mode `{other}` (expected `abort`, `swap`, or `recompute`)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for PreemptionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PreemptionMode::Abort => "abort",
+            PreemptionMode::Swap => "swap",
+            PreemptionMode::Recompute => "recompute",
+        })
+    }
+}
+
 /// Configuration of the serving engine.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -73,6 +119,12 @@ pub struct EngineConfig {
     /// Prefix-cache budget in KV blocks (0 = bounded only by the pool).
     /// Ignored unless `enable_prefix_cache` is set.
     pub prefix_cache_blocks: usize,
+    /// Reaction to KV-pool exhaustion mid-flight (see [`PreemptionMode`]).
+    pub preemption_mode: PreemptionMode,
+    /// Host swap-store budget in KV blocks (0 = unbounded). Only consulted
+    /// in `PreemptionMode::Swap`; a victim that would overflow the budget
+    /// is recomputed instead.
+    pub swap_budget_blocks: usize,
 }
 
 /// Iteration-level scheduling policy (§5 serving comparisons; the
@@ -103,6 +155,8 @@ impl Default for EngineConfig {
             scheduler: SchedulerPolicy::Continuous,
             enable_prefix_cache: false,
             prefix_cache_blocks: 0,
+            preemption_mode: PreemptionMode::Abort,
+            swap_budget_blocks: 0,
         }
     }
 }
@@ -156,6 +210,16 @@ mod tests {
         let c = EngineConfig::default();
         c.validate().unwrap();
         assert_eq!(c.backend, BackendKind::Sim, "hermetic default");
+    }
+
+    #[test]
+    fn preemption_mode_parses() {
+        assert_eq!("abort".parse::<PreemptionMode>().unwrap(), PreemptionMode::Abort);
+        assert_eq!("Swap".parse::<PreemptionMode>().unwrap(), PreemptionMode::Swap);
+        assert_eq!("RECOMPUTE".parse::<PreemptionMode>().unwrap(), PreemptionMode::Recompute);
+        assert!("drop".parse::<PreemptionMode>().is_err());
+        assert_eq!(PreemptionMode::Swap.to_string(), "swap");
+        assert_eq!(PreemptionMode::default(), PreemptionMode::Abort, "legacy default");
     }
 
     #[test]

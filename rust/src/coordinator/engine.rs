@@ -19,12 +19,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::preempt::{PreemptMechanism, VictimCost};
 use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
 use super::sampler::Sampler;
 use super::scheduler::{Action, Scheduler};
-use crate::config::{BackendKind, EngineConfig};
-use crate::kvcache::{KvPool, KvPrecision, PrefixCache, SeqHandle};
-use crate::metrics::PrefixCacheSummary;
+use crate::config::{BackendKind, EngineConfig, PreemptionMode};
+use crate::kvcache::swap::transfer_time_s;
+use crate::kvcache::{KvPool, KvPrecision, PrefixCache, SeqHandle, SwapStore};
+use crate::metrics::{PreemptionSummary, PrefixCacheSummary};
 use crate::runtime::{
     DecodeArgs, ExecutionBackend, ModelSpec, PrefillArgs, SimBackend, StepOutputs,
 };
@@ -52,9 +54,35 @@ pub struct EngineStats {
     pub aborted: usize,
     /// Prompt tokens served from the prefix cache instead of prefilling.
     pub prefill_tokens_skipped: usize,
+    /// Iterations that preempted a victim (each also ran the decode the
+    /// preemption unblocked).
+    pub preempt_iters: usize,
+    /// Iterations spent restoring a swapped-out sequence from the host
+    /// store (no prefill runs in these; they are not `prefill_iters`).
+    pub swap_in_iters: usize,
     /// Modeled device time accumulated by the backend (sim backend only;
-    /// the PJRT path is wall-clock-timed by callers instead).
+    /// the PJRT path is wall-clock-timed by callers instead), plus modeled
+    /// PCIe time for swap-preemption transfers.
     pub sim_time_s: f64,
+}
+
+/// Preemption-decision counters (swap *transfer* counters live in
+/// [`SwapStore::stats`]; [`Engine::preemption_summary`] merges both).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PreemptStats {
+    /// Victims preempted (any mechanism).
+    pub preemptions: usize,
+    /// Victims preserved by swap-out.
+    pub swap_preemptions: usize,
+    /// Victims released for recompute (includes swap-ins downgraded when
+    /// the pool could not take the restore).
+    pub recompute_preemptions: usize,
+    /// Tokens queued for re-prefill by recompute preemptions (prefix-cache
+    /// hits at resume may serve part of them without running).
+    pub recomputed_tokens: usize,
+    /// Sequences lost to pool exhaustion (abort mode, or a sole runner no
+    /// preemption could save).
+    pub oom_aborts: usize,
 }
 
 /// The engine.
@@ -64,6 +92,9 @@ pub struct Engine {
     pool: KvPool,
     /// Prefix-sharing index over `pool` (None when disabled in config).
     prefix: Option<PrefixCache>,
+    /// Host-side store for swap-preempted sequences' KV (DESIGN.md §8).
+    swap: SwapStore,
+    pub preempt_stats: PreemptStats,
     cfg: EngineConfig,
     scheduler: Scheduler,
     sampler: Sampler,
@@ -143,11 +174,14 @@ impl Engine {
             .then(|| PrefixCache::new(kv_prec, cfg.kv_block_tokens, cfg.prefix_cache_blocks));
         let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
         let rng = crate::util::rng::Rng::new(cfg.seed);
+        let swap = SwapStore::new(cfg.kv_block_tokens, cfg.swap_budget_blocks);
         Ok(Self {
             backend,
             model: m,
             pool,
             prefix,
+            swap,
+            preempt_stats: PreemptStats::default(),
             scheduler: Scheduler::new(cfg.scheduler),
             sampler,
             rng,
@@ -208,6 +242,11 @@ impl Engine {
             // Reject at submit time instead of idling forever: the
             // conservative admission reservation (prompt + generation) can
             // never be satisfied, even by an empty pool.
+            self.seqs.get_mut(&id).unwrap().abort_reason = Some(format!(
+                "request needs {} KV blocks but the pool holds {}",
+                self.pool.blocks_for(total),
+                self.pool.total_blocks()
+            ));
             self.finish(id, FinishReason::Aborted);
             self.stats.aborted += 1;
         } else {
@@ -245,18 +284,32 @@ impl Engine {
         self.prefix.as_ref().map(PrefixCache::cached_blocks).unwrap_or(0)
     }
 
+    /// The host-side swap store (budget/occupancy for the stats probe).
+    pub fn swap_store(&self) -> &SwapStore {
+        &self.swap
+    }
+
+    /// Preemption effectiveness counters (decisions + swap traffic).
+    pub fn preemption_summary(&self) -> PreemptionSummary {
+        PreemptionSummary::new(self.preempt_stats, self.swap.stats)
+    }
+
     /// One engine iteration.
     pub fn step(&mut self) -> Result<StepReport> {
         let admissible = self.head_admissible();
+        let victim = self.preempt_victim();
         let action = self.scheduler.next_action(
             self.waiting.len(),
             admissible,
             self.running.len(),
             self.cfg.max_batch,
+            victim,
         );
         match action {
             Action::Prefill => self.step_prefill(),
             Action::Decode => self.step_decode(),
+            Action::Preempt { victim } => self.step_preempt(victim),
+            Action::SwapIn => unreachable!("the scheduler never emits SwapIn"),
             Action::Idle => {
                 self.stats.idle_iters += 1;
                 Ok(StepReport { action, emitted: vec![], finished: vec![] })
@@ -300,20 +353,248 @@ impl Engine {
         // blocks as free since they evict on demand. The matched blocks
         // themselves are excluded from the evictable credit: they are about
         // to be adopted, so counting their tokens off `need` AND their
-        // blocks as evictable would double-count capacity.
+        // blocks as evictable would double-count capacity. The reservation
+        // also covers preempted resumes: a swap-in restores
+        // `blocks_for(kv_len)` ≤ this bound, and a recompute re-prefill
+        // peaks at the same footprint the original admission reserved.
         let mut need = s.prompt.len() + s.max_new_tokens;
         if self.pool.blocks_for(need) <= self.pool.free_blocks() {
             return true; // fits without touching the cache at all
         }
         let mut avail = self.pool.free_blocks();
         if let Some(pc) = &self.prefix {
-            let hit = pc.peek_hit_tokens(&s.prompt, self.prefix_match_cap(s.prompt.len()));
-            need -= hit;
-            avail += pc
-                .evictable_blocks(&self.pool)
-                .saturating_sub(hit / self.pool.block_tokens());
+            let mut evictable = pc.evictable_blocks(&self.pool);
+            // A swapped-out head restores its blocks instead of adopting
+            // cached ones, so it earns no prefix credit.
+            if !s.swapped {
+                let hit =
+                    pc.peek_hit_tokens(&s.seq_tokens, self.prefix_match_cap(s.seq_tokens.len()));
+                need -= hit;
+                evictable = evictable.saturating_sub(hit / self.pool.block_tokens());
+            }
+            avail += evictable;
         }
         self.pool.blocks_for(need) <= avail
+    }
+
+    // ---- preemption (DESIGN.md §8) ----------------------------------------
+
+    /// Pool blocks the next decode step will allocate: one per sequence
+    /// sitting at a block boundary, plus one per sequence whose partial
+    /// tail block is shared (copy-on-write copies it on append).
+    fn decode_need_blocks(&self) -> usize {
+        let bt = self.pool.block_tokens();
+        self.running
+            .iter()
+            .map(|id| {
+                let h = self.seqs[id].handle.expect("running seq has a handle");
+                let len = self.pool.seq_len(h);
+                if len % bt == 0 {
+                    1
+                } else {
+                    let tail = self.pool.seq_blocks(h)[len / bt];
+                    usize::from(self.pool.block_ref_count(tail) > 1)
+                }
+            })
+            .sum()
+    }
+
+    /// Can the next decode step fit, counting on-demand cache eviction?
+    fn decode_blocked(&self) -> bool {
+        let need = self.decode_need_blocks();
+        if need <= self.pool.free_blocks() {
+            return false;
+        }
+        let evictable =
+            self.prefix.as_ref().map(|pc| pc.evictable_blocks(&self.pool)).unwrap_or(0);
+        need > self.pool.free_blocks() + evictable
+    }
+
+    /// Precision-aware preemption cost of one running victim: swap ships
+    /// its resident blocks' quantized bytes; recompute re-prefills the
+    /// suffix the prefix index does not already hold.
+    fn victim_cost(&self, id: u64) -> VictimCost {
+        let s = &self.seqs[&id];
+        let h = s.handle.expect("victim has a handle");
+        let kv_len = self.pool.seq_len(h);
+        // Cache credit uses the same cap resume adoption will: the final
+        // chunk always reruns, so even a fully-indexed victim pays that
+        // chunk's re-prefill — pricing it as free would pick recompute
+        // over a cheaper swap.
+        let cached = match &self.prefix {
+            Some(pc) => {
+                let resident = s.resident_tokens();
+                pc.peek_hit_tokens(&resident, self.prefix_match_cap(resident.len()))
+            }
+            None => 0,
+        };
+        VictimCost::estimate(
+            self.pool.seq_blocks(h).len(),
+            self.pool.block_tokens(),
+            self.pool.token_code_bytes(),
+            self.pool.token_scale_bytes(),
+            kv_len,
+            cached,
+        )
+    }
+
+    /// The mechanism [`Engine::preempt_one`] would actually use for this
+    /// victim under the current mode and swap-budget state — Swap mode is
+    /// adaptive (each victim's cheaper mechanism, so prefix-cached victims
+    /// recompute), and a full swap budget downgrades to recompute.
+    fn victim_mechanism(&self, id: u64, cost: &VictimCost) -> PreemptMechanism {
+        match self.cfg.preemption_mode {
+            PreemptionMode::Abort => unreachable!("abort mode never preempts"),
+            PreemptionMode::Recompute => PreemptMechanism::Recompute,
+            PreemptionMode::Swap => {
+                let h = self.seqs[&id].handle.expect("victim has a handle");
+                match cost.preferred() {
+                    PreemptMechanism::Swap if !self.swap.can_hold(self.pool.seq_len(h)) => {
+                        PreemptMechanism::Recompute
+                    }
+                    m => m,
+                }
+            }
+        }
+    }
+
+    /// The cost model's cheapest victim among the running batch (None when
+    /// the batch is empty or preemption is off). Each candidate is priced
+    /// under the mechanism it would *actually* use — including the budget
+    /// downgrade — so a budget-blocked "cheap swap" never outbids a victim
+    /// whose real (recompute) cost is lower. Ties break youngest-first,
+    /// like [`pick_victim`](super::preempt::pick_victim).
+    fn choose_victim(&self) -> Option<u64> {
+        if self.cfg.preemption_mode == PreemptionMode::Abort {
+            return None;
+        }
+        self.running
+            .iter()
+            .map(|&id| {
+                let cost = self.victim_cost(id);
+                (id, cost.cost_of(self.victim_mechanism(id, &cost)))
+            })
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|(id, _)| id)
+    }
+
+    /// The victim the scheduler should preempt this iteration, or None
+    /// when decode fits (or preemption can't help: abort mode, or fewer
+    /// than two runners — preempting a sole runner frees exactly the
+    /// blocks it would immediately re-claim).
+    fn preempt_victim(&self) -> Option<u64> {
+        if self.cfg.preemption_mode == PreemptionMode::Abort || self.running.len() < 2 {
+            return None;
+        }
+        if !self.decode_blocked() {
+            return None;
+        }
+        self.choose_victim()
+    }
+
+    /// Release a victim's state for a recompute resume: rebuild the token
+    /// stream the re-prefill must cover, restart prefill bookkeeping, and
+    /// count it. Shared by the Recompute preemption arm and the swap-in
+    /// downgrade path, so the two can never drift apart.
+    fn release_for_recompute(&mut self, id: u64) {
+        let s = self.seqs.get_mut(&id).unwrap();
+        s.rebuild_seq_tokens();
+        s.prefill_pos = 0;
+        s.indexed_blocks = 0;
+        self.preempt_stats.recompute_preemptions += 1;
+        self.preempt_stats.recomputed_tokens += s.seq_tokens.len();
+    }
+
+    /// Preempt one running victim: swap its KV host-ward or release it for
+    /// recompute (per mode, cost model, and swap budget), then re-queue it
+    /// at the head so it resumes before fresh arrivals.
+    fn preempt_one(&mut self, id: u64) -> Result<()> {
+        let cost = self.victim_cost(id);
+        let mech = self.victim_mechanism(id, &cost);
+        let h = self.seqs[&id].handle.expect("victim has a handle");
+        self.running.retain(|x| *x != id);
+        self.preempt_stats.preemptions += 1;
+        match mech {
+            PreemptMechanism::Swap => {
+                let snap = self.pool.export_seq(h)?;
+                self.stats.sim_time_s +=
+                    transfer_time_s(snap.code_bytes() + snap.scales.len() * 4);
+                self.swap.insert(id, snap)?;
+                self.preempt_stats.swap_preemptions += 1;
+                self.seqs.get_mut(&id).unwrap().swapped = true;
+            }
+            PreemptMechanism::Recompute => self.release_for_recompute(id),
+        }
+        let s = self.seqs.get_mut(&id).unwrap();
+        s.handle = None;
+        s.phase = Phase::Waiting;
+        s.preempt_count += 1;
+        self.pool.free_seq(h);
+        // Head of the queue — but never ahead of a mid-prefill admission,
+        // whose partial KV must finish before anything else is admitted.
+        let head_mid_prefill = self
+            .waiting
+            .front()
+            .is_some_and(|fid| self.seqs[fid].handle.is_some());
+        if head_mid_prefill {
+            self.waiting.insert(1, id);
+        } else {
+            self.waiting.push_front(id);
+        }
+        Ok(())
+    }
+
+    /// Execute `Action::Preempt`: evict the scheduler's victim (and any
+    /// further victims the cost model must sacrifice until the decode
+    /// fits), then run the unblocked decode **in the same iteration** —
+    /// re-evaluating first would let admission steal the freed blocks and
+    /// livelock the victim in a preempt/readmit cycle.
+    fn step_preempt(&mut self, first: u64) -> Result<StepReport> {
+        self.stats.preempt_iters += 1;
+        self.preempt_one(first)?;
+        while self.running.len() >= 2 && self.decode_blocked() {
+            let Some(v) = self.choose_victim() else { break };
+            self.preempt_one(v)?;
+        }
+        let rep = self.step_decode()?;
+        Ok(StepReport {
+            action: Action::Preempt { victim: first },
+            emitted: rep.emitted,
+            finished: rep.finished,
+        })
+    }
+
+    /// Restore a swapped-out head-of-queue sequence into the pool. Returns
+    /// `Ok(None)` — after downgrading the victim to recompute — when the
+    /// pool cannot take the restore even after cache eviction; the caller
+    /// then proceeds with a normal (re-)prefill admission.
+    fn try_swap_in(&mut self, id: u64) -> Result<Option<StepReport>> {
+        let needed = self.pool.blocks_for(self.swap.tokens_of(id));
+        self.make_room(needed);
+        if self.pool.free_blocks() < needed {
+            self.swap.drop_entry(id);
+            self.seqs.get_mut(&id).unwrap().swapped = false;
+            // Reclassify: this victim ended up preserved by recompute, not
+            // swap, so the per-mechanism buckets keep summing to
+            // `preemptions` (and `swap_fraction` stays honest).
+            self.preempt_stats.swap_preemptions -= 1;
+            self.release_for_recompute(id);
+            return Ok(None);
+        }
+        let snap = self.swap.take(id).expect("swapped head has an entry");
+        let handle = self.pool.alloc_seq();
+        self.pool.import_seq(handle, &snap)?;
+        self.stats.sim_time_s += transfer_time_s(snap.code_bytes() + snap.scales.len() * 4);
+        let restored = self.pool.seq_blocks(handle).len();
+        let s = self.seqs.get_mut(&id).unwrap();
+        debug_assert!(s.decoding_started(), "only decoding victims are swapped");
+        s.handle = Some(handle);
+        s.swapped = false;
+        s.swapped_in_blocks += restored;
+        s.phase = Phase::Decoding;
+        self.waiting.pop_front();
+        self.running.push(id);
+        Ok(Some(StepReport { action: Action::SwapIn, emitted: vec![], finished: vec![] }))
     }
 
     /// The effective prefill chunk: an uncached prefill's chunk boundaries
@@ -388,22 +669,35 @@ impl Engine {
     }
 
     fn step_prefill(&mut self) -> Result<StepReport> {
-        self.stats.prefill_iters += 1;
         let id = *self.waiting.front().expect("scheduler said Prefill");
+
+        // A swap-preempted head resumes by restoring its blocks, not by
+        // prefilling; if the pool can't take the restore the victim is
+        // downgraded to recompute and falls through to a normal admission.
+        if self.seqs[&id].swapped {
+            if let Some(report) = self.try_swap_in(id)? {
+                self.stats.swap_in_iters += 1;
+                return Ok(report);
+            }
+        }
+        self.stats.prefill_iters += 1;
+
         let m = self.model.clone();
         let t_pad = m.max_seq_len;
         let rb = self.pool.row_bytes();
 
         // Admit if new: allocate the sequence and consult the prefix index
         // before any prefill work — matched full blocks are adopted
-        // (ref-counted) and their tokens never rerun.
+        // (ref-counted) and their tokens never rerun. `seq_tokens` is the
+        // prompt for fresh requests and prompt + generated-so-far for
+        // recompute resumes, whose own prompt blocks often still sit in
+        // the index (that is what makes their recompute cheap).
         if self.seqs[&id].handle.is_none() {
-            let prompt_len = self.seqs[&id].prompt.len();
-            let cap = self.prefix_match_cap(prompt_len);
+            let cap = self.prefix_match_cap(self.seqs[&id].seq_tokens.len());
             let handle = self.pool.alloc_seq();
             let mut hit_tokens = 0usize;
             if let Some(pc) = self.prefix.as_mut() {
-                let (tokens, blocks) = pc.lookup(&self.seqs[&id].prompt, cap);
+                let (tokens, blocks) = pc.lookup(&self.seqs[&id].seq_tokens, cap);
                 if tokens > 0 {
                     self.pool.adopt_blocks(handle, &blocks, tokens)?;
                     hit_tokens = tokens;
@@ -413,7 +707,11 @@ impl Engine {
             s.handle = Some(handle);
             s.phase = Phase::Prefilling;
             s.prefill_pos = hit_tokens;
-            s.prefix_hit_tokens = hit_tokens;
+            if !s.decoding_started() {
+                // First admission only: resumes keep reporting the hit
+                // their original admission earned.
+                s.prefix_hit_tokens = hit_tokens;
+            }
             // Adopted blocks are already in the index by definition.
             s.indexed_blocks = hit_tokens / self.pool.block_tokens();
             self.stats.prefill_tokens_skipped += hit_tokens;
@@ -430,7 +728,8 @@ impl Engine {
             let want = rem.min(eff - s.prefill_pos % eff);
             let bucket = self.prefill_bucket(want);
             let real = want.min(bucket);
-            let mut toks: Vec<i32> = s.prompt[s.prefill_pos..s.prefill_pos + real].to_vec();
+            let mut toks: Vec<i32> =
+                s.seq_tokens[s.prefill_pos..s.prefill_pos + real].to_vec();
             toks.resize(bucket, 0);
             (s.handle.unwrap(), s.prefill_pos, toks, bucket, real)
         };
@@ -463,12 +762,21 @@ impl Engine {
         self.stats.sim_time_s += out.sim_time_s;
 
         // Store the real tokens' KV, evicting unreferenced cached blocks
-        // if the free list can't cover the chunk's new blocks.
+        // if the free list can't cover the chunk's new blocks — and, with
+        // preemption on, sacrificing running victims before giving up on
+        // the admission (prefill-side analogue of `Action::Preempt`).
         let new_blocks = self
             .pool
             .blocks_for(self.pool.seq_len(handle) + real)
             .saturating_sub(self.pool.seq_blocks(handle).len());
         self.make_room(new_blocks);
+        if self.cfg.preemption_mode != PreemptionMode::Abort {
+            while self.pool.free_blocks() < new_blocks && !self.running.is_empty() {
+                let Some(v) = self.choose_victim() else { break };
+                self.preempt_one(v)?;
+                self.make_room(new_blocks);
+            }
+        }
         if let Err(e) = self.pool.append_chunk(
             handle,
             real,
@@ -481,9 +789,9 @@ impl Engine {
             return self.abort(id, e);
         }
 
-        // Index the sequence's now-complete full prompt blocks so other
-        // requests can start sharing them immediately, even mid-prefill.
-        // Chunks that complete no new full block skip the chain walk.
+        // Index the sequence's now-complete full blocks so other requests
+        // can start sharing them immediately, even mid-prefill. Chunks
+        // that complete no new full block skip the chain walk.
         if self.prefix.is_some() {
             let bt = self.pool.block_tokens();
             let n_full = (self.seqs[&id].prefill_pos + real) / bt;
@@ -491,7 +799,7 @@ impl Engine {
                 let blocks: Vec<usize> = self.pool.seq_blocks(handle)[..n_full].to_vec();
                 let s = &self.seqs[&id];
                 if let Some(pc) = self.prefix.as_mut() {
-                    pc.insert(&mut self.pool, &s.prompt[..n_full * bt], &blocks);
+                    pc.insert(&mut self.pool, &s.seq_tokens[..n_full * bt], &blocks);
                 }
                 self.seqs.get_mut(&id).unwrap().indexed_blocks = n_full;
             }
@@ -504,21 +812,31 @@ impl Engine {
             s.prefill_pos += real;
             self.stats.prompt_tokens += real;
             if s.remaining_prompt() == 0 {
-                // Prompt done: sample the first token from the last real row.
-                let v = m.vocab_size;
-                let row = &out.logits[(real - 1) * v..real * v];
-                let tok = self.sampler.sample(row, &mut self.rng);
-                s.generated.push(tok);
-                s.first_token = Some(Instant::now());
-                s.phase = Phase::Decoding;
-                emitted.push((id, tok));
-                self.stats.tokens_generated += 1;
-                self.waiting.pop_front();
-                if let Some(reason) = s.should_finish() {
-                    finished.push(id);
-                    self.finish(id, reason);
-                } else {
+                if s.decoding_started() {
+                    // Recompute resume: the cache is rebuilt; generation
+                    // already has its next input token, so the final
+                    // chunk's logits are discarded rather than re-sampled.
+                    s.phase = Phase::Decoding;
+                    self.waiting.pop_front();
                     self.running.push(id);
+                } else {
+                    // Prompt done: sample the first token from the last
+                    // real row.
+                    let v = m.vocab_size;
+                    let row = &out.logits[(real - 1) * v..real * v];
+                    let tok = self.sampler.sample(row, &mut self.rng);
+                    s.generated.push(tok);
+                    s.first_token = Some(Instant::now());
+                    s.phase = Phase::Decoding;
+                    emitted.push((id, tok));
+                    self.stats.tokens_generated += 1;
+                    self.waiting.pop_front();
+                    if let Some(reason) = s.should_finish() {
+                        finished.push(id);
+                        self.finish(id, reason);
+                    } else {
+                        self.running.push(id);
+                    }
                 }
             }
         }
@@ -569,16 +887,11 @@ impl Engine {
         })?;
         self.stats.sim_time_s += out.sim_time_s;
 
-        // Sequences sitting at a block boundary will allocate on append;
-        // evict unreferenced cached blocks first if the free list is dry.
-        let bt = self.pool.block_tokens();
-        let mut need_blocks = 0usize;
-        for id in &ids {
-            let h = self.seqs[id].handle.unwrap();
-            if self.pool.seq_len(h) % bt == 0 {
-                need_blocks += 1;
-            }
-        }
+        // Sequences at a block boundary (or on a shared CoW tail) will
+        // allocate on append; evict unreferenced cached blocks first if
+        // the free list is dry. Same count `decode_blocked` used to judge
+        // feasibility — the two must never disagree.
+        let need_blocks = self.decode_need_blocks();
         self.make_room(need_blocks);
 
         // Append each live sequence's new KV codes ([L,B,Hkv,rb] layout).
@@ -601,12 +914,19 @@ impl Engine {
                 vs[l * m.n_kv_heads..(l + 1) * m.n_kv_heads]
                     .copy_from_slice(&out.v_scales[ssrc..ssrc + m.n_kv_heads]);
             }
-            if let Err(_e) = self.pool.append_token(handle, &kc, &ks, &vc, &vs) {
-                // KV exhausted mid-flight (admission reserve should prevent
-                // this); abort the sequence and keep the batch going.
+            if let Err(e) = self.pool.append_token(handle, &kc, &ks, &vc, &vs) {
+                // KV exhausted mid-flight. With swap/recompute preemption
+                // `Action::Preempt` makes room before decode runs, so this
+                // is the abort-mode overload path (or a sole runner no
+                // preemption could save): finish the sequence with its
+                // partial generation and a structured reason, keep the
+                // batch going.
                 self.running.retain(|x| x != id);
+                let s = self.seqs.get_mut(id).unwrap();
+                s.abort_reason = Some(format!("kv pool exhausted mid-decode: {e}"));
                 self.finish(*id, FinishReason::Aborted);
                 self.stats.aborted += 1;
+                self.preempt_stats.oom_aborts += 1;
                 finished.push(*id);
                 continue;
             }
@@ -644,6 +964,9 @@ impl Engine {
             latency: now.duration_since(s.submitted).as_secs_f64(),
             prompt_len: s.prompt.len(),
             prefix_hit_tokens: s.prefix_hit_tokens,
+            preempt_count: s.preempt_count,
+            swapped_in_blocks: s.swapped_in_blocks,
+            abort_reason: s.abort_reason.take(),
         });
         self.seqs.remove(&id);
     }
@@ -651,8 +974,11 @@ impl Engine {
     fn abort(&mut self, id: u64, err: anyhow::Error) -> Result<StepReport> {
         self.waiting.retain(|x| *x != id);
         self.running.retain(|x| *x != id);
+        self.seqs.get_mut(&id).expect("aborting a live sequence").abort_reason =
+            Some(err.to_string());
         self.finish(id, FinishReason::Aborted);
         self.stats.aborted += 1;
+        self.preempt_stats.oom_aborts += 1;
         eprintln!("request {id} aborted: {err}");
         Ok(StepReport { action: Action::Prefill, emitted: vec![], finished: vec![id] })
     }

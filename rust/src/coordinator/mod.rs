@@ -6,11 +6,13 @@
 //! AOT-compiled graphs (Layer 2 + Layer 1) are invoked through [`crate::runtime`].
 
 pub mod engine;
+pub mod preempt;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineStats, StepReport};
+pub use engine::{Engine, EngineStats, PreemptStats, StepReport};
+pub use preempt::{PreemptMechanism, VictimCost};
 pub use request::{FinishReason, Phase, Request, RequestOutput};
 pub use sampler::Sampler;
 pub use scheduler::{Action, Scheduler};

@@ -1,0 +1,224 @@
+//! Precision-aware preemption cost model (DESIGN.md §8).
+//!
+//! When the KV pool runs dry mid-flight the scheduler must pick a running
+//! victim and a mechanism — **swap** (ship its quantized blocks to the
+//! host store) or **recompute** (drop them and re-prefill on resume). Both
+//! are lossless; they differ only in cost:
+//!
+//! * swap cost is *byte*-bound: codes (`resident blocks × block_tokens ×
+//!   token_code_bytes`) plus the precision-independent f32 scale payload,
+//!   paid twice (out + in) over the modeled PCIe link — the same bytes the
+//!   engine charges to `sim_time_s`. `token_code_bytes` is `L × 2 × Hkv ×
+//!   KvPrecision::row_bytes`, so the code term scales exactly with the KV
+//!   precision — a kv4 victim's codes are ~4× cheaper to ship than the
+//!   same victim's at kv16 (the paper's KV-format byte accounting; cf.
+//!   KVmix's precision-driven memory policy);
+//! * recompute cost is *token*-bound: re-prefilling the suffix the prefix
+//!   index does **not** already hold. A victim whose tokens are fully
+//!   prefix-cached recomputes for free (the blocks are still resident —
+//!   resume just re-adopts them), so cached victims always prefer
+//!   recompute.
+//!
+//! Pure functions, unit-tested in isolation; the engine feeds them live
+//! pool/prefix state.
+
+use crate::kvcache::swap::transfer_time_s;
+
+/// How a preempted victim's KV is preserved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMechanism {
+    /// Copy blocks to the host swap store; restore byte-exactly on resume.
+    Swap,
+    /// Release blocks; re-prefill the non-prefix-cached suffix on resume.
+    Recompute,
+}
+
+/// Modeled per-token prefill cost used to price recompute, seconds. Tuned
+/// to the gpusim tiny-model scale; the *ratio* against PCIe byte cost is
+/// what drives mechanism choice, not the absolute number.
+pub const RECOMPUTE_TOKEN_S: f64 = 4.0e-6;
+
+/// Preemption cost estimate for one candidate victim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VictimCost {
+    /// Quantized code bytes priced for transfer — whole resident blocks
+    /// (the ISSUE's `resident blocks × row_bytes` accounting, matching
+    /// block-granular pinned-host staging), a conservative upper bound on
+    /// the dense per-token payload the engine actually charges (they
+    /// differ by at most one partial tail block). This is the
+    /// precision-dependent term: exactly proportional to
+    /// [`KvPrecision::row_bytes`](crate::kvcache::KvPrecision::row_bytes).
+    pub swap_bytes: usize,
+    /// Dequantization-scale payload shipping alongside the codes (one f32
+    /// per (token, layer, K/V, head)) — precision-independent, so it
+    /// dilutes but never inverts the `swap_bytes` precision scaling.
+    pub scale_bytes: usize,
+    /// Tokens that would re-prefill on resume (KV length minus the prefix
+    /// the cache already holds).
+    pub recompute_tokens: usize,
+    /// Modeled swap round-trip (out + in) over the host link, seconds,
+    /// priced on codes + scales at whole-block granularity.
+    pub swap_time_s: f64,
+    /// Modeled resume re-prefill time, seconds.
+    pub recompute_time_s: f64,
+}
+
+impl VictimCost {
+    /// Estimate costs for a victim with `resident_blocks` pool blocks of
+    /// `block_tokens` tokens at `token_code_bytes` code bytes (`L × 2 ×
+    /// Hkv × row_bytes` — the precision-dependent term) plus
+    /// `token_scale_bytes` scale bytes per token slot, a live KV of
+    /// `kv_len` tokens, of which the leading `cached_tokens` are already
+    /// held by the prefix index.
+    pub fn estimate(
+        resident_blocks: usize,
+        block_tokens: usize,
+        token_code_bytes: usize,
+        token_scale_bytes: usize,
+        kv_len: usize,
+        cached_tokens: usize,
+    ) -> Self {
+        let tokens = resident_blocks * block_tokens;
+        let swap_bytes = tokens * token_code_bytes;
+        let scale_bytes = tokens * token_scale_bytes;
+        let recompute_tokens = kv_len.saturating_sub(cached_tokens.min(kv_len));
+        Self {
+            swap_bytes,
+            scale_bytes,
+            recompute_tokens,
+            swap_time_s: 2.0 * transfer_time_s(swap_bytes + scale_bytes),
+            recompute_time_s: recompute_tokens as f64 * RECOMPUTE_TOKEN_S,
+        }
+    }
+
+    /// The cheaper mechanism for this victim. Ties go to recompute — it
+    /// leaves the swap budget untouched.
+    pub fn preferred(&self) -> PreemptMechanism {
+        if self.recompute_time_s <= self.swap_time_s {
+            PreemptMechanism::Recompute
+        } else {
+            PreemptMechanism::Swap
+        }
+    }
+
+    /// The cost this victim pays under the given mechanism, seconds.
+    pub fn cost_of(&self, mech: PreemptMechanism) -> f64 {
+        match mech {
+            PreemptMechanism::Swap => self.swap_time_s,
+            PreemptMechanism::Recompute => self.recompute_time_s,
+        }
+    }
+}
+
+/// Pick the cheapest victim from `(id, cost)` candidates under `mech`
+/// (`None` = each victim's own preferred mechanism). Ties break toward the
+/// **highest id** — the youngest request, vLLM-style, so long-running work
+/// is disturbed last — and the choice is deterministic either way. Returns
+/// the winning id and the mechanism it should use.
+pub fn pick_victim(
+    candidates: &[(u64, VictimCost)],
+    mech: Option<PreemptMechanism>,
+) -> Option<(u64, PreemptMechanism)> {
+    candidates
+        .iter()
+        .map(|&(id, c)| {
+            let m = mech.unwrap_or_else(|| c.preferred());
+            (id, m, c.cost_of(m))
+        })
+        .min_by(|a, b| a.2.total_cmp(&b.2).then(b.0.cmp(&a.0)))
+        .map(|(id, m, _)| (id, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvPrecision;
+
+    /// `token_code_bytes` for a 2-layer, 2-head pool at `prec`/`head_dim`.
+    fn tcb(prec: KvPrecision, head_dim: usize) -> usize {
+        2 * 2 * 2 * prec.row_bytes(head_dim)
+    }
+
+    /// Matching per-token scale bytes (f32 per (layer, K/V, head)) —
+    /// identical at every precision.
+    const TSB: usize = 2 * 2 * 2 * 4;
+
+    #[test]
+    fn swap_bytes_scale_exactly_with_kv_precision() {
+        // Same victim geometry at kv16 / kv8 / kv4: byte estimates follow
+        // row_bytes exactly — 4× between f32 and int8, 2× int8 vs int4.
+        let c16 = VictimCost::estimate(3, 16, tcb(KvPrecision::F32, 8), TSB, 40, 0);
+        let c8 = VictimCost::estimate(3, 16, tcb(KvPrecision::Int8, 8), TSB, 40, 0);
+        let c4 = VictimCost::estimate(3, 16, tcb(KvPrecision::Int4, 8), TSB, 40, 0);
+        assert_eq!(c16.swap_bytes, 4 * c8.swap_bytes);
+        assert_eq!(c8.swap_bytes, 2 * c4.swap_bytes);
+        assert!(c16.swap_time_s > c8.swap_time_s && c8.swap_time_s > c4.swap_time_s);
+        // Recompute cost is precision-independent.
+        assert_eq!(c16.recompute_tokens, c8.recompute_tokens);
+        assert_eq!(c16.recompute_time_s, c4.recompute_time_s);
+    }
+
+    #[test]
+    fn int4_odd_head_dim_rounds_up_in_the_estimate() {
+        // head_dim 7 packs to 4 bytes/row, not 3.5 (the PR 2 fix): the
+        // byte estimate must price the rounded row, so head_dim 7 and 8
+        // cost the same at int4.
+        let c7 = VictimCost::estimate(2, 16, tcb(KvPrecision::Int4, 7), TSB, 30, 0);
+        let c8 = VictimCost::estimate(2, 16, tcb(KvPrecision::Int4, 8), TSB, 30, 0);
+        assert_eq!(c7.swap_bytes, c8.swap_bytes);
+        assert_eq!(c7.swap_bytes, 2 * 16 * 2 * 2 * 2 * 4);
+    }
+
+    #[test]
+    fn fully_prefix_cached_victims_always_prefer_recompute() {
+        // Everything the victim holds is in the prefix index: recompute is
+        // free (re-adopt on resume), so it must win at every precision —
+        // even kv4, where swap is cheapest.
+        for prec in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+            let c = VictimCost::estimate(4, 16, tcb(prec, 8), TSB, 64, 64);
+            assert_eq!(c.recompute_tokens, 0);
+            assert_eq!(c.recompute_time_s, 0.0);
+            assert_eq!(c.preferred(), PreemptMechanism::Recompute, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn long_uncached_victims_prefer_swap() {
+        // A long victim with no cached prefix: re-prefilling thousands of
+        // tokens dwarfs shipping a few KB of int4 codes.
+        let c = VictimCost::estimate(128, 16, tcb(KvPrecision::Int4, 8), TSB, 2048, 0);
+        assert_eq!(c.recompute_tokens, 2048);
+        assert_eq!(c.preferred(), PreemptMechanism::Swap);
+    }
+
+    #[test]
+    fn cached_tokens_shrink_recompute_not_swap() {
+        let none = VictimCost::estimate(4, 16, tcb(KvPrecision::Int8, 8), TSB, 60, 0);
+        let half = VictimCost::estimate(4, 16, tcb(KvPrecision::Int8, 8), TSB, 60, 32);
+        assert_eq!(half.recompute_tokens, 28);
+        assert!(half.recompute_time_s < none.recompute_time_s);
+        assert_eq!(half.swap_bytes, none.swap_bytes, "swap ships all resident blocks");
+        // Over-reported cache coverage saturates at kv_len.
+        let over = VictimCost::estimate(4, 16, tcb(KvPrecision::Int8, 8), TSB, 60, 999);
+        assert_eq!(over.recompute_tokens, 0);
+    }
+
+    #[test]
+    fn pick_victim_is_cheapest_then_youngest() {
+        let cheap = VictimCost::estimate(1, 16, tcb(KvPrecision::Int8, 8), TSB, 16, 0);
+        let dear = VictimCost::estimate(8, 16, tcb(KvPrecision::Int8, 8), TSB, 128, 0);
+        let picked = pick_victim(
+            &[(1, dear), (2, cheap), (3, dear)],
+            Some(PreemptMechanism::Recompute),
+        );
+        assert_eq!(picked, Some((2, PreemptMechanism::Recompute)));
+        // Equal costs → highest id (youngest) wins.
+        let tie = pick_victim(&[(5, cheap), (9, cheap)], Some(PreemptMechanism::Swap));
+        assert_eq!(tie, Some((9, PreemptMechanism::Swap)));
+        // Adaptive mode picks each victim's preferred mechanism.
+        let cached = VictimCost::estimate(4, 16, tcb(KvPrecision::Int8, 8), TSB, 64, 64);
+        let adaptive = pick_victim(&[(1, dear), (2, cached)], None);
+        assert_eq!(adaptive, Some((2, PreemptMechanism::Recompute)));
+        assert_eq!(pick_victim(&[], None), None);
+    }
+}

@@ -27,8 +27,11 @@ pub enum FinishReason {
     Length,
     /// Sampled the stop token.
     Stop,
-    /// Evicted: the KV pool could not hold it (admission should prevent
-    /// this; reported rather than panicking if it happens).
+    /// Evicted: the KV pool could not hold it. With
+    /// `PreemptionMode::Abort` this is the overload escape hatch (the
+    /// partial generation is still returned, with
+    /// [`RequestOutput::abort_reason`] saying why); with swap/recompute
+    /// preemption it should never happen mid-decode.
     Aborted,
 }
 
@@ -59,6 +62,14 @@ pub struct RequestOutput {
     /// Prompt tokens served from the prefix cache (prefill skipped); 0
     /// when the cache is disabled or nothing matched.
     pub prefix_hit_tokens: usize,
+    /// Times this request was preempted under KV pressure (swap or
+    /// recompute; 0 on an unpressured run).
+    pub preempt_count: usize,
+    /// Pool blocks restored from the host swap store across all resumes.
+    pub swapped_in_blocks: usize,
+    /// Why the request aborted (`finish == Aborted` only): the structured
+    /// detail behind the opaque finish reason.
+    pub abort_reason: Option<String>,
 }
 
 /// Internal per-sequence engine state.
@@ -72,8 +83,14 @@ pub(crate) struct SeqState {
     pub max_new_tokens: usize,
     pub stop_token: Option<i32>,
     pub phase: Phase,
-    /// Prompt tokens prefilled so far (starts at the prefix-cache hit
-    /// length — matched tokens are already resident and never re-run).
+    /// The token stream prefill must make resident before decoding can
+    /// (re)start. Equals `prompt` for fresh sequences; after a
+    /// recompute-preemption it grows to `prompt ++ generated[..g-1]` — the
+    /// generated-so-far suffix minus the last token, which is the next
+    /// decode input, not cache content.
+    pub seq_tokens: Vec<i32>,
+    /// Tokens of `seq_tokens` prefilled so far (starts at the prefix-cache
+    /// hit length — matched tokens are already resident and never re-run).
     pub prefill_pos: usize,
     /// Prompt tokens adopted from the prefix cache at admission.
     pub prefix_hit_tokens: usize,
@@ -81,6 +98,16 @@ pub(crate) struct SeqState {
     /// re-walking the chain when a chunk completes no new full block).
     pub indexed_blocks: usize,
     pub handle: Option<crate::kvcache::SeqHandle>,
+    /// True while this request's KV lives in the host swap store; resume
+    /// restores it instead of prefilling.
+    pub swapped: bool,
+    /// Times preempted (reported in [`RequestOutput::preempt_count`]).
+    pub preempt_count: usize,
+    /// Blocks restored from the swap store (cumulative).
+    pub swapped_in_blocks: usize,
+    /// Structured detail for an upcoming `FinishReason::Aborted` finish
+    /// (set just before `Engine::finish`, moved into the output).
+    pub abort_reason: Option<String>,
     pub submitted: Instant,
     pub first_token: Option<Instant>,
 }
@@ -89,6 +116,7 @@ impl SeqState {
     pub fn new(id: u64, req: Request, now: Instant) -> Self {
         Self {
             id,
+            seq_tokens: req.prompt.clone(),
             prompt: req.prompt,
             generated: Vec::new(),
             max_new_tokens: req.max_new_tokens,
@@ -98,6 +126,10 @@ impl SeqState {
             prefix_hit_tokens: 0,
             indexed_blocks: 0,
             handle: None,
+            swapped: false,
+            preempt_count: 0,
+            swapped_in_blocks: 0,
+            abort_reason: None,
             submitted: now,
             first_token: None,
         }
@@ -109,7 +141,33 @@ impl SeqState {
     }
 
     pub fn remaining_prompt(&self) -> usize {
-        self.prompt.len() - self.prefill_pos
+        self.seq_tokens.len() - self.prefill_pos
+    }
+
+    /// Has generation started? (Resumed prefills must not re-sample a
+    /// first token when the final chunk completes.)
+    pub fn decoding_started(&self) -> bool {
+        !self.generated.is_empty()
+    }
+
+    /// The token stream currently resident in the KV cache for a decoding
+    /// sequence: the prompt plus all generated tokens except the last —
+    /// which is the pending decode input, not cache content. This is the
+    /// single definition both the preemption cost model (pricing what a
+    /// recompute would re-run) and [`SeqState::rebuild_seq_tokens`] use.
+    pub fn resident_tokens(&self) -> Vec<i32> {
+        let mut toks = self.prompt.clone();
+        if self.generated.len() > 1 {
+            toks.extend(&self.generated[..self.generated.len() - 1]);
+        }
+        toks
+    }
+
+    /// Rebuild `seq_tokens` to cover everything the KV cache must hold
+    /// right now. Called when a victim is released for recompute, so a
+    /// later re-prefill regenerates the exact pre-preemption contents.
+    pub fn rebuild_seq_tokens(&mut self) {
+        self.seq_tokens = self.resident_tokens();
     }
 
     pub fn should_finish(&self) -> Option<FinishReason> {
@@ -145,5 +203,25 @@ mod tests {
         assert_eq!(s.remaining_prompt(), 100);
         s.prefill_pos = 64;
         assert_eq!(s.remaining_prompt(), 36);
+    }
+
+    #[test]
+    fn rebuild_seq_tokens_covers_prompt_plus_generated_prefix() {
+        let mut s = SeqState::new(1, Request::new(vec![1, 2, 3], 8), Instant::now());
+        assert_eq!(s.seq_tokens, vec![1, 2, 3], "fresh: just the prompt");
+        assert!(!s.decoding_started());
+
+        // After 3 generated tokens the cache holds prompt + first 2: the
+        // last token is the pending decode input.
+        s.generated = vec![10, 11, 12];
+        s.rebuild_seq_tokens();
+        assert_eq!(s.seq_tokens, vec![1, 2, 3, 10, 11]);
+        assert!(s.decoding_started());
+        assert_eq!(s.next_input_token(), 12);
+
+        // One generated token: the cache holds only the prompt.
+        s.generated = vec![10];
+        s.rebuild_seq_tokens();
+        assert_eq!(s.seq_tokens, vec![1, 2, 3]);
     }
 }

@@ -15,6 +15,17 @@ pub enum Action {
     Prefill,
     /// Run one decode step over the running batch.
     Decode,
+    /// The decode batch cannot grow its KV: preempt `victim` (the
+    /// cost-model choice the engine supplied), then decode the survivors
+    /// **in the same iteration** — re-evaluating first would let admission
+    /// steal the freed blocks and livelock the victim in a
+    /// preempt/readmit cycle.
+    Preempt { victim: u64 },
+    /// A swap-preempted sequence was restored from the host store instead
+    /// of prefilling. Appears only in `StepReport` — the scheduler itself
+    /// emits `Prefill` for the head-of-queue and the engine discovers the
+    /// resume shape; it never returns this variant.
+    SwapIn,
     /// Nothing runnable.
     Idle,
 }
@@ -48,19 +59,31 @@ impl Scheduler {
     ///   suggests.
     /// * `running` — sequences currently decoding.
     /// * `max_batch` — decode batch capacity.
+    /// * `preempt_victim` — `Some(id)` when the engine determined the next
+    ///   decode step cannot fit the KV pool even after cache eviction, and
+    ///   the precision-aware cost model picked `id` as the cheapest victim
+    ///   ([`crate::coordinator::preempt`]). The scheduler turns what would
+    ///   have been `Decode` into `Preempt { victim }`; `None` (always, in
+    ///   abort mode, or with < 2 running) leaves decode to the legacy
+    ///   abort-on-exhaustion path.
     pub fn next_action(
         &mut self,
         waiting: usize,
         admissible: bool,
         running: usize,
         max_batch: usize,
+        preempt_victim: Option<u64>,
     ) -> Action {
+        let decode = || match preempt_victim {
+            Some(victim) => Action::Preempt { victim },
+            None => Action::Decode,
+        };
         match self.policy {
             SchedulerPolicy::Continuous => {
                 if waiting > 0 && admissible && running < max_batch {
                     Action::Prefill
                 } else if running > 0 {
-                    Action::Decode
+                    decode()
                 } else {
                     // Includes waiting > 0 with nothing running and nothing
                     // admissible. That combination can only be transient:
@@ -76,7 +99,7 @@ impl Scheduler {
             SchedulerPolicy::Static => {
                 if self.draining {
                     if running > 0 {
-                        return Action::Decode;
+                        return decode();
                     }
                     self.draining = false;
                 }
@@ -84,7 +107,7 @@ impl Scheduler {
                     Action::Prefill
                 } else if running > 0 {
                     self.draining = true;
-                    Action::Decode
+                    decode()
                 } else {
                     Action::Idle
                 }
@@ -100,38 +123,38 @@ mod tests {
     #[test]
     fn continuous_prefers_prefill() {
         let mut s = Scheduler::new(SchedulerPolicy::Continuous);
-        assert_eq!(s.next_action(2, true, 3, 8), Action::Prefill);
-        assert_eq!(s.next_action(0, true, 3, 8), Action::Decode);
-        assert_eq!(s.next_action(0, true, 0, 8), Action::Idle);
+        assert_eq!(s.next_action(2, true, 3, 8, None), Action::Prefill);
+        assert_eq!(s.next_action(0, true, 3, 8, None), Action::Decode);
+        assert_eq!(s.next_action(0, true, 0, 8, None), Action::Idle);
     }
 
     #[test]
     fn continuous_decodes_when_batch_full() {
         let mut s = Scheduler::new(SchedulerPolicy::Continuous);
-        assert_eq!(s.next_action(5, true, 8, 8), Action::Decode);
+        assert_eq!(s.next_action(5, true, 8, 8, None), Action::Decode);
     }
 
     #[test]
     fn continuous_decodes_when_kv_tight() {
         let mut s = Scheduler::new(SchedulerPolicy::Continuous);
         // Not admissible → keep decoding to free KV.
-        assert_eq!(s.next_action(5, false, 4, 8), Action::Decode);
+        assert_eq!(s.next_action(5, false, 4, 8, None), Action::Decode);
         // Nothing running and nothing fits → stall, surfaced as Idle.
-        assert_eq!(s.next_action(5, false, 0, 8), Action::Idle);
+        assert_eq!(s.next_action(5, false, 0, 8, None), Action::Idle);
     }
 
     #[test]
     fn static_fills_then_drains() {
         let mut s = Scheduler::new(SchedulerPolicy::Static);
         // Admit until the batch is full…
-        assert_eq!(s.next_action(4, true, 0, 2), Action::Prefill);
-        assert_eq!(s.next_action(3, true, 1, 2), Action::Prefill);
+        assert_eq!(s.next_action(4, true, 0, 2, None), Action::Prefill);
+        assert_eq!(s.next_action(3, true, 1, 2, None), Action::Prefill);
         // …then drain without admitting.
-        assert_eq!(s.next_action(2, true, 2, 2), Action::Decode);
-        assert_eq!(s.next_action(2, true, 2, 2), Action::Decode);
-        assert_eq!(s.next_action(2, true, 1, 2), Action::Decode);
+        assert_eq!(s.next_action(2, true, 2, 2, None), Action::Decode);
+        assert_eq!(s.next_action(2, true, 2, 2, None), Action::Decode);
+        assert_eq!(s.next_action(2, true, 1, 2, None), Action::Decode);
         // Batch drained → back to admission.
-        assert_eq!(s.next_action(2, true, 0, 2), Action::Prefill);
+        assert_eq!(s.next_action(2, true, 0, 2, None), Action::Prefill);
     }
 
     #[test]
@@ -139,13 +162,13 @@ mod tests {
         // running == max_batch: admissible waiting work must NOT preempt —
         // both policies keep decoding until a slot frees.
         let mut c = Scheduler::new(SchedulerPolicy::Continuous);
-        assert_eq!(c.next_action(3, true, 8, 8), Action::Decode);
+        assert_eq!(c.next_action(3, true, 8, 8, None), Action::Decode);
         let mut s = Scheduler::new(SchedulerPolicy::Static);
-        assert_eq!(s.next_action(3, true, 8, 8), Action::Decode);
+        assert_eq!(s.next_action(3, true, 8, 8, None), Action::Decode);
         // …and once a slot frees, Continuous admits immediately while
         // Static finishes its drain first.
-        assert_eq!(c.next_action(3, true, 7, 8), Action::Prefill);
-        assert_eq!(s.next_action(3, true, 7, 8), Action::Decode);
+        assert_eq!(c.next_action(3, true, 7, 8, None), Action::Prefill);
+        assert_eq!(s.next_action(3, true, 7, 8, None), Action::Decode);
     }
 
     #[test]
@@ -155,16 +178,16 @@ mod tests {
         // flag resets).
         let mut s = Scheduler::new(SchedulerPolicy::Static);
         for _cycle in 0..2 {
-            assert_eq!(s.next_action(2, true, 0, 2), Action::Prefill);
-            assert_eq!(s.next_action(1, true, 1, 2), Action::Prefill);
-            assert_eq!(s.next_action(0, true, 2, 2), Action::Decode);
-            assert_eq!(s.next_action(0, true, 1, 2), Action::Decode);
+            assert_eq!(s.next_action(2, true, 0, 2, None), Action::Prefill);
+            assert_eq!(s.next_action(1, true, 1, 2, None), Action::Prefill);
+            assert_eq!(s.next_action(0, true, 2, 2, None), Action::Decode);
+            assert_eq!(s.next_action(0, true, 1, 2, None), Action::Decode);
             // Batch empty → drain ends; with an empty queue this is Idle,
             // not a stuck drain state.
-            assert_eq!(s.next_action(0, true, 0, 2), Action::Idle);
+            assert_eq!(s.next_action(0, true, 0, 2, None), Action::Idle);
         }
         // Drain interrupted by new admissible work after emptying: admit.
-        assert_eq!(s.next_action(5, true, 0, 2), Action::Prefill);
+        assert_eq!(s.next_action(5, true, 0, 2, None), Action::Prefill);
     }
 
     #[test]
@@ -173,17 +196,44 @@ mod tests {
         // with an empty batch. Submit-time rejection guarantees this is
         // transient; the scheduler reports Idle either way.
         let mut c = Scheduler::new(SchedulerPolicy::Continuous);
-        assert_eq!(c.next_action(3, false, 0, 8), Action::Idle);
+        assert_eq!(c.next_action(3, false, 0, 8, None), Action::Idle);
         let mut s = Scheduler::new(SchedulerPolicy::Static);
-        assert_eq!(s.next_action(3, false, 0, 8), Action::Idle);
+        assert_eq!(s.next_action(3, false, 0, 8, None), Action::Idle);
+    }
+
+    #[test]
+    fn preempt_replaces_decode_when_kv_blocked() {
+        // A blocked decode with a cost-model victim becomes Preempt — in
+        // both policies, including mid-drain for Static.
+        let mut c = Scheduler::new(SchedulerPolicy::Continuous);
+        assert_eq!(c.next_action(0, true, 3, 8, Some(7)), Action::Preempt { victim: 7 });
+        // Queue present but inadmissible: still preempt rather than decode.
+        assert_eq!(c.next_action(2, false, 3, 8, Some(9)), Action::Preempt { victim: 9 });
+
+        let mut s = Scheduler::new(SchedulerPolicy::Static);
+        assert_eq!(s.next_action(0, true, 2, 2, Some(4)), Action::Preempt { victim: 4 });
+        // Now draining: the blocked decode mid-drain also preempts.
+        assert_eq!(s.next_action(0, true, 2, 2, Some(5)), Action::Preempt { victim: 5 });
+    }
+
+    #[test]
+    fn preempt_never_fires_without_a_victim_or_ahead_of_prefill() {
+        // No victim supplied (abort mode / sole runner) → plain Decode.
+        let mut c = Scheduler::new(SchedulerPolicy::Continuous);
+        assert_eq!(c.next_action(0, true, 3, 8, None), Action::Decode);
+        // Admission still has priority in Continuous: a victim is only
+        // consulted on the decode branch.
+        assert_eq!(c.next_action(2, true, 3, 8, Some(1)), Action::Prefill);
+        // Nothing running: a stale victim id cannot conjure a Preempt.
+        assert_eq!(c.next_action(0, true, 0, 8, Some(1)), Action::Idle);
     }
 
     #[test]
     fn static_drains_partial_batch_when_queue_empties() {
         let mut s = Scheduler::new(SchedulerPolicy::Static);
-        assert_eq!(s.next_action(1, true, 0, 4), Action::Prefill);
+        assert_eq!(s.next_action(1, true, 0, 4, None), Action::Prefill);
         // Queue empty with one running: drain it.
-        assert_eq!(s.next_action(0, true, 1, 4), Action::Decode);
-        assert_eq!(s.next_action(0, true, 0, 4), Action::Idle);
+        assert_eq!(s.next_action(0, true, 1, 4, None), Action::Decode);
+        assert_eq!(s.next_action(0, true, 0, 4, None), Action::Idle);
     }
 }

@@ -16,6 +16,8 @@
 
 pub mod pool;
 pub mod prefix;
+pub mod swap;
 
-pub use pool::{KvPool, KvPrecision, SeqHandle};
+pub use pool::{KvPool, KvPrecision, SeqHandle, SeqSnapshot};
 pub use prefix::{PrefixCache, PrefixCacheStats};
+pub use swap::{SwapStats, SwapStore};

@@ -50,6 +50,29 @@ impl KvPrecision {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SeqHandle(pub usize);
 
+/// A byte-exact host-side copy of one sequence's cached KV — what a
+/// swap-out preemption ships across the (modeled) PCIe link. Token slots
+/// are packed densely in sequence order: `codes[t]` is the `len`-token
+/// slice of `token_code_bytes` each, `scales[t]` the matching
+/// `L × 2 × Hkv` scale row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqSnapshot {
+    /// Tokens captured.
+    pub len: usize,
+    /// `len × token_code_bytes` quantized codes.
+    pub codes: Vec<u8>,
+    /// `len × (L × 2 × Hkv)` dequantization scales.
+    pub scales: Vec<f32>,
+}
+
+impl SeqSnapshot {
+    /// Bytes of quantized code payload (the precision-dependent part of
+    /// the transfer; scales are a fixed f32 overhead on top).
+    pub fn code_bytes(&self) -> usize {
+        self.codes.len()
+    }
+}
+
 #[derive(Debug)]
 struct SeqState {
     blocks: Vec<usize>,
@@ -134,6 +157,12 @@ impl KvPool {
     /// Bytes of code storage per token slot (all layers, K+V, all heads).
     pub fn token_code_bytes(&self) -> usize {
         Self::token_code_bytes_for(self.precision, self.n_layers, self.kv_heads, self.head_dim)
+    }
+
+    /// Bytes of scale storage per token slot (one f32 per layer × K/V ×
+    /// head) — precision-independent, unlike [`KvPool::token_code_bytes`].
+    pub fn token_scale_bytes(&self) -> usize {
+        self.token_scales() * 4
     }
 
     fn token_scales(&self) -> usize {
@@ -440,6 +469,73 @@ impl KvPool {
             }
             self.append_token(h, &kc, &ks, &vc, &vs)?;
         }
+        Ok(())
+    }
+
+    /// Copy a live sequence's cached KV out of the pool (swap-out). The
+    /// sequence itself is untouched — the caller typically follows up with
+    /// [`KvPool::free_seq`] once the snapshot is safely stored host-side.
+    pub fn export_seq(&self, h: SeqHandle) -> Result<SeqSnapshot> {
+        let s = self.seqs.get(h.0).ok_or_else(|| anyhow!("bad seq handle"))?;
+        if !s.alive {
+            bail!("export of freed sequence");
+        }
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        let mut codes = vec![0u8; s.len * tcb];
+        let mut scales = vec![0f32; s.len * tsc];
+        for t in 0..s.len {
+            let blk = s.blocks[t / self.block_tokens];
+            let slot = t % self.block_tokens;
+            let cb = (blk * self.block_tokens + slot) * tcb;
+            codes[t * tcb..(t + 1) * tcb].copy_from_slice(&self.codes[cb..cb + tcb]);
+            let sb = (blk * self.block_tokens + slot) * tsc;
+            scales[t * tsc..(t + 1) * tsc].copy_from_slice(&self.scales[sb..sb + tsc]);
+        }
+        Ok(SeqSnapshot { len: s.len, codes, scales })
+    }
+
+    /// Restore a snapshot into an **empty** sequence (swap-in): allocates
+    /// `blocks_for(snap.len)` fresh blocks and writes the token slots back
+    /// byte-exactly. Fails — leaving the sequence empty — if the free list
+    /// cannot cover the allocation.
+    pub fn import_seq(&mut self, h: SeqHandle, snap: &SeqSnapshot) -> Result<()> {
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        if snap.codes.len() != snap.len * tcb || snap.scales.len() != snap.len * tsc {
+            bail!(
+                "import_seq: snapshot geometry mismatch ({} codes for {} tokens of {tcb})",
+                snap.codes.len(),
+                snap.len
+            );
+        }
+        {
+            let s = self.seq_mut(h)?;
+            if s.len != 0 || !s.blocks.is_empty() {
+                bail!("import_seq into a non-empty sequence");
+            }
+        }
+        let need = self.blocks_for(snap.len);
+        if need > self.free.len() {
+            bail!("KV pool exhausted (swap-in needs {need} blocks, {} free)", self.free.len());
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let blk = self.free.pop().expect("checked above");
+            self.ref_count[blk] = 1;
+            blocks.push(blk);
+        }
+        for t in 0..snap.len {
+            let blk = blocks[t / self.block_tokens];
+            let slot = t % self.block_tokens;
+            let cb = (blk * self.block_tokens + slot) * tcb;
+            self.codes[cb..cb + tcb].copy_from_slice(&snap.codes[t * tcb..(t + 1) * tcb]);
+            let sb = (blk * self.block_tokens + slot) * tsc;
+            self.scales[sb..sb + tsc].copy_from_slice(&snap.scales[t * tsc..(t + 1) * tsc]);
+        }
+        let s = self.seq_mut(h)?;
+        s.blocks = blocks;
+        s.len = snap.len;
         Ok(())
     }
 
@@ -863,6 +959,71 @@ mod tests {
         p.free_seq(h);
         p.release_block(b); // last reference → block freed
         p.release_block(b); // double free → panic
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_byte_exact() {
+        // export → free → import restores the identical gather bytes — the
+        // property swap-mode preemption rests on.
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        for t in 0..6 {
+            let (k, ks, v, vs) = tok_data(&p, 40 + t as u8);
+            p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        }
+        let t_pad = 8;
+        let rb = p.row_bytes();
+        let gather = |p: &KvPool, h| {
+            let mut k_out = vec![0u8; 2 * 2 * t_pad * rb];
+            let mut v_out = k_out.clone();
+            let mut ks_out = vec![0f32; 2 * 2 * t_pad];
+            let mut vs_out = ks_out.clone();
+            p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+                .unwrap();
+            (k_out, ks_out, v_out, vs_out)
+        };
+        let before = gather(&p, h);
+
+        let snap = p.export_seq(h).unwrap();
+        assert_eq!(snap.len, 6);
+        assert_eq!(snap.code_bytes(), 6 * p.token_code_bytes());
+        p.free_seq(h);
+        assert_eq!(p.free_blocks(), 8, "victim fully released");
+
+        let h2 = p.alloc_seq();
+        p.import_seq(h2, &snap).unwrap();
+        assert_eq!(p.seq_len(h2), 6);
+        assert_eq!(p.free_blocks(), 6, "2 blocks re-allocated");
+        assert_eq!(gather(&p, h2), before, "swap round-trip must be byte-exact");
+    }
+
+    #[test]
+    fn import_rejects_bad_targets_and_dry_pool() {
+        let mut p = pool(KvPrecision::Int8); // 8 blocks of 4 tokens
+        let h = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 7);
+        for _ in 0..8 {
+            p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        }
+        let snap = p.export_seq(h).unwrap();
+
+        // Non-empty target.
+        assert!(p.import_seq(h, &snap).is_err());
+        // Dry pool: fill the rest, then import must fail cleanly…
+        let h2 = p.alloc_seq();
+        for _ in 0..24 {
+            p.append_token(h2, &k, &ks, &v, &vs).unwrap();
+        }
+        let h3 = p.alloc_seq();
+        let err = p.import_seq(h3, &snap).unwrap_err();
+        assert!(err.to_string().contains("swap-in"), "{err}");
+        assert_eq!(p.seq_len(h3), 0, "failed import leaves the target empty");
+        // …and succeed once room frees up.
+        p.free_seq(h);
+        p.import_seq(h3, &snap).unwrap();
+        assert_eq!(p.seq_len(h3), 8);
+        // Exporting a freed handle is an error.
+        assert!(p.export_seq(h).is_err());
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Host-side KV swap store: where preempted sequences' quantized blocks
+//! live while the device pool is oversubscribed (DESIGN.md §8).
+//!
+//! The store holds byte-exact [`SeqSnapshot`]s keyed by request id, with a
+//! budget in pool blocks mirroring a pinned-host-memory allocation. Because
+//! snapshots carry the pool's *quantized* codes, swap traffic scales with
+//! [`KvPrecision::row_bytes`] — a kv4 sequence ships ~4× fewer bytes than
+//! the same sequence at kv16, which is exactly why the victim cost model
+//! ([`crate::coordinator::preempt`]) prices low-precision victims cheaper.
+//!
+//! Transfers are modeled, not executed: [`transfer_time_s`] converts a
+//! payload size into PCIe time that the engine accumulates in
+//! `EngineStats::sim_time_s`, the same bookkeeping the sim backend uses for
+//! device iterations.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::pool::SeqSnapshot;
+
+/// Modeled host↔device interconnect bandwidth, bytes/second (PCIe 4.0 x16
+/// effective ≈ 25 GB/s; we model the conservative end).
+pub const PCIE_BANDWIDTH_BPS: f64 = 16.0e9;
+/// Fixed per-transfer latency (DMA setup + driver), seconds.
+pub const PCIE_LATENCY_S: f64 = 10.0e-6;
+
+/// Modeled one-way transfer time for `bytes` over the host link.
+pub fn transfer_time_s(bytes: usize) -> f64 {
+    PCIE_LATENCY_S + bytes as f64 / PCIE_BANDWIDTH_BPS
+}
+
+/// Lifetime counters (exported through
+/// [`crate::metrics::PreemptionSummary`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SwapStats {
+    /// Sequences swapped out to the host.
+    pub swap_outs: usize,
+    /// Sequences swapped back into the pool.
+    pub swap_ins: usize,
+    /// Pool blocks shipped host-ward (cumulative).
+    pub swapped_out_blocks: usize,
+    /// Pool blocks restored device-ward (cumulative).
+    pub swapped_in_blocks: usize,
+    /// Snapshots discarded without a swap-in (victim downgraded to
+    /// recompute because the pool could not take the restore).
+    pub dropped: usize,
+    /// High-water mark of resident host blocks.
+    pub peak_blocks: usize,
+}
+
+/// The store. One per engine; budget in pool-sized blocks.
+#[derive(Debug, Default)]
+pub struct SwapStore {
+    /// Max resident blocks (0 = unbounded).
+    budget_blocks: usize,
+    /// Pool block size in tokens (for sizing snapshots in blocks).
+    block_tokens: usize,
+    used_blocks: usize,
+    entries: HashMap<u64, (SeqSnapshot, usize)>,
+    pub stats: SwapStats,
+}
+
+impl SwapStore {
+    pub fn new(block_tokens: usize, budget_blocks: usize) -> Self {
+        Self { budget_blocks, block_tokens, ..Self::default() }
+    }
+
+    pub fn budget_blocks(&self) -> usize {
+        self.budget_blocks
+    }
+
+    /// Host blocks currently resident.
+    pub fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    /// Swapped-out sequences currently resident.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fraction of the budget in use (0 when unbounded or unused).
+    pub fn utilization(&self) -> f64 {
+        if self.budget_blocks == 0 {
+            0.0
+        } else {
+            self.used_blocks as f64 / self.budget_blocks as f64
+        }
+    }
+
+    fn blocks_of(&self, snap: &SeqSnapshot) -> usize {
+        snap.len.div_ceil(self.block_tokens.max(1))
+    }
+
+    /// Would a `tokens`-token snapshot fit the remaining budget?
+    pub fn can_hold(&self, tokens: usize) -> bool {
+        self.budget_blocks == 0
+            || self.used_blocks + tokens.div_ceil(self.block_tokens.max(1)) <= self.budget_blocks
+    }
+
+    /// Park a victim's snapshot under its request id. Errors if the id is
+    /// already swapped or the budget cannot take it (the caller should
+    /// have checked [`SwapStore::can_hold`] and fallen back to recompute).
+    pub fn insert(&mut self, id: u64, snap: SeqSnapshot) -> Result<()> {
+        if self.entries.contains_key(&id) {
+            return Err(anyhow!("request {id} is already swapped out"));
+        }
+        let blocks = self.blocks_of(&snap);
+        if self.budget_blocks > 0 && self.used_blocks + blocks > self.budget_blocks {
+            return Err(anyhow!(
+                "swap budget full ({} + {blocks} > {} blocks)",
+                self.used_blocks,
+                self.budget_blocks
+            ));
+        }
+        self.used_blocks += blocks;
+        self.stats.swap_outs += 1;
+        self.stats.swapped_out_blocks += blocks;
+        self.stats.peak_blocks = self.stats.peak_blocks.max(self.used_blocks);
+        self.entries.insert(id, (snap, blocks));
+        Ok(())
+    }
+
+    /// Is this request currently swapped out?
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// KV tokens parked for `id` (0 when not swapped).
+    pub fn tokens_of(&self, id: u64) -> usize {
+        self.entries.get(&id).map(|(s, _)| s.len).unwrap_or(0)
+    }
+
+    /// Remove and return a snapshot for swap-in. Counts as a swap-in.
+    pub fn take(&mut self, id: u64) -> Option<SeqSnapshot> {
+        let (snap, blocks) = self.entries.remove(&id)?;
+        self.used_blocks -= blocks;
+        self.stats.swap_ins += 1;
+        self.stats.swapped_in_blocks += blocks;
+        Some(snap)
+    }
+
+    /// Discard a snapshot without restoring it (the victim was downgraded
+    /// to recompute).
+    pub fn drop_entry(&mut self, id: u64) -> bool {
+        match self.entries.remove(&id) {
+            Some((_, blocks)) => {
+                self.used_blocks -= blocks;
+                self.stats.dropped += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(tokens: usize) -> SeqSnapshot {
+        SeqSnapshot { len: tokens, codes: vec![0xAB; tokens * 3], scales: vec![1.0; tokens] }
+    }
+
+    #[test]
+    fn budget_accounting_balances() {
+        let mut s = SwapStore::new(4, 4); // 4-token blocks, 4-block budget
+        assert!(s.can_hold(16));
+        s.insert(1, snap(9)).unwrap(); // 3 blocks
+        assert_eq!(s.used_blocks(), 3);
+        assert_eq!(s.utilization(), 0.75);
+        assert!(s.can_hold(4));
+        assert!(!s.can_hold(5), "two blocks would overflow");
+        assert!(s.insert(2, snap(8)).is_err(), "budget enforced");
+        assert!(s.insert(1, snap(1)).is_err(), "double swap-out rejected");
+
+        let got = s.take(1).unwrap();
+        assert_eq!(got, snap(9), "snapshot returned intact");
+        assert_eq!(s.used_blocks(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.stats.swap_outs, 1);
+        assert_eq!(s.stats.swap_ins, 1);
+        assert_eq!(s.stats.swapped_out_blocks, 3);
+        assert_eq!(s.stats.swapped_in_blocks, 3);
+        assert_eq!(s.stats.peak_blocks, 3);
+    }
+
+    #[test]
+    fn unbounded_budget_and_drop_path() {
+        let mut s = SwapStore::new(4, 0);
+        assert!(s.can_hold(usize::MAX / 8), "0 = unbounded");
+        s.insert(7, snap(12)).unwrap();
+        assert_eq!(s.tokens_of(7), 12);
+        assert!(s.contains(7));
+        assert_eq!(s.utilization(), 0.0, "no budget, no utilization");
+        assert!(s.drop_entry(7));
+        assert!(!s.drop_entry(7));
+        assert!(s.take(7).is_none());
+        assert_eq!(s.stats.dropped, 1);
+        assert_eq!(s.used_blocks(), 0);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let t1 = transfer_time_s(1 << 20);
+        let t4 = transfer_time_s(4 << 20);
+        assert!(t4 > t1);
+        // Latency floor dominates tiny transfers.
+        assert!(transfer_time_s(0) >= PCIE_LATENCY_S);
+        // 16 MB at 16 GB/s ≈ 1 ms.
+        let t = transfer_time_s(16 << 20);
+        assert!((0.9e-3..1.2e-3).contains(&t), "{t}");
+    }
+}

@@ -45,7 +45,8 @@ USAGE:
   turbomind serve [--addr HOST:PORT] [--precision WxAyKVz] [--backend sim|pjrt]
                   [--artifacts DIR] [--max-batch N] [--max-requests N]
                   [--prefix-cache] [--prefix-cache-blocks N]
-  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|all>
+                  [--preemption abort|swap|recompute] [--swap-budget-blocks N]
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|all>
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
 
@@ -57,6 +58,13 @@ requires a binary built with `--features pjrt`.
 common prompt prefix (shared system prompts, multi-turn histories) reuse
 resident pool blocks instead of re-prefilling them; responses then report
 `prefix_hit_tokens` and `{\"stats\": true}` reports the hit rate.
+
+`--preemption swap|recompute` turns KV-pool exhaustion from an abort into
+a scheduling decision: the precision-aware cost model picks a running
+victim, swaps its quantized blocks to the host store (or releases them for
+recompute), re-queues it at the head, and resumes it bit-exactly when
+blocks free up. `--swap-budget-blocks` caps the host store (0 = unbounded);
+`{\"stats\": true}` reports swap-pool utilization and victim counts.
 ";
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -79,6 +87,11 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         seed: args.get_u64("seed", 0),
         enable_prefix_cache: args.flag("prefix-cache"),
         prefix_cache_blocks: args.get_usize("prefix-cache-blocks", 0),
+        preemption_mode: args
+            .get_or("preemption", "abort")
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        swap_budget_blocks: args.get_usize("swap-budget-blocks", 0),
         ..EngineConfig::default()
     })
 }

@@ -1,8 +1,10 @@
 //! Serving metrics: latency percentiles, TTFT, and throughput — the three
 //! evaluation metrics of §5.1 — plus the prefix-cache effectiveness summary
-//! (hit rate, blocks saved, prefill tokens skipped).
+//! (hit rate, blocks saved, prefill tokens skipped) and the preemption
+//! summary (victims, swap traffic, recompute volume, OOM aborts).
 
-use crate::kvcache::PrefixCacheStats;
+use crate::coordinator::PreemptStats;
+use crate::kvcache::{PrefixCacheStats, SwapStats};
 
 /// Prefix-cache effectiveness, derived from the engine's
 /// [`PrefixCacheStats`] counters. This is what the server's stats line and
@@ -40,6 +42,55 @@ impl From<PrefixCacheStats> for PrefixCacheSummary {
             blocks_saved: s.blocks_shared,
             prefill_tokens_skipped: s.hit_tokens,
             evicted_blocks: s.evicted_blocks,
+        }
+    }
+}
+
+/// Preemption effectiveness under KV pressure (DESIGN.md §8): how often
+/// the engine preempted instead of aborting, how it preserved the victims,
+/// and what the preservation cost. This is what the server's stats line
+/// and the `bench preempt` table report.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PreemptionSummary {
+    /// Victims preempted (swap + recompute).
+    pub preemptions: usize,
+    /// Victims preserved by swapping KV to the host store.
+    pub swap_preemptions: usize,
+    /// Victims released for re-prefill on resume.
+    pub recompute_preemptions: usize,
+    /// Tokens queued for re-prefill by recompute preemptions.
+    pub recomputed_tokens: usize,
+    /// Pool blocks shipped to the host (cumulative).
+    pub swapped_out_blocks: usize,
+    /// Pool blocks restored from the host (cumulative).
+    pub swapped_in_blocks: usize,
+    /// High-water mark of host blocks resident at once.
+    pub swap_peak_blocks: usize,
+    /// Sequences lost to pool exhaustion (abort mode, or a sole runner no
+    /// preemption could save).
+    pub oom_aborts: usize,
+}
+
+impl PreemptionSummary {
+    pub fn new(p: PreemptStats, s: SwapStats) -> Self {
+        Self {
+            preemptions: p.preemptions,
+            swap_preemptions: p.swap_preemptions,
+            recompute_preemptions: p.recompute_preemptions,
+            recomputed_tokens: p.recomputed_tokens,
+            swapped_out_blocks: s.swapped_out_blocks,
+            swapped_in_blocks: s.swapped_in_blocks,
+            swap_peak_blocks: s.peak_blocks,
+            oom_aborts: p.oom_aborts,
+        }
+    }
+
+    /// Fraction of preemptions preserved by swap (0 when none happened).
+    pub fn swap_fraction(&self) -> f64 {
+        if self.preemptions == 0 {
+            0.0
+        } else {
+            self.swap_preemptions as f64 / self.preemptions as f64
         }
     }
 }
@@ -191,6 +242,32 @@ mod tests {
         let p = percentiles(&[5.0, 1.0, 3.0, 2.0, 4.0]).unwrap();
         assert_eq!(p.p50, 3.0);
         assert_eq!(p.max, 5.0);
+    }
+
+    #[test]
+    fn preemption_summary_merges_decision_and_transfer_counters() {
+        let s = PreemptionSummary::new(
+            PreemptStats {
+                preemptions: 5,
+                swap_preemptions: 3,
+                recompute_preemptions: 2,
+                recomputed_tokens: 80,
+                oom_aborts: 1,
+            },
+            SwapStats {
+                swap_outs: 3,
+                swap_ins: 3,
+                swapped_out_blocks: 12,
+                swapped_in_blocks: 12,
+                dropped: 0,
+                peak_blocks: 8,
+            },
+        );
+        assert_eq!(s.preemptions, 5);
+        assert_eq!(s.swapped_out_blocks, 12);
+        assert_eq!(s.swap_peak_blocks, 8);
+        assert!((s.swap_fraction() - 0.6).abs() < 1e-12);
+        assert_eq!(PreemptionSummary::default().swap_fraction(), 0.0, "no NaN on idle engines");
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! Protocol (one JSON object per line):
 //!   → `{"prompt": [1,2,3], "max_new_tokens": 16}`
 //!   ← `{"id": 0, "tokens": [...], "finish": "length", "ttft_s": ..., "latency_s": ...,
-//!      "prefix_hit_tokens": 0}`
+//!      "prefix_hit_tokens": 0, "preempt_count": 0, "swapped_in_blocks": 0,
+//!      "abort_reason": null}`
 //!   → `{"stats": true}`
 //!   ← `{"pool_blocks_total": ..., "pool_blocks_free": ..., "pool_utilization": ...,
-//!      "prefix_cache_enabled": ..., "prefix_cache_hit_rate": ..., ...}`
+//!      "prefix_cache_enabled": ..., "prefix_cache_hit_rate": ...,
+//!      "preemption_mode": "swap", "swap_blocks_used": ..., "swap_utilization": ..., ...}`
 //!
 //! The listener thread accepts connections and forwards requests over a
 //! channel to the engine thread, which loops `engine.step()`; responses
@@ -140,6 +142,9 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
                         latency: 0.0,
                         prompt_len: 0,
                         prefix_hit_tokens: 0,
+                        preempt_count: 0,
+                        swapped_in_blocks: 0,
+                        abort_reason: Some(e.to_string()),
                     });
                     eprintln!("rejected request: {e}");
                 }
@@ -218,12 +223,16 @@ fn is_stats_request(line: &str) -> bool {
         .unwrap_or(false)
 }
 
-/// Encode the engine-state stats line: pool utilization plus the
-/// prefix-cache effectiveness summary (hit rate / blocks saved / prefill
-/// tokens skipped — zeros with `"prefix_cache_enabled": false`).
+/// Encode the engine-state stats line: pool utilization, the prefix-cache
+/// effectiveness summary (hit rate / blocks saved / prefill tokens skipped
+/// — zeros with `"prefix_cache_enabled": false`), and the swap-pool /
+/// preemption summary (mode, host-store occupancy + utilization, victim
+/// counts).
 pub fn stats_json(engine: &Engine) -> Json {
     let cache = engine.prefix_cache_summary();
     let c = cache.unwrap_or_default();
+    let p = engine.preemption_summary();
+    let swap = engine.swap_store();
     obj([
         ("pool_blocks_total", Json::from(engine.kv_pool().total_blocks())),
         ("pool_blocks_free", Json::from(engine.kv_pool().free_blocks())),
@@ -238,6 +247,16 @@ pub fn stats_json(engine: &Engine) -> Json {
         ("prefix_cache_blocks_saved", Json::from(c.blocks_saved)),
         ("prefill_tokens_skipped", Json::from(c.prefill_tokens_skipped)),
         ("prefix_cache_evicted_blocks", Json::from(c.evicted_blocks)),
+        ("preemption_mode", Json::from(engine.config().preemption_mode.to_string())),
+        ("swap_blocks_used", Json::from(swap.used_blocks())),
+        ("swap_budget_blocks", Json::from(swap.budget_blocks())),
+        ("swap_utilization", Json::from(swap.utilization())),
+        ("preemptions", Json::from(p.preemptions)),
+        ("swap_preemptions", Json::from(p.swap_preemptions)),
+        ("recompute_preemptions", Json::from(p.recompute_preemptions)),
+        ("swapped_out_blocks", Json::from(p.swapped_out_blocks)),
+        ("swapped_in_blocks", Json::from(p.swapped_in_blocks)),
+        ("oom_aborts", Json::from(p.oom_aborts)),
     ])
 }
 
@@ -249,6 +268,8 @@ pub fn encode_error(msg: &str) -> Json {
 /// Encode an output line. `ttft_s` is `null` when no token was ever
 /// emitted (aborted requests carry `ttft = NaN` internally, and JSON has
 /// no NaN — serializing it bare would corrupt the protocol line).
+/// `abort_reason` is the structured detail behind `"finish": "aborted"`
+/// (null otherwise); aborted lines still carry the partial generation.
 pub fn encode_output(out: &RequestOutput) -> Json {
     let finish = match out.finish {
         FinishReason::Length => "length",
@@ -256,6 +277,10 @@ pub fn encode_output(out: &RequestOutput) -> Json {
         FinishReason::Aborted => "aborted",
     };
     let ttft = if out.ttft.is_finite() { Json::from(out.ttft) } else { Json::Null };
+    let reason = match &out.abort_reason {
+        Some(r) => Json::from(r.as_str()),
+        None => Json::Null,
+    };
     obj([
         ("id", Json::from(out.id as f64)),
         ("tokens", arr(out.tokens.iter().map(|&t| Json::from(t as i64)))),
@@ -264,6 +289,9 @@ pub fn encode_output(out: &RequestOutput) -> Json {
         ("latency_s", Json::from(out.latency)),
         ("prompt_len", Json::from(out.prompt_len)),
         ("prefix_hit_tokens", Json::from(out.prefix_hit_tokens)),
+        ("preempt_count", Json::from(out.preempt_count)),
+        ("swapped_in_blocks", Json::from(out.swapped_in_blocks)),
+        ("abort_reason", reason),
     ])
 }
 
@@ -363,11 +391,40 @@ mod tests {
             latency: 0.0,
             prompt_len: 9,
             prefix_hit_tokens: 0,
+            preempt_count: 0,
+            swapped_in_blocks: 0,
+            abort_reason: Some("request needs 40 KV blocks but the pool holds 8".into()),
         };
         let line = encode_output(&out).dump();
         let parsed = Json::parse(&line).expect("aborted line must parse");
         assert_eq!(parsed.req_str("finish").unwrap(), "aborted");
         assert_eq!(parsed.get("ttft_s"), Some(&Json::Null));
+        assert!(
+            parsed.req_str("abort_reason").unwrap().contains("KV blocks"),
+            "aborts must carry their structured reason"
+        );
+    }
+
+    #[test]
+    fn aborted_output_keeps_partial_generation_on_the_wire() {
+        // A mid-decode OOM abort finishes with whatever was generated —
+        // the wire line must ship those tokens, not drop them.
+        let out = RequestOutput {
+            id: 4,
+            tokens: vec![11, 22, 33],
+            finish: FinishReason::Aborted,
+            ttft: 0.01,
+            latency: 0.4,
+            prompt_len: 16,
+            prefix_hit_tokens: 0,
+            preempt_count: 0,
+            swapped_in_blocks: 0,
+            abort_reason: Some("kv pool exhausted mid-decode: KV pool exhausted".into()),
+        };
+        let parsed = Json::parse(&encode_output(&out).dump()).unwrap();
+        assert_eq!(parsed.req_str("finish").unwrap(), "aborted");
+        assert_eq!(parsed.req_arr("tokens").unwrap().len(), 3, "partial generation kept");
+        assert!(parsed.req_str("abort_reason").unwrap().contains("exhausted"));
     }
 
     #[test]
@@ -387,6 +444,9 @@ mod tests {
             latency: 1.5,
             prompt_len: 4,
             prefix_hit_tokens: 32,
+            preempt_count: 2,
+            swapped_in_blocks: 5,
+            abort_reason: None,
         };
         let j = encode_output(&out);
         let parsed = Json::parse(&j.dump()).unwrap();
@@ -394,6 +454,9 @@ mod tests {
         assert_eq!(parsed.req_str("finish").unwrap(), "length");
         assert_eq!(parsed.req_arr("tokens").unwrap().len(), 2);
         assert_eq!(parsed.req_usize("prefix_hit_tokens").unwrap(), 32);
+        assert_eq!(parsed.req_usize("preempt_count").unwrap(), 2);
+        assert_eq!(parsed.req_usize("swapped_in_blocks").unwrap(), 5);
+        assert_eq!(parsed.get("abort_reason"), Some(&Json::Null));
     }
 
     #[test]
@@ -415,5 +478,11 @@ mod tests {
         assert_eq!(parsed.req_usize("pool_blocks_free").unwrap(), 512);
         assert_eq!(parsed.get("pool_utilization").unwrap().as_f64(), Some(0.0));
         assert_eq!(parsed.get("prefix_cache_hit_rate").unwrap().as_f64(), Some(0.0));
+        // Swap-pool summary rides along (abort default: all zeros).
+        assert_eq!(parsed.req_str("preemption_mode").unwrap(), "abort");
+        assert_eq!(parsed.req_usize("swap_blocks_used").unwrap(), 0);
+        assert_eq!(parsed.req_usize("preemptions").unwrap(), 0);
+        assert_eq!(parsed.get("swap_utilization").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parsed.req_usize("oom_aborts").unwrap(), 0);
     }
 }

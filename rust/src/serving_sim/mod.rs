@@ -50,6 +50,18 @@ impl SimPrecision {
     }
 }
 
+/// Abstract analogue of the engine's `PreemptionMode` (DESIGN.md §8):
+/// what happens when decode growth exceeds [`SimConfig::kv_budget_tokens`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimPreemption {
+    /// Drop the youngest running sequence (it counts as aborted).
+    #[default]
+    Abort,
+    /// Swap the youngest out, paying `kv_bytes / swap_bw` each way, and
+    /// swap it back in when the budget clears.
+    Swap,
+}
+
 /// Simulator configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -66,11 +78,31 @@ pub struct SimConfig {
     /// [`TraceRequest::prefix_group`] prefix is already resident skips
     /// that much prefill (abstract analogue of the engine's radix index).
     pub prefix_cache: bool,
+    /// Abstract KV-pressure model: max resident decode KV tokens before
+    /// preemption kicks in (0 = unbounded, the default — capacity then
+    /// comes only from the memory-derived batch bound).
+    pub kv_budget_tokens: usize,
+    /// Reaction to exceeding the budget (see [`SimPreemption`]).
+    pub preemption: SimPreemption,
+    /// Host↔device bandwidth for swapped KV, bytes/s.
+    pub swap_bw: f64,
 }
 
 impl SimConfig {
     pub fn new(model: ModelConfig, dev: DeviceProfile, fw: Framework, precision: SimPrecision) -> Self {
-        Self { model, dev, fw, precision, tp: 1, max_batch: 0, chunk: 512, prefix_cache: false }
+        Self {
+            model,
+            dev,
+            fw,
+            precision,
+            tp: 1,
+            max_batch: 0,
+            chunk: 512,
+            prefix_cache: false,
+            kv_budget_tokens: 0,
+            preemption: SimPreemption::Abort,
+            swap_bw: 16.0e9,
+        }
     }
 }
 
@@ -86,6 +118,12 @@ pub struct SimResult {
     pub prefill_iters: usize,
     /// Prompt tokens skipped via prefix caching (0 when disabled).
     pub prefill_tokens_skipped: usize,
+    /// Requests dropped by `SimPreemption::Abort` under KV pressure.
+    pub aborted: usize,
+    /// Swap-out events under `SimPreemption::Swap`.
+    pub swap_outs: usize,
+    /// Modeled host-link time spent on swap traffic, seconds.
+    pub swap_time_s: f64,
 }
 
 impl SimResult {
@@ -170,6 +208,13 @@ impl ServingSim {
         self.iter_time(1, chunk, past)
     }
 
+    /// Bytes of KV a `kv_len`-token sequence ships per swap direction —
+    /// scales with the serving KV precision, so kv4 swaps ~4× cheaper
+    /// than kv16 (the engine-side cost model's byte accounting).
+    fn swap_bytes(&self, kv_len: usize) -> f64 {
+        (self.cfg.model.kv_bytes_per_token(self.cfg.precision.kv_bits) * kv_len) as f64
+    }
+
     /// Core per-iteration model: `batch` sequences × `q_tokens` each.
     fn iter_time(&self, batch: usize, q_tokens: usize, kv_len: usize) -> f64 {
         let m = &self.cfg.model;
@@ -251,18 +296,24 @@ impl ServingSim {
         let mut next_arrival = 0usize;
         let mut queue: Vec<PendingSeq> = Vec::new();
         let mut running: Vec<LiveSeq> = Vec::new();
+        // Sequences parked host-side by the abstract swap model.
+        let mut swapped: Vec<LiveSeq> = Vec::new();
         let mut metrics = MetricsCollector::new();
         let mut decode_iters = 0usize;
         let mut prefill_iters = 0usize;
         // Abstract prefix cache: group id → longest resident shared prefix.
         let mut cached: HashMap<u64, usize> = HashMap::new();
         let mut prefill_tokens_skipped = 0usize;
+        let mut aborted = 0usize;
+        let mut swap_outs = 0usize;
+        let mut swap_time_s = 0.0f64;
+        let budget = self.cfg.kv_budget_tokens;
 
-        let done = |q: &Vec<PendingSeq>, r: &Vec<LiveSeq>, next: usize| {
-            q.is_empty() && r.is_empty() && next >= trace.len()
+        let done = |q: &Vec<PendingSeq>, r: &Vec<LiveSeq>, sw: &Vec<LiveSeq>, next: usize| {
+            q.is_empty() && r.is_empty() && sw.is_empty() && next >= trace.len()
         };
 
-        while !done(&queue, &running, next_arrival) {
+        while !done(&queue, &running, &swapped, next_arrival) {
             // Admit arrivals up to the clock; a request whose group prefix
             // is already resident skips it (leaving ≥ 1 token to prefill,
             // like the engine's match cap).
@@ -281,8 +332,27 @@ impl ServingSim {
                 queue.push(PendingSeq { idx: next_arrival, prefilled: pre });
                 next_arrival += 1;
             }
+            // Swap-ins take priority over fresh admissions: a parked
+            // sequence resumes (paying the transfer) as soon as the budget
+            // allows — or unconditionally when the batch ran empty, so a
+            // sole outsized sequence can never strand the run.
+            if !swapped.is_empty() && running.len() < capacity {
+                let kv_now: usize = running.iter().map(|s| s.kv_len).sum();
+                let cand = swapped.last().expect("non-empty").kv_len;
+                if running.is_empty()
+                    || budget == 0
+                    || kv_now + cand + running.len() + 1 <= budget
+                {
+                    let s = swapped.pop().expect("non-empty");
+                    let dt = self.swap_bytes(s.kv_len) / self.cfg.swap_bw;
+                    clock += dt;
+                    swap_time_s += dt;
+                    running.push(s);
+                    continue;
+                }
+            }
             // Nothing runnable: jump to next arrival.
-            if queue.is_empty() && running.is_empty() {
+            if queue.is_empty() && running.is_empty() && swapped.is_empty() {
                 clock = trace[next_arrival].arrival_s;
                 continue;
             }
@@ -325,6 +395,29 @@ impl ServingSim {
                     }
                 }
             } else if !running.is_empty() {
+                // KV pressure: this iteration grows every sequence by one
+                // token; preempt youngest-first until that fits the
+                // abstract budget (a sole survivor always proceeds — the
+                // engine's sole-runner rule).
+                if budget > 0 {
+                    while running.len() > 1
+                        && running.iter().map(|s| s.kv_len).sum::<usize>() + running.len()
+                            > budget
+                    {
+                        let victim = running.pop().expect("len > 1");
+                        match self.cfg.preemption {
+                            SimPreemption::Abort => aborted += 1,
+                            SimPreemption::Swap => {
+                                let dt =
+                                    self.swap_bytes(victim.kv_len) / self.cfg.swap_bw;
+                                clock += dt;
+                                swap_time_s += dt;
+                                swap_outs += 1;
+                                swapped.push(victim);
+                            }
+                        }
+                    }
+                }
                 // One decode iteration over the whole batch.
                 let batch = running.len();
                 let mean_kv =
@@ -365,6 +458,9 @@ impl ServingSim {
             decode_iters,
             prefill_iters,
             prefill_tokens_skipped,
+            aborted,
+            swap_outs,
+            swap_time_s,
         }
     }
 
@@ -538,6 +634,80 @@ mod tests {
         );
         assert!(t_on < t_off, "cached TTFT {t_on} vs uncached {t_off}");
         assert!(on.makespan_s < off.makespan_s, "less prefill → earlier finish");
+    }
+
+    #[test]
+    fn kv_pressure_swap_completes_what_abort_drops() {
+        // The abstract §8 model: a KV-token budget far below the trace's
+        // working set. Abort mode sheds load; swap mode completes every
+        // request at the price of transfer time and a longer makespan.
+        let trace = chat_trace(20.0, 60);
+        let mut cfg = SimConfig::new(
+            find_model("qwen3-8b").unwrap(),
+            DeviceProfile::a100(),
+            Framework::TurboMind,
+            SimPrecision::w4a16kv8(),
+        );
+        cfg.max_batch = 16;
+        let unbounded = ServingSim::new(cfg.clone()).run(&trace);
+        assert_eq!(unbounded.aborted, 0);
+        assert_eq!(unbounded.swap_outs, 0, "no budget, no preemption");
+
+        cfg.kv_budget_tokens = 2048;
+        cfg.preemption = SimPreemption::Abort;
+        let ab = ServingSim::new(cfg.clone()).run(&trace);
+        assert!(ab.aborted > 0, "pressure must shed load in abort mode");
+        assert_eq!(ab.metrics.count() + ab.aborted, trace.len());
+
+        cfg.preemption = SimPreemption::Swap;
+        let sw = ServingSim::new(cfg).run(&trace);
+        assert_eq!(sw.aborted, 0, "swap mode loses nothing");
+        assert_eq!(sw.metrics.count(), trace.len());
+        assert!(sw.swap_outs > 0, "the budget must actually bind");
+        assert!(sw.swap_time_s > 0.0);
+        assert!(
+            sw.makespan_s > unbounded.makespan_s,
+            "preservation costs time: {} !> {}",
+            sw.makespan_s,
+            unbounded.makespan_s
+        );
+        // Goodput (completed tokens/s) beats shedding the same pressure.
+        let goodput = |r: &SimResult| {
+            let (_, gen) = r.metrics.total_tokens();
+            gen as f64 / r.makespan_s
+        };
+        assert!(goodput(&sw) > goodput(&ab), "{} !> {}", goodput(&sw), goodput(&ab));
+    }
+
+    #[test]
+    fn swap_traffic_is_cheaper_at_lower_kv_precision() {
+        // The precision-aware claim at simulator scale: identical trace
+        // and budget, kv4 pays less modeled link time than kv16.
+        let trace = chat_trace(20.0, 60);
+        let time_at = |prec: SimPrecision| {
+            let mut cfg = SimConfig::new(
+                find_model("qwen3-8b").unwrap(),
+                DeviceProfile::a100(),
+                Framework::TurboMind,
+                prec,
+            );
+            cfg.max_batch = 16;
+            cfg.kv_budget_tokens = 2048;
+            cfg.preemption = SimPreemption::Swap;
+            let r = ServingSim::new(cfg).run(&trace);
+            assert_eq!(r.metrics.count(), trace.len());
+            (r.swap_outs, r.swap_time_s)
+        };
+        let (o16, t16) = time_at(SimPrecision::w4a16kv16());
+        let (o4, t4) = time_at(SimPrecision::w4a16kv4());
+        assert!(o16 > 0 && o4 > 0);
+        // Per-swap-out link time must drop ~4× with the byte width.
+        assert!(
+            t4 / o4 as f64 * 3.0 < t16 / o16 as f64,
+            "kv4 {:.2e}/swap vs kv16 {:.2e}/swap",
+            t4 / o4 as f64,
+            t16 / o16 as f64
+        );
     }
 
     #[test]

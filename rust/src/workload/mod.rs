@@ -222,6 +222,75 @@ impl SharedPrefixGen {
     }
 }
 
+/// Bursty overload traffic — the KV-pressure scenario the preemption
+/// subsystem (DESIGN.md §8) exists for. Requests arrive in `bursts` waves
+/// of `burst_size` near-simultaneous requests (jittered by a fast Poisson
+/// process), `gap_s` apart; prompt and generation lengths are drawn
+/// uniformly from `±25%` bands around the configured means. Against a pool
+/// of `P` tokens, a wave of `burst_size × (prompt + gen)` tokens
+/// oversubscribes it by [`BurstGen::oversubscription`] — size the pool so
+/// that ratio is ~2× to reproduce the `bench preempt` regime.
+#[derive(Debug, Clone)]
+pub struct BurstGen {
+    /// Number of arrival waves.
+    pub bursts: usize,
+    /// Requests per wave.
+    pub burst_size: usize,
+    /// Seconds between wave starts.
+    pub gap_s: f64,
+    /// Mean prompt length, tokens.
+    pub prompt_tokens: usize,
+    /// Mean generation length, tokens.
+    pub gen_tokens: usize,
+    pub seed: u64,
+}
+
+impl BurstGen {
+    /// Generate the `bursts × burst_size` trace, wave-ordered; arrivals
+    /// within a wave are jittered ~1 ms apart so they are strictly
+    /// increasing (the scheduler sees them as one queue-filling spike).
+    pub fn generate(&self) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(self.bursts * self.burst_size);
+        for b in 0..self.bursts {
+            let mut t = b as f64 * self.gap_s;
+            for _ in 0..self.burst_size {
+                t += rng.exp_gap(1000.0);
+                let jit = |mean: usize, rng: &mut Rng| {
+                    let lo = (mean * 3 / 4).max(1);
+                    let hi = (mean * 5 / 4).max(lo + 1);
+                    rng.range(lo, hi)
+                };
+                out.push(TraceRequest {
+                    arrival_s: t,
+                    prompt_tokens: jit(self.prompt_tokens, &mut rng),
+                    gen_tokens: jit(self.gen_tokens, &mut rng),
+                    prefix_group: 0,
+                    prefix_tokens: 0,
+                });
+            }
+        }
+        out
+    }
+
+    /// Peak pool pressure of one wave against a `pool_tokens`-token KV
+    /// pool: total wave footprint / pool size (2.0 = the ISSUE's "2×
+    /// oversubscribed" operating point, using the configured means).
+    pub fn oversubscription(&self, pool_tokens: usize) -> f64 {
+        (self.burst_size * (self.prompt_tokens + self.gen_tokens)) as f64
+            / pool_tokens.max(1) as f64
+    }
+
+    /// Deterministic prompt token ids for trace request `req_index` —
+    /// distinct per request (no shared prefixes; pressure, not reuse, is
+    /// this generator's point).
+    pub fn prompt_tokens(&self, req_index: usize, len: usize, vocab: usize) -> Vec<i32> {
+        let mut rng =
+            Rng::new(self.seed ^ (req_index as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F));
+        (0..len).map(|_| rng.below(vocab) as i32).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +368,59 @@ mod tests {
         for r in WorkloadGen::new(WorkloadKind::Chat, 2.0, 1).generate(50) {
             assert_eq!((r.prefix_group, r.prefix_tokens), (0, 0));
         }
+    }
+
+    fn bg() -> BurstGen {
+        BurstGen {
+            bursts: 3,
+            burst_size: 6,
+            gap_s: 2.0,
+            prompt_tokens: 40,
+            gen_tokens: 24,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn burst_trace_shape_and_determinism() {
+        let g = bg();
+        let trace = g.generate();
+        assert_eq!(trace.len(), 18);
+        assert_eq!(trace, g.generate(), "same seed, same trace");
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s, "arrivals strictly increasing");
+        }
+        // Lengths stay in the ±25% jitter bands and advertise no prefix.
+        for r in &trace {
+            assert!((30..=50).contains(&r.prompt_tokens), "{}", r.prompt_tokens);
+            assert!((18..=30).contains(&r.gen_tokens), "{}", r.gen_tokens);
+            assert_eq!((r.prefix_group, r.prefix_tokens), (0, 0));
+        }
+        // Waves are tight spikes separated by the configured gap: every
+        // wave's span is tiny relative to gap_s.
+        for b in 0..3 {
+            let wave = &trace[b * 6..(b + 1) * 6];
+            let span = wave.last().unwrap().arrival_s - wave.first().unwrap().arrival_s;
+            assert!(span < 0.2, "wave {b} span {span}");
+            assert!(wave.first().unwrap().arrival_s >= b as f64 * 2.0);
+            assert!(wave.first().unwrap().arrival_s < b as f64 * 2.0 + 0.2);
+        }
+    }
+
+    #[test]
+    fn burst_oversubscription_math() {
+        let g = bg(); // 6 × (40 + 24) = 384 tokens per wave
+        assert!((g.oversubscription(192) - 2.0).abs() < 1e-12, "2× at a 192-token pool");
+        assert!((g.oversubscription(384) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn burst_prompts_are_deterministic_distinct_and_in_vocab() {
+        let g = bg();
+        let a = g.prompt_tokens(0, 40, 2048);
+        assert_eq!(a, g.prompt_tokens(0, 40, 2048));
+        assert_ne!(a, g.prompt_tokens(1, 40, 2048), "no accidental shared prefixes");
+        assert!(a.iter().all(|&t| (0..2048).contains(&t)));
     }
 
     fn sp() -> SharedPrefixGen {

@@ -194,9 +194,18 @@ fn oversized_for_pool_reported_as_aborted_over_tcp() {
         let prompt: Vec<i32> = (0..100).map(|j| j % 2048).collect();
         let resp = client.generate(&prompt, 8).unwrap();
         assert_eq!(resp.req_str("finish").unwrap(), "aborted");
+        // The aborted line is structured: it says *why* (the KV-blocks
+        // arithmetic), instead of an opaque finish + a server-side
+        // eprintln. Successful lines carry a null reason.
+        assert!(
+            resp.req_str("abort_reason").unwrap().contains("KV blocks"),
+            "{resp:?}"
+        );
         // …and the connection still serves a feasible request.
         let resp = client.generate(&[5, 6, 7], 3).unwrap();
         assert_eq!(resp.req_str("finish").unwrap(), "length");
+        assert!(resp.req_str("abort_reason").is_err(), "null reason on success");
+        assert_eq!(resp.req_usize("preempt_count").unwrap(), 0);
     });
     serve(engine, addr, Some(2)).unwrap();
     h.join().unwrap();
