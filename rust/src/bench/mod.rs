@@ -31,6 +31,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("fig28", serving_figures::fig28),
         ("prefix_cache", serving_figures::fig_prefix),
         ("preempt", serving_figures::fig_preempt),
+        ("router", serving_figures::fig_router),
     ]
 }
 

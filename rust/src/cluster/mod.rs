@@ -1,0 +1,427 @@
+//! Precision-heterogeneous multi-replica serving: a router tier over N
+//! engine replicas (DESIGN.md §9).
+//!
+//! The paper's core observation is that the best mixed-precision format
+//! is *device-specific* — a real deployment therefore runs a fleet where
+//! each replica serves the format its hardware likes, and a router above
+//! them spreads traffic. This module is that tier:
+//!
+//! * [`ReplicaSpec`] — per-replica `(PrecisionFormat, DeviceProfile, tp)`;
+//! * [`ReplicaHandle`] — one engine per replica on its own thread behind a
+//!   bounded inbox (backpressure at the router boundary);
+//! * [`Router`] / [`RouterPolicy`] — `round_robin`, `least_loaded` (by
+//!   outstanding tokens), `prefix_affinity` (chain-hash prompt blocks,
+//!   stick sessions to the replica holding their prefix blocks);
+//! * [`ClusterStats`] — fleet-merged counters + latency/TTFT/TPOT
+//!   percentiles;
+//! * [`Cluster`] — the live threaded fleet `server::serve_cluster` fronts;
+//! * [`run_fleet`] — the deterministic closed-loop runner (`bench router`,
+//!   determinism tests): routes a whole request set first, then drives
+//!   each replica's engine to completion on the caller's thread, so
+//!   modeled per-request times are replayable bit-for-bit.
+//!
+//! Replicas share one `seed`, so a request produces **bit-identical
+//! tokens on any replica serving the same precision** — routing is purely
+//! a performance decision, never a correctness one (the heterogeneous
+//! caveat: replicas at *different* precisions legitimately decode
+//! different tokens, exactly like the paper's per-format accuracy story).
+
+pub mod replica;
+pub mod router;
+pub mod stats;
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use replica::{request_cost, ReplicaHandle, ReplicaLoad, ReplicaSpec, ToReplica};
+pub use router::{LoadView, Router, RouterPolicy};
+pub use stats::{merge_prefix, ClusterStats, ReplicaSnapshot};
+
+use crate::config::EngineConfig;
+use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use crate::metrics::MetricsCollector;
+
+/// Fleet configuration: a base engine config every replica inherits
+/// (pool geometry, chunking, cache/preemption knobs, seed) plus the
+/// per-replica heterogeneity specs and the routing policy.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub base: EngineConfig,
+    pub specs: Vec<ReplicaSpec>,
+    pub policy: RouterPolicy,
+    /// Bounded inbox depth per replica; a full inbox blocks dispatch.
+    pub queue_depth: usize,
+    /// Prompt blocks the `prefix_affinity` hash covers (see
+    /// [`crate::kvcache::route_key`]).
+    pub affinity_blocks: usize,
+}
+
+impl ClusterConfig {
+    /// A homogeneous fleet: `n` replicas of the base config's precision
+    /// and device.
+    pub fn homogeneous(base: EngineConfig, n: usize, policy: RouterPolicy) -> Self {
+        let spec = ReplicaSpec {
+            precision: base.precision,
+            device: base.device.clone(),
+            tp: base.tp,
+        };
+        Self {
+            base,
+            specs: vec![spec; n.max(1)],
+            policy,
+            queue_depth: 64,
+            affinity_blocks: 4,
+        }
+    }
+
+    /// A heterogeneous fleet from explicit specs.
+    pub fn heterogeneous(base: EngineConfig, specs: Vec<ReplicaSpec>, policy: RouterPolicy) -> Self {
+        Self { base, specs, policy, queue_depth: 64, affinity_blocks: 4 }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// The engine config replica `i` runs.
+    pub fn engine_config(&self, i: usize) -> EngineConfig {
+        self.specs[i].engine_config(&self.base)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.specs.is_empty() {
+            bail!("cluster needs at least one replica");
+        }
+        if self.queue_depth == 0 {
+            bail!("queue_depth must be > 0");
+        }
+        if self.affinity_blocks == 0 {
+            bail!("affinity_blocks must be > 0");
+        }
+        for (i, _) in self.specs.iter().enumerate() {
+            self.engine_config(i)
+                .validate()
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("replica {i} config"))?;
+        }
+        Ok(())
+    }
+}
+
+/// The live, threaded fleet.
+pub struct Cluster {
+    replicas: Vec<ReplicaHandle>,
+    router: Router,
+    fleet: Arc<Mutex<MetricsCollector>>,
+    policy: RouterPolicy,
+}
+
+impl Cluster {
+    /// Spawn every replica (each builds its engine on its own thread).
+    pub fn start(cfg: ClusterConfig) -> Result<Self> {
+        cfg.validate()?;
+        let fleet = Arc::new(Mutex::new(MetricsCollector::new()));
+        let started = Instant::now();
+        let mut replicas = Vec::with_capacity(cfg.n_replicas());
+        for i in 0..cfg.n_replicas() {
+            replicas.push(ReplicaHandle::spawn(
+                i,
+                cfg.engine_config(i),
+                cfg.specs[i].label(),
+                cfg.queue_depth,
+                Arc::clone(&fleet),
+                started,
+            )?);
+        }
+        let router = Router::new(
+            cfg.policy,
+            cfg.n_replicas(),
+            cfg.base.kv_block_tokens,
+            cfg.affinity_blocks,
+        );
+        Ok(Self { replicas, router, fleet, policy: cfg.policy })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Route `req` by policy and dispatch it; the reply arrives on
+    /// `reply`. Blocks when the chosen replica's inbox is full.
+    pub fn submit_with(&mut self, req: Request, reply: Sender<RequestOutput>) -> Result<usize> {
+        let loads: Vec<LoadView> = self
+            .replicas
+            .iter()
+            .map(|r| LoadView { reqs: r.load().reqs(), tokens: r.load().tokens() })
+            .collect();
+        let idx = self.router.pick(&req.prompt, &loads);
+        self.dispatch_to(idx, req, reply)?;
+        Ok(idx)
+    }
+
+    /// Route and dispatch, returning the receiver end (convenience).
+    pub fn submit(&mut self, req: Request) -> Result<(usize, Receiver<RequestOutput>)> {
+        let (tx, rx) = mpsc::channel();
+        let idx = self.submit_with(req, tx)?;
+        Ok((idx, rx))
+    }
+
+    /// Dispatch to a specific replica, bypassing the policy (tests, and
+    /// the cross-replica determinism proof).
+    pub fn dispatch_to(
+        &self,
+        idx: usize,
+        req: Request,
+        reply: Sender<RequestOutput>,
+    ) -> Result<()> {
+        let cost = request_cost(&req);
+        let r = &self.replicas[idx];
+        r.load().start(cost);
+        if let Err(e) = r.send(ToReplica::Gen { req, reply }) {
+            r.load().finish(cost);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Probe every replica and merge the fleet view. A dead replica (its
+    /// thread exited on an engine error) is *omitted* from the
+    /// per-replica list rather than failing the probe — monitoring must
+    /// degrade, not take the surviving fleet down; compare the list
+    /// length against `replicas` to detect the gap.
+    pub fn stats(&self) -> Result<ClusterStats> {
+        let mut snaps = Vec::with_capacity(self.replicas.len());
+        for r in &self.replicas {
+            match r.stats() {
+                Ok(s) => snaps.push(s),
+                Err(e) => eprintln!("stats probe skipping replica {}: {e}", r.id),
+            }
+        }
+        let fleet = self.fleet.lock().expect("fleet metrics poisoned");
+        Ok(ClusterStats::new(self.policy.to_string(), snaps, &fleet))
+    }
+
+    /// Close every inbox, wait for replicas to drain outstanding work,
+    /// and return their final snapshots.
+    pub fn shutdown(self) -> Result<Vec<ReplicaSnapshot>> {
+        self.replicas.into_iter().map(ReplicaHandle::join).collect()
+    }
+}
+
+/// One routed request's outcome in an offline fleet run.
+#[derive(Debug, Clone)]
+pub struct RoutedOutput {
+    /// Index into the submitted request slice.
+    pub request: usize,
+    /// Replica that served it.
+    pub replica: usize,
+    pub output: RequestOutput,
+}
+
+/// Result of [`run_fleet`].
+#[derive(Debug)]
+pub struct FleetRun {
+    pub assignments: Vec<usize>,
+    pub outputs: Vec<RoutedOutput>,
+    pub snapshots: Vec<ReplicaSnapshot>,
+    pub policy: RouterPolicy,
+}
+
+impl FleetRun {
+    /// Requests that finished without aborting.
+    pub fn completed(&self) -> usize {
+        self.outputs.iter().filter(|o| o.output.finish != FinishReason::Aborted).count()
+    }
+
+    /// Fleet prefix-cache effectiveness (sums over replicas).
+    pub fn fleet_prefix(&self) -> crate::metrics::PrefixCacheSummary {
+        merge_prefix(&self.snapshots)
+    }
+
+    /// Modeled completion metrics on each replica's device clock: replicas
+    /// run in parallel in a real fleet, so per-request durations merge
+    /// while the fleet makespan is the slowest replica's clock. Successes
+    /// only — an aborted answer's near-zero modeled latency would reward
+    /// the policy that sheds the most load (same filter as the live
+    /// metric-recording sites).
+    pub fn sim_metrics(&self) -> MetricsCollector {
+        let mut m = MetricsCollector::new();
+        for o in &self.outputs {
+            if o.output.finish == FinishReason::Aborted {
+                continue;
+            }
+            m.record(
+                o.output.latency_sim,
+                o.output.ttft_sim,
+                o.output.latency_sim,
+                o.output.prompt_len,
+                o.output.tokens.len(),
+            );
+        }
+        m
+    }
+
+    /// The slowest replica's modeled device time — the fleet's makespan.
+    pub fn sim_makespan_s(&self) -> f64 {
+        self.snapshots.iter().map(|s| s.stats.sim_time_s).fold(0.0, f64::max)
+    }
+
+    /// Generated tokens per modeled fleet second.
+    pub fn sim_token_throughput(&self) -> f64 {
+        let toks: usize = self.snapshots.iter().map(|s| s.stats.tokens_generated).sum();
+        let t = self.sim_makespan_s();
+        if t > 0.0 {
+            toks as f64 / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Deterministic closed-loop fleet run: route the entire request set by
+/// policy (for `least_loaded`, load = tokens *assigned* so far — the
+/// static proxy, since nothing completes during assignment), then build
+/// each replica's engine on this thread, submit its share in arrival
+/// order, and run it to completion. No threads, no timing races: the same
+/// `(config, requests)` always yields byte-identical outputs, which is
+/// what lets `bench router` *assert* policy orderings instead of
+/// eyeballing them.
+pub fn run_fleet(cfg: &ClusterConfig, requests: &[Request]) -> Result<FleetRun> {
+    cfg.validate()?;
+    let n = cfg.n_replicas();
+    let mut router =
+        Router::new(cfg.policy, n, cfg.base.kv_block_tokens, cfg.affinity_blocks);
+    let mut assigned = vec![LoadView::default(); n];
+    let mut assignments = Vec::with_capacity(requests.len());
+    for req in requests {
+        let i = router.pick(&req.prompt, &assigned);
+        assigned[i].reqs += 1;
+        assigned[i].tokens += request_cost(req);
+        assignments.push(i);
+    }
+
+    let mut outputs = Vec::with_capacity(requests.len());
+    let mut snapshots = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut engine =
+            Engine::new(cfg.engine_config(i)).with_context(|| format!("replica {i}"))?;
+        // Engine-assigned ids are 0.. per replica in submission order.
+        let mine: Vec<usize> =
+            (0..requests.len()).filter(|&g| assignments[g] == i).collect();
+        let mut id_to_global = std::collections::HashMap::new();
+        for &g in &mine {
+            // Mirror the live replica loop: an engine-rejected request is
+            // answered as a rejection, never a hard error that would lose
+            // the rest of the run.
+            match engine.submit(requests[g].clone()) {
+                Ok(id) => {
+                    id_to_global.insert(id, g);
+                }
+                Err(e) => outputs.push(RoutedOutput {
+                    request: g,
+                    replica: i,
+                    output: RequestOutput::rejected(e.to_string()),
+                }),
+            }
+        }
+        for out in engine.run_to_completion()? {
+            let g = id_to_global[&out.id];
+            outputs.push(RoutedOutput { request: g, replica: i, output: out });
+        }
+        // Submit-time aborts surface via take_outputs inside
+        // run_to_completion too, so every submitted request is accounted.
+        snapshots.push(ReplicaSnapshot::of(i, &cfg.specs[i].label(), &engine, mine.len(), 0, 0));
+    }
+    outputs.sort_by_key(|o| o.request);
+    Ok(FleetRun { assignments, outputs, snapshots, policy: cfg.policy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::MultiTenantGen;
+
+    fn base() -> EngineConfig {
+        EngineConfig {
+            kv_pool_tokens: 16 * 64,
+            prefill_chunk: 32,
+            enable_prefix_cache: true,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn tenant_requests(g: &MultiTenantGen, vocab: usize) -> Vec<Request> {
+        g.generate()
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Request::new(g.prompt_tokens(i, vocab), r.gen_tokens))
+            .collect()
+    }
+
+    #[test]
+    fn config_validation() {
+        let cfg = ClusterConfig::homogeneous(base(), 2, RouterPolicy::RoundRobin);
+        cfg.validate().unwrap();
+        let mut bad = cfg.clone();
+        bad.specs.clear();
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.queue_depth = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg;
+        bad.specs[1].device = "B200".into();
+        assert!(bad.validate().is_err(), "per-replica config errors surface");
+    }
+
+    #[test]
+    fn run_fleet_is_deterministic_and_loses_nothing() {
+        let g = MultiTenantGen {
+            tenants: 2,
+            users: 2,
+            turns: 2,
+            shared_tokens: 64,
+            turn_tokens: 8,
+            gen_tokens: 4,
+            rate: 10.0,
+            seed: 3,
+        };
+        let cfg = ClusterConfig::homogeneous(base(), 2, RouterPolicy::PrefixAffinity);
+        let reqs = tenant_requests(&g, 2048);
+        let a = run_fleet(&cfg, &reqs).unwrap();
+        let b = run_fleet(&cfg, &reqs).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.outputs.len(), reqs.len(), "every request answered once");
+        assert_eq!(a.completed(), reqs.len());
+        for (x, y) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(x.output.tokens, y.output.tokens, "replayable outputs");
+            assert_eq!(x.output.latency_sim, y.output.latency_sim, "replayable timing");
+        }
+        // Affinity keeps each tenant on one replica.
+        for (gi, &rep) in a.assignments.iter().enumerate() {
+            let (tenant, _, _) = g.locate(gi);
+            assert_eq!(rep, a.assignments[tenant * g.users], "tenant {tenant} split");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_mixed_precisions() {
+        let specs: Vec<ReplicaSpec> =
+            vec!["w4a16,kv8,a100".parse().unwrap(), "w8a8,kv16,h100".parse().unwrap()];
+        let cfg = ClusterConfig::heterogeneous(base(), specs, RouterPolicy::RoundRobin);
+        let reqs: Vec<Request> =
+            (0..6).map(|i| Request::new(vec![(i * 31 % 2048) as i32; 24], 4)).collect();
+        let run = run_fleet(&cfg, &reqs).unwrap();
+        assert_eq!(run.completed(), 6);
+        assert_eq!(run.snapshots[0].label, "W4A16KV8@A100");
+        assert_eq!(run.snapshots[1].label, "W8A8KV16@H100");
+        // Both replicas actually worked (round robin splits 3/3).
+        assert_eq!(run.assignments.iter().filter(|&&r| r == 0).count(), 3);
+        for s in &run.snapshots {
+            assert!(s.stats.tokens_generated > 0);
+            assert!(s.stats.sim_time_s > 0.0);
+        }
+    }
+}

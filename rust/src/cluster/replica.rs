@@ -1,0 +1,467 @@
+//! One engine replica: its spec, its load accounting, and its thread.
+//!
+//! Execution backends are not `Send`, so each replica's [`Engine`] is
+//! constructed *inside* its own thread and never leaves it — exactly the
+//! single-engine `server::serve` loop, replicated N times. The thread
+//! drains a **bounded** inbox (`mpsc::sync_channel`): a full inbox blocks
+//! the router's dispatch, which is the fleet's backpressure — requests
+//! queue at the router boundary instead of growing an unbounded in-memory
+//! backlog on a replica that cannot keep up.
+//!
+//! Load accounting: the router increments [`ReplicaLoad`] *before* a
+//! request enters the inbox; the replica thread decrements when the reply
+//! is dispatched (or the submit is rejected). Both sides charge the same
+//! `prompt + max_new_tokens` footprint, so a drained fleet always counts
+//! back to zero — the invariant the randomized harness asserts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::stats::ReplicaSnapshot;
+use crate::config::{DeviceProfile, EngineConfig, PrecisionFormat};
+use crate::coordinator::{Engine, Request, RequestOutput};
+use crate::metrics::MetricsCollector;
+
+/// What makes one replica different from its neighbors: the precision
+/// format it serves, the device profile its latency model runs on, and
+/// its tensor-parallel degree — the heterogeneity axes of the paper's
+/// hardware-aware format optimization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    pub precision: PrecisionFormat,
+    pub device: String,
+    pub tp: usize,
+}
+
+impl ReplicaSpec {
+    pub fn new(precision: PrecisionFormat, device: &str) -> Self {
+        Self { precision, device: device.to_string(), tp: 1 }
+    }
+
+    /// The replica identity string: `W4A16KV8@A100` (plus `/tp2` when
+    /// sharded).
+    pub fn label(&self) -> String {
+        if self.tp > 1 {
+            format!("{}@{}/tp{}", self.precision, self.device, self.tp)
+        } else {
+            format!("{}@{}", self.precision, self.device)
+        }
+    }
+
+    /// Specialize a base engine config to this replica.
+    pub fn engine_config(&self, base: &EngineConfig) -> EngineConfig {
+        EngineConfig {
+            precision: self.precision,
+            device: self.device.clone(),
+            tp: self.tp,
+            ..base.clone()
+        }
+    }
+}
+
+impl std::str::FromStr for ReplicaSpec {
+    type Err = String;
+
+    /// Parse the CLI form `fmt,kv,device[,tpN]` — e.g. `w4a16,kv8,a100`
+    /// or `w8a8,kv16,h100,tp2`. The first two fields concatenate into the
+    /// usual `WxAyKVz` precision notation.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            return Err(format!(
+                "replica spec `{s}` must be `fmt,kv,device[,tpN]` (e.g. `w4a16,kv8,a100`)"
+            ));
+        }
+        let precision: PrecisionFormat = format!("{}{}", parts[0], parts[1])
+            .parse()
+            .map_err(|e| format!("{e}"))?;
+        let device = DeviceProfile::by_name(parts[2])
+            .ok_or_else(|| format!("unknown device `{}` in replica spec `{s}`", parts[2]))?
+            .name
+            .to_string();
+        let tp = match parts.get(3) {
+            None => 1,
+            Some(t) => t
+                .strip_prefix("tp")
+                .and_then(|n| n.parse::<usize>().ok())
+                .filter(|n| n.is_power_of_two())
+                .ok_or_else(|| format!("bad tp field `{t}` in replica spec `{s}`"))?,
+        };
+        Ok(Self { precision, device, tp })
+    }
+}
+
+/// Outstanding-work counters shared between the router (increments at
+/// dispatch) and the replica thread (decrements at reply).
+#[derive(Debug, Default)]
+pub struct ReplicaLoad {
+    reqs: AtomicUsize,
+    tokens: AtomicUsize,
+}
+
+impl ReplicaLoad {
+    pub fn start(&self, cost_tokens: usize) {
+        self.reqs.fetch_add(1, Ordering::SeqCst);
+        self.tokens.fetch_add(cost_tokens, Ordering::SeqCst);
+    }
+
+    pub fn finish(&self, cost_tokens: usize) {
+        self.reqs.fetch_sub(1, Ordering::SeqCst);
+        self.tokens.fetch_sub(cost_tokens, Ordering::SeqCst);
+    }
+
+    pub fn reqs(&self) -> usize {
+        self.reqs.load(Ordering::SeqCst)
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens.load(Ordering::SeqCst)
+    }
+}
+
+/// The token footprint a request reserves for load accounting.
+pub fn request_cost(req: &Request) -> usize {
+    req.prompt.len() + req.max_new_tokens
+}
+
+/// A message into a replica's inbox.
+pub enum ToReplica {
+    /// Generate; the output travels back on `reply`.
+    Gen { req: Request, reply: Sender<RequestOutput> },
+    /// Snapshot engine state (answered between iterations).
+    Stats { reply: Sender<ReplicaSnapshot> },
+}
+
+/// A live replica: inbox sender + load counters + the join handle whose
+/// value is the replica's final snapshot.
+pub struct ReplicaHandle {
+    pub id: usize,
+    pub label: String,
+    tx: Option<SyncSender<ToReplica>>,
+    load: Arc<ReplicaLoad>,
+    join: Option<JoinHandle<Option<ReplicaSnapshot>>>,
+}
+
+impl ReplicaHandle {
+    /// Spawn replica `id` with its own engine built from `cfg`. Blocks
+    /// until the engine constructed (or failed — the error propagates).
+    pub fn spawn(
+        id: usize,
+        cfg: EngineConfig,
+        label: String,
+        queue_depth: usize,
+        fleet: Arc<Mutex<MetricsCollector>>,
+        started: Instant,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<ToReplica>(queue_depth.max(1));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let load = Arc::new(ReplicaLoad::default());
+        let thread_load = Arc::clone(&load);
+        let thread_label = label.clone();
+        let join = thread::Builder::new()
+            .name(format!("replica-{id}"))
+            .spawn(move || {
+                replica_main(id, cfg, thread_label, rx, ready_tx, thread_load, fleet, started)
+            })
+            .map_err(|e| anyhow!("spawning replica {id}: {e}"))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = join.join();
+                return Err(e.context(format!("replica {id} ({label}) failed to start")));
+            }
+            Err(_) => bail!("replica {id} died before reporting readiness"),
+        }
+        Ok(Self { id, label, tx: Some(tx), load, join: Some(join) })
+    }
+
+    /// This replica's outstanding work (router-side view).
+    pub fn load(&self) -> &ReplicaLoad {
+        &self.load
+    }
+
+    /// Send into the bounded inbox; blocks when it is full (backpressure).
+    pub fn send(&self, msg: ToReplica) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("replica {} already shut down", self.id))?
+            .send(msg)
+            .map_err(|_| anyhow!("replica {} is gone", self.id))
+    }
+
+    /// Ask the live replica for a snapshot. Uses `try_send`: a saturated
+    /// inbox (full backpressure) fails the probe for this replica instead
+    /// of blocking the dispatcher behind queued generation work —
+    /// [`super::Cluster::stats`] then omits it, same as a dead replica.
+    pub fn stats(&self) -> Result<ReplicaSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("replica {} already shut down", self.id))?
+            .try_send(ToReplica::Stats { reply: tx })
+            .map_err(|_| anyhow!("replica {} inbox full or gone; probe skipped", self.id))?;
+        rx.recv().map_err(|_| anyhow!("replica {} dropped stats probe", self.id))
+    }
+
+    /// Close the inbox and wait for the replica to drain and exit;
+    /// returns its final snapshot.
+    pub fn join(mut self) -> Result<ReplicaSnapshot> {
+        self.tx = None; // disconnects the inbox
+        let join = self.join.take().expect("join handle present until joined");
+        match join.join() {
+            Ok(Some(snap)) => Ok(snap),
+            Ok(None) => bail!("replica {} never started an engine", self.id),
+            Err(_) => bail!("replica {} panicked", self.id),
+        }
+    }
+}
+
+/// The replica thread body: the `server::serve` engine loop, one per
+/// replica. Returns the final snapshot once the inbox disconnects and all
+/// accepted work has been answered.
+#[allow(clippy::too_many_arguments)]
+fn replica_main(
+    id: usize,
+    cfg: EngineConfig,
+    label: String,
+    rx: Receiver<ToReplica>,
+    ready: Sender<Result<()>>,
+    load: Arc<ReplicaLoad>,
+    fleet: Arc<Mutex<MetricsCollector>>,
+    started: Instant,
+) -> Option<ReplicaSnapshot> {
+    // Build AND warm up before reporting ready, mirroring `cmd_serve`:
+    // a PJRT replica compiles its graphs now, so artifact problems
+    // surface at spawn, not mid-request.
+    let mut engine = match Engine::new(cfg).and_then(|e| {
+        e.warmup()?;
+        Ok(e)
+    }) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return None;
+        }
+    };
+    let mut pending: Vec<(u64, usize, Sender<RequestOutput>)> = Vec::new();
+    let mut completed = 0usize;
+    let mut disconnected = false;
+    loop {
+        // Dispatch finished outputs first — submit can finish a request
+        // immediately, and the loop must never block while a client waits.
+        for out in engine.take_outputs() {
+            if let Some(pos) = pending.iter().position(|(pid, _, _)| *pid == out.id) {
+                let (_, cost, reply) = pending.remove(pos);
+                // Fleet percentiles summarize successful completions only
+                // — an aborted answer's near-zero latency would skew them.
+                if out.finish != crate::coordinator::FinishReason::Aborted {
+                    fleet.lock().expect("fleet metrics poisoned").record(
+                        out.latency,
+                        out.ttft,
+                        started.elapsed().as_secs_f64(),
+                        out.prompt_len,
+                        out.tokens.len(),
+                    );
+                }
+                load.finish(cost);
+                completed += 1;
+                let _ = reply.send(out);
+            }
+        }
+        if disconnected && !engine.has_work() && pending.is_empty() {
+            return Some(ReplicaSnapshot::of(
+                id,
+                &label,
+                &engine,
+                completed,
+                load.reqs(),
+                load.tokens(),
+            ));
+        }
+        // Admit without blocking while the engine has work; block on the
+        // inbox only when idle.
+        while !disconnected {
+            let msg = if engine.has_work() {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                ToReplica::Stats { reply } => {
+                    let _ = reply.send(ReplicaSnapshot::of(
+                        id,
+                        &label,
+                        &engine,
+                        completed,
+                        load.reqs(),
+                        load.tokens(),
+                    ));
+                    // Idle engines go straight back to blocking on the
+                    // inbox; busy ones fall through to admit more.
+                    continue;
+                }
+                ToReplica::Gen { req, reply } => {
+                    let cost = request_cost(&req);
+                    match engine.submit(req) {
+                        Ok(rid) => {
+                            pending.push((rid, cost, reply));
+                            if !engine.has_work() {
+                                break; // finished at submit: dispatch now
+                            }
+                        }
+                        Err(e) => {
+                            // A rejection is still an *answer*: release
+                            // the load and count it, so per-replica
+                            // `completed` sums keep equaling the requests
+                            // routed in (the harness invariant), matching
+                            // `run_fleet`'s accounting.
+                            load.finish(cost);
+                            completed += 1;
+                            let _ = reply.send(RequestOutput::rejected(e.to_string()));
+                        }
+                    }
+                }
+            }
+        }
+        if engine.has_work() {
+            if let Err(e) = engine.step() {
+                // A stepping error is fatal for this replica: answer
+                // everything outstanding as rejected so no client hangs.
+                eprintln!("replica {id} ({label}) engine error: {e}");
+                for (_, cost, reply) in pending.drain(..) {
+                    load.finish(cost);
+                    let _ = reply
+                        .send(RequestOutput::rejected(format!("replica engine error: {e}")));
+                }
+                return Some(ReplicaSnapshot::of(
+                    id,
+                    &label,
+                    &engine,
+                    completed,
+                    load.reqs(),
+                    load.tokens(),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_cli_form() {
+        let s: ReplicaSpec = "w4a16,kv8,a100".parse().unwrap();
+        assert_eq!(s.precision.to_string(), "W4A16KV8");
+        assert_eq!(s.device, "A100");
+        assert_eq!(s.tp, 1);
+        assert_eq!(s.label(), "W4A16KV8@A100");
+
+        let s: ReplicaSpec = "w8a8,kv16,h100,tp2".parse().unwrap();
+        assert_eq!(s.precision.to_string(), "W8A8KV16");
+        assert_eq!(s.device, "H100");
+        assert_eq!(s.tp, 2);
+        assert_eq!(s.label(), "W8A8KV16@H100/tp2");
+
+        assert!("w4a16,kv8".parse::<ReplicaSpec>().is_err(), "missing device");
+        assert!("w4a16,kv8,b200".parse::<ReplicaSpec>().is_err(), "unknown device");
+        assert!("w4a16,kv8,a100,tp3".parse::<ReplicaSpec>().is_err(), "non-pow2 tp");
+        assert!("w3a16,kv8,a100".parse::<ReplicaSpec>().is_err(), "bad precision");
+    }
+
+    #[test]
+    fn spec_specializes_base_config() {
+        let base = EngineConfig { kv_pool_tokens: 16 * 64, ..EngineConfig::default() };
+        let spec: ReplicaSpec = "w8a8,kv16,h100".parse().unwrap();
+        let cfg = spec.engine_config(&base);
+        assert_eq!(cfg.precision.to_string(), "W8A8KV16");
+        assert_eq!(cfg.device, "H100");
+        assert_eq!(cfg.kv_pool_tokens, 16 * 64, "base knobs survive");
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn load_accounting_balances() {
+        let l = ReplicaLoad::default();
+        l.start(48);
+        l.start(16);
+        assert_eq!((l.reqs(), l.tokens()), (2, 64));
+        l.finish(48);
+        l.finish(16);
+        assert_eq!((l.reqs(), l.tokens()), (0, 0));
+    }
+
+    #[test]
+    fn replica_thread_serves_and_drains() {
+        let fleet = Arc::new(Mutex::new(MetricsCollector::new()));
+        let cfg = EngineConfig { kv_pool_tokens: 16 * 64, ..EngineConfig::default() };
+        let r = ReplicaHandle::spawn(
+            0,
+            cfg,
+            "W4A16KV8@A100".into(),
+            8,
+            Arc::clone(&fleet),
+            Instant::now(),
+        )
+        .unwrap();
+        let (otx, orx) = mpsc::channel();
+        r.load().start(10 + 4);
+        r.send(ToReplica::Gen {
+            req: Request::new((0..10).collect(), 4),
+            reply: otx,
+        })
+        .unwrap();
+        let out = orx.recv().unwrap();
+        assert_eq!(out.tokens.len(), 4);
+        let snap = r.stats().unwrap();
+        assert_eq!(snap.completed, 1);
+        // Engine-rejected requests still answer (and release their load).
+        let (etx, erx) = mpsc::channel();
+        r.load().start(9999);
+        r.send(ToReplica::Gen { req: Request::new(vec![1; 9000], 999), reply: etx })
+            .unwrap();
+        let rej = erx.recv().unwrap();
+        assert!(rej.abort_reason.is_some());
+        let snap = r.join().unwrap();
+        assert_eq!(snap.completed, 2, "rejections count as answered");
+        assert_eq!((snap.outstanding_reqs, snap.outstanding_tokens), (0, 0));
+        assert_eq!(fleet.lock().unwrap().count(), 1, "…but not as successes");
+    }
+
+    #[test]
+    fn spawn_surfaces_engine_construction_errors() {
+        let cfg = EngineConfig { max_batch: 3, ..EngineConfig::default() }; // invalid
+        let err = ReplicaHandle::spawn(
+            0,
+            cfg,
+            "bad".into(),
+            4,
+            Arc::new(Mutex::new(MetricsCollector::new())),
+            Instant::now(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("failed to start"), "{err}");
+    }
+}

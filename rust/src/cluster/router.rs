@@ -1,0 +1,326 @@
+//! Routing policies over the replica fleet.
+//!
+//! The router is pure decision logic: given a request's prompt and a view
+//! of per-replica load, pick a replica index. The same code drives both
+//! the live threaded [`super::Cluster`] (loads read from the replicas'
+//! atomic counters) and the deterministic offline [`super::run_fleet`]
+//! (loads are the totals assigned so far).
+//!
+//! Policy contracts (DESIGN.md §9):
+//! * `round_robin` — strict rotation; stateless wrt load and content.
+//! * `least_loaded` — fewest outstanding *tokens* (prompt + generation
+//!   budget of unanswered requests); ties break on fewer outstanding
+//!   requests, then lowest index. Tokens, not requests, because a replica
+//!   chewing one 2k-token prompt is busier than one holding three
+//!   16-token chats.
+//! * `prefix_affinity` — requests sharing leading prompt blocks (the
+//!   [`crate::kvcache::route_key`] chain hash) stick to one replica, so a
+//!   tenant's shared system prompt and each conversation's growing
+//!   history stay resident in exactly one prefix cache. First touch of a
+//!   key places it on the replica holding the fewest sticky keys (tie →
+//!   lowest index): deterministic regardless of completion timing, which
+//!   keeps fleet runs replayable, and balanced whenever key populations
+//!   are (the multi-tenant shape this policy exists for).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::kvcache::route_key;
+
+/// Sticky-key capacity of the `prefix_affinity` map. Beyond this the
+/// oldest keys are forgotten (FIFO) — a forgotten session simply
+/// re-places by first touch on its next request. Bounds router memory
+/// under endless distinct-prompt traffic while staying deterministic
+/// (eviction depends only on the pick sequence, never on timing).
+const MAX_AFFINITY_KEYS: usize = 1 << 16;
+
+/// How the cluster spreads requests over replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterPolicy {
+    #[default]
+    RoundRobin,
+    LeastLoaded,
+    PrefixAffinity,
+}
+
+impl std::str::FromStr for RouterPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "round_robin" => Ok(RouterPolicy::RoundRobin),
+            "least_loaded" => Ok(RouterPolicy::LeastLoaded),
+            "prefix_affinity" => Ok(RouterPolicy::PrefixAffinity),
+            other => Err(format!(
+                "unknown router policy `{other}` (expected `round_robin`, `least_loaded`, \
+                 or `prefix_affinity`)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for RouterPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+            RouterPolicy::PrefixAffinity => "prefix_affinity",
+        })
+    }
+}
+
+/// One replica's load as the router sees it at pick time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadView {
+    /// Requests dispatched and not yet answered.
+    pub reqs: usize,
+    /// Token footprint (prompt + generation budget) of those requests.
+    pub tokens: usize,
+}
+
+/// The routing state machine.
+#[derive(Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    n: usize,
+    rr_next: usize,
+    /// Sticky prefix-key → replica assignments (`prefix_affinity` only).
+    affinity: HashMap<u64, usize>,
+    /// Insertion order of sticky keys, for FIFO eviction at capacity.
+    affinity_order: VecDeque<u64>,
+    /// Sticky keys per replica, for balanced first-touch placement.
+    keys_per_replica: Vec<usize>,
+    block_tokens: usize,
+    affinity_blocks: usize,
+    /// Max sticky keys retained ([`MAX_AFFINITY_KEYS`]; tests shrink it).
+    max_keys: usize,
+}
+
+impl Router {
+    /// `block_tokens` must match the replicas' KV block size so the
+    /// routing hash walks the same block boundaries their prefix indexes
+    /// do; `affinity_blocks` caps the hashed depth (see
+    /// [`crate::kvcache::route_key`]).
+    pub fn new(
+        policy: RouterPolicy,
+        n_replicas: usize,
+        block_tokens: usize,
+        affinity_blocks: usize,
+    ) -> Self {
+        assert!(n_replicas > 0, "router over an empty fleet");
+        Self {
+            policy,
+            n: n_replicas,
+            rr_next: 0,
+            affinity: HashMap::new(),
+            affinity_order: VecDeque::new(),
+            keys_per_replica: vec![0; n_replicas],
+            block_tokens,
+            affinity_blocks,
+            max_keys: MAX_AFFINITY_KEYS,
+        }
+    }
+
+    /// Shrink the sticky-key capacity (tests exercise eviction without
+    /// minting 65k keys).
+    #[cfg(test)]
+    fn with_max_keys(mut self, n: usize) -> Self {
+        self.max_keys = n.max(1);
+        self
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Distinct prefix keys currently pinned to replicas.
+    pub fn affinity_keys(&self) -> usize {
+        self.affinity.len()
+    }
+
+    /// Pick the replica for a request with this prompt under the current
+    /// loads (`loads.len()` must equal the fleet size).
+    pub fn pick(&mut self, prompt: &[i32], loads: &[LoadView]) -> usize {
+        assert_eq!(loads.len(), self.n, "load view size != fleet size");
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let i = self.rr_next % self.n;
+                self.rr_next += 1;
+                i
+            }
+            RouterPolicy::LeastLoaded => argmin_by(loads, |l| (l.tokens, l.reqs)),
+            RouterPolicy::PrefixAffinity => {
+                let key = route_key(prompt, self.block_tokens, self.affinity_blocks);
+                if let Some(&i) = self.affinity.get(&key) {
+                    return i;
+                }
+                // Bound the sticky map: forget the oldest keys first so
+                // endless one-shot prompts cannot grow memory or let dead
+                // keys skew the first-touch balance forever.
+                while self.affinity.len() >= self.max_keys {
+                    let old = self.affinity_order.pop_front().expect("map non-empty");
+                    if let Some(rep) = self.affinity.remove(&old) {
+                        self.keys_per_replica[rep] -= 1;
+                    }
+                }
+                let i = argmin_by(&self.keys_per_replica, |&k| k);
+                self.affinity.insert(key, i);
+                self.affinity_order.push_back(key);
+                self.keys_per_replica[i] += 1;
+                i
+            }
+        }
+    }
+}
+
+/// Index of the minimum by `key`, lowest index on ties — the balanced
+/// deterministic placement primitive every policy tie-break uses (shared
+/// with the abstract fleet simulator's trace-level router).
+pub(crate) fn argmin_by<T, K: Ord>(xs: &[T], key: impl Fn(&T) -> K) -> usize {
+    assert!(!xs.is_empty(), "non-empty fleet");
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if key(&xs[i]) < key(&xs[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BT: usize = 16;
+
+    fn loads(tokens: &[usize]) -> Vec<LoadView> {
+        tokens.iter().map(|&t| LoadView { reqs: t / 32, tokens: t }).collect()
+    }
+
+    fn block(tag: i32) -> Vec<i32> {
+        (0..BT as i32).map(|i| tag * 1000 + i).collect()
+    }
+
+    #[test]
+    fn policy_parses_and_displays() {
+        for (s, p) in [
+            ("round_robin", RouterPolicy::RoundRobin),
+            ("LEAST_LOADED", RouterPolicy::LeastLoaded),
+            ("Prefix_Affinity", RouterPolicy::PrefixAffinity),
+        ] {
+            assert_eq!(s.parse::<RouterPolicy>().unwrap(), p);
+        }
+        assert!("random".parse::<RouterPolicy>().is_err());
+        assert_eq!(RouterPolicy::PrefixAffinity.to_string(), "prefix_affinity");
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 3, BT, 4);
+        let l = loads(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(&block(1), &l)).collect();
+        assert_eq!(picks, [0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_fewest_tokens_then_reqs_then_index() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 3, BT, 4);
+        assert_eq!(r.pick(&block(1), &loads(&[100, 40, 90])), 1);
+        // Token tie → fewer requests wins.
+        let l = vec![
+            LoadView { reqs: 3, tokens: 64 },
+            LoadView { reqs: 1, tokens: 64 },
+            LoadView { reqs: 2, tokens: 64 },
+        ];
+        assert_eq!(r.pick(&block(1), &l), 1);
+        // Full tie → lowest index.
+        assert_eq!(r.pick(&block(1), &loads(&[64, 64, 64])), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_and_balances_first_touch() {
+        // Shared prefixes span the full cap (4 blocks), per the contract:
+        // keep `affinity_blocks` ≤ the workload's stable shared prefix.
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 2, BT, 4);
+        let l = loads(&[0, 0]);
+        // Four tenants: first touches alternate replicas 0,1,0,1…
+        let mut tenant_prompts: Vec<Vec<i32>> = Vec::new();
+        for t in 0..4 {
+            let mut p = block(t);
+            p.extend(block(t + 100));
+            p.extend(block(t + 200));
+            p.extend(block(t + 300)); // 4 shared blocks = the hash cap
+            tenant_prompts.push(p);
+        }
+        let first: Vec<usize> =
+            tenant_prompts.iter().map(|p| r.pick(p, &l)).collect();
+        assert_eq!(first, [0, 1, 0, 1], "balanced deterministic placement");
+        assert_eq!(r.affinity_keys(), 4);
+        // …and every later request with the same leading blocks sticks,
+        // regardless of load skew and of history growth past the cap.
+        for (t, p) in tenant_prompts.iter().enumerate() {
+            let mut grown = p.clone();
+            grown.extend(block(900 + t as i32)); // divergent history
+            grown.extend(block(950 + t as i32)); // > affinity_blocks depth
+            assert_eq!(r.pick(&grown, &loads(&[10_000, 0])), first[t], "tenant {t}");
+        }
+        assert_eq!(r.affinity_keys(), 4, "grown prompts reuse their keys");
+    }
+
+    #[test]
+    fn prefix_affinity_rekeys_prompts_that_start_below_the_cap() {
+        // The documented limit of prefix hashing: a session whose initial
+        // prompt has fewer full blocks than `affinity_blocks` hashes a
+        // deeper key once it grows, so it re-places by first touch. Keep
+        // the cap ≤ the stable shared prefix to avoid this; the behavior
+        // itself must stay deterministic.
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 2, BT, 4);
+        let l = loads(&[0, 0]);
+        let short = block(7); // 1 full block < cap
+        let a = r.pick(&short, &l);
+        let mut grown = short.clone();
+        grown.extend(block(8));
+        grown.extend(block(9));
+        grown.extend(block(10)); // now 4 full blocks → deeper key
+        let b = r.pick(&grown, &l);
+        assert_eq!(r.affinity_keys(), 2, "growth past the cap mints a new key");
+        // Both keys stay individually sticky.
+        assert_eq!(r.pick(&short, &loads(&[500, 0])), a);
+        assert_eq!(r.pick(&grown, &loads(&[500, 0])), b);
+    }
+
+    #[test]
+    fn prefix_affinity_separates_distinct_prefixes() {
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 4, BT, 1);
+        let l = loads(&[0, 0, 0, 0]);
+        let picks: Vec<usize> = (0..4).map(|t| r.pick(&block(t), &l)).collect();
+        assert_eq!(picks, [0, 1, 2, 3], "distinct first blocks spread the fleet");
+    }
+
+    #[test]
+    fn prefix_affinity_evicts_oldest_keys_at_capacity() {
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 2, BT, 1).with_max_keys(3);
+        let l = loads(&[0, 0]);
+        assert_eq!(r.pick(&block(0), &l), 0);
+        assert_eq!(r.pick(&block(1), &l), 1);
+        assert_eq!(r.pick(&block(2), &l), 0);
+        assert_eq!(r.affinity_keys(), 3);
+        assert_eq!(r.pick(&block(0), &l), 0, "sticky while resident");
+        // A 4th distinct key evicts the oldest (block 0's key, replica 0,
+        // counters [2,1] → [1,1]) and first-touches by balance → 0.
+        assert_eq!(r.pick(&block(3), &l), 0);
+        assert_eq!(r.affinity_keys(), 3, "capacity bound holds");
+        // The forgotten key re-places by first touch: evicting block 1's
+        // key leaves counters [2,0], so it lands on replica 1 now.
+        assert_eq!(r.pick(&block(0), &l), 1);
+        assert_eq!(r.affinity_keys(), 3);
+        // …and is sticky again at its new home, regardless of load.
+        assert_eq!(r.pick(&block(0), &loads(&[9_999, 0])), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "load view")]
+    fn mismatched_load_view_is_a_bug() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 2, BT, 4);
+        r.pick(&block(1), &loads(&[0]));
+    }
+}

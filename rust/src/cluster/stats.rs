@@ -1,0 +1,259 @@
+//! Fleet-wide observability: per-replica snapshots and the merged
+//! [`ClusterStats`] the router's `{"stats": true}` probe reports.
+//!
+//! Percentiles (latency / TTFT / TPOT) come from the shared fleet
+//! [`MetricsCollector`] the replica threads record completions into;
+//! counter-like fields (pool occupancy, prefix-cache and preemption
+//! counters, modeled device time) are summed across replicas. Each
+//! replica's counters are engine-local — merging never nets requests
+//! against each other, so fleet sums equal what a single probe of every
+//! replica would add up to.
+
+use crate::coordinator::{Engine, EngineStats};
+use crate::metrics::{
+    percentile_fields, MetricsCollector, Percentiles, PrefixCacheSummary, PreemptionSummary,
+    LATENCY_PCTL_KEYS, TPOT_PCTL_KEYS, TTFT_PCTL_KEYS,
+};
+use crate::util::json::{arr, obj, Json};
+
+/// One replica's state at probe (or shutdown) time.
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    pub id: usize,
+    /// Human-readable identity, e.g. `W4A16KV8@A100`.
+    pub label: String,
+    /// Generation requests this replica *answered* (aborted and rejected
+    /// answers included, so per-replica sums equal the requests routed
+    /// in; filter on `FinishReason` for success counts, as
+    /// [`super::FleetRun::completed`] does).
+    pub completed: usize,
+    /// Requests dispatched to this replica and not yet answered (queued +
+    /// in flight).
+    pub outstanding_reqs: usize,
+    /// Reserved token footprint (prompt + budget) of those requests.
+    pub outstanding_tokens: usize,
+    pub stats: EngineStats,
+    pub pool_total_blocks: usize,
+    pub pool_free_blocks: usize,
+    /// Blocks the prefix index keeps resident (0 with the cache off) —
+    /// at drain, `pool_total − pool_free` must equal exactly this.
+    pub prefix_resident_blocks: usize,
+    /// None when this replica's prefix cache is disabled.
+    pub prefix: Option<PrefixCacheSummary>,
+    pub preempt: PreemptionSummary,
+    pub swap_blocks_used: usize,
+    pub swap_budget_blocks: usize,
+}
+
+impl ReplicaSnapshot {
+    /// Snapshot a live engine (runs on the replica's own thread).
+    pub fn of(
+        id: usize,
+        label: &str,
+        engine: &Engine,
+        completed: usize,
+        outstanding_reqs: usize,
+        outstanding_tokens: usize,
+    ) -> Self {
+        Self {
+            id,
+            label: label.to_string(),
+            completed,
+            outstanding_reqs,
+            outstanding_tokens,
+            stats: engine.stats.clone(),
+            pool_total_blocks: engine.kv_pool().total_blocks(),
+            pool_free_blocks: engine.kv_pool().free_blocks(),
+            prefix_resident_blocks: engine.prefix_cached_blocks(),
+            prefix: engine.prefix_cache_summary(),
+            preempt: engine.preemption_summary(),
+            swap_blocks_used: engine.swap_store().used_blocks(),
+            swap_budget_blocks: engine.swap_store().budget_blocks(),
+        }
+    }
+
+    pub fn pool_utilization(&self) -> f64 {
+        if self.pool_total_blocks == 0 {
+            0.0
+        } else {
+            (self.pool_total_blocks - self.pool_free_blocks) as f64
+                / self.pool_total_blocks as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let p = self.prefix.unwrap_or_default();
+        obj([
+            ("id", Json::from(self.id)),
+            ("label", Json::from(self.label.as_str())),
+            ("completed", Json::from(self.completed)),
+            ("outstanding_reqs", Json::from(self.outstanding_reqs)),
+            ("outstanding_tokens", Json::from(self.outstanding_tokens)),
+            ("pool_utilization", Json::from(self.pool_utilization())),
+            ("prefix_cache_enabled", Json::from(self.prefix.is_some())),
+            ("prefix_cache_hit_rate", Json::from(p.hit_rate())),
+            ("prefill_tokens_skipped", Json::from(p.prefill_tokens_skipped)),
+            ("tokens_generated", Json::from(self.stats.tokens_generated)),
+            ("preemptions", Json::from(self.preempt.preemptions)),
+            ("oom_aborts", Json::from(self.preempt.oom_aborts)),
+            ("sim_time_s", Json::from(self.stats.sim_time_s)),
+        ])
+    }
+}
+
+/// Sum prefix-cache summaries across replicas (disabled replicas
+/// contribute zeros).
+pub fn merge_prefix<'a>(
+    snaps: impl IntoIterator<Item = &'a ReplicaSnapshot>,
+) -> PrefixCacheSummary {
+    let mut m = PrefixCacheSummary::default();
+    for s in snaps {
+        let p = s.prefix.unwrap_or_default();
+        m.lookups += p.lookups;
+        m.hits += p.hits;
+        m.blocks_saved += p.blocks_saved;
+        m.prefill_tokens_skipped += p.prefill_tokens_skipped;
+        m.evicted_blocks += p.evicted_blocks;
+    }
+    m
+}
+
+/// The merged fleet view.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub policy: String,
+    pub replicas: Vec<ReplicaSnapshot>,
+    /// Completed-request series across the whole fleet (wall clock for the
+    /// live cluster; modeled clock for offline fleet runs).
+    pub latency: Option<Percentiles>,
+    pub ttft: Option<Percentiles>,
+    pub tpot: Option<Percentiles>,
+    pub completed: usize,
+}
+
+impl ClusterStats {
+    pub fn new(policy: String, replicas: Vec<ReplicaSnapshot>, fleet: &MetricsCollector) -> Self {
+        Self {
+            policy,
+            latency: fleet.latency_percentiles(),
+            ttft: fleet.ttft_percentiles(),
+            tpot: fleet.tpot_percentiles(),
+            completed: fleet.count(),
+            replicas,
+        }
+    }
+
+    /// Fleet prefix-cache effectiveness (sums over replicas).
+    pub fn fleet_prefix(&self) -> PrefixCacheSummary {
+        merge_prefix(&self.replicas)
+    }
+
+    /// Fraction of fleet admissions served at least one resident block.
+    pub fn fleet_hit_rate(&self) -> f64 {
+        self.fleet_prefix().hit_rate()
+    }
+
+    pub fn fleet_tokens_generated(&self) -> usize {
+        self.replicas.iter().map(|r| r.stats.tokens_generated).sum()
+    }
+
+    /// Requests still queued or in flight anywhere in the fleet.
+    pub fn fleet_outstanding_reqs(&self) -> usize {
+        self.replicas.iter().map(|r| r.outstanding_reqs).sum()
+    }
+
+    /// The probe line: fleet aggregates + a per-replica breakdown.
+    pub fn to_json(&self) -> Json {
+        let pfx = self.fleet_prefix();
+        let mut fields = vec![
+            ("cluster", Json::from(true)),
+            ("policy", Json::from(self.policy.as_str())),
+            ("replicas", Json::from(self.replicas.len())),
+            ("completed_requests", Json::from(self.completed)),
+            ("outstanding_requests", Json::from(self.fleet_outstanding_reqs())),
+            ("fleet_tokens_generated", Json::from(self.fleet_tokens_generated())),
+            ("fleet_prefix_hit_rate", Json::from(pfx.hit_rate())),
+            ("fleet_prefill_tokens_skipped", Json::from(pfx.prefill_tokens_skipped)),
+            (
+                "fleet_preemptions",
+                Json::from(
+                    self.replicas.iter().map(|r| r.preempt.preemptions).sum::<usize>(),
+                ),
+            ),
+            (
+                "fleet_oom_aborts",
+                Json::from(self.replicas.iter().map(|r| r.preempt.oom_aborts).sum::<usize>()),
+            ),
+        ];
+        fields.extend(percentile_fields(LATENCY_PCTL_KEYS, self.latency));
+        fields.extend(percentile_fields(TTFT_PCTL_KEYS, self.ttft));
+        fields.extend(percentile_fields(TPOT_PCTL_KEYS, self.tpot));
+        let mut json = obj(fields);
+        if let Json::Obj(m) = &mut json {
+            m.insert(
+                "per_replica".into(),
+                arr(self.replicas.iter().map(ReplicaSnapshot::to_json)),
+            );
+        }
+        json
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    fn snap(id: usize, hits: usize, lookups: usize) -> ReplicaSnapshot {
+        let engine = Engine::new(EngineConfig::default()).unwrap();
+        let mut s = ReplicaSnapshot::of(id, "W4A16KV8@A100", &engine, 3, 1, 40);
+        s.prefix = Some(PrefixCacheSummary {
+            lookups,
+            hits,
+            blocks_saved: hits,
+            prefill_tokens_skipped: hits * 16,
+            evicted_blocks: 0,
+        });
+        s
+    }
+
+    #[test]
+    fn fleet_prefix_sums_across_replicas() {
+        let a = snap(0, 3, 4);
+        let b = snap(1, 1, 4);
+        let m = merge_prefix([&a, &b]);
+        assert_eq!((m.hits, m.lookups), (4, 8));
+        assert!((m.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.prefill_tokens_skipped, 64);
+    }
+
+    #[test]
+    fn cluster_stats_json_round_trips() {
+        let mut fleet = MetricsCollector::new();
+        fleet.record(1.0, 0.25, 1.0, 32, 4);
+        fleet.record(2.0, 0.5, 2.0, 32, 4);
+        let cs = ClusterStats::new(
+            "prefix_affinity".into(),
+            vec![snap(0, 3, 4), snap(1, 1, 4)],
+            &fleet,
+        );
+        let parsed = Json::parse(&cs.to_json().dump()).unwrap();
+        assert_eq!(parsed.get("cluster").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.req_usize("replicas").unwrap(), 2);
+        assert_eq!(parsed.req_str("policy").unwrap(), "prefix_affinity");
+        assert_eq!(parsed.req_usize("completed_requests").unwrap(), 2);
+        assert_eq!(parsed.get("fleet_prefix_hit_rate").unwrap().as_f64(), Some(0.5));
+        // Nearest-rank over two samples: p50 = smaller, p95/p99 = larger.
+        assert_eq!(parsed.get("latency_p50_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.get("latency_p99_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.get("ttft_p95_s").unwrap().as_f64(), Some(0.5));
+        // TPOT: (1.0−0.25)/3 and (2.0−0.5)/3.
+        assert_eq!(parsed.get("tpot_p50_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(parsed.req_arr("per_replica").unwrap().len(), 2);
+        let r0 = &parsed.req_arr("per_replica").unwrap()[0];
+        assert_eq!(r0.req_str("label").unwrap(), "W4A16KV8@A100");
+        assert_eq!(r0.req_usize("completed").unwrap(), 3);
+        assert_eq!(r0.req_usize("outstanding_tokens").unwrap(), 40);
+    }
+
+}

@@ -92,6 +92,15 @@ pub struct EngineConfig {
     pub artifacts_dir: String,
     /// Mixed-precision format to serve with. Must match a compiled variant.
     pub precision: PrecisionFormat,
+    /// Device profile name the sim backend's latency model runs on
+    /// (`A100` default; any [`super::DeviceProfile::by_name`] entry). In a
+    /// precision-heterogeneous cluster each replica sets its own — the
+    /// "hardware-aware format optimization" axis of the paper's §4.1.
+    pub device: String,
+    /// Tensor-parallel degree of this engine's modeled device group (1 =
+    /// single GPU). Feeds the sim backend's iteration-latency model only;
+    /// the executed tiny model is never actually sharded.
+    pub tp: usize,
     /// Maximum concurrent decode batch (must be a compiled decode batch
     /// size; smaller batches run padded to the next compiled size).
     pub max_batch: usize,
@@ -144,6 +153,8 @@ impl Default for EngineConfig {
             backend: BackendKind::Sim,
             artifacts_dir: "artifacts".into(),
             precision: PrecisionFormat::new(DType::Int4, DType::F16, DType::Int8),
+            device: "A100".into(),
+            tp: 1,
             max_batch: 8,
             kv_block_tokens: 16,
             kv_pool_tokens: 16 * 512,
@@ -184,6 +195,12 @@ impl EngineConfig {
         }
         if self.prefill_chunk == 0 {
             return Err("prefill_chunk must be > 0".into());
+        }
+        if super::DeviceProfile::by_name(&self.device).is_none() {
+            return Err(format!("unknown device profile `{}`", self.device));
+        }
+        if self.tp == 0 || !self.tp.is_power_of_two() {
+            return Err(format!("tp degree {} must be a power of two", self.tp));
         }
         if self.temperature < 0.0 {
             return Err("temperature must be >= 0".into());
@@ -248,6 +265,18 @@ mod tests {
         let mut c = EngineConfig::default();
         c.temperature = -1.0;
         assert!(c.validate().is_err());
+
+        let mut c = EngineConfig::default();
+        c.device = "B200".into();
+        assert!(c.validate().is_err(), "unknown device profile");
+        c.device = "h100".into();
+        c.validate().unwrap();
+
+        let mut c = EngineConfig::default();
+        c.tp = 3;
+        assert!(c.validate().is_err(), "non-pow2 tp");
+        c.tp = 4;
+        c.validate().unwrap();
 
         let mut c = EngineConfig::default();
         c.enable_prefix_cache = true;

@@ -128,11 +128,14 @@ impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self> {
         cfg.validate().map_err(anyhow::Error::msg)?;
         let backend: Box<dyn ExecutionBackend> = match cfg.backend {
-            BackendKind::Sim => Box::new(SimBackend::new(
+            BackendKind::Sim => Box::new(SimBackend::with_device(
                 ModelSpec::tiny(),
                 cfg.precision,
                 cfg.seed,
                 cfg.max_batch,
+                crate::config::DeviceProfile::by_name(&cfg.device)
+                    .ok_or_else(|| anyhow!("unknown device profile `{}`", cfg.device))?,
+                cfg.tp,
             )?),
             BackendKind::Pjrt => pjrt_backend(&cfg)?,
         };
@@ -237,7 +240,9 @@ impl Engine {
         let id = self.next_id;
         self.next_id += 1;
         let oversized = self.pool.blocks_for(total) > self.pool.total_blocks();
-        self.seqs.insert(id, SeqState::new(id, req, Instant::now()));
+        let mut seq = SeqState::new(id, req, Instant::now());
+        seq.submitted_sim_s = self.stats.sim_time_s;
+        self.seqs.insert(id, seq);
         if oversized {
             // Reject at submit time instead of idling forever: the
             // conservative admission reservation (prompt + generation) can
@@ -808,6 +813,7 @@ impl Engine {
         let mut emitted = vec![];
         let mut finished = vec![];
         {
+            let sim_now = self.stats.sim_time_s;
             let s = self.seqs.get_mut(&id).unwrap();
             s.prefill_pos += real;
             self.stats.prompt_tokens += real;
@@ -827,6 +833,7 @@ impl Engine {
                     let tok = self.sampler.sample(row, &mut self.rng);
                     s.generated.push(tok);
                     s.first_token = Some(Instant::now());
+                    s.first_token_sim_s = Some(sim_now);
                     s.phase = Phase::Decoding;
                     emitted.push((id, tok));
                     self.stats.tokens_generated += 1;
@@ -947,6 +954,7 @@ impl Engine {
     }
 
     fn finish(&mut self, id: u64, reason: FinishReason) {
+        let sim_now = self.stats.sim_time_s;
         let s = self.seqs.get_mut(&id).unwrap();
         if let Some(h) = s.handle.take() {
             self.pool.free_seq(h);
@@ -962,6 +970,11 @@ impl Engine {
                 .map(|t| t.duration_since(s.submitted).as_secs_f64())
                 .unwrap_or(f64::NAN),
             latency: now.duration_since(s.submitted).as_secs_f64(),
+            ttft_sim: s
+                .first_token_sim_s
+                .map(|t| t - s.submitted_sim_s)
+                .unwrap_or(f64::NAN),
+            latency_sim: sim_now - s.submitted_sim_s,
             prompt_len: s.prompt.len(),
             prefix_hit_tokens: s.prefix_hit_tokens,
             preempt_count: s.preempt_count,

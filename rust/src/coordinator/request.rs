@@ -58,6 +58,14 @@ pub struct RequestOutput {
     pub ttft: f64,
     /// Total request latency (submit → finish), seconds.
     pub latency: f64,
+    /// TTFT on the engine's **modeled** device clock (`EngineStats::
+    /// sim_time_s` advanced between submit and first token) — NaN when no
+    /// token was ever emitted. Wall clock on the sim backend measures
+    /// coordinator overhead; this is the deterministic serving-latency
+    /// number the cluster bench compares policies on.
+    pub ttft_sim: f64,
+    /// Submit → finish on the modeled device clock.
+    pub latency_sim: f64,
     pub prompt_len: usize,
     /// Prompt tokens served from the prefix cache (prefill skipped); 0
     /// when the cache is disabled or nothing matched.
@@ -70,6 +78,29 @@ pub struct RequestOutput {
     /// Why the request aborted (`finish == Aborted` only): the structured
     /// detail behind the opaque finish reason.
     pub abort_reason: Option<String>,
+}
+
+impl RequestOutput {
+    /// The output fabricated for a request the engine refused at submit
+    /// time (malformed for the model: empty prompt, out-of-vocab token,
+    /// over-context). No engine id was ever assigned (`u64::MAX`), nothing
+    /// ran, and the reason travels in `abort_reason`.
+    pub fn rejected(reason: String) -> Self {
+        Self {
+            id: u64::MAX,
+            tokens: vec![],
+            finish: FinishReason::Aborted,
+            ttft: f64::NAN,
+            latency: 0.0,
+            ttft_sim: f64::NAN,
+            latency_sim: 0.0,
+            prompt_len: 0,
+            prefix_hit_tokens: 0,
+            preempt_count: 0,
+            swapped_in_blocks: 0,
+            abort_reason: Some(reason),
+        }
+    }
 }
 
 /// Internal per-sequence engine state.
@@ -110,6 +141,10 @@ pub(crate) struct SeqState {
     pub abort_reason: Option<String>,
     pub submitted: Instant,
     pub first_token: Option<Instant>,
+    /// `EngineStats::sim_time_s` when this request was submitted.
+    pub submitted_sim_s: f64,
+    /// Modeled clock at first-token emission (None until then).
+    pub first_token_sim_s: Option<f64>,
 }
 
 impl SeqState {
@@ -132,6 +167,8 @@ impl SeqState {
             abort_reason: None,
             submitted: now,
             first_token: None,
+            submitted_sim_s: 0.0,
+            first_token_sim_s: None,
         }
     }
 

@@ -19,5 +19,5 @@ pub mod prefix;
 pub mod swap;
 
 pub use pool::{KvPool, KvPrecision, SeqHandle, SeqSnapshot};
-pub use prefix::{PrefixCache, PrefixCacheStats};
+pub use prefix::{route_key, PrefixCache, PrefixCacheStats};
 pub use swap::{SwapStats, SwapStore};

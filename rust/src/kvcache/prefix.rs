@@ -94,6 +94,37 @@ fn chain_key(prev: u64, tokens: &[i32]) -> u64 {
     h
 }
 
+/// Precision-agnostic routing key over the first `max_blocks` full token
+/// blocks of `prompt` — the same chain-hash scheme the index uses, rooted
+/// at a fixed routing constant instead of a precision seed. The cluster's
+/// `prefix_affinity` policy hashes prompts with this so requests sharing a
+/// prompt prefix land on the same replica (whose own index then matches
+/// them under *its* precision-seeded chains). Prompts shorter than one
+/// block hash their raw tokens, so tiny prompts still spread by content.
+///
+/// `max_blocks` trades group- against session-affinity: a cap no longer
+/// than the fleet's common shared prefix keeps whole tenant groups
+/// together; once a session's history exceeds the cap, its growing prompts
+/// keep hashing the same leading blocks and stay sticky. The flip side: a
+/// session whose *initial* prompt has fewer full blocks than the cap
+/// hashes a deeper key as it grows, re-placing by first touch — so size
+/// the cap to the workload's stable shared prefix, not above it.
+pub fn route_key(prompt: &[i32], block_tokens: usize, max_blocks: usize) -> u64 {
+    let mut key = 0x5EED_2007_EC4A_FF1Du64 ^ (block_tokens as u64).rotate_left(32);
+    let mut blocks = 0usize;
+    for chunk in prompt.chunks_exact(block_tokens) {
+        if blocks >= max_blocks.max(1) {
+            return key;
+        }
+        key = chain_key(key, chunk);
+        blocks += 1;
+    }
+    if blocks == 0 {
+        key = chain_key(key, prompt);
+    }
+    key
+}
+
 impl PrefixCache {
     pub fn new(precision: KvPrecision, block_tokens: usize, budget_blocks: usize) -> Self {
         Self {
@@ -410,6 +441,31 @@ mod tests {
         assert_eq!(c.evictable_blocks(&p), 2);
         assert!(c.evict_one(&mut p) && c.evict_one(&mut p));
         assert_eq!(p.free_blocks(), p.total_blocks());
+    }
+
+    #[test]
+    fn route_key_groups_shared_prefixes_and_caps_depth() {
+        let shared = prompt(2 * BT, 1); // two full shared blocks
+        let mut a = shared.clone();
+        a.extend(prompt(BT, 2));
+        let mut b = shared.clone();
+        b.extend(prompt(BT, 3));
+        // Capped at the shared depth: both sessions hash identically.
+        assert_eq!(route_key(&a, BT, 2), route_key(&b, BT, 2));
+        // Uncapped, they diverge in block 3.
+        assert_ne!(route_key(&a, BT, 8), route_key(&b, BT, 8));
+        // A session's growing prompt keeps its key once past the cap.
+        let mut a_next = a.clone();
+        a_next.extend(prompt(3 * BT, 4));
+        assert_eq!(route_key(&a, BT, 2), route_key(&a_next, BT, 2));
+        // Different leading blocks → different keys.
+        assert_ne!(route_key(&shared, BT, 4), route_key(&prompt(2 * BT, 9), BT, 4));
+        // Sub-block prompts hash their raw tokens instead of colliding.
+        assert_ne!(route_key(&[1, 2], BT, 4), route_key(&[3, 4], BT, 4));
+        // Trailing partial blocks are ignored past the first full block.
+        let mut c = shared.clone();
+        c.push(77);
+        assert_eq!(route_key(&c, BT, 8), route_key(&shared, BT, 8));
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request routing,
 //!   continuous batching, a paged *quantized* KV-cache manager, a
-//!   prefill/decode scheduler, sampling, metrics, a workload generator, and
+//!   prefill/decode scheduler, sampling, metrics, a workload generator,
 //!   the GPU microarchitecture simulator (`gpusim`) used to regenerate the
-//!   paper's kernel- and cluster-level figures.
+//!   paper's kernel- and cluster-level figures, and a
+//!   precision-heterogeneous multi-replica router tier ([`cluster`],
+//!   DESIGN.md §9) that spreads traffic over N engine replicas, each with
+//!   its own precision format and device profile.
 //! * **Layer 2 (python/compile/model.py)** — a GQA transformer with prefill
 //!   and decode graphs, AOT-lowered to HLO text once at build time.
 //! * **Layer 1 (python/compile/kernels/)** — the paper's GEMM and attention
@@ -34,6 +37,7 @@
 //! verify, the benches, and the `pjrt` feature.
 
 pub mod bench;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod gpusim;

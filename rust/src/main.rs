@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Result};
 use turbomind::bench;
+use turbomind::cluster::{Cluster, ClusterConfig, ReplicaSpec, RouterPolicy};
 use turbomind::config::{BackendKind, DeviceProfile, EngineConfig, PrecisionFormat};
 use turbomind::coordinator::Engine;
 use turbomind::quant::{pack_weights_hw_aware, GroupwiseQuant, QuantizedMatrix};
@@ -44,15 +45,30 @@ turbomind — mixed-precision LLM serving (TurboMind reproduction)
 USAGE:
   turbomind serve [--addr HOST:PORT] [--precision WxAyKVz] [--backend sim|pjrt]
                   [--artifacts DIR] [--max-batch N] [--max-requests N]
+                  [--device A100|H100|L40S|RTX4090] [--tp N]
                   [--prefix-cache] [--prefix-cache-blocks N]
                   [--preemption abort|swap|recompute] [--swap-budget-blocks N]
-  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|all>
+                  [--replicas N] [--router-policy round_robin|least_loaded|prefix_affinity]
+                  [--replica-spec fmt,kv,device[,tpN]]... [--queue-depth N]
+                  [--affinity-blocks N]
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|all>
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
 
 The default backend is `sim`: the deterministic pure-Rust execution backend
 (no artifacts needed). `--backend pjrt` drives the AOT HLO artifacts and
 requires a binary built with `--features pjrt`.
+
+`--replicas N` (or any `--replica-spec`) serves a precision-heterogeneous
+cluster instead of a single engine: N replicas, each with its own engine
+thread, bounded queue, and (per `--replica-spec`, repeatable) its own
+precision format, device profile, and TP degree — e.g.
+`--replica-spec w4a16,kv8,a100 --replica-spec w8a8,kv16,h100`. An explicit
+--replicas N wins: specs cycle to fill N (truncating when N is smaller);
+with no specs, every replica inherits --precision/--device.
+`--router-policy` picks how requests spread (prefix_affinity keeps
+sessions with shared prompt prefixes on the replica caching them), and
+`{\"stats\": true}` answers with the merged fleet line.
 
 `--prefix-cache` enables the prefix-sharing KV cache: requests with a
 common prompt prefix (shared system prompts, multi-turn histories) reuse
@@ -80,6 +96,8 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         backend,
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         precision,
+        device: args.get_or("device", "A100").to_string(),
+        tp: args.get_usize("tp", 1),
         max_batch: args.get_usize("max-batch", 8),
         kv_pool_tokens: args.get_usize("kv-pool-tokens", 16 * 512),
         temperature: args.get_f64("temperature", 0.0) as f32,
@@ -100,13 +118,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = engine_config(args)?;
     let addr = args.get_or("addr", "127.0.0.1:7181").to_string();
     let max_requests = args.get("max-requests").and_then(|v| v.parse().ok());
+
+    // Cluster mode: any --replica-spec, or an explicit --replicas (a
+    // `--replicas 1` fleet is still a cluster — router flags apply and
+    // the stats probe answers the fleet schema).
+    let spec_args = args.get_all("replica-spec");
+    let replicas = args.get_usize("replicas", 0);
+    if !spec_args.is_empty() || args.get("replicas").is_some() {
+        let policy: RouterPolicy = args
+            .get_or("router-policy", "least_loaded")
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut specs: Vec<ReplicaSpec> = spec_args
+            .iter()
+            .map(|s| s.parse().map_err(|e| anyhow::anyhow!("{e}")))
+            .collect::<Result<_>>()?;
+        if specs.is_empty() {
+            specs.push(ReplicaSpec {
+                precision: cfg.precision,
+                device: cfg.device.clone(),
+                tp: cfg.tp,
+            });
+        }
+        // An explicit --replicas N wins: specs cycle to fill N (and
+        // truncate when N is smaller); without it, one replica per spec.
+        let n = if replicas > 0 { replicas } else { specs.len() };
+        let specs: Vec<ReplicaSpec> =
+            (0..n).map(|i| specs[i % specs.len()].clone()).collect();
+        let mut ccfg = ClusterConfig::heterogeneous(cfg, specs, policy);
+        ccfg.queue_depth = args.get_usize("queue-depth", 64);
+        // Prompt blocks the prefix_affinity hash covers — size it to the
+        // workload's stable shared prefix (DESIGN.md §9).
+        ccfg.affinity_blocks = args.get_usize("affinity-blocks", 4);
+        for (i, s) in ccfg.specs.iter().enumerate() {
+            eprintln!("replica {i}: {}", s.label());
+        }
+        eprintln!("router policy: {policy} | {} replicas", ccfg.n_replicas());
+        let cluster = Cluster::start(ccfg)?;
+        return server::serve_cluster(cluster, &addr, max_requests);
+    }
+
     let engine = Engine::new(cfg)?;
     engine.warmup()?;
     eprintln!(
-        "backend {} | model {} | precision {} | max_batch {}",
+        "backend {} | model {} | precision {} | device {} | max_batch {}",
         engine.backend_name(),
         engine.model().name,
         engine.config().precision,
+        engine.config().device,
         engine.config().max_batch
     );
     server::serve(engine, &addr, max_requests)

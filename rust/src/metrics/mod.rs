@@ -1,10 +1,14 @@
-//! Serving metrics: latency percentiles, TTFT, and throughput — the three
-//! evaluation metrics of §5.1 — plus the prefix-cache effectiveness summary
-//! (hit rate, blocks saved, prefill tokens skipped) and the preemption
-//! summary (victims, swap traffic, recompute volume, OOM aborts).
+//! Serving metrics: latency, TTFT, and TPOT percentiles plus throughput —
+//! the evaluation metrics of §5.1 — plus the prefix-cache effectiveness
+//! summary (hit rate, blocks saved, prefill tokens skipped) and the
+//! preemption summary (victims, swap traffic, recompute volume, OOM
+//! aborts). TPOT (time per output token) is the steady-state decode pace:
+//! `(latency − ttft) / (generated − 1)`, defined only for requests that
+//! emitted at least two tokens.
 
 use crate::coordinator::PreemptStats;
 use crate::kvcache::{PrefixCacheStats, SwapStats};
+use crate::util::json::Json;
 
 /// Prefix-cache effectiveness, derived from the engine's
 /// [`PrefixCacheStats`] counters. This is what the server's stats line and
@@ -100,6 +104,8 @@ impl PreemptionSummary {
 pub struct MetricsCollector {
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
+    /// Per-request time-per-output-token (requests with ≥ 2 tokens only).
+    tpots: Vec<f64>,
     /// (completion time, generated tokens) pairs for throughput windows.
     completions: Vec<(f64, usize)>,
     prompt_tokens: usize,
@@ -128,10 +134,25 @@ impl MetricsCollector {
         self.latencies.push(latency_s);
         if ttft_s.is_finite() {
             self.ttfts.push(ttft_s);
+            if gen_tokens > 1 {
+                self.tpots.push((latency_s - ttft_s).max(0.0) / (gen_tokens - 1) as f64);
+            }
         }
         self.completions.push((done_at_s, gen_tokens));
         self.prompt_tokens += prompt_tokens;
         self.gen_tokens += gen_tokens;
+    }
+
+    /// Merge another collector's samples into this one (fleet aggregation:
+    /// per-replica series concatenate; each sample is its own duration, so
+    /// replicas with independent clocks merge soundly).
+    pub fn merge(&mut self, other: &MetricsCollector) {
+        self.latencies.extend_from_slice(&other.latencies);
+        self.ttfts.extend_from_slice(&other.ttfts);
+        self.tpots.extend_from_slice(&other.tpots);
+        self.completions.extend_from_slice(&other.completions);
+        self.prompt_tokens += other.prompt_tokens;
+        self.gen_tokens += other.gen_tokens;
     }
 
     pub fn count(&self) -> usize {
@@ -144,6 +165,12 @@ impl MetricsCollector {
 
     pub fn ttft_percentiles(&self) -> Option<Percentiles> {
         percentiles(&self.ttfts)
+    }
+
+    /// Time-per-output-token percentiles (None until a request with ≥ 2
+    /// generated tokens completes).
+    pub fn tpot_percentiles(&self) -> Option<Percentiles> {
+        percentiles(&self.tpots)
     }
 
     /// Requests per second over the observed completion window.
@@ -167,6 +194,23 @@ impl MetricsCollector {
     pub fn total_tokens(&self) -> (usize, usize) {
         (self.prompt_tokens, self.gen_tokens)
     }
+}
+
+/// The protocol's three percentile series and their p50/p95/p99 probe
+/// field names (DESIGN.md §4) — static strings to satisfy
+/// `util::json::obj`'s `&'static str` key contract.
+pub const LATENCY_PCTL_KEYS: [&str; 3] = ["latency_p50_s", "latency_p95_s", "latency_p99_s"];
+pub const TTFT_PCTL_KEYS: [&str; 3] = ["ttft_p50_s", "ttft_p95_s", "ttft_p99_s"];
+pub const TPOT_PCTL_KEYS: [&str; 3] = ["tpot_p50_s", "tpot_p95_s", "tpot_p99_s"];
+
+/// p50/p95/p99 probe fields for one series under the given key triple
+/// (0 until the series has samples — JSON carries no NaN).
+pub fn percentile_fields(
+    keys: [&'static str; 3],
+    p: Option<Percentiles>,
+) -> Vec<(&'static str, Json)> {
+    let (p50, p95, p99) = p.map(|p| (p.p50, p.p95, p.p99)).unwrap_or((0.0, 0.0, 0.0));
+    vec![(keys[0], Json::from(p50)), (keys[1], Json::from(p95)), (keys[2], Json::from(p99))]
 }
 
 /// Nearest-rank percentiles (the convention serving papers use).
@@ -207,9 +251,73 @@ mod tests {
 
     #[test]
     fn percentiles_single_sample() {
+        // Nearest-rank at n=1: every percentile is the sample itself (rank
+        // ceil(p/100 · 1) clamps to 1).
         let p = percentiles(&[3.0]).unwrap();
         assert_eq!(p.p50, 3.0);
+        assert_eq!(p.p90, 3.0);
+        assert_eq!(p.p95, 3.0);
         assert_eq!(p.p99, 3.0);
+        assert_eq!(p.max, 3.0);
+        assert_eq!(p.mean, 3.0);
+    }
+
+    #[test]
+    fn percentiles_two_samples() {
+        // Nearest-rank at n=2: p50 → rank ceil(1.0) = 1 (the smaller
+        // sample); p90/p95/p99 → rank ceil(1.8/1.9/1.98) = 2 (the larger).
+        let p = percentiles(&[7.0, 1.0]).unwrap();
+        assert_eq!(p.p50, 1.0);
+        assert_eq!(p.p90, 7.0);
+        assert_eq!(p.p95, 7.0);
+        assert_eq!(p.p99, 7.0);
+        assert_eq!(p.max, 7.0);
+        assert_eq!(p.mean, 4.0);
+    }
+
+    #[test]
+    fn tpot_is_decode_pace() {
+        let mut m = MetricsCollector::new();
+        // 10 tokens over (2.0 − 0.2)s of decode → 0.2 s/token.
+        m.record(2.0, 0.2, 2.0, 100, 10);
+        let p = m.tpot_percentiles().unwrap();
+        assert!((p.p50 - 0.2).abs() < 1e-12, "{}", p.p50);
+        assert_eq!(p.p50, p.p99, "single sample");
+    }
+
+    #[test]
+    fn tpot_skips_degenerate_requests() {
+        let mut m = MetricsCollector::new();
+        m.record(1.0, 1.0, 1.0, 10, 1); // one token: no decode interval
+        m.record(1.0, f64::NAN, 2.0, 10, 8); // aborted before first token
+        assert!(m.tpot_percentiles().is_none());
+        m.record(1.1, 0.1, 3.0, 10, 11);
+        assert!((m.tpot_percentiles().unwrap().p50 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_fields_zero_when_empty_and_filled_otherwise() {
+        for (k, v) in percentile_fields(TPOT_PCTL_KEYS, None) {
+            assert!(k.starts_with("tpot_p"));
+            assert_eq!(v.as_f64(), Some(0.0));
+        }
+        let p = percentiles(&[1.0, 3.0]).unwrap();
+        let fields = percentile_fields(LATENCY_PCTL_KEYS, Some(p));
+        assert_eq!(fields[0], ("latency_p50_s", Json::from(1.0)));
+        assert_eq!(fields[2], ("latency_p99_s", Json::from(3.0)));
+    }
+
+    #[test]
+    fn merge_concatenates_series() {
+        let mut a = MetricsCollector::new();
+        a.record(1.0, 0.1, 1.0, 10, 5);
+        let mut b = MetricsCollector::new();
+        b.record(3.0, 0.3, 2.0, 20, 9);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.total_tokens(), (30, 14));
+        assert_eq!(a.latency_percentiles().unwrap().max, 3.0);
+        assert_eq!(a.tpot_percentiles().unwrap().max, (3.0 - 0.3) / 8.0);
     }
 
     #[test]

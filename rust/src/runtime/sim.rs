@@ -74,6 +74,22 @@ impl SimBackend {
         seed: u64,
         max_batch: usize,
     ) -> Result<Self> {
+        Self::with_device(model, precision, seed, max_batch, DeviceProfile::a100(), 1)
+    }
+
+    /// Build a sim backend whose iteration-latency model runs on `dev` at
+    /// tensor-parallel degree `tp` (the numerics are device-independent —
+    /// only the modeled `sim_time_s` changes). This is what lets a
+    /// precision-heterogeneous cluster model an A100 w4a16/kv8 replica next
+    /// to an H100 w8a8/kv16 one.
+    pub fn with_device(
+        model: ModelSpec,
+        precision: PrecisionFormat,
+        seed: u64,
+        max_batch: usize,
+        dev: DeviceProfile,
+        tp: usize,
+    ) -> Result<Self> {
         if precision.weight == DType::Fp8 {
             bail!("sim backend has no numeric model for fp8 weights (format {precision})");
         }
@@ -90,12 +106,10 @@ impl SimBackend {
             a_bits: precision.activation.bits(),
             kv_bits: precision.kv.bits(),
         };
-        let timing = ServingSim::new(SimConfig::new(
-            model_config_of(&model),
-            DeviceProfile::a100(),
-            Framework::TurboMind,
-            sim_prec,
-        ));
+        let mut timing_cfg =
+            SimConfig::new(model_config_of(&model), dev, Framework::TurboMind, sim_prec);
+        timing_cfg.tp = tp;
+        let timing = ServingSim::new(timing_cfg);
 
         Ok(Self { model, plan, precision, kv_prec, seed, embed_in, embed_out, timing })
     }
@@ -686,6 +700,27 @@ mod tests {
         assert!(p.decode_batches.contains(&4));
         assert_eq!(*p.decode_t.last().unwrap(), b.model().max_seq_len);
         assert!(p.prefill_chunks.contains(&128));
+    }
+
+    #[test]
+    fn device_changes_timing_not_numerics() {
+        // A heterogeneous fleet's replicas must stay bit-compatible: the
+        // device profile only scales the modeled iteration latency.
+        let a100 = backend("W4A16KV8");
+        let h100 = SimBackend::with_device(
+            ModelSpec::tiny(),
+            "W4A16KV8".parse().unwrap(),
+            0,
+            4,
+            DeviceProfile::h100(),
+            1,
+        )
+        .unwrap();
+        let oa = prefill_chunk(&a100, &[5, 17, 99]);
+        let oh = prefill_chunk(&h100, &[5, 17, 99]);
+        assert_eq!(oa.logits, oh.logits, "numerics are device-independent");
+        assert_eq!(oa.k_codes, oh.k_codes);
+        assert!(oh.sim_time_s < oa.sim_time_s, "H100 models faster than A100");
     }
 
     #[test]

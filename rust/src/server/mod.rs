@@ -25,12 +25,17 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 use std::thread;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::cluster::Cluster;
 use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use crate::metrics::MetricsCollector;
 use crate::util::json::{arr, obj, Json};
 
 /// A message forwarded from a connection to the engine thread.
@@ -47,36 +52,35 @@ enum Inbound {
 /// The engine loop runs on the **calling** thread (PJRT handles are not
 /// `Send`); a listener thread accepts connections and forwards requests
 /// over a channel. Blocks forever unless `max_requests` is set (tests /
-/// bounded runs): the loop returns after serving that many requests
-/// (generation responses and `{"stats": true}` probes both count).
+/// bounded runs): the loop returns after **answering that many
+/// generation requests** (aborted answers count — the client got its
+/// response line; the `completed_requests` stats field tracks successes
+/// only). `{"stats": true}` probes, protocol errors, and engine-rejected
+/// requests never burn the shutdown budget — a monitoring probe must not
+/// shorten a bounded run (the pre-fix behavior also capped accepted
+/// *connections*, so idle probes starved real clients).
 pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("turbomind serving on {addr}");
+    let poke = poke_addr(&listener, addr);
     let (tx, rx): (Sender<Inbound>, Receiver<Inbound>) = mpsc::channel();
+    let stop = spawn_listener(listener, tx);
+    let result = engine_loop(&mut engine, &rx, max_requests);
+    stop_listener(&stop, &poke);
+    result
+}
 
-    // Listener thread: accept and spawn per-connection readers.
-    thread::spawn(move || {
-        let mut accepted = 0usize;
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let tx = tx.clone();
-            thread::spawn(move || {
-                if let Err(e) = handle_conn(stream, tx) {
-                    eprintln!("connection error: {e}");
-                }
-            });
-            accepted += 1;
-            if let Some(maxr) = max_requests {
-                if accepted >= maxr {
-                    break;
-                }
-            }
-        }
-        // tx dropped here once the accept loop ends.
-    });
-
-    // Engine loop on this thread: dispatch, admit from the channel, step.
+/// The serve loop body: dispatch finished outputs, admit from the
+/// channel, step — on the calling thread, until the bounded-run budget is
+/// spent or every sender is gone.
+fn engine_loop(
+    engine: &mut Engine,
+    rx: &Receiver<Inbound>,
+    max_requests: Option<usize>,
+) -> Result<()> {
     let mut pending: Vec<(u64, Sender<RequestOutput>)> = Vec::new();
+    let mut metrics = MetricsCollector::new();
+    let started = Instant::now();
     let mut served = 0usize;
     loop {
         // Dispatch finished outputs FIRST — `submit` can finish a request
@@ -86,6 +90,18 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
         for out in engine.take_outputs() {
             if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
                 let (_, reply) = pending.remove(pos);
+                // Percentiles summarize *successful* completions; an
+                // aborted answer's near-zero latency would drag p50
+                // toward zero under overload.
+                if out.finish != FinishReason::Aborted {
+                    metrics.record(
+                        out.latency,
+                        out.ttft,
+                        started.elapsed().as_secs_f64(),
+                        out.prompt_len,
+                        out.tokens.len(),
+                    );
+                }
                 let _ = reply.send(out);
                 served += 1;
             }
@@ -96,7 +112,7 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
             }
         }
         // Admit all queued requests without blocking; block only when the
-        // engine is idle (and, per the above, nothing awaits dispatch).
+        // engine is idle (and nothing awaits dispatch).
         loop {
             let inbound = if engine.has_work() {
                 match rx.try_recv() {
@@ -112,14 +128,9 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
             };
             let (req, reply) = match inbound {
                 Inbound::Stats { reply } => {
-                    let _ = reply.send(stats_json(&engine));
-                    // Probes count toward `max_requests` (bounded runs stay
-                    // bounded) and break to the outer loop when idle so the
-                    // served-count exit check runs.
-                    served += 1;
-                    if !engine.has_work() {
-                        break;
-                    }
+                    // Probes are answered from state and deliberately do
+                    // NOT count toward `max_requests`.
+                    let _ = reply.send(stats_json(engine, &metrics));
                     continue;
                 }
                 Inbound::Gen { req, reply } => (req, reply),
@@ -133,25 +144,128 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
                     }
                 }
                 Err(e) => {
-                    // Report rejection as an aborted output.
-                    let _ = reply.send(RequestOutput {
-                        id: u64::MAX,
-                        tokens: vec![],
-                        finish: FinishReason::Aborted,
-                        ttft: f64::NAN,
-                        latency: 0.0,
-                        prompt_len: 0,
-                        prefix_hit_tokens: 0,
-                        preempt_count: 0,
-                        swapped_in_blocks: 0,
-                        abort_reason: Some(e.to_string()),
-                    });
+                    // Report rejection as an aborted output; rejections
+                    // never count toward the shutdown budget.
+                    let _ = reply.send(RequestOutput::rejected(e.to_string()));
                     eprintln!("rejected request: {e}");
                 }
             }
         }
         engine.step()?;
     }
+}
+
+/// Spawn the accept loop: unbounded accepts, one reader thread per
+/// connection. Returns the stop flag [`stop_listener`] uses to shut it
+/// down — without it, a bounded run would leak a thread blocked in
+/// `accept` holding the port for the rest of the process.
+fn spawn_listener(listener: TcpListener, tx: Sender<Inbound>) -> Arc<AtomicBool> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let lstop = Arc::clone(&stop);
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            if lstop.load(Ordering::SeqCst) {
+                break; // drops the listener, releasing the port
+            }
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            thread::spawn(move || {
+                if let Err(e) = handle_conn(stream, tx) {
+                    eprintln!("connection error: {e}");
+                }
+            });
+        }
+        // tx dropped here once the accept loop ends.
+    });
+    stop
+}
+
+/// Signal the accept loop to exit and poke it awake with a throwaway
+/// connection (accept blocks otherwise); ignores failures — the listener
+/// may already be gone.
+fn stop_listener(stop: &Arc<AtomicBool>, poke: &str) {
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(poke);
+}
+
+/// A connectable address for the wake-up poke: the listener's actual
+/// local address, with an unspecified host (`0.0.0.0` / `::`) rewritten
+/// to loopback — connecting to the wildcard address is not portable.
+fn poke_addr(listener: &TcpListener, fallback: &str) -> String {
+    match listener.local_addr() {
+        Ok(mut a) => {
+            if a.ip().is_unspecified() {
+                a.set_ip(match a.ip() {
+                    std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                    std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+                });
+            }
+            a.to_string()
+        }
+        Err(_) => fallback.to_string(),
+    }
+}
+
+/// Serve a replica [`Cluster`] on `addr`: same JSON-lines protocol, same
+/// connection handling, but requests route through the cluster's policy
+/// to one of N engine replicas (each on its own thread), and the
+/// `{"stats": true}` probe answers with the merged [`crate::cluster::
+/// ClusterStats`] line instead of single-engine state.
+///
+/// The calling thread runs the dispatcher: it routes and forwards — the
+/// replica threads do the engine work, and replies travel replica →
+/// connection directly. A full replica inbox blocks dispatch
+/// (backpressure). With `max_requests`, the dispatcher stops after
+/// routing that many generation requests, then drains the fleet
+/// (outstanding replies still arrive) and returns. Probes and
+/// router-level dispatch failures ride free, mirroring [`serve`]; one
+/// divergence: a request the *replica engine* rejects at submit still
+/// consumed budget, because the dispatcher hands off before the engine
+/// decides (it cannot see the rejection from here).
+pub fn serve_cluster(mut cluster: Cluster, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "turbomind cluster serving on {addr} ({} replicas)",
+        cluster.n_replicas()
+    );
+    let poke = poke_addr(&listener, addr);
+    let (tx, rx): (Sender<Inbound>, Receiver<Inbound>) = mpsc::channel();
+    let stop = spawn_listener(listener, tx);
+    let result = dispatch_loop(&mut cluster, &rx, max_requests);
+    stop_listener(&stop, &poke);
+    // Close inboxes; replicas drain outstanding requests (answering their
+    // clients) before exiting.
+    cluster.shutdown()?;
+    result
+}
+
+/// The cluster dispatcher body: route generation requests by policy,
+/// answer probes with the merged fleet line, stop once the bounded-run
+/// budget is spent or every sender is gone.
+fn dispatch_loop(
+    cluster: &mut Cluster,
+    rx: &Receiver<Inbound>,
+    max_requests: Option<usize>,
+) -> Result<()> {
+    let mut dispatched = 0usize;
+    for inbound in rx.iter() {
+        match inbound {
+            Inbound::Stats { reply } => {
+                let _ = reply.send(cluster.stats()?.to_json());
+            }
+            Inbound::Gen { req, reply } => {
+                if let Err(e) = cluster.submit_with(req, reply.clone()) {
+                    let _ = reply.send(RequestOutput::rejected(e.to_string()));
+                    continue;
+                }
+                dispatched += 1;
+                if max_requests.is_some_and(|maxr| dispatched >= maxr) {
+                    return Ok(());
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<Inbound>) -> Result<()> {
@@ -225,15 +339,17 @@ fn is_stats_request(line: &str) -> bool {
 
 /// Encode the engine-state stats line: pool utilization, the prefix-cache
 /// effectiveness summary (hit rate / blocks saved / prefill tokens skipped
-/// — zeros with `"prefix_cache_enabled": false`), and the swap-pool /
+/// — zeros with `"prefix_cache_enabled": false`), the swap-pool /
 /// preemption summary (mode, host-store occupancy + utilization, victim
-/// counts).
-pub fn stats_json(engine: &Engine) -> Json {
+/// counts), and p50/p95/p99 percentiles of the completed requests'
+/// latency, TTFT, and TPOT series (`metrics` — zeros until something
+/// completes).
+pub fn stats_json(engine: &Engine, metrics: &MetricsCollector) -> Json {
     let cache = engine.prefix_cache_summary();
     let c = cache.unwrap_or_default();
     let p = engine.preemption_summary();
     let swap = engine.swap_store();
-    obj([
+    let mut fields = vec![
         ("pool_blocks_total", Json::from(engine.kv_pool().total_blocks())),
         ("pool_blocks_free", Json::from(engine.kv_pool().free_blocks())),
         ("pool_utilization", Json::from(engine.pool_utilization())),
@@ -257,7 +373,21 @@ pub fn stats_json(engine: &Engine) -> Json {
         ("swapped_out_blocks", Json::from(p.swapped_out_blocks)),
         ("swapped_in_blocks", Json::from(p.swapped_in_blocks)),
         ("oom_aborts", Json::from(p.oom_aborts)),
-    ])
+        ("completed_requests", Json::from(metrics.count())),
+    ];
+    fields.extend(crate::metrics::percentile_fields(
+        crate::metrics::LATENCY_PCTL_KEYS,
+        metrics.latency_percentiles(),
+    ));
+    fields.extend(crate::metrics::percentile_fields(
+        crate::metrics::TTFT_PCTL_KEYS,
+        metrics.ttft_percentiles(),
+    ));
+    fields.extend(crate::metrics::percentile_fields(
+        crate::metrics::TPOT_PCTL_KEYS,
+        metrics.tpot_percentiles(),
+    ));
+    obj(fields)
 }
 
 /// Encode a structured protocol-error line: `{"error": "..."}`.
@@ -277,6 +407,8 @@ pub fn encode_output(out: &RequestOutput) -> Json {
         FinishReason::Aborted => "aborted",
     };
     let ttft = if out.ttft.is_finite() { Json::from(out.ttft) } else { Json::Null };
+    let ttft_sim =
+        if out.ttft_sim.is_finite() { Json::from(out.ttft_sim) } else { Json::Null };
     let reason = match &out.abort_reason {
         Some(r) => Json::from(r.as_str()),
         None => Json::Null,
@@ -287,6 +419,8 @@ pub fn encode_output(out: &RequestOutput) -> Json {
         ("finish", Json::from(finish)),
         ("ttft_s", ttft),
         ("latency_s", Json::from(out.latency)),
+        ("ttft_sim_s", ttft_sim),
+        ("latency_sim_s", Json::from(out.latency_sim)),
         ("prompt_len", Json::from(out.prompt_len)),
         ("prefix_hit_tokens", Json::from(out.prefix_hit_tokens)),
         ("preempt_count", Json::from(out.preempt_count)),
@@ -389,6 +523,8 @@ mod tests {
             finish: FinishReason::Aborted,
             ttft: f64::NAN,
             latency: 0.0,
+            ttft_sim: f64::NAN,
+            latency_sim: 0.0,
             prompt_len: 9,
             prefix_hit_tokens: 0,
             preempt_count: 0,
@@ -415,6 +551,8 @@ mod tests {
             finish: FinishReason::Aborted,
             ttft: 0.01,
             latency: 0.4,
+            ttft_sim: 0.005,
+            latency_sim: 0.2,
             prompt_len: 16,
             prefix_hit_tokens: 0,
             preempt_count: 0,
@@ -442,6 +580,8 @@ mod tests {
             finish: FinishReason::Length,
             ttft: 0.25,
             latency: 1.5,
+            ttft_sim: 0.125,
+            latency_sim: 0.75,
             prompt_len: 4,
             prefix_hit_tokens: 32,
             preempt_count: 2,
@@ -457,6 +597,9 @@ mod tests {
         assert_eq!(parsed.req_usize("preempt_count").unwrap(), 2);
         assert_eq!(parsed.req_usize("swapped_in_blocks").unwrap(), 5);
         assert_eq!(parsed.get("abort_reason"), Some(&Json::Null));
+        // The modeled-clock pair rides along for policy comparisons.
+        assert_eq!(parsed.get("ttft_sim_s").unwrap().as_f64(), Some(0.125));
+        assert_eq!(parsed.get("latency_sim_s").unwrap().as_f64(), Some(0.75));
     }
 
     #[test]
@@ -471,7 +614,7 @@ mod tests {
     fn stats_json_round_trips_with_cache_disabled() {
         let engine =
             Engine::new(crate::config::EngineConfig::default()).expect("sim engine");
-        let line = stats_json(&engine).dump();
+        let line = stats_json(&engine, &MetricsCollector::new()).dump();
         let parsed = Json::parse(&line).unwrap();
         assert_eq!(parsed.get("prefix_cache_enabled").unwrap().as_bool(), Some(false));
         assert_eq!(parsed.req_usize("pool_blocks_total").unwrap(), 512);
@@ -484,5 +627,27 @@ mod tests {
         assert_eq!(parsed.req_usize("preemptions").unwrap(), 0);
         assert_eq!(parsed.get("swap_utilization").unwrap().as_f64(), Some(0.0));
         assert_eq!(parsed.req_usize("oom_aborts").unwrap(), 0);
+        // Percentile fields are present and zero on an idle engine.
+        assert_eq!(parsed.req_usize("completed_requests").unwrap(), 0);
+        assert_eq!(parsed.get("latency_p95_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parsed.get("ttft_p50_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(parsed.get("tpot_p99_s").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn stats_json_reports_latency_ttft_tpot_percentiles() {
+        let engine =
+            Engine::new(crate::config::EngineConfig::default()).expect("sim engine");
+        let mut m = MetricsCollector::new();
+        m.record(1.0, 0.2, 1.0, 16, 5); // tpot (1.0−0.2)/4 = 0.2
+        m.record(3.0, 0.6, 2.0, 16, 5); // tpot 0.6
+        let parsed = Json::parse(&stats_json(&engine, &m).dump()).unwrap();
+        assert_eq!(parsed.req_usize("completed_requests").unwrap(), 2);
+        // Nearest-rank n=2: p50 = smaller sample, p95/p99 = larger.
+        assert_eq!(parsed.get("latency_p50_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.get("latency_p99_s").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("ttft_p95_s").unwrap().as_f64(), Some(0.6));
+        assert_eq!(parsed.get("tpot_p50_s").unwrap().as_f64(), Some(0.2));
+        assert_eq!(parsed.get("tpot_p99_s").unwrap().as_f64(), Some(0.6));
     }
 }

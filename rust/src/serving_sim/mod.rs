@@ -11,6 +11,10 @@
 //! Batch capacity is derived from device memory: weights at the serving
 //! precision plus KV at the serving KV precision must fit the TP group.
 
+pub mod fleet;
+
+pub use fleet::{FleetSim, FleetSimResult};
+
 use std::collections::HashMap;
 
 use crate::config::{DeviceProfile, ModelConfig};

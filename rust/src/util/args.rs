@@ -9,6 +9,9 @@ use std::collections::BTreeMap;
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     named: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in order (repeatable options like
+    /// `--replica-spec` keep all values; `named` keeps the last).
+    named_all: Vec<(String, String)>,
     flags: Vec<String>,
     positional: Vec<String>,
 }
@@ -23,13 +26,16 @@ impl Args {
             if let Some(body) = a.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
                     out.named.insert(k.to_string(), v.to_string());
+                    out.named_all.push((k.to_string(), v.to_string()));
                 } else if flag_names.contains(&body) {
                     out.flags.push(body.to_string());
                 } else if let Some(v) = it.peek() {
                     if v.starts_with("--") {
                         out.flags.push(body.to_string());
                     } else {
-                        out.named.insert(body.to_string(), it.next().unwrap());
+                        let v = it.next().unwrap();
+                        out.named.insert(body.to_string(), v.clone());
+                        out.named_all.push((body.to_string(), v));
                     }
                 } else {
                     out.flags.push(body.to_string());
@@ -56,6 +62,16 @@ impl Args {
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
+    }
+
+    /// Every value a repeatable option was given, in order (empty when the
+    /// option never appeared).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.named_all
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
@@ -111,6 +127,17 @@ mod tests {
     fn trailing_flag() {
         let a = parse("--n 3 --last", &[]);
         assert!(a.flag("last"));
+    }
+
+    #[test]
+    fn repeated_options_keep_all_values() {
+        let a = parse("--spec w4a16,kv8,a100 --spec w8a8,kv16,h100 --n 3", &[]);
+        assert_eq!(a.get_all("spec"), ["w4a16,kv8,a100", "w8a8,kv16,h100"]);
+        assert_eq!(a.get("spec"), Some("w8a8,kv16,h100"), "last wins for get()");
+        assert!(a.get_all("missing").is_empty());
+        // `--key=value` form participates too.
+        let b = parse("--spec=one --spec=two", &[]);
+        assert_eq!(b.get_all("spec"), ["one", "two"]);
     }
 
     #[test]

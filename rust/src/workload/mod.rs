@@ -222,6 +222,94 @@ impl SharedPrefixGen {
     }
 }
 
+/// Multi-tenant traffic for the cluster tier: `tenants` independent
+/// organizations, each with its **own** shared system prompt, each running
+/// `users` concurrent multi-turn conversations ([`SharedPrefixGen`] is the
+/// single-tenant special case). Requests advertise `prefix_group = tenant
+/// + 1`, so a prefix-affinity router can keep a tenant's traffic — and
+/// therefore its resident prefix blocks — on one replica, while spreading
+/// tenants across the fleet.
+#[derive(Debug, Clone)]
+pub struct MultiTenantGen {
+    /// Distinct tenants (each with its own shared system prompt).
+    pub tenants: usize,
+    /// Concurrent conversations per tenant.
+    pub users: usize,
+    /// Turns per conversation.
+    pub turns: usize,
+    /// Tokens of each tenant's system prompt.
+    pub shared_tokens: usize,
+    /// Fresh prompt tokens a user adds per turn.
+    pub turn_tokens: usize,
+    /// Response tokens generated per turn.
+    pub gen_tokens: usize,
+    /// Poisson arrival rate, requests/second (global across tenants).
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl MultiTenantGen {
+    /// Generate the `tenants × users × turns` trace, turn-major then
+    /// tenant then user, so every conversation's turn k arrives before its
+    /// turn k+1 and tenants interleave the way independent traffic would.
+    pub fn generate(&self) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(self.tenants * self.users * self.turns);
+        for turn in 0..self.turns {
+            for tenant in 0..self.tenants {
+                for _user in 0..self.users {
+                    t += rng.exp_gap(self.rate);
+                    let history = turn * (self.turn_tokens + self.gen_tokens);
+                    out.push(TraceRequest {
+                        arrival_s: t,
+                        prompt_tokens: self.shared_tokens + history + self.turn_tokens,
+                        gen_tokens: self.gen_tokens,
+                        prefix_group: tenant as u64 + 1,
+                        prefix_tokens: self.shared_tokens,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// (tenant, user, turn) of trace request `req_index`, matching
+    /// [`MultiTenantGen::generate`]'s emission order.
+    pub fn locate(&self, req_index: usize) -> (usize, usize, usize) {
+        let per_turn = self.tenants * self.users;
+        let turn = req_index / per_turn;
+        let rem = req_index % per_turn;
+        (rem / self.users, rem % self.users, turn)
+    }
+
+    /// Deterministic token ids for trace request `req_index`: the system
+    /// prefix depends only on (seed, tenant) — identical across a tenant's
+    /// users, distinct across tenants — and each (tenant, user) history is
+    /// one stream, so a conversation's turn-k prompt is a strict prefix of
+    /// its turn-(k+1) prompt.
+    pub fn prompt_tokens(&self, req_index: usize, vocab: usize) -> Vec<i32> {
+        let (tenant, user, turn) = self.locate(req_index);
+        let mut toks = Vec::new();
+        let mut sys = Rng::new(
+            self.seed ^ 0x7E4A_4700 ^ (tenant as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F),
+        );
+        for _ in 0..self.shared_tokens {
+            toks.push(sys.below(vocab) as i32);
+        }
+        let mut hist = Rng::new(
+            self.seed
+                ^ ((tenant * self.users + user) as u64 + 1)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let n = turn * (self.turn_tokens + self.gen_tokens) + self.turn_tokens;
+        for _ in 0..n {
+            toks.push(hist.below(vocab) as i32);
+        }
+        toks
+    }
+}
+
 /// Bursty overload traffic — the KV-pressure scenario the preemption
 /// subsystem (DESIGN.md §8) exists for. Requests arrive in `bursts` waves
 /// of `burst_size` near-simultaneous requests (jittered by a fast Poisson
@@ -448,6 +536,65 @@ mod tests {
         }
         for w in trace.windows(2) {
             assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    fn mt() -> MultiTenantGen {
+        MultiTenantGen {
+            tenants: 3,
+            users: 2,
+            turns: 3,
+            shared_tokens: 32,
+            turn_tokens: 8,
+            gen_tokens: 4,
+            rate: 10.0,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn multi_tenant_trace_shape() {
+        let g = mt();
+        let trace = g.generate();
+        assert_eq!(trace.len(), 18);
+        assert_eq!(trace, g.generate(), "deterministic per seed");
+        for (i, r) in trace.iter().enumerate() {
+            let (tenant, _user, turn) = g.locate(i);
+            assert_eq!(r.prefix_group, tenant as u64 + 1);
+            assert_eq!(r.prefix_tokens, 32);
+            assert_eq!(r.prompt_tokens, 32 + turn * 12 + 8);
+            assert_eq!(r.gen_tokens, 4);
+        }
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        // Turn-major: all of turn 0 (6 requests) precedes all of turn 1.
+        assert_eq!(g.locate(5), (2, 1, 0));
+        assert_eq!(g.locate(6), (0, 0, 1));
+    }
+
+    #[test]
+    fn multi_tenant_prefixes_share_within_not_across_tenants() {
+        let g = mt();
+        // Tenant 0's two users (requests 0, 1) share the system prompt…
+        let a = g.prompt_tokens(0, 2048);
+        let b = g.prompt_tokens(1, 2048);
+        assert_eq!(a[..32], b[..32], "same tenant, same system prompt");
+        assert_ne!(a[32..], b[32..], "…but user histories diverge");
+        // …tenant 1 (request 2) has a different system prompt.
+        let c = g.prompt_tokens(2, 2048);
+        assert_ne!(a[..32], c[..32], "tenants must not share prefixes");
+        // A conversation's prompts grow by strict prefix extension:
+        // request 6 is tenant 0, user 0, turn 1.
+        let t1 = g.prompt_tokens(6, 2048);
+        assert!(t1.len() > a.len());
+        assert_eq!(t1[..a.len()], a[..]);
+        // Lengths match the trace and ids stay in vocab.
+        let trace = g.generate();
+        for (i, r) in trace.iter().enumerate() {
+            let toks = g.prompt_tokens(i, 2048);
+            assert_eq!(toks.len(), r.prompt_tokens, "request {i}");
+            assert!(toks.iter().all(|&t| (0..2048).contains(&t)));
         }
     }
 

@@ -1,0 +1,237 @@
+//! Cluster-tier integration tests: cross-replica determinism, the
+//! randomized router harness (acceptance: bursty multi-tenant load over a
+//! heterogeneous fleet loses and duplicates nothing, and per-replica
+//! queue accounting drains to zero), and a live `serve_cluster` TCP
+//! round-trip with the merged fleet stats probe.
+
+use std::sync::mpsc;
+use std::thread;
+
+use turbomind::cluster::{
+    run_fleet, Cluster, ClusterConfig, ReplicaSpec, RouterPolicy,
+};
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, FinishReason, Request};
+use turbomind::server::{serve_cluster, Client};
+use turbomind::util::proptest::{run_prop, Gen};
+use turbomind::workload::MultiTenantGen;
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig {
+        precision: "W4A16KV8".parse().unwrap(),
+        kv_pool_tokens: 16 * 64,
+        prefill_chunk: 32,
+        ..EngineConfig::default()
+    }
+}
+
+/// Same request + same precision ⇒ bit-identical tokens on every replica,
+/// and identical to a standalone engine of the same config — routing is a
+/// performance decision, never a correctness one. Devices may differ:
+/// the profile only scales modeled time.
+#[test]
+fn cross_replica_determinism_same_precision_any_replica() {
+    let specs: Vec<ReplicaSpec> = vec![
+        "w4a16,kv8,a100".parse().unwrap(),
+        "w4a16,kv8,h100".parse().unwrap(), // different device, same format
+        "w4a16,kv8,a100".parse().unwrap(),
+    ];
+    let cfg = ClusterConfig::heterogeneous(base_cfg(), specs, RouterPolicy::RoundRobin);
+    let cluster = Cluster::start(cfg).unwrap();
+
+    let prompt: Vec<i32> = (0..50).map(|j| (j * 13 + 7) % 2048).collect();
+    let mut replies = Vec::new();
+    for i in 0..3 {
+        let (tx, rx) = mpsc::channel();
+        cluster.dispatch_to(i, Request::new(prompt.clone(), 8), tx).unwrap();
+        replies.push(rx);
+    }
+    let outs: Vec<_> = replies.iter().map(|rx| rx.recv().unwrap()).collect();
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.tokens.len(), 8);
+    }
+    assert_eq!(outs[0].tokens, outs[1].tokens, "replica 0 vs 1 (A100 vs H100)");
+    assert_eq!(outs[0].tokens, outs[2].tokens, "replica 0 vs 2");
+
+    // …and a standalone engine of the same config decodes the same.
+    let mut reference = Engine::new(base_cfg()).unwrap();
+    reference.submit(Request::new(prompt, 8)).unwrap();
+    let ref_out = reference.run_to_completion().unwrap().remove(0);
+    assert_eq!(ref_out.tokens, outs[0].tokens, "cluster vs single engine");
+
+    for snap in cluster.shutdown().unwrap() {
+        assert_eq!(snap.completed, 1);
+        assert_eq!((snap.outstanding_reqs, snap.outstanding_tokens), (0, 0));
+    }
+}
+
+/// The offline runner and the live threaded cluster agree token-for-token
+/// under prefix_affinity — the bench's closed-loop numbers describe the
+/// same fleet `serve_cluster` runs.
+#[test]
+fn offline_and_live_cluster_agree_on_outputs() {
+    let g = MultiTenantGen {
+        tenants: 2,
+        users: 2,
+        turns: 2,
+        shared_tokens: 64,
+        turn_tokens: 8,
+        gen_tokens: 5,
+        rate: 10.0,
+        seed: 77,
+    };
+    let reqs: Vec<Request> = g
+        .generate()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request::new(g.prompt_tokens(i, 2048), r.gen_tokens))
+        .collect();
+    let mut cfg = ClusterConfig::homogeneous(base_cfg(), 2, RouterPolicy::PrefixAffinity);
+    cfg.base.enable_prefix_cache = true;
+
+    let offline = run_fleet(&cfg, &reqs).unwrap();
+    assert_eq!(offline.completed(), reqs.len());
+
+    let mut live = Cluster::start(cfg).unwrap();
+    let mut replies = Vec::new();
+    for (gi, req) in reqs.iter().enumerate() {
+        let (idx, rx) = live.submit(req.clone()).unwrap();
+        assert_eq!(idx, offline.assignments[gi], "policy must route identically");
+        replies.push(rx);
+    }
+    for (gi, rx) in replies.iter().enumerate() {
+        let out = rx.recv().unwrap();
+        assert_eq!(
+            out.tokens, offline.outputs[gi].output.tokens,
+            "request {gi}: live tokens diverge from offline run"
+        );
+    }
+    live.shutdown().unwrap();
+}
+
+/// Acceptance (b): randomized bursty multi-tenant traffic over random
+/// fleets (homogeneous and heterogeneous, all three policies, tight
+/// bounded inboxes for real backpressure) — every request is answered
+/// exactly once, and at drain every replica's queue accounting returns to
+/// zero with the pool empty except for intentionally-resident prefix
+/// blocks.
+#[test]
+fn randomized_router_harness_no_loss_no_dup_drains_to_zero() {
+    run_prop("router-harness", 0x2007_C1A5, 10, |g: &mut Gen| {
+        let n_replicas = g.usize_in(1, 3);
+        let policy = *g.choose(&[
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+        ]);
+        let spec_pool = ["w4a16,kv8,a100", "w8a8,kv16,h100", "w4a16,kv4,l40s"];
+        let specs: Vec<ReplicaSpec> = (0..n_replicas)
+            .map(|_| g.choose(&spec_pool).parse().unwrap())
+            .collect();
+        let mut base = base_cfg();
+        base.enable_prefix_cache = g.bool();
+        base.preemption_mode = *g.choose(&[
+            turbomind::config::PreemptionMode::Abort,
+            turbomind::config::PreemptionMode::Swap,
+            turbomind::config::PreemptionMode::Recompute,
+        ]);
+        let mut cfg = ClusterConfig::heterogeneous(base, specs, policy);
+        cfg.queue_depth = g.usize_in(2, 8); // tight: dispatch must block
+
+        let mut cluster = Cluster::start(cfg).unwrap();
+        let n_requests = g.usize_in(8, 24);
+        // A few shared tenant prefixes + per-request random suffixes: the
+        // multi-tenant mix, bursty because everything submits at once.
+        let n_tenants = g.usize_in(1, 4);
+        let tenant_prefix: Vec<Vec<i32>> = (0..n_tenants)
+            .map(|t| (0..32).map(|j| ((t * 531 + j * 17 + 11) % 2048) as i32).collect())
+            .collect();
+        let mut replies = Vec::new();
+        for _ in 0..n_requests {
+            let mut prompt = tenant_prefix[g.usize_in(0, n_tenants - 1)].clone();
+            let extra = g.usize_in(1, 40);
+            for _ in 0..extra {
+                prompt.push(g.usize_in(0, 2047) as i32);
+            }
+            let max_new = g.usize_in(1, 8);
+            let (_, rx) = cluster.submit(Request::new(prompt, max_new)).unwrap();
+            replies.push(rx);
+        }
+        // Every request answered exactly once: one output per receiver…
+        let mut answered = 0usize;
+        for rx in &replies {
+            let out = rx.recv().expect("request lost");
+            assert!(out.tokens.len() <= 8);
+            answered += 1;
+            // …and no duplicate reply ever arrives.
+            assert!(
+                rx.try_recv().is_err(),
+                "duplicate reply for a single request"
+            );
+        }
+        assert_eq!(answered, n_requests);
+
+        let snaps = cluster.shutdown().unwrap();
+        let completed: usize = snaps.iter().map(|s| s.completed).sum();
+        assert_eq!(completed, n_requests, "per-replica completions must sum up");
+        for s in &snaps {
+            assert_eq!(
+                (s.outstanding_reqs, s.outstanding_tokens),
+                (0, 0),
+                "replica {} queue accounting must drain to zero",
+                s.id
+            );
+            assert_eq!(
+                s.pool_total_blocks - s.pool_free_blocks,
+                s.prefix_resident_blocks,
+                "replica {}: pool holds only intentional prefix residency",
+                s.id
+            );
+        }
+    });
+}
+
+/// Live TCP round-trip through `serve_cluster`: concurrent clients over a
+/// heterogeneous 2-replica fleet, responses per protocol, and the
+/// `{"stats": true}` probe answering the merged fleet line (which rides
+/// free on the `--max-requests` budget, like the single-engine server).
+#[test]
+fn serve_cluster_tcp_round_trip_with_fleet_stats() {
+    let specs: Vec<ReplicaSpec> =
+        vec!["w4a16,kv8,a100".parse().unwrap(), "w8a8,kv16,h100".parse().unwrap()];
+    let cfg = ClusterConfig::heterogeneous(base_cfg(), specs, RouterPolicy::RoundRobin);
+    let cluster = Cluster::start(cfg).unwrap();
+    let addr = "127.0.0.1:7397";
+
+    let mk_client = |tag: i32, probe: bool| {
+        thread::spawn(move || {
+            let mut client = loop {
+                match Client::connect(addr) {
+                    Ok(cl) => break cl,
+                    Err(_) => thread::sleep(std::time::Duration::from_millis(30)),
+                }
+            };
+            let prompt: Vec<i32> = (0..20).map(|j| (tag * 97 + j) % 2048).collect();
+            let r1 = client.generate(&prompt, 4).unwrap();
+            assert_eq!(r1.req_str("finish").unwrap(), "length");
+            assert_eq!(r1.req_arr("tokens").unwrap().len(), 4);
+            assert!(r1.get("latency_sim_s").unwrap().as_f64().unwrap() > 0.0);
+            if probe {
+                let stats = client.stats().unwrap();
+                assert_eq!(stats.get("cluster").unwrap().as_bool(), Some(true));
+                assert_eq!(stats.req_usize("replicas").unwrap(), 2);
+                assert_eq!(stats.req_str("policy").unwrap(), "round_robin");
+                assert_eq!(stats.req_arr("per_replica").unwrap().len(), 2);
+                assert!(stats.req_usize("completed_requests").unwrap() >= 1);
+            }
+            let r2 = client.generate(&prompt, 4).unwrap();
+            assert_eq!(r2.req_str("finish").unwrap(), "length");
+        })
+    };
+    let h1 = mk_client(1, true);
+    let h2 = mk_client(2, false);
+    serve_cluster(cluster, addr, Some(4)).unwrap();
+    h1.join().unwrap();
+    h2.join().unwrap();
+}

@@ -170,9 +170,67 @@ fn prefix_hit_tokens_and_stats_round_trip_over_tcp() {
         let free = stats.req_usize("pool_blocks_free").unwrap();
         assert_eq!(total - free, 4, "4 prefix blocks resident");
         assert!(stats.get("pool_utilization").unwrap().as_f64().unwrap() > 0.0);
+        // Completed-request percentiles ride on the same probe line.
+        assert_eq!(stats.req_usize("completed_requests").unwrap(), 2);
+        assert!(stats.get("latency_p95_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stats.get("ttft_p50_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stats.get("tpot_p99_s").unwrap().as_f64().unwrap() > 0.0);
+
+        // A third generation after the probe: with `--max-requests 3`
+        // the probe must NOT have eaten the budget (regression for the
+        // probes-burn-shutdown-budget bug).
+        let r3 = client.generate(&prompt, 4).unwrap();
+        assert_eq!(r3.req_usize("prefix_hit_tokens").unwrap(), 64);
     });
-    // Two generations + one stats probe.
+    // Three generations; the stats probe rides for free.
     serve(engine, addr, Some(3)).unwrap();
+    h.join().unwrap();
+}
+
+#[test]
+fn probes_garbage_and_extra_connections_do_not_burn_shutdown_budget() {
+    // Regression: the accept loop used to cap *connections* and the serve
+    // loop counted stats probes, so `{"stats": true}` monitors and idle
+    // connections starved a bounded run. Now only completed generation
+    // requests count toward `--max-requests`.
+    let engine = Engine::new(cfg()).unwrap();
+    let addr = "127.0.0.1:7395";
+    let h = thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        let connect = || loop {
+            match std::net::TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) => thread::sleep(std::time::Duration::from_millis(30)),
+            }
+        };
+        // Two extra connections that send no generation work: an idle one
+        // and a monitoring probe (old code: these two alone exhausted the
+        // accept budget of a 2-request run).
+        let _idle = connect();
+        let mut probe = Client::connect(addr).unwrap();
+        assert_eq!(probe.stats().unwrap().req_usize("completed_requests").unwrap(), 0);
+
+        // The real client on a third connection: garbage, a probe, and
+        // two generations — all on one stream.
+        let mut stream = connect();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        let mut roundtrip = |req: &str, line: &mut String| {
+            stream.write_all(req.as_bytes()).unwrap();
+            line.clear();
+            reader.read_line(line).unwrap();
+        };
+        roundtrip("garbage\n", &mut line);
+        assert!(line.contains("error"), "{line}");
+        roundtrip("{\"stats\": true}\n", &mut line);
+        assert!(line.contains("pool_blocks_total"), "{line}");
+        roundtrip("{\"prompt\": [1, 2, 3], \"max_new_tokens\": 2}\n", &mut line);
+        assert!(line.contains("length"), "{line}");
+        roundtrip("{\"prompt\": [4, 5, 6], \"max_new_tokens\": 2}\n", &mut line);
+        assert!(line.contains("length"), "{line}");
+    });
+    // Exactly the two generations end the run — everything else is free.
+    serve(engine, addr, Some(2)).unwrap();
     h.join().unwrap();
 }
 
