@@ -32,6 +32,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("prefix_cache", serving_figures::fig_prefix),
         ("preempt", serving_figures::fig_preempt),
         ("router", serving_figures::fig_router),
+        ("ladder", serving_figures::fig_ladder),
     ]
 }
 

@@ -6,7 +6,8 @@
 //! each replica serves the format its hardware likes, and a router above
 //! them spreads traffic. This module is that tier:
 //!
-//! * [`ReplicaSpec`] — per-replica `(PrecisionFormat, DeviceProfile, tp)`;
+//! * [`ReplicaSpec`] — per-replica `(PrecisionFormat, DeviceProfile, tp)`
+//!   plus optional per-layer KV layout / ladder-policy overrides;
 //! * [`ReplicaHandle`] — one engine per replica on its own thread behind a
 //!   bounded inbox (backpressure at the router boundary);
 //! * [`Router`] / [`RouterPolicy`] — `round_robin`, `least_loaded` (by
@@ -67,6 +68,8 @@ impl ClusterConfig {
             precision: base.precision,
             device: base.device.clone(),
             tp: base.tp,
+            kv_layout: None,
+            ladder: None,
         };
         Self {
             base,

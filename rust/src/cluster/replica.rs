@@ -23,7 +23,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::stats::ReplicaSnapshot;
-use crate::config::{DeviceProfile, EngineConfig, PrecisionFormat};
+use crate::config::{DeviceProfile, EngineConfig, LadderPolicy, PrecisionFormat};
 use crate::coordinator::{Engine, Request, RequestOutput};
 use crate::metrics::MetricsCollector;
 
@@ -36,11 +36,19 @@ pub struct ReplicaSpec {
     pub precision: PrecisionFormat,
     pub device: String,
     pub tp: usize,
+    /// Optional per-layer KV admission layout for this replica
+    /// (`EngineConfig::kv_layout`). The CLI segment uses `;` between
+    /// layers — `layout=l0:kv16;l1:kv8` — because the spec itself splits
+    /// on `,`; it is stored here in the engine's `,`-joined form.
+    pub kv_layout: Option<String>,
+    /// Optional per-replica ladder policy (`ladder=auto`); `None`
+    /// inherits the base config's policy.
+    pub ladder: Option<LadderPolicy>,
 }
 
 impl ReplicaSpec {
     pub fn new(precision: PrecisionFormat, device: &str) -> Self {
-        Self { precision, device: device.to_string(), tp: 1 }
+        Self { precision, device: device.to_string(), tp: 1, kv_layout: None, ladder: None }
     }
 
     /// The replica identity string: `W4A16KV8@A100` (plus `/tp2` when
@@ -53,12 +61,16 @@ impl ReplicaSpec {
         }
     }
 
-    /// Specialize a base engine config to this replica.
+    /// Specialize a base engine config to this replica. Layout and ladder
+    /// fall back to the base config when the spec leaves them unset, so a
+    /// fleet-wide `--kv-ladder auto` still reaches every replica.
     pub fn engine_config(&self, base: &EngineConfig) -> EngineConfig {
         EngineConfig {
             precision: self.precision,
             device: self.device.clone(),
             tp: self.tp,
+            kv_layout: self.kv_layout.clone().or_else(|| base.kv_layout.clone()),
+            ladder_policy: self.ladder.unwrap_or(base.ladder_policy),
             ..base.clone()
         }
     }
@@ -67,14 +79,18 @@ impl ReplicaSpec {
 impl std::str::FromStr for ReplicaSpec {
     type Err = String;
 
-    /// Parse the CLI form `fmt,kv,device[,tpN]` — e.g. `w4a16,kv8,a100`
-    /// or `w8a8,kv16,h100,tp2`. The first two fields concatenate into the
-    /// usual `WxAyKVz` precision notation.
+    /// Parse the CLI form `fmt,kv,device[,tpN][,layout=…][,ladder=…]` —
+    /// e.g. `w4a16,kv8,a100`, `w8a8,kv16,h100,tp2`, or
+    /// `w4a16,kv8,a100,layout=l0:kv16;l1:kv8,ladder=auto` (the layout
+    /// segment separates layers with `;` since the spec splits on `,`).
+    /// The first two fields concatenate into the usual `WxAyKVz`
+    /// precision notation.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         let parts: Vec<&str> = s.split(',').map(str::trim).collect();
-        if parts.len() < 3 || parts.len() > 4 {
+        if parts.len() < 3 {
             return Err(format!(
-                "replica spec `{s}` must be `fmt,kv,device[,tpN]` (e.g. `w4a16,kv8,a100`)"
+                "replica spec `{s}` must be `fmt,kv,device[,tpN][,layout=…][,ladder=…]` \
+                 (e.g. `w4a16,kv8,a100`)"
             ));
         }
         let precision: PrecisionFormat = format!("{}{}", parts[0], parts[1])
@@ -84,15 +100,28 @@ impl std::str::FromStr for ReplicaSpec {
             .ok_or_else(|| format!("unknown device `{}` in replica spec `{s}`", parts[2]))?
             .name
             .to_string();
-        let tp = match parts.get(3) {
-            None => 1,
-            Some(t) => t
-                .strip_prefix("tp")
-                .and_then(|n| n.parse::<usize>().ok())
-                .filter(|n| n.is_power_of_two())
-                .ok_or_else(|| format!("bad tp field `{t}` in replica spec `{s}`"))?,
-        };
-        Ok(Self { precision, device, tp })
+        let mut tp = 1;
+        let mut kv_layout = None;
+        let mut ladder = None;
+        for t in &parts[3..] {
+            if let Some(spec) = t.strip_prefix("layout=") {
+                if spec.is_empty() {
+                    return Err(format!("empty layout field in replica spec `{s}`"));
+                }
+                kv_layout = Some(spec.replace(';', ","));
+            } else if let Some(pol) = t.strip_prefix("ladder=") {
+                ladder = Some(pol.parse::<LadderPolicy>().map_err(|e| format!("{e}"))?);
+            } else if let Some(n) = t.strip_prefix("tp") {
+                tp = n
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|n| n.is_power_of_two())
+                    .ok_or_else(|| format!("bad tp field `{t}` in replica spec `{s}`"))?;
+            } else {
+                return Err(format!("unknown field `{t}` in replica spec `{s}`"));
+            }
+        }
+        Ok(Self { precision, device, tp, kv_layout, ladder })
     }
 }
 
@@ -385,10 +414,24 @@ mod tests {
         assert_eq!(s.tp, 2);
         assert_eq!(s.label(), "W8A8KV16@H100/tp2");
 
+        let s: ReplicaSpec =
+            "w4a16,kv8,a100,layout=l0:kv16;l1:kv8,ladder=auto".parse().unwrap();
+        assert_eq!(s.kv_layout.as_deref(), Some("l0:kv16,l1:kv8"), "`;` becomes `,`");
+        assert_eq!(s.ladder, Some(LadderPolicy::Auto));
+        assert_eq!(s.tp, 1);
+
+        let s: ReplicaSpec = "w8a8,kv16,h100,tp2,ladder=off".parse().unwrap();
+        assert_eq!(s.ladder, Some(LadderPolicy::Off));
+        assert_eq!(s.tp, 2);
+        assert!(s.kv_layout.is_none());
+
         assert!("w4a16,kv8".parse::<ReplicaSpec>().is_err(), "missing device");
         assert!("w4a16,kv8,b200".parse::<ReplicaSpec>().is_err(), "unknown device");
         assert!("w4a16,kv8,a100,tp3".parse::<ReplicaSpec>().is_err(), "non-pow2 tp");
         assert!("w3a16,kv8,a100".parse::<ReplicaSpec>().is_err(), "bad precision");
+        assert!("w4a16,kv8,a100,layout=".parse::<ReplicaSpec>().is_err(), "empty layout");
+        assert!("w4a16,kv8,a100,ladder=up".parse::<ReplicaSpec>().is_err(), "bad ladder");
+        assert!("w4a16,kv8,a100,bogus".parse::<ReplicaSpec>().is_err(), "unknown field");
     }
 
     #[test]
@@ -399,7 +442,33 @@ mod tests {
         assert_eq!(cfg.precision.to_string(), "W8A8KV16");
         assert_eq!(cfg.device, "H100");
         assert_eq!(cfg.kv_pool_tokens, 16 * 64, "base knobs survive");
+        assert!(cfg.kv_layout.is_none());
+        assert_eq!(cfg.ladder_policy, LadderPolicy::Off);
         cfg.validate().unwrap();
+
+        // Spec-level layout/ladder override the base…
+        let spec: ReplicaSpec =
+            "w8a8,kv16,h100,layout=l0:kv16;l1:kv8,ladder=auto".parse().unwrap();
+        let base = EngineConfig {
+            preemption_mode: crate::config::PreemptionMode::Swap,
+            ..EngineConfig::default()
+        };
+        let cfg = spec.engine_config(&base);
+        assert_eq!(cfg.kv_layout.as_deref(), Some("l0:kv16,l1:kv8"));
+        assert_eq!(cfg.ladder_policy, LadderPolicy::Auto);
+        cfg.validate().unwrap();
+
+        // …and an unset spec inherits a fleet-wide base policy.
+        let spec: ReplicaSpec = "w8a8,kv16,h100".parse().unwrap();
+        let base = EngineConfig {
+            kv_layout: Some("kv8".into()),
+            ladder_policy: LadderPolicy::Auto,
+            preemption_mode: crate::config::PreemptionMode::Ladder,
+            ..EngineConfig::default()
+        };
+        let cfg = spec.engine_config(&base);
+        assert_eq!(cfg.kv_layout.as_deref(), Some("kv8"));
+        assert_eq!(cfg.ladder_policy, LadderPolicy::Auto);
     }
 
     #[test]

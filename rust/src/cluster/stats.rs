@@ -22,6 +22,10 @@ pub struct ReplicaSnapshot {
     pub id: usize,
     /// Human-readable identity, e.g. `W4A16KV8@A100`.
     pub label: String,
+    /// The pool's *current* per-layer KV layout (`kv16` or
+    /// `l0:kv16,l1:kv8,…`) — under auto laddering this can be narrower
+    /// than the admission layout the replica spec configured.
+    pub kv_layout: String,
     /// Generation requests this replica *answered* (aborted and rejected
     /// answers included, so per-replica sums equal the requests routed
     /// in; filter on `FinishReason` for success counts, as
@@ -58,6 +62,7 @@ impl ReplicaSnapshot {
         Self {
             id,
             label: label.to_string(),
+            kv_layout: engine.kv_pool().layout().to_string(),
             completed,
             outstanding_reqs,
             outstanding_tokens,
@@ -86,6 +91,7 @@ impl ReplicaSnapshot {
         obj([
             ("id", Json::from(self.id)),
             ("label", Json::from(self.label.as_str())),
+            ("kv_layout", Json::from(self.kv_layout.as_str())),
             ("completed", Json::from(self.completed)),
             ("outstanding_reqs", Json::from(self.outstanding_reqs)),
             ("outstanding_tokens", Json::from(self.outstanding_tokens)),
@@ -95,6 +101,9 @@ impl ReplicaSnapshot {
             ("prefill_tokens_skipped", Json::from(p.prefill_tokens_skipped)),
             ("tokens_generated", Json::from(self.stats.tokens_generated)),
             ("preemptions", Json::from(self.preempt.preemptions)),
+            ("ladder_events", Json::from(self.preempt.ladder_events)),
+            ("ladder_preemptions", Json::from(self.preempt.ladder_preemptions)),
+            ("ladder_freed_bytes", Json::from(self.preempt.ladder_freed_bytes)),
             ("oom_aborts", Json::from(self.preempt.oom_aborts)),
             ("sim_time_s", Json::from(self.stats.sim_time_s)),
         ])
@@ -181,6 +190,27 @@ impl ClusterStats {
                 ),
             ),
             (
+                "fleet_ladder_events",
+                Json::from(
+                    self.replicas.iter().map(|r| r.preempt.ladder_events).sum::<usize>(),
+                ),
+            ),
+            (
+                "fleet_ladder_transcoded_bytes",
+                Json::from(
+                    self.replicas
+                        .iter()
+                        .map(|r| r.preempt.ladder_transcoded_bytes)
+                        .sum::<usize>(),
+                ),
+            ),
+            (
+                "fleet_ladder_freed_bytes",
+                Json::from(
+                    self.replicas.iter().map(|r| r.preempt.ladder_freed_bytes).sum::<usize>(),
+                ),
+            ),
+            (
                 "fleet_oom_aborts",
                 Json::from(self.replicas.iter().map(|r| r.preempt.oom_aborts).sum::<usize>()),
             ),
@@ -254,6 +284,11 @@ mod tests {
         assert_eq!(r0.req_str("label").unwrap(), "W4A16KV8@A100");
         assert_eq!(r0.req_usize("completed").unwrap(), 3);
         assert_eq!(r0.req_usize("outstanding_tokens").unwrap(), 40);
+        // Default engine: uniform kv8 admission layout, no ladder events.
+        assert_eq!(r0.req_str("kv_layout").unwrap(), "kv8");
+        assert_eq!(r0.req_usize("ladder_events").unwrap(), 0);
+        assert_eq!(parsed.req_usize("fleet_ladder_events").unwrap(), 0);
+        assert_eq!(parsed.req_usize("fleet_ladder_freed_bytes").unwrap(), 0);
     }
 
 }

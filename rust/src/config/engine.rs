@@ -55,6 +55,12 @@ pub enum PreemptionMode {
     /// Release the victim's blocks and re-prefill its prompt + generated
     /// prefix on resume (cheap for short or prefix-cached sequences).
     Recompute,
+    /// Before swapping or recomputing, try to *ladder* the whole pool down
+    /// one precision rung (in-place transcode of every resident block, e.g.
+    /// kv16 → one layer at kv8), freeing capacity without any eviction.
+    /// Falls back to swap-or-recompute pricing once the ladder is exhausted
+    /// (all layers already kv4) or the rung would not free enough.
+    Ladder,
 }
 
 impl std::str::FromStr for PreemptionMode {
@@ -65,8 +71,9 @@ impl std::str::FromStr for PreemptionMode {
             "abort" => Ok(PreemptionMode::Abort),
             "swap" => Ok(PreemptionMode::Swap),
             "recompute" => Ok(PreemptionMode::Recompute),
+            "ladder" => Ok(PreemptionMode::Ladder),
             other => Err(format!(
-                "unknown preemption mode `{other}` (expected `abort`, `swap`, or `recompute`)"
+                "unknown preemption mode `{other}` (expected `abort`, `swap`, `recompute`, or `ladder`)"
             )),
         }
     }
@@ -78,6 +85,42 @@ impl std::fmt::Display for PreemptionMode {
             PreemptionMode::Abort => "abort",
             PreemptionMode::Swap => "swap",
             PreemptionMode::Recompute => "recompute",
+            PreemptionMode::Ladder => "ladder",
+        })
+    }
+}
+
+/// Whether the engine may ladder the pool's per-layer KV precision down
+/// under memory pressure (`--kv-ladder`). Separate from [`PreemptionMode`]
+/// so `ladder` preemption can be requested while the policy stays `Off`
+/// (it then degenerates to swap pricing — useful as an ablation control).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LadderPolicy {
+    /// Never transcode; the admission layout is final.
+    #[default]
+    Off,
+    /// Ladder the least-important still-wide layer down one rung whenever
+    /// the preemption cost model prices it below eviction.
+    Auto,
+}
+
+impl std::str::FromStr for LadderPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Ok(LadderPolicy::Off),
+            "auto" => Ok(LadderPolicy::Auto),
+            other => Err(format!("unknown ladder policy `{other}` (expected `off` or `auto`)")),
+        }
+    }
+}
+
+impl std::fmt::Display for LadderPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            LadderPolicy::Off => "off",
+            LadderPolicy::Auto => "auto",
         })
     }
 }
@@ -134,6 +177,13 @@ pub struct EngineConfig {
     /// in `PreemptionMode::Swap`; a victim that would overflow the budget
     /// is recomputed instead.
     pub swap_budget_blocks: usize,
+    /// Per-layer KV admission layout, e.g. `l0:kv16,l1:kv8,...` or a
+    /// uniform `kv8`. `None` derives a uniform layout from
+    /// `precision.kv` (the pre-layout behavior). Parsed against the model's
+    /// layer count by the engine at construction.
+    pub kv_layout: Option<String>,
+    /// In-place precision-laddering policy (see [`LadderPolicy`]).
+    pub ladder_policy: LadderPolicy,
 }
 
 /// Iteration-level scheduling policy (§5 serving comparisons; the
@@ -168,6 +218,8 @@ impl Default for EngineConfig {
             prefix_cache_blocks: 0,
             preemption_mode: PreemptionMode::Abort,
             swap_budget_blocks: 0,
+            kv_layout: None,
+            ladder_policy: LadderPolicy::Off,
         }
     }
 }
@@ -214,6 +266,19 @@ impl EngineConfig {
                 self.kv_pool_tokens / self.kv_block_tokens
             ));
         }
+        if let Some(spec) = &self.kv_layout {
+            if spec.trim().is_empty() {
+                return Err("kv_layout must not be empty (omit the flag for the default)".into());
+            }
+        }
+        if self.ladder_policy == LadderPolicy::Auto && self.preemption_mode == PreemptionMode::Abort
+        {
+            return Err(
+                "ladder_policy auto requires a lossless preemption mode (swap, recompute, or \
+                 ladder) — abort would discard the victims laddering is meant to save"
+                    .into(),
+            );
+        }
         Ok(())
     }
 }
@@ -234,9 +299,32 @@ mod tests {
         assert_eq!("abort".parse::<PreemptionMode>().unwrap(), PreemptionMode::Abort);
         assert_eq!("Swap".parse::<PreemptionMode>().unwrap(), PreemptionMode::Swap);
         assert_eq!("RECOMPUTE".parse::<PreemptionMode>().unwrap(), PreemptionMode::Recompute);
+        assert_eq!("ladder".parse::<PreemptionMode>().unwrap(), PreemptionMode::Ladder);
         assert!("drop".parse::<PreemptionMode>().is_err());
         assert_eq!(PreemptionMode::Swap.to_string(), "swap");
+        assert_eq!(PreemptionMode::Ladder.to_string(), "ladder");
         assert_eq!(PreemptionMode::default(), PreemptionMode::Abort, "legacy default");
+    }
+
+    #[test]
+    fn ladder_policy_parses_and_validates() {
+        assert_eq!("off".parse::<LadderPolicy>().unwrap(), LadderPolicy::Off);
+        assert_eq!("AUTO".parse::<LadderPolicy>().unwrap(), LadderPolicy::Auto);
+        assert!("always".parse::<LadderPolicy>().is_err());
+        assert_eq!(LadderPolicy::Auto.to_string(), "auto");
+        assert_eq!(LadderPolicy::default(), LadderPolicy::Off);
+
+        let mut c = EngineConfig::default();
+        c.ladder_policy = LadderPolicy::Auto;
+        assert!(c.validate().is_err(), "auto laddering atop abort preemption is rejected");
+        c.preemption_mode = PreemptionMode::Ladder;
+        c.validate().unwrap();
+
+        let mut c = EngineConfig::default();
+        c.kv_layout = Some("  ".into());
+        assert!(c.validate().is_err(), "blank layout spec rejected");
+        c.kv_layout = Some("l0:kv16,l1:kv8".into());
+        c.validate().unwrap();
     }
 
     #[test]

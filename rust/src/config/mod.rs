@@ -11,6 +11,6 @@ pub mod model;
 pub mod precision;
 
 pub use device::{DeviceProfile, GpuArch};
-pub use engine::{BackendKind, EngineConfig, PreemptionMode};
-pub use model::{model_zoo, ModelConfig};
+pub use engine::{BackendKind, EngineConfig, LadderPolicy, PreemptionMode};
+pub use model::{layer_importance, model_zoo, ModelConfig};
 pub use precision::{DType, PrecisionFormat};

@@ -135,6 +135,22 @@ impl ModelConfig {
     pub fn is_moe(&self) -> bool {
         self.n_experts > 1
     }
+
+    /// Static per-layer KV importance in `(0, 1]`, used by the precision
+    /// ladder to pick which layer to downgrade next (least important first).
+    /// Early layers feed every later one, so importance decays linearly with
+    /// depth: `imp[l] = (n - l) / n`. Deliberately a static prior — the
+    /// ladder only needs an *ordering*, and a deterministic one keeps
+    /// restarted generations bit-identical.
+    pub fn layer_importance(&self) -> Vec<f64> {
+        layer_importance(self.n_layers)
+    }
+}
+
+/// See [`ModelConfig::layer_importance`].
+pub fn layer_importance(n_layers: usize) -> Vec<f64> {
+    let n = n_layers.max(1) as f64;
+    (0..n_layers).map(|l| (n - l as f64) / n).collect()
 }
 
 /// The 16-model evaluation zoo of §5.1 / Fig 15, with true architecture
@@ -241,6 +257,16 @@ mod tests {
     fn moe_flagged() {
         assert!(find_model("mixtral-8x22b").unwrap().is_moe());
         assert!(!find_model("qwen3-8b").unwrap().is_moe());
+    }
+
+    #[test]
+    fn layer_importance_is_monotone_decreasing() {
+        let imp = ModelConfig::tiny().layer_importance();
+        assert_eq!(imp.len(), 4);
+        assert!(imp.windows(2).all(|w| w[0] > w[1]), "{imp:?}");
+        assert!((imp[0] - 1.0).abs() < 1e-12, "first layer most important");
+        assert!(imp[3] > 0.0, "importance stays positive");
+        assert!(layer_importance(0).is_empty());
     }
 
     #[test]

@@ -19,13 +19,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::preempt::{PreemptMechanism, VictimCost};
+use super::preempt::{LadderCost, PreemptMechanism, VictimCost, HBM_BANDWIDTH_BPS};
 use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
 use super::sampler::Sampler;
 use super::scheduler::{Action, Scheduler};
-use crate::config::{BackendKind, EngineConfig, PreemptionMode};
+use crate::config::{layer_importance, BackendKind, EngineConfig, LadderPolicy, PreemptionMode};
 use crate::kvcache::swap::transfer_time_s;
-use crate::kvcache::{KvPool, KvPrecision, PrefixCache, SeqHandle, SwapStore};
+use crate::kvcache::{KvLayout, KvPool, PrefixCache, SeqHandle, SwapStore};
 use crate::metrics::{PreemptionSummary, PrefixCacheSummary};
 use crate::runtime::{
     DecodeArgs, ExecutionBackend, ModelSpec, PrefillArgs, SimBackend, StepOutputs,
@@ -80,6 +80,21 @@ pub struct PreemptStats {
     /// Tokens queued for re-prefill by recompute preemptions (prefix-cache
     /// hits at resume may serve part of them without running).
     pub recomputed_tokens: usize,
+    /// Victims preserved by a pool-wide precision-ladder rung: sequences
+    /// that had started generating and were restarted at the narrower
+    /// layout (the per-mechanism buckets sum to `preemptions`:
+    /// swap + recompute + ladder).
+    pub ladder_preemptions: usize,
+    /// Pool-wide ladder rungs taken (each transcodes every resident block).
+    pub ladder_events: usize,
+    /// Modeled HBM read+write traffic of all ladder transcodes, bytes.
+    pub ladder_transcoded_bytes: usize,
+    /// Pool capacity gained by laddering: newly affordable blocks at the
+    /// post-rung layout, in bytes.
+    pub ladder_freed_bytes: usize,
+    /// Generated tokens dropped by ladder restarts (regenerated at the
+    /// final layout — the determinism contract's re-decode cost).
+    pub ladder_dropped_tokens: usize,
     /// Sequences lost to pool exhaustion (abort mode, or a sole runner no
     /// preemption could save).
     pub oom_aborts: usize,
@@ -161,20 +176,23 @@ impl Engine {
         if plan.prefill_chunks.is_empty() {
             bail!("backend plan has no prefill chunks");
         }
-        let kv_prec = KvPrecision::from_dtype(cfg.precision.kv)?;
-        let pool = KvPool::new(
-            kv_prec,
-            m.n_layers,
+        let layout = match cfg.kv_layout.as_deref() {
+            Some(spec) => KvLayout::parse(spec, m.n_layers)?,
+            None => KvLayout::from_dtype(cfg.precision.kv, m.n_layers)?,
+        };
+        let pool = KvPool::with_layout(
+            layout.clone(),
             m.n_kv_heads,
             m.head_dim,
             cfg.kv_block_tokens,
             cfg.kv_pool_tokens,
         )?;
-        // The index is keyed by the pool's KV precision, so a kv8 engine's
-        // cached blocks can never satisfy a kv4 lookup (and vice versa).
+        // The index is keyed by the pool's full per-layer layout, so an
+        // engine's cached blocks can never satisfy a lookup at any other
+        // precision assignment (and every ladder rung re-keys the root).
         let prefix = cfg
             .enable_prefix_cache
-            .then(|| PrefixCache::new(kv_prec, cfg.kv_block_tokens, cfg.prefix_cache_blocks));
+            .then(|| PrefixCache::with_layout(layout, cfg.kv_block_tokens, cfg.prefix_cache_blocks));
         let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
         let rng = crate::util::rng::Rng::new(cfg.seed);
         let swap = SwapStore::new(cfg.kv_block_tokens, cfg.swap_budget_blocks);
@@ -451,7 +469,11 @@ impl Engine {
         match self.cfg.preemption_mode {
             PreemptionMode::Abort => unreachable!("abort mode never preempts"),
             PreemptionMode::Recompute => PreemptMechanism::Recompute,
-            PreemptionMode::Swap => {
+            // Ladder mode's rung fires *before* victim selection
+            // (`try_ladder`); once the ladder is exhausted it degrades to
+            // the adaptive swap policy for the victims it can no longer
+            // save, so the mechanism choice below is shared.
+            PreemptionMode::Swap | PreemptionMode::Ladder => {
                 let h = self.seqs[&id].handle.expect("victim has a handle");
                 match cost.preferred() {
                     PreemptMechanism::Swap if !self.swap.can_hold(self.pool.seq_len(h)) => {
@@ -486,9 +508,14 @@ impl Engine {
     /// The victim the scheduler should preempt this iteration, or None
     /// when decode fits (or preemption can't help: abort mode, or fewer
     /// than two runners — preempting a sole runner frees exactly the
-    /// blocks it would immediately re-claim).
+    /// blocks it would immediately re-claim). A viable ladder rung lifts
+    /// the two-runner floor: laddering frees capacity *without* evicting,
+    /// so even a sole blocked runner can be saved.
     fn preempt_victim(&self) -> Option<u64> {
-        if self.cfg.preemption_mode == PreemptionMode::Abort || self.running.len() < 2 {
+        if self.cfg.preemption_mode == PreemptionMode::Abort {
+            return None;
+        }
+        if self.running.len() < 2 && !self.ladder_available() {
             return None;
         }
         if !self.decode_blocked() {
@@ -556,17 +583,211 @@ impl Engine {
     /// livelock the victim in a preempt/readmit cycle.
     fn step_preempt(&mut self, first: u64) -> Result<StepReport> {
         self.stats.preempt_iters += 1;
-        self.preempt_one(first)?;
-        while self.running.len() >= 2 && self.decode_blocked() {
-            let Some(v) = self.choose_victim() else { break };
-            self.preempt_one(v)?;
+        // Ladder first: one pool-wide rung down can free the blocks the
+        // decode needs without evicting anyone. It restarts every decoding
+        // sequence at the narrower layout (the determinism contract wants
+        // their whole generation at the *final* precision assignment), so
+        // when it fires the batch drains to the waiting queue and re-enters
+        // through prefill — no decode runs this iteration.
+        if self.ladder_available() {
+            let shortfall = self.decode_shortfall().max(1);
+            if self.try_ladder(shortfall)? {
+                debug_assert!(self.running.is_empty(), "ladder restarts every runner");
+                return Ok(StepReport {
+                    action: Action::Preempt { victim: first },
+                    emitted: vec![],
+                    finished: vec![],
+                });
+            }
         }
+        if self.running.len() >= 2 {
+            self.preempt_one(first)?;
+            while self.running.len() >= 2 && self.decode_blocked() {
+                let Some(v) = self.choose_victim() else { break };
+                self.preempt_one(v)?;
+            }
+        }
+        // With the ladder exhausted and a sole runner left there is nothing
+        // to evict; decode runs anyway and the append failure becomes the
+        // structured abort, exactly as in abort mode.
         let rep = self.step_decode()?;
         Ok(StepReport {
             action: Action::Preempt { victim: first },
             emitted: rep.emitted,
             finished: rep.finished,
         })
+    }
+
+    // ---- precision laddering (DESIGN.md §10) ------------------------------
+
+    /// Is the ladder switched on for this engine? `--kv-ladder auto` (any
+    /// lossless mode) or `--preempt ladder` both arm it.
+    fn ladder_enabled(&self) -> bool {
+        self.cfg.ladder_policy == LadderPolicy::Auto
+            || self.cfg.preemption_mode == PreemptionMode::Ladder
+    }
+
+    /// Armed *and* the current layout still has a rung to take.
+    fn ladder_available(&self) -> bool {
+        self.ladder_enabled() && self.pool.layout().can_ladder()
+    }
+
+    /// Blocks the next decode step is short, after cache eviction credit.
+    fn decode_shortfall(&self) -> usize {
+        let evictable =
+            self.prefix.as_ref().map(|pc| pc.evictable_blocks(&self.pool)).unwrap_or(0);
+        self.decode_need_blocks()
+            .saturating_sub(self.pool.free_blocks() + evictable)
+    }
+
+    /// Try a ladder move: walk the rung schedule (least-important
+    /// downgradable layer first, per the static importance vector),
+    /// deepening the target layout until the capacity it frees covers
+    /// `needed_blocks` — one rung rarely suffices when every runner
+    /// crosses a block boundary in lockstep. Each candidate is priced as
+    /// pool-wide transcode traffic at modeled HBM bandwidth; the move
+    /// executes as a *single* relayout to the chosen target (transcoding
+    /// kv16→kv4 directly equals transcoding via kv8 bit-for-bit). Returns
+    /// whether a move was taken; `false` means even the fully-exhausted
+    /// ladder cannot free enough, and the caller falls back to eviction.
+    fn try_ladder(&mut self, needed_blocks: usize) -> Result<bool> {
+        if !self.ladder_available() {
+            return Ok(false);
+        }
+        let imp = layer_importance(self.model.n_layers);
+        let dropped: usize =
+            self.running.iter().map(|id| self.seqs[id].generated.len()).sum();
+        let mut cursor = self.pool.layout().clone();
+        let mut target = None;
+        while let Some((next, _layer, _from, _to)) = cursor.ladder_step(&imp) {
+            let est = self.pool.relayout_estimate(&next)?;
+            let cost = LadderCost::estimate(est.transcoded_bytes, est.gained_blocks, dropped);
+            cursor = next;
+            if cost.frees_enough(needed_blocks) {
+                target = Some(cursor.clone());
+                break;
+            }
+        }
+        let Some(target) = target else { return Ok(false) };
+        self.execute_ladder(&target)?;
+        Ok(true)
+    }
+
+    /// Take the rung: invalidate the prefix index (stale-precision blocks
+    /// must never be served), restart every resident sequence at the new
+    /// layout, drop stale swap snapshots, then transcode the pool in place
+    /// and charge the modeled HBM time.
+    fn execute_ladder(&mut self, target: &KvLayout) -> Result<()> {
+        // Every resident sequence lives through this event.
+        for s in self.seqs.values_mut() {
+            if s.handle.is_some() || s.swapped {
+                s.ladder_count += 1;
+            }
+        }
+
+        // The index pins whole chains of blocks; releasing those pins
+        // first keeps them out of the transcode walk (they are dead at the
+        // new layout either way).
+        if let Some(pc) = self.prefix.as_mut() {
+            pc.invalidate_for_relayout(&mut self.pool, target.clone());
+        }
+
+        // Restart the decode batch: rewind each runner to its resident
+        // prompt prefix (transcode makes those codes bit-identical to a
+        // fresh prefill at the target layout) and regenerate from there.
+        let runners: Vec<u64> = std::mem::take(&mut self.running);
+        for &id in &runners {
+            self.ladder_restart_resident(id)?;
+        }
+        // Mid-prefill admissions (including recompute resumes rebuilding
+        // their cache) hold pool blocks too; restart them in place — they
+        // keep their queue position.
+        let waiting_resident: Vec<u64> = self
+            .waiting
+            .iter()
+            .copied()
+            .filter(|id| self.seqs[id].handle.is_some())
+            .collect();
+        for id in waiting_resident {
+            self.ladder_restart_resident(id)?;
+        }
+        // Re-queue the runners at the front (behind a mid-prefill head,
+        // whose partial KV must finish first), preserving batch order.
+        let head_mid_prefill = self
+            .waiting
+            .front()
+            .is_some_and(|fid| self.seqs[fid].handle.is_some());
+        let base = usize::from(head_mid_prefill).min(self.waiting.len());
+        for (j, &id) in runners.iter().enumerate() {
+            self.waiting.insert(base + j, id);
+        }
+
+        // Swap snapshots were exported at the old layout; importing them
+        // into the laddered pool would resurrect stale-precision bytes.
+        // Drop them and let those victims re-prefill from scratch.
+        let swapped: Vec<u64> = self
+            .seqs
+            .iter()
+            .filter(|(_, s)| s.swapped)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in swapped {
+            self.swap.drop_entry(id);
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.swapped = false;
+            s.generated.clear();
+            s.seq_tokens = s.prompt.clone();
+            s.prefill_pos = 0;
+            s.indexed_blocks = 0;
+            // Reclassify: preserved by the ladder now, not by swap (the
+            // per-mechanism buckets keep summing to `preemptions`).
+            self.preempt_stats.swap_preemptions -= 1;
+            self.preempt_stats.ladder_preemptions += 1;
+        }
+
+        let report = self.pool.relayout(target)?;
+        self.stats.sim_time_s += report.transcoded_bytes as f64 / HBM_BANDWIDTH_BPS;
+        self.preempt_stats.ladder_events += 1;
+        self.preempt_stats.ladder_transcoded_bytes += report.transcoded_bytes;
+        self.preempt_stats.ladder_freed_bytes += report.gained_blocks
+            * target.bytes_per_block(
+                self.model.n_kv_heads,
+                self.model.head_dim,
+                self.pool.block_tokens(),
+            );
+        Ok(())
+    }
+
+    /// Rewind one resident sequence for a post-ladder restart: drop its
+    /// generated tokens (they regenerate bit-identically at the final
+    /// layout), truncate its KV to the resident prompt prefix below the
+    /// final-chunk boundary, and point prefill at the gap. The pool handle
+    /// — and the retained, about-to-be-transcoded blocks — stay put.
+    fn ladder_restart_resident(&mut self, id: u64) -> Result<()> {
+        let bt = self.pool.block_tokens();
+        let (h, dropped) = {
+            let s = self.seqs.get_mut(&id).unwrap();
+            let d = s.generated.len();
+            s.generated.clear();
+            s.seq_tokens = s.prompt.clone();
+            (s.handle.expect("resident seq has a handle"), d)
+        };
+        let cap = self.prefix_match_cap(self.seqs[&id].prompt.len());
+        let keep = cap.min(self.pool.seq_len(h) / bt * bt);
+        self.pool.truncate_seq(h, keep)?;
+        let s = self.seqs.get_mut(&id).unwrap();
+        s.prefill_pos = keep;
+        s.indexed_blocks = 0;
+        s.phase = Phase::Prefilling;
+        if dropped > 0 {
+            // A true victim: it had started generating and loses that work
+            // to the restart (the ladder's re-decode cost).
+            s.preempt_count += 1;
+            self.preempt_stats.preemptions += 1;
+            self.preempt_stats.ladder_preemptions += 1;
+            self.preempt_stats.ladder_dropped_tokens += dropped;
+        }
+        Ok(())
     }
 
     /// Restore a swapped-out head-of-queue sequence into the pool. Returns
@@ -638,6 +859,31 @@ impl Engine {
         }
     }
 
+    /// Plan the next prefill chunk for `id`: (handle, base position,
+    /// bucket-padded token ids, compiled bucket, real token count). Chunk
+    /// ends align to absolute multiples of the effective chunk, so a
+    /// prefix-seeded prefill (`prefill_pos > 0`) walks the same chunk
+    /// boundaries — and computes the same logits — as an uncached run of
+    /// the same prompt.
+    fn chunk_plan(&self, id: u64) -> (SeqHandle, usize, Vec<i32>, usize, usize) {
+        let s = &self.seqs[&id];
+        let rem = s.remaining_prompt();
+        let eff = self.effective_prefill_chunk();
+        let want = rem.min(eff - s.prefill_pos % eff);
+        let bucket = self.prefill_bucket(want);
+        let real = want.min(bucket);
+        let mut toks: Vec<i32> = s.seq_tokens[s.prefill_pos..s.prefill_pos + real].to_vec();
+        toks.resize(bucket, 0);
+        (s.handle.unwrap(), s.prefill_pos, toks, bucket, real)
+    }
+
+    /// Fresh pool blocks appending `real` more tokens to `handle` claims.
+    fn chunk_need(&self, handle: SeqHandle, real: usize) -> usize {
+        self.pool
+            .blocks_for(self.pool.seq_len(handle) + real)
+            .saturating_sub(self.pool.seq_blocks(handle).len())
+    }
+
     /// Pick the compiled prefill bucket for `remaining` prompt tokens.
     fn prefill_bucket(&self, remaining: usize) -> usize {
         let chunks = &self.backend.plan().prefill_chunks;
@@ -689,7 +935,6 @@ impl Engine {
 
         let m = self.model.clone();
         let t_pad = m.max_seq_len;
-        let rb = self.pool.row_bytes();
 
         // Admit if new: allocate the sequence and consult the prefix index
         // before any prefill work — matched full blocks are adopted
@@ -722,29 +967,39 @@ impl Engine {
             self.stats.prefill_tokens_skipped += hit_tokens;
         }
 
-        let (handle, pos, chunk_tokens, bucket, real) = {
-            let s = &self.seqs[&id];
-            let rem = s.remaining_prompt();
-            // Chunk ends align to absolute multiples of the effective
-            // chunk, so a prefix-seeded prefill (prefill_pos > 0) walks the
-            // same chunk boundaries — and computes the same logits — as an
-            // uncached run of the same prompt.
-            let eff = self.effective_prefill_chunk();
-            let want = rem.min(eff - s.prefill_pos % eff);
-            let bucket = self.prefill_bucket(want);
-            let real = want.min(bucket);
-            let mut toks: Vec<i32> =
-                s.seq_tokens[s.prefill_pos..s.prefill_pos + real].to_vec();
-            toks.resize(bucket, 0);
-            (s.handle.unwrap(), s.prefill_pos, toks, bucket, real)
-        };
+        let (mut handle, mut pos, mut chunk_tokens, mut bucket, mut real) = self.chunk_plan(id);
+
+        // Make room for the chunk *before* the backend runs (its emitted
+        // codes must match the pool layout at append time): evict
+        // unreferenced cached blocks, then — still short — take a ladder
+        // rung, then sacrifice running victims (the prefill-side analogue
+        // of `Action::Preempt`). The rung restarts this very sequence at
+        // the narrower layout, so the chunk is re-planned after it.
+        let mut new_blocks = self.chunk_need(handle, real);
+        self.make_room(new_blocks);
+        if self.pool.free_blocks() < new_blocks
+            && self.try_ladder(new_blocks - self.pool.free_blocks())?
+        {
+            (handle, pos, chunk_tokens, bucket, real) = self.chunk_plan(id);
+            new_blocks = self.chunk_need(handle, real);
+            self.make_room(new_blocks);
+        }
+        if self.cfg.preemption_mode != PreemptionMode::Abort {
+            while self.pool.free_blocks() < new_blocks && !self.running.is_empty() {
+                let Some(v) = self.choose_victim() else { break };
+                self.preempt_one(v)?;
+                self.make_room(new_blocks);
+            }
+        }
 
         // Gather the (possibly empty) past context for this sequence.
-        let kdim = m.n_layers * m.n_kv_heads * t_pad;
-        let mut k_codes = vec![0u8; kdim * rb];
-        let mut v_codes = vec![0u8; kdim * rb];
-        let mut k_scales = vec![1f32; kdim];
-        let mut v_scales = vec![1f32; kdim];
+        let layout = self.pool.layout().clone();
+        let sum_rb = layout.sum_row_bytes(m.head_dim);
+        let sdim = m.n_layers * m.n_kv_heads * t_pad;
+        let mut k_codes = vec![0u8; m.n_kv_heads * t_pad * sum_rb];
+        let mut v_codes = vec![0u8; m.n_kv_heads * t_pad * sum_rb];
+        let mut k_scales = vec![1f32; sdim];
+        let mut v_scales = vec![1f32; sdim];
         self.pool.gather_batch(
             &[Some(handle)],
             t_pad,
@@ -759,6 +1014,7 @@ impl Engine {
             real,
             pos,
             t_pad,
+            layout: &layout,
             k_codes: &k_codes,
             k_scales: &k_scales,
             v_codes: &v_codes,
@@ -766,22 +1022,6 @@ impl Engine {
         })?;
         self.stats.sim_time_s += out.sim_time_s;
 
-        // Store the real tokens' KV, evicting unreferenced cached blocks
-        // if the free list can't cover the chunk's new blocks — and, with
-        // preemption on, sacrificing running victims before giving up on
-        // the admission (prefill-side analogue of `Action::Preempt`).
-        let new_blocks = self
-            .pool
-            .blocks_for(self.pool.seq_len(handle) + real)
-            .saturating_sub(self.pool.seq_blocks(handle).len());
-        self.make_room(new_blocks);
-        if self.cfg.preemption_mode != PreemptionMode::Abort {
-            while self.pool.free_blocks() < new_blocks && !self.running.is_empty() {
-                let Some(v) = self.choose_victim() else { break };
-                self.preempt_one(v)?;
-                self.make_room(new_blocks);
-            }
-        }
         if let Err(e) = self.pool.append_chunk(
             handle,
             real,
@@ -853,7 +1093,6 @@ impl Engine {
     fn step_decode(&mut self) -> Result<StepReport> {
         self.stats.decode_iters += 1;
         let m = self.model.clone();
-        let rb = self.pool.row_bytes();
         let ids: Vec<u64> = self.running.clone();
         let n = ids.len();
         assert!(n > 0, "scheduler said Decode with empty batch");
@@ -874,11 +1113,13 @@ impl Engine {
         }
         let t_pad = self.decode_t_bucket(t_need)?;
 
-        let kdim = m.n_layers * bsize * m.n_kv_heads * t_pad;
-        let mut k_codes = vec![0u8; kdim * rb];
-        let mut v_codes = vec![0u8; kdim * rb];
-        let mut k_scales = vec![1f32; kdim];
-        let mut v_scales = vec![1f32; kdim];
+        let layout = self.pool.layout().clone();
+        let sum_rb = layout.sum_row_bytes(m.head_dim);
+        let sdim = m.n_layers * bsize * m.n_kv_heads * t_pad;
+        let mut k_codes = vec![0u8; bsize * m.n_kv_heads * t_pad * sum_rb];
+        let mut v_codes = vec![0u8; bsize * m.n_kv_heads * t_pad * sum_rb];
+        let mut k_scales = vec![1f32; sdim];
+        let mut v_scales = vec![1f32; sdim];
         self.pool.gather_batch(
             &handles, t_pad, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales,
         )?;
@@ -887,6 +1128,7 @@ impl Engine {
             tokens: &tokens,
             kv_len: &kv_len,
             t_pad,
+            layout: &layout,
             k_codes: &k_codes,
             k_scales: &k_scales,
             v_codes: &v_codes,
@@ -901,20 +1143,23 @@ impl Engine {
         let need_blocks = self.decode_need_blocks();
         self.make_room(need_blocks);
 
-        // Append each live sequence's new KV codes ([L,B,Hkv,rb] layout).
+        // Append each live sequence's new KV codes ([L,B,Hkv,rb_l] layout,
+        // layer-major with per-layer row strides).
         let mut emitted = vec![];
         let mut finished = vec![];
         for (i, id) in ids.iter().enumerate() {
             let handle = self.seqs[id].handle.unwrap();
-            let per = m.n_kv_heads * rb;
-            let mut kc = vec![0u8; m.n_layers * per];
-            let mut vc = vec![0u8; m.n_layers * per];
+            let mut kc = vec![0u8; m.n_kv_heads * sum_rb];
+            let mut vc = vec![0u8; m.n_kv_heads * sum_rb];
             let mut ks = vec![0f32; m.n_layers * m.n_kv_heads];
             let mut vs = vec![0f32; m.n_layers * m.n_kv_heads];
             for l in 0..m.n_layers {
-                let src = (l * bsize + i) * per;
-                kc[l * per..(l + 1) * per].copy_from_slice(&out.k_codes[src..src + per]);
-                vc[l * per..(l + 1) * per].copy_from_slice(&out.v_codes[src..src + per]);
+                let rb_l = layout.row_bytes(l, m.head_dim);
+                let per = m.n_kv_heads * rb_l;
+                let src = bsize * m.n_kv_heads * layout.prefix_row_bytes(l, m.head_dim) + i * per;
+                let dst = m.n_kv_heads * layout.prefix_row_bytes(l, m.head_dim);
+                kc[dst..dst + per].copy_from_slice(&out.k_codes[src..src + per]);
+                vc[dst..dst + per].copy_from_slice(&out.v_codes[src..src + per]);
                 let ssrc = (l * bsize + i) * m.n_kv_heads;
                 ks[l * m.n_kv_heads..(l + 1) * m.n_kv_heads]
                     .copy_from_slice(&out.k_scales[ssrc..ssrc + m.n_kv_heads]);
@@ -955,6 +1200,7 @@ impl Engine {
 
     fn finish(&mut self, id: u64, reason: FinishReason) {
         let sim_now = self.stats.sim_time_s;
+        let final_kv_layout = self.pool.layout().to_string();
         let s = self.seqs.get_mut(&id).unwrap();
         if let Some(h) = s.handle.take() {
             self.pool.free_seq(h);
@@ -979,6 +1225,8 @@ impl Engine {
             prefix_hit_tokens: s.prefix_hit_tokens,
             preempt_count: s.preempt_count,
             swapped_in_blocks: s.swapped_in_blocks,
+            ladder_count: s.ladder_count,
+            final_kv_layout,
             abort_reason: s.abort_reason.take(),
         });
         self.seqs.remove(&id);

@@ -31,12 +31,71 @@ pub enum PreemptMechanism {
     Swap,
     /// Release blocks; re-prefill the non-prefix-cached suffix on resume.
     Recompute,
+    /// Nothing is evicted: the *whole pool* laddered down one per-layer
+    /// precision rung in place, and this sequence restarted its generation
+    /// at the narrower layout (determinism contract). Chosen by the engine
+    /// *before* victim selection when the rung frees enough blocks — it
+    /// never competes inside [`pick_victim`], so [`VictimCost::cost_of`]
+    /// prices it as infinite.
+    Ladder,
 }
 
 /// Modeled per-token prefill cost used to price recompute, seconds. Tuned
 /// to the gpusim tiny-model scale; the *ratio* against PCIe byte cost is
 /// what drives mechanism choice, not the absolute number.
 pub const RECOMPUTE_TOKEN_S: f64 = 4.0e-6;
+
+/// Modeled on-device memory bandwidth used to price in-place transcodes,
+/// bytes/s. A ladder rung reads every resident code row at the old width
+/// and writes it at the new one — HBM traffic, never the host link, which
+/// is why laddering undercuts swap by orders of magnitude per byte.
+pub const HBM_BANDWIDTH_BPS: f64 = 2.0e12;
+
+/// Cost estimate for one pool-wide precision-ladder rung (the in-place
+/// alternative the engine prices *before* swap/recompute victim selection).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LadderCost {
+    /// Bytes moved by the transcode walk (old row read + new row write,
+    /// summed over every resident block's changed layers).
+    pub transcode_bytes: usize,
+    /// Free blocks the narrower layout yields from the same byte budget.
+    pub gained_blocks: usize,
+    /// Generated tokens dropped by decode restarts (the determinism
+    /// contract re-runs generation at the final layout), re-decoded later.
+    pub dropped_decode_tokens: usize,
+    /// Transcode walk time at [`HBM_BANDWIDTH_BPS`], seconds.
+    pub transcode_time_s: f64,
+    /// Modeled re-decode time for the dropped tokens, seconds.
+    pub redecode_time_s: f64,
+}
+
+impl LadderCost {
+    pub fn estimate(
+        transcode_bytes: usize,
+        gained_blocks: usize,
+        dropped_decode_tokens: usize,
+    ) -> Self {
+        Self {
+            transcode_bytes,
+            gained_blocks,
+            dropped_decode_tokens,
+            transcode_time_s: transcode_bytes as f64 / HBM_BANDWIDTH_BPS,
+            redecode_time_s: dropped_decode_tokens as f64 * RECOMPUTE_TOKEN_S,
+        }
+    }
+
+    /// Total modeled cost of taking this rung, seconds.
+    pub fn time_s(&self) -> f64 {
+        self.transcode_time_s + self.redecode_time_s
+    }
+
+    /// Whether the rung alone satisfies the allocation that triggered
+    /// preemption — the ISSUE's "chosen before swap/recompute when it
+    /// frees enough" rule.
+    pub fn frees_enough(&self, needed_blocks: usize) -> bool {
+        self.gained_blocks >= needed_blocks
+    }
+}
 
 /// Preemption cost estimate for one candidate victim.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -102,10 +161,13 @@ impl VictimCost {
     }
 
     /// The cost this victim pays under the given mechanism, seconds.
+    /// `Ladder` is not a per-victim mechanism (no victim pays for it), so
+    /// it prices as infinite and can never win victim selection.
     pub fn cost_of(&self, mech: PreemptMechanism) -> f64 {
         match mech {
             PreemptMechanism::Swap => self.swap_time_s,
             PreemptMechanism::Recompute => self.recompute_time_s,
+            PreemptMechanism::Ladder => f64::INFINITY,
         }
     }
 }
@@ -220,5 +282,32 @@ mod tests {
         let adaptive = pick_victim(&[(1, dear), (2, cached)], None);
         assert_eq!(adaptive, Some((2, PreemptMechanism::Recompute)));
         assert_eq!(pick_victim(&[], None), None);
+    }
+
+    #[test]
+    fn ladder_cost_prices_hbm_transcode_plus_redecode() {
+        let c = LadderCost::estimate(2_000_000, 8, 100);
+        assert!((c.transcode_time_s - 2.0e6 / HBM_BANDWIDTH_BPS).abs() < 1e-12);
+        assert!((c.redecode_time_s - 100.0 * RECOMPUTE_TOKEN_S).abs() < 1e-12);
+        assert!((c.time_s() - (c.transcode_time_s + c.redecode_time_s)).abs() < 1e-15);
+        assert!(c.frees_enough(8) && !c.frees_enough(9));
+
+        // The headline economics: transcoding a victim's bytes over HBM is
+        // orders of magnitude cheaper than shipping the same bytes over the
+        // host link twice.
+        let v = VictimCost::estimate(8, 16, 2 * 2 * 2 * 8, 2 * 2 * 2 * 4, 128, 0);
+        let l = LadderCost::estimate(v.swap_bytes + v.scale_bytes, 8, 0);
+        assert!(l.transcode_time_s * 100.0 < v.swap_time_s);
+    }
+
+    #[test]
+    fn ladder_mechanism_never_wins_victim_selection() {
+        let c = VictimCost::estimate(2, 16, 2 * 2 * 2 * 8, TSB, 32, 0);
+        assert_eq!(c.cost_of(PreemptMechanism::Ladder), f64::INFINITY);
+        let picked = pick_victim(&[(1, c)], Some(PreemptMechanism::Ladder));
+        // Forced ladder "mechanism" still resolves to a victim entry, but
+        // the engine only reaches pick_victim after deciding NOT to ladder.
+        assert_eq!(picked, Some((1, PreemptMechanism::Ladder)));
+        assert_ne!(c.preferred(), PreemptMechanism::Ladder);
     }
 }

@@ -75,6 +75,14 @@ pub struct RequestOutput {
     pub preempt_count: usize,
     /// Pool blocks restored from the host swap store across all resumes.
     pub swapped_in_blocks: usize,
+    /// Pool-wide precision-ladder events this request lived through while
+    /// resident (each one restarted its generation at the narrower layout;
+    /// 0 on an unpressured run).
+    pub ladder_count: usize,
+    /// The per-layer KV layout the pool held when this request finished —
+    /// the *final* precision assignment the determinism contract is stated
+    /// against (e.g. `kv16` or `l0:kv16,l1:kv8`).
+    pub final_kv_layout: String,
     /// Why the request aborted (`finish == Aborted` only): the structured
     /// detail behind the opaque finish reason.
     pub abort_reason: Option<String>,
@@ -98,6 +106,8 @@ impl RequestOutput {
             prefix_hit_tokens: 0,
             preempt_count: 0,
             swapped_in_blocks: 0,
+            ladder_count: 0,
+            final_kv_layout: String::new(),
             abort_reason: Some(reason),
         }
     }
@@ -136,6 +146,8 @@ pub(crate) struct SeqState {
     pub preempt_count: usize,
     /// Blocks restored from the swap store (cumulative).
     pub swapped_in_blocks: usize,
+    /// Pool-wide ladder events survived while resident (cumulative).
+    pub ladder_count: usize,
     /// Structured detail for an upcoming `FinishReason::Aborted` finish
     /// (set just before `Engine::finish`, moved into the output).
     pub abort_reason: Option<String>,
@@ -164,6 +176,7 @@ impl SeqState {
             swapped: false,
             preempt_count: 0,
             swapped_in_blocks: 0,
+            ladder_count: 0,
             abort_reason: None,
             submitted: now,
             first_token: None,

@@ -1,0 +1,292 @@
+//! Per-layer KV precision layout.
+//!
+//! The paged pool historically stored one [`KvPrecision`] for every layer.
+//! `KvLayout` generalizes that to a per-layer precision vector — the KVmix
+//! /SFMP-style mixed-precision assignment — and owns the geometry that used
+//! to be derived from the scalar: per-layer `row_bytes`, the layer-offset
+//! table inside a token slot, and `token_code_bytes` summed over layers.
+//!
+//! Precisions are ordered on a one-way ladder `kv16 → kv8 → kv4`; the
+//! preemption ladder rung only ever moves layers *down* (transcodable in
+//! place, see `quant::transcode`), never up.
+
+use anyhow::{bail, Result};
+
+use super::pool::KvPrecision;
+use crate::config::DType;
+
+/// Per-layer KV precision assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvLayout {
+    precs: Vec<KvPrecision>,
+}
+
+impl KvLayout {
+    /// The classic single-precision pool: every layer at `prec`.
+    pub fn uniform(prec: KvPrecision, n_layers: usize) -> Self {
+        Self { precs: vec![prec; n_layers] }
+    }
+
+    /// Uniform layout from a serving dtype (`kv16`/`kv8`/`kv4` tiers).
+    pub fn from_dtype(dt: DType, n_layers: usize) -> Result<Self> {
+        Ok(Self::uniform(KvPrecision::from_dtype(dt)?, n_layers))
+    }
+
+    /// Parse a CLI/config layout spec. Accepted forms:
+    ///
+    /// * `kv8` — uniform across all layers;
+    /// * `l0:kv16,l1:kv8,l2:kv4,l3:kv4` — explicit per-layer list covering
+    ///   every layer exactly once. `;` is accepted as a separator alongside
+    ///   `,` (cluster replica specs already use `,` between their own
+    ///   fields).
+    pub fn parse(spec: &str, n_layers: usize) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            bail!("empty kv layout spec");
+        }
+        if !spec.contains(':') {
+            return Ok(Self::uniform(KvPrecision::parse_key(spec)?, n_layers));
+        }
+        let mut precs: Vec<Option<KvPrecision>> = vec![None; n_layers];
+        for part in spec.split([',', ';']).map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((layer, key)) = part.split_once(':') else {
+                bail!("kv layout entry `{part}` is not of the form lN:kvX");
+            };
+            let Some(idx) = layer.trim().strip_prefix('l') else {
+                bail!("kv layout entry `{part}` must name a layer as lN");
+            };
+            let idx: usize = idx.parse().map_err(|_| {
+                anyhow::anyhow!("kv layout entry `{part}` has a non-numeric layer index")
+            })?;
+            if idx >= n_layers {
+                bail!("kv layout names layer l{idx} but the model has {n_layers} layers");
+            }
+            if precs[idx].is_some() {
+                bail!("kv layout assigns layer l{idx} twice");
+            }
+            precs[idx] = Some(KvPrecision::parse_key(key.trim())?);
+        }
+        let mut out = Vec::with_capacity(n_layers);
+        for (l, p) in precs.into_iter().enumerate() {
+            match p {
+                Some(p) => out.push(p),
+                None => bail!("kv layout leaves layer l{l} unassigned ({n_layers} layers total)"),
+            }
+        }
+        Ok(Self { precs: out })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.precs.len()
+    }
+
+    pub fn prec(&self, layer: usize) -> KvPrecision {
+        self.precs[layer]
+    }
+
+    pub fn precs(&self) -> &[KvPrecision] {
+        &self.precs
+    }
+
+    /// `Some(prec)` when every layer shares one precision.
+    pub fn as_uniform(&self) -> Option<KvPrecision> {
+        let first = *self.precs.first()?;
+        self.precs.iter().all(|&p| p == first).then_some(first)
+    }
+
+    /// Bytes per KV row (one head, one token) at layer `l`.
+    pub fn row_bytes(&self, layer: usize, head_dim: usize) -> usize {
+        self.precs[layer].row_bytes(head_dim)
+    }
+
+    /// Sum of row bytes across layers — the per-layer-heterogeneous
+    /// replacement for `n_layers * row_bytes`.
+    pub fn sum_row_bytes(&self, head_dim: usize) -> usize {
+        self.precs.iter().map(|p| p.row_bytes(head_dim)).sum()
+    }
+
+    /// Sum of row bytes of layers *before* `l` — the layer-offset table for
+    /// any layer-major tensor: multiply by the caller's per-row context
+    /// factor (`2 × Hkv` for a pool token slot, `B × Hkv × T` for a gather
+    /// buffer, …) to get the byte offset of layer `l`.
+    pub fn prefix_row_bytes(&self, layer: usize, head_dim: usize) -> usize {
+        self.precs[..layer].iter().map(|p| p.row_bytes(head_dim)).sum()
+    }
+
+    /// Bytes of code storage per pool token slot: `Σ_l 2 × Hkv × rb_l`.
+    pub fn token_code_bytes(&self, kv_heads: usize, head_dim: usize) -> usize {
+        2 * kv_heads * self.sum_row_bytes(head_dim)
+    }
+
+    /// Bytes per full pool block at this layout.
+    pub fn bytes_per_block(&self, kv_heads: usize, head_dim: usize, block_tokens: usize) -> usize {
+        block_tokens * self.token_code_bytes(kv_heads, head_dim)
+    }
+
+    /// Order-sensitive hash of the full per-layer assignment — the prefix
+    /// index seeds its root key from this, so two layouts that differ in
+    /// any single layer's precision hash to disjoint key spaces.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xC0FF_EE00_D15E_A5E5u64 ^ (self.precs.len() as u64);
+        for &p in &self.precs {
+            let tag = match p {
+                KvPrecision::F32 => 16u64,
+                KvPrecision::Int8 => 8,
+                KvPrecision::Int4 => 4,
+            };
+            h = (h.rotate_left(7) ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_mul(0x0100_0000_01B3);
+        }
+        h
+    }
+
+    /// True when `target` is reachable from `self` by only moving layers
+    /// down the ladder (every layer same-or-lower precision).
+    pub fn can_transcode_to(&self, target: &KvLayout) -> bool {
+        self.precs.len() == target.precs.len()
+            && self
+                .precs
+                .iter()
+                .zip(&target.precs)
+                .all(|(a, b)| b.ladder_rank() >= a.ladder_rank())
+    }
+
+    /// Any layer left to downgrade?
+    pub fn can_ladder(&self) -> bool {
+        self.precs.iter().any(|p| p.next_down().is_some())
+    }
+
+    /// One ladder step: downgrade the least-important still-downgradable
+    /// layer by one notch (ties break toward the highest layer index — the
+    /// default importance profile already ladders late layers first).
+    /// Returns the new layout and `(layer, from, to)`.
+    pub fn ladder_step(
+        &self,
+        importance: &[f64],
+    ) -> Option<(KvLayout, usize, KvPrecision, KvPrecision)> {
+        let mut pick: Option<(usize, f64)> = None;
+        for (l, p) in self.precs.iter().enumerate() {
+            if p.next_down().is_none() {
+                continue;
+            }
+            let imp = importance.get(l).copied().unwrap_or(1.0);
+            match pick {
+                Some((_, best)) if imp > best => {}
+                Some((bl, best)) if imp == best && l < bl => {}
+                _ => pick = Some((l, imp)),
+            }
+        }
+        let (layer, _) = pick?;
+        let from = self.precs[layer];
+        let to = from.next_down().expect("picked a downgradable layer");
+        let mut next = self.clone();
+        next.precs[layer] = to;
+        Some((next, layer, from, to))
+    }
+}
+
+impl std::fmt::Display for KvLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if let Some(p) = self.as_uniform() {
+            return write!(f, "{}", p.graph_key());
+        }
+        for (l, p) in self.precs.iter().enumerate() {
+            if l > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "l{l}:{}", p.graph_key())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_parse_and_display_roundtrip() {
+        let l = KvLayout::parse("kv8", 4).unwrap();
+        assert_eq!(l, KvLayout::uniform(KvPrecision::Int8, 4));
+        assert_eq!(l.to_string(), "kv8");
+        assert_eq!(l.as_uniform(), Some(KvPrecision::Int8));
+    }
+
+    #[test]
+    fn per_layer_parse_and_display_roundtrip() {
+        let spec = "l0:kv16,l1:kv8,l2:kv4,l3:kv8";
+        let l = KvLayout::parse(spec, 4).unwrap();
+        assert_eq!(l.prec(0), KvPrecision::F32);
+        assert_eq!(l.prec(2), KvPrecision::Int4);
+        assert_eq!(l.to_string(), spec);
+        // Semicolons work too (cluster replica specs reserve the comma).
+        assert_eq!(KvLayout::parse("l0:kv16;l1:kv8;l2:kv4;l3:kv8", 4).unwrap(), l);
+        assert_eq!(l.as_uniform(), None);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(KvLayout::parse("", 2).is_err());
+        assert!(KvLayout::parse("kv9", 2).is_err());
+        assert!(KvLayout::parse("l0:kv8", 2).is_err(), "layer l1 unassigned");
+        assert!(KvLayout::parse("l0:kv8,l0:kv4,l1:kv8", 2).is_err(), "duplicate");
+        assert!(KvLayout::parse("l2:kv8,l0:kv8,l1:kv8", 2).is_err(), "out of range");
+        assert!(KvLayout::parse("x0:kv8,l1:kv8", 2).is_err());
+    }
+
+    #[test]
+    fn geometry_sums_per_layer_rows() {
+        // head_dim 8: kv16 row 32B, kv8 row 8B, kv4 row 4B.
+        let l = KvLayout::parse("l0:kv16,l1:kv8,l2:kv4", 3).unwrap();
+        assert_eq!(l.sum_row_bytes(8), 32 + 8 + 4);
+        assert_eq!(l.prefix_row_bytes(0, 8), 0);
+        assert_eq!(l.prefix_row_bytes(1, 8), 32);
+        assert_eq!(l.prefix_row_bytes(2, 8), 40);
+        assert_eq!(l.token_code_bytes(2, 8), 2 * 2 * 44);
+        assert_eq!(l.bytes_per_block(2, 8, 4), 4 * 2 * 2 * 44);
+    }
+
+    #[test]
+    fn fingerprints_are_layer_order_sensitive() {
+        let a = KvLayout::parse("l0:kv16,l1:kv8", 2).unwrap();
+        let b = KvLayout::parse("l0:kv8,l1:kv16", 2).unwrap();
+        let c = KvLayout::uniform(KvPrecision::Int8, 2);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(b.fingerprint(), c.fingerprint());
+        assert_eq!(a.fingerprint(), KvLayout::parse("l0:kv16,l1:kv8", 2).unwrap().fingerprint());
+        // Layer count matters even when the uniform precision matches.
+        assert_ne!(
+            KvLayout::uniform(KvPrecision::Int8, 2).fingerprint(),
+            KvLayout::uniform(KvPrecision::Int8, 3).fingerprint()
+        );
+    }
+
+    #[test]
+    fn ladder_steps_walk_importance_order_to_exhaustion() {
+        let mut l = KvLayout::uniform(KvPrecision::F32, 3);
+        // Default profile: later layers less important.
+        let imp = [1.0, 0.66, 0.33];
+        let mut seen = vec![];
+        while let Some((next, layer, from, to)) = l.ladder_step(&imp) {
+            assert!(l.can_transcode_to(&next));
+            assert_eq!(from.next_down(), Some(to));
+            seen.push(layer);
+            l = next;
+        }
+        // Layer 2 all the way down first, then 1, then 0.
+        assert_eq!(seen, vec![2, 2, 1, 1, 0, 0]);
+        assert!(!l.can_ladder());
+        assert_eq!(l.as_uniform(), Some(KvPrecision::Int4));
+    }
+
+    #[test]
+    fn transcode_reachability_is_one_way() {
+        let hi = KvLayout::parse("l0:kv16,l1:kv8", 2).unwrap();
+        let lo = KvLayout::parse("l0:kv8,l1:kv4", 2).unwrap();
+        assert!(hi.can_transcode_to(&lo));
+        assert!(hi.can_transcode_to(&hi), "identity is reachable");
+        assert!(!lo.can_transcode_to(&hi), "no up-laddering");
+        assert!(!hi.can_transcode_to(&KvLayout::uniform(KvPrecision::Int4, 3)), "layer count");
+    }
+}

@@ -14,10 +14,12 @@
 //! prompts, multi-turn histories) with LRU eviction of unreferenced cached
 //! blocks when the free list runs dry.
 
+pub mod layout;
 pub mod pool;
 pub mod prefix;
 pub mod swap;
 
-pub use pool::{KvPool, KvPrecision, SeqHandle, SeqSnapshot};
+pub use layout::KvLayout;
+pub use pool::{KvPool, KvPrecision, RelayoutReport, SeqHandle, SeqSnapshot};
 pub use prefix::{route_key, PrefixCache, PrefixCacheStats};
 pub use swap::{SwapStats, SwapStore};

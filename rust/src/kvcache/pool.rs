@@ -2,7 +2,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::layout::KvLayout;
 use crate::config::DType;
+use crate::quant::transcode::{f32_row_to_int4, f32_row_to_int8, int8_row_to_int4};
 
 /// Storage precision of the pool (mirrors the serving `KVz` format).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +44,35 @@ impl KvPrecision {
             KvPrecision::F32 => "kv16",
             KvPrecision::Int8 => "kv8",
             KvPrecision::Int4 => "kv4",
+        }
+    }
+
+    /// Inverse of [`KvPrecision::graph_key`] — used by layout spec parsing.
+    pub fn parse_key(s: &str) -> Result<Self> {
+        Ok(match s {
+            "kv16" => KvPrecision::F32,
+            "kv8" => KvPrecision::Int8,
+            "kv4" => KvPrecision::Int4,
+            other => bail!("unknown kv precision `{other}` (expected kv16, kv8, or kv4)"),
+        })
+    }
+
+    /// Position on the one-way precision ladder (0 = widest). Transcoding
+    /// is only legal toward higher ranks.
+    pub fn ladder_rank(self) -> u8 {
+        match self {
+            KvPrecision::F32 => 0,
+            KvPrecision::Int8 => 1,
+            KvPrecision::Int4 => 2,
+        }
+    }
+
+    /// One notch down the ladder, if any.
+    pub fn next_down(self) -> Option<Self> {
+        match self {
+            KvPrecision::F32 => Some(KvPrecision::Int8),
+            KvPrecision::Int8 => Some(KvPrecision::Int4),
+            KvPrecision::Int4 => None,
         }
     }
 }
@@ -91,13 +122,18 @@ struct SeqState {
 /// divergence never corrupts another owner's view.
 #[derive(Debug)]
 pub struct KvPool {
-    precision: KvPrecision,
+    layout: KvLayout,
     n_layers: usize,
     kv_heads: usize,
     head_dim: usize,
     block_tokens: usize,
     n_blocks: usize,
-    /// codes arena: `n_blocks × block_tokens × token_code_bytes`.
+    /// Fixed code-byte budget, set at the admission layout. The codes arena
+    /// always spans exactly this many bytes; `relayout` re-divides it into
+    /// more (smaller) blocks as layers move down the precision ladder.
+    code_budget: usize,
+    /// codes arena: `code_budget` bytes, of which the first
+    /// `n_blocks × block_tokens × token_code_bytes` are addressable blocks.
     codes: Vec<u8>,
     /// scales arena: `n_blocks × block_tokens × (L × 2 × Hkv)`.
     scales: Vec<f32>,
@@ -108,6 +144,7 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// The classic single-precision pool: every layer at `precision`.
     pub fn new(
         precision: KvPrecision,
         n_layers: usize,
@@ -116,6 +153,26 @@ impl KvPool {
         block_tokens: usize,
         pool_tokens: usize,
     ) -> Result<Self> {
+        Self::with_layout(
+            KvLayout::uniform(precision, n_layers),
+            kv_heads,
+            head_dim,
+            block_tokens,
+            pool_tokens,
+        )
+    }
+
+    /// A pool with a per-layer precision layout. `pool_tokens` is counted
+    /// at the *admission* layout; laddering down later grows the block
+    /// count inside the same byte budget.
+    pub fn with_layout(
+        layout: KvLayout,
+        kv_heads: usize,
+        head_dim: usize,
+        block_tokens: usize,
+        pool_tokens: usize,
+    ) -> Result<Self> {
+        let n_layers = layout.n_layers();
         if block_tokens == 0 || pool_tokens % block_tokens != 0 {
             bail!("pool_tokens {pool_tokens} must be a positive multiple of block_tokens {block_tokens}");
         }
@@ -128,16 +185,18 @@ impl KvPool {
         // a whole byte (`KvPrecision::row_bytes`), so the arena below is
         // sized for the rounded row and no nibble is ever truncated.
         let n_blocks = pool_tokens / block_tokens;
-        let token_code_bytes = Self::token_code_bytes_for(precision, n_layers, kv_heads, head_dim);
+        let token_code_bytes = layout.token_code_bytes(kv_heads, head_dim);
         let token_scales = n_layers * 2 * kv_heads;
+        let code_budget = n_blocks * block_tokens * token_code_bytes;
         Ok(Self {
-            precision,
+            layout,
             n_layers,
             kv_heads,
             head_dim,
             block_tokens,
             n_blocks,
-            codes: vec![0u8; n_blocks * block_tokens * token_code_bytes],
+            code_budget,
+            codes: vec![0u8; code_budget],
             scales: vec![1f32; n_blocks * block_tokens * token_scales],
             free: (0..n_blocks).rev().collect(),
             ref_count: vec![0; n_blocks],
@@ -145,18 +204,14 @@ impl KvPool {
         })
     }
 
-    fn token_code_bytes_for(
-        precision: KvPrecision,
-        n_layers: usize,
-        kv_heads: usize,
-        head_dim: usize,
-    ) -> usize {
-        n_layers * 2 * kv_heads * precision.row_bytes(head_dim)
+    /// The current per-layer precision layout.
+    pub fn layout(&self) -> &KvLayout {
+        &self.layout
     }
 
     /// Bytes of code storage per token slot (all layers, K+V, all heads).
     pub fn token_code_bytes(&self) -> usize {
-        Self::token_code_bytes_for(self.precision, self.n_layers, self.kv_heads, self.head_dim)
+        self.layout.token_code_bytes(self.kv_heads, self.head_dim)
     }
 
     /// Bytes of scale storage per token slot (one f32 per layer × K/V ×
@@ -169,13 +224,36 @@ impl KvPool {
         self.n_layers * 2 * self.kv_heads
     }
 
-    /// Bytes per KV row (one head's codes for one token).
+    /// Bytes per KV row (one head's codes for one token) at layer 0 — only
+    /// meaningful for uniform layouts; per-layer consumers should use
+    /// [`KvPool::row_bytes_at`] or the layout's offset table.
     pub fn row_bytes(&self) -> usize {
-        self.precision.row_bytes(self.head_dim)
+        self.layout.row_bytes(0, self.head_dim)
     }
 
+    /// Bytes per KV row at layer `l`.
+    pub fn row_bytes_at(&self, layer: usize) -> usize {
+        self.layout.row_bytes(layer, self.head_dim)
+    }
+
+    /// Layer-0 precision — only meaningful for uniform layouts (kept for
+    /// the pre-`KvLayout` callers); mixed pools should ask [`KvPool::layout`].
     pub fn precision(&self) -> KvPrecision {
-        self.precision
+        self.layout.prec(0)
+    }
+
+    /// Byte offset of layer `l`'s K row for head `hh` within a token slot.
+    /// Token-slot layout: `[L][side(K=0,V=1)][Hkv][rb_l]` with per-layer
+    /// row bytes.
+    fn slot_k_off(&self, l: usize, hh: usize) -> usize {
+        2 * self.kv_heads * self.layout.prefix_row_bytes(l, self.head_dim)
+            + hh * self.layout.row_bytes(l, self.head_dim)
+    }
+
+    /// Byte offset of layer `l`'s V row for head `hh` within a token slot.
+    fn slot_v_off(&self, l: usize, hh: usize) -> usize {
+        2 * self.kv_heads * self.layout.prefix_row_bytes(l, self.head_dim)
+            + (self.kv_heads + hh) * self.layout.row_bytes(l, self.head_dim)
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -383,9 +461,9 @@ impl KvPool {
 
     /// Append one token's KV for **all layers**.
     ///
-    /// `k_codes`/`v_codes`: `[L, Hkv, row_bytes]` flattened (exactly the
-    /// decode graph's per-sequence output layout). `k_scales`/`v_scales`:
-    /// `[L, Hkv]`.
+    /// `k_codes`/`v_codes`: `[L, Hkv, rb_l]` flattened with per-layer row
+    /// bytes (exactly the decode graph's per-sequence output layout).
+    /// `k_scales`/`v_scales`: `[L, Hkv]`.
     pub fn append_token(
         &mut self,
         h: SeqHandle,
@@ -394,8 +472,7 @@ impl KvPool {
         v_codes: &[u8],
         v_scales: &[f32],
     ) -> Result<()> {
-        let rb = self.row_bytes();
-        let per_side = self.n_layers * self.kv_heads * rb;
+        let per_side = self.kv_heads * self.layout.sum_row_bytes(self.head_dim);
         if k_codes.len() != per_side || v_codes.len() != per_side {
             bail!("append_token codes size {} != {per_side}", k_codes.len());
         }
@@ -409,12 +486,14 @@ impl KvPool {
         let tsc = self.token_scales();
         let code_base = (blk * self.block_tokens + slot) * tcb;
         let scale_base = (blk * self.block_tokens + slot) * tsc;
-        // Token-slot layout: [L][side(K=0,V=1)][Hkv][row_bytes].
+        // Token-slot layout: [L][side(K=0,V=1)][Hkv][rb_l].
         for l in 0..self.n_layers {
+            let rb = self.layout.row_bytes(l, self.head_dim);
+            let src_base = self.kv_heads * self.layout.prefix_row_bytes(l, self.head_dim);
             for hh in 0..self.kv_heads {
-                let src = (l * self.kv_heads + hh) * rb;
-                let dst_k = code_base + ((l * 2) * self.kv_heads + hh) * rb;
-                let dst_v = code_base + ((l * 2 + 1) * self.kv_heads + hh) * rb;
+                let src = src_base + hh * rb;
+                let dst_k = code_base + self.slot_k_off(l, hh);
+                let dst_v = code_base + self.slot_v_off(l, hh);
                 self.codes[dst_k..dst_k + rb].copy_from_slice(&k_codes[src..src + rb]);
                 self.codes[dst_v..dst_v + rb].copy_from_slice(&v_codes[src..src + rb]);
                 let ssrc = l * self.kv_heads + hh;
@@ -427,10 +506,11 @@ impl KvPool {
 
     /// Append a prefill chunk's first `s_len` tokens.
     ///
-    /// `k_codes`/`v_codes`: `[L, Hkv, S_stride, row_bytes]` flattened (the
-    /// prefill graph's output layout, where `s_stride` is the compiled chunk
-    /// bucket — possibly larger than `s_len` when the prompt tail was
-    /// padded); scales `[L, Hkv, S_stride]`. Only real tokens are stored.
+    /// `k_codes`/`v_codes`: `[L, Hkv, S_stride, rb_l]` flattened with
+    /// per-layer row bytes (the prefill graph's output layout, where
+    /// `s_stride` is the compiled chunk bucket — possibly larger than
+    /// `s_len` when the prompt tail was padded); scales `[L, Hkv,
+    /// S_stride]`. Only real tokens are stored.
     pub fn append_chunk(
         &mut self,
         h: SeqHandle,
@@ -441,25 +521,28 @@ impl KvPool {
         v_codes: &[u8],
         v_scales: &[f32],
     ) -> Result<()> {
-        let rb = self.row_bytes();
         if s_len > s_stride {
             bail!("append_chunk: s_len {s_len} > s_stride {s_stride}");
         }
-        let expect = self.n_layers * self.kv_heads * s_stride * rb;
+        let sum_rb = self.layout.sum_row_bytes(self.head_dim);
+        let expect = self.kv_heads * s_stride * sum_rb;
         if k_codes.len() < expect || v_codes.len() < expect {
             bail!("append_chunk codes too small: {} < {expect}", k_codes.len());
         }
         // Re-slice per token and reuse append_token's layout logic.
-        let mut kc = vec![0u8; self.n_layers * self.kv_heads * rb];
-        let mut vc = vec![0u8; self.n_layers * self.kv_heads * rb];
+        let mut kc = vec![0u8; self.kv_heads * sum_rb];
+        let mut vc = vec![0u8; self.kv_heads * sum_rb];
         let mut ks = vec![0f32; self.n_layers * self.kv_heads];
         let mut vs = vec![0f32; self.n_layers * self.kv_heads];
         for t in 0..s_len {
             for l in 0..self.n_layers {
+                let rb = self.layout.row_bytes(l, self.head_dim);
+                let src_layer = self.kv_heads * s_stride * self.layout.prefix_row_bytes(l, self.head_dim);
+                let dst_layer = self.kv_heads * self.layout.prefix_row_bytes(l, self.head_dim);
                 for hh in 0..self.kv_heads {
-                    // src layout [L][Hkv][S_stride][rb]
-                    let src = ((l * self.kv_heads + hh) * s_stride + t) * rb;
-                    let dst = (l * self.kv_heads + hh) * rb;
+                    // src layout [L][Hkv][S_stride][rb_l]
+                    let src = src_layer + (hh * s_stride + t) * rb;
+                    let dst = dst_layer + hh * rb;
                     kc[dst..dst + rb].copy_from_slice(&k_codes[src..src + rb]);
                     vc[dst..dst + rb].copy_from_slice(&v_codes[src..src + rb]);
                     let ssrc = (l * self.kv_heads + hh) * s_stride + t;
@@ -540,8 +623,10 @@ impl KvPool {
     }
 
     /// Gather a batch of sequences into the padded decode-graph input
-    /// buffers: codes `[L, B, Hkv, T, row_bytes]`, scales `[L, B, Hkv, T]`.
-    /// Sequences shorter than `t_pad` leave zeros (masked by `kv_len`).
+    /// buffers: codes `[L, B, Hkv, T, rb_l]` (per-layer row bytes, so layer
+    /// `l` starts at `B × Hkv × T × prefix_row_bytes(l)`), scales `[L, B,
+    /// Hkv, T]`. Sequences shorter than `t_pad` leave zeros (masked by
+    /// `kv_len`).
     #[allow(clippy::too_many_arguments)]
     pub fn gather_batch(
         &self,
@@ -553,8 +638,7 @@ impl KvPool {
         vs_out: &mut [f32],
     ) -> Result<()> {
         let b = handles.len();
-        let rb = self.row_bytes();
-        let expect = self.n_layers * b * self.kv_heads * t_pad * rb;
+        let expect = b * self.kv_heads * t_pad * self.layout.sum_row_bytes(self.head_dim);
         if k_out.len() != expect || v_out.len() != expect {
             bail!("gather_batch: out buffer {} != {expect}", k_out.len());
         }
@@ -580,12 +664,14 @@ impl KvPool {
                 let code_base = (blk * self.block_tokens + slot) * tcb;
                 let scale_base = (blk * self.block_tokens + slot) * tsc;
                 for l in 0..self.n_layers {
+                    let rb = self.layout.row_bytes(l, self.head_dim);
+                    let dst_layer =
+                        b * self.kv_heads * t_pad * self.layout.prefix_row_bytes(l, self.head_dim);
                     for hh in 0..self.kv_heads {
-                        let src_k = code_base + ((l * 2) * self.kv_heads + hh) * rb;
-                        let src_v = code_base + ((l * 2 + 1) * self.kv_heads + hh) * rb;
-                        // dst layout [L][B][Hkv][T][rb]
-                        let dst =
-                            (((l * b + bi) * self.kv_heads + hh) * t_pad + t) * rb;
+                        let src_k = code_base + self.slot_k_off(l, hh);
+                        let src_v = code_base + self.slot_v_off(l, hh);
+                        // dst layout [L][B][Hkv][T][rb_l]
+                        let dst = dst_layer + ((bi * self.kv_heads + hh) * t_pad + t) * rb;
                         k_out[dst..dst + rb].copy_from_slice(&self.codes[src_k..src_k + rb]);
                         v_out[dst..dst + rb].copy_from_slice(&self.codes[src_v..src_v + rb]);
                         let sdst = ((l * b + bi) * self.kv_heads + hh) * t_pad + t;
@@ -597,6 +683,181 @@ impl KvPool {
         }
         Ok(())
     }
+
+    /// Drop a live sequence's tail back to `keep_tokens` (a block
+    /// multiple), releasing the dropped blocks. The ladder rung uses this
+    /// to rewind a restarted victim to its resident prompt prefix.
+    pub fn truncate_seq(&mut self, h: SeqHandle, keep_tokens: usize) -> Result<usize> {
+        let bt = self.block_tokens;
+        if keep_tokens % bt != 0 {
+            bail!("truncate_seq: keep {keep_tokens} is not a multiple of block_tokens {bt}");
+        }
+        let len = {
+            let s = self.seq_mut(h)?;
+            s.len
+        };
+        if keep_tokens > len {
+            bail!("truncate_seq: keep {keep_tokens} > sequence len {len}");
+        }
+        let dropped = {
+            let s = self.seq_mut(h)?;
+            s.len = keep_tokens;
+            s.blocks.split_off(keep_tokens / bt)
+        };
+        let n = dropped.len();
+        for b in dropped {
+            self.release_block(b);
+        }
+        Ok(n)
+    }
+
+    /// In-place precision laddering: transcode every resident block to
+    /// `target` (a downward move per [`KvLayout::can_transcode_to`]) and
+    /// re-divide the fixed byte budget into the larger block count the
+    /// narrower layout affords. Block ids are preserved — sequences, the
+    /// prefix index's pins, and ref counts all stay valid — and the newly
+    /// affordable block ids join the free list.
+    ///
+    /// Transcoded codes are bit-identical to quantizing the original rows
+    /// directly at the target precision (`quant::transcode`), so a
+    /// relayouted pool is indistinguishable from one that admitted at
+    /// `target` — the determinism contract the engine's ladder rung
+    /// depends on.
+    pub fn relayout(&mut self, target: &KvLayout) -> Result<RelayoutReport> {
+        if !self.layout.can_transcode_to(target) {
+            bail!(
+                "relayout from `{}` to `{}` is not a downward ladder move",
+                self.layout,
+                target
+            );
+        }
+        if *target == self.layout {
+            return Ok(RelayoutReport::default());
+        }
+        let bt = self.block_tokens;
+        let hd = self.head_dim;
+        let old_tcb = self.token_code_bytes();
+        let new_tcb = target.token_code_bytes(self.kv_heads, hd);
+        let new_n_blocks = self.code_budget / (bt * new_tcb);
+        debug_assert!(new_n_blocks >= self.n_blocks);
+        let tsc = self.token_scales();
+
+        // Blocks shrink in place, ascending: block i's new span
+        // [i·bt·new_tcb, (i+1)·bt·new_tcb) ends at or before its old span's
+        // end, and never reaches block i+1's old data — so with the old
+        // bytes scratched out first, the walk is overlap-safe.
+        let mut scratch = vec![0u8; bt * old_tcb];
+        let mut transcoded_blocks = 0usize;
+        for blk in 0..self.n_blocks {
+            if self.ref_count[blk] == 0 {
+                continue; // free block: bytes are garbage, nothing to move
+            }
+            transcoded_blocks += 1;
+            let old_base = blk * bt * old_tcb;
+            scratch.copy_from_slice(&self.codes[old_base..old_base + bt * old_tcb]);
+            let new_base = blk * bt * new_tcb;
+            for slot in 0..bt {
+                let so = slot * old_tcb;
+                let dn = new_base + slot * new_tcb;
+                let scale_base = (blk * bt + slot) * tsc;
+                for l in 0..self.n_layers {
+                    let (from, to) = (self.layout.prec(l), target.prec(l));
+                    let rb_o = from.row_bytes(hd);
+                    let rb_n = to.row_bytes(hd);
+                    let ob = 2 * self.kv_heads * self.layout.prefix_row_bytes(l, hd);
+                    let nb = 2 * self.kv_heads * target.prefix_row_bytes(l, hd);
+                    for side in 0..2 {
+                        for hh in 0..self.kv_heads {
+                            let src = so + ob + (side * self.kv_heads + hh) * rb_o;
+                            let dst = dn + nb + (side * self.kv_heads + hh) * rb_n;
+                            let sidx = scale_base + (l * 2 + side) * self.kv_heads + hh;
+                            if from == to {
+                                self.codes[dst..dst + rb_n]
+                                    .copy_from_slice(&scratch[src..src + rb_o]);
+                                continue;
+                            }
+                            let row = &scratch[src..src + rb_o];
+                            let out = &mut self.codes[dst..dst + rb_n];
+                            self.scales[sidx] = match (from, to) {
+                                (KvPrecision::F32, KvPrecision::Int8) => f32_row_to_int8(row, out),
+                                (KvPrecision::F32, KvPrecision::Int4) => f32_row_to_int4(row, out),
+                                (KvPrecision::Int8, KvPrecision::Int4) => {
+                                    int8_row_to_int4(row, self.scales[sidx], out)
+                                }
+                                _ => unreachable!("validated as a downward ladder move"),
+                            };
+                        }
+                    }
+                }
+            }
+        }
+
+        // Read + write traffic of the changed layers (the modeled HBM cost).
+        let mut per_block_rw = 0usize;
+        for l in 0..self.n_layers {
+            let (from, to) = (self.layout.prec(l), target.prec(l));
+            if from != to {
+                per_block_rw += bt * 2 * self.kv_heads * (from.row_bytes(hd) + to.row_bytes(hd));
+            }
+        }
+
+        // Re-divide the budget: same bytes, more (narrower) blocks.
+        let gained = new_n_blocks - self.n_blocks;
+        self.scales.resize(new_n_blocks * bt * tsc, 1.0);
+        self.ref_count.resize(new_n_blocks, 0);
+        self.free.extend(self.n_blocks..new_n_blocks);
+        self.n_blocks = new_n_blocks;
+        self.layout = target.clone();
+        Ok(RelayoutReport {
+            gained_blocks: gained,
+            transcoded_blocks,
+            transcoded_bytes: transcoded_blocks * per_block_rw,
+        })
+    }
+
+    /// Exact dry-run of [`relayout`](Self::relayout): the report it *would*
+    /// return, with no bytes moved. The preemption cost model prices a
+    /// ladder rung with this before committing to it.
+    pub fn relayout_estimate(&self, target: &KvLayout) -> Result<RelayoutReport> {
+        if !self.layout.can_transcode_to(target) {
+            bail!(
+                "relayout from `{}` to `{}` is not a downward ladder move",
+                self.layout,
+                target
+            );
+        }
+        if *target == self.layout {
+            return Ok(RelayoutReport::default());
+        }
+        let bt = self.block_tokens;
+        let hd = self.head_dim;
+        let new_tcb = target.token_code_bytes(self.kv_heads, hd);
+        let mut per_block_rw = 0usize;
+        for l in 0..self.n_layers {
+            let (from, to) = (self.layout.prec(l), target.prec(l));
+            if from != to {
+                per_block_rw += bt * 2 * self.kv_heads * (from.row_bytes(hd) + to.row_bytes(hd));
+            }
+        }
+        let transcoded_blocks = self.used_blocks();
+        Ok(RelayoutReport {
+            gained_blocks: self.code_budget / (bt * new_tcb) - self.n_blocks,
+            transcoded_blocks,
+            transcoded_bytes: transcoded_blocks * per_block_rw,
+        })
+    }
+}
+
+/// What one [`KvPool::relayout`] ladder move did.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RelayoutReport {
+    /// Extra blocks the narrower layout affords inside the same budget.
+    pub gained_blocks: usize,
+    /// Resident blocks that were transcoded in place.
+    pub transcoded_blocks: usize,
+    /// Modeled read+write HBM traffic of the transcode (changed layers
+    /// only), in bytes.
+    pub transcoded_bytes: usize,
 }
 
 #[cfg(test)]
@@ -1112,5 +1373,169 @@ mod tests {
             }
             assert_eq!(p.free_blocks(), total, "everything reclaimed");
         });
+    }
+
+    fn f32_row_bytes(vals: &[f32]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn relayout_transcode_is_bit_identical_to_direct_quantization() {
+        use crate::quant::{quantize_kv_int4, quantize_kv_int8};
+        // kv16 pool (2 layers, 2 heads, head_dim 8): rows are exact floats.
+        let mut p = pool(KvPrecision::F32);
+        let h = p.alloc_seq();
+        let row = |t: usize, l: usize, hh: usize, side: usize| -> Vec<f32> {
+            (0..8)
+                .map(|i| ((t * 131 + l * 17 + hh * 5 + side * 3 + i) % 23) as f32 * 0.31 - 3.0)
+                .collect()
+        };
+        for t in 0..6 {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            for l in 0..2 {
+                for hh in 0..2 {
+                    k.extend(f32_row_bytes(&row(t, l, hh, 0)));
+                    v.extend(f32_row_bytes(&row(t, l, hh, 1)));
+                }
+            }
+            let s = vec![1.0f32; 4];
+            p.append_token(h, &k, &s, &v, &s).unwrap();
+        }
+        let total16 = p.total_blocks();
+
+        // Step down layer 1 only: kv16 → l0:kv16,l1:kv8.
+        let mid = KvLayout::parse("l0:kv16,l1:kv8", 2).unwrap();
+        let rep = p.relayout(&mid).unwrap();
+        assert_eq!(rep.transcoded_blocks, 2, "both resident blocks moved");
+        assert!(rep.gained_blocks > 0 && rep.transcoded_bytes > 0);
+        assert_eq!(p.total_blocks(), total16 + rep.gained_blocks);
+        assert_eq!(p.layout(), &mid);
+
+        let t_pad = 8;
+        let gather = |p: &KvPool| {
+            let sum_rb: usize = (0..2).map(|l| p.row_bytes_at(l)).sum();
+            let mut k_out = vec![0u8; 2 * t_pad * sum_rb];
+            let mut v_out = k_out.clone();
+            let mut ks_out = vec![0f32; 2 * 2 * t_pad];
+            let mut vs_out = ks_out.clone();
+            p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+                .unwrap();
+            (k_out, ks_out, v_out, vs_out)
+        };
+        let (k_out, ks_out, _, _) = gather(&p);
+        // Layer 0 is untouched f32 bytes; layer 1 codes + scales must be
+        // bit-identical to quantizing the original rows directly at kv8.
+        for t in 0..6 {
+            for hh in 0..2 {
+                let rb0 = 32;
+                let dst0 = ((hh * t_pad) + t) * rb0;
+                assert_eq!(&k_out[dst0..dst0 + rb0], &f32_row_bytes(&row(t, 0, hh, 0))[..]);
+                let (c8, s8) = quantize_kv_int8(&row(t, 1, hh, 0));
+                let rb1 = 8;
+                let base1 = 2 * t_pad * 32;
+                let dst1 = base1 + (hh * t_pad + t) * rb1;
+                assert_eq!(
+                    &k_out[dst1..dst1 + rb1],
+                    &c8.iter().map(|&c| c as u8).collect::<Vec<u8>>()[..]
+                );
+                let sdst = ((1 * 1 + 0) * 2 + hh) * t_pad + t;
+                assert_eq!(ks_out[sdst].to_bits(), s8.to_bits());
+            }
+        }
+
+        // Second rung: l0 kv16→kv4 direct, l1 kv8→kv4 from resident codes.
+        // Both must land bitwise on direct kv4 quantization (the nested-int4
+        // transitivity the restart determinism contract needs).
+        let lo = KvLayout::uniform(KvPrecision::Int4, 2);
+        p.relayout(&lo).unwrap();
+        let (k_out, ks_out, v_out, vs_out) = gather(&p);
+        for t in 0..6 {
+            for l in 0..2 {
+                for hh in 0..2 {
+                    let (c4k, s4k) = quantize_kv_int4(&row(t, l, hh, 0));
+                    let (c4v, s4v) = quantize_kv_int4(&row(t, l, hh, 1));
+                    let rb = 4;
+                    let base = l * 2 * t_pad * rb;
+                    let dst = base + (hh * t_pad + t) * rb;
+                    assert_eq!(&k_out[dst..dst + rb], &c4k[..], "t{t} l{l} h{hh} K");
+                    assert_eq!(&v_out[dst..dst + rb], &c4v[..], "t{t} l{l} h{hh} V");
+                    let sdst = (l * 2 + hh) * t_pad + t;
+                    assert_eq!(ks_out[sdst].to_bits(), s4k.to_bits());
+                    assert_eq!(vs_out[sdst].to_bits(), s4v.to_bits());
+                }
+            }
+        }
+        assert_eq!(p.free_blocks() + p.used_blocks(), p.total_blocks());
+        p.free_seq(h);
+        assert_eq!(p.free_blocks(), p.total_blocks());
+    }
+
+    #[test]
+    fn truncate_seq_releases_tail_blocks() {
+        let mut p = pool(KvPrecision::Int8);
+        let h = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 5);
+        for _ in 0..10 {
+            p.append_token(h, &k, &ks, &v, &vs).unwrap(); // 3 blocks: 4+4+2
+        }
+        assert_eq!(p.free_blocks(), 5);
+        assert!(p.truncate_seq(h, 5).is_err(), "non-block-multiple keep");
+        assert!(p.truncate_seq(h, 12).is_err(), "keep beyond len");
+        assert_eq!(p.truncate_seq(h, 4).unwrap(), 2);
+        assert_eq!(p.seq_len(h), 4);
+        assert_eq!(p.free_blocks(), 7);
+        // Appending after a truncate opens a fresh block cleanly.
+        p.append_token(h, &k, &ks, &v, &vs).unwrap();
+        assert_eq!(p.seq_len(h), 5);
+        assert_eq!(p.free_blocks(), 6);
+        assert_eq!(p.truncate_seq(h, 0).unwrap(), 2);
+        assert_eq!(p.free_blocks(), 8);
+        p.free_seq(h);
+        assert_eq!(p.live_seqs(), 0);
+    }
+
+    #[test]
+    fn relayout_preserves_sharing_and_rejects_upward_moves() {
+        let mut p = pool(KvPrecision::Int8);
+        let h1 = p.alloc_seq();
+        let (k, ks, v, vs) = tok_data(&p, 6);
+        for _ in 0..6 {
+            p.append_token(h1, &k, &ks, &v, &vs).unwrap();
+        }
+        let h2 = p.fork_seq(h1).unwrap();
+        let shared = p.seq_blocks(h1).to_vec();
+        let used = p.used_blocks();
+
+        let rep = p.relayout(&KvLayout::uniform(KvPrecision::Int4, 2)).unwrap();
+        assert_eq!(rep.transcoded_blocks, used);
+        assert_eq!(p.seq_blocks(h1), shared.as_slice(), "block ids preserved");
+        assert_eq!(p.seq_blocks(h2), shared.as_slice());
+        for &b in &shared {
+            assert_eq!(p.block_ref_count(b), 2, "sharing survives the ladder");
+        }
+        assert_eq!(p.free_blocks() + p.used_blocks(), p.total_blocks());
+
+        // Both forks still gather identical bytes at the new layout.
+        let t_pad = 8;
+        let gather = |p: &KvPool, h| {
+            let rb = p.row_bytes();
+            let mut k_out = vec![0u8; 2 * 2 * t_pad * rb];
+            let mut v_out = k_out.clone();
+            let mut ks_out = vec![0f32; 2 * 2 * t_pad];
+            let mut vs_out = ks_out.clone();
+            p.gather_batch(&[Some(h)], t_pad, &mut k_out, &mut ks_out, &mut v_out, &mut vs_out)
+                .unwrap();
+            (k_out, ks_out, v_out, vs_out)
+        };
+        assert_eq!(gather(&p, h1), gather(&p, h2));
+
+        assert!(
+            p.relayout(&KvLayout::uniform(KvPrecision::Int8, 2)).is_err(),
+            "no up-laddering"
+        );
+        p.free_seq(h1);
+        p.free_seq(h2);
+        assert_eq!(p.free_blocks(), p.total_blocks());
     }
 }

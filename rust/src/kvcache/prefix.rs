@@ -27,6 +27,7 @@
 
 use std::collections::{HashMap, HashSet};
 
+use super::layout::KvLayout;
 use super::pool::{KvPool, KvPrecision};
 
 /// Effectiveness counters (exported through
@@ -45,6 +46,9 @@ pub struct PrefixCacheStats {
     pub inserted_blocks: usize,
     /// Cached blocks evicted back to the free list.
     pub evicted_blocks: usize,
+    /// Cached blocks dropped because the pool laddered to a new layout
+    /// (their keys belonged to the old precision's key space).
+    pub invalidated_blocks: usize,
 }
 
 #[derive(Debug)]
@@ -59,10 +63,10 @@ struct Node {
     last_used: u64,
 }
 
-/// The prefix index. One instance per pool — and therefore per precision.
+/// The prefix index. One instance per pool — and therefore per layout.
 #[derive(Debug)]
 pub struct PrefixCache {
-    precision: KvPrecision,
+    layout: KvLayout,
     block_tokens: usize,
     /// Max blocks the index may pin (0 = bounded only by the pool).
     budget_blocks: usize,
@@ -72,16 +76,17 @@ pub struct PrefixCache {
     pub stats: PrefixCacheStats,
 }
 
-/// Root key: seeds every chain with the KV precision and block geometry so
-/// kv16/kv8/kv4 indexes can never alias each other's entries.
+/// Root key: seeds every chain with the full per-layer KV layout and the
+/// block geometry, so indexes over pools that differ in *any* layer's
+/// precision (kv16/kv8/kv4 uniform tiers included) can never alias each
+/// other's entries.
+pub(crate) fn layout_root_key(layout: &KvLayout, block_tokens: usize) -> u64 {
+    layout.fingerprint().wrapping_add((block_tokens as u64).rotate_left(32))
+}
+
+/// Uniform-precision convenience wrapper over [`layout_root_key`].
 pub(crate) fn root_key(precision: KvPrecision, block_tokens: usize) -> u64 {
-    let tag: u64 = match precision {
-        KvPrecision::F32 => 16,
-        KvPrecision::Int8 => 8,
-        KvPrecision::Int4 => 4,
-    };
-    (0xC0FF_EE00_D15E_A5E5u64 ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
-        .wrapping_add((block_tokens as u64).rotate_left(32))
+    layout_root_key(&KvLayout::uniform(precision, 1), block_tokens)
 }
 
 /// FNV-style chain hash of one token block on top of its prefix's key.
@@ -126,20 +131,53 @@ pub fn route_key(prompt: &[i32], block_tokens: usize, max_blocks: usize) -> u64 
 }
 
 impl PrefixCache {
+    /// Uniform-precision index (the pre-`KvLayout` constructor).
     pub fn new(precision: KvPrecision, block_tokens: usize, budget_blocks: usize) -> Self {
+        Self::with_layout(KvLayout::uniform(precision, 1), block_tokens, budget_blocks)
+    }
+
+    /// Index over a pool with a per-layer precision layout; the root key is
+    /// a hash of the full layout, so chains from different layouts never
+    /// alias.
+    pub fn with_layout(layout: KvLayout, block_tokens: usize, budget_blocks: usize) -> Self {
+        let root = layout_root_key(&layout, block_tokens);
         Self {
-            precision,
+            layout,
             block_tokens,
             budget_blocks,
-            root: root_key(precision, block_tokens),
+            root,
             nodes: HashMap::new(),
             clock: 0,
             stats: PrefixCacheStats::default(),
         }
     }
 
+    /// The layout this index's keys are seeded with.
+    pub fn layout(&self) -> &KvLayout {
+        &self.layout
+    }
+
+    /// Layer-0 precision of the index's layout (uniform-layout callers).
     pub fn precision(&self) -> KvPrecision {
-        self.precision
+        self.layout.prec(0)
+    }
+
+    /// The pool laddered every resident block to `layout`: every cached
+    /// entry's key belongs to the *old* layout's key space, so the whole
+    /// index is invalidated — nodes are dropped, their pool pins released —
+    /// and the root is re-seeded from the new layout. Returns the number of
+    /// invalidated blocks. (Blocks re-enter the index organically as
+    /// admission-time prefills at the new layout index them; a stale-layout
+    /// hit is impossible because lookups walk from the new root.)
+    pub fn invalidate_for_relayout(&mut self, pool: &mut KvPool, layout: KvLayout) -> usize {
+        let dropped = self.nodes.len();
+        for (_, n) in self.nodes.drain() {
+            pool.release_block(n.block);
+        }
+        self.stats.invalidated_blocks += dropped;
+        self.root = layout_root_key(&layout, self.block_tokens);
+        self.layout = layout;
+        dropped
     }
 
     /// Blocks currently pinned by the index.
@@ -466,6 +504,45 @@ mod tests {
         let mut c = shared.clone();
         c.push(77);
         assert_eq!(route_key(&c, BT, 8), route_key(&shared, BT, 8));
+    }
+
+    #[test]
+    fn relayout_invalidates_instead_of_serving_stale_precision() {
+        let mut p = pool(8); // uniform kv8, 1 layer
+        let mut c = PrefixCache::with_layout(p.layout().clone(), BT, 0);
+        let pr = prompt(8, 11);
+        let (h, blocks) = fill(&mut p, &pr);
+        c.insert(&mut p, &pr, &blocks);
+        p.free_seq(h);
+        assert_eq!(c.lookup(&pr, usize::MAX).0, 8, "shared prefix resident");
+
+        // Ladder the shared prefix down pool-wide: kv8 → kv4.
+        let target = KvLayout::uniform(KvPrecision::Int4, 1);
+        let dropped = c.invalidate_for_relayout(&mut p, target.clone());
+        p.relayout(&target).unwrap();
+        assert_eq!(dropped, 2);
+        assert_eq!(c.stats.invalidated_blocks, 2);
+        assert_eq!(c.cached_blocks(), 0);
+        // Never a stale hit: old chains cannot match under the new root.
+        assert_eq!(c.lookup(&pr, usize::MAX).0, 0);
+        assert_eq!(c.peek_hit_tokens(&pr, usize::MAX), 0);
+        // The index released its pins; nothing leaks.
+        assert_eq!(p.free_blocks(), p.total_blocks());
+        assert_eq!(c.layout(), &target);
+    }
+
+    #[test]
+    fn layout_roots_diverge_on_any_layer() {
+        let a = KvLayout::parse("l0:kv8,l1:kv8", 2).unwrap();
+        let b = KvLayout::parse("l0:kv8,l1:kv4", 2).unwrap();
+        assert_ne!(layout_root_key(&a, BT), layout_root_key(&b, BT));
+        assert_ne!(layout_root_key(&a, BT), layout_root_key(&a, 2 * BT));
+        let toks = prompt(BT, 12);
+        assert_ne!(
+            chain_key(layout_root_key(&a, BT), &toks),
+            chain_key(layout_root_key(&b, BT), &toks),
+            "same tokens under different layouts must never match"
+        );
     }
 
     #[test]

@@ -47,11 +47,12 @@ USAGE:
                   [--artifacts DIR] [--max-batch N] [--max-requests N]
                   [--device A100|H100|L40S|RTX4090] [--tp N]
                   [--prefix-cache] [--prefix-cache-blocks N]
-                  [--preemption abort|swap|recompute] [--swap-budget-blocks N]
+                  [--preemption abort|swap|recompute|ladder] [--swap-budget-blocks N]
+                  [--kv-layout l0:kv16,l1:kv8,...] [--kv-ladder off|auto]
                   [--replicas N] [--router-policy round_robin|least_loaded|prefix_affinity]
-                  [--replica-spec fmt,kv,device[,tpN]]... [--queue-depth N]
-                  [--affinity-blocks N]
-  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|all>
+                  [--replica-spec fmt,kv,device[,tpN][,layout=…][,ladder=…]]...
+                  [--queue-depth N] [--affinity-blocks N]
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|all>
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
 
@@ -81,6 +82,16 @@ victim, swaps its quantized blocks to the host store (or releases them for
 recompute), re-queues it at the head, and resumes it bit-exactly when
 blocks free up. `--swap-budget-blocks` caps the host store (0 = unbounded);
 `{\"stats\": true}` reports swap-pool utilization and victim counts.
+
+`--kv-layout` admits the KV cache at a *per-layer* precision assignment
+(e.g. `l0:kv16,l1:kv8,l2:kv8,l3:kv4`, or a uniform `kv8`); sim backend
+only. `--kv-ladder auto` (with a lossless `--preemption` mode) lets the
+engine transcode the whole pool down one precision rung in place under KV
+pressure — freeing blocks without evicting anyone — before it falls back
+to swap/recompute. Replica specs take the same knobs per replica as
+`layout=l0:kv16;l1:kv8` (`;` between layers) and `ladder=auto` segments.
+Responses report `ladder_count` + `final_kv_layout`, and `{\"stats\":
+true}` reports the pool's current layout and ladder counters.
 ";
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -110,6 +121,11 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
             .parse()
             .map_err(|e| anyhow::anyhow!("{e}"))?,
         swap_budget_blocks: args.get_usize("swap-budget-blocks", 0),
+        kv_layout: args.get("kv-layout").map(str::to_string),
+        ladder_policy: args
+            .get_or("kv-ladder", "off")
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
         ..EngineConfig::default()
     })
 }
@@ -138,6 +154,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 precision: cfg.precision,
                 device: cfg.device.clone(),
                 tp: cfg.tp,
+                kv_layout: None,
+                ladder: None,
             });
         }
         // An explicit --replicas N wins: specs cycle to fill N (and

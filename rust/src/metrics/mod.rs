@@ -25,6 +25,9 @@ pub struct PrefixCacheSummary {
     pub prefill_tokens_skipped: usize,
     /// Cached blocks reclaimed under memory pressure.
     pub evicted_blocks: usize,
+    /// Cached blocks dropped wholesale by precision-ladder relayouts (a
+    /// laddered pool must never serve stale-precision prefixes).
+    pub invalidated_blocks: usize,
 }
 
 impl PrefixCacheSummary {
@@ -46,6 +49,7 @@ impl From<PrefixCacheStats> for PrefixCacheSummary {
             blocks_saved: s.blocks_shared,
             prefill_tokens_skipped: s.hit_tokens,
             evicted_blocks: s.evicted_blocks,
+            invalidated_blocks: s.invalidated_blocks,
         }
     }
 }
@@ -64,6 +68,16 @@ pub struct PreemptionSummary {
     pub recompute_preemptions: usize,
     /// Tokens queued for re-prefill by recompute preemptions.
     pub recomputed_tokens: usize,
+    /// Victims preserved by a pool-wide precision-ladder rung.
+    pub ladder_preemptions: usize,
+    /// Pool-wide ladder rungs taken.
+    pub ladder_events: usize,
+    /// Modeled HBM traffic of all ladder transcodes, bytes.
+    pub ladder_transcoded_bytes: usize,
+    /// Pool capacity gained by laddering, bytes.
+    pub ladder_freed_bytes: usize,
+    /// Generated tokens dropped (and regenerated) by ladder restarts.
+    pub ladder_dropped_tokens: usize,
     /// Pool blocks shipped to the host (cumulative).
     pub swapped_out_blocks: usize,
     /// Pool blocks restored from the host (cumulative).
@@ -82,6 +96,11 @@ impl PreemptionSummary {
             swap_preemptions: p.swap_preemptions,
             recompute_preemptions: p.recompute_preemptions,
             recomputed_tokens: p.recomputed_tokens,
+            ladder_preemptions: p.ladder_preemptions,
+            ladder_events: p.ladder_events,
+            ladder_transcoded_bytes: p.ladder_transcoded_bytes,
+            ladder_freed_bytes: p.ladder_freed_bytes,
+            ladder_dropped_tokens: p.ladder_dropped_tokens,
             swapped_out_blocks: s.swapped_out_blocks,
             swapped_in_blocks: s.swapped_in_blocks,
             swap_peak_blocks: s.peak_blocks,
@@ -358,8 +377,13 @@ mod tests {
             PreemptStats {
                 preemptions: 5,
                 swap_preemptions: 3,
-                recompute_preemptions: 2,
+                recompute_preemptions: 1,
                 recomputed_tokens: 80,
+                ladder_preemptions: 1,
+                ladder_events: 1,
+                ladder_transcoded_bytes: 4096,
+                ladder_freed_bytes: 2048,
+                ladder_dropped_tokens: 7,
                 oom_aborts: 1,
             },
             SwapStats {
@@ -372,6 +396,13 @@ mod tests {
             },
         );
         assert_eq!(s.preemptions, 5);
+        assert_eq!(
+            s.swap_preemptions + s.recompute_preemptions + s.ladder_preemptions,
+            s.preemptions,
+            "per-mechanism buckets partition the preemption count"
+        );
+        assert_eq!(s.ladder_events, 1);
+        assert_eq!(s.ladder_transcoded_bytes, 4096);
         assert_eq!(s.swapped_out_blocks, 12);
         assert_eq!(s.swap_peak_blocks, 8);
         assert!((s.swap_fraction() - 0.6).abs() < 1e-12);
@@ -388,10 +419,12 @@ mod tests {
             blocks_shared: 6,
             inserted_blocks: 8,
             evicted_blocks: 2,
+            invalidated_blocks: 5,
         });
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(s.blocks_saved, 6);
         assert_eq!(s.prefill_tokens_skipped, 96);
         assert_eq!(s.evicted_blocks, 2);
+        assert_eq!(s.invalidated_blocks, 5);
     }
 }

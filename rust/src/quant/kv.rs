@@ -5,23 +5,51 @@
 //! the attention kernel (the paper's attention pipeline, §3.4). The exact
 //! same scheme is implemented in `python/compile/quantize.py` so the Rust
 //! pool and the Pallas kernel agree bit-for-bit on the codes.
+//!
+//! INT4 is defined as a *nested* refinement of INT8: a row is first
+//! quantized to INT8 codes, and the INT4 codes are derived from those codes
+//! (`int4_from_int8`). This makes the in-place kv8→kv4 transcode in
+//! [`super::transcode`] bit-identical to quantizing the original row
+//! directly at INT4 — the invariant the precision-laddering preemption rung
+//! relies on for determinism.
+
+/// Resolve the symmetric scale for a max-abs value, guarding degenerate
+/// rows. All-zero rows and subnormal rows whose computed scale underflows
+/// to zero (or is non-finite) get `None`, which callers map to scale 1.0
+/// with all-zero codes — avoiding div-by-zero / NaN on the quantize path.
+fn kv_scale(maxabs: f32, levels: f32) -> Option<f32> {
+    let scale = maxabs / levels;
+    if scale > 0.0 && scale.is_finite() {
+        Some(scale)
+    } else {
+        None
+    }
+}
 
 /// Quantize one KV row (`head_dim` values) to INT8. Returns (codes, scale).
 pub fn quantize_kv_int8(row: &[f32]) -> (Vec<i8>, f32) {
     let maxabs = row.iter().fold(0f32, |m, x| m.max(x.abs()));
-    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let Some(scale) = kv_scale(maxabs, 127.0) else {
+        return (vec![0i8; row.len()], 1.0);
+    };
     let codes = row.iter().map(|x| (x / scale).round().clamp(-127.0, 127.0) as i8).collect();
     (codes, scale)
 }
 
-/// Quantize one KV row to INT4, packed two codes per byte (low nibble =
-/// even element). Returns (packed bytes, scale).
-pub fn quantize_kv_int4(row: &[f32]) -> (Vec<u8>, f32) {
-    let maxabs = row.iter().fold(0f32, |m, x| m.max(x.abs()));
-    let scale = if maxabs > 0.0 { maxabs / 7.0 } else { 1.0 };
-    let mut packed = vec![0u8; row.len().div_ceil(2)];
-    for (i, x) in row.iter().enumerate() {
-        let q = (x / scale).round().clamp(-7.0, 7.0) as i8;
+/// Derive INT4 packed codes from INT8 codes + scale (low nibble = even
+/// element). Returns (packed bytes, scale). `quantize_kv_int4` is defined
+/// as `int4_from_int8(quantize_kv_int8(row))`, so transcoding resident
+/// INT8 codes with this function is bit-identical to quantizing the
+/// original row directly at INT4.
+pub fn int4_from_int8(codes: &[i8], scale: f32) -> (Vec<u8>, f32) {
+    let mut packed = vec![0u8; codes.len().div_ceil(2)];
+    if codes.iter().all(|&c| c == 0) {
+        // Degenerate (zero / subnormal) rows keep the canonical scale 1.0.
+        return (packed, 1.0);
+    }
+    let scale4 = scale * (127.0 / 7.0);
+    for (i, &c) in codes.iter().enumerate() {
+        let q = ((c as f32) * (7.0 / 127.0)).round().clamp(-7.0, 7.0) as i8;
         let nib = (q as u8) & 0x0F;
         if i % 2 == 0 {
             packed[i / 2] |= nib;
@@ -29,7 +57,15 @@ pub fn quantize_kv_int4(row: &[f32]) -> (Vec<u8>, f32) {
             packed[i / 2] |= nib << 4;
         }
     }
-    (packed, scale)
+    (packed, scale4)
+}
+
+/// Quantize one KV row to INT4, packed two codes per byte (low nibble =
+/// even element). Returns (packed bytes, scale). Defined as the nested
+/// refinement of the INT8 codes — see [`int4_from_int8`].
+pub fn quantize_kv_int4(row: &[f32]) -> (Vec<u8>, f32) {
+    let (c8, s8) = quantize_kv_int8(row);
+    int4_from_int8(&c8, s8)
 }
 
 /// Dequantize INT8 codes with a scalar scale.
@@ -53,6 +89,13 @@ mod tests {
     use super::*;
     use crate::util::proptest::run_prop;
 
+    /// Nested INT4 pays at most half a step at each of the two rounding
+    /// stages: |x - c4*s4| <= 0.5*s8 + 0.5*s4.
+    fn int4_tol(s4: f32) -> f32 {
+        let s8 = s4 * (7.0 / 127.0);
+        (s4 + s8) * 0.5 + 1e-5
+    }
+
     #[test]
     fn int8_roundtrip() {
         let row: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.1).collect();
@@ -70,7 +113,7 @@ mod tests {
         assert_eq!(packed.len(), 16);
         let dq = dequantize_kv_int4(&packed, 32, scale);
         for (a, b) in row.iter().zip(&dq) {
-            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "{a} vs {b}");
+            assert!((a - b).abs() <= int4_tol(scale), "{a} vs {b}");
         }
     }
 
@@ -78,9 +121,38 @@ mod tests {
     fn zero_row_exact() {
         let row = vec![0f32; 16];
         let (codes, scale) = quantize_kv_int8(&row);
+        assert_eq!(scale, 1.0);
         assert_eq!(dequantize_kv(&codes, scale), row);
         let (packed, scale4) = quantize_kv_int4(&row);
+        assert_eq!(scale4, 1.0);
         assert_eq!(dequantize_kv_int4(&packed, 16, scale4), row);
+    }
+
+    #[test]
+    fn subnormal_row_degrades_to_zero_codes() {
+        // maxabs is subnormal, so maxabs/127 underflows to 0.0 — the old
+        // `maxabs > 0.0` guard missed this and produced a zero scale.
+        let row = vec![f32::MIN_POSITIVE / 4.0; 8];
+        let (codes, scale) = quantize_kv_int8(&row);
+        assert_eq!(scale, 1.0);
+        assert!(codes.iter().all(|&c| c == 0));
+        assert!(dequantize_kv(&codes, scale).iter().all(|v| v.is_finite()));
+        let (packed, scale4) = quantize_kv_int4(&row);
+        assert_eq!(scale4, 1.0);
+        assert!(packed.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn single_element_row() {
+        let row = vec![3.0f32];
+        let (codes, scale) = quantize_kv_int8(&row);
+        assert_eq!(codes, vec![127]);
+        assert!((scale - 3.0 / 127.0).abs() < 1e-9);
+        let (packed, scale4) = quantize_kv_int4(&row);
+        assert_eq!(packed.len(), 1);
+        assert_eq!(packed[0] & 0x0F, 7);
+        let dq = dequantize_kv_int4(&packed, 1, scale4);
+        assert!((dq[0] - 3.0).abs() <= int4_tol(scale4));
     }
 
     #[test]
@@ -89,8 +161,8 @@ mod tests {
         row[3] = -100.0;
         let (codes, _) = quantize_kv_int8(&row);
         assert_eq!(codes[3], -127);
-        let (packed, _) = quantize_kv_int4(&row);
-        let dq = dequantize_kv_int4(&packed, 8, 100.0 / 7.0);
+        let (packed, scale4) = quantize_kv_int4(&row);
+        let dq = dequantize_kv_int4(&packed, 8, scale4);
         assert!((dq[3] + 100.0).abs() < 1.0);
     }
 
@@ -104,6 +176,16 @@ mod tests {
     }
 
     #[test]
+    fn int4_is_nested_refinement_of_int8() {
+        let row: Vec<f32> = (0..64).map(|i| ((i * 37) % 17) as f32 * 0.25 - 2.0).collect();
+        let (c8, s8) = quantize_kv_int8(&row);
+        let (direct, sd) = quantize_kv_int4(&row);
+        let (nested, sn) = int4_from_int8(&c8, s8);
+        assert_eq!(direct, nested);
+        assert_eq!(sd.to_bits(), sn.to_bits());
+    }
+
+    #[test]
     fn prop_kv_roundtrip_error() {
         run_prop("kv-roundtrip", 0xCAFE, 50, |g| {
             let n = g.usize_in(1, 128);
@@ -114,7 +196,7 @@ mod tests {
             }
             let (c4, s4) = quantize_kv_int4(&row);
             for (a, b) in row.iter().zip(dequantize_kv_int4(&c4, n, s4)) {
-                assert!((a - b).abs() <= s4 * 0.5 + 1e-5);
+                assert!((a - b).abs() <= int4_tol(s4));
             }
         });
     }

@@ -21,7 +21,9 @@ pub mod kv;
 pub mod packing;
 pub mod qrearrange;
 pub mod swizzle;
+pub mod transcode;
 
 pub use groupwise::{GroupwiseQuant, QuantizedMatrix};
-pub use kv::{dequantize_kv, quantize_kv_int4, quantize_kv_int8};
+pub use kv::{dequantize_kv, int4_from_int8, quantize_kv_int4, quantize_kv_int8};
+pub use transcode::{f32_row_to_int4, f32_row_to_int8, int8_row_to_int4};
 pub use packing::{pack_weights_hw_aware, PackedWeights};

@@ -1,0 +1,130 @@
+//! In-place KV transcode kernels: re-quantize resident KV rows down the
+//! precision ladder (kv16→kv8, kv16→kv4, kv8→kv4) without round-tripping
+//! through the original activations.
+//!
+//! Invariant (load-bearing for the laddering preemption rung): transcoded
+//! codes are **bit-identical** to quantizing the original row directly at
+//! the target precision.
+//!
+//! * kv16 rows store exact little-endian f32 values (scale 1.0), so
+//!   kv16→kv8 / kv16→kv4 literally are `quantize_kv_int8` /
+//!   `quantize_kv_int4` applied to the decoded floats.
+//! * kv8→kv4 holds because INT4 is *defined* as the nested refinement of
+//!   the INT8 codes (`int4_from_int8` in [`super::kv`]); the original
+//!   floats are not needed.
+//!
+//! The kernels operate on raw row bytes as laid out in the paged KV pool
+//! (`kvcache::pool`): f32 rows are `head_dim * 4` bytes LE, int8 rows are
+//! `head_dim` bytes of two's-complement codes, int4 rows are
+//! `head_dim.div_ceil(2)` bytes packed low-nibble-even.
+
+use super::kv::{int4_from_int8, quantize_kv_int4, quantize_kv_int8};
+
+/// Decode a kv16 row (little-endian f32 bytes) into floats.
+fn f32_row(src: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(src.len() % 4, 0);
+    src.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Reinterpret an int8 row's raw bytes as codes.
+fn i8_row(src: &[u8]) -> Vec<i8> {
+    src.iter().map(|&b| b as i8).collect()
+}
+
+/// Transcode one kv16 row to kv8. `src` is `head_dim * 4` bytes, `dst` is
+/// `head_dim` bytes. Returns the new per-row scale.
+pub fn f32_row_to_int8(src: &[u8], dst: &mut [u8]) -> f32 {
+    let (codes, scale) = quantize_kv_int8(&f32_row(src));
+    debug_assert_eq!(dst.len(), codes.len());
+    for (d, c) in dst.iter_mut().zip(&codes) {
+        *d = *c as u8;
+    }
+    scale
+}
+
+/// Transcode one kv16 row to kv4. `src` is `head_dim * 4` bytes, `dst` is
+/// `head_dim.div_ceil(2)` bytes. Returns the new per-row scale.
+pub fn f32_row_to_int4(src: &[u8], dst: &mut [u8]) -> f32 {
+    let (packed, scale) = quantize_kv_int4(&f32_row(src));
+    debug_assert_eq!(dst.len(), packed.len());
+    dst.copy_from_slice(&packed);
+    scale
+}
+
+/// Transcode one kv8 row to kv4 straight from resident codes. `src` is
+/// `head_dim` bytes of int8 codes, `dst` is `head_dim.div_ceil(2)` bytes.
+/// Returns the new per-row scale.
+pub fn int8_row_to_int4(src: &[u8], src_scale: f32, dst: &mut [u8]) -> f32 {
+    let (packed, scale) = int4_from_int8(&i8_row(src), src_scale);
+    debug_assert_eq!(dst.len(), packed.len());
+    dst.copy_from_slice(&packed);
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::kv::dequantize_kv_int4;
+    use crate::util::proptest::run_prop;
+
+    fn f32_bytes(row: &[f32]) -> Vec<u8> {
+        row.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn prop_transcode_matches_direct_quantization_bitwise() {
+        run_prop("transcode-bit-identity", 0x7C0D_E4, 50, |g| {
+            let n = g.usize_in(1, 96);
+            let row = g.f32_vec(n, -8.0, 8.0);
+            let src = f32_bytes(&row);
+
+            // kv16 -> kv8 == direct int8.
+            let (c8, s8) = quantize_kv_int8(&row);
+            let mut dst8 = vec![0u8; n];
+            let got_s8 = f32_row_to_int8(&src, &mut dst8);
+            assert_eq!(got_s8.to_bits(), s8.to_bits());
+            assert_eq!(dst8, c8.iter().map(|&c| c as u8).collect::<Vec<u8>>());
+
+            // kv16 -> kv4 == direct int4.
+            let (c4, s4) = quantize_kv_int4(&row);
+            let mut dst4 = vec![0u8; n.div_ceil(2)];
+            let got_s4 = f32_row_to_int4(&src, &mut dst4);
+            assert_eq!(got_s4.to_bits(), s4.to_bits());
+            assert_eq!(dst4, c4);
+
+            // kv8 -> kv4 from resident codes == direct int4.
+            let mut lad4 = vec![0u8; n.div_ceil(2)];
+            let lad_s4 = int8_row_to_int4(&dst8, got_s8, &mut lad4);
+            assert_eq!(lad_s4.to_bits(), s4.to_bits());
+            assert_eq!(lad4, c4);
+        });
+    }
+
+    #[test]
+    fn degenerate_rows_transcode_to_canonical_zero() {
+        for row in [vec![0f32; 8], vec![f32::MIN_POSITIVE / 2.0; 8]] {
+            let src = f32_bytes(&row);
+            let mut dst8 = vec![0xAAu8; 8];
+            assert_eq!(f32_row_to_int8(&src, &mut dst8), 1.0);
+            assert!(dst8.iter().all(|&b| b == 0));
+            let mut dst4 = vec![0xAAu8; 4];
+            assert_eq!(f32_row_to_int4(&src, &mut dst4), 1.0);
+            assert!(dst4.iter().all(|&b| b == 0));
+            let mut lad4 = vec![0xAAu8; 4];
+            assert_eq!(int8_row_to_int4(&dst8, 1.0, &mut lad4), 1.0);
+            assert!(lad4.iter().all(|&b| b == 0));
+        }
+    }
+
+    #[test]
+    fn transcoded_values_stay_close_to_source() {
+        let row: Vec<f32> = (0..32).map(|i| (i as f32 - 15.5) * 0.37).collect();
+        let src = f32_bytes(&row);
+        let mut dst4 = vec![0u8; 16];
+        let s4 = f32_row_to_int4(&src, &mut dst4);
+        let s8 = s4 * (7.0 / 127.0);
+        for (a, b) in row.iter().zip(dequantize_kv_int4(&dst4, 32, s4)) {
+            assert!((a - b).abs() <= (s4 + s8) * 0.5 + 1e-5);
+        }
+    }
+}

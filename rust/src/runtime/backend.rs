@@ -21,6 +21,7 @@
 //! the engine appends back into the pool untouched.
 
 use crate::config::PrecisionFormat;
+use crate::kvcache::KvLayout;
 use crate::Result;
 
 /// The served model's architecture, as the backend reports it.
@@ -89,7 +90,13 @@ pub struct PrefillArgs<'a> {
     pub pos: usize,
     /// Padded context extent of the gathered cache tensors.
     pub t_pad: usize,
-    /// Gathered past KV codes, `[L, 1, Hkv, t_pad, row_bytes]`.
+    /// Per-layer KV precision of the gathered cache (and of the codes this
+    /// call must emit). Layer `l`'s rows are `layout.row_bytes(l, head_dim)`
+    /// wide; the flat codes tensors are layer-major with those per-layer
+    /// strides (layer `l` starts at `Hkv × t_pad ×
+    /// layout.prefix_row_bytes(l, head_dim)`).
+    pub layout: &'a KvLayout,
+    /// Gathered past KV codes, `[L, 1, Hkv, t_pad, row_bytes(l)]`.
     pub k_codes: &'a [u8],
     /// Gathered past K scales, `[L, 1, Hkv, t_pad]`.
     pub k_scales: &'a [f32],
@@ -106,7 +113,11 @@ pub struct DecodeArgs<'a> {
     pub kv_len: &'a [i32],
     /// Padded context extent of the gathered cache tensors.
     pub t_pad: usize,
-    /// Gathered KV codes, `[L, B, Hkv, t_pad, row_bytes]`.
+    /// Per-layer KV precision of the gathered cache (see
+    /// [`PrefillArgs::layout`]; layer `l` starts at `B × Hkv × t_pad ×
+    /// layout.prefix_row_bytes(l, head_dim)`).
+    pub layout: &'a KvLayout,
+    /// Gathered KV codes, `[L, B, Hkv, t_pad, row_bytes(l)]`.
     pub k_codes: &'a [u8],
     pub k_scales: &'a [f32],
     pub v_codes: &'a [u8],
@@ -116,11 +127,12 @@ pub struct DecodeArgs<'a> {
 /// What one backend invocation produced.
 ///
 /// Prefill: `logits` is `[bucket, vocab]` row-major (rows past `real` are
-/// padding); KV codes are `[L, Hkv, bucket, row_bytes]` with scales
-/// `[L, Hkv, bucket]` — the layout `KvPool::append_chunk` consumes.
+/// padding); KV codes are `[L, Hkv, bucket, row_bytes(l)]` with scales
+/// `[L, Hkv, bucket]` — the layout `KvPool::append_chunk` consumes (rows at
+/// layer `l` quantized to the request layout's per-layer precision).
 ///
-/// Decode: `logits` is `[B, vocab]`; KV codes are `[L, B, Hkv, row_bytes]`
-/// with scales `[L, B, Hkv]` — the per-token append layout.
+/// Decode: `logits` is `[B, vocab]`; KV codes are `[L, B, Hkv,
+/// row_bytes(l)]` with scales `[L, B, Hkv]` — the per-token append layout.
 #[derive(Debug, Clone)]
 pub struct StepOutputs {
     pub logits: Vec<f32>,

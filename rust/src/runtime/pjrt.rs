@@ -118,6 +118,20 @@ impl PjrtBackend {
         ])
     }
 
+    /// Compiled graphs exist per *uniform* KV precision only — a per-layer
+    /// mixed layout has no executable variant, so reject it loudly instead
+    /// of misreading strides.
+    fn check_layout(&self, layout: &crate::kvcache::KvLayout) -> Result<()> {
+        match layout.as_uniform() {
+            Some(p) if p == self.kv_prec => Ok(()),
+            _ => bail!(
+                "pjrt backend has no compiled variant for per-layer KV layout `{layout}` \
+                 (compiled graphs are uniform {}; run the sim backend for laddered layouts)",
+                self.kv_key
+            ),
+        }
+    }
+
     fn unpack(&self, outputs: Vec<HostTensor>, sim_time_s: f64) -> Result<StepOutputs> {
         let [logits, k_new, k_sc, v_new, v_sc] = take5(outputs)?;
         Ok(StepOutputs {
@@ -166,6 +180,7 @@ impl ExecutionBackend for PjrtBackend {
     }
 
     fn prefill(&self, args: &PrefillArgs<'_>) -> Result<StepOutputs> {
+        self.check_layout(args.layout)?;
         let bucket = args.tokens.len();
         let graph = Manifest::prefill_graph(self.wprec, self.kv_key, bucket);
         let [kc, ks, vc, vs] = self.cache_tensors(
@@ -186,6 +201,7 @@ impl ExecutionBackend for PjrtBackend {
     }
 
     fn decode(&self, args: &DecodeArgs<'_>) -> Result<StepOutputs> {
+        self.check_layout(args.layout)?;
         let bsize = args.tokens.len();
         let graph = Manifest::decode_graph(self.wprec, self.kv_key, bsize, args.t_pad);
         let [kc, ks, vc, vs] = self.cache_tensors(

@@ -37,7 +37,7 @@ use super::backend::{
 };
 use crate::config::{DType, DeviceProfile, ModelConfig, PrecisionFormat};
 use crate::gpusim::Framework;
-use crate::kvcache::KvPrecision;
+use crate::kvcache::{KvLayout, KvPrecision};
 use crate::quant::{self, GroupwiseQuant, QuantizedMatrix};
 use crate::serving_sim::{ServingSim, SimConfig, SimPrecision};
 use crate::util::rng::Rng;
@@ -114,8 +114,15 @@ impl SimBackend {
         Ok(Self { model, plan, precision, kv_prec, seed, embed_in, embed_out, timing })
     }
 
+    #[cfg(test)]
     fn rb(&self) -> usize {
         self.kv_prec.row_bytes(self.model.head_dim)
+    }
+
+    /// The uniform per-layer layout implied by the configured format's KV
+    /// dtype — what an engine admits at when no `--kv-layout` is given.
+    pub fn default_layout(&self) -> KvLayout {
+        KvLayout::uniform(self.kv_prec, self.model.n_layers)
     }
 
     /// The deterministic "true" (pre-quantization) K and V rows for token
@@ -136,9 +143,9 @@ impl SimBackend {
         (k, v)
     }
 
-    /// Quantize one row to the pool's storage format: (codes, scale).
-    fn quantize_row(&self, row: &[f32]) -> (Vec<u8>, f32) {
-        match self.kv_prec {
+    /// Quantize one row for layer storage at `prec`: (codes, scale).
+    fn quantize_row_at(prec: KvPrecision, row: &[f32]) -> (Vec<u8>, f32) {
+        match prec {
             KvPrecision::F32 => {
                 let mut bytes = Vec::with_capacity(row.len() * 4);
                 for x in row {
@@ -154,12 +161,19 @@ impl SimBackend {
         }
     }
 
-    /// Dequantize one cached row (`row_bytes` code bytes + scalar scale)
-    /// into a caller-owned scratch buffer of `head_dim` elements — the
-    /// context scans run this per (layer, head, token), so no per-row
+    /// Quantize one row at the backend's uniform default precision (test
+    /// helper; the serving path quantizes per layer via `quantize_row_at`).
+    #[cfg(test)]
+    fn quantize_row(&self, row: &[f32]) -> (Vec<u8>, f32) {
+        Self::quantize_row_at(self.kv_prec, row)
+    }
+
+    /// Dequantize one cached row (`row_bytes(prec)` code bytes + scalar
+    /// scale) into a caller-owned scratch buffer of `head_dim` elements —
+    /// the context scans run this per (layer, head, token), so no per-row
     /// allocation.
-    fn dequantize_row_into(&self, codes: &[u8], scale: f32, out: &mut [f32]) {
-        match self.kv_prec {
+    fn dequantize_row_into(prec: KvPrecision, codes: &[u8], scale: f32, out: &mut [f32]) {
+        match prec {
             KvPrecision::F32 => {
                 for (o, c) in out.iter_mut().zip(codes.chunks_exact(4)) {
                     *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
@@ -209,10 +223,12 @@ impl SimBackend {
 
     /// The per-(l, h) decayed sum of one sequence's cached rows
     /// `[0, kv_len)` read back through the quantized cache, for batch slot
-    /// `bi` of a gathered `[L, B, Hkv, t_pad, rb]` tensor set.
+    /// `bi` of a gathered `[L, B, Hkv, t_pad, rb(l)]` tensor set at the
+    /// given per-layer layout (layer-major, variable row stride).
     #[allow(clippy::too_many_arguments)]
     fn cached_context(
         &self,
+        layout: &KvLayout,
         bi: usize,
         b: usize,
         kv_len: usize,
@@ -223,20 +239,22 @@ impl SimBackend {
         v_scales: &[f32],
     ) -> Vec<f32> {
         let m = &self.model;
-        let rb = self.rb();
         let d = m.head_dim;
         let mut ctx = vec![0f32; d];
         let mut acc = vec![0f32; d];
         let mut k = vec![0f32; d];
         let mut v = vec![0f32; d];
         for l in 0..m.n_layers {
+            let prec = layout.prec(l);
+            let rb = layout.row_bytes(l, d);
+            let lbase = b * m.n_kv_heads * t_pad * layout.prefix_row_bytes(l, d);
             for h in 0..m.n_kv_heads {
                 acc.iter_mut().for_each(|x| *x = 0.0);
                 for t in 0..kv_len {
-                    let base = (((l * b + bi) * m.n_kv_heads + h) * t_pad + t) * rb;
+                    let base = lbase + ((bi * m.n_kv_heads + h) * t_pad + t) * rb;
                     let sbase = ((l * b + bi) * m.n_kv_heads + h) * t_pad + t;
-                    self.dequantize_row_into(&k_codes[base..base + rb], k_scales[sbase], &mut k);
-                    self.dequantize_row_into(&v_codes[base..base + rb], v_scales[sbase], &mut v);
+                    Self::dequantize_row_into(prec, &k_codes[base..base + rb], k_scales[sbase], &mut k);
+                    Self::dequantize_row_into(prec, &v_codes[base..base + rb], v_scales[sbase], &mut v);
                     Self::fold_row(&mut acc, &k, &v);
                 }
                 for (c, a) in ctx.iter_mut().zip(&acc) {
@@ -280,10 +298,14 @@ impl ExecutionBackend for SimBackend {
 
     fn prefill(&self, args: &PrefillArgs<'_>) -> Result<StepOutputs> {
         let m = &self.model;
-        let rb = self.rb();
         let d = m.head_dim;
+        let layout = args.layout;
+        if layout.n_layers() != m.n_layers {
+            bail!("prefill layout has {} layers, model has {}", layout.n_layers(), m.n_layers);
+        }
         let bucket = args.tokens.len();
-        let expect = m.n_layers * m.n_kv_heads * args.t_pad * rb;
+        let sum_rb = layout.sum_row_bytes(d);
+        let expect = m.n_kv_heads * args.t_pad * sum_rb;
         if args.k_codes.len() != expect || args.v_codes.len() != expect {
             bail!("prefill cache size {} != expected {expect}", args.k_codes.len());
         }
@@ -295,14 +317,17 @@ impl ExecutionBackend for SimBackend {
         }
 
         // Fresh (exact) rows for the chunk's real tokens, plus their
-        // quantized codes for the pool.
-        let mut k_out = vec![0u8; m.n_layers * m.n_kv_heads * bucket * rb];
-        let mut v_out = vec![0u8; m.n_layers * m.n_kv_heads * bucket * rb];
+        // per-layer quantized codes for the pool.
+        let mut k_out = vec![0u8; m.n_kv_heads * bucket * sum_rb];
+        let mut v_out = vec![0u8; m.n_kv_heads * bucket * sum_rb];
         let mut ks_out = vec![1f32; m.n_layers * m.n_kv_heads * bucket];
         let mut vs_out = vec![1f32; m.n_layers * m.n_kv_heads * bucket];
         // chunk_rows[l][h][j] = (k, v) exact rows.
         let mut chunk_rows: Vec<Vec<Vec<(Vec<f32>, Vec<f32>)>>> = Vec::with_capacity(m.n_layers);
         for l in 0..m.n_layers {
+            let prec = layout.prec(l);
+            let rb = layout.row_bytes(l, d);
+            let lbase = m.n_kv_heads * bucket * layout.prefix_row_bytes(l, d);
             let mut per_head = Vec::with_capacity(m.n_kv_heads);
             for h in 0..m.n_kv_heads {
                 let mut rows = Vec::with_capacity(args.real);
@@ -310,9 +335,9 @@ impl ExecutionBackend for SimBackend {
                     let tok = args.tokens[j];
                     self.check_token(tok)?;
                     let (k, v) = self.true_rows(l, h, tok, args.pos + j);
-                    let (kc, ks) = self.quantize_row(&k);
-                    let (vc, vs) = self.quantize_row(&v);
-                    let base = ((l * m.n_kv_heads + h) * bucket + j) * rb;
+                    let (kc, ks) = Self::quantize_row_at(prec, &k);
+                    let (vc, vs) = Self::quantize_row_at(prec, &v);
+                    let base = lbase + (h * bucket + j) * rb;
                     k_out[base..base + rb].copy_from_slice(&kc);
                     v_out[base..base + rb].copy_from_slice(&vc);
                     let sbase = (l * m.n_kv_heads + h) * bucket + j;
@@ -331,17 +356,22 @@ impl ExecutionBackend for SimBackend {
         let mut k_row = vec![0f32; d];
         let mut v_row = vec![0f32; d];
         for l in 0..m.n_layers {
+            let prec = layout.prec(l);
+            let rb = layout.row_bytes(l, d);
+            let lbase = m.n_kv_heads * args.t_pad * layout.prefix_row_bytes(l, d);
             for h in 0..m.n_kv_heads {
                 let mut acc = vec![0f32; d];
                 for t in 0..args.pos {
-                    let base = ((l * m.n_kv_heads + h) * args.t_pad + t) * rb;
+                    let base = lbase + (h * args.t_pad + t) * rb;
                     let sbase = (l * m.n_kv_heads + h) * args.t_pad + t;
-                    self.dequantize_row_into(
+                    Self::dequantize_row_into(
+                        prec,
                         &args.k_codes[base..base + rb],
                         args.k_scales[sbase],
                         &mut k_row,
                     );
-                    self.dequantize_row_into(
+                    Self::dequantize_row_into(
+                        prec,
                         &args.v_codes[base..base + rb],
                         args.v_scales[sbase],
                         &mut v_row,
@@ -388,22 +418,26 @@ impl ExecutionBackend for SimBackend {
 
     fn decode(&self, args: &DecodeArgs<'_>) -> Result<StepOutputs> {
         let m = &self.model;
-        let rb = self.rb();
+        let layout = args.layout;
+        if layout.n_layers() != m.n_layers {
+            bail!("decode layout has {} layers, model has {}", layout.n_layers(), m.n_layers);
+        }
         let b = args.tokens.len();
         if args.kv_len.len() != b {
             bail!("decode kv_len length {} != batch {b}", args.kv_len.len());
         }
-        let expect = m.n_layers * b * m.n_kv_heads * args.t_pad * rb;
+        let d = m.head_dim;
+        let sum_rb = layout.sum_row_bytes(d);
+        let expect = b * m.n_kv_heads * args.t_pad * sum_rb;
         if args.k_codes.len() != expect || args.v_codes.len() != expect {
             bail!("decode cache size {} != expected {expect}", args.k_codes.len());
         }
 
         let vocab = m.vocab_size;
-        let d = m.head_dim;
         let heads = (m.n_layers * m.n_kv_heads) as f32;
         let mut logits = vec![0f32; b * vocab];
-        let mut k_out = vec![0u8; m.n_layers * b * m.n_kv_heads * rb];
-        let mut v_out = vec![0u8; m.n_layers * b * m.n_kv_heads * rb];
+        let mut k_out = vec![0u8; b * m.n_kv_heads * sum_rb];
+        let mut v_out = vec![0u8; b * m.n_kv_heads * sum_rb];
         let mut ks_out = vec![1f32; m.n_layers * b * m.n_kv_heads];
         let mut vs_out = vec![1f32; m.n_layers * b * m.n_kv_heads];
 
@@ -420,7 +454,7 @@ impl ExecutionBackend for SimBackend {
             // Context: quantized history + this token's fresh (exact) rows;
             // the fresh rows also become the appended cache codes.
             let mut ctx = self.cached_context(
-                bi, b, kv_len, args.t_pad, args.k_codes, args.k_scales, args.v_codes,
+                layout, bi, b, kv_len, args.t_pad, args.k_codes, args.k_scales, args.v_codes,
                 args.v_scales,
             );
             // cached_context normalized by head count only; re-scale to add
@@ -428,14 +462,17 @@ impl ExecutionBackend for SimBackend {
             ctx.iter_mut().for_each(|x| *x *= heads);
             let mut fresh = vec![0f32; d];
             for l in 0..m.n_layers {
+                let prec = layout.prec(l);
+                let rb = layout.row_bytes(l, d);
+                let lbase = b * m.n_kv_heads * layout.prefix_row_bytes(l, d);
                 for h in 0..m.n_kv_heads {
                     let (k, v) = self.true_rows(l, h, tok, kv_len);
                     for (f, (kx, vx)) in fresh.iter_mut().zip(k.iter().zip(&v)) {
                         *f += kx + V_WEIGHT * vx;
                     }
-                    let (kc, ks) = self.quantize_row(&k);
-                    let (vc, vs) = self.quantize_row(&v);
-                    let base = ((l * b + bi) * m.n_kv_heads + h) * rb;
+                    let (kc, ks) = Self::quantize_row_at(prec, &k);
+                    let (vc, vs) = Self::quantize_row_at(prec, &v);
+                    let base = lbase + (bi * m.n_kv_heads + h) * rb;
                     k_out[base..base + rb].copy_from_slice(&kc);
                     v_out[base..base + rb].copy_from_slice(&vc);
                     let sbase = (l * b + bi) * m.n_kv_heads + h;
@@ -551,6 +588,7 @@ mod tests {
 
     fn prefill_chunk(b: &SimBackend, tokens: &[i32]) -> StepOutputs {
         let t_pad = b.model().max_seq_len;
+        let layout = b.default_layout();
         let (kc, ks) = empty_cache(b, t_pad);
         let (vc, vs) = (kc.clone(), ks.clone());
         let mut padded = tokens.to_vec();
@@ -560,6 +598,7 @@ mod tests {
             real: tokens.len(),
             pos: 0,
             t_pad,
+            layout: &layout,
             k_codes: &kc,
             k_scales: &ks,
             v_codes: &vc,
@@ -620,6 +659,7 @@ mod tests {
         // Same input token, different cached histories ⇒ different logits.
         let b = backend("W4A16KV8");
         let m = b.model();
+        let layout = b.default_layout();
         let t_pad = 64;
         let run = |hist_tok: i32| {
             let n = m.n_layers * m.n_kv_heads * t_pad;
@@ -646,6 +686,7 @@ mod tests {
                 tokens: &[42],
                 kv_len: &[1],
                 t_pad,
+                layout: &layout,
                 k_codes: &kc,
                 k_scales: &ks,
                 v_codes: &vc,
@@ -663,6 +704,7 @@ mod tests {
         // the property that makes greedy outputs scheduler-invariant.
         let b = backend("W4A16KV8");
         let m = b.model();
+        let layout = b.default_layout();
         let t_pad = 64;
         let n1 = m.n_layers * m.n_kv_heads * t_pad;
         let (kc1, ks1) = (vec![0u8; n1 * b.rb()], vec![1f32; n1]);
@@ -671,6 +713,7 @@ mod tests {
                 tokens: &[3],
                 kv_len: &[0],
                 t_pad,
+                layout: &layout,
                 k_codes: &kc1,
                 k_scales: &ks1,
                 v_codes: &kc1,
@@ -684,6 +727,7 @@ mod tests {
                 tokens: &[3, 200],
                 kv_len: &[0, 0],
                 t_pad,
+                layout: &layout,
                 k_codes: &kc2,
                 k_scales: &ks2,
                 v_codes: &kc2,
@@ -734,6 +778,7 @@ mod tests {
     fn bad_tokens_rejected() {
         let b = backend("W4A16KV8");
         let t_pad = b.model().max_seq_len;
+        let layout = b.default_layout();
         let (kc, ks) = empty_cache(&b, t_pad);
         let err = b
             .prefill(&PrefillArgs {
@@ -741,6 +786,7 @@ mod tests {
                 real: 1,
                 pos: 0,
                 t_pad,
+                layout: &layout,
                 k_codes: &kc,
                 k_scales: &ks,
                 v_codes: &kc,
@@ -748,5 +794,45 @@ mod tests {
             })
             .unwrap_err();
         assert!(err.to_string().contains("vocab"), "{err}");
+    }
+
+    #[test]
+    fn mixed_layout_prefill_emits_per_layer_widths() {
+        // A per-layer ladder layout: first chunk reads no cache, so logits
+        // agree with the uniform run, while emitted codes shrink to the
+        // per-layer widths and kv16 layers keep unit scales.
+        let b = backend("W4A16KV16");
+        let m = b.model().clone();
+        let mixed = KvLayout::parse("l0:kv16,l1:kv8,l2:kv8,l3:kv4", m.n_layers).unwrap();
+        let t_pad = m.max_seq_len;
+        let sum_rb = mixed.sum_row_bytes(m.head_dim);
+        let kc = vec![0u8; m.n_kv_heads * t_pad * sum_rb];
+        let ks = vec![1f32; m.n_layers * m.n_kv_heads * t_pad];
+        let mut padded = vec![9, 8, 7];
+        padded.resize(32, 0);
+        let out = b
+            .prefill(&PrefillArgs {
+                tokens: &padded,
+                real: 3,
+                pos: 0,
+                t_pad,
+                layout: &mixed,
+                k_codes: &kc,
+                k_scales: &ks,
+                v_codes: &kc,
+                v_scales: &ks,
+            })
+            .unwrap();
+        assert_eq!(out.k_codes.len(), m.n_kv_heads * 32 * sum_rb);
+        let uniform = prefill_chunk(&b, &[9, 8, 7]);
+        assert_eq!(out.logits, uniform.logits, "first chunk is cache-independent");
+        // Layer 0 (kv16) scales stay exactly 1.0; layer 3 (kv4) must not.
+        for h in 0..m.n_kv_heads {
+            for j in 0..3 {
+                assert_eq!(out.k_scales[h * 32 + j], 1.0);
+                let s3 = out.k_scales[(3 * m.n_kv_heads + h) * 32 + j];
+                assert!(s3 > 0.0 && s3 != 1.0, "kv4 layer scale {s3}");
+            }
+        }
     }
 }

@@ -363,7 +363,17 @@ pub fn stats_json(engine: &Engine, metrics: &MetricsCollector) -> Json {
         ("prefix_cache_blocks_saved", Json::from(c.blocks_saved)),
         ("prefill_tokens_skipped", Json::from(c.prefill_tokens_skipped)),
         ("prefix_cache_evicted_blocks", Json::from(c.evicted_blocks)),
+        ("prefix_cache_invalidated_blocks", Json::from(c.invalidated_blocks)),
         ("preemption_mode", Json::from(engine.config().preemption_mode.to_string())),
+        // The pool's *current* per-layer layout: starts at the admission
+        // layout and narrows one rung per ladder event.
+        ("kv_layout", Json::from(engine.kv_pool().layout().to_string())),
+        ("ladder_policy", Json::from(engine.config().ladder_policy.to_string())),
+        ("ladder_events", Json::from(p.ladder_events)),
+        ("ladder_preemptions", Json::from(p.ladder_preemptions)),
+        ("ladder_transcoded_bytes", Json::from(p.ladder_transcoded_bytes)),
+        ("ladder_freed_bytes", Json::from(p.ladder_freed_bytes)),
+        ("ladder_dropped_tokens", Json::from(p.ladder_dropped_tokens)),
         ("swap_blocks_used", Json::from(swap.used_blocks())),
         ("swap_budget_blocks", Json::from(swap.budget_blocks())),
         ("swap_utilization", Json::from(swap.utilization())),
@@ -425,6 +435,8 @@ pub fn encode_output(out: &RequestOutput) -> Json {
         ("prefix_hit_tokens", Json::from(out.prefix_hit_tokens)),
         ("preempt_count", Json::from(out.preempt_count)),
         ("swapped_in_blocks", Json::from(out.swapped_in_blocks)),
+        ("ladder_count", Json::from(out.ladder_count)),
+        ("final_kv_layout", Json::from(out.final_kv_layout.as_str())),
         ("abort_reason", reason),
     ])
 }
@@ -529,6 +541,8 @@ mod tests {
             prefix_hit_tokens: 0,
             preempt_count: 0,
             swapped_in_blocks: 0,
+            ladder_count: 0,
+            final_kv_layout: "kv8".into(),
             abort_reason: Some("request needs 40 KV blocks but the pool holds 8".into()),
         };
         let line = encode_output(&out).dump();
@@ -557,6 +571,8 @@ mod tests {
             prefix_hit_tokens: 0,
             preempt_count: 0,
             swapped_in_blocks: 0,
+            ladder_count: 0,
+            final_kv_layout: "kv16".into(),
             abort_reason: Some("kv pool exhausted mid-decode: KV pool exhausted".into()),
         };
         let parsed = Json::parse(&encode_output(&out).dump()).unwrap();
@@ -586,6 +602,8 @@ mod tests {
             prefix_hit_tokens: 32,
             preempt_count: 2,
             swapped_in_blocks: 5,
+            ladder_count: 1,
+            final_kv_layout: "l0:kv16,l1:kv8,l2:kv8,l3:kv4".into(),
             abort_reason: None,
         };
         let j = encode_output(&out);
@@ -596,6 +614,12 @@ mod tests {
         assert_eq!(parsed.req_usize("prefix_hit_tokens").unwrap(), 32);
         assert_eq!(parsed.req_usize("preempt_count").unwrap(), 2);
         assert_eq!(parsed.req_usize("swapped_in_blocks").unwrap(), 5);
+        assert_eq!(parsed.req_usize("ladder_count").unwrap(), 1);
+        assert_eq!(
+            parsed.req_str("final_kv_layout").unwrap(),
+            "l0:kv16,l1:kv8,l2:kv8,l3:kv4",
+            "the final precision assignment rides every output line"
+        );
         assert_eq!(parsed.get("abort_reason"), Some(&Json::Null));
         // The modeled-clock pair rides along for policy comparisons.
         assert_eq!(parsed.get("ttft_sim_s").unwrap().as_f64(), Some(0.125));
@@ -623,6 +647,11 @@ mod tests {
         assert_eq!(parsed.get("prefix_cache_hit_rate").unwrap().as_f64(), Some(0.0));
         // Swap-pool summary rides along (abort default: all zeros).
         assert_eq!(parsed.req_str("preemption_mode").unwrap(), "abort");
+        assert_eq!(parsed.req_str("kv_layout").unwrap(), "kv16");
+        assert_eq!(parsed.req_str("ladder_policy").unwrap(), "off");
+        assert_eq!(parsed.req_usize("ladder_events").unwrap(), 0);
+        assert_eq!(parsed.req_usize("ladder_freed_bytes").unwrap(), 0);
+        assert_eq!(parsed.req_usize("prefix_cache_invalidated_blocks").unwrap(), 0);
         assert_eq!(parsed.req_usize("swap_blocks_used").unwrap(), 0);
         assert_eq!(parsed.req_usize("preemptions").unwrap(), 0);
         assert_eq!(parsed.get("swap_utilization").unwrap().as_f64(), Some(0.0));

@@ -1,0 +1,434 @@
+//! Precision-laddering integration tests (DESIGN.md §10) on the hermetic
+//! sim backend: a randomized overload harness across admission layouts ×
+//! both scheduler policies, an engineered deterministic multi-rung
+//! descent, a pool-level bitwise equivalence property for in-place
+//! relayout, and the negative prefix-cache test.
+//!
+//! The load-bearing claims:
+//!   (a) ladder mode loses **nothing** — every request completes, and the
+//!       per-mechanism buckets partition `preemptions` exactly
+//!       (swap + recompute + ladder);
+//!   (b) pool + swap-store accounting balances to zero at drain;
+//!   (c) the determinism contract: greedy outputs at a given *final*
+//!       per-layer precision assignment are **bit-identical** to an
+//!       unpressured run admitted at that assignment, on both schedulers;
+//!   (d) in-place transcode (including multi-rung chains) produces codes
+//!       and scales bit-identical to admitting directly at the target
+//!       layout;
+//!   (e) the prefix index never serves a stale-precision block after a
+//!       ladder event — old-layout entries are invalidated wholesale,
+//!       while fresh blocks registered at the new layout still hit.
+
+use turbomind::config::engine::{LadderPolicy, PreemptionMode, SchedulerPolicy};
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use turbomind::kvcache::{KvLayout, KvPool, KvPrecision, SeqHandle};
+use turbomind::quant::{quantize_kv_int4, quantize_kv_int8};
+use turbomind::util::proptest::run_prop;
+
+fn cfg(
+    layout: &str,
+    policy: SchedulerPolicy,
+    mode: PreemptionMode,
+    ladder: LadderPolicy,
+    cache: bool,
+    block_tokens: usize,
+    pool_blocks: usize,
+) -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        kv_block_tokens: block_tokens,
+        kv_pool_tokens: block_tokens * pool_blocks,
+        prefill_chunk: 32,
+        scheduler: policy,
+        enable_prefix_cache: cache,
+        preemption_mode: mode,
+        ladder_policy: ladder,
+        kv_layout: Some(layout.to_string()),
+        ..EngineConfig::default()
+    }
+}
+
+/// Submit every request up front (a burst), run to drain, return outputs
+/// sorted by id alongside the engine for post-mortem accounting checks.
+fn run_burst(cfg: EngineConfig, reqs: &[(Vec<i32>, usize)]) -> (Engine, Vec<RequestOutput>) {
+    let mut e = Engine::new(cfg).unwrap();
+    for (prompt, gen) in reqs {
+        e.submit(Request::new(prompt.clone(), *gen)).unwrap();
+    }
+    let mut outs = e.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    (e, outs)
+}
+
+/// Drain-time accounting: only prefix-index-pinned blocks may remain in
+/// the pool, the swap store must be empty with entry-level conservation,
+/// and the preemption buckets must partition the total exactly.
+fn assert_drained(e: &Engine, ctx: &str) {
+    let pool = e.kv_pool();
+    assert_eq!(
+        pool.used_blocks(),
+        e.prefix_cached_blocks(),
+        "{ctx}: non-index blocks leaked at drain"
+    );
+    assert!(
+        (0..pool.total_blocks()).all(|b| pool.block_ref_count(b) <= 1),
+        "{ctx}: stray references at drain"
+    );
+    let swap = e.swap_store();
+    assert!(swap.is_empty(), "{ctx}: swap store must drain");
+    assert_eq!(
+        swap.stats.swap_outs,
+        swap.stats.swap_ins + swap.stats.dropped,
+        "{ctx}: every swap-out is either restored or downgraded"
+    );
+    let p = e.preempt_stats;
+    assert_eq!(
+        p.preemptions,
+        p.swap_preemptions + p.recompute_preemptions + p.ladder_preemptions,
+        "{ctx}: mechanism buckets must partition preemptions"
+    );
+}
+
+/// Replay `reqs` unpressured (roomy pool, ladder off) admitted at each
+/// distinct final layout seen in `outs`, and demand every pressured output
+/// is bit-identical to its replay — the determinism contract, stated
+/// against the *final* per-layer precision assignment.
+fn assert_replays_at_final_layout(
+    outs: &[RequestOutput],
+    reqs: &[(Vec<i32>, usize)],
+    policy: SchedulerPolicy,
+    block_tokens: usize,
+    ctx: &str,
+) {
+    let mut layouts: Vec<&str> = outs.iter().map(|o| o.final_kv_layout.as_str()).collect();
+    layouts.sort_unstable();
+    layouts.dedup();
+    for layout in layouts {
+        let (be, base) = run_burst(
+            cfg(layout, policy, PreemptionMode::Abort, LadderPolicy::Off, false, block_tokens, 512),
+            reqs,
+        );
+        assert_eq!(be.preempt_stats.preemptions, 0, "{ctx}: roomy replay must not preempt");
+        assert_eq!(be.preempt_stats.ladder_events, 0, "{ctx}: replay must not ladder");
+        for (o, b) in outs.iter().zip(&base) {
+            if o.final_kv_layout == layout {
+                assert_eq!(
+                    o.tokens, b.tokens,
+                    "{ctx}: req {} diverged from its final-layout ({layout}) replay",
+                    o.id
+                );
+                assert_eq!(o.finish, b.finish, "{ctx}: req {}", o.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_ladder_overload_loses_nothing_and_replays_at_final_layout() {
+    // Admission layout × both scheduler policies × prefix-cache × (ladder
+    // vs auto-on-swap) against ~3× oversubscribed pools. Aggregated
+    // counters prove the harness genuinely took ladder rungs.
+    let mut ladder_events = 0usize;
+    let mut ladder_preemptions = 0usize;
+    run_prop("ladder-overload", 0x1ADD_3600, 6, |g| {
+        let admit =
+            *g.choose(&["kv16", "l0:kv16,l1:kv8,l2:kv8,l3:kv4", "kv8"]);
+        let cache = g.bool();
+        // mode Ladder prefers the rung explicitly; mode Swap + policy Auto
+        // is the `--kv-ladder auto` path — both must be lossless.
+        let mode = if g.bool() { PreemptionMode::Ladder } else { PreemptionMode::Swap };
+        let n = g.usize_in(4, 6);
+        let mut reqs: Vec<(Vec<i32>, usize)> = Vec::new();
+        for _ in 0..n {
+            let p_len = g.usize_in(8, 15);
+            let gen = g.usize_in(16, 40);
+            let prompt: Vec<i32> = (0..p_len).map(|_| g.usize_in(0, 2047) as i32).collect();
+            reqs.push((prompt, gen));
+        }
+        let bt = 8usize;
+        let need = |r: &(Vec<i32>, usize)| (r.0.len() + r.1).div_ceil(bt);
+        let max_need = reqs.iter().map(need).max().unwrap();
+        let sum_need: usize = reqs.iter().map(need).sum();
+        let pool_blocks = max_need.max(sum_need / 3).max(2);
+
+        for policy in [SchedulerPolicy::Continuous, SchedulerPolicy::Static] {
+            let ctx = format!(
+                "{admit} {policy:?} {mode:?} cache={cache} pool={pool_blocks}blk (case {:#x})",
+                g.seed
+            );
+            let (e, outs) = run_burst(
+                cfg(admit, policy, mode, LadderPolicy::Auto, cache, bt, pool_blocks),
+                &reqs,
+            );
+            // (a) zero request loss.
+            assert_eq!(outs.len(), n, "{ctx}: outputs lost");
+            assert_eq!(e.preempt_stats.oom_aborts, 0, "{ctx}");
+            for o in &outs {
+                assert_ne!(o.finish, FinishReason::Aborted, "{ctx}: req {} aborted", o.id);
+            }
+            // (b) accounting drains to zero, buckets partition.
+            assert_drained(&e, &ctx);
+            // (c) bit-identical to an unpressured run admitted at the
+            // final assignment — on this scheduler.
+            assert_replays_at_final_layout(&outs, &reqs, policy, bt, &ctx);
+            ladder_events += e.preempt_stats.ladder_events;
+            ladder_preemptions += e.preempt_stats.ladder_preemptions;
+        }
+    });
+    assert!(ladder_events > 0, "harness never took a ladder rung — pools too roomy");
+    assert!(ladder_preemptions > 0, "harness never restarted a decoding victim via ladder");
+}
+
+/// Three 17-prompt/32-gen requests against an 8×16-token kv16 pool: all
+/// three admit holding 2 blocks, then cross block boundaries in lockstep.
+/// The single-rung gain (+1 block) cannot cover the later 3-block
+/// shortfall, so the deepened rung search must descend multiple rungs in
+/// one relayout — and the run still completes with zero loss.
+#[test]
+fn engineered_overflow_descends_multiple_rungs_and_stays_deterministic() {
+    let reqs: Vec<(Vec<i32>, usize)> = (0..3)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..17).map(|j| ((i * 211 + j * 7) % 2048) as i32).collect();
+            (prompt, 32usize)
+        })
+        .collect();
+    for policy in [SchedulerPolicy::Continuous, SchedulerPolicy::Static] {
+        let ctx = format!("engineered ladder {policy:?}");
+        let (e, outs) = run_burst(
+            cfg("kv16", policy, PreemptionMode::Ladder, LadderPolicy::Auto, false, 16, 8),
+            &reqs,
+        );
+        assert_eq!(outs.len(), 3, "{ctx}");
+        for o in &outs {
+            assert_eq!(o.finish, FinishReason::Length, "{ctx}: req {}", o.id);
+            assert_eq!(o.tokens.len(), 32, "{ctx}: req {}", o.id);
+        }
+        let p = e.preempt_stats;
+        assert!(p.ladder_events >= 1, "{ctx}: the rung must fire");
+        assert!(p.ladder_preemptions >= 1, "{ctx}: decoding victims restart via ladder");
+        assert!(p.ladder_dropped_tokens > 0, "{ctx}: restarts re-decode dropped tokens");
+        assert!(p.ladder_transcoded_bytes > 0, "{ctx}");
+        assert!(p.ladder_freed_bytes > 0, "{ctx}");
+        assert_eq!(p.oom_aborts, 0, "{ctx}");
+        // All three drained together after the last rung: one final layout,
+        // narrower than admission, and it is what the pool now holds.
+        let fin = outs[0].final_kv_layout.clone();
+        assert_ne!(fin, "kv16", "{ctx}: pool must have laddered down");
+        for o in &outs {
+            assert_eq!(o.final_kv_layout, fin, "{ctx}: req {}", o.id);
+        }
+        assert_eq!(e.kv_pool().layout().to_string(), fin, "{ctx}");
+        assert!(outs.iter().any(|o| o.ladder_count >= 1), "{ctx}: ladder_count must surface");
+        assert_drained(&e, &ctx);
+        assert_replays_at_final_layout(&outs, &reqs, policy, 16, &ctx);
+    }
+}
+
+/// Encode one float row at `prec` exactly as the sim graphs emit it: kv16
+/// rows are little-endian f32 with scale 1.0, kv8/kv4 are the per-row
+/// max-abs quantizers.
+fn encode_row(prec: KvPrecision, row: &[f32]) -> (Vec<u8>, f32) {
+    match prec {
+        KvPrecision::F32 => (row.iter().flat_map(|v| v.to_le_bytes()).collect(), 1.0),
+        KvPrecision::Int8 => {
+            let (c, s) = quantize_kv_int8(row);
+            (c.iter().map(|&x| x as u8).collect(), s)
+        }
+        KvPrecision::Int4 => quantize_kv_int4(row),
+    }
+}
+
+/// Flatten one token's per-(layer, head) float rows into the pool's
+/// `[L, Hkv, rb_l]` append payload at `layout`.
+fn token_payload(
+    layout: &KvLayout,
+    head_dim: usize,
+    heads: usize,
+    rows: &[Vec<f32>],
+) -> (Vec<u8>, Vec<f32>) {
+    let layers = layout.n_layers();
+    let mut codes = Vec::new();
+    let mut scales = Vec::with_capacity(layers * heads);
+    for l in 0..layers {
+        for hh in 0..heads {
+            let (c, s) = encode_row(layout.prec(l), &rows[l * heads + hh]);
+            assert_eq!(c.len(), layout.row_bytes(l, head_dim));
+            codes.extend_from_slice(&c);
+            scales.push(s);
+        }
+    }
+    (codes, scales)
+}
+
+fn append_all(
+    pool: &mut KvPool,
+    h: SeqHandle,
+    head_dim: usize,
+    heads: usize,
+    k_rows: &[Vec<Vec<f32>>],
+    v_rows: &[Vec<Vec<f32>>],
+) {
+    for (kr, vr) in k_rows.iter().zip(v_rows) {
+        let layout = pool.layout().clone();
+        let (kc, ks) = token_payload(&layout, head_dim, heads, kr);
+        let (vc, vs) = token_payload(&layout, head_dim, heads, vr);
+        pool.append_token(h, &kc, &ks, &vc, &vs).unwrap();
+    }
+}
+
+/// Gather one sequence and return (codes, scale bit patterns) for K and V.
+fn gather_bits(
+    pool: &KvPool,
+    h: SeqHandle,
+    t: usize,
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+) -> (Vec<u8>, Vec<u32>, Vec<u8>, Vec<u32>) {
+    let n = heads * t * pool.layout().sum_row_bytes(head_dim);
+    let mut k = vec![0u8; n];
+    let mut v = vec![0u8; n];
+    let mut ks = vec![0f32; layers * heads * t];
+    let mut vs = vec![0f32; layers * heads * t];
+    pool.gather_batch(&[Some(h)], t, &mut k, &mut ks, &mut v, &mut vs).unwrap();
+    let kb = ks.iter().map(|s| s.to_bits()).collect();
+    let vb = vs.iter().map(|s| s.to_bits()).collect();
+    (k, kb, v, vb)
+}
+
+#[test]
+fn relayout_transcode_matches_direct_admission_bitwise() {
+    // Three pools fed the same float rows: (A) admitted wide, laddered
+    // down in two rungs; (C) admitted wide, laddered straight to the final
+    // layout; (B) admitted at the final layout directly. All three must
+    // hold byte-identical codes and bit-identical scales — the transcode
+    // invariant, including multi-rung transitivity, that lets the engine's
+    // deepened rung search execute one relayout to a distant target.
+    run_prop("ladder-transcode-bitwise", 0x1ADD_B175, 25, |g| {
+        let layers = 4usize;
+        let heads = 2usize;
+        let head_dim = *g.choose(&[7usize, 8, 32]);
+        let bt = 4usize;
+        let pool_tokens = 16usize;
+        let admit = KvLayout::parse("kv16", layers).unwrap();
+        let mid = KvLayout::parse(
+            *g.choose(&["kv8", "l0:kv16,l1:kv8,l2:kv8,l3:kv4"]),
+            layers,
+        )
+        .unwrap();
+        let fin = KvLayout::parse(
+            *g.choose(&["kv4", "l0:kv8,l1:kv4,l2:kv4,l3:kv4"]),
+            layers,
+        )
+        .unwrap();
+        let t = g.usize_in(1, pool_tokens);
+        let row = |g: &mut turbomind::util::proptest::Gen| {
+            (0..layers * heads).map(|_| g.f32_vec(head_dim, -8.0, 8.0)).collect::<Vec<_>>()
+        };
+        let k_rows: Vec<Vec<Vec<f32>>> = (0..t).map(|_| row(g)).collect();
+        let v_rows: Vec<Vec<Vec<f32>>> = (0..t).map(|_| row(g)).collect();
+
+        let mut a = KvPool::with_layout(admit.clone(), heads, head_dim, bt, pool_tokens).unwrap();
+        let ha = a.alloc_seq();
+        append_all(&mut a, ha, head_dim, heads, &k_rows, &v_rows);
+        a.relayout(&mid).unwrap();
+        a.relayout(&fin).unwrap();
+
+        let mut c = KvPool::with_layout(admit, heads, head_dim, bt, pool_tokens).unwrap();
+        let hc = c.alloc_seq();
+        append_all(&mut c, hc, head_dim, heads, &k_rows, &v_rows);
+        c.relayout(&fin).unwrap();
+
+        let mut b = KvPool::with_layout(fin.clone(), heads, head_dim, bt, pool_tokens).unwrap();
+        let hb = b.alloc_seq();
+        append_all(&mut b, hb, head_dim, heads, &k_rows, &v_rows);
+
+        let ga = gather_bits(&a, ha, t, layers, heads, head_dim);
+        let gb = gather_bits(&b, hb, t, layers, heads, head_dim);
+        let gc = gather_bits(&c, hc, t, layers, heads, head_dim);
+        assert_eq!(ga, gb, "two-rung transcode != direct admission (seed {:#x})", g.seed);
+        assert_eq!(gc, gb, "one-shot transcode != direct admission (seed {:#x})", g.seed);
+        assert_eq!(a.layout().fingerprint(), fin.fingerprint());
+    });
+}
+
+#[test]
+fn prefix_cache_never_serves_stale_precision_blocks_after_ladder() {
+    // Phase 1: a 32-token prompt P caches two full kv16 blocks. Phase 2:
+    // an engineered overload ladders the pool down — which must drop P's
+    // kv16-keyed entries wholesale. Phase 3: resubmitting P gets ZERO hit
+    // tokens (the stale blocks are gone, not served) and decodes
+    // bit-identically to a fresh engine admitted at the final layout.
+    // Phase 4: a second resubmit hits the freshly registered new-layout
+    // blocks — legal reuse still works, with identical tokens.
+    let mut e = Engine::new(cfg(
+        "kv16",
+        SchedulerPolicy::Continuous,
+        PreemptionMode::Ladder,
+        LadderPolicy::Auto,
+        true,
+        16,
+        8,
+    ))
+    .unwrap();
+    let p: Vec<i32> = (0..32).map(|i| ((i * 3 + 5) % 2048) as i32).collect();
+    e.submit(Request::new(p.clone(), 4)).unwrap();
+    let out1 = e.run_to_completion().unwrap().pop().unwrap();
+    assert_eq!(out1.finish, FinishReason::Length);
+    assert_eq!(out1.final_kv_layout, "kv16", "no pressure yet — admission layout holds");
+    assert_eq!(e.prefix_cached_blocks(), 2, "P's two full prompt blocks are cached");
+    assert_eq!(e.prefix_cache_summary().unwrap().invalidated_blocks, 0);
+
+    // Disjoint prompts, lockstep growth: forces the ladder while P's
+    // blocks are still resident in the index.
+    for i in 0..3 {
+        let prompt: Vec<i32> =
+            (0..17).map(|j| ((1000 + i * 211 + j * 7) % 2048) as i32).collect();
+        e.submit(Request::new(prompt, 32)).unwrap();
+    }
+    let outs = e.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 3);
+    assert!(outs.iter().all(|o| o.finish == FinishReason::Length), "overload must be lossless");
+    assert!(e.preempt_stats.ladder_events >= 1, "the rung must fire");
+    let s = e.prefix_cache_summary().unwrap();
+    assert!(
+        s.invalidated_blocks >= 2,
+        "ladder must invalidate the stale kv16-keyed prefix blocks (got {})",
+        s.invalidated_blocks
+    );
+
+    // Phase 3: the stale entries must not serve.
+    e.submit(Request::new(p.clone(), 4)).unwrap();
+    let out2 = e.run_to_completion().unwrap().pop().unwrap();
+    assert_eq!(out2.finish, FinishReason::Length);
+    assert_eq!(
+        out2.prefix_hit_tokens, 0,
+        "invalidated kv16 blocks must never serve a hit at the laddered layout"
+    );
+    assert_ne!(out2.final_kv_layout, "kv16");
+    let (be, base) = run_burst(
+        cfg(
+            &out2.final_kv_layout,
+            SchedulerPolicy::Continuous,
+            PreemptionMode::Abort,
+            LadderPolicy::Off,
+            false,
+            16,
+            512,
+        ),
+        &[(p.clone(), 4)],
+    );
+    assert_eq!(be.preempt_stats.ladder_events, 0);
+    assert_eq!(
+        out2.tokens, base[0].tokens,
+        "post-ladder decode of P must match a fresh run admitted at the final layout"
+    );
+
+    // Phase 4: P's blocks re-registered at the new layout hit legally.
+    e.submit(Request::new(p.clone(), 4)).unwrap();
+    let out3 = e.run_to_completion().unwrap().pop().unwrap();
+    assert!(out3.prefix_hit_tokens > 0, "fresh same-layout blocks must still be reusable");
+    assert_eq!(out3.tokens, out2.tokens, "cache hits never change tokens");
+    assert_drained(&e, "prefix negative test");
+}
