@@ -1,0 +1,119 @@
+//! `cargo bench --bench codec_hotpath` — size sweeps over the word-level
+//! quant codecs and the planned KV gather, vectorized vs the retained
+//! scalar references.
+//!
+//! The summary trajectory (fixed shapes, JSON mirror, CI gate) lives in
+//! `turbomind bench hotpath`; this binary is for poking at how the win
+//! scales with row length and batch geometry.
+
+use std::time::Instant;
+
+use turbomind::kvcache::{KvLayout, KvPool};
+use turbomind::quant::kv::{
+    dequantize_kv_int4, dequantize_kv_int4_scalar, int4_from_int8, int4_from_int8_scalar,
+};
+use turbomind::quant::transcode::{int8_row_to_int4, int8_row_to_int4_scalar};
+use turbomind::util::rng::Rng;
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warm
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_codecs() {
+    println!("\n== int4 codec: word-at-a-time vs scalar, by row length ==");
+    let mut rng = Rng::new(7);
+    for &n in &[64usize, 512, 4096, 32768] {
+        let codes: Vec<i8> = (0..n).map(|_| (rng.next_u64() as u8) as i8).collect();
+        let iters = (1 << 22) / n.max(1);
+        let sp = time_it(iters, || {
+            std::hint::black_box(int4_from_int8_scalar(&codes, 1.0));
+        });
+        let vp = time_it(iters, || {
+            std::hint::black_box(int4_from_int8(&codes, 1.0));
+        });
+        let (packed, scale) = int4_from_int8(&codes, 1.0);
+        let su = time_it(iters, || {
+            std::hint::black_box(dequantize_kv_int4_scalar(&packed, n, scale));
+        });
+        let vu = time_it(iters, || {
+            std::hint::black_box(dequantize_kv_int4(&packed, n, scale));
+        });
+        let bytes: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
+        let mut dst = vec![0u8; n.div_ceil(2)];
+        let st = time_it(iters, || {
+            std::hint::black_box(int8_row_to_int4_scalar(&bytes, 0.02, &mut dst));
+        });
+        let vt = time_it(iters, || {
+            std::hint::black_box(int8_row_to_int4(&bytes, 0.02, &mut dst));
+        });
+        println!(
+            "  n={n:>5}: pack {:.2}x ({:.0} -> {:.0} ns)  unpack {:.2}x ({:.0} -> {:.0} ns)  transcode {:.2}x ({:.0} -> {:.0} ns)",
+            sp / vp, sp * 1e9, vp * 1e9,
+            su / vu, su * 1e9, vu * 1e9,
+            st / vt, st * 1e9, vt * 1e9,
+        );
+    }
+}
+
+fn bench_gather() {
+    println!("\n== kv gather: planned runs vs scalar walk (mixed 12-layer layout) ==");
+    let n_layers = 12usize;
+    let spec: String = (0..n_layers)
+        .map(|l| format!("l{l}:{}", ["kv16", "kv16", "kv8", "kv8", "kv4", "kv4"][l % 6]))
+        .collect::<Vec<_>>()
+        .join(",");
+    let (kv_heads, head_dim, bt, t_pad, seq_len) = (4usize, 32usize, 16usize, 256usize, 240usize);
+    for &b in &[1usize, 4, 8] {
+        let layout = KvLayout::parse(&spec, n_layers).unwrap();
+        let mut pool =
+            KvPool::with_layout(layout, kv_heads, head_dim, bt, b * t_pad + 4 * bt).unwrap();
+        let per_side = kv_heads * pool.layout().sum_row_bytes(head_dim);
+        let scales = vec![0.5f32; n_layers * kv_heads];
+        let mut rng = Rng::new(11);
+        let mut handles = Vec::new();
+        for _ in 0..b {
+            let h = pool.alloc_seq();
+            for _ in 0..seq_len {
+                let row: Vec<u8> = (0..per_side).map(|_| rng.next_u64() as u8).collect();
+                pool.append_token(h, &row, &scales, &row, &scales).unwrap();
+            }
+            handles.push(Some(h));
+        }
+        let code_bytes = b * kv_heads * t_pad * pool.layout().sum_row_bytes(head_dim);
+        let scale_len = n_layers * b * kv_heads * t_pad;
+        let mut k_out = vec![0u8; code_bytes];
+        let mut v_out = vec![0u8; code_bytes];
+        let mut ks = vec![0f32; scale_len];
+        let mut vs = vec![0f32; scale_len];
+        let ss = time_it(20, || {
+            pool.gather_batch_scalar(&handles, t_pad, &mut k_out, &mut ks, &mut v_out, &mut vs)
+                .unwrap();
+        });
+        let vs_t = time_it(20, || {
+            std::hint::black_box(
+                pool.gather_batch(&handles, t_pad, &mut k_out, &mut ks, &mut v_out, &mut vs)
+                    .unwrap(),
+            );
+        });
+        let plan = pool.plan_gather(&handles, t_pad).unwrap();
+        println!(
+            "  B={b}: {:.2}x ({:.1} -> {:.1} µs), {} runs, {:.2} MB modeled HBM reads",
+            ss / vs_t,
+            ss * 1e6,
+            vs_t * 1e6,
+            plan.runs().len(),
+            plan.hbm_bytes() as f64 / 1e6,
+        );
+    }
+}
+
+fn main() {
+    println!("codec_hotpath: word-level codec + planned-gather sweeps (release profile)");
+    bench_codecs();
+    bench_gather();
+}

@@ -5,6 +5,7 @@
 //! `cargo bench` binaries and the `turbomind bench` CLI subcommand both
 //! dispatch through [`registry`].
 
+pub mod hotpath;
 pub mod kernel_figures;
 pub mod serving_figures;
 pub mod table;
@@ -33,6 +34,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("preempt", serving_figures::fig_preempt),
         ("router", serving_figures::fig_router),
         ("ladder", serving_figures::fig_ladder),
+        ("hotpath", hotpath::fig_hotpath),
     ]
 }
 

@@ -1,0 +1,280 @@
+//! Lock-free fleet accounting: per-replica completion recorders the
+//! replica threads write **wait-free** on the serving hot path, merged
+//! into a [`MetricsCollector`] only when a stats probe asks.
+//!
+//! The previous design funneled every completion on every replica through
+//! one `Arc<Mutex<MetricsCollector>>` — a fleet-wide serialization point
+//! on the reply path, and a lock the stats probe had to take *while*
+//! replicas were completing work. Here each replica owns a
+//! [`ReplicaRecorder`]:
+//!
+//! * exact counters (completions, prompt/generated token totals) are
+//!   plain atomics — never lossy, never contended across replicas;
+//! * per-completion samples (latency / TTFT / completion time) land in a
+//!   fixed-capacity **seqlock ring**: the single writer never waits and
+//!   never allocates, a torn read is detected by the reader and skipped,
+//!   and an overfull ring windows to the most recent `capacity` samples
+//!   (percentiles degrade gracefully; counts never do).
+//!
+//! Memory protocol (per slot, single producer / any readers):
+//! writer bumps the slot's sequence to odd, publishes the payload, then
+//! bumps to even with `Release`; a reader takes an `Acquire` snapshot of
+//! the sequence before and after reading the payload and accepts the
+//! sample only if both reads saw the same even value. `f64` payloads
+//! travel as `to_bits` in `AtomicU64`s — no `unsafe` anywhere.
+
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::MetricsCollector;
+
+/// Default ring capacity: enough to keep fleet percentiles exact for any
+/// probe interval that observes fewer than this many completions per
+/// replica.
+pub const DEFAULT_SAMPLE_CAPACITY: usize = 1024;
+
+/// Bounded retries before a reader gives up on a slot the writer keeps
+/// overwriting (the writer is wait-free; the reader is the one that
+/// yields).
+const READ_RETRIES: usize = 64;
+
+#[derive(Debug, Default)]
+struct SampleSlot {
+    /// Seqlock sequence: even = stable, odd = write in progress.
+    seq: AtomicU64,
+    latency: AtomicU64,
+    ttft: AtomicU64,
+    done_at: AtomicU64,
+    prompt: AtomicU64,
+    gen: AtomicU64,
+}
+
+/// One replica's wait-free completion recorder.
+///
+/// Contract: [`record`](Self::record) has a **single producer** (the
+/// owning replica thread). Readers ([`drain_into`](Self::drain_into))
+/// may run concurrently from any thread at any time; they never block
+/// the writer.
+#[derive(Debug)]
+pub struct ReplicaRecorder {
+    /// Exact successful completions (monotonic; also the ring cursor).
+    completed: AtomicUsize,
+    prompt_tokens: AtomicUsize,
+    gen_tokens: AtomicUsize,
+    ring: Box<[SampleSlot]>,
+}
+
+impl Default for ReplicaRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplicaRecorder {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_SAMPLE_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        let ring = (0..capacity.max(1)).map(|_| SampleSlot::default()).collect();
+        Self {
+            completed: AtomicUsize::new(0),
+            prompt_tokens: AtomicUsize::new(0),
+            gen_tokens: AtomicUsize::new(0),
+            ring,
+        }
+    }
+
+    /// Record one successful completion. Wait-free: two atomic adds, one
+    /// seqlock slot publish. Single producer — the owning replica thread.
+    pub fn record(
+        &self,
+        latency_s: f64,
+        ttft_s: f64,
+        done_at_s: f64,
+        prompt_tokens: usize,
+        gen_tokens: usize,
+    ) {
+        let n = self.completed.load(Ordering::Relaxed);
+        let slot = &self.ring[n % self.ring.len()];
+        let s = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(s + 1, Ordering::Relaxed); // odd: write in progress
+        fence(Ordering::Release);
+        slot.latency.store(latency_s.to_bits(), Ordering::Relaxed);
+        slot.ttft.store(ttft_s.to_bits(), Ordering::Relaxed);
+        slot.done_at.store(done_at_s.to_bits(), Ordering::Relaxed);
+        slot.prompt.store(prompt_tokens as u64, Ordering::Relaxed);
+        slot.gen.store(gen_tokens as u64, Ordering::Relaxed);
+        slot.seq.store(s + 2, Ordering::Release); // even: stable
+        self.prompt_tokens.fetch_add(prompt_tokens, Ordering::Relaxed);
+        self.gen_tokens.fetch_add(gen_tokens, Ordering::Relaxed);
+        // Publish the count last so a reader that observes it also
+        // observes the slot contents it promises.
+        self.completed.store(n + 1, Ordering::Release);
+    }
+
+    /// Exact successful completions recorded so far.
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::Acquire)
+    }
+
+    /// Exact `(prompt, generated)` token totals.
+    pub fn token_totals(&self) -> (usize, usize) {
+        (
+            self.prompt_tokens.load(Ordering::Relaxed),
+            self.gen_tokens.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Samples currently resident in the ring window.
+    pub fn sampled(&self) -> usize {
+        self.completed().min(self.ring.len())
+    }
+
+    /// Merge every consistent resident sample into `m`; returns the
+    /// number of slots skipped as torn (the writer lapped the reader
+    /// mid-slot — each skip is one sample of percentile resolution lost,
+    /// never a lost count).
+    pub fn drain_into(&self, m: &mut MetricsCollector) -> usize {
+        let mut torn = 0usize;
+        for slot in self.ring.iter().take(self.sampled()) {
+            let mut ok = false;
+            for _ in 0..READ_RETRIES {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 % 2 == 1 {
+                    continue; // mid-write
+                }
+                let latency = slot.latency.load(Ordering::Relaxed);
+                let ttft = slot.ttft.load(Ordering::Relaxed);
+                let done_at = slot.done_at.load(Ordering::Relaxed);
+                let prompt = slot.prompt.load(Ordering::Relaxed);
+                let gen = slot.gen.load(Ordering::Relaxed);
+                fence(Ordering::Acquire);
+                let s2 = slot.seq.load(Ordering::Relaxed);
+                if s1 == s2 {
+                    m.record(
+                        f64::from_bits(latency),
+                        f64::from_bits(ttft),
+                        f64::from_bits(done_at),
+                        prompt as usize,
+                        gen as usize,
+                    );
+                    ok = true;
+                    break;
+                }
+            }
+            if !ok {
+                torn += 1;
+            }
+        }
+        torn
+    }
+}
+
+/// Merge a fleet of recorders into one collector for percentile math,
+/// alongside the **exact** fleet completion count (the ring may window;
+/// the counter never does). The third element is the torn-slot count —
+/// samples skipped because the writer lapped the probe.
+pub fn collect(recorders: &[Arc<ReplicaRecorder>]) -> (MetricsCollector, usize, usize) {
+    let mut m = MetricsCollector::new();
+    let mut exact = 0usize;
+    let mut torn = 0usize;
+    for r in recorders {
+        exact += r.completed();
+        torn += r.drain_into(&mut m);
+    }
+    (m, exact, torn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn records_and_drains_exactly() {
+        let r = ReplicaRecorder::with_capacity(8);
+        r.record(1.0, 0.25, 1.0, 32, 4);
+        r.record(2.0, 0.5, 2.0, 16, 8);
+        assert_eq!(r.completed(), 2);
+        assert_eq!(r.token_totals(), (48, 12));
+        let mut m = MetricsCollector::new();
+        assert_eq!(r.drain_into(&mut m), 0);
+        assert_eq!(m.count(), 2);
+        let p = m.latency_percentiles().unwrap();
+        assert_eq!((p.p50, p.max), (1.0, 2.0));
+    }
+
+    #[test]
+    fn ring_windows_but_counters_stay_exact() {
+        let r = ReplicaRecorder::with_capacity(4);
+        for i in 0..10 {
+            r.record(i as f64, 0.1, i as f64, 1, 1);
+        }
+        assert_eq!(r.completed(), 10, "counter is exact");
+        assert_eq!(r.sampled(), 4, "ring windows to capacity");
+        assert_eq!(r.token_totals(), (10, 10), "token totals are exact");
+        let mut m = MetricsCollector::new();
+        assert_eq!(r.drain_into(&mut m), 0);
+        assert_eq!(m.count(), 4);
+        // The window holds the most recent samples (6..=9).
+        assert_eq!(m.latency_percentiles().unwrap().max, 9.0);
+    }
+
+    #[test]
+    fn concurrent_probes_never_see_torn_samples() {
+        // One writer hammers the ring with a recognizable invariant
+        // (ttft == latency / 2); reader threads snapshot concurrently and
+        // must only ever observe intact pairs.
+        let r = Arc::new(ReplicaRecorder::with_capacity(16));
+        let w = Arc::clone(&r);
+        let writer = thread::spawn(move || {
+            for i in 1..=20_000u32 {
+                let lat = i as f64;
+                w.record(lat, lat / 2.0, lat, i as usize, 1);
+            }
+        });
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let rr = Arc::clone(&r);
+            readers.push(thread::spawn(move || {
+                let mut seen = 0usize;
+                for _ in 0..200 {
+                    let mut m = MetricsCollector::new();
+                    rr.drain_into(&mut m);
+                    seen += m.count();
+                    // Every accepted sample satisfies the invariant.
+                    if let (Some(l), Some(t)) =
+                        (m.latency_percentiles(), m.ttft_percentiles())
+                    {
+                        assert_eq!(l.max / 2.0, t.max, "torn sample leaked");
+                        assert_eq!(l.p50 / 2.0, t.p50, "torn sample leaked");
+                    }
+                }
+                seen
+            }));
+        }
+        writer.join().unwrap();
+        for h in readers {
+            h.join().unwrap();
+        }
+        assert_eq!(r.completed(), 20_000);
+        let (m, exact, _) = collect(&[r]);
+        assert_eq!(exact, 20_000);
+        assert_eq!(m.count(), 16, "final drain sees a full, stable ring");
+    }
+
+    #[test]
+    fn collect_merges_fleet_and_reports_exact_count() {
+        let a = Arc::new(ReplicaRecorder::with_capacity(4));
+        let b = Arc::new(ReplicaRecorder::with_capacity(4));
+        a.record(1.0, 0.1, 1.0, 8, 2);
+        for i in 0..6 {
+            b.record(2.0 + i as f64, 0.2, 2.0, 4, 1);
+        }
+        let (m, exact, torn) = collect(&[a, b]);
+        assert_eq!(exact, 7, "exact across the fleet despite windowing");
+        assert_eq!(m.count(), 5, "1 + windowed 4 samples merged");
+        assert_eq!(torn, 0);
+    }
+}

@@ -27,16 +27,18 @@
 //! caveat: replicas at *different* precisions legitimately decode
 //! different tokens, exactly like the paper's per-format accuracy story).
 
+pub mod accounting;
 pub mod replica;
 pub mod router;
 pub mod stats;
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+pub use accounting::ReplicaRecorder;
 pub use replica::{request_cost, ReplicaHandle, ReplicaLoad, ReplicaSpec, ToReplica};
 pub use router::{LoadView, Router, RouterPolicy};
 pub use stats::{merge_prefix, ClusterStats, ReplicaSnapshot};
@@ -114,11 +116,19 @@ impl ClusterConfig {
     }
 }
 
+/// How long a fleet stats probe waits, in total, for replica answers.
+/// Replicas answer between engine iterations, so healthy fleets respond
+/// in microseconds; the deadline only matters when a replica is wedged.
+const STATS_PROBE_DEADLINE: Duration = Duration::from_millis(250);
+
 /// The live, threaded fleet.
 pub struct Cluster {
     replicas: Vec<ReplicaHandle>,
     router: Router,
-    fleet: Arc<Mutex<MetricsCollector>>,
+    /// Per-replica wait-free completion recorders (same order as
+    /// `replicas`); merged only at probe time — the serving hot path
+    /// never takes a fleet-wide lock.
+    recorders: Vec<Arc<ReplicaRecorder>>,
     policy: RouterPolicy,
 }
 
@@ -126,18 +136,20 @@ impl Cluster {
     /// Spawn every replica (each builds its engine on its own thread).
     pub fn start(cfg: ClusterConfig) -> Result<Self> {
         cfg.validate()?;
-        let fleet = Arc::new(Mutex::new(MetricsCollector::new()));
         let started = Instant::now();
         let mut replicas = Vec::with_capacity(cfg.n_replicas());
+        let mut recorders = Vec::with_capacity(cfg.n_replicas());
         for i in 0..cfg.n_replicas() {
+            let recorder = Arc::new(ReplicaRecorder::new());
             replicas.push(ReplicaHandle::spawn(
                 i,
                 cfg.engine_config(i),
                 cfg.specs[i].label(),
                 cfg.queue_depth,
-                Arc::clone(&fleet),
+                Arc::clone(&recorder),
                 started,
             )?);
+            recorders.push(recorder);
         }
         let router = Router::new(
             cfg.policy,
@@ -145,7 +157,7 @@ impl Cluster {
             cfg.base.kv_block_tokens,
             cfg.affinity_blocks,
         );
-        Ok(Self { replicas, router, fleet, policy: cfg.policy })
+        Ok(Self { replicas, router, recorders, policy: cfg.policy })
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -190,21 +202,41 @@ impl Cluster {
         Ok(())
     }
 
-    /// Probe every replica and merge the fleet view. A dead replica (its
-    /// thread exited on an engine error) is *omitted* from the
-    /// per-replica list rather than failing the probe — monitoring must
-    /// degrade, not take the surviving fleet down; compare the list
-    /// length against `replicas` to detect the gap.
+    /// Probe every replica and merge the fleet view. Two-phase: **all**
+    /// probes are fired first (non-blocking `try_send`), then answers are
+    /// collected against one shared deadline — a wedged or slow-draining
+    /// replica costs at most the deadline, and never serializes behind
+    /// its neighbors. A dead, saturated, or unresponsive replica is
+    /// *omitted* from the per-replica list rather than failing the probe
+    /// — monitoring must degrade, not take the surviving fleet down;
+    /// compare the list length against `n_replicas` to detect the gap.
+    /// Percentiles come from the wait-free recorders, so the probe takes
+    /// no lock the serving path could be holding.
     pub fn stats(&self) -> Result<ClusterStats> {
+        let probes: Vec<(usize, Result<std::sync::mpsc::Receiver<ReplicaSnapshot>>)> =
+            self.replicas.iter().map(|r| (r.id, r.probe())).collect();
+        let deadline = Instant::now() + STATS_PROBE_DEADLINE;
         let mut snaps = Vec::with_capacity(self.replicas.len());
-        for r in &self.replicas {
-            match r.stats() {
+        for (id, probe) in probes {
+            let answer = probe.and_then(|rx| {
+                let left = deadline.saturating_duration_since(Instant::now());
+                rx.recv_timeout(left)
+                    .map_err(|e| anyhow::anyhow!("replica {id} stats probe: {e}"))
+            });
+            match answer {
                 Ok(s) => snaps.push(s),
-                Err(e) => eprintln!("stats probe skipping replica {}: {e}", r.id),
+                Err(e) => eprintln!("stats probe skipping replica {id}: {e}"),
             }
         }
-        let fleet = self.fleet.lock().expect("fleet metrics poisoned");
-        Ok(ClusterStats::new(self.policy.to_string(), snaps, &fleet))
+        let (merged, exact, torn) = accounting::collect(&self.recorders);
+        if torn > 0 {
+            eprintln!("stats probe: {torn} sample slot(s) overwritten mid-read; skipped");
+        }
+        let mut cs = ClusterStats::new(self.policy.to_string(), snaps, &merged);
+        // The ring windows percentile samples; the completion counters
+        // never window. Report the exact fleet count.
+        cs.completed = exact;
+        Ok(cs)
     }
 
     /// Close every inbox, wait for replicas to drain outstanding work,
@@ -407,6 +439,37 @@ mod tests {
             let (tenant, _, _) = g.locate(gi);
             assert_eq!(rep, a.assignments[tenant * g.users], "tenant {tenant} split");
         }
+    }
+
+    #[test]
+    fn stats_probe_survives_wedged_replica_and_keeps_serving() {
+        let cfg = ClusterConfig::homogeneous(base(), 1, RouterPolicy::RoundRobin);
+        let mut c = Cluster::start(cfg).unwrap();
+        // A replica that accepts probes but never answers them — a
+        // deterministic slow/wedged drain. The old probe collected each
+        // reply with a blocking `recv()` and would hang here forever.
+        c.replicas.push(ReplicaHandle::spawn_unresponsive(1, 4));
+        let t0 = Instant::now();
+        let stats = c.stats().unwrap();
+        assert!(
+            t0.elapsed() < STATS_PROBE_DEADLINE + Duration::from_secs(5),
+            "probe must bound its wait"
+        );
+        assert_eq!(stats.replicas.len(), 1, "wedged replica omitted, healthy one reported");
+        // New submissions still flow while the wedged replica never
+        // answers its probe.
+        let (otx, orx) = mpsc::channel();
+        c.dispatch_to(0, Request::new((0..8).collect(), 2), otx).unwrap();
+        let out = orx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(out.tokens.len(), 2);
+        // The completion landed in the wait-free recorder; the next probe
+        // reports the exact count.
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.completed, 1);
+        // Closing the wedged inbox lets its thread exit; then drain the
+        // real replica.
+        drop(c.replicas.pop());
+        c.shutdown().unwrap();
     }
 
     #[test]

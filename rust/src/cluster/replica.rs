@@ -16,16 +16,16 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::accounting::ReplicaRecorder;
 use super::stats::ReplicaSnapshot;
 use crate::config::{DeviceProfile, EngineConfig, LadderPolicy, PrecisionFormat};
 use crate::coordinator::{Engine, Request, RequestOutput};
-use crate::metrics::MetricsCollector;
 
 /// What makes one replica different from its neighbors: the precision
 /// format it serves, the device profile its latency model runs on, and
@@ -184,7 +184,7 @@ impl ReplicaHandle {
         cfg: EngineConfig,
         label: String,
         queue_depth: usize,
-        fleet: Arc<Mutex<MetricsCollector>>,
+        recorder: Arc<ReplicaRecorder>,
         started: Instant,
     ) -> Result<Self> {
         let (tx, rx) = mpsc::sync_channel::<ToReplica>(queue_depth.max(1));
@@ -195,7 +195,7 @@ impl ReplicaHandle {
         let join = thread::Builder::new()
             .name(format!("replica-{id}"))
             .spawn(move || {
-                replica_main(id, cfg, thread_label, rx, ready_tx, thread_load, fleet, started)
+                replica_main(id, cfg, thread_label, rx, ready_tx, thread_load, recorder, started)
             })
             .map_err(|e| anyhow!("spawning replica {id}: {e}"))?;
         match ready_rx.recv() {
@@ -223,18 +223,50 @@ impl ReplicaHandle {
             .map_err(|_| anyhow!("replica {} is gone", self.id))
     }
 
-    /// Ask the live replica for a snapshot. Uses `try_send`: a saturated
-    /// inbox (full backpressure) fails the probe for this replica instead
-    /// of blocking the dispatcher behind queued generation work —
-    /// [`super::Cluster::stats`] then omits it, same as a dead replica.
-    pub fn stats(&self) -> Result<ReplicaSnapshot> {
+    /// Fire a snapshot probe without waiting for the answer. Uses
+    /// `try_send`: a saturated inbox (full backpressure) fails the probe
+    /// for this replica instead of blocking the caller behind queued
+    /// generation work — [`super::Cluster::stats`] then omits it, same as
+    /// a dead replica. The caller collects the reply from the returned
+    /// receiver (typically with a deadline, never an unbounded wait).
+    pub fn probe(&self) -> Result<Receiver<ReplicaSnapshot>> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .as_ref()
             .ok_or_else(|| anyhow!("replica {} already shut down", self.id))?
             .try_send(ToReplica::Stats { reply: tx })
             .map_err(|_| anyhow!("replica {} inbox full or gone; probe skipped", self.id))?;
-        rx.recv().map_err(|_| anyhow!("replica {} dropped stats probe", self.id))
+        Ok(rx)
+    }
+
+    /// Ask the live replica for a snapshot, waiting for the answer
+    /// (single-replica convenience; fleet probes use
+    /// [`probe`](Self::probe) so one wedged replica cannot stall the
+    /// others).
+    pub fn stats(&self) -> Result<ReplicaSnapshot> {
+        self.probe()?.recv().map_err(|_| anyhow!("replica {} dropped stats probe", self.id))
+    }
+
+    /// A replica whose thread drains its inbox but never answers anything
+    /// — a deterministic stand-in for a wedged engine, used to prove the
+    /// fleet stats probe degrades instead of hanging.
+    #[cfg(test)]
+    pub fn spawn_unresponsive(id: usize, queue_depth: usize) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<ToReplica>(queue_depth.max(1));
+        let join = thread::Builder::new()
+            .name(format!("replica-{id}-unresponsive"))
+            .spawn(move || {
+                while rx.recv().is_ok() {}
+                None
+            })
+            .expect("spawning unresponsive replica");
+        Self {
+            id,
+            label: "wedged".into(),
+            tx: Some(tx),
+            load: Arc::new(ReplicaLoad::default()),
+            join: Some(join),
+        }
     }
 
     /// Close the inbox and wait for the replica to drain and exit;
@@ -261,7 +293,7 @@ fn replica_main(
     rx: Receiver<ToReplica>,
     ready: Sender<Result<()>>,
     load: Arc<ReplicaLoad>,
-    fleet: Arc<Mutex<MetricsCollector>>,
+    recorder: Arc<ReplicaRecorder>,
     started: Instant,
 ) -> Option<ReplicaSnapshot> {
     // Build AND warm up before reporting ready, mirroring `cmd_serve`:
@@ -291,8 +323,9 @@ fn replica_main(
                 let (_, cost, reply) = pending.remove(pos);
                 // Fleet percentiles summarize successful completions only
                 // — an aborted answer's near-zero latency would skew them.
+                // Wait-free: the recorder never blocks the reply path.
                 if out.finish != crate::coordinator::FinishReason::Aborted {
-                    fleet.lock().expect("fleet metrics poisoned").record(
+                    recorder.record(
                         out.latency,
                         out.ttft,
                         started.elapsed().as_secs_f64(),
@@ -484,14 +517,14 @@ mod tests {
 
     #[test]
     fn replica_thread_serves_and_drains() {
-        let fleet = Arc::new(Mutex::new(MetricsCollector::new()));
+        let recorder = Arc::new(ReplicaRecorder::new());
         let cfg = EngineConfig { kv_pool_tokens: 16 * 64, ..EngineConfig::default() };
         let r = ReplicaHandle::spawn(
             0,
             cfg,
             "W4A16KV8@A100".into(),
             8,
-            Arc::clone(&fleet),
+            Arc::clone(&recorder),
             Instant::now(),
         )
         .unwrap();
@@ -516,7 +549,7 @@ mod tests {
         let snap = r.join().unwrap();
         assert_eq!(snap.completed, 2, "rejections count as answered");
         assert_eq!((snap.outstanding_reqs, snap.outstanding_tokens), (0, 0));
-        assert_eq!(fleet.lock().unwrap().count(), 1, "…but not as successes");
+        assert_eq!(recorder.completed(), 1, "…but not as successes");
     }
 
     #[test]
@@ -527,7 +560,7 @@ mod tests {
             cfg,
             "bad".into(),
             4,
-            Arc::new(Mutex::new(MetricsCollector::new())),
+            Arc::new(ReplicaRecorder::new()),
             Instant::now(),
         )
         .unwrap_err();

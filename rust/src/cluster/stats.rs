@@ -1,8 +1,9 @@
 //! Fleet-wide observability: per-replica snapshots and the merged
 //! [`ClusterStats`] the router's `{"stats": true}` probe reports.
 //!
-//! Percentiles (latency / TTFT / TPOT) come from the shared fleet
-//! [`MetricsCollector`] the replica threads record completions into;
+//! Percentiles (latency / TTFT / TPOT) come from a [`MetricsCollector`]
+//! merged at probe time out of the per-replica wait-free recorders
+//! ([`super::accounting`]) the replica threads record completions into;
 //! counter-like fields (pool occupancy, prefix-cache and preemption
 //! counters, modeled device time) are summed across replicas. Each
 //! replica's counters are engine-local — merging never nets requests

@@ -60,6 +60,10 @@ pub struct EngineStats {
     /// Iterations spent restoring a swapped-out sequence from the host
     /// store (no prefill runs in these; they are not `prefill_iters`).
     pub swap_in_iters: usize,
+    /// Modeled HBM read bytes of every KV gather executed (the per-step
+    /// [`GatherPlan::hbm_bytes`](crate::kvcache::pool::GatherPlan) sums) —
+    /// the memory-traffic side of the decode hot path.
+    pub gather_hbm_bytes: usize,
     /// Modeled device time accumulated by the backend (sim backend only;
     /// the PJRT path is wall-clock-timed by callers instead), plus modeled
     /// PCIe time for swap-preemption transfers.
@@ -1000,7 +1004,7 @@ impl Engine {
         let mut v_codes = vec![0u8; m.n_kv_heads * t_pad * sum_rb];
         let mut k_scales = vec![1f32; sdim];
         let mut v_scales = vec![1f32; sdim];
-        self.pool.gather_batch(
+        self.stats.gather_hbm_bytes += self.pool.gather_batch(
             &[Some(handle)],
             t_pad,
             &mut k_codes,
@@ -1120,7 +1124,7 @@ impl Engine {
         let mut v_codes = vec![0u8; bsize * m.n_kv_heads * t_pad * sum_rb];
         let mut k_scales = vec![1f32; sdim];
         let mut v_scales = vec![1f32; sdim];
-        self.pool.gather_batch(
+        self.stats.gather_hbm_bytes += self.pool.gather_batch(
             &handles, t_pad, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales,
         )?;
 

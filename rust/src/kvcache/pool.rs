@@ -104,6 +104,86 @@ impl SeqSnapshot {
     }
 }
 
+/// One contiguous extent of a [`GatherPlan`]: `len` tokens of batch entry
+/// `bi`, starting at sequence position `t0`, resident in consecutive
+/// arena token slots starting at `slot0` (`block × block_tokens +
+/// in-block slot`). Extents never cross a block boundary unless the
+/// planner merged arena-adjacent blocks into one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatherRun {
+    /// Batch index of the owning sequence.
+    pub bi: usize,
+    /// First sequence position covered.
+    pub t0: usize,
+    /// First arena token slot covered.
+    pub slot0: usize,
+    /// Tokens in the extent.
+    pub len: usize,
+}
+
+/// Phase one of a two-phase batch gather: the run-length description of
+/// every contiguous (token-slot) extent the gather will touch, plus the
+/// batch geometry it was planned against. Building the plan does all
+/// validation and all per-token block arithmetic once; execution is then
+/// pure strided copying. The plan is also the unit of modeled-HBM cost
+/// accounting ([`GatherPlan::hbm_bytes`]).
+#[derive(Debug, Clone)]
+pub struct GatherPlan {
+    runs: Vec<GatherRun>,
+    b: usize,
+    t_pad: usize,
+    tokens: usize,
+    hbm_bytes: usize,
+}
+
+impl GatherPlan {
+    /// The planned extents, in batch-then-sequence order.
+    pub fn runs(&self) -> &[GatherRun] {
+        &self.runs
+    }
+
+    /// Batch size the plan was built for (`handles.len()`).
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Padded sequence length the plan was built for.
+    pub fn t_pad(&self) -> usize {
+        self.t_pad
+    }
+
+    /// Total live tokens the gather will move.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Modeled HBM read traffic of executing the plan: the code and scale
+    /// source bytes touched (`tokens × (token_code_bytes +
+    /// token_scale_bytes)`). The write side is the caller's output buffer
+    /// and is layout-independent, so it is not counted here.
+    pub fn hbm_bytes(&self) -> usize {
+        self.hbm_bytes
+    }
+}
+
+/// Word-wide row copy: `u64` chunks plus a byte tail. Quantized KV rows
+/// are short (`head_dim/2`..`4·head_dim` bytes), so lowering directly to
+/// word moves keeps the gather/append inner loop free of generic memcpy
+/// dispatch.
+#[inline]
+fn copy_row(dst: &mut [u8], src: &[u8]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut s = src.chunks_exact(8);
+    let mut d = dst.chunks_exact_mut(8);
+    for (dc, sc) in (&mut d).zip(&mut s) {
+        let w = u64::from_le_bytes(sc.try_into().expect("8-byte chunk"));
+        dc.copy_from_slice(&w.to_le_bytes());
+    }
+    for (db, sb) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *db = *sb;
+    }
+}
+
 #[derive(Debug)]
 struct SeqState {
     blocks: Vec<usize>,
@@ -529,28 +609,44 @@ impl KvPool {
         if k_codes.len() < expect || v_codes.len() < expect {
             bail!("append_chunk codes too small: {} < {expect}", k_codes.len());
         }
-        // Re-slice per token and reuse append_token's layout logic.
-        let mut kc = vec![0u8; self.kv_heads * sum_rb];
-        let mut vc = vec![0u8; self.kv_heads * sum_rb];
-        let mut ks = vec![0f32; self.n_layers * self.kv_heads];
-        let mut vs = vec![0f32; self.n_layers * self.kv_heads];
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        let kv_heads = self.kv_heads;
+        // Per-layer tables once per chunk (the old path re-sliced into a
+        // per-token scratch and recomputed `prefix_row_bytes` per (token,
+        // layer)); token slots are written straight from the chunk buffer.
+        let mut rb = Vec::with_capacity(self.n_layers);
+        let mut slot_base = Vec::with_capacity(self.n_layers); // in-slot K base
+        let mut src_base = Vec::with_capacity(self.n_layers); // src layer base
+        let mut prefix = 0usize;
+        for l in 0..self.n_layers {
+            let r = self.layout.row_bytes(l, self.head_dim);
+            rb.push(r);
+            slot_base.push(2 * kv_heads * prefix);
+            src_base.push(kv_heads * s_stride * prefix);
+            prefix += r;
+        }
         for t in 0..s_len {
+            let (blk, slot) = self.slot_for_append(h)?;
+            let code_base = (blk * self.block_tokens + slot) * tcb;
+            let scale_base = (blk * self.block_tokens + slot) * tsc;
+            // Token-slot layout: [L][side(K=0,V=1)][Hkv][rb_l].
             for l in 0..self.n_layers {
-                let rb = self.layout.row_bytes(l, self.head_dim);
-                let src_layer = self.kv_heads * s_stride * self.layout.prefix_row_bytes(l, self.head_dim);
-                let dst_layer = self.kv_heads * self.layout.prefix_row_bytes(l, self.head_dim);
-                for hh in 0..self.kv_heads {
+                let r = rb[l];
+                let kb = code_base + slot_base[l];
+                let vb = kb + kv_heads * r;
+                for hh in 0..kv_heads {
                     // src layout [L][Hkv][S_stride][rb_l]
-                    let src = src_layer + (hh * s_stride + t) * rb;
-                    let dst = dst_layer + hh * rb;
-                    kc[dst..dst + rb].copy_from_slice(&k_codes[src..src + rb]);
-                    vc[dst..dst + rb].copy_from_slice(&v_codes[src..src + rb]);
-                    let ssrc = (l * self.kv_heads + hh) * s_stride + t;
-                    ks[l * self.kv_heads + hh] = k_scales[ssrc];
-                    vs[l * self.kv_heads + hh] = v_scales[ssrc];
+                    let src = src_base[l] + (hh * s_stride + t) * r;
+                    let dk = kb + hh * r;
+                    let dv = vb + hh * r;
+                    copy_row(&mut self.codes[dk..dk + r], &k_codes[src..src + r]);
+                    copy_row(&mut self.codes[dv..dv + r], &v_codes[src..src + r]);
+                    let ssrc = (l * kv_heads + hh) * s_stride + t;
+                    self.scales[scale_base + (l * 2) * kv_heads + hh] = k_scales[ssrc];
+                    self.scales[scale_base + (l * 2 + 1) * kv_heads + hh] = v_scales[ssrc];
                 }
             }
-            self.append_token(h, &kc, &ks, &vc, &vs)?;
         }
         Ok(())
     }
@@ -627,8 +723,148 @@ impl KvPool {
     /// `l` starts at `B × Hkv × T × prefix_row_bytes(l)`), scales `[L, B,
     /// Hkv, T]`. Sequences shorter than `t_pad` leave zeros (masked by
     /// `kv_len`).
+    ///
+    /// Two-phase: [`plan_gather`](Self::plan_gather) builds the run-length
+    /// extent plan (all validation + block arithmetic),
+    /// [`execute_gather`](Self::execute_gather) streams it with per-layer
+    /// offset tables and word-wide copies. Returns the plan's modeled HBM
+    /// read bytes ([`GatherPlan::hbm_bytes`]). Output is byte-identical to
+    /// [`gather_batch_scalar`](Self::gather_batch_scalar), the retained
+    /// pre-plan reference walk (property-tested below).
     #[allow(clippy::too_many_arguments)]
     pub fn gather_batch(
+        &self,
+        handles: &[Option<SeqHandle>],
+        t_pad: usize,
+        k_out: &mut [u8],
+        ks_out: &mut [f32],
+        v_out: &mut [u8],
+        vs_out: &mut [f32],
+    ) -> Result<usize> {
+        let plan = self.plan_gather(handles, t_pad)?;
+        self.execute_gather(&plan, k_out, ks_out, v_out, vs_out)?;
+        Ok(plan.hbm_bytes())
+    }
+
+    /// Phase one of [`gather_batch`](Self::gather_batch): validate the
+    /// batch and reduce it to contiguous token-slot extents. Each
+    /// sequence contributes at most one [`GatherRun`] per resident block;
+    /// runs whose blocks happen to be adjacent in the arena are merged.
+    pub fn plan_gather(&self, handles: &[Option<SeqHandle>], t_pad: usize) -> Result<GatherPlan> {
+        let mut runs = Vec::new();
+        let mut tokens = 0usize;
+        for (bi, h) in handles.iter().enumerate() {
+            let Some(h) = h else { continue };
+            let s = self.seqs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
+            if !s.alive {
+                bail!("gather of freed sequence");
+            }
+            if s.len > t_pad {
+                bail!("sequence len {} exceeds padded T {t_pad}", s.len);
+            }
+            tokens += s.len;
+            let mut t = 0usize;
+            while t < s.len {
+                let slot = t % self.block_tokens;
+                let len = (self.block_tokens - slot).min(s.len - t);
+                let slot0 = s.blocks[t / self.block_tokens] * self.block_tokens + slot;
+                let merged = match runs.last_mut() {
+                    Some(r) if r.bi == bi && r.slot0 + r.len == slot0 && r.t0 + r.len == t => {
+                        r.len += len;
+                        true
+                    }
+                    _ => false,
+                };
+                if !merged {
+                    runs.push(GatherRun { bi, t0: t, slot0, len });
+                }
+                t += len;
+            }
+        }
+        let hbm_bytes = tokens * (self.token_code_bytes() + self.token_scale_bytes());
+        Ok(GatherPlan { runs, b: handles.len(), t_pad, tokens, hbm_bytes })
+    }
+
+    /// Phase two of [`gather_batch`](Self::gather_batch): stream a plan's
+    /// extents into the output buffers. All per-layer offsets (row bytes,
+    /// in-slot K/V bases, destination layer bases) are tabled once up
+    /// front — the scalar walk recomputed `prefix_row_bytes` (itself
+    /// `O(L)`) per (token, layer, head), an `O(B·T·L²·Hkv)` index-math
+    /// term this path eliminates.
+    pub fn execute_gather(
+        &self,
+        plan: &GatherPlan,
+        k_out: &mut [u8],
+        ks_out: &mut [f32],
+        v_out: &mut [u8],
+        vs_out: &mut [f32],
+    ) -> Result<()> {
+        let (b, t_pad) = (plan.b, plan.t_pad);
+        let expect = b * self.kv_heads * t_pad * self.layout.sum_row_bytes(self.head_dim);
+        if k_out.len() != expect || v_out.len() != expect {
+            bail!("gather_batch: out buffer {} != {expect}", k_out.len());
+        }
+        let sexpect = self.n_layers * b * self.kv_heads * t_pad;
+        if ks_out.len() != sexpect || vs_out.len() != sexpect {
+            bail!("gather_batch: scale buffer {} != {sexpect}", ks_out.len());
+        }
+        k_out.fill(0);
+        v_out.fill(0);
+        ks_out.fill(1.0);
+        vs_out.fill(1.0);
+
+        let tcb = self.token_code_bytes();
+        let tsc = self.token_scales();
+        let kv_heads = self.kv_heads;
+        // Per-layer tables, computed once per gather.
+        let mut rb = Vec::with_capacity(self.n_layers);
+        let mut k_base = Vec::with_capacity(self.n_layers); // in-slot K base
+        let mut dst_base = Vec::with_capacity(self.n_layers); // [L] dst layer base
+        let mut prefix = 0usize;
+        for l in 0..self.n_layers {
+            let r = self.layout.row_bytes(l, self.head_dim);
+            rb.push(r);
+            k_base.push(2 * kv_heads * prefix);
+            dst_base.push(b * kv_heads * t_pad * prefix);
+            prefix += r;
+        }
+        for run in &plan.runs {
+            let src0 = run.slot0 * tcb;
+            for l in 0..self.n_layers {
+                let r = rb[l];
+                let kb = k_base[l];
+                let vb = kb + kv_heads * r;
+                for hh in 0..kv_heads {
+                    let mut src_k = src0 + kb + hh * r;
+                    let mut src_v = src0 + vb + hh * r;
+                    // dst layout [L][B][Hkv][T][rb_l]
+                    let mut dst = dst_base[l] + ((run.bi * kv_heads + hh) * t_pad + run.t0) * r;
+                    for _ in 0..run.len {
+                        copy_row(&mut k_out[dst..dst + r], &self.codes[src_k..src_k + r]);
+                        copy_row(&mut v_out[dst..dst + r], &self.codes[src_v..src_v + r]);
+                        src_k += tcb;
+                        src_v += tcb;
+                        dst += r;
+                    }
+                    // Scales: src strides tsc per token, dst strides 1.
+                    let mut ssrc = run.slot0 * tsc + (l * 2) * kv_heads + hh;
+                    let sdst0 = ((l * b + run.bi) * kv_heads + hh) * t_pad + run.t0;
+                    for sdst in sdst0..sdst0 + run.len {
+                        ks_out[sdst] = self.scales[ssrc];
+                        vs_out[sdst] = self.scales[ssrc + kv_heads];
+                        ssrc += tsc;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Token-at-a-time reference for [`gather_batch`](Self::gather_batch)
+    /// — the pre-plan implementation retained verbatim for bit-identity
+    /// property tests and the `bench hotpath` speedup ratio.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather_batch_scalar(
         &self,
         handles: &[Option<SeqHandle>],
         t_pad: usize,
@@ -1061,6 +1297,87 @@ mod tests {
                 p.free_seq(h);
             }
             assert_eq!(p.free_blocks(), total);
+        });
+    }
+
+    #[test]
+    fn prop_gather_plan_matches_scalar_walk() {
+        // The planned word-wide gather vs the retained token-at-a-time
+        // walk: byte- and bit-identical output across mixed layouts,
+        // scrambled block orders, None handles, empty sequences, and
+        // padded tails — with both destinations starting dirty so any
+        // missed slot would diverge.
+        run_prop("gather-plan-vs-scalar", 0x6A78E4, 30, |g| {
+            let n_layers = g.usize_in(1, 4);
+            let kv_heads = g.usize_in(1, 3);
+            let head_dim = [3usize, 7, 8, 16][g.usize_in(0, 3)];
+            let bt = g.usize_in(2, 4);
+            let spec = (0..n_layers)
+                .map(|l| format!("l{l}:{}", ["kv16", "kv8", "kv4"][g.usize_in(0, 2)]))
+                .collect::<Vec<_>>()
+                .join(",");
+            let layout = KvLayout::parse(&spec, n_layers).unwrap();
+            let mut p = KvPool::with_layout(layout, kv_heads, head_dim, bt, bt * 24).unwrap();
+
+            let per_side = kv_heads * p.layout().sum_row_bytes(head_dim);
+            let mut handles: Vec<Option<SeqHandle>> = Vec::new();
+            for si in 0..g.usize_in(1, 3) {
+                if g.bool() {
+                    handles.push(None);
+                }
+                let h = p.alloc_seq();
+                for t in 0..g.usize_in(0, 2 * bt + 1) {
+                    let k: Vec<u8> =
+                        (0..per_side).map(|i| (si * 31 + t * 7 + i) as u8).collect();
+                    let v: Vec<u8> =
+                        (0..per_side).map(|i| (si * 17 + t * 3 + i * 5) as u8).collect();
+                    let ks = g.f32_vec(n_layers * kv_heads, 0.1, 4.0);
+                    let vs = g.f32_vec(n_layers * kv_heads, 0.1, 4.0);
+                    p.append_token(h, &k, &ks, &v, &vs).unwrap();
+                }
+                handles.push(Some(h));
+                // Scramble arena block order for later sequences: a
+                // freed throwaway block goes back on the (LIFO) free
+                // list, so runs stop being arena-monotone.
+                if g.bool() {
+                    let tmp = p.alloc_seq();
+                    let k = vec![0u8; per_side];
+                    let s = vec![1.0f32; n_layers * kv_heads];
+                    p.append_token(tmp, &k, &s, &k, &s).unwrap();
+                    p.free_seq(tmp);
+                }
+            }
+            let live = || handles.iter().flatten().copied().collect::<Vec<_>>();
+            let max_len = live().iter().map(|&h| p.seq_len(h)).max().unwrap_or(0);
+            let t_pad = (max_len + g.usize_in(0, 3)).max(1);
+            let b = handles.len();
+            let n = b * kv_heads * t_pad * p.layout().sum_row_bytes(head_dim);
+            let sn = n_layers * b * kv_heads * t_pad;
+
+            let (mut k1, mut v1) = (vec![0xAAu8; n], vec![0xAAu8; n]);
+            let (mut ks1, mut vs1) = (vec![-1f32; sn], vec![-1f32; sn]);
+            let planned =
+                p.gather_batch(&handles, t_pad, &mut k1, &mut ks1, &mut v1, &mut vs1).unwrap();
+            let (mut k2, mut v2) = (vec![0x55u8; n], vec![0x55u8; n]);
+            let (mut ks2, mut vs2) = (vec![-2f32; sn], vec![-2f32; sn]);
+            p.gather_batch_scalar(&handles, t_pad, &mut k2, &mut ks2, &mut v2, &mut vs2)
+                .unwrap();
+
+            assert_eq!(k1, k2, "K codes diverge ({spec}, b={b}, t_pad={t_pad})");
+            assert_eq!(v1, v2, "V codes diverge ({spec}, b={b}, t_pad={t_pad})");
+            assert!(ks1.iter().zip(&ks2).all(|(a, c)| a.to_bits() == c.to_bits()));
+            assert!(vs1.iter().zip(&vs2).all(|(a, c)| a.to_bits() == c.to_bits()));
+
+            // Plan accounting: tokens and modeled HBM bytes match the
+            // live token population exactly.
+            let tokens: usize = live().iter().map(|&h| p.seq_len(h)).sum();
+            assert_eq!(planned, tokens * (p.token_code_bytes() + p.token_scale_bytes()));
+            let plan = p.plan_gather(&handles, t_pad).unwrap();
+            assert_eq!(plan.tokens(), tokens);
+            assert_eq!(plan.hbm_bytes(), planned);
+            assert_eq!(plan.batch(), b);
+            assert!(plan.runs().iter().all(|r| r.len > 0));
+            assert_eq!(plan.runs().iter().map(|r| r.len).sum::<usize>(), tokens);
         });
     }
 

@@ -52,7 +52,7 @@ USAGE:
                   [--replicas N] [--router-policy round_robin|least_loaded|prefix_affinity]
                   [--replica-spec fmt,kv,device[,tpN][,layout=…][,ladder=…]]...
                   [--queue-depth N] [--affinity-blocks N]
-  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|all>
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|hotpath|all>
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
 

@@ -12,6 +12,17 @@
 //! [`super::transcode`] bit-identical to quantizing the original row
 //! directly at INT4 — the invariant the precision-laddering preemption rung
 //! relies on for determinism.
+//!
+//! The INT4 pack/unpack inner loops are word-level ([`super::word`]): the
+//! int8→nibble rounding goes through a 256-entry table computed with the
+//! exact scalar expression (so no float op is ever re-ordered), and the
+//! nibble movement itself is SWAR — 16 codes per packed `u64` pair. The
+//! byte-at-a-time originals are retained as `*_scalar` references that
+//! property tests assert bit-identical against.
+
+use std::sync::OnceLock;
+
+use super::word::{all_zero_bytes, pack_nibbles8, sign_extend4x8, spread_nibbles8};
 
 /// Resolve the symmetric scale for a max-abs value, guarding degenerate
 /// rows. All-zero rows and subnormal rows whose computed scale underflows
@@ -36,15 +47,75 @@ pub fn quantize_kv_int8(row: &[f32]) -> (Vec<i8>, f32) {
     (codes, scale)
 }
 
+/// 256-entry nibble table: entry `b` is the packed INT4 nibble for INT8
+/// code `b as i8`, computed once with the **exact** scalar rounding
+/// expression — the word-wise pack below is bit-identical to
+/// [`int4_from_int8_scalar`] by construction, float op for float op.
+fn int8_to_nib_lut() -> &'static [u8; 256] {
+    static LUT: OnceLock<[u8; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0u8; 256];
+        for (b, e) in t.iter_mut().enumerate() {
+            let c = b as u8 as i8;
+            let q = ((c as f32) * (7.0 / 127.0)).round().clamp(-7.0, 7.0) as i8;
+            *e = (q as u8) & 0x0F;
+        }
+        t
+    })
+}
+
+/// Word-wise nibble packing core: 16 source codes become 8 packed bytes
+/// per iteration (two `u64` lane loads compacted by [`pack_nibbles8`]),
+/// scalar tail. `nib` maps a source element to its 4-bit code; every `dst`
+/// byte is written (stale contents never survive).
+#[inline]
+fn pack_rows<T: Copy>(src: &[T], dst: &mut [u8], nib: impl Fn(T) -> u8) {
+    debug_assert_eq!(dst.len(), src.len().div_ceil(2));
+    let mut chunks = src.chunks_exact(16);
+    let mut out = dst.chunks_exact_mut(8);
+    for (c, o) in (&mut chunks).zip(&mut out) {
+        let mut nibs = [0u8; 16];
+        for (n, &v) in nibs.iter_mut().zip(c.iter()) {
+            *n = nib(v);
+        }
+        let lo = pack_nibbles8(u64::from_le_bytes(nibs[..8].try_into().expect("8 lanes")));
+        let hi = pack_nibbles8(u64::from_le_bytes(nibs[8..].try_into().expect("8 lanes")));
+        o[..4].copy_from_slice(&lo.to_le_bytes());
+        o[4..].copy_from_slice(&hi.to_le_bytes());
+    }
+    let (ts, td) = (chunks.remainder(), out.into_remainder());
+    for (i, &v) in ts.iter().enumerate() {
+        if i % 2 == 0 {
+            td[i / 2] = nib(v);
+        } else {
+            td[i / 2] |= nib(v) << 4;
+        }
+    }
+}
+
 /// Derive INT4 packed codes from INT8 codes + scale (low nibble = even
 /// element). Returns (packed bytes, scale). `quantize_kv_int4` is defined
 /// as `int4_from_int8(quantize_kv_int8(row))`, so transcoding resident
 /// INT8 codes with this function is bit-identical to quantizing the
-/// original row directly at INT4.
+/// original row directly at INT4. Word-wise; bit-identical to
+/// [`int4_from_int8_scalar`] (asserted by `prop_word_codec_matches_scalar`).
 pub fn int4_from_int8(codes: &[i8], scale: f32) -> (Vec<u8>, f32) {
     let mut packed = vec![0u8; codes.len().div_ceil(2)];
     if codes.iter().all(|&c| c == 0) {
         // Degenerate (zero / subnormal) rows keep the canonical scale 1.0.
+        return (packed, 1.0);
+    }
+    let lut = int8_to_nib_lut();
+    pack_rows(codes, &mut packed, |c: i8| lut[(c as u8) as usize]);
+    (packed, scale * (127.0 / 7.0))
+}
+
+/// Byte-at-a-time reference for [`int4_from_int8`] — the pre-word-codec
+/// implementation, retained for bit-identity property tests and the
+/// `bench hotpath` speedup ratio.
+pub fn int4_from_int8_scalar(codes: &[i8], scale: f32) -> (Vec<u8>, f32) {
+    let mut packed = vec![0u8; codes.len().div_ceil(2)];
+    if codes.iter().all(|&c| c == 0) {
         return (packed, 1.0);
     }
     let scale4 = scale * (127.0 / 7.0);
@@ -60,6 +131,20 @@ pub fn int4_from_int8(codes: &[i8], scale: f32) -> (Vec<u8>, f32) {
     (packed, scale4)
 }
 
+/// [`int4_from_int8`] operating directly on raw int8 row *bytes* (the
+/// pool/transcode representation) — no intermediate `Vec<i8>`. Overwrites
+/// all of `dst` and returns the new per-row scale.
+pub fn pack_int4_from_i8_bytes(src: &[u8], src_scale: f32, dst: &mut [u8]) -> f32 {
+    debug_assert_eq!(dst.len(), src.len().div_ceil(2));
+    if all_zero_bytes(src) {
+        dst.fill(0);
+        return 1.0;
+    }
+    let lut = int8_to_nib_lut();
+    pack_rows(src, dst, |b: u8| lut[b as usize]);
+    src_scale * (127.0 / 7.0)
+}
+
 /// Quantize one KV row to INT4, packed two codes per byte (low nibble =
 /// even element). Returns (packed bytes, scale). Defined as the nested
 /// refinement of the INT8 codes — see [`int4_from_int8`].
@@ -73,8 +158,31 @@ pub fn dequantize_kv(codes: &[i8], scale: f32) -> Vec<f32> {
     codes.iter().map(|&c| c as f32 * scale).collect()
 }
 
-/// Dequantize INT4 packed codes (`n` original elements) with a scalar scale.
+/// Dequantize INT4 packed codes (`n` original elements) with a scalar
+/// scale. Word-wise unpack: 8 codes per `u32` of packed nibbles (spread +
+/// SWAR sign extension), scalar tail — bit-identical to
+/// [`dequantize_kv_int4_scalar`].
 pub fn dequantize_kv_int4(packed: &[u8], n: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    let groups = n / 8;
+    for g in 0..groups {
+        let w = u32::from_le_bytes(packed[g * 4..g * 4 + 4].try_into().expect("4 bytes"));
+        let ext = sign_extend4x8(spread_nibbles8(w));
+        for b in ext.to_le_bytes() {
+            out.push(b as i8 as f32 * scale);
+        }
+    }
+    for i in groups * 8..n {
+        let byte = packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        out.push(super::groupwise::sign_extend4(nib) as f32 * scale);
+    }
+    out
+}
+
+/// Byte-at-a-time reference for [`dequantize_kv_int4`] — retained for
+/// bit-identity property tests and the `bench hotpath` speedup ratio.
+pub fn dequantize_kv_int4_scalar(packed: &[u8], n: usize, scale: f32) -> Vec<f32> {
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         let byte = packed[i / 2];
@@ -183,6 +291,42 @@ mod tests {
         let (nested, sn) = int4_from_int8(&c8, s8);
         assert_eq!(direct, nested);
         assert_eq!(sd.to_bits(), sn.to_bits());
+    }
+
+    #[test]
+    fn prop_word_codec_matches_scalar() {
+        // The word-wise pack/unpack vs the retained byte-at-a-time
+        // references: bit-identical across odd lengths, degenerate rows
+        // (all-zero, subnormal), and extreme codes.
+        run_prop("kv-word-vs-scalar", 0x51AB, 60, |g| {
+            let n = g.usize_in(1, 130);
+            let mut row = g.f32_vec(n, -8.0, 8.0);
+            match g.usize_in(0, 4) {
+                0 => row.iter_mut().for_each(|v| *v = 0.0),
+                1 => row.iter_mut().for_each(|v| *v = f32::MIN_POSITIVE / 4.0),
+                2 => row[0] = 1000.0,
+                _ => {}
+            }
+            let (c8, s8) = quantize_kv_int8(&row);
+            let (vp, vsc) = int4_from_int8(&c8, s8);
+            let (sp, ssc) = int4_from_int8_scalar(&c8, s8);
+            assert_eq!(vp, sp, "packed bytes diverge (n={n})");
+            assert_eq!(vsc.to_bits(), ssc.to_bits());
+
+            // Byte-level twin (the transcode path) agrees too.
+            let bytes: Vec<u8> = c8.iter().map(|&c| c as u8).collect();
+            let mut direct = vec![0xAAu8; n.div_ceil(2)];
+            let dsc = pack_int4_from_i8_bytes(&bytes, s8, &mut direct);
+            assert_eq!(direct, sp);
+            assert_eq!(dsc.to_bits(), ssc.to_bits());
+
+            let dv = dequantize_kv_int4(&vp, n, vsc);
+            let ds = dequantize_kv_int4_scalar(&vp, n, vsc);
+            assert_eq!(dv.len(), ds.len());
+            for (a, b) in dv.iter().zip(&ds) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dequant diverges (n={n})");
+            }
+        });
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod packing;
 pub mod qrearrange;
 pub mod swizzle;
 pub mod transcode;
+pub mod word;
 
 pub use groupwise::{GroupwiseQuant, QuantizedMatrix};
 pub use kv::{dequantize_kv, int4_from_int8, quantize_kv_int4, quantize_kv_int8};

@@ -26,6 +26,7 @@
 use super::access::{analyze_global, AccessReport, LaneAccess};
 use super::fragment::{Tile16x16, FRAG_ELEMS_PER_LANE, WARP_SIZE};
 use super::groupwise::{sign_extend4, QuantizedMatrix};
+use super::word::{mask_nibbles, pack_nibbles8, sign_extend4x8, spread_nibbles8};
 use crate::config::DType;
 
 /// Sub-word permutation applied in step (iii): position `i` of the packed
@@ -91,9 +92,31 @@ pub fn pack_weights_hw_aware(q: &QuantizedMatrix) -> PackedWeights {
 
 /// Step (iii) for one lane: pack 8 extended values into one u32 with the
 /// MMA-order permutation. Nibble `i` (bits `4i..4i+4`) holds register
-/// `PERMUTE[i]`'s low 4 bits.
+/// `PERMUTE[i]`'s low 4 bits. Word-level: the registers are gathered into
+/// byte lanes in permuted order and compacted with one SWAR sequence —
+/// the register-resident analogue of the prmt+lop3 idiom, bit-identical
+/// to [`compress_lane_word_scalar`].
 #[inline]
 pub fn compress_lane_word(frag: &[u16; FRAG_ELEMS_PER_LANE]) -> u32 {
+    // Byte lane `slot` holds frag[PERMUTE[slot]]; `as u8` keeps the low 4
+    // bits the scalar path masks, mask_nibbles clears the rest.
+    let lanes = u64::from_le_bytes([
+        frag[0] as u8,
+        frag[2] as u8,
+        frag[4] as u8,
+        frag[6] as u8,
+        frag[1] as u8,
+        frag[3] as u8,
+        frag[5] as u8,
+        frag[7] as u8,
+    ]);
+    pack_nibbles8(mask_nibbles(lanes))
+}
+
+/// Nibble-at-a-time reference for [`compress_lane_word`] — retained for
+/// bit-identity property tests and the `bench hotpath` speedup ratio.
+#[inline]
+pub fn compress_lane_word_scalar(frag: &[u16; FRAG_ELEMS_PER_LANE]) -> u32 {
     let mut w = 0u32;
     for (slot, &src) in PERMUTE.iter().enumerate() {
         w |= ((frag[src] as u32) & 0xF) << (4 * slot);
@@ -104,9 +127,23 @@ pub fn compress_lane_word(frag: &[u16; FRAG_ELEMS_PER_LANE]) -> u32 {
 /// The runtime I2F extraction: recover the 8 signed codes of a packed word
 /// in MMA register order. Mirrors the two-phase lop3 idiom — even registers
 /// come from the low four nibbles, odd registers from the high four — which
-/// is exactly why step (iii) permuted them.
+/// is exactly why step (iii) permuted them. Word-level: one nibble spread +
+/// SWAR sign extension, then the 8-move inverse permute — bit-identical to
+/// [`i2f_extract_scalar`].
 #[inline]
 pub fn i2f_extract(word: u32) -> [i8; FRAG_ELEMS_PER_LANE] {
+    let ext = sign_extend4x8(spread_nibbles8(word)).to_le_bytes();
+    let mut out = [0i8; FRAG_ELEMS_PER_LANE];
+    for (slot, &dst) in PERMUTE.iter().enumerate() {
+        out[dst] = ext[slot] as i8;
+    }
+    out
+}
+
+/// Nibble-at-a-time reference for [`i2f_extract`] — retained for
+/// bit-identity property tests and the `bench hotpath` speedup ratio.
+#[inline]
+pub fn i2f_extract_scalar(word: u32) -> [i8; FRAG_ELEMS_PER_LANE] {
     let mut out = [0i8; FRAG_ELEMS_PER_LANE];
     for (slot, &dst) in PERMUTE.iter().enumerate() {
         out[dst] = sign_extend4(((word >> (4 * slot)) & 0xF) as u8);
@@ -156,12 +193,17 @@ impl PackedWeights {
     /// row-major `[K, N]` matrix (for round-trip verification).
     pub fn unpack_codes(&self) -> Vec<i8> {
         let tiles_n = self.tiles_n();
+        // Lane → fragment coordinates are tile-invariant; hoisting them out
+        // of the tile loop (they used to be derived per tile per lane)
+        // keeps the loop bound by the word-level i2f extraction.
+        let coords: Vec<[(usize, usize); FRAG_ELEMS_PER_LANE]> =
+            (0..WARP_SIZE).map(super::fragment::mma_a_lane_coords).collect();
         let mut out = vec![0i8; self.k * self.n];
         for t in 0..self.n_tiles() {
             let (tk, tn) = (t / tiles_n, t % tiles_n);
             let frags = self.load_fragment(t);
             for (lane, frag) in frags.iter().enumerate() {
-                for (i, (r, c)) in super::fragment::mma_a_lane_coords(lane).iter().enumerate() {
+                for (i, (r, c)) in coords[lane].iter().enumerate() {
                     out[(tk * TILE + r) * self.n + (tn * TILE + c)] = frag[i];
                 }
             }
@@ -236,6 +278,25 @@ mod tests {
         for i in 0..8 {
             assert_eq!(codes[i], sign_extend4(frag[i] as u8), "reg {i}");
         }
+    }
+
+    #[test]
+    fn prop_word_compress_extract_match_scalar() {
+        // The SWAR compress/extract vs the retained nibble-at-a-time
+        // references: bit-identical for arbitrary register contents
+        // (including values wider than a nibble — only the low 4 bits of
+        // each register may matter) and arbitrary packed words.
+        run_prop("packing-word-vs-scalar", 0xC0DE, 40, |g| {
+            let mut frag = [0u16; FRAG_ELEMS_PER_LANE];
+            for f in frag.iter_mut() {
+                *f = g.usize_in(0, 0xFFFF) as u16;
+            }
+            let wv = compress_lane_word(&frag);
+            let ws = compress_lane_word_scalar(&frag);
+            assert_eq!(wv, ws, "compress diverges on {frag:?}");
+            let word = g.usize_in(0, u32::MAX as usize) as u32;
+            assert_eq!(i2f_extract(word), i2f_extract_scalar(word), "extract diverges on {word:#x}");
+        });
     }
 
     #[test]

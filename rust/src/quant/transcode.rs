@@ -18,7 +18,9 @@
 //! `head_dim` bytes of two's-complement codes, int4 rows are
 //! `head_dim.div_ceil(2)` bytes packed low-nibble-even.
 
-use super::kv::{int4_from_int8, quantize_kv_int4, quantize_kv_int8};
+use super::kv::{
+    int4_from_int8_scalar, pack_int4_from_i8_bytes, quantize_kv_int4, quantize_kv_int8,
+};
 
 /// Decode a kv16 row (little-endian f32 bytes) into floats.
 fn f32_row(src: &[u8]) -> Vec<f32> {
@@ -53,9 +55,19 @@ pub fn f32_row_to_int4(src: &[u8], dst: &mut [u8]) -> f32 {
 
 /// Transcode one kv8 row to kv4 straight from resident codes. `src` is
 /// `head_dim` bytes of int8 codes, `dst` is `head_dim.div_ceil(2)` bytes.
-/// Returns the new per-row scale.
+/// Returns the new per-row scale. Word-wise and allocation-free: the
+/// nibble LUT + SWAR pack runs directly on the pool's row bytes —
+/// bit-identical to [`int8_row_to_int4_scalar`] (property-tested below).
 pub fn int8_row_to_int4(src: &[u8], src_scale: f32, dst: &mut [u8]) -> f32 {
-    let (packed, scale) = int4_from_int8(&i8_row(src), src_scale);
+    debug_assert_eq!(dst.len(), src.len().div_ceil(2));
+    pack_int4_from_i8_bytes(src, src_scale, dst)
+}
+
+/// Byte-at-a-time reference for [`int8_row_to_int4`] — the pre-word-codec
+/// implementation (decode to `Vec<i8>`, scalar repack), retained for
+/// bit-identity property tests and the `bench hotpath` speedup ratio.
+pub fn int8_row_to_int4_scalar(src: &[u8], src_scale: f32, dst: &mut [u8]) -> f32 {
+    let (packed, scale) = int4_from_int8_scalar(&i8_row(src), src_scale);
     debug_assert_eq!(dst.len(), packed.len());
     dst.copy_from_slice(&packed);
     scale
@@ -97,6 +109,29 @@ mod tests {
             let lad_s4 = int8_row_to_int4(&dst8, got_s8, &mut lad4);
             assert_eq!(lad_s4.to_bits(), s4.to_bits());
             assert_eq!(lad4, c4);
+        });
+    }
+
+    #[test]
+    fn prop_word_transcode_matches_scalar_bitwise() {
+        // The allocation-free word path vs the retained scalar reference,
+        // across odd lengths and degenerate rows — dst starts dirty so a
+        // stale-byte leak in either path would diverge.
+        run_prop("transcode-word-vs-scalar", 0x7C0D_55, 50, |g| {
+            let n = g.usize_in(1, 130);
+            let row = match g.usize_in(0, 4) {
+                0 => vec![0f32; n],
+                1 => vec![f32::MIN_POSITIVE / 2.0; n],
+                _ => g.f32_vec(n, -8.0, 8.0),
+            };
+            let (c8, s8) = quantize_kv_int8(&row);
+            let bytes: Vec<u8> = c8.iter().map(|&c| c as u8).collect();
+            let mut word = vec![0xAAu8; n.div_ceil(2)];
+            let mut scalar = vec![0x55u8; n.div_ceil(2)];
+            let sw = int8_row_to_int4(&bytes, s8, &mut word);
+            let ss = int8_row_to_int4_scalar(&bytes, s8, &mut scalar);
+            assert_eq!(sw.to_bits(), ss.to_bits());
+            assert_eq!(word, scalar, "packed bytes diverge (n={n})");
         });
     }
 

@@ -1,0 +1,127 @@
+//! Word-level (SWAR) nibble/byte swizzles shared by the hot codec paths.
+//!
+//! The paper's kernel-side wins come from handling codes a *word* at a
+//! time ("instruction-level parallelism for memory hierarchy
+//! exploitation", §4.1's register-resident bit compression). This module
+//! is the CPU analogue: every primitive moves 8 codes per `u64` (or per
+//! `u32` of packed nibbles) using shift/mask sequences only — **no float
+//! math**, so callers can vectorize byte movement while keeping rounding
+//! bit-identical to the scalar reference implementations they retain.
+//!
+//! Conventions: nibble `i` of a packed word is bits `4i..4i+4`
+//! (little-endian nibble order), byte lane `i` of a spread word is bits
+//! `8i..8i+8` — both match `u32::from_le_bytes`/`u64::to_le_bytes` on the
+//! byte streams the KV pool stores.
+
+/// Low-nibble byte-lane mask.
+const NIB_LO: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+
+/// Compact the low nibble of each of 8 byte lanes into one `u32`:
+/// nibble `i` of the result = low nibble of byte lane `i` of `w`.
+/// High nibbles of `w` must be clear (callers mask with [`mask_nibbles`]).
+#[inline]
+pub fn pack_nibbles8(w: u64) -> u32 {
+    debug_assert_eq!(w & !NIB_LO, 0, "high nibbles must be clear");
+    // 0x0a0b0c0d... byte lanes -> pairwise merge: 4-bit, 8-bit, 16-bit.
+    let x = (w | (w >> 4)) & 0x00FF_00FF_00FF_00FF;
+    let x = (x | (x >> 8)) & 0x0000_FFFF_0000_FFFF;
+    (x | (x >> 16)) as u32
+}
+
+/// Inverse of [`pack_nibbles8`]: spread the 8 nibbles of `w` into the low
+/// nibbles of 8 byte lanes (high nibbles zero).
+#[inline]
+pub fn spread_nibbles8(w: u32) -> u64 {
+    let x = w as u64;
+    let x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    let x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    (x | (x << 4)) & NIB_LO
+}
+
+/// Clear the high nibble of every byte lane.
+#[inline]
+pub fn mask_nibbles(w: u64) -> u64 {
+    w & NIB_LO
+}
+
+/// Word-wise all-zero scan (8 bytes per compare, scalar tail) — the
+/// degenerate-row check on the quantize/transcode paths.
+#[inline]
+pub fn all_zero_bytes(bytes: &[u8]) -> bool {
+    let mut chunks = bytes.chunks_exact(8);
+    (&mut chunks).all(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")) == 0)
+        && chunks.remainder().iter().all(|&b| b == 0)
+}
+
+/// Sign-extend a 4-bit code in each byte lane to a full `i8` byte lane:
+/// lanes holding `0x0..=0x7` stay as-is, lanes holding `0x8..=0xF` get
+/// their high nibble set to `0xF0` (two's-complement extension). High
+/// nibbles of `w` must be clear on entry. Bit-identical per lane to
+/// [`super::groupwise::sign_extend4`].
+#[inline]
+pub fn sign_extend4x8(w: u64) -> u64 {
+    debug_assert_eq!(w & !NIB_LO, 0, "high nibbles must be clear");
+    // One sign bit per lane, multiplied out to 0xF0 — the per-lane
+    // products are < 256 so the multiply never carries across lanes.
+    let sign = (w >> 3) & 0x0101_0101_0101_0101;
+    w | sign * 0xF0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::groupwise::sign_extend4;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_spread_roundtrip_exhaustive_lanes() {
+        // Every nibble value in every lane position survives the
+        // pack -> spread -> pack cycle.
+        for lane in 0..8 {
+            for v in 0u64..16 {
+                let w = v << (8 * lane);
+                let packed = pack_nibbles8(w);
+                assert_eq!(packed, (v as u32) << (4 * lane), "lane {lane} v {v}");
+                assert_eq!(spread_nibbles8(packed), w);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_spread_roundtrip_random_words() {
+        let mut rng = Rng::new(0x50AC);
+        for _ in 0..2000 {
+            let w = mask_nibbles(rng.next_u64());
+            assert_eq!(spread_nibbles8(pack_nibbles8(w)), w);
+        }
+    }
+
+    #[test]
+    fn all_zero_scan_matches_scalar_at_every_length() {
+        for n in 0..40 {
+            let zeros = vec![0u8; n];
+            assert!(all_zero_bytes(&zeros), "len {n}");
+            for hot in 0..n {
+                let mut v = zeros.clone();
+                v[hot] = 1;
+                assert!(!all_zero_bytes(&v), "len {n} hot {hot}");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_extend_matches_scalar_per_lane() {
+        for v in 0u8..16 {
+            let w = sign_extend4x8((v as u64) * 0x0101_0101_0101_0101);
+            for (lane, b) in w.to_le_bytes().iter().enumerate() {
+                assert_eq!(*b as i8, sign_extend4(v), "lane {lane} v {v}");
+            }
+        }
+        // Mixed lanes: no cross-lane interference.
+        let w = sign_extend4x8(0x0F08_0700_0109_0E02);
+        let got: Vec<i8> = w.to_le_bytes().iter().map(|&b| b as i8).collect();
+        let want: Vec<i8> =
+            [0x2u8, 0xE, 0x9, 0x1, 0x0, 0x7, 0x8, 0xF].iter().map(|&n| sign_extend4(n)).collect();
+        assert_eq!(got, want);
+    }
+}
