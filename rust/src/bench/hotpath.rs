@@ -9,7 +9,10 @@
 //!   vs the pre-refactor per-token scalar walk;
 //! * wait-free per-replica fleet accounting
 //!   ([`crate::cluster::accounting`]) vs a shared
-//!   `Mutex<MetricsCollector>` on the completion path.
+//!   `Mutex<MetricsCollector>` on the completion path;
+//! * the flight recorder's disabled path ([`crate::trace`], DESIGN.md
+//!   §12) vs the same bookkeeping with no trace plumbing — gated the
+//!   *other* way (≥ 0.98×): recording off must cost nothing.
 //!
 //! Rows are mirrored to `BENCH_hotpath.json` in the flat
 //! `{bench, metric, value, unit, ratio_vs_scalar}` schema. With
@@ -271,6 +274,61 @@ fn bench_accounting(rows: &mut Vec<HotRow>) {
     });
 }
 
+fn bench_trace_off(rows: &mut Vec<HotRow>) {
+    use crate::trace::{EventKind, TraceEvent, TraceRecorder};
+    const EMITS: usize = 4096;
+
+    // Baseline: the decode-iteration bookkeeping with no trace plumbing
+    // at all — per-rung byte accumulation, the work `step_decode` does
+    // around every would-be emit site.
+    let scalar_s = median_secs(64, 9, || {
+        let mut stats = [0u64; 3];
+        for i in 0..EMITS {
+            let by = [i as u64, (i * 3) as u64, (i * 7) as u64];
+            for (a, b) in stats.iter_mut().zip(&by) {
+                *a += *b;
+            }
+        }
+        black_box(stats);
+    });
+
+    // Recorder-off path: identical work plus the engine's actual guard —
+    // one `Option` branch per would-be event (`Engine::emit` with
+    // `cfg.trace = false`). The hotpath gate holds this ≥ 0.98× baseline:
+    // tracing must be free when it is off.
+    let trace: Option<Arc<TraceRecorder>> = black_box(None);
+    let vector_s = median_secs(64, 9, || {
+        let mut stats = [0u64; 3];
+        for i in 0..EMITS {
+            let by = [i as u64, (i * 3) as u64, (i * 7) as u64];
+            for (a, b) in stats.iter_mut().zip(&by) {
+                *a += *b;
+            }
+            if let Some(t) = &trace {
+                t.record(&TraceEvent {
+                    sim_time_s: i as f64 * 1e-6,
+                    kind: EventKind::DecodeIter {
+                        batch: 4,
+                        padded_slots: 0,
+                        t_pad: 256,
+                        generated: 4,
+                        gather_by_rung: by,
+                        dur_s: 1e-6,
+                    },
+                });
+            }
+        }
+        black_box(stats);
+    });
+
+    rows.push(HotRow {
+        metric: "trace_off_guard",
+        scalar_s,
+        vector_s,
+        unit: "4096 guarded emits",
+    });
+}
+
 pub fn fig_hotpath() -> Table {
     let mut t = Table::new(
         "bench hotpath — vectorized codecs, planned KV gather, lock-free accounting (vs retained references)",
@@ -280,6 +338,7 @@ pub fn fig_hotpath() -> Table {
     bench_codecs(&mut rows);
     bench_gather(&mut rows);
     bench_accounting(&mut rows);
+    bench_trace_off(&mut rows);
 
     let mut json_rows = Vec::new();
     for r in &rows {
@@ -318,30 +377,40 @@ pub fn fig_hotpath() -> Table {
         assert_hotpath_table(&t);
         eprintln!("bench hotpath: BENCH_ASSERT checks passed");
     }
-    t.note("repo extension (DESIGN.md §11): every vectorized path is property-tested bit-identical to the scalar column it replaces; BENCH_ASSERT=1 additionally requires int4_unpack and gather_planned ≥ 1.5× in release builds; rows mirrored to BENCH_hotpath.json");
+    t.note("repo extension (DESIGN.md §11): every vectorized path is property-tested bit-identical to the scalar column it replaces; BENCH_ASSERT=1 additionally requires int4_unpack and gather_planned ≥ 1.5× and trace_off_guard ≥ 0.98× in release builds; rows mirrored to BENCH_hotpath.json");
     t
 }
 
 /// The `bench hotpath` acceptance checks (CI runs these via
 /// `BENCH_ASSERT=1`, release profile only): the two headline rewrites —
 /// the word-level INT4 decode and the planned gather — must beat their
-/// scalar references by at least 1.5×. The remaining rows are reported
-/// as trajectory, not gated: their win depends on workload shape.
+/// scalar references by at least 1.5×, and the flight recorder's
+/// disabled path must stay within noise of the recorder-free baseline
+/// (≥ 0.98×, DESIGN.md §12). The remaining rows are reported as
+/// trajectory, not gated: their win depends on workload shape.
 pub fn assert_hotpath_table(t: &Table) {
     let col = |name: &str| t.headers.iter().position(|h| h == name).unwrap();
     let (metric_c, ratio_c) = (col("metric"), col("ratio"));
-    for gated in ["int4_unpack", "gather_planned"] {
-        let row = t
-            .rows
+    let ratio_of = |metric: &str| -> f64 {
+        t.rows
             .iter()
-            .find(|r| r[metric_c] == gated)
-            .unwrap_or_else(|| panic!("{gated} row missing"));
-        let ratio: f64 = row[ratio_c].parse().unwrap();
+            .find(|r| r[metric_c] == metric)
+            .unwrap_or_else(|| panic!("{metric} row missing"))[ratio_c]
+            .parse()
+            .unwrap()
+    };
+    for gated in ["int4_unpack", "gather_planned"] {
+        let ratio = ratio_of(gated);
         assert!(
             ratio >= 1.5,
             "{gated}: vectorized path only {ratio:.2}× scalar (need ≥ 1.5×)"
         );
     }
+    let ratio = ratio_of("trace_off_guard");
+    assert!(
+        ratio >= 0.98,
+        "trace_off_guard: events-off path is {ratio:.3}× baseline (need ≥ 0.98×)"
+    );
 }
 
 #[cfg(test)]
@@ -354,7 +423,18 @@ mod tests {
         t.row(vec!["int4_unpack".into(), "3.0".into(), "1.0".into(), "3.00".into(), "row".into()]);
         t.row(vec!["gather_planned".into(), "9.0".into(), "4.0".into(), "2.25".into(), "batch".into()]);
         t.row(vec!["fleet_accounting".into(), "2.0".into(), "1.9".into(), "1.05".into(), "run".into()]);
+        t.row(vec!["trace_off_guard".into(), "1.0".into(), "1.0".into(), "0.99".into(), "emits".into()]);
         assert_hotpath_table(&t); // ungated rows may be < 1.5×
+    }
+
+    #[test]
+    #[should_panic(expected = "need ≥ 0.98×")]
+    fn assert_gate_rejects_a_costly_disabled_recorder() {
+        let mut t = Table::new("fake", &["metric", "scalar µs", "vectorized µs", "ratio", "per"]);
+        t.row(vec!["int4_unpack".into(), "3.0".into(), "1.0".into(), "3.00".into(), "row".into()]);
+        t.row(vec!["gather_planned".into(), "9.0".into(), "4.0".into(), "2.25".into(), "batch".into()]);
+        t.row(vec!["trace_off_guard".into(), "1.0".into(), "1.2".into(), "0.83".into(), "emits".into()]);
+        assert_hotpath_table(&t);
     }
 
     #[test]
@@ -363,6 +443,7 @@ mod tests {
         let mut t = Table::new("fake", &["metric", "scalar µs", "vectorized µs", "ratio", "per"]);
         t.row(vec!["int4_unpack".into(), "1.0".into(), "1.0".into(), "1.00".into(), "row".into()]);
         t.row(vec!["gather_planned".into(), "9.0".into(), "4.0".into(), "2.25".into(), "batch".into()]);
+        t.row(vec!["trace_off_guard".into(), "1.0".into(), "1.0".into(), "0.99".into(), "emits".into()]);
         assert_hotpath_table(&t);
     }
 

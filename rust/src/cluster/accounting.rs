@@ -265,6 +265,53 @@ mod tests {
     }
 
     #[test]
+    fn drain_totals_survive_merge_order_permutations() {
+        // Fleet merges happen in whatever order the probe walks the
+        // replicas; every aggregate a probe reports must be independent
+        // of that order. Three recorders with distinct shapes (one of
+        // them windowed) drained in all six orders.
+        let a = Arc::new(ReplicaRecorder::with_capacity(4));
+        let b = Arc::new(ReplicaRecorder::with_capacity(4));
+        let c = Arc::new(ReplicaRecorder::with_capacity(2));
+        a.record(1.0, 0.25, 1.0, 32, 4);
+        a.record(3.0, 0.75, 3.0, 16, 4);
+        b.record(2.0, 0.5, 2.0, 8, 2);
+        for i in 0..5 {
+            c.record(4.0 + i as f64, 1.0, 4.0, 4, 1); // windows to last 2
+        }
+        let orders: [[&Arc<ReplicaRecorder>; 3]; 6] = [
+            [&a, &b, &c],
+            [&a, &c, &b],
+            [&b, &a, &c],
+            [&b, &c, &a],
+            [&c, &a, &b],
+            [&c, &b, &a],
+        ];
+        let mut reference = None;
+        for order in orders {
+            let rs: Vec<Arc<ReplicaRecorder>> =
+                order.iter().map(|r| Arc::clone(r)).collect();
+            let (m, exact, torn) = collect(&rs);
+            assert_eq!(torn, 0, "idle recorders never tear");
+            let got = (
+                exact,
+                m.count(),
+                m.total_tokens(),
+                m.latency_percentiles(),
+                m.ttft_percentiles(),
+                m.tpot_percentiles(),
+            );
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "merge order changed a total"),
+            }
+        }
+        let (exact, count, ..) = reference.unwrap();
+        assert_eq!(exact, 8, "counter totals are exact despite the windowed ring");
+        assert_eq!(count, 5, "2 + 1 + windowed 2 percentile samples");
+    }
+
+    #[test]
     fn collect_merges_fleet_and_reports_exact_count() {
         let a = Arc::new(ReplicaRecorder::with_capacity(4));
         let b = Arc::new(ReplicaRecorder::with_capacity(4));

@@ -41,11 +41,13 @@ use anyhow::{bail, Context, Result};
 pub use accounting::ReplicaRecorder;
 pub use replica::{request_cost, ReplicaHandle, ReplicaLoad, ReplicaSpec, ToReplica};
 pub use router::{LoadView, Router, RouterPolicy};
-pub use stats::{merge_prefix, ClusterStats, ReplicaSnapshot};
+pub use stats::{merge_prefix, merge_telemetry, ClusterStats, ReplicaSnapshot};
 
 use crate::config::EngineConfig;
 use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
 use crate::metrics::MetricsCollector;
+use crate::trace::TraceDump;
+use crate::util::json::{arr, obj, Json};
 
 /// Fleet configuration: a base engine config every replica inherits
 /// (pool geometry, chunking, cache/preemption knobs, seed) plus the
@@ -239,6 +241,34 @@ impl Cluster {
         Ok(cs)
     }
 
+    /// Probe every replica's flight-recorder ring and merge the answers:
+    /// `{"trace": {"cluster": true, "replicas": [...]}}`, one entry per
+    /// responding replica (id, label, enabled, recorded/dropped/torn
+    /// counters, events). Same two-phase fire-then-collect shape as
+    /// [`stats`](Self::stats): a wedged replica costs at most the shared
+    /// deadline and is omitted, never propagated as a probe failure.
+    pub fn trace(&self, last: usize) -> Result<Json> {
+        let probes: Vec<(usize, Result<Receiver<Json>>)> =
+            self.replicas.iter().map(|r| (r.id, r.trace_probe(last))).collect();
+        let deadline = Instant::now() + STATS_PROBE_DEADLINE;
+        let mut entries = Vec::with_capacity(self.replicas.len());
+        for (id, probe) in probes {
+            let answer = probe.and_then(|rx| {
+                let left = deadline.saturating_duration_since(Instant::now());
+                rx.recv_timeout(left)
+                    .map_err(|e| anyhow::anyhow!("replica {id} trace probe: {e}"))
+            });
+            match answer {
+                Ok(j) => entries.push(j),
+                Err(e) => eprintln!("trace probe skipping replica {id}: {e}"),
+            }
+        }
+        Ok(obj([(
+            "trace",
+            obj([("cluster", Json::from(true)), ("replicas", arr(entries))]),
+        )]))
+    }
+
     /// Close every inbox, wait for replicas to drain outstanding work,
     /// and return their final snapshots.
     pub fn shutdown(self) -> Result<Vec<ReplicaSnapshot>> {
@@ -263,6 +293,10 @@ pub struct FleetRun {
     pub outputs: Vec<RoutedOutput>,
     pub snapshots: Vec<ReplicaSnapshot>,
     pub policy: RouterPolicy,
+    /// Per-replica `(label, flight-recorder dump)` in replica order —
+    /// empty dumps when the base config leaves tracing off. The labels
+    /// become Chrome-trace track names ([`crate::trace::TraceTrack`]).
+    pub traces: Vec<(String, TraceDump)>,
 }
 
 impl FleetRun {
@@ -274,6 +308,26 @@ impl FleetRun {
     /// Fleet prefix-cache effectiveness (sums over replicas).
     pub fn fleet_prefix(&self) -> crate::metrics::PrefixCacheSummary {
         merge_prefix(&self.snapshots)
+    }
+
+    /// Fleet precision-attributed telemetry (element-wise sums).
+    pub fn fleet_telemetry(&self) -> crate::metrics::TelemetrySummary {
+        merge_telemetry(&self.snapshots)
+    }
+
+    /// Chrome-trace tracks over the per-replica dumps (one track per
+    /// replica, `tid` = replica index), ready for
+    /// [`crate::trace::write_chrome`].
+    pub fn trace_tracks(&self) -> Vec<crate::trace::TraceTrack<'_>> {
+        self.traces
+            .iter()
+            .enumerate()
+            .map(|(i, (label, dump))| crate::trace::TraceTrack {
+                tid: i,
+                label: label.clone(),
+                dump,
+            })
+            .collect()
     }
 
     /// Modeled completion metrics on each replica's device clock: replicas
@@ -340,6 +394,7 @@ pub fn run_fleet(cfg: &ClusterConfig, requests: &[Request]) -> Result<FleetRun> 
 
     let mut outputs = Vec::with_capacity(requests.len());
     let mut snapshots = Vec::with_capacity(n);
+    let mut traces = Vec::with_capacity(n);
     for i in 0..n {
         let mut engine =
             Engine::new(cfg.engine_config(i)).with_context(|| format!("replica {i}"))?;
@@ -369,9 +424,10 @@ pub fn run_fleet(cfg: &ClusterConfig, requests: &[Request]) -> Result<FleetRun> 
         // Submit-time aborts surface via take_outputs inside
         // run_to_completion too, so every submitted request is accounted.
         snapshots.push(ReplicaSnapshot::of(i, &cfg.specs[i].label(), &engine, mine.len(), 0, 0));
+        traces.push((cfg.specs[i].label(), engine.trace_dump()));
     }
     outputs.sort_by_key(|o| o.request);
-    Ok(FleetRun { assignments, outputs, snapshots, policy: cfg.policy })
+    Ok(FleetRun { assignments, outputs, snapshots, policy: cfg.policy, traces })
 }
 
 #[cfg(test)]
@@ -469,6 +525,45 @@ mod tests {
         // Closing the wedged inbox lets its thread exit; then drain the
         // real replica.
         drop(c.replicas.pop());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn fleet_traces_collect_and_cluster_probe_answers() {
+        let mut cfg = ClusterConfig::homogeneous(base(), 2, RouterPolicy::RoundRobin);
+        cfg.base.trace = true;
+        let reqs: Vec<Request> =
+            (0..4).map(|i| Request::new(vec![(i * 17 % 512) as i32; 24], 3)).collect();
+        let run = run_fleet(&cfg, &reqs).unwrap();
+        assert_eq!(run.traces.len(), 2);
+        for (label, dump) in &run.traces {
+            assert!(!dump.events.is_empty(), "{label} traced nothing");
+            assert_eq!(dump.dropped, 0);
+        }
+        // The per-replica dumps export as one multi-track Chrome trace.
+        let json = crate::trace::chrome_trace(&run.trace_tracks());
+        crate::trace::validate(&json).unwrap();
+
+        // Same config live: the router-tier probe merges per-replica rings.
+        let mut c = Cluster::start(cfg).unwrap();
+        let (otx, orx) = mpsc::channel();
+        c.dispatch_to(0, Request::new((0..8).collect(), 2), otx).unwrap();
+        orx.recv().unwrap();
+        let t = c.trace(0).unwrap();
+        let body = t.get("trace").unwrap();
+        assert_eq!(body.get("cluster").and_then(crate::util::json::Json::as_bool), Some(true));
+        let reps = body.req_arr("replicas").unwrap();
+        assert_eq!(reps.len(), 2, "both replicas answered");
+        assert_eq!(reps[0].req_usize("id").unwrap(), 0);
+        assert!(
+            reps[0].req_arr("events").unwrap().len() >= 3,
+            "dispatched replica recorded admit/work/finish"
+        );
+        assert_eq!(
+            reps[1].req_arr("events").unwrap().len(),
+            0,
+            "idle replica's ring is empty, not missing"
+        );
         c.shutdown().unwrap();
     }
 

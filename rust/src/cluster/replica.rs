@@ -26,6 +26,7 @@ use super::accounting::ReplicaRecorder;
 use super::stats::ReplicaSnapshot;
 use crate::config::{DeviceProfile, EngineConfig, LadderPolicy, PrecisionFormat};
 use crate::coordinator::{Engine, Request, RequestOutput};
+use crate::util::json::Json;
 
 /// What makes one replica different from its neighbors: the precision
 /// format it serves, the device profile its latency model runs on, and
@@ -164,6 +165,11 @@ pub enum ToReplica {
     Gen { req: Request, reply: Sender<RequestOutput> },
     /// Snapshot engine state (answered between iterations).
     Stats { reply: Sender<ReplicaSnapshot> },
+    /// Dump the flight-recorder ring (`last = 0` → whole resident ring,
+    /// `last = N` → newest N events), answered between iterations as a
+    /// per-replica JSON object: `{"id", "label", "enabled", "recorded",
+    /// "dropped", "torn", "events"}`.
+    Trace { last: usize, reply: Sender<Json> },
 }
 
 /// A live replica: inbox sender + load counters + the join handle whose
@@ -236,6 +242,20 @@ impl ReplicaHandle {
             .ok_or_else(|| anyhow!("replica {} already shut down", self.id))?
             .try_send(ToReplica::Stats { reply: tx })
             .map_err(|_| anyhow!("replica {} inbox full or gone; probe skipped", self.id))?;
+        Ok(rx)
+    }
+
+    /// Fire a trace-dump probe without waiting for the answer (same
+    /// `try_send` degradation contract as [`probe`](Self::probe): a
+    /// saturated or dead replica fails the probe instead of blocking, and
+    /// [`super::Cluster::trace`] omits it from the fleet answer).
+    pub fn trace_probe(&self, last: usize) -> Result<Receiver<Json>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("replica {} already shut down", self.id))?
+            .try_send(ToReplica::Trace { last, reply: tx })
+            .map_err(|_| anyhow!("replica {} inbox full or gone; trace probe skipped", self.id))?;
         Ok(rx)
     }
 
@@ -383,6 +403,10 @@ fn replica_main(
                     // inbox; busy ones fall through to admit more.
                     continue;
                 }
+                ToReplica::Trace { last, reply } => {
+                    let _ = reply.send(replica_trace_json(id, &label, &engine, last));
+                    continue;
+                }
                 ToReplica::Gen { req, reply } => {
                     let cost = request_cost(&req);
                     match engine.submit(req) {
@@ -427,6 +451,21 @@ fn replica_main(
             }
         }
     }
+}
+
+/// One replica's trace-probe answer: the engine's ring dump plus the
+/// replica identity, so the fleet-level `{"trace": ...}` answer needs no
+/// side lookup to label its tracks.
+fn replica_trace_json(id: usize, label: &str, engine: &Engine, last: usize) -> Json {
+    let dump =
+        if last == 0 { engine.trace_dump() } else { engine.trace_dump_last(last) };
+    let mut body = crate::trace::dump_json(&dump);
+    if let Json::Obj(m) = &mut body {
+        m.insert("enabled".into(), Json::from(engine.trace_recorder().is_some()));
+        m.insert("id".into(), Json::from(id));
+        m.insert("label".into(), Json::from(label));
+    }
+    body
 }
 
 #[cfg(test)]
@@ -550,6 +589,40 @@ mod tests {
         assert_eq!(snap.completed, 2, "rejections count as answered");
         assert_eq!((snap.outstanding_reqs, snap.outstanding_tokens), (0, 0));
         assert_eq!(recorder.completed(), 1, "…but not as successes");
+    }
+
+    #[test]
+    fn trace_probe_answers_with_identity_and_events() {
+        let cfg = EngineConfig {
+            kv_pool_tokens: 16 * 64,
+            trace: true,
+            ..EngineConfig::default()
+        };
+        let r = ReplicaHandle::spawn(
+            3,
+            cfg,
+            "W4A16KV8@A100".into(),
+            8,
+            Arc::new(ReplicaRecorder::new()),
+            Instant::now(),
+        )
+        .unwrap();
+        let (otx, orx) = mpsc::channel();
+        r.load().start(8 + 2);
+        r.send(ToReplica::Gen { req: Request::new((0..8).collect(), 2), reply: otx })
+            .unwrap();
+        orx.recv().unwrap();
+        let t = r.trace_probe(0).unwrap().recv().unwrap();
+        assert_eq!(t.get("enabled").and_then(Json::as_bool), Some(true));
+        assert_eq!(t.req_usize("id").unwrap(), 3);
+        assert_eq!(t.req_str("label").unwrap(), "W4A16KV8@A100");
+        let n = t.req_arr("events").unwrap().len();
+        assert!(n >= 3, "admit + work + finish recorded, got {n}");
+        assert_eq!(t.req_usize("recorded").unwrap(), n, "nothing dropped at this volume");
+        // last-N bounds the answer.
+        let t2 = r.trace_probe(2).unwrap().recv().unwrap();
+        assert_eq!(t2.req_arr("events").unwrap().len(), 2);
+        r.join().unwrap();
     }
 
     #[test]

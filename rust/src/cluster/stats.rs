@@ -13,7 +13,7 @@
 use crate::coordinator::{Engine, EngineStats};
 use crate::metrics::{
     percentile_fields, MetricsCollector, Percentiles, PrefixCacheSummary, PreemptionSummary,
-    LATENCY_PCTL_KEYS, TPOT_PCTL_KEYS, TTFT_PCTL_KEYS,
+    TelemetrySummary, LATENCY_PCTL_KEYS, TPOT_PCTL_KEYS, TTFT_PCTL_KEYS,
 };
 use crate::util::json::{arr, obj, Json};
 
@@ -48,6 +48,10 @@ pub struct ReplicaSnapshot {
     pub preempt: PreemptionSummary,
     pub swap_blocks_used: usize,
     pub swap_budget_blocks: usize,
+    /// Precision-attributed byte telemetry (per-rung gather/transcode/swap
+    /// traffic + resident-layer occupancy) — fleet views merge these
+    /// element-wise, so per-rung sums stay exact.
+    pub telemetry: TelemetrySummary,
 }
 
 impl ReplicaSnapshot {
@@ -75,6 +79,7 @@ impl ReplicaSnapshot {
             preempt: engine.preemption_summary(),
             swap_blocks_used: engine.swap_store().used_blocks(),
             swap_budget_blocks: engine.swap_store().budget_blocks(),
+            telemetry: engine.telemetry(),
         }
     }
 
@@ -107,6 +112,9 @@ impl ReplicaSnapshot {
             ("ladder_freed_bytes", Json::from(self.preempt.ladder_freed_bytes)),
             ("oom_aborts", Json::from(self.preempt.oom_aborts)),
             ("sim_time_s", Json::from(self.stats.sim_time_s)),
+            ("gather_hbm_bytes", Json::from(self.stats.gather_hbm_bytes)),
+            ("padded_slots", Json::from(self.stats.padded_slots)),
+            ("telemetry", self.telemetry.to_json()),
         ])
     }
 }
@@ -124,6 +132,20 @@ pub fn merge_prefix<'a>(
         m.blocks_saved += p.blocks_saved;
         m.prefill_tokens_skipped += p.prefill_tokens_skipped;
         m.evicted_blocks += p.evicted_blocks;
+        m.invalidated_blocks += p.invalidated_blocks;
+    }
+    m
+}
+
+/// Sum precision-attributed telemetry across replicas. Element-wise, so
+/// every per-rung fleet bucket equals the sum of the per-replica buckets
+/// regardless of merge order.
+pub fn merge_telemetry<'a>(
+    snaps: impl IntoIterator<Item = &'a ReplicaSnapshot>,
+) -> TelemetrySummary {
+    let mut m = TelemetrySummary::default();
+    for s in snaps {
+        m.merge(&s.telemetry);
     }
     m
 }
@@ -156,6 +178,11 @@ impl ClusterStats {
     /// Fleet prefix-cache effectiveness (sums over replicas).
     pub fn fleet_prefix(&self) -> PrefixCacheSummary {
         merge_prefix(&self.replicas)
+    }
+
+    /// Fleet precision-attributed telemetry (element-wise sums).
+    pub fn fleet_telemetry(&self) -> TelemetrySummary {
+        merge_telemetry(&self.replicas)
     }
 
     /// Fraction of fleet admissions served at least one resident block.
@@ -215,6 +242,17 @@ impl ClusterStats {
                 "fleet_oom_aborts",
                 Json::from(self.replicas.iter().map(|r| r.preempt.oom_aborts).sum::<usize>()),
             ),
+            (
+                "fleet_gather_hbm_bytes",
+                Json::from(
+                    self.replicas.iter().map(|r| r.stats.gather_hbm_bytes).sum::<usize>(),
+                ),
+            ),
+            (
+                "fleet_padded_slots",
+                Json::from(self.replicas.iter().map(|r| r.stats.padded_slots).sum::<usize>()),
+            ),
+            ("telemetry", self.fleet_telemetry().to_json()),
         ];
         fields.extend(percentile_fields(LATENCY_PCTL_KEYS, self.latency));
         fields.extend(percentile_fields(TTFT_PCTL_KEYS, self.ttft));
@@ -244,6 +282,7 @@ mod tests {
             blocks_saved: hits,
             prefill_tokens_skipped: hits * 16,
             evicted_blocks: 0,
+            invalidated_blocks: hits / 2,
         });
         s
     }
@@ -256,6 +295,29 @@ mod tests {
         assert_eq!((m.hits, m.lookups), (4, 8));
         assert!((m.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(m.prefill_tokens_skipped, 64);
+        // `merge_prefix` must carry *every* summary field — this one
+        // silently dropped `invalidated_blocks` before the telemetry work.
+        assert_eq!(m.invalidated_blocks, 1);
+    }
+
+    #[test]
+    fn fleet_telemetry_merges_element_wise() {
+        let mut a = snap(0, 0, 0);
+        a.telemetry.gather_hbm_bytes_by_rung = [10, 20, 30];
+        a.telemetry.swap_pcie_bytes_by_rung = [1, 0, 2];
+        a.telemetry.occupancy_layers_by_rung = [2, 2, 0];
+        let mut b = snap(1, 0, 0);
+        b.telemetry.gather_hbm_bytes_by_rung = [5, 0, 1];
+        b.telemetry.transcode_bytes_by_rung = [0, 7, 0];
+        b.telemetry.occupancy_layers_by_rung = [0, 4, 0];
+        let ab = merge_telemetry([&a, &b]);
+        let ba = merge_telemetry([&b, &a]);
+        assert_eq!(ab, ba, "merge order never changes totals");
+        assert_eq!(ab.gather_hbm_bytes_by_rung, [15, 20, 31]);
+        assert_eq!(ab.transcode_bytes_by_rung, [0, 7, 0]);
+        assert_eq!(ab.swap_pcie_bytes_by_rung, [1, 0, 2]);
+        assert_eq!(ab.occupancy_layers_by_rung, [2, 6, 0]);
+        assert_eq!(ab.gather_hbm_bytes(), 66);
     }
 
     #[test]
@@ -290,6 +352,23 @@ mod tests {
         assert_eq!(r0.req_usize("ladder_events").unwrap(), 0);
         assert_eq!(parsed.req_usize("fleet_ladder_events").unwrap(), 0);
         assert_eq!(parsed.req_usize("fleet_ladder_freed_bytes").unwrap(), 0);
+        // Satellite telemetry fields round-trip at both tiers.
+        assert_eq!(parsed.req_usize("fleet_gather_hbm_bytes").unwrap(), 0);
+        assert_eq!(parsed.req_usize("fleet_padded_slots").unwrap(), 0);
+        assert_eq!(r0.req_usize("gather_hbm_bytes").unwrap(), 0);
+        assert_eq!(r0.req_usize("padded_slots").unwrap(), 0);
+        let tel = parsed.get("telemetry").expect("fleet telemetry object");
+        assert_eq!(tel.req_arr("rungs").unwrap().len(), 3);
+        // Fleet occupancy = 2 replicas × default engine's kv8 layers.
+        let occ = tel.req_arr("occupancy_layers_by_rung").unwrap();
+        assert_eq!(occ[0].as_usize(), Some(0), "no kv16 layers in a kv8 fleet");
+        assert!(occ[1].as_usize().unwrap() > 0, "kv8 layers counted twice over");
+        let rtel = r0.get("telemetry").expect("per-replica telemetry object");
+        assert_eq!(
+            occ[1].as_usize().unwrap(),
+            2 * rtel.req_arr("occupancy_layers_by_rung").unwrap()[1].as_usize().unwrap(),
+            "fleet histogram sums the replicas"
+        );
     }
 
 }

@@ -184,6 +184,13 @@ pub struct EngineConfig {
     pub kv_layout: Option<String>,
     /// In-place precision-laddering policy (see [`LadderPolicy`]).
     pub ladder_policy: LadderPolicy,
+    /// Record lifecycle events into the flight-recorder ring (DESIGN.md
+    /// §12). Off by default: the disabled path is a single branch per
+    /// would-be event, so serving hot-path ratios are unaffected.
+    pub trace: bool,
+    /// Flight-recorder ring capacity in events (oldest events are
+    /// overwritten once exceeded; the drop count is exact).
+    pub trace_ring_capacity: usize,
 }
 
 /// Iteration-level scheduling policy (§5 serving comparisons; the
@@ -220,6 +227,8 @@ impl Default for EngineConfig {
             swap_budget_blocks: 0,
             kv_layout: None,
             ladder_policy: LadderPolicy::Off,
+            trace: false,
+            trace_ring_capacity: crate::trace::DEFAULT_RING_CAPACITY,
         }
     }
 }

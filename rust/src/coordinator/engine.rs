@@ -15,6 +15,7 @@
 //!   token back into the pool (no engine-side re-quantization).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -24,12 +25,13 @@ use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
 use super::sampler::Sampler;
 use super::scheduler::{Action, Scheduler};
 use crate::config::{layer_importance, BackendKind, EngineConfig, LadderPolicy, PreemptionMode};
-use crate::kvcache::swap::transfer_time_s;
+use crate::kvcache::swap::{snapshot_bytes, transfer_time_s};
 use crate::kvcache::{KvLayout, KvPool, PrefixCache, SeqHandle, SwapStore};
-use crate::metrics::{PreemptionSummary, PrefixCacheSummary};
+use crate::metrics::{PreemptionSummary, PrefixCacheSummary, TelemetrySummary};
 use crate::runtime::{
     DecodeArgs, ExecutionBackend, ModelSpec, PrefillArgs, SimBackend, StepOutputs,
 };
+use crate::trace::{EventKind, TraceDump, TraceEvent, TraceRecorder, NO_ID};
 
 /// What one engine iteration did.
 #[derive(Debug, Clone)]
@@ -64,6 +66,16 @@ pub struct EngineStats {
     /// [`GatherPlan::hbm_bytes`](crate::kvcache::pool::GatherPlan) sums) —
     /// the memory-traffic side of the decode hot path.
     pub gather_hbm_bytes: usize,
+    /// `gather_hbm_bytes` split per [`KvPrecision`](crate::kvcache::KvPrecision)
+    /// ladder rung (index = `ladder_rank()`: kv16/kv8/kv4). The three
+    /// buckets always sum exactly to `gather_hbm_bytes`.
+    pub gather_hbm_bytes_by_rung: [usize; 3],
+    /// Ladder transcode read+write HBM bytes, attributed to each changed
+    /// layer's *destination* rung. Sums to `PreemptStats::ladder_transcoded_bytes`.
+    pub transcode_bytes_by_rung: [usize; 3],
+    /// Swap-preemption PCIe bytes (out + in, codes + scales), split per
+    /// rung of the layout the snapshot was exported at.
+    pub swap_pcie_bytes_by_rung: [usize; 3],
     /// Modeled device time accumulated by the backend (sim backend only;
     /// the PJRT path is wall-clock-timed by callers instead), plus modeled
     /// PCIe time for swap-preemption transfers.
@@ -124,6 +136,9 @@ pub struct Engine {
     next_id: u64,
     outputs: Vec<RequestOutput>,
     pub stats: EngineStats,
+    /// Flight recorder (DESIGN.md §12). `None` unless `cfg.trace` — the
+    /// hot path then pays exactly one branch per would-be event.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 #[cfg(feature = "pjrt")]
@@ -200,6 +215,9 @@ impl Engine {
         let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
         let rng = crate::util::rng::Rng::new(cfg.seed);
         let swap = SwapStore::new(cfg.kv_block_tokens, cfg.swap_budget_blocks);
+        let trace = cfg
+            .trace
+            .then(|| Arc::new(TraceRecorder::with_capacity(cfg.trace_ring_capacity)));
         Ok(Self {
             backend,
             model: m,
@@ -217,6 +235,7 @@ impl Engine {
             next_id: 0,
             outputs: Vec::new(),
             stats: EngineStats::default(),
+            trace,
         })
     }
 
@@ -264,6 +283,14 @@ impl Engine {
         let oversized = self.pool.blocks_for(total) > self.pool.total_blocks();
         let mut seq = SeqState::new(id, req, Instant::now());
         seq.submitted_sim_s = self.stats.sim_time_s;
+        self.emit(
+            self.stats.sim_time_s,
+            EventKind::Admit {
+                id,
+                prompt_len: seq.prompt.len() as u64,
+                max_new_tokens: seq.max_new_tokens as u64,
+            },
+        );
         self.seqs.insert(id, seq);
         if oversized {
             // Reject at submit time instead of idling forever: the
@@ -319,6 +346,41 @@ impl Engine {
     /// Preemption effectiveness counters (decisions + swap traffic).
     pub fn preemption_summary(&self) -> PreemptionSummary {
         PreemptionSummary::new(self.preempt_stats, self.swap.stats)
+    }
+
+    /// The flight recorder, when tracing is enabled (`cfg.trace`).
+    pub fn trace_recorder(&self) -> Option<&Arc<TraceRecorder>> {
+        self.trace.as_ref()
+    }
+
+    /// Snapshot the whole resident trace ring (empty dump when off).
+    pub fn trace_dump(&self) -> TraceDump {
+        self.trace.as_ref().map(|t| t.dump()).unwrap_or_default()
+    }
+
+    /// Snapshot the newest `last` ring events (empty dump when off).
+    pub fn trace_dump_last(&self, last: usize) -> TraceDump {
+        self.trace.as_ref().map(|t| t.dump_last(last)).unwrap_or_default()
+    }
+
+    /// Precision-attributed byte telemetry + current per-layer occupancy.
+    pub fn telemetry(&self) -> TelemetrySummary {
+        TelemetrySummary {
+            gather_hbm_bytes_by_rung: self.stats.gather_hbm_bytes_by_rung,
+            transcode_bytes_by_rung: self.stats.transcode_bytes_by_rung,
+            swap_pcie_bytes_by_rung: self.stats.swap_pcie_bytes_by_rung,
+            occupancy_layers_by_rung: self.pool.layout().rung_histogram(),
+        }
+    }
+
+    /// Record one event at modeled time `ts` — a single branch when
+    /// tracing is off, so the hot path is unaffected (`bench hotpath`
+    /// guards this stays ≥ 0.98× the recorder-free baseline).
+    #[inline]
+    fn emit(&self, ts: f64, kind: EventKind) {
+        if let Some(t) = &self.trace {
+            t.record(&TraceEvent { sim_time_s: ts, kind });
+        }
     }
 
     /// One engine iteration.
@@ -548,13 +610,56 @@ impl Engine {
         let cost = self.victim_cost(id);
         let mech = self.victim_mechanism(id, &cost);
         let h = self.seqs[&id].handle.expect("victim has a handle");
+        if self.trace.is_some() {
+            // The decision record: the chosen mechanism's modeled cost,
+            // the same victim's cost under the losing mechanism, and the
+            // runner-up candidate the cost model passed over.
+            let alt = match mech {
+                PreemptMechanism::Swap => PreemptMechanism::Recompute,
+                _ => PreemptMechanism::Swap,
+            };
+            let (runner_up, runner_up_cost_s) = self
+                .running
+                .iter()
+                .filter(|&&v| v != id)
+                .map(|&v| {
+                    let c = self.victim_cost(v);
+                    (v, c.cost_of(self.victim_mechanism(v, &c)))
+                })
+                .min_by(|a, b| a.1.total_cmp(&b.1).then(b.0.cmp(&a.0)))
+                .unwrap_or((NO_ID, 0.0));
+            self.emit(
+                self.stats.sim_time_s,
+                EventKind::Preempt {
+                    victim: id,
+                    mechanism: mech.trace_code(),
+                    chosen_cost_s: cost.cost_of(mech),
+                    alt_cost_s: cost.cost_of(alt),
+                    candidates: self.running.len() as u64,
+                    runner_up,
+                    runner_up_cost_s,
+                },
+            );
+        }
         self.running.retain(|x| *x != id);
         self.preempt_stats.preemptions += 1;
         match mech {
             PreemptMechanism::Swap => {
                 let snap = self.pool.export_seq(h)?;
-                self.stats.sim_time_s +=
-                    transfer_time_s(snap.code_bytes() + snap.scales.len() * 4);
+                let by_rung = self.pool.token_bytes_by_rung().map(|b| b * snap.len);
+                for (acc, b) in self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
+                    *acc += b;
+                }
+                let dt = transfer_time_s(snapshot_bytes(&snap));
+                self.emit(
+                    self.stats.sim_time_s,
+                    EventKind::SwapOut {
+                        id,
+                        bytes_by_rung: by_rung.map(|b| b as u64),
+                        dur_s: dt,
+                    },
+                );
+                self.stats.sim_time_s += dt;
                 self.swap.insert(id, snap)?;
                 self.preempt_stats.swap_preemptions += 1;
                 self.seqs.get_mut(&id).unwrap().swapped = true;
@@ -668,11 +773,25 @@ impl Engine {
             let cost = LadderCost::estimate(est.transcoded_bytes, est.gained_blocks, dropped);
             cursor = next;
             if cost.frees_enough(needed_blocks) {
-                target = Some(cursor.clone());
+                target = Some((cursor.clone(), cost));
                 break;
             }
         }
-        let Some(target) = target else { return Ok(false) };
+        let Some((target, cost)) = target else { return Ok(false) };
+        // The "nobody evicted" decision record: the pool-wide rung beat
+        // every per-victim mechanism, so there is no victim or runner-up.
+        self.emit(
+            self.stats.sim_time_s,
+            EventKind::Preempt {
+                victim: NO_ID,
+                mechanism: PreemptMechanism::Ladder.trace_code(),
+                chosen_cost_s: cost.time_s(),
+                alt_cost_s: 0.0,
+                candidates: self.running.len() as u64,
+                runner_up: NO_ID,
+                runner_up_cost_s: 0.0,
+            },
+        );
         self.execute_ladder(&target)?;
         Ok(true)
     }
@@ -682,6 +801,8 @@ impl Engine {
     /// layout, drop stale swap snapshots, then transcode the pool in place
     /// and charge the modeled HBM time.
     fn execute_ladder(&mut self, target: &KvLayout) -> Result<()> {
+        let from_layout = self.pool.layout().clone();
+        let dropped_before = self.preempt_stats.ladder_dropped_tokens;
         // Every resident sequence lives through this event.
         for s in self.seqs.values_mut() {
             if s.handle.is_some() || s.swapped {
@@ -750,7 +871,36 @@ impl Engine {
         }
 
         let report = self.pool.relayout(target)?;
-        self.stats.sim_time_s += report.transcoded_bytes as f64 / HBM_BANDWIDTH_BPS;
+        for (acc, b) in
+            self.stats.transcode_bytes_by_rung.iter_mut().zip(report.transcoded_bytes_by_rung)
+        {
+            *acc += b;
+        }
+        // The rung pair: widest changed source rank → narrowest changed
+        // destination rank across the layers this rung touched.
+        let (mut rung_from, mut rung_to) = (u8::MAX, 0u8);
+        for l in 0..from_layout.n_layers() {
+            let (f, t) = (from_layout.prec(l), target.prec(l));
+            if f != t {
+                rung_from = rung_from.min(f.ladder_rank());
+                rung_to = rung_to.max(t.ladder_rank());
+            }
+        }
+        let dt = report.transcoded_bytes as f64 / HBM_BANDWIDTH_BPS;
+        self.emit(
+            self.stats.sim_time_s,
+            EventKind::Ladder {
+                rung_from: if rung_from == u8::MAX { 0 } else { rung_from },
+                rung_to,
+                bytes_by_rung: report.transcoded_bytes_by_rung.map(|b| b as u64),
+                gained_blocks: report.gained_blocks as u64,
+                dropped_tokens: (self.preempt_stats.ladder_dropped_tokens - dropped_before)
+                    as u64,
+                to_fingerprint: target.fingerprint(),
+                dur_s: dt,
+            },
+        );
+        self.stats.sim_time_s += dt;
         self.preempt_stats.ladder_events += 1;
         self.preempt_stats.ladder_transcoded_bytes += report.transcoded_bytes;
         self.preempt_stats.ladder_freed_bytes += report.gained_blocks
@@ -814,7 +964,16 @@ impl Engine {
         let snap = self.swap.take(id).expect("swapped head has an entry");
         let handle = self.pool.alloc_seq();
         self.pool.import_seq(handle, &snap)?;
-        self.stats.sim_time_s += transfer_time_s(snap.code_bytes() + snap.scales.len() * 4);
+        let by_rung = self.pool.token_bytes_by_rung().map(|b| b * snap.len);
+        for (acc, b) in self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
+            *acc += b;
+        }
+        let dt = transfer_time_s(snapshot_bytes(&snap));
+        self.emit(
+            self.stats.sim_time_s,
+            EventKind::SwapIn { id, bytes_by_rung: by_rung.map(|b| b as u64), dur_s: dt },
+        );
+        self.stats.sim_time_s += dt;
         let restored = self.pool.seq_blocks(handle).len();
         let s = self.seqs.get_mut(&id).unwrap();
         debug_assert!(s.decoding_started(), "only decoding victims are swapped");
@@ -957,6 +1116,16 @@ impl Engine {
                     hit_tokens = tokens;
                 }
             }
+            self.emit(
+                self.stats.sim_time_s,
+                EventKind::PrefixLookup {
+                    id,
+                    hit: hit_tokens > 0,
+                    blocks: (hit_tokens / self.pool.block_tokens()) as u64,
+                    tokens: hit_tokens as u64,
+                    fingerprint: self.pool.layout().fingerprint(),
+                },
+            );
             let s = self.seqs.get_mut(&id).unwrap();
             s.handle = Some(handle);
             s.phase = Phase::Prefilling;
@@ -1004,15 +1173,16 @@ impl Engine {
         let mut v_codes = vec![0u8; m.n_kv_heads * t_pad * sum_rb];
         let mut k_scales = vec![1f32; sdim];
         let mut v_scales = vec![1f32; sdim];
-        self.stats.gather_hbm_bytes += self.pool.gather_batch(
-            &[Some(handle)],
-            t_pad,
-            &mut k_codes,
-            &mut k_scales,
-            &mut v_codes,
-            &mut v_scales,
-        )?;
+        let plan = self.pool.plan_gather(&[Some(handle)], t_pad)?;
+        self.pool
+            .execute_gather(&plan, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales)?;
+        let gather_by_rung = plan.hbm_bytes_by_rung();
+        self.stats.gather_hbm_bytes += plan.hbm_bytes();
+        for (acc, b) in self.stats.gather_hbm_bytes_by_rung.iter_mut().zip(gather_by_rung) {
+            *acc += b;
+        }
 
+        let chunk_start_s = self.stats.sim_time_s;
         let out: StepOutputs = self.backend.prefill(&PrefillArgs {
             tokens: &chunk_tokens,
             real,
@@ -1035,6 +1205,20 @@ impl Engine {
             &out.v_codes,
             &out.v_scales,
         ) {
+            // The chunk ran (gather + backend time are charged) but
+            // appended nothing — `tokens: 0` keeps Σ PrefillChunk.tokens
+            // == `prompt_tokens` exact.
+            self.emit(
+                chunk_start_s,
+                EventKind::PrefillChunk {
+                    id,
+                    tokens: 0,
+                    t_pad: t_pad as u64,
+                    gather_by_rung: gather_by_rung.map(|b| b as u64),
+                    generated: 0,
+                    dur_s: out.sim_time_s,
+                },
+            );
             return self.abort(id, e);
         }
 
@@ -1091,6 +1275,17 @@ impl Engine {
                 }
             }
         }
+        self.emit(
+            chunk_start_s,
+            EventKind::PrefillChunk {
+                id,
+                tokens: real as u64,
+                t_pad: t_pad as u64,
+                gather_by_rung: gather_by_rung.map(|b| b as u64),
+                generated: emitted.len() as u64,
+                dur_s: out.sim_time_s,
+            },
+        );
         Ok(StepReport { action: Action::Prefill, emitted, finished })
     }
 
@@ -1124,10 +1319,16 @@ impl Engine {
         let mut v_codes = vec![0u8; bsize * m.n_kv_heads * t_pad * sum_rb];
         let mut k_scales = vec![1f32; sdim];
         let mut v_scales = vec![1f32; sdim];
-        self.stats.gather_hbm_bytes += self.pool.gather_batch(
-            &handles, t_pad, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales,
-        )?;
+        let plan = self.pool.plan_gather(&handles, t_pad)?;
+        self.pool
+            .execute_gather(&plan, &mut k_codes, &mut k_scales, &mut v_codes, &mut v_scales)?;
+        let gather_by_rung = plan.hbm_bytes_by_rung();
+        self.stats.gather_hbm_bytes += plan.hbm_bytes();
+        for (acc, b) in self.stats.gather_hbm_bytes_by_rung.iter_mut().zip(gather_by_rung) {
+            *acc += b;
+        }
 
+        let iter_start_s = self.stats.sim_time_s;
         let out: StepOutputs = self.backend.decode(&DecodeArgs {
             tokens: &tokens,
             kv_len: &kv_len,
@@ -1199,12 +1400,36 @@ impl Engine {
                 finished.push(*id);
             }
         }
+        self.emit(
+            iter_start_s,
+            EventKind::DecodeIter {
+                batch: n as u64,
+                padded_slots: (bsize - n) as u64,
+                t_pad: t_pad as u64,
+                generated: emitted.len() as u64,
+                gather_by_rung: gather_by_rung.map(|b| b as u64),
+                dur_s: out.sim_time_s,
+            },
+        );
         Ok(StepReport { action: Action::Decode, emitted, finished })
     }
 
     fn finish(&mut self, id: u64, reason: FinishReason) {
         let sim_now = self.stats.sim_time_s;
         let final_kv_layout = self.pool.layout().to_string();
+        self.emit(
+            sim_now,
+            EventKind::Finish {
+                id,
+                reason: match reason {
+                    FinishReason::Length => 0,
+                    FinishReason::Stop => 1,
+                    FinishReason::Aborted => 2,
+                },
+                tokens: self.seqs[&id].generated.len() as u64,
+                latency_s: sim_now - self.seqs[&id].submitted_sim_s,
+            },
+        );
         let s = self.seqs.get_mut(&id).unwrap();
         if let Some(h) = s.handle.take() {
             self.pool.free_seq(h);

@@ -40,6 +40,18 @@ pub enum PreemptMechanism {
     Ladder,
 }
 
+impl PreemptMechanism {
+    /// Stable wire code for trace events
+    /// ([`crate::trace::mechanism_name`] is the inverse).
+    pub fn trace_code(self) -> u8 {
+        match self {
+            PreemptMechanism::Swap => 0,
+            PreemptMechanism::Recompute => 1,
+            PreemptMechanism::Ladder => 2,
+        }
+    }
+}
+
 /// Modeled per-token prefill cost used to price recompute, seconds. Tuned
 /// to the gpusim tiny-model scale; the *ratio* against PCIe byte cost is
 /// what drives mechanism choice, not the absolute number.

@@ -123,6 +123,17 @@ impl KvLayout {
         block_tokens * self.token_code_bytes(kv_heads, head_dim)
     }
 
+    /// Per-rung layer occupancy histogram, indexed by
+    /// [`KvPrecision::ladder_rank`] (`[kv16, kv8, kv4]` layer counts) —
+    /// the resident-precision view `metrics::TelemetrySummary` reports.
+    pub fn rung_histogram(&self) -> [usize; 3] {
+        let mut h = [0usize; 3];
+        for p in &self.precs {
+            h[p.ladder_rank() as usize] += 1;
+        }
+        h
+    }
+
     /// Order-sensitive hash of the full per-layer assignment — the prefix
     /// index seeds its root key from this, so two layouts that differ in
     /// any single layer's precision hash to disjoint key spaces.

@@ -134,6 +134,7 @@ pub struct GatherPlan {
     t_pad: usize,
     tokens: usize,
     hbm_bytes: usize,
+    hbm_bytes_by_rung: [usize; 3],
 }
 
 impl GatherPlan {
@@ -163,6 +164,14 @@ impl GatherPlan {
     /// and is layout-independent, so it is not counted here.
     pub fn hbm_bytes(&self) -> usize {
         self.hbm_bytes
+    }
+
+    /// [`GatherPlan::hbm_bytes`] attributed per precision rung (indexed by
+    /// [`KvPrecision::ladder_rank`]: `[kv16, kv8, kv4]`). Sums exactly to
+    /// `hbm_bytes()` — the precision-attributed telemetry counters stay
+    /// reconciled with the unattributed total by construction.
+    pub fn hbm_bytes_by_rung(&self) -> [usize; 3] {
+        self.hbm_bytes_by_rung
     }
 }
 
@@ -302,6 +311,21 @@ impl KvPool {
 
     fn token_scales(&self) -> usize {
         self.n_layers * 2 * self.kv_heads
+    }
+
+    /// Per-token stored bytes (codes + f32 scales) split per precision
+    /// rung, indexed by [`KvPrecision::ladder_rank`]. The three entries
+    /// sum to exactly `token_code_bytes() + token_scale_bytes()`, so any
+    /// total attributed through this table reconciles with the
+    /// unattributed byte counters.
+    pub fn token_bytes_by_rung(&self) -> [usize; 3] {
+        let mut by = [0usize; 3];
+        for l in 0..self.n_layers {
+            let p = self.layout.prec(l);
+            by[p.ladder_rank() as usize] +=
+                2 * self.kv_heads * (p.row_bytes(self.head_dim) + 4);
+        }
+        by
     }
 
     /// Bytes per KV row (one head's codes for one token) at layer 0 — only
@@ -782,7 +806,8 @@ impl KvPool {
             }
         }
         let hbm_bytes = tokens * (self.token_code_bytes() + self.token_scale_bytes());
-        Ok(GatherPlan { runs, b: handles.len(), t_pad, tokens, hbm_bytes })
+        let hbm_bytes_by_rung = self.token_bytes_by_rung().map(|b| b * tokens);
+        Ok(GatherPlan { runs, b: handles.len(), t_pad, tokens, hbm_bytes, hbm_bytes_by_rung })
     }
 
     /// Phase two of [`gather_batch`](Self::gather_batch): stream a plan's
@@ -1028,14 +1053,10 @@ impl KvPool {
             }
         }
 
-        // Read + write traffic of the changed layers (the modeled HBM cost).
-        let mut per_block_rw = 0usize;
-        for l in 0..self.n_layers {
-            let (from, to) = (self.layout.prec(l), target.prec(l));
-            if from != to {
-                per_block_rw += bt * 2 * self.kv_heads * (from.row_bytes(hd) + to.row_bytes(hd));
-            }
-        }
+        // Read + write traffic of the changed layers (the modeled HBM
+        // cost), attributed to each layer's *destination* rung.
+        let per_block_rw_by_rung =
+            per_block_rw_by_rung(&self.layout, target, bt, self.kv_heads, hd);
 
         // Re-divide the budget: same bytes, more (narrower) blocks.
         let gained = new_n_blocks - self.n_blocks;
@@ -1044,11 +1065,7 @@ impl KvPool {
         self.free.extend(self.n_blocks..new_n_blocks);
         self.n_blocks = new_n_blocks;
         self.layout = target.clone();
-        Ok(RelayoutReport {
-            gained_blocks: gained,
-            transcoded_blocks,
-            transcoded_bytes: transcoded_blocks * per_block_rw,
-        })
+        Ok(RelayoutReport::from_rw(gained, transcoded_blocks, per_block_rw_by_rung))
     }
 
     /// Exact dry-run of [`relayout`](Self::relayout): the report it *would*
@@ -1068,20 +1085,38 @@ impl KvPool {
         let bt = self.block_tokens;
         let hd = self.head_dim;
         let new_tcb = target.token_code_bytes(self.kv_heads, hd);
-        let mut per_block_rw = 0usize;
-        for l in 0..self.n_layers {
-            let (from, to) = (self.layout.prec(l), target.prec(l));
-            if from != to {
-                per_block_rw += bt * 2 * self.kv_heads * (from.row_bytes(hd) + to.row_bytes(hd));
-            }
-        }
+        let per_block_rw_by_rung =
+            per_block_rw_by_rung(&self.layout, target, bt, self.kv_heads, hd);
         let transcoded_blocks = self.used_blocks();
-        Ok(RelayoutReport {
-            gained_blocks: self.code_budget / (bt * new_tcb) - self.n_blocks,
+        Ok(RelayoutReport::from_rw(
+            self.code_budget / (bt * new_tcb) - self.n_blocks,
             transcoded_blocks,
-            transcoded_bytes: transcoded_blocks * per_block_rw,
-        })
+            per_block_rw_by_rung,
+        ))
     }
+}
+
+/// Per-block read+write transcode traffic of the layers that change
+/// between `from` and `to`, attributed to each changed layer's
+/// **destination** rung ([`KvPrecision::ladder_rank`] index). Shared by
+/// [`KvPool::relayout`] and [`KvPool::relayout_estimate`] so the dry-run
+/// stays exact.
+fn per_block_rw_by_rung(
+    from: &KvLayout,
+    to: &KvLayout,
+    block_tokens: usize,
+    kv_heads: usize,
+    head_dim: usize,
+) -> [usize; 3] {
+    let mut by = [0usize; 3];
+    for l in 0..from.n_layers() {
+        let (f, t) = (from.prec(l), to.prec(l));
+        if f != t {
+            by[t.ladder_rank() as usize] +=
+                block_tokens * 2 * kv_heads * (f.row_bytes(head_dim) + t.row_bytes(head_dim));
+        }
+    }
+    by
 }
 
 /// What one [`KvPool::relayout`] ladder move did.
@@ -1094,6 +1129,22 @@ pub struct RelayoutReport {
     /// Modeled read+write HBM traffic of the transcode (changed layers
     /// only), in bytes.
     pub transcoded_bytes: usize,
+    /// [`RelayoutReport::transcoded_bytes`] split by each changed layer's
+    /// destination rung (`[kv16, kv8, kv4]` by
+    /// [`KvPrecision::ladder_rank`]); the entries sum to the total.
+    pub transcoded_bytes_by_rung: [usize; 3],
+}
+
+impl RelayoutReport {
+    fn from_rw(gained_blocks: usize, transcoded_blocks: usize, rw_by_rung: [usize; 3]) -> Self {
+        let transcoded_bytes_by_rung = rw_by_rung.map(|b| b * transcoded_blocks);
+        Self {
+            gained_blocks,
+            transcoded_blocks,
+            transcoded_bytes: transcoded_bytes_by_rung.iter().sum(),
+            transcoded_bytes_by_rung,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -30,6 +30,13 @@ pub fn transfer_time_s(bytes: usize) -> f64 {
     PCIE_LATENCY_S + bytes as f64 / PCIE_BANDWIDTH_BPS
 }
 
+/// Total PCIe payload of one snapshot: quantized codes plus the f32 scale
+/// rows — exactly the bytes the engine charges to `sim_time_s` per
+/// transfer (and attributes per rung in trace events).
+pub fn snapshot_bytes(snap: &SeqSnapshot) -> usize {
+    snap.code_bytes() + snap.scales.len() * 4
+}
+
 /// Lifetime counters (exported through
 /// [`crate::metrics::PreemptionSummary`]).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]

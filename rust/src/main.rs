@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve       start the JSON-lines TCP server on the real engine
+//!   run         drive a deterministic offline fleet run (flight-recorder driver)
 //!   bench       regenerate a paper figure/table (or `all`)
 //!   pack        run §4.1 hardware-aware weight packing on a demo matrix
 //!   info        list artifacts, models, and device profiles
@@ -9,26 +10,31 @@
 //! Examples:
 //!   turbomind serve --addr 127.0.0.1:7181 --precision W4A16KV8
 //!   turbomind serve --backend pjrt --artifacts artifacts   (needs --features pjrt)
+//!   turbomind run --replicas 2 --requests 24 --trace-out trace.json
 //!   turbomind bench fig13
 //!   turbomind pack --k 256 --n 4096
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 use turbomind::bench;
-use turbomind::cluster::{Cluster, ClusterConfig, ReplicaSpec, RouterPolicy};
-use turbomind::config::{BackendKind, DeviceProfile, EngineConfig, PrecisionFormat};
-use turbomind::coordinator::Engine;
+use turbomind::cluster::{self, Cluster, ClusterConfig, ReplicaSpec, RouterPolicy};
+use turbomind::config::{
+    BackendKind, DeviceProfile, EngineConfig, LadderPolicy, PrecisionFormat, PreemptionMode,
+};
+use turbomind::coordinator::{Engine, Request};
 use turbomind::quant::{pack_weights_hw_aware, GroupwiseQuant, QuantizedMatrix};
 use turbomind::quant::access::analyze_global;
 use turbomind::quant::packing::naive_fragment_access;
 use turbomind::server;
+use turbomind::trace::{self, EventKind};
 use turbomind::util::args::Args;
 use turbomind::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help", "prefix-cache"]);
+    let args = Args::from_env(&["help", "prefix-cache", "trace"]);
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
         "pack" => cmd_pack(&args),
         "info" => cmd_info(&args),
@@ -52,7 +58,11 @@ USAGE:
                   [--replicas N] [--router-policy round_robin|least_loaded|prefix_affinity]
                   [--replica-spec fmt,kv,device[,tpN][,layout=…][,ladder=…]]...
                   [--queue-depth N] [--affinity-blocks N]
+                  [--trace] [--trace-ring N] [--trace-out FILE]
+  turbomind run   [--requests N] [--replicas N] [--seed S] [--trace-out FILE]
+                  [engine knobs as for serve]
   turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|hotpath|all>
+                  [--trace-out FILE]
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
 
@@ -92,6 +102,20 @@ to swap/recompute. Replica specs take the same knobs per replica as
 `layout=l0:kv16;l1:kv8` (`;` between layers) and `ladder=auto` segments.
 Responses report `ladder_count` + `final_kv_layout`, and `{\"stats\":
 true}` reports the pool's current layout and ladder counters.
+
+`--trace` turns on the flight recorder (DESIGN.md §12): a bounded
+wait-free ring of typed lifecycle events stamped with the modeled clock.
+`{\"trace\": true}` answers the whole resident ring, `{\"trace\": N}` the
+newest N events (single engine and cluster alike). `--trace-out FILE`
+implies `--trace` and writes a Perfetto-loadable Chrome trace after a
+bounded serve; `--trace-ring` sizes the ring (default 8192 events).
+
+`run` is the offline flight-recorder driver: a deterministic, overloaded
+`run_fleet` (defaults: 2 replicas, a small kv16 pool, swap preemption +
+auto laddering, so preempt/ladder/swap events all fire). It reconciles
+per-rung trace byte sums against the engine counters (exact equality),
+validates the Chrome export, and writes it to `--trace-out`. Same seed ⇒
+byte-identical trace file — the determinism contract CI enforces.
 ";
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -126,6 +150,11 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
             .get_or("kv-ladder", "off")
             .parse()
             .map_err(|e| anyhow::anyhow!("{e}"))?,
+        // --trace-out implies recording: exporting an empty ring is never
+        // what anyone wants.
+        trace: args.flag("trace") || args.get("trace-out").is_some(),
+        trace_ring_capacity: args
+            .get_usize("trace-ring", turbomind::trace::DEFAULT_RING_CAPACITY),
         ..EngineConfig::default()
     })
 }
@@ -172,6 +201,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eprintln!("replica {i}: {}", s.label());
         }
         eprintln!("router policy: {policy} | {} replicas", ccfg.n_replicas());
+        if args.get("trace-out").is_some() {
+            eprintln!(
+                "note: --trace-out file export is single-engine/`run` only; \
+                 cluster rings answer the {{\"trace\": ...}} probe"
+            );
+        }
         let cluster = Cluster::start(ccfg)?;
         return server::serve_cluster(cluster, &addr, max_requests);
     }
@@ -186,7 +221,123 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config().device,
         engine.config().max_batch
     );
-    server::serve(engine, &addr, max_requests)
+    server::serve_with_trace_out(engine, &addr, max_requests, args.get("trace-out"))
+}
+
+/// The deterministic overloaded fleet run the flight recorder exists for:
+/// small pool, swap preemption, auto laddering — every event class fires.
+/// Reconciles trace byte sums against engine counters (exact equality),
+/// validates the Chrome export, and writes it when `trace_out` is set.
+fn traced_fleet_run(args: &Args, trace_out: Option<&str>) -> Result<()> {
+    let mut base = engine_config(args)?;
+    base.trace = true;
+    // Pressure defaults — explicit flags always win.
+    if args.get("kv-pool-tokens").is_none() {
+        base.kv_pool_tokens = 16 * 64;
+    }
+    if args.get("preemption").is_none() {
+        base.preemption_mode = PreemptionMode::Swap;
+    }
+    if args.get("kv-ladder").is_none() {
+        base.ladder_policy = LadderPolicy::Auto;
+    }
+    if args.get("kv-layout").is_none() {
+        // Admit wide so the ladder has rungs to descend.
+        base.kv_layout = Some("kv16".into());
+    }
+    let n_replicas = args.get_usize("replicas", 2).max(1);
+    let n_requests = args.get_usize("requests", 24);
+    let policy: RouterPolicy = args
+        .get_or("router-policy", "round_robin")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed = args.get_u64("seed", 0);
+    let ccfg = ClusterConfig::homogeneous(base, n_replicas, policy);
+
+    // Deterministic synthetic overload: prompts outsize the pool in
+    // aggregate, so admission control + preemption must both work.
+    let mut rng = Rng::new(seed ^ 0x7ACE_F1EE7);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|_| {
+            let plen = 24 + (rng.next_u64() % 48) as usize;
+            let gen = 8 + (rng.next_u64() % 24) as usize;
+            let prompt = (0..plen).map(|_| (rng.next_u64() % 512) as i32).collect();
+            Request::new(prompt, gen)
+        })
+        .collect();
+
+    let run = cluster::run_fleet(&ccfg, &reqs)?;
+    eprintln!(
+        "fleet: {} replicas | {} requests ({} completed) | makespan {:.4}s",
+        n_replicas,
+        n_requests,
+        run.completed(),
+        run.sim_makespan_s()
+    );
+
+    // The determinism/attribution contract: per-rung byte sums over the
+    // trace events equal the engine counters exactly, replica by replica.
+    let add = |acc: &mut [usize; 3], by: &[u64; 3]| {
+        for (a, b) in acc.iter_mut().zip(by) {
+            *a += *b as usize;
+        }
+    };
+    for (snap, (label, dump)) in run.snapshots.iter().zip(&run.traces) {
+        ensure!(dump.dropped == 0, "{label}: ring dropped {} events; raise --trace-ring", dump.dropped);
+        let (mut gather, mut transcode, mut swapped) = ([0usize; 3], [0usize; 3], [0usize; 3]);
+        for ev in &dump.events {
+            match &ev.kind {
+                EventKind::PrefillChunk { gather_by_rung, .. }
+                | EventKind::DecodeIter { gather_by_rung, .. } => add(&mut gather, gather_by_rung),
+                EventKind::Ladder { bytes_by_rung, .. } => add(&mut transcode, bytes_by_rung),
+                EventKind::SwapOut { bytes_by_rung, .. }
+                | EventKind::SwapIn { bytes_by_rung, .. } => add(&mut swapped, bytes_by_rung),
+                _ => {}
+            }
+        }
+        ensure!(
+            gather == snap.stats.gather_hbm_bytes_by_rung
+                && gather.iter().sum::<usize>() == snap.stats.gather_hbm_bytes,
+            "{label}: trace gather bytes {gather:?} != stats {:?}",
+            snap.stats.gather_hbm_bytes_by_rung
+        );
+        ensure!(
+            transcode == snap.telemetry.transcode_bytes_by_rung,
+            "{label}: trace transcode bytes {transcode:?} != telemetry {:?}",
+            snap.telemetry.transcode_bytes_by_rung
+        );
+        ensure!(
+            swapped == snap.telemetry.swap_pcie_bytes_by_rung,
+            "{label}: trace swap bytes {swapped:?} != telemetry {:?}",
+            snap.telemetry.swap_pcie_bytes_by_rung
+        );
+        eprintln!(
+            "  {label}: {} events | gather {:?} B | transcode {:?} B | swap {:?} B — reconciled",
+            dump.events.len(),
+            gather,
+            transcode,
+            swapped
+        );
+    }
+    let fleet = run.fleet_telemetry();
+    eprintln!(
+        "fleet telemetry (kv16/kv8/kv4): gather {:?} | transcode {:?} | swap {:?}",
+        fleet.gather_hbm_bytes_by_rung, fleet.transcode_bytes_by_rung, fleet.swap_pcie_bytes_by_rung
+    );
+
+    let tracks = run.trace_tracks();
+    let json = trace::chrome_trace(&tracks);
+    trace::validate(&json)?;
+    if let Some(path) = trace_out {
+        trace::write_chrome(path, &tracks)?;
+        let total: usize = run.traces.iter().map(|(_, d)| d.events.len()).sum();
+        eprintln!("trace: {total} events across {} tracks -> {path}", tracks.len());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    traced_fleet_run(args, args.get("trace-out"))
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -196,17 +347,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
             eprintln!("running {name}…");
             f().print();
         }
-        return Ok(());
+        return bench_trace_out(args);
     }
     match bench::run(which) {
         Some(t) => {
             t.print();
-            Ok(())
+            bench_trace_out(args)
         }
         None => bail!(
             "unknown exhibit `{which}`; available: {:?}",
             bench::registry().iter().map(|(n, _)| *n).collect::<Vec<_>>()
         ),
+    }
+}
+
+/// `bench --trace-out FILE`: after the exhibit, produce the standard
+/// traced overload run (same driver as `run`) so a bench invocation can
+/// also leave a Perfetto-loadable artifact behind.
+fn bench_trace_out(args: &Args) -> Result<()> {
+    match args.get("trace-out") {
+        Some(path) => traced_fleet_run(args, Some(path)),
+        None => Ok(()),
     }
 }
 

@@ -118,6 +118,71 @@ impl PreemptionSummary {
     }
 }
 
+/// Precision-attributed byte telemetry (DESIGN.md §12): where the modeled
+/// HBM/PCIe traffic went, split per `KvPrecision` ladder rung (index =
+/// `ladder_rank()`: 0 = kv16, 1 = kv8, 2 = kv4 — [`crate::trace::RUNG_NAMES`]).
+/// Every bucket reconciles exactly (`==`) with the corresponding trace
+/// events; the totals reconcile with `EngineStats`/`PreemptStats`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetrySummary {
+    /// Decode/prefill KV-gather HBM read bytes per rung (sums to
+    /// `EngineStats::gather_hbm_bytes`).
+    pub gather_hbm_bytes_by_rung: [usize; 3],
+    /// Ladder transcode read+write HBM bytes per destination rung (sums to
+    /// `PreemptStats::ladder_transcoded_bytes`).
+    pub transcode_bytes_by_rung: [usize; 3],
+    /// Swap-preemption PCIe bytes (out + in, codes + scales) per rung.
+    pub swap_pcie_bytes_by_rung: [usize; 3],
+    /// Per-layer resident-precision occupancy: how many of the pool's
+    /// layers currently sit at each rung (a `KvLayout::rung_histogram`
+    /// snapshot, not a counter — `merge` sums it across replicas into a
+    /// fleet-wide layer histogram).
+    pub occupancy_layers_by_rung: [usize; 3],
+}
+
+impl TelemetrySummary {
+    /// Element-wise sum — fleet aggregation. Commutative and associative,
+    /// so merge order can never change a total.
+    pub fn merge(&mut self, other: &TelemetrySummary) {
+        for i in 0..3 {
+            self.gather_hbm_bytes_by_rung[i] += other.gather_hbm_bytes_by_rung[i];
+            self.transcode_bytes_by_rung[i] += other.transcode_bytes_by_rung[i];
+            self.swap_pcie_bytes_by_rung[i] += other.swap_pcie_bytes_by_rung[i];
+            self.occupancy_layers_by_rung[i] += other.occupancy_layers_by_rung[i];
+        }
+    }
+
+    /// All-rung gather total (== `EngineStats::gather_hbm_bytes`).
+    pub fn gather_hbm_bytes(&self) -> usize {
+        self.gather_hbm_bytes_by_rung.iter().sum()
+    }
+
+    /// All-rung transcode total (== `PreemptStats::ladder_transcoded_bytes`).
+    pub fn transcode_bytes(&self) -> usize {
+        self.transcode_bytes_by_rung.iter().sum()
+    }
+
+    /// All-rung swap PCIe total.
+    pub fn swap_pcie_bytes(&self) -> usize {
+        self.swap_pcie_bytes_by_rung.iter().sum()
+    }
+
+    /// The stats-probe object: three per-rung byte arrays, the occupancy
+    /// histogram, and the rung-name legend.
+    pub fn to_json(&self) -> Json {
+        let rungs = |a: [usize; 3]| {
+            crate::util::json::arr(a.iter().map(|&b| Json::from(b)))
+        };
+        crate::util::json::obj([
+            ("rungs", crate::util::json::arr(crate::trace::RUNG_NAMES.iter().map(|&n| Json::from(n)))),
+            ("gather_hbm_bytes_by_rung", rungs(self.gather_hbm_bytes_by_rung)),
+            ("transcode_bytes_by_rung", rungs(self.transcode_bytes_by_rung)),
+            ("swap_pcie_bytes_by_rung", rungs(self.swap_pcie_bytes_by_rung)),
+            ("occupancy_layers_by_rung", rungs(self.occupancy_layers_by_rung)),
+        ])
+    }
+}
+
 /// Accumulates per-request measurements and computes the paper's metrics.
 #[derive(Debug, Default, Clone)]
 pub struct MetricsCollector {
@@ -407,6 +472,78 @@ mod tests {
         assert_eq!(s.swap_peak_blocks, 8);
         assert!((s.swap_fraction() - 0.6).abs() < 1e-12);
         assert_eq!(PreemptionSummary::default().swap_fraction(), 0.0, "no NaN on idle engines");
+    }
+
+    #[test]
+    fn metrics_merge_totals_survive_order_permutations() {
+        // Fleet aggregation must be order-insensitive in every *total*:
+        // merge the same three collectors in all six orders and demand
+        // identical counts, token sums, and percentile summaries.
+        let mut parts = Vec::new();
+        for r in 0..3usize {
+            let mut m = MetricsCollector::new();
+            for i in 0..(r + 2) {
+                let x = (r * 7 + i) as f64;
+                m.record(1.0 + x, 0.1 + x / 10.0, 1.0 + x, 10 + i, 5 + r);
+            }
+            parts.push(m);
+        }
+        let orders =
+            [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        let mut baseline: Option<(usize, (usize, usize), Percentiles, Percentiles)> = None;
+        for ord in orders {
+            let mut acc = MetricsCollector::new();
+            for &i in &ord {
+                acc.merge(&parts[i]);
+            }
+            let got = (
+                acc.count(),
+                acc.total_tokens(),
+                acc.latency_percentiles().unwrap(),
+                acc.tpot_percentiles().unwrap(),
+            );
+            match &baseline {
+                None => baseline = Some(got),
+                Some(b) => assert_eq!(*b, got, "order {ord:?} drifted"),
+            }
+        }
+    }
+
+    #[test]
+    fn telemetry_merge_is_exact_and_order_insensitive() {
+        let mk = |s: usize| TelemetrySummary {
+            gather_hbm_bytes_by_rung: [s, 2 * s, 3 * s],
+            transcode_bytes_by_rung: [0, s, 0],
+            swap_pcie_bytes_by_rung: [s, 0, 7 * s],
+            occupancy_layers_by_rung: [1, 2, 1],
+        };
+        let parts = [mk(3), mk(11), mk(40)];
+        let orders =
+            [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        let mut baseline: Option<TelemetrySummary> = None;
+        for ord in orders {
+            let mut acc = TelemetrySummary::default();
+            for &i in &ord {
+                acc.merge(&parts[i]);
+            }
+            match &baseline {
+                None => baseline = Some(acc),
+                Some(b) => assert_eq!(*b, acc, "order {ord:?} drifted"),
+            }
+        }
+        let total = baseline.unwrap();
+        assert_eq!(total.gather_hbm_bytes_by_rung, [54, 108, 162]);
+        assert_eq!(total.gather_hbm_bytes(), 324);
+        assert_eq!(total.transcode_bytes(), 54);
+        assert_eq!(total.swap_pcie_bytes(), 54 + 7 * 54);
+        assert_eq!(total.occupancy_layers_by_rung, [3, 6, 3]);
+        // The probe object round-trips with the rung legend attached.
+        let j = Json::parse(&total.to_json().dump()).unwrap();
+        assert_eq!(j.req_arr("rungs").unwrap().len(), 3);
+        assert_eq!(
+            j.req_arr("gather_hbm_bytes_by_rung").unwrap()[1].as_usize(),
+            Some(108)
+        );
     }
 
     #[test]

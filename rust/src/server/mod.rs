@@ -45,6 +45,10 @@ enum Inbound {
     /// A `{"stats": true}` probe: answered immediately from engine state
     /// (pool utilization, prefix-cache hit rate), no scheduling involved.
     Stats { reply: Sender<Json> },
+    /// A `{"trace": true}` / `{"trace": N}` probe: the last-N flight-
+    /// recorder ring events (`0` = the whole resident ring), answered
+    /// immediately like `Stats`.
+    Trace { last: usize, reply: Sender<Json> },
 }
 
 /// Serve `engine` on `addr` (e.g. `127.0.0.1:7181`).
@@ -59,7 +63,20 @@ enum Inbound {
 /// requests never burn the shutdown budget — a monitoring probe must not
 /// shorten a bounded run (the pre-fix behavior also capped accepted
 /// *connections*, so idle probes starved real clients).
-pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Result<()> {
+pub fn serve(engine: Engine, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    serve_with_trace_out(engine, addr, max_requests, None)
+}
+
+/// [`serve`], plus a Chrome-trace export: when `trace_out` is set (and the
+/// engine records — `--trace`), the flight-recorder ring is written as
+/// Perfetto-loadable trace-event JSON after the serve loop returns
+/// (bounded runs; an unbounded serve never reaches the export).
+pub fn serve_with_trace_out(
+    mut engine: Engine,
+    addr: &str,
+    max_requests: Option<usize>,
+    trace_out: Option<&str>,
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("turbomind serving on {addr}");
     let poke = poke_addr(&listener, addr);
@@ -67,6 +84,16 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: Option<usize>) -> Res
     let stop = spawn_listener(listener, tx);
     let result = engine_loop(&mut engine, &rx, max_requests);
     stop_listener(&stop, &poke);
+    if let Some(path) = trace_out {
+        let dump = engine.trace_dump();
+        let track = crate::trace::TraceTrack { tid: 0, label: "engine".into(), dump: &dump };
+        crate::trace::write_chrome(path, &[track])?;
+        eprintln!(
+            "trace: {} events ({} dropped) -> {path}",
+            dump.events.len(),
+            dump.dropped
+        );
+    }
     result
 }
 
@@ -131,6 +158,10 @@ fn engine_loop(
                     // Probes are answered from state and deliberately do
                     // NOT count toward `max_requests`.
                     let _ = reply.send(stats_json(engine, &metrics));
+                    continue;
+                }
+                Inbound::Trace { last, reply } => {
+                    let _ = reply.send(trace_json(engine, last));
                     continue;
                 }
                 Inbound::Gen { req, reply } => (req, reply),
@@ -253,6 +284,9 @@ fn dispatch_loop(
             Inbound::Stats { reply } => {
                 let _ = reply.send(cluster.stats()?.to_json());
             }
+            Inbound::Trace { last, reply } => {
+                let _ = reply.send(cluster.trace(last)?);
+            }
             Inbound::Gen { req, reply } => {
                 if let Err(e) = cluster.submit_with(req, reply.clone()) {
                     let _ = reply.send(RequestOutput::rejected(e.to_string()));
@@ -281,6 +315,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<Inbound>) -> Result<()> {
             let (rtx, rrx) = mpsc::channel();
             tx.send(Inbound::Stats { reply: rtx }).map_err(|_| anyhow!("engine gone"))?;
             rrx.recv().map_err(|_| anyhow!("engine dropped stats probe"))?
+        } else if let Some(last) = trace_request_last(&line) {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Inbound::Trace { last, reply: rtx })
+                .map_err(|_| anyhow!("engine gone"))?;
+            rrx.recv().map_err(|_| anyhow!("engine dropped trace probe"))?
         } else {
             match parse_request(&line) {
                 Ok(req) => {
@@ -337,6 +376,34 @@ fn is_stats_request(line: &str) -> bool {
         .unwrap_or(false)
 }
 
+/// Is this line a `{"trace": ...}` probe, and how many events does it
+/// want? `{"trace": true}` → the whole resident ring (`Some(0)`);
+/// `{"trace": N}` → the newest N (`Some(N)`, N ≥ 1); anything else →
+/// `None` (not a probe).
+fn trace_request_last(line: &str) -> Option<usize> {
+    let v = Json::parse(line).ok()?;
+    match v.get("trace")? {
+        Json::Bool(true) => Some(0),
+        t => match t.as_usize() {
+            Some(n) if n >= 1 => Some(n),
+            _ => None,
+        },
+    }
+}
+
+/// Encode the engine's trace-probe answer: `{"trace": {"enabled": ...,
+/// "recorded": ..., "dropped": ..., "torn": ..., "events": [...]}}`.
+pub fn trace_json(engine: &Engine, last: usize) -> Json {
+    let enabled = engine.trace_recorder().is_some();
+    let dump =
+        if last == 0 { engine.trace_dump() } else { engine.trace_dump_last(last) };
+    let mut body = crate::trace::dump_json(&dump);
+    if let Json::Obj(m) = &mut body {
+        m.insert("enabled".into(), Json::from(enabled));
+    }
+    obj([("trace", body)])
+}
+
 /// Encode the engine-state stats line: pool utilization, the prefix-cache
 /// effectiveness summary (hit rate / blocks saved / prefill tokens skipped
 /// — zeros with `"prefix_cache_enabled": false`), the swap-pool /
@@ -383,6 +450,12 @@ pub fn stats_json(engine: &Engine, metrics: &MetricsCollector) -> Json {
         ("swapped_out_blocks", Json::from(p.swapped_out_blocks)),
         ("swapped_in_blocks", Json::from(p.swapped_in_blocks)),
         ("oom_aborts", Json::from(p.oom_aborts)),
+        // PR-6 hot-path counters on the wire: modeled gather HBM traffic
+        // and padding waste, alongside the modeled clock.
+        ("gather_hbm_bytes", Json::from(engine.stats.gather_hbm_bytes)),
+        ("padded_slots", Json::from(engine.stats.padded_slots)),
+        ("sim_time_s", Json::from(engine.stats.sim_time_s)),
+        ("telemetry", engine.telemetry().to_json()),
         ("completed_requests", Json::from(metrics.count())),
     ];
     fields.extend(crate::metrics::percentile_fields(
@@ -473,6 +546,19 @@ impl Client {
         let mut buf = String::new();
         self.reader.read_line(&mut buf)?;
         Json::parse(&buf).map_err(|e| anyhow!("bad stats response: {e}"))
+    }
+
+    /// Probe the flight recorder (`{"trace": N}`, `0` = the whole ring).
+    pub fn trace(&mut self, last: usize) -> Result<Json> {
+        let line = if last == 0 {
+            "{\"trace\": true}\n".to_string()
+        } else {
+            format!("{{\"trace\": {last}}}\n")
+        };
+        self.stream.write_all(line.as_bytes())?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Json::parse(&buf).map_err(|e| anyhow!("bad trace response: {e}"))
     }
 }
 
@@ -661,6 +747,97 @@ mod tests {
         assert_eq!(parsed.get("latency_p95_s").unwrap().as_f64(), Some(0.0));
         assert_eq!(parsed.get("ttft_p50_s").unwrap().as_f64(), Some(0.0));
         assert_eq!(parsed.get("tpot_p99_s").unwrap().as_f64(), Some(0.0));
+        // The PR-6 counters and telemetry block ride the wire too.
+        assert_eq!(parsed.req_usize("gather_hbm_bytes").unwrap(), 0);
+        assert_eq!(parsed.req_usize("padded_slots").unwrap(), 0);
+        assert_eq!(parsed.get("sim_time_s").unwrap().as_f64(), Some(0.0));
+        let tel = parsed.get("telemetry").unwrap();
+        assert_eq!(tel.req_arr("rungs").unwrap().len(), 3);
+        assert_eq!(
+            tel.req_arr("occupancy_layers_by_rung").unwrap()[0].as_usize(),
+            Some(Engine::new(crate::config::EngineConfig::default())
+                .unwrap()
+                .model()
+                .n_layers),
+            "default uniform kv16 layout: every layer at rung 0"
+        );
+    }
+
+    #[test]
+    fn stats_json_round_trips_nonzero_counters() {
+        // Run real work so the satellite-1 fields carry nonzero values,
+        // then demand the wire line reproduces them exactly.
+        let mut cfg = crate::config::EngineConfig::default();
+        cfg.max_new_tokens = 4;
+        let mut engine = Engine::new(cfg).unwrap();
+        for _ in 0..3 {
+            engine
+                .submit(crate::coordinator::Request {
+                    prompt: vec![1, 2, 3, 4],
+                    max_new_tokens: 4,
+                    stop_token: None,
+                })
+                .unwrap();
+        }
+        engine.run_to_completion().unwrap();
+        assert!(engine.stats.gather_hbm_bytes > 0);
+        let parsed = Json::parse(&stats_json(&engine, &MetricsCollector::new()).dump()).unwrap();
+        assert_eq!(
+            parsed.req_usize("gather_hbm_bytes").unwrap(),
+            engine.stats.gather_hbm_bytes
+        );
+        assert_eq!(parsed.req_usize("padded_slots").unwrap(), engine.stats.padded_slots);
+        let tel = parsed.get("telemetry").unwrap();
+        let by: Vec<usize> = tel
+            .req_arr("gather_hbm_bytes_by_rung")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(
+            by.iter().sum::<usize>(),
+            engine.stats.gather_hbm_bytes,
+            "per-rung buckets sum exactly to the total on the wire"
+        );
+    }
+
+    #[test]
+    fn trace_probe_detection_and_payload() {
+        assert_eq!(trace_request_last(r#"{"trace": true}"#), Some(0));
+        assert_eq!(trace_request_last(r#"{"trace": 16}"#), Some(16));
+        assert_eq!(trace_request_last(r#"{"trace": false}"#), None);
+        assert_eq!(trace_request_last(r#"{"trace": 0}"#), None);
+        assert_eq!(trace_request_last(r#"{"stats": true}"#), None);
+        assert_eq!(trace_request_last("not json"), None);
+
+        // Tracing off: the probe still answers, flagged disabled.
+        let engine = Engine::new(crate::config::EngineConfig::default()).unwrap();
+        let j = Json::parse(&trace_json(&engine, 0).dump()).unwrap();
+        let t = j.get("trace").unwrap();
+        assert_eq!(t.get("enabled").unwrap().as_bool(), Some(false));
+        assert_eq!(t.req_arr("events").unwrap().len(), 0);
+
+        // Tracing on: events flow, and `last` bounds the answer.
+        let mut cfg = crate::config::EngineConfig::default();
+        cfg.trace = true;
+        let mut engine = Engine::new(cfg).unwrap();
+        engine
+            .submit(crate::coordinator::Request {
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 2,
+                stop_token: None,
+            })
+            .unwrap();
+        engine.run_to_completion().unwrap();
+        let t_all = Json::parse(&trace_json(&engine, 0).dump()).unwrap();
+        let all = t_all.get("trace").unwrap().req_arr("events").unwrap().len();
+        assert!(all >= 4, "admit + prefix_lookup + prefill + decode + finish, got {all}");
+        let t_two = Json::parse(&trace_json(&engine, 2).dump()).unwrap();
+        assert_eq!(t_two.get("trace").unwrap().req_arr("events").unwrap().len(), 2);
+        assert_eq!(
+            t_two.get("trace").unwrap().get("enabled").unwrap().as_bool(),
+            Some(true)
+        );
     }
 
     #[test]

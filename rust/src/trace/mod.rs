@@ -1,0 +1,1076 @@
+//! Deterministic flight recorder: typed engine lifecycle events stamped
+//! with the **modeled clock** (`EngineStats::sim_time_s`), exported as
+//! Perfetto-loadable Chrome trace-event JSON (DESIGN.md §12).
+//!
+//! The recorder reuses the wait-free atomic-counter + seqlock-ring idiom
+//! from [`crate::cluster::accounting::ReplicaRecorder`]: a single
+//! producer (the engine's owning thread) publishes fixed-width encoded
+//! events into a bounded ring without ever waiting or allocating; any
+//! reader snapshots the ring, detecting and skipping torn slots. No
+//! `unsafe`, std-only. An overfull ring windows to the most recent
+//! `capacity` events — the monotonic `recorded` counter never windows, so
+//! wraparound drops are counted **exactly** (`recorded − resident`).
+//!
+//! Determinism is the contract: events carry modeled time only, never
+//! wall clock, so the same requests + the same config produce a
+//! bit-identical trace (the harness and CI assert on this). Recording
+//! defaults off; the engine's emit guard is a single `Option` test when
+//! disabled, cheap enough that `bench hotpath` gates on it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{arr, obj, Json};
+
+/// Default ring capacity (events). Large enough that short bench/CI runs
+/// never wrap; a wrapped ring still reports exact drop counts.
+pub const DEFAULT_RING_CAPACITY: usize = 8192;
+
+/// Bounded retries before a reader gives up on a slot the writer keeps
+/// overwriting (writer is wait-free; the reader yields).
+const READ_RETRIES: usize = 64;
+
+/// Fixed slot width: word 0 = tag, word 1 = `sim_time_s` bits, words
+/// 2..10 = per-kind payload.
+const WORDS: usize = 10;
+
+/// Display names of the three KV precision rungs, indexed by
+/// [`crate::kvcache::KvPrecision::ladder_rank`].
+pub const RUNG_NAMES: [&str; 3] = ["kv16", "kv8", "kv4"];
+
+/// Preempt-mechanism codes carried in [`EventKind::Preempt`].
+pub fn mechanism_name(code: u8) -> &'static str {
+    match code {
+        0 => "swap",
+        1 => "recompute",
+        2 => "ladder",
+        _ => "unknown",
+    }
+}
+
+/// Finish-reason codes carried in [`EventKind::Finish`].
+pub fn finish_reason_name(code: u8) -> &'static str {
+    match code {
+        0 => "length",
+        1 => "stop",
+        2 => "aborted",
+        _ => "unknown",
+    }
+}
+
+/// Sentinel for "no request" in id-valued fields (e.g. a ladder preempt
+/// decision that evicts nobody, or a missing runner-up candidate).
+pub const NO_ID: u64 = u64::MAX;
+
+/// One typed lifecycle event. All byte fields are *modeled* traffic
+/// (the same accounting `EngineStats` sums); `dur_s` fields are the
+/// modeled time the operation added to the engine clock, so an event's
+/// span is `[sim_time_s, sim_time_s + dur_s]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A request entered the engine.
+    Admit { id: u64, prompt_len: u64, max_new_tokens: u64 },
+    /// Prefix-cache lookup at first admission: hit/miss, adopted blocks
+    /// and tokens, and the pool layout fingerprint the key was rooted at.
+    PrefixLookup { id: u64, hit: bool, blocks: u64, tokens: u64, fingerprint: u64 },
+    /// One prefill chunk: `tokens` appended to the KV cache (0 when the
+    /// append failed and the request aborted), padded gather length, HBM
+    /// gather bytes split per precision rung, and whether the first
+    /// token was sampled (`generated`).
+    PrefillChunk {
+        id: u64,
+        tokens: u64,
+        t_pad: u64,
+        gather_by_rung: [u64; 3],
+        generated: u64,
+        dur_s: f64,
+    },
+    /// One decode iteration over the whole batch.
+    DecodeIter {
+        batch: u64,
+        padded_slots: u64,
+        t_pad: u64,
+        generated: u64,
+        gather_by_rung: [u64; 3],
+        dur_s: f64,
+    },
+    /// A preemption decision: the chosen mechanism plus the losing
+    /// candidates' modeled costs. `alt_cost_s` is the rejected mechanism
+    /// for the same victim (or the best eviction cost a chosen ladder
+    /// beat); `runner_up` is the next-best victim (`NO_ID` when none).
+    Preempt {
+        victim: u64,
+        mechanism: u8,
+        chosen_cost_s: f64,
+        alt_cost_s: f64,
+        candidates: u64,
+        runner_up: u64,
+        runner_up_cost_s: f64,
+    },
+    /// An in-place precision-ladder transcode of the whole pool:
+    /// widest-changed source rung → narrowest destination rung, modeled
+    /// HBM read+write bytes attributed to each destination rung, and the
+    /// fingerprint of the layout laddered *to*.
+    Ladder {
+        rung_from: u8,
+        rung_to: u8,
+        bytes_by_rung: [u64; 3],
+        gained_blocks: u64,
+        dropped_tokens: u64,
+        to_fingerprint: u64,
+        dur_s: f64,
+    },
+    /// A victim's KV blocks copied to the host swap store (PCIe bytes
+    /// split per resident precision rung).
+    SwapOut { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
+    /// A swapped victim's blocks restored to the pool.
+    SwapIn { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
+    /// The request left the engine (finished or aborted).
+    Finish { id: u64, reason: u8, tokens: u64, latency_s: f64 },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admit { .. } => "admit",
+            EventKind::PrefixLookup { .. } => "prefix_lookup",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::DecodeIter { .. } => "decode_iter",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::Ladder { .. } => "ladder",
+            EventKind::SwapOut { .. } => "swap_out",
+            EventKind::SwapIn { .. } => "swap_in",
+            EventKind::Finish { .. } => "finish",
+        }
+    }
+
+    /// The request this event belongs to, when it belongs to one.
+    pub fn request_id(&self) -> Option<u64> {
+        match self {
+            EventKind::Admit { id, .. }
+            | EventKind::PrefixLookup { id, .. }
+            | EventKind::PrefillChunk { id, .. }
+            | EventKind::SwapOut { id, .. }
+            | EventKind::SwapIn { id, .. }
+            | EventKind::Finish { id, .. } => Some(*id),
+            _ => None,
+        }
+    }
+
+    /// Modeled duration the operation added to the engine clock (0 for
+    /// instantaneous decision events).
+    pub fn dur_s(&self) -> f64 {
+        match self {
+            EventKind::PrefillChunk { dur_s, .. }
+            | EventKind::DecodeIter { dur_s, .. }
+            | EventKind::Ladder { dur_s, .. }
+            | EventKind::SwapOut { dur_s, .. }
+            | EventKind::SwapIn { dur_s, .. } => *dur_s,
+            _ => 0.0,
+        }
+    }
+}
+
+/// One recorded event: a kind stamped with the modeled clock at the
+/// moment the operation *started*.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub sim_time_s: f64,
+    pub kind: EventKind,
+}
+
+fn encode(ev: &TraceEvent) -> [u64; WORDS] {
+    let mut w = [0u64; WORDS];
+    w[1] = ev.sim_time_s.to_bits();
+    match &ev.kind {
+        EventKind::Admit { id, prompt_len, max_new_tokens } => {
+            w[0] = 1;
+            w[2] = *id;
+            w[3] = *prompt_len;
+            w[4] = *max_new_tokens;
+        }
+        EventKind::PrefixLookup { id, hit, blocks, tokens, fingerprint } => {
+            w[0] = 2;
+            w[2] = *id;
+            w[3] = u64::from(*hit);
+            w[4] = *blocks;
+            w[5] = *tokens;
+            w[6] = *fingerprint;
+        }
+        EventKind::PrefillChunk { id, tokens, t_pad, gather_by_rung, generated, dur_s } => {
+            w[0] = 3;
+            w[2] = *id;
+            w[3] = *tokens;
+            w[4] = *t_pad;
+            w[5] = gather_by_rung[0];
+            w[6] = gather_by_rung[1];
+            w[7] = gather_by_rung[2];
+            w[8] = *generated;
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::DecodeIter { batch, padded_slots, t_pad, generated, gather_by_rung, dur_s } => {
+            w[0] = 4;
+            w[2] = *batch;
+            w[3] = *padded_slots;
+            w[4] = *t_pad;
+            w[5] = gather_by_rung[0];
+            w[6] = gather_by_rung[1];
+            w[7] = gather_by_rung[2];
+            w[8] = *generated;
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::Preempt {
+            victim,
+            mechanism,
+            chosen_cost_s,
+            alt_cost_s,
+            candidates,
+            runner_up,
+            runner_up_cost_s,
+        } => {
+            w[0] = 5;
+            w[2] = *victim;
+            w[3] = u64::from(*mechanism);
+            w[4] = chosen_cost_s.to_bits();
+            w[5] = alt_cost_s.to_bits();
+            w[6] = *candidates;
+            w[7] = *runner_up;
+            w[8] = runner_up_cost_s.to_bits();
+        }
+        EventKind::Ladder {
+            rung_from,
+            rung_to,
+            bytes_by_rung,
+            gained_blocks,
+            dropped_tokens,
+            to_fingerprint,
+            dur_s,
+        } => {
+            w[0] = 6;
+            w[2] = (u64::from(*rung_from) << 8) | u64::from(*rung_to);
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[6] = *gained_blocks;
+            w[7] = *dropped_tokens;
+            w[8] = *to_fingerprint;
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::SwapOut { id, bytes_by_rung, dur_s } => {
+            w[0] = 7;
+            w[2] = *id;
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::SwapIn { id, bytes_by_rung, dur_s } => {
+            w[0] = 8;
+            w[2] = *id;
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::Finish { id, reason, tokens, latency_s } => {
+            w[0] = 9;
+            w[2] = *id;
+            w[3] = u64::from(*reason);
+            w[4] = *tokens;
+            w[5] = latency_s.to_bits();
+        }
+    }
+    w
+}
+
+fn decode(w: &[u64; WORDS]) -> Option<TraceEvent> {
+    let sim_time_s = f64::from_bits(w[1]);
+    let kind = match w[0] {
+        1 => EventKind::Admit { id: w[2], prompt_len: w[3], max_new_tokens: w[4] },
+        2 => EventKind::PrefixLookup {
+            id: w[2],
+            hit: w[3] != 0,
+            blocks: w[4],
+            tokens: w[5],
+            fingerprint: w[6],
+        },
+        3 => EventKind::PrefillChunk {
+            id: w[2],
+            tokens: w[3],
+            t_pad: w[4],
+            gather_by_rung: [w[5], w[6], w[7]],
+            generated: w[8],
+            dur_s: f64::from_bits(w[9]),
+        },
+        4 => EventKind::DecodeIter {
+            batch: w[2],
+            padded_slots: w[3],
+            t_pad: w[4],
+            gather_by_rung: [w[5], w[6], w[7]],
+            generated: w[8],
+            dur_s: f64::from_bits(w[9]),
+        },
+        5 => EventKind::Preempt {
+            victim: w[2],
+            mechanism: w[3] as u8,
+            chosen_cost_s: f64::from_bits(w[4]),
+            alt_cost_s: f64::from_bits(w[5]),
+            candidates: w[6],
+            runner_up: w[7],
+            runner_up_cost_s: f64::from_bits(w[8]),
+        },
+        6 => EventKind::Ladder {
+            rung_from: (w[2] >> 8) as u8,
+            rung_to: (w[2] & 0xff) as u8,
+            bytes_by_rung: [w[3], w[4], w[5]],
+            gained_blocks: w[6],
+            dropped_tokens: w[7],
+            to_fingerprint: w[8],
+            dur_s: f64::from_bits(w[9]),
+        },
+        7 => EventKind::SwapOut {
+            id: w[2],
+            bytes_by_rung: [w[3], w[4], w[5]],
+            dur_s: f64::from_bits(w[9]),
+        },
+        8 => EventKind::SwapIn {
+            id: w[2],
+            bytes_by_rung: [w[3], w[4], w[5]],
+            dur_s: f64::from_bits(w[9]),
+        },
+        9 => EventKind::Finish {
+            id: w[2],
+            reason: w[3] as u8,
+            tokens: w[4],
+            latency_s: f64::from_bits(w[5]),
+        },
+        _ => return None,
+    };
+    Some(TraceEvent { sim_time_s, kind })
+}
+
+#[derive(Debug, Default)]
+struct EventSlot {
+    /// Seqlock sequence: even = stable, odd = write in progress.
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+/// The bounded, wait-free flight recorder. Single producer (the engine's
+/// owning thread); any number of concurrent readers.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    /// Monotonic event count (also the ring cursor). Published last with
+    /// `Release` so a reader that observes it observes the slots it
+    /// promises.
+    recorded: AtomicU64,
+    ring: Box<[EventSlot]>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        let ring = (0..capacity.max(1)).map(|_| EventSlot::default()).collect();
+        Self { recorded: AtomicU64::new(0), ring }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Exact events recorded so far (monotonic; never windows).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Acquire)
+    }
+
+    /// Record one event. Wait-free: one seqlock slot publish plus one
+    /// counter store. Single producer — the engine's owning thread.
+    pub fn record(&self, ev: &TraceEvent) {
+        let n = self.recorded.load(Ordering::Relaxed);
+        let slot = &self.ring[(n % self.ring.len() as u64) as usize];
+        let s = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(s + 1, Ordering::Relaxed); // odd: write in progress
+        fence(Ordering::Release);
+        for (a, v) in slot.words.iter().zip(encode(ev)) {
+            a.store(v, Ordering::Relaxed);
+        }
+        slot.seq.store(s + 2, Ordering::Release); // even: stable
+        self.recorded.store(n + 1, Ordering::Release);
+    }
+
+    /// Snapshot every resident event in chronological order.
+    pub fn dump(&self) -> TraceDump {
+        self.dump_last(usize::MAX)
+    }
+
+    /// Snapshot the most recent `last` resident events in chronological
+    /// order. `dropped` counts ring-wraparound losses exactly
+    /// (`recorded − resident`), independent of `last`.
+    pub fn dump_last(&self, last: usize) -> TraceDump {
+        let recorded = self.recorded.load(Ordering::Acquire);
+        let cap = self.ring.len() as u64;
+        let resident = recorded.min(cap);
+        let keep = resident.min(last as u64);
+        let mut events = Vec::with_capacity(keep as usize);
+        let mut torn = 0usize;
+        for i in (recorded - keep)..recorded {
+            let slot = &self.ring[(i % cap) as usize];
+            let mut ok = false;
+            for _ in 0..READ_RETRIES {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 % 2 == 1 {
+                    continue; // mid-write
+                }
+                let mut w = [0u64; WORDS];
+                for (dst, a) in w.iter_mut().zip(slot.words.iter()) {
+                    *dst = a.load(Ordering::Relaxed);
+                }
+                fence(Ordering::Acquire);
+                let s2 = slot.seq.load(Ordering::Relaxed);
+                if s1 == s2 {
+                    // An undecodable tag can only come from a torn or
+                    // foreign slot; count it the same way.
+                    if let Some(ev) = decode(&w) {
+                        events.push(ev);
+                    } else {
+                        torn += 1;
+                    }
+                    ok = true;
+                    break;
+                }
+            }
+            if !ok {
+                torn += 1;
+            }
+        }
+        TraceDump { events, recorded, dropped: recorded - resident, torn }
+    }
+}
+
+/// A reader's snapshot of the ring.
+#[derive(Debug, Clone, Default)]
+pub struct TraceDump {
+    /// Resident events, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Exact events ever recorded (monotonic).
+    pub recorded: u64,
+    /// Events lost to ring wraparound: `recorded − resident`, exact.
+    pub dropped: u64,
+    /// Slots skipped because the writer lapped the reader mid-slot (always
+    /// 0 for the deterministic offline dumps — the engine is quiescent).
+    pub torn: usize,
+}
+
+// ---- exporters -----------------------------------------------------------
+
+fn hex(v: u64) -> Json {
+    Json::from(format!("{v:#018x}"))
+}
+
+fn id_or_null(id: u64) -> Json {
+    if id == NO_ID {
+        Json::Null
+    } else {
+        Json::from(id)
+    }
+}
+
+/// Per-kind argument payload, shared by the Chrome exporter and the
+/// server probe.
+pub fn args_json(kind: &EventKind) -> Json {
+    match kind {
+        EventKind::Admit { id, prompt_len, max_new_tokens } => obj([
+            ("id", Json::from(*id)),
+            ("prompt_len", Json::from(*prompt_len)),
+            ("max_new_tokens", Json::from(*max_new_tokens)),
+        ]),
+        EventKind::PrefixLookup { id, hit, blocks, tokens, fingerprint } => obj([
+            ("id", Json::from(*id)),
+            ("hit", Json::from(*hit)),
+            ("blocks", Json::from(*blocks)),
+            ("tokens", Json::from(*tokens)),
+            ("layout_fingerprint", hex(*fingerprint)),
+        ]),
+        EventKind::PrefillChunk { id, tokens, t_pad, gather_by_rung, generated, dur_s } => obj([
+            ("id", Json::from(*id)),
+            ("tokens", Json::from(*tokens)),
+            ("t_pad", Json::from(*t_pad)),
+            ("gather_bytes_kv16", Json::from(gather_by_rung[0])),
+            ("gather_bytes_kv8", Json::from(gather_by_rung[1])),
+            ("gather_bytes_kv4", Json::from(gather_by_rung[2])),
+            ("generated", Json::from(*generated)),
+            ("dur_s", Json::from(*dur_s)),
+        ]),
+        EventKind::DecodeIter { batch, padded_slots, t_pad, generated, gather_by_rung, dur_s } => {
+            obj([
+                ("batch", Json::from(*batch)),
+                ("padded_slots", Json::from(*padded_slots)),
+                ("t_pad", Json::from(*t_pad)),
+                ("generated", Json::from(*generated)),
+                ("gather_bytes_kv16", Json::from(gather_by_rung[0])),
+                ("gather_bytes_kv8", Json::from(gather_by_rung[1])),
+                ("gather_bytes_kv4", Json::from(gather_by_rung[2])),
+                ("dur_s", Json::from(*dur_s)),
+            ])
+        }
+        EventKind::Preempt {
+            victim,
+            mechanism,
+            chosen_cost_s,
+            alt_cost_s,
+            candidates,
+            runner_up,
+            runner_up_cost_s,
+        } => obj([
+            ("victim", id_or_null(*victim)),
+            ("mechanism", Json::from(mechanism_name(*mechanism))),
+            ("chosen_cost_s", Json::from(*chosen_cost_s)),
+            ("alt_cost_s", Json::from(*alt_cost_s)),
+            ("candidates", Json::from(*candidates)),
+            ("runner_up", id_or_null(*runner_up)),
+            ("runner_up_cost_s", Json::from(*runner_up_cost_s)),
+        ]),
+        EventKind::Ladder {
+            rung_from,
+            rung_to,
+            bytes_by_rung,
+            gained_blocks,
+            dropped_tokens,
+            to_fingerprint,
+            dur_s,
+        } => obj([
+            ("rung_from", Json::from(RUNG_NAMES[(*rung_from as usize).min(2)])),
+            ("rung_to", Json::from(RUNG_NAMES[(*rung_to as usize).min(2)])),
+            ("bytes", Json::from(bytes_by_rung.iter().sum::<u64>())),
+            ("bytes_kv16", Json::from(bytes_by_rung[0])),
+            ("bytes_kv8", Json::from(bytes_by_rung[1])),
+            ("bytes_kv4", Json::from(bytes_by_rung[2])),
+            ("gained_blocks", Json::from(*gained_blocks)),
+            ("dropped_tokens", Json::from(*dropped_tokens)),
+            ("to_layout_fingerprint", hex(*to_fingerprint)),
+            ("dur_s", Json::from(*dur_s)),
+        ]),
+        EventKind::SwapOut { id, bytes_by_rung, dur_s } => obj([
+            ("id", Json::from(*id)),
+            ("bytes", Json::from(bytes_by_rung.iter().sum::<u64>())),
+            ("bytes_kv16", Json::from(bytes_by_rung[0])),
+            ("bytes_kv8", Json::from(bytes_by_rung[1])),
+            ("bytes_kv4", Json::from(bytes_by_rung[2])),
+            ("dur_s", Json::from(*dur_s)),
+        ]),
+        EventKind::SwapIn { id, bytes_by_rung, dur_s } => obj([
+            ("id", Json::from(*id)),
+            ("bytes", Json::from(bytes_by_rung.iter().sum::<u64>())),
+            ("bytes_kv16", Json::from(bytes_by_rung[0])),
+            ("bytes_kv8", Json::from(bytes_by_rung[1])),
+            ("bytes_kv4", Json::from(bytes_by_rung[2])),
+            ("dur_s", Json::from(*dur_s)),
+        ]),
+        EventKind::Finish { id, reason, tokens, latency_s } => obj([
+            ("id", Json::from(*id)),
+            ("reason", Json::from(finish_reason_name(*reason))),
+            ("tokens", Json::from(*tokens)),
+            ("latency_s", Json::from(*latency_s)),
+        ]),
+    }
+}
+
+/// A single event as probe JSON.
+pub fn event_json(ev: &TraceEvent) -> Json {
+    obj([
+        ("kind", Json::from(ev.kind.name())),
+        ("sim_time_s", Json::from(ev.sim_time_s)),
+        ("args", args_json(&ev.kind)),
+    ])
+}
+
+/// A ring snapshot as probe JSON (the `{"trace": N}` server answer).
+pub fn dump_json(d: &TraceDump) -> Json {
+    obj([
+        ("recorded", Json::from(d.recorded)),
+        ("dropped", Json::from(d.dropped)),
+        ("torn", Json::from(d.torn)),
+        ("events", arr(d.events.iter().map(event_json))),
+    ])
+}
+
+/// One replica's track in a Chrome trace export.
+pub struct TraceTrack<'a> {
+    /// Chrome `tid`; one track per replica.
+    pub tid: usize,
+    /// Track label (the replica's identity string).
+    pub label: String,
+    pub dump: &'a TraceDump,
+}
+
+/// Per-request span aggregation used to derive the nested
+/// request → phase async spans.
+#[derive(Default)]
+struct ReqAgg {
+    admit: Option<f64>,
+    first: Option<f64>,
+    last: f64,
+    prompt_len: u64,
+    prefill_start: Option<f64>,
+    prefill_end: Option<f64>,
+    finish: Option<f64>,
+}
+
+fn chrome_event(
+    ph: &str,
+    name: &'static str,
+    tid: usize,
+    extra: impl IntoIterator<Item = (&'static str, Json)>,
+) -> Json {
+    let mut fields = vec![
+        ("ph", Json::from(ph)),
+        ("name", Json::from(name)),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::from(tid)),
+    ];
+    fields.extend(extra);
+    obj(fields)
+}
+
+fn push_track(track: &TraceTrack, out: &mut Vec<Json>) {
+    let tid = track.tid;
+    out.push(chrome_event(
+        "M",
+        "thread_name",
+        tid,
+        [("args", obj([("name", Json::from(track.label.as_str()))]))],
+    ));
+    let mut aggs: BTreeMap<u64, ReqAgg> = BTreeMap::new();
+    for ev in &track.dump.events {
+        let ts = ev.sim_time_s;
+        if let Some(id) = ev.kind.request_id() {
+            let a = aggs.entry(id).or_default();
+            a.first.get_or_insert(ts);
+            a.last = a.last.max(ts + ev.kind.dur_s());
+            match &ev.kind {
+                EventKind::Admit { prompt_len, .. } => {
+                    a.admit.get_or_insert(ts);
+                    a.prompt_len = *prompt_len;
+                }
+                EventKind::PrefillChunk { dur_s, .. } => {
+                    a.prefill_start.get_or_insert(ts);
+                    let end = ts + dur_s;
+                    a.prefill_end = Some(a.prefill_end.map_or(end, |e| e.max(end)));
+                }
+                EventKind::Finish { .. } => {
+                    a.finish = Some(ts);
+                }
+                _ => {}
+            }
+        }
+        let us = ts * 1e6;
+        match &ev.kind {
+            EventKind::PrefillChunk { dur_s, .. }
+            | EventKind::DecodeIter { dur_s, .. }
+            | EventKind::Ladder { dur_s, .. }
+            | EventKind::SwapOut { dur_s, .. }
+            | EventKind::SwapIn { dur_s, .. } => {
+                out.push(chrome_event(
+                    "X",
+                    ev.kind.name(),
+                    tid,
+                    [
+                        ("ts", Json::from(us)),
+                        ("dur", Json::from(dur_s * 1e6)),
+                        ("args", args_json(&ev.kind)),
+                    ],
+                ));
+            }
+            EventKind::Admit { .. }
+            | EventKind::PrefixLookup { .. }
+            | EventKind::Preempt { .. }
+            | EventKind::Finish { .. } => {
+                out.push(chrome_event(
+                    "i",
+                    ev.kind.name(),
+                    tid,
+                    [
+                        ("ts", Json::from(us)),
+                        ("s", Json::from("t")),
+                        ("args", args_json(&ev.kind)),
+                    ],
+                ));
+            }
+        }
+    }
+    // Nested async spans: request ⊃ prefill / decode, one id space per
+    // track so replicas never collide. BTreeMap iteration keeps the
+    // output deterministic.
+    for (id, a) in &aggs {
+        let (Some(start), end) = (a.admit.or(a.first), a.finish.unwrap_or(a.last)) else {
+            continue;
+        };
+        let end = end.max(start);
+        let span_id = format!("r{tid}.{id}");
+        let span = |ph: &str, name: &'static str, ts: f64| {
+            chrome_event(
+                ph,
+                name,
+                tid,
+                [
+                    ("cat", Json::from("req")),
+                    ("id", Json::from(span_id.as_str())),
+                    ("ts", Json::from(ts * 1e6)),
+                ],
+            )
+        };
+        out.push(span("b", "request", start));
+        if let (Some(ps), Some(pe)) = (a.prefill_start, a.prefill_end) {
+            let ps = ps.clamp(start, end);
+            let pe = pe.clamp(ps, end);
+            out.push(span("b", "prefill", ps));
+            out.push(span("e", "prefill", pe));
+            if end > pe {
+                out.push(span("b", "decode", pe));
+                out.push(span("e", "decode", end));
+            }
+        }
+        out.push(span("e", "request", end));
+    }
+}
+
+/// Assemble a Perfetto-loadable Chrome trace-event document: one track
+/// per replica, spans nested request → phase → iteration, timestamps in
+/// microseconds of the modeled clock.
+pub fn chrome_trace(tracks: &[TraceTrack]) -> Json {
+    let mut events = Vec::new();
+    for t in tracks {
+        push_track(t, &mut events);
+    }
+    obj([
+        ("displayTimeUnit", Json::from("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Schema lint for exported Chrome traces: every event has a known
+/// phase, a non-empty name, numeric pid/tid; complete events carry
+/// `ts` + non-negative `dur`; async begin/end events carry `cat` + `id`
+/// and balance exactly per `(cat, id, name)`.
+pub fn validate(doc: &Json) -> Result<()> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("trace: missing `traceEvents` array"))?;
+    let mut balance: BTreeMap<(String, String, String), i64> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace event {i}: missing `ph`"))?;
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace event {i}: missing `name`"))?;
+        if name.is_empty() {
+            bail!("trace event {i}: empty `name`");
+        }
+        for key in ["pid", "tid"] {
+            if ev.get(key).and_then(Json::as_f64).is_none() {
+                bail!("trace event {i} ({name}): missing numeric `{key}`");
+            }
+        }
+        let ts = ev.get("ts").and_then(Json::as_f64);
+        match ph {
+            "M" => {}
+            "X" => {
+                if ts.is_none() {
+                    bail!("trace event {i} ({name}): X event missing `ts`");
+                }
+                match ev.get("dur").and_then(Json::as_f64) {
+                    Some(d) if d >= 0.0 => {}
+                    _ => bail!("trace event {i} ({name}): X event needs `dur` >= 0"),
+                }
+            }
+            "i" => {
+                if ts.is_none() {
+                    bail!("trace event {i} ({name}): instant missing `ts`");
+                }
+            }
+            "b" | "e" => {
+                if ts.is_none() {
+                    bail!("trace event {i} ({name}): async event missing `ts`");
+                }
+                let cat = ev
+                    .get("cat")
+                    .and_then(Json::as_str)
+                    .filter(|c| !c.is_empty())
+                    .ok_or_else(|| anyhow!("trace event {i} ({name}): async event needs `cat`"))?;
+                let id = match ev.get("id") {
+                    Some(Json::Str(s)) => s.clone(),
+                    Some(Json::Num(n)) => format!("{n}"),
+                    _ => bail!("trace event {i} ({name}): async event needs `id`"),
+                };
+                let k = (cat.to_string(), id, name.to_string());
+                *balance.entry(k).or_insert(0) += if ph == "b" { 1 } else { -1 };
+            }
+            other => bail!("trace event {i} ({name}): unknown phase `{other}`"),
+        }
+    }
+    for ((cat, id, name), v) in balance {
+        if v != 0 {
+            bail!("trace: unbalanced async span `{name}` (cat={cat}, id={id}): {v:+}");
+        }
+    }
+    Ok(())
+}
+
+/// Export tracks to `path` as validated Chrome trace JSON; returns the
+/// serialized document (byte-identical across runs of the same inputs).
+pub fn write_chrome(path: &str, tracks: &[TraceTrack]) -> Result<String> {
+    let doc = chrome_trace(tracks);
+    validate(&doc).map_err(|e| anyhow!("refusing to write invalid trace: {e}"))?;
+    let text = doc.dump();
+    std::fs::write(path, &text)
+        .map_err(|e| anyhow!("writing trace to {path}: {e}"))?;
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                sim_time_s: 0.0,
+                kind: EventKind::Admit { id: 0, prompt_len: 24, max_new_tokens: 8 },
+            },
+            TraceEvent {
+                sim_time_s: 0.0,
+                kind: EventKind::PrefixLookup {
+                    id: 0,
+                    hit: true,
+                    blocks: 2,
+                    tokens: 32,
+                    fingerprint: 0xdead_beef_0123_4567,
+                },
+            },
+            TraceEvent {
+                sim_time_s: 0.0,
+                kind: EventKind::PrefillChunk {
+                    id: 0,
+                    tokens: 24,
+                    t_pad: 32,
+                    gather_by_rung: [0, 4096, 0],
+                    generated: 1,
+                    dur_s: 1e-3,
+                },
+            },
+            TraceEvent {
+                sim_time_s: 1e-3,
+                kind: EventKind::DecodeIter {
+                    batch: 2,
+                    padded_slots: 1,
+                    t_pad: 64,
+                    generated: 1,
+                    gather_by_rung: [128, 256, 64],
+                    dur_s: 2e-3,
+                },
+            },
+            TraceEvent {
+                sim_time_s: 3e-3,
+                kind: EventKind::Preempt {
+                    victim: 1,
+                    mechanism: 0,
+                    chosen_cost_s: 1e-4,
+                    alt_cost_s: 3e-4,
+                    candidates: 2,
+                    runner_up: NO_ID,
+                    runner_up_cost_s: 0.0,
+                },
+            },
+            TraceEvent {
+                sim_time_s: 3e-3,
+                kind: EventKind::Ladder {
+                    rung_from: 0,
+                    rung_to: 1,
+                    bytes_by_rung: [0, 8192, 0],
+                    gained_blocks: 4,
+                    dropped_tokens: 3,
+                    to_fingerprint: 0x1122,
+                    dur_s: 4e-6,
+                },
+            },
+            TraceEvent {
+                sim_time_s: 4e-3,
+                kind: EventKind::SwapOut { id: 1, bytes_by_rung: [0, 2048, 0], dur_s: 1e-4 },
+            },
+            TraceEvent {
+                sim_time_s: 5e-3,
+                kind: EventKind::SwapIn { id: 1, bytes_by_rung: [0, 2048, 0], dur_s: 1e-4 },
+            },
+            TraceEvent {
+                sim_time_s: 6e-3,
+                kind: EventKind::Finish { id: 0, reason: 0, tokens: 8, latency_s: 6e-3 },
+            },
+        ]
+    }
+
+    #[test]
+    fn encode_decode_round_trips_every_kind() {
+        for ev in sample_events() {
+            let w = encode(&ev);
+            assert_eq!(decode(&w).as_ref(), Some(&ev), "{}", ev.kind.name());
+        }
+        assert!(decode(&[99, 0, 0, 0, 0, 0, 0, 0, 0, 0]).is_none(), "unknown tag rejected");
+    }
+
+    #[test]
+    fn ring_windows_and_counts_drops_exactly() {
+        let r = TraceRecorder::with_capacity(4);
+        for i in 0..10u64 {
+            r.record(&TraceEvent {
+                sim_time_s: i as f64,
+                kind: EventKind::Admit { id: i, prompt_len: 1, max_new_tokens: 1 },
+            });
+        }
+        let d = r.dump();
+        assert_eq!(d.recorded, 10);
+        assert_eq!(d.dropped, 6, "wraparound drops counted exactly");
+        assert_eq!(d.torn, 0);
+        let ids: Vec<u64> = d
+            .events
+            .iter()
+            .filter_map(|e| e.kind.request_id())
+            .collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "window holds the most recent events in order");
+        let last2 = r.dump_last(2);
+        assert_eq!(last2.events.len(), 2);
+        assert_eq!(last2.events[0].kind.request_id(), Some(8));
+        assert_eq!(last2.dropped, 6, "dropped is wraparound loss, not the reader's cap");
+    }
+
+    #[test]
+    fn concurrent_dumps_never_see_torn_events() {
+        // Writer maintains an invariant (latency == 2 * sim_time); readers
+        // must only ever observe intact events.
+        let r = Arc::new(TraceRecorder::with_capacity(16));
+        let w = Arc::clone(&r);
+        let writer = thread::spawn(move || {
+            for i in 1..=20_000u64 {
+                let t = i as f64;
+                w.record(&TraceEvent {
+                    sim_time_s: t,
+                    kind: EventKind::Finish { id: i, reason: 0, tokens: i, latency_s: 2.0 * t },
+                });
+            }
+        });
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let rr = Arc::clone(&r);
+            readers.push(thread::spawn(move || {
+                for _ in 0..200 {
+                    let d = rr.dump();
+                    for ev in &d.events {
+                        if let EventKind::Finish { id, tokens, latency_s, .. } = ev.kind {
+                            assert_eq!(id, tokens, "torn event leaked");
+                            assert_eq!(latency_s, 2.0 * ev.sim_time_s, "torn event leaked");
+                        }
+                    }
+                }
+            }));
+        }
+        writer.join().unwrap();
+        for h in readers {
+            h.join().unwrap();
+        }
+        let d = r.dump();
+        assert_eq!(d.recorded, 20_000);
+        assert_eq!(d.events.len(), 16);
+        assert_eq!(d.torn, 0, "quiescent ring reads clean");
+    }
+
+    #[test]
+    fn chrome_export_validates_and_nests_spans() {
+        let r = TraceRecorder::with_capacity(64);
+        for ev in sample_events() {
+            r.record(&ev);
+        }
+        let d = r.dump();
+        let tracks =
+            [TraceTrack { tid: 0, label: "W4A16KV8@A100".into(), dump: &d }];
+        let doc = chrome_trace(&tracks);
+        validate(&doc).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Request 0's span: b/e request + b/e prefill + b/e decode.
+        let spans: Vec<(&str, &str, f64)> = events
+            .iter()
+            .filter(|e| matches!(e.req_str("ph"), Ok("b") | Ok("e")))
+            .map(|e| {
+                (
+                    e.req_str("ph").unwrap(),
+                    e.req_str("name").unwrap(),
+                    e.get("ts").unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect();
+        let find = |ph: &str, name: &str| {
+            spans
+                .iter()
+                .find(|(p, n, _)| *p == ph && *n == name)
+                .map(|(_, _, t)| *t)
+                .unwrap_or_else(|| panic!("missing span {ph} {name}"))
+        };
+        let (rb, re) = (find("b", "request"), find("e", "request"));
+        let (pb, pe) = (find("b", "prefill"), find("e", "prefill"));
+        let (db, de) = (find("b", "decode"), find("e", "decode"));
+        assert!(rb <= pb && pb <= pe && pe <= de && de <= re, "nested, non-overlapping");
+        assert_eq!(db, pe, "decode starts where prefill ends");
+        // Determinism: exporting the same dump twice is byte-identical.
+        assert_eq!(doc.dump(), chrome_trace(&tracks).dump());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate(&Json::parse(r#"{"x": 1}"#).unwrap()).is_err(), "no traceEvents");
+        let bad_phase = r#"{"traceEvents":[{"ph":"Q","name":"x","pid":1,"tid":0}]}"#;
+        assert!(validate(&Json::parse(bad_phase).unwrap()).is_err());
+        let no_dur = r#"{"traceEvents":[{"ph":"X","name":"x","pid":1,"tid":0,"ts":1}]}"#;
+        assert!(validate(&Json::parse(no_dur).unwrap()).is_err());
+        let no_cat =
+            r#"{"traceEvents":[{"ph":"b","name":"x","pid":1,"tid":0,"ts":1,"id":"a"}]}"#;
+        assert!(validate(&Json::parse(no_cat).unwrap()).is_err());
+        let unbalanced = r#"{"traceEvents":[
+            {"ph":"b","name":"x","pid":1,"tid":0,"ts":1,"cat":"req","id":"a"}]}"#;
+        assert!(validate(&Json::parse(unbalanced).unwrap()).is_err());
+        let ok = r#"{"traceEvents":[
+            {"ph":"b","name":"x","pid":1,"tid":0,"ts":1,"cat":"req","id":"a"},
+            {"ph":"e","name":"x","pid":1,"tid":0,"ts":2,"cat":"req","id":"a"}]}"#;
+        validate(&Json::parse(ok).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn probe_json_carries_counts_and_events() {
+        let r = TraceRecorder::with_capacity(4);
+        for ev in sample_events() {
+            r.record(&ev);
+        }
+        let j = dump_json(&r.dump_last(2));
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.req_usize("recorded").unwrap(), 9);
+        assert_eq!(parsed.req_usize("dropped").unwrap(), 5);
+        assert_eq!(parsed.req_arr("events").unwrap().len(), 2);
+        let last = &parsed.req_arr("events").unwrap()[1];
+        assert_eq!(last.req_str("kind").unwrap(), "finish");
+        assert_eq!(last.get("args").unwrap().req_str("reason").unwrap(), "length");
+    }
+}

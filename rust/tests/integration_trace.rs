@@ -1,0 +1,395 @@
+//! Flight-recorder integration tests (DESIGN.md §12) on the hermetic sim
+//! backend: a randomized overload harness proving the trace is not merely
+//! plausible but **exactly** reconciles with the engine's own counters —
+//! every byte the telemetry attributes to a precision rung appears in some
+//! typed event, and vice versa — plus the determinism contract
+//! (bit-identical traces for same-seed runs), exact ring-wraparound drop
+//! accounting, per-request span nesting, and Chrome-export validity.
+//!
+//! The load-bearing claims:
+//!   (a) summed trace fields `==` engine counters (no sampling, no drift):
+//!       prompt/generated tokens, decode iterations, padded slots, per-rung
+//!       gather HBM bytes, per-rung transcode bytes, per-rung swap PCIe
+//!       bytes, prefix-cache hit tokens, swap-out/-in event counts;
+//!   (b) every request's events nest inside its admit → finish span, with
+//!       exactly one admit and one finish each;
+//!   (c) two runs of the same seed produce bit-identical dumps and exports;
+//!   (d) a tiny ring drops exactly `recorded − capacity` oldest events and
+//!       keeps the newest `capacity` verbatim.
+
+use std::collections::BTreeMap;
+
+use turbomind::config::engine::{LadderPolicy, PreemptionMode, SchedulerPolicy};
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use turbomind::trace::{chrome_trace, validate, EventKind, TraceTrack};
+use turbomind::util::proptest::run_prop;
+
+fn cfg(
+    precision: &str,
+    mode: PreemptionMode,
+    cache: bool,
+    block_tokens: usize,
+    pool_blocks: usize,
+) -> EngineConfig {
+    EngineConfig {
+        precision: precision.parse().unwrap(),
+        max_batch: 4,
+        kv_block_tokens: block_tokens,
+        kv_pool_tokens: block_tokens * pool_blocks,
+        prefill_chunk: 32,
+        scheduler: SchedulerPolicy::Continuous,
+        enable_prefix_cache: cache,
+        preemption_mode: mode,
+        trace: true,
+        // Roomy ring: reconciliation needs every event resident.
+        trace_ring_capacity: 1 << 14,
+        ..EngineConfig::default()
+    }
+}
+
+/// Ladder-capable variant: uniform kv16 admission layout so the pool has
+/// two rungs of headroom to transcode through.
+fn ladder_cfg(cache: bool, block_tokens: usize, pool_blocks: usize) -> EngineConfig {
+    EngineConfig {
+        kv_layout: Some("kv16".into()),
+        ladder_policy: LadderPolicy::Auto,
+        ..cfg("W4A16KV16", PreemptionMode::Ladder, cache, block_tokens, pool_blocks)
+    }
+}
+
+fn run_burst(cfg: EngineConfig, reqs: &[(Vec<i32>, usize)]) -> (Engine, Vec<RequestOutput>) {
+    let mut e = Engine::new(cfg).unwrap();
+    for (prompt, gen) in reqs {
+        e.submit(Request::new(prompt.clone(), *gen)).unwrap();
+    }
+    let mut outs = e.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    (e, outs)
+}
+
+/// Exhaustive trace ↔ counter reconciliation. Every equality is exact
+/// (`==`, not `≤`): the events and the counters are written by the same
+/// code paths, so any drift is a bug in one of them.
+fn reconcile(e: &Engine, outs: &[RequestOutput], ctx: &str) {
+    let dump = e.trace_dump();
+    assert_eq!(dump.torn, 0, "{ctx}: quiescent dump can never tear");
+    assert_eq!(dump.dropped, 0, "{ctx}: ring sized to hold the whole run");
+    assert_eq!(dump.recorded as usize, dump.events.len(), "{ctx}");
+
+    let mut prompt_tokens = 0u64;
+    let mut generated = 0u64;
+    let mut decode_iters = 0usize;
+    let mut padded = 0u64;
+    let mut gather = [0u64; 3];
+    let mut transcode = [0u64; 3];
+    let mut swap_bytes = [0u64; 3];
+    let mut prefix_hit_tokens = 0u64;
+    let mut ladder_events = 0usize;
+    let mut ladder_decisions = 0usize;
+    let mut evict_decisions = 0usize;
+    let mut swap_outs = 0usize;
+    let mut swap_ins = 0usize;
+    let mut admit_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut finish_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut finish_info: BTreeMap<u64, (u8, u64)> = BTreeMap::new();
+
+    for ev in &dump.events {
+        match &ev.kind {
+            EventKind::Admit { id, .. } => {
+                let prev = admit_ts.insert(*id, ev.sim_time_s);
+                assert!(prev.is_none(), "{ctx}: req {id} admitted twice");
+            }
+            EventKind::PrefixLookup { hit, tokens, .. } => {
+                assert_eq!(*hit, *tokens > 0, "{ctx}: hit flag must match tokens");
+                prefix_hit_tokens += tokens;
+            }
+            EventKind::PrefillChunk { tokens, gather_by_rung, generated: g, .. } => {
+                prompt_tokens += tokens;
+                generated += g;
+                for (acc, b) in gather.iter_mut().zip(gather_by_rung) {
+                    *acc += b;
+                }
+            }
+            EventKind::DecodeIter { padded_slots, generated: g, gather_by_rung, .. } => {
+                decode_iters += 1;
+                padded += padded_slots;
+                generated += g;
+                for (acc, b) in gather.iter_mut().zip(gather_by_rung) {
+                    *acc += b;
+                }
+            }
+            EventKind::Preempt { mechanism, .. } => {
+                if *mechanism == 2 {
+                    ladder_decisions += 1;
+                } else {
+                    evict_decisions += 1;
+                }
+            }
+            EventKind::Ladder { bytes_by_rung, .. } => {
+                ladder_events += 1;
+                for (acc, b) in transcode.iter_mut().zip(bytes_by_rung) {
+                    *acc += b;
+                }
+            }
+            EventKind::SwapOut { bytes_by_rung, .. } => {
+                swap_outs += 1;
+                for (acc, b) in swap_bytes.iter_mut().zip(bytes_by_rung) {
+                    *acc += b;
+                }
+            }
+            EventKind::SwapIn { bytes_by_rung, .. } => {
+                swap_ins += 1;
+                for (acc, b) in swap_bytes.iter_mut().zip(bytes_by_rung) {
+                    *acc += b;
+                }
+            }
+            EventKind::Finish { id, reason, tokens, latency_s } => {
+                assert!(*latency_s >= 0.0, "{ctx}");
+                let prev = finish_ts.insert(*id, ev.sim_time_s);
+                assert!(prev.is_none(), "{ctx}: req {id} finished twice");
+                finish_info.insert(*id, (*reason, *tokens));
+            }
+        }
+    }
+
+    // (a) exact counter reconciliation.
+    let s = &e.stats;
+    assert_eq!(prompt_tokens, s.prompt_tokens as u64, "{ctx}: prefill tokens");
+    assert_eq!(generated, s.tokens_generated as u64, "{ctx}: generated tokens");
+    assert_eq!(decode_iters, s.decode_iters, "{ctx}: decode iterations");
+    assert_eq!(padded, s.padded_slots as u64, "{ctx}: padded decode slots");
+    assert_eq!(gather, s.gather_hbm_bytes_by_rung.map(|b| b as u64), "{ctx}: gather by rung");
+    assert_eq!(
+        gather.iter().sum::<u64>(),
+        s.gather_hbm_bytes as u64,
+        "{ctx}: rung buckets must sum to the headline gather counter"
+    );
+    assert_eq!(transcode, s.transcode_bytes_by_rung.map(|b| b as u64), "{ctx}: transcode");
+    assert_eq!(swap_bytes, s.swap_pcie_bytes_by_rung.map(|b| b as u64), "{ctx}: swap PCIe");
+    assert_eq!(prefix_hit_tokens, s.prefill_tokens_skipped as u64, "{ctx}: prefix hits");
+    let p = e.preemption_summary();
+    assert_eq!(ladder_events, p.ladder_events, "{ctx}: ladder rungs");
+    assert_eq!(ladder_decisions, p.ladder_events, "{ctx}: one decision per rung");
+    assert_eq!(
+        transcode.iter().sum::<u64>(),
+        p.ladder_transcoded_bytes as u64,
+        "{ctx}: transcode buckets sum to the preemption counter"
+    );
+    assert_eq!(
+        evict_decisions,
+        p.preemptions - p.ladder_preemptions,
+        "{ctx}: one swap/recompute decision per evicted victim"
+    );
+    assert_eq!(swap_outs, e.swap_store().stats.swap_outs, "{ctx}: swap-out events");
+    assert_eq!(swap_ins, e.swap_store().stats.swap_ins, "{ctx}: swap-in events");
+
+    // Telemetry is the same arrays re-exported (plus live pool occupancy).
+    let t = e.telemetry();
+    assert_eq!(t.gather_hbm_bytes_by_rung, s.gather_hbm_bytes_by_rung, "{ctx}");
+    assert_eq!(t.transcode_bytes_by_rung, s.transcode_bytes_by_rung, "{ctx}");
+    assert_eq!(t.swap_pcie_bytes_by_rung, s.swap_pcie_bytes_by_rung, "{ctx}");
+    assert_eq!(t.occupancy_layers_by_rung, e.kv_pool().layout().rung_histogram(), "{ctx}");
+
+    // (b) span nesting: exactly one admit + one finish per request, every
+    // id-carrying event inside [admit, finish] on the modeled clock.
+    assert_eq!(finish_ts.len(), outs.len(), "{ctx}: one finish per output");
+    for o in outs {
+        let a = *admit_ts.get(&o.id).unwrap_or_else(|| panic!("{ctx}: req {} no admit", o.id));
+        let f = *finish_ts.get(&o.id).unwrap_or_else(|| panic!("{ctx}: req {} no finish", o.id));
+        assert!(a <= f, "{ctx}: req {} finish precedes admit", o.id);
+        let (reason, tokens) = finish_info[&o.id];
+        let want = match o.finish {
+            FinishReason::Length => 0u8,
+            FinishReason::Stop => 1,
+            FinishReason::Aborted => 2,
+        };
+        assert_eq!(reason, want, "{ctx}: req {} finish reason", o.id);
+        assert_eq!(tokens, o.tokens.len() as u64, "{ctx}: req {} token count", o.id);
+    }
+    for ev in &dump.events {
+        if let Some(id) = ev.kind.request_id() {
+            assert!(
+                ev.sim_time_s >= admit_ts[&id] && ev.sim_time_s <= finish_ts[&id],
+                "{ctx}: req {id} {} event at t={} escapes its [admit, finish] span",
+                ev.kind.name(),
+                ev.sim_time_s
+            );
+        }
+    }
+}
+
+#[test]
+fn randomized_overload_trace_reconciles_exactly_with_engine_counters() {
+    // Sampled acceptance matrix: precision × prefix-cache × random bursty
+    // request sets against a ~3× oversubscribed pool, across all three
+    // lossless preemption mechanisms (swap, recompute, pool-wide ladder).
+    // Aggregated counters prove the harness genuinely drove every event
+    // class the reconciliation claims to cover.
+    let mut swaps = 0usize;
+    let mut recomputes = 0usize;
+    let mut ladders = 0usize;
+    run_prop("trace-reconcile", 0x7ACE_5EED, 8, |g| {
+        let precision = *g.choose(&["W4A16KV16", "W4A16KV8", "W4A16KV4"]);
+        let cache = g.bool();
+        let n = g.usize_in(4, 6);
+        let mut reqs: Vec<(Vec<i32>, usize)> = Vec::new();
+        for _ in 0..n {
+            let p_len = g.usize_in(8, 15);
+            let gen = g.usize_in(16, 40);
+            let prompt: Vec<i32> = (0..p_len).map(|_| g.usize_in(0, 2047) as i32).collect();
+            reqs.push((prompt, gen));
+        }
+        let bt = 8usize;
+        let need = |r: &(Vec<i32>, usize)| (r.0.len() + r.1).div_ceil(bt);
+        let max_need = reqs.iter().map(need).max().unwrap();
+        let pool_blocks =
+            max_need.max(reqs.iter().map(need).sum::<usize>() / 3).max(2);
+
+        for mode in [PreemptionMode::Swap, PreemptionMode::Recompute] {
+            let ctx = format!("{precision} {mode:?} cache={cache} (case {:#x})", g.seed);
+            let (e, outs) = run_burst(cfg(precision, mode, cache, bt, pool_blocks), &reqs);
+            assert_eq!(outs.len(), n, "{ctx}: outputs lost");
+            reconcile(&e, &outs, &ctx);
+            swaps += e.preempt_stats.swap_preemptions;
+            recomputes += e.preempt_stats.recompute_preemptions;
+        }
+
+        // Ladder mode admits at kv16 so rungs exist to descend; same
+        // oversubscribed pool arithmetic as the eviction cases.
+        let ctx = format!("ladder cache={cache} (case {:#x})", g.seed);
+        let (e, outs) = run_burst(ladder_cfg(cache, bt, pool_blocks), &reqs);
+        assert_eq!(outs.len(), n, "{ctx}: outputs lost");
+        reconcile(&e, &outs, &ctx);
+        ladders += e.preemption_summary().ladder_events;
+    });
+    assert!(swaps > 0, "harness never exercised swap events");
+    assert!(recomputes > 0, "harness never exercised recompute");
+    assert!(ladders > 0, "harness never exercised the ladder");
+}
+
+/// Three 17-prompt/32-gen requests against an 8×16-token pool overflow by
+/// arithmetic, not timing (the engineered shape from the preemption tests).
+fn engineered_overflow() -> Vec<(Vec<i32>, usize)> {
+    (0..3)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..17).map(|j| ((i * 211 + j * 7) % 2048) as i32).collect();
+            (prompt, 32usize)
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_runs_produce_bit_identical_traces() {
+    // The determinism contract: the trace is a pure function of
+    // (requests, config) — modeled clock stamps, byte attributions, and
+    // decision records all derive from the sim, never from wall time.
+    // Ladder mode exercises the richest event mix (preempt decisions,
+    // transcodes, restarts) on top of prefill/decode/finish.
+    let reqs = engineered_overflow();
+    let (e1, o1) = run_burst(ladder_cfg(false, 16, 8), &reqs);
+    let (e2, o2) = run_burst(ladder_cfg(false, 16, 8), &reqs);
+    for (a, b) in o1.iter().zip(&o2) {
+        assert_eq!(a.tokens, b.tokens, "req {} diverged", a.id);
+    }
+    let (d1, d2) = (e1.trace_dump(), e2.trace_dump());
+    assert!(!d1.events.is_empty(), "engineered overload must record events");
+    assert_eq!(d1.recorded, d2.recorded);
+    assert_eq!(d1.events, d2.events, "same seed must replay the identical event stream");
+
+    // And the exported documents are byte-identical too.
+    let t1 = [TraceTrack { tid: 0, label: "engine".into(), dump: &d1 }];
+    let t2 = [TraceTrack { tid: 0, label: "engine".into(), dump: &d2 }];
+    let (c1, c2) = (chrome_trace(&t1), chrome_trace(&t2));
+    validate(&c1).unwrap();
+    assert_eq!(c1.dump(), c2.dump(), "Chrome exports must be bit-identical");
+}
+
+#[test]
+fn tiny_ring_wraparound_drop_count_is_exact() {
+    // Same run, two ring sizes: the tiny ring keeps exactly the newest 8
+    // events of the big ring's stream and reports every older one dropped.
+    let reqs = engineered_overflow();
+    let (big, _) = run_burst(cfg("W4A16KV8", PreemptionMode::Swap, false, 16, 8), &reqs);
+    let tiny_cfg = EngineConfig {
+        trace_ring_capacity: 8,
+        ..cfg("W4A16KV8", PreemptionMode::Swap, false, 16, 8)
+    };
+    let (tiny, _) = run_burst(tiny_cfg, &reqs);
+
+    let full = big.trace_dump();
+    let wrapped = tiny.trace_dump();
+    assert!(full.recorded > 8, "run must overflow the tiny ring");
+    assert_eq!(wrapped.recorded, full.recorded, "recorded never windows");
+    assert_eq!(wrapped.events.len(), 8);
+    assert_eq!(wrapped.dropped, full.recorded - 8, "drops are exact, not approximate");
+    assert_eq!(
+        wrapped.events[..],
+        full.events[full.events.len() - 8..],
+        "the survivors are the newest events, verbatim"
+    );
+    // dump_last windows the view without changing the drop accounting.
+    let last3 = tiny.trace_dump_last(3);
+    assert_eq!(last3.events[..], wrapped.events[wrapped.events.len() - 3..]);
+    assert_eq!(last3.dropped, wrapped.dropped);
+}
+
+#[test]
+fn tracing_off_records_nothing_and_dumps_empty() {
+    let reqs = engineered_overflow();
+    let off = EngineConfig { trace: false, ..cfg("W4A16KV8", PreemptionMode::Swap, false, 16, 8) };
+    let (e, outs) = run_burst(off, &reqs);
+    assert_eq!(outs.len(), 3, "tracing off must not change behavior");
+    assert!(e.trace_recorder().is_none());
+    let d = e.trace_dump();
+    assert_eq!((d.recorded, d.dropped, d.torn, d.events.len()), (0, 0, 0, 0));
+}
+
+#[test]
+fn prefix_cache_hits_are_traced_and_reconcile() {
+    // Two back-to-back identical prompts through a roomy cached pool: the
+    // second admission adopts the first's indexed blocks, and the trace's
+    // prefix_lookup events carry the exact adopted-token count.
+    let c = cfg("W4A16KV8", PreemptionMode::Abort, true, 16, 512);
+    let mut e = Engine::new(c).unwrap();
+    let prompt: Vec<i32> = (0..40).map(|j| (j * 13 % 2048) as i32).collect();
+    e.submit(Request::new(prompt.clone(), 8)).unwrap();
+    let mut outs = e.run_to_completion().unwrap();
+    e.submit(Request::new(prompt, 8)).unwrap();
+    outs.extend(e.run_to_completion().unwrap());
+    assert!(e.stats.prefill_tokens_skipped > 0, "second admission must hit the index");
+
+    let dump = e.trace_dump();
+    let lookups: Vec<_> = dump
+        .events
+        .iter()
+        .filter_map(|ev| match &ev.kind {
+            EventKind::PrefixLookup { hit, tokens, .. } => Some((*hit, *tokens)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(lookups.len(), 2, "one lookup per admission");
+    assert_eq!(lookups[0], (false, 0), "cold cache misses");
+    assert!(lookups[1].0, "warm cache hits");
+    assert_eq!(lookups[1].1, e.stats.prefill_tokens_skipped as u64);
+    reconcile(&e, &outs, "prefix round-trip");
+}
+
+#[test]
+fn chrome_export_is_valid_and_carries_one_track_per_replica() {
+    let reqs = engineered_overflow();
+    let (e1, _) = run_burst(ladder_cfg(false, 16, 8), &reqs);
+    let (e2, _) = run_burst(cfg("W4A16KV8", PreemptionMode::Swap, false, 16, 8), &reqs);
+    let (d1, d2) = (e1.trace_dump(), e2.trace_dump());
+    let tracks = [
+        TraceTrack { tid: 0, label: "replica-0 (kv16 ladder)".into(), dump: &d1 },
+        TraceTrack { tid: 1, label: "replica-1 (kv8 swap)".into(), dump: &d2 },
+    ];
+    let doc = chrome_trace(&tracks);
+    validate(&doc).unwrap();
+    let text = doc.dump();
+    // Both thread-name metadata records and both tids appear.
+    assert!(text.contains("replica-0 (kv16 ladder)"));
+    assert!(text.contains("replica-1 (kv8 swap)"));
+    assert!(text.contains("\"displayTimeUnit\":\"ms\""), "{}", &text[..200.min(text.len())]);
+}
