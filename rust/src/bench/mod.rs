@@ -5,6 +5,7 @@
 //! `cargo bench` binaries and the `turbomind bench` CLI subcommand both
 //! dispatch through [`registry`].
 
+pub mod disagg;
 pub mod hotpath;
 pub mod kernel_figures;
 pub mod serving_figures;
@@ -34,6 +35,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("preempt", serving_figures::fig_preempt),
         ("router", serving_figures::fig_router),
         ("ladder", serving_figures::fig_ladder),
+        ("disagg", disagg::fig_disagg),
         ("hotpath", hotpath::fig_hotpath),
     ]
 }

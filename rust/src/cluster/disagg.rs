@@ -1,0 +1,704 @@
+//! Disaggregated prefill/decode serving with layout-tagged KV migration
+//! (DESIGN.md §13).
+//!
+//! The monolithic fleet ([`super::run_fleet`]) interleaves prefill and
+//! decode on every replica, so compute-bound prompt chunks steal
+//! iterations from latency-sensitive decode steps. This module splits the
+//! fleet into two tiers instead:
+//!
+//! * a **prefill tier** runs each prompt to its *first* sampled token
+//!   ([`Engine::submit_prefill_only`]) and exports the sequence's KV as a
+//!   byte-exact, layout-tagged [`SeqSnapshot`];
+//! * a **decode tier** imports that snapshot — transcoded host-side to
+//!   the destination replica's per-layer layout — and continues the
+//!   generation ([`Engine::submit_migrated`]).
+//!
+//! Routing is two-stage. Prefill placement uses the ordinary router
+//! policies (round-robin / least-loaded / prefix-affinity — affinity
+//! matters *here*, where the prompt blocks live). Decode placement runs
+//! at migration time over the replicas whose layout the snapshot can
+//! reach by a downward transcode, minimizing `(outstanding tokens,
+//! modeled import bytes)` — so among equally loaded replicas the cheapest
+//! wire format wins. When no decode layout is reachable (the prefill tier
+//! admitted at a *narrower* rung than some decode pool) the request
+//! migrates without KV and re-prefills at the destination, which is
+//! slower but bit-identical.
+//!
+//! Migration cost rides the existing PCIe model, one hop per end: the
+//! prefill engine charges `transfer_time_s(source-layout bytes)` at
+//! export (`MigrateOut`), the decode engine charges the target-layout
+//! bytes at import (`MigrateIn`); the host-side transcode between hops is
+//! treated as free. Composed end-to-end modeled latency is therefore
+//! `prefill.latency_sim + out-hop + decode.latency_sim` (the in-hop is
+//! already inside the decode engine's clock).
+//!
+//! **Determinism contract.** Sampling is greedy and the KV codecs are
+//! bit-exact, so a request prefillled at one KV layout and decoded at
+//! another produces exactly the tokens of a monolithic run at the
+//! *decode* layout, provided both tiers serve the same weight/activation
+//! format. The randomized harness (`tests/integration_disagg.rs`)
+//! asserts this token-for-token.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::replica::{request_cost, ReplicaSpec};
+use super::router::{argmin_by, LoadView, Router, RouterPolicy};
+use super::stats::{merge_telemetry, ReplicaSnapshot};
+use crate::config::EngineConfig;
+use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use crate::kvcache::swap::{snapshot_bytes, transfer_time_s};
+use crate::kvcache::{KvLayout, SeqSnapshot};
+use crate::metrics::MetricsCollector;
+use crate::trace::TraceDump;
+
+/// Configuration of a disaggregated deployment: one base engine config
+/// both tiers inherit, plus per-tier replica specs.
+#[derive(Debug, Clone)]
+pub struct DisaggConfig {
+    pub base: EngineConfig,
+    /// Prefill-tier replicas (prompt processing + first token).
+    pub prefill_specs: Vec<ReplicaSpec>,
+    /// Decode-tier replicas (token generation on imported KV).
+    pub decode_specs: Vec<ReplicaSpec>,
+    /// Prefill placement policy (decode placement is always the
+    /// load/bytes argmin described in the module docs).
+    pub policy: RouterPolicy,
+    /// Prompt blocks the `prefix_affinity` hash covers.
+    pub affinity_blocks: usize,
+}
+
+impl DisaggConfig {
+    pub fn new(
+        base: EngineConfig,
+        prefill_specs: Vec<ReplicaSpec>,
+        decode_specs: Vec<ReplicaSpec>,
+        policy: RouterPolicy,
+    ) -> Self {
+        Self { base, prefill_specs, decode_specs, policy, affinity_blocks: 4 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.prefill_specs.is_empty() {
+            bail!("disaggregated fleet needs at least one prefill replica");
+        }
+        if self.decode_specs.is_empty() {
+            bail!("disaggregated fleet needs at least one decode replica");
+        }
+        if self.affinity_blocks == 0 {
+            bail!("affinity_blocks must be > 0");
+        }
+        for (i, s) in self.prefill_specs.iter().enumerate() {
+            s.engine_config(&self.base)
+                .validate()
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("prefill replica {i} config"))?;
+        }
+        for (i, s) in self.decode_specs.iter().enumerate() {
+            s.engine_config(&self.base)
+                .validate()
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("decode replica {i} config"))?;
+        }
+        Ok(())
+    }
+}
+
+/// One request's end-to-end outcome through the two tiers.
+#[derive(Debug, Clone)]
+pub struct DisaggOutput {
+    /// Index into the submitted request slice.
+    pub request: usize,
+    /// Prefill-tier replica that ran the prompt.
+    pub prefill_replica: usize,
+    /// Decode-tier replica that finished the generation; `None` when the
+    /// request terminated at the prefill tier (aborted, stop token on the
+    /// first sample, or a 1-token budget).
+    pub decode_replica: Option<usize>,
+    /// KV bytes imported at the decode layout (0 on a recompute
+    /// migration, i.e. no reachable decode layout).
+    pub migrated_bytes: usize,
+    /// Modeled out-hop transfer time charged between the tiers.
+    pub migrate_s: f64,
+    /// Composed end-to-end output (tokens from the decode tier; TTFT from
+    /// the prefill tier; modeled latency spans both plus the migration).
+    pub output: RequestOutput,
+}
+
+/// Result of [`run_disagg`].
+#[derive(Debug)]
+pub struct DisaggRun {
+    /// Prefill-tier assignment per request.
+    pub prefill_assignments: Vec<usize>,
+    pub outputs: Vec<DisaggOutput>,
+    pub prefill_snapshots: Vec<ReplicaSnapshot>,
+    pub decode_snapshots: Vec<ReplicaSnapshot>,
+    /// Requests that crossed tiers with their KV snapshot.
+    pub migrated: usize,
+    /// Requests that crossed tiers without KV (re-prefilled at the
+    /// destination because no decode layout was transcode-reachable).
+    pub recompute_migrations: usize,
+    /// Total KV bytes imported by the decode tier.
+    pub migrated_bytes: usize,
+    /// Per-tier `(label, flight-recorder dump)` — prefill replicas first,
+    /// then decode replicas; empty dumps when tracing is off.
+    pub traces: Vec<(String, TraceDump)>,
+}
+
+impl DisaggRun {
+    /// Requests that finished without aborting.
+    pub fn completed(&self) -> usize {
+        self.outputs.iter().filter(|o| o.output.finish != FinishReason::Aborted).count()
+    }
+
+    /// Fleet telemetry merged over both tiers.
+    pub fn fleet_telemetry(&self) -> crate::metrics::TelemetrySummary {
+        merge_telemetry(self.prefill_snapshots.iter().chain(&self.decode_snapshots))
+    }
+
+    /// Per-request modeled completion metrics (successes only, matching
+    /// [`super::FleetRun::sim_metrics`]).
+    pub fn sim_metrics(&self) -> MetricsCollector {
+        let mut m = MetricsCollector::new();
+        for o in &self.outputs {
+            if o.output.finish == FinishReason::Aborted {
+                continue;
+            }
+            m.record(
+                o.output.latency_sim,
+                o.output.ttft_sim,
+                o.output.latency_sim,
+                o.output.prompt_len,
+                o.output.tokens.len(),
+            );
+        }
+        m
+    }
+
+    /// Chrome-trace tracks over the per-replica dumps — prefill tracks
+    /// first, then decode tracks, matching `traces` order.
+    pub fn trace_tracks(&self) -> Vec<crate::trace::TraceTrack<'_>> {
+        self.traces
+            .iter()
+            .enumerate()
+            .map(|(i, (label, dump))| crate::trace::TraceTrack {
+                tid: i,
+                label: label.clone(),
+                dump,
+            })
+            .collect()
+    }
+
+    /// Modeled fleet makespan: the tiers run as a pipeline with a barrier
+    /// in this offline runner, so the bound is slowest-prefill +
+    /// slowest-decode.
+    pub fn sim_makespan_s(&self) -> f64 {
+        let p = self.prefill_snapshots.iter().map(|s| s.stats.sim_time_s).fold(0.0, f64::max);
+        let d = self.decode_snapshots.iter().map(|s| s.stats.sim_time_s).fold(0.0, f64::max);
+        p + d
+    }
+
+    /// Generated tokens per modeled fleet second (both tiers' clocks).
+    pub fn sim_token_throughput(&self) -> f64 {
+        let toks: usize = self
+            .prefill_snapshots
+            .iter()
+            .chain(&self.decode_snapshots)
+            .map(|s| s.stats.tokens_generated)
+            .sum();
+        let t = self.sim_makespan_s();
+        if t > 0.0 {
+            toks as f64 / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Modeled wire size of `snap` once transcoded to `target`: the code
+/// payload shrinks with the target rungs while the f32 scale rows ride
+/// along unchanged. Used for decode placement *before* paying for the
+/// transcode itself.
+fn modeled_import_bytes(snap: &SeqSnapshot, target: &KvLayout) -> usize {
+    snap.len * target.token_code_bytes(snap.kv_heads, snap.head_dim) + snap.scales.len() * 4
+}
+
+/// A prefill-tier result waiting for decode placement.
+struct PrefillDone {
+    request: usize,
+    prefill_replica: usize,
+    output: RequestOutput,
+    snapshot: Option<SeqSnapshot>,
+}
+
+/// Deterministic offline disaggregated run, the two-tier analogue of
+/// [`super::run_fleet`]: route the whole request set over the prefill
+/// tier, drive each prefill engine to completion on this thread, then
+/// place every surviving request on a decode replica, ship (and
+/// transcode) its snapshot, and drive the decode engines to completion.
+/// Same `(config, requests)` → byte-identical outputs.
+pub fn run_disagg(cfg: &DisaggConfig, requests: &[Request]) -> Result<DisaggRun> {
+    cfg.validate()?;
+
+    // ---- Stage 1: prefill placement (router policy) ----
+    let np = cfg.prefill_specs.len();
+    let mut router =
+        Router::new(cfg.policy, np, cfg.base.kv_block_tokens, cfg.affinity_blocks);
+    let mut assigned = vec![LoadView::default(); np];
+    let mut prefill_assignments = Vec::with_capacity(requests.len());
+    for req in requests {
+        let i = router.pick(&req.prompt, &assigned);
+        assigned[i].reqs += 1;
+        assigned[i].tokens += request_cost(req);
+        prefill_assignments.push(i);
+    }
+
+    // ---- Stage 2: prefill tier to completion, collecting exports ----
+    let mut outputs: Vec<DisaggOutput> = Vec::with_capacity(requests.len());
+    let mut pending: Vec<PrefillDone> = Vec::new();
+    let mut prefill_snapshots = Vec::with_capacity(np);
+    let mut traces = Vec::with_capacity(np + cfg.decode_specs.len());
+    for i in 0..np {
+        let mut engine = Engine::new(cfg.prefill_specs[i].engine_config(&cfg.base))
+            .with_context(|| format!("prefill replica {i}"))?;
+        let mine: Vec<usize> =
+            (0..requests.len()).filter(|&g| prefill_assignments[g] == i).collect();
+        let mut id_to_global = HashMap::new();
+        for &g in &mine {
+            match engine.submit_prefill_only(requests[g].clone()) {
+                Ok(id) => {
+                    id_to_global.insert(id, g);
+                }
+                Err(e) => outputs.push(DisaggOutput {
+                    request: g,
+                    prefill_replica: i,
+                    decode_replica: None,
+                    migrated_bytes: 0,
+                    migrate_s: 0.0,
+                    output: RequestOutput::rejected(e.to_string()),
+                }),
+            }
+        }
+        let outs = engine.run_to_completion()?;
+        let mut exports: HashMap<u64, SeqSnapshot> =
+            engine.take_migration_exports().into_iter().collect();
+        for out in outs {
+            let g = id_to_global[&out.id];
+            let snapshot = exports.remove(&out.id);
+            // Terminal at the prefill tier: aborted, stopped on the first
+            // sample, or the request only ever wanted one token. The
+            // prefill output *is* the final answer (its export, if any,
+            // is discarded — the prefill node always ships at finish).
+            let done_here = out.finish == FinishReason::Aborted
+                || out.finish == FinishReason::Stop
+                || requests[g].max_new_tokens <= 1;
+            if done_here {
+                outputs.push(DisaggOutput {
+                    request: g,
+                    prefill_replica: i,
+                    decode_replica: None,
+                    migrated_bytes: 0,
+                    migrate_s: 0.0,
+                    output: out,
+                });
+            } else {
+                pending.push(PrefillDone { request: g, prefill_replica: i, output: out, snapshot });
+            }
+        }
+        prefill_snapshots.push(ReplicaSnapshot::of(
+            i,
+            &format!("prefill:{}", cfg.prefill_specs[i].label()),
+            &engine,
+            mine.len(),
+            0,
+            0,
+        ));
+        traces.push((format!("prefill:{}", cfg.prefill_specs[i].label()), engine.trace_dump()));
+    }
+    // Decode placement must not depend on prefill replica completion
+    // order: process migrations in request order.
+    pending.sort_by_key(|p| p.request);
+
+    // ---- Stage 3: decode placement + migration ----
+    let nd = cfg.decode_specs.len();
+    let mut decode_engines = Vec::with_capacity(nd);
+    for j in 0..nd {
+        decode_engines.push(
+            Engine::new(cfg.decode_specs[j].engine_config(&cfg.base))
+                .with_context(|| format!("decode replica {j}"))?,
+        );
+    }
+    let decode_layouts: Vec<KvLayout> =
+        decode_engines.iter().map(|e| e.kv_pool().layout().clone()).collect();
+    let mut decode_assigned = vec![LoadView::default(); nd];
+    // Per decode replica: (global request, generated-so-far, transcoded
+    // snapshot, out-hop seconds).
+    let mut shipments: Vec<Vec<(usize, Vec<i32>, Option<SeqSnapshot>, f64)>> =
+        vec![Vec::new(); nd];
+    let mut migrated = 0usize;
+    let mut recompute_migrations = 0usize;
+    let mut migrated_bytes = 0usize;
+    let mut prefill_half: HashMap<usize, (usize, RequestOutput)> = HashMap::new();
+    for p in pending {
+        let reachable: Vec<usize> = (0..nd)
+            .filter(|&j| {
+                p.snapshot.as_ref().is_some_and(|s| s.layout.can_transcode_to(&decode_layouts[j]))
+            })
+            .collect();
+        let (j, shipped) = if reachable.is_empty() {
+            // No decode layout is a downward transcode of the prefill
+            // layout (or the prefill tier exported nothing): migrate the
+            // tokens alone and re-prefill at the destination.
+            let j = argmin_by(&decode_assigned, |l| l.tokens);
+            (j, None)
+        } else {
+            // Load first, wire bytes second: among equally loaded
+            // replicas the cheapest import format wins (deterministic,
+            // lowest replica index on full ties).
+            let k = argmin_by(&reachable, |&j| {
+                let snap = p.snapshot.as_ref().expect("reachable implies snapshot");
+                (decode_assigned[j].tokens, modeled_import_bytes(snap, &decode_layouts[j]))
+            });
+            (reachable[k], p.snapshot)
+        };
+        let cost = request_cost(&requests[p.request]);
+        decode_assigned[j].reqs += 1;
+        decode_assigned[j].tokens += cost;
+        let (snap, out_hop) = match shipped {
+            Some(s) => {
+                // Out-hop at the *source* layout (what left the prefill
+                // device); transcode happens host-side between hops.
+                let dt = transfer_time_s(snapshot_bytes(&s));
+                let t = s.transcode_to(&decode_layouts[j]).with_context(|| {
+                    format!("transcoding request {} for decode replica {j}", p.request)
+                })?;
+                migrated += 1;
+                migrated_bytes += snapshot_bytes(&t);
+                (Some(t), dt)
+            }
+            None => {
+                recompute_migrations += 1;
+                (None, 0.0)
+            }
+        };
+        shipments[j].push((p.request, p.output.tokens.clone(), snap, out_hop));
+        prefill_half.insert(p.request, (p.prefill_replica, p.output));
+    }
+
+    // ---- Stage 4: decode tier to completion, composing outputs ----
+    let mut decode_snapshots = Vec::with_capacity(nd);
+    for (j, mut engine) in decode_engines.into_iter().enumerate() {
+        let mut id_to_global = HashMap::new();
+        let mut hops = HashMap::new();
+        let n_mine = shipments[j].len();
+        for (g, generated, snap, out_hop) in shipments[j].drain(..) {
+            let imported = snap.as_ref().map(snapshot_bytes).unwrap_or(0);
+            match engine.submit_migrated(requests[g].clone(), generated, snap) {
+                Ok(id) => {
+                    id_to_global.insert(id, g);
+                    hops.insert(g, (out_hop, imported));
+                }
+                Err(e) => {
+                    let (pr, _) = prefill_half.remove(&g).expect("prefill half recorded");
+                    outputs.push(DisaggOutput {
+                        request: g,
+                        prefill_replica: pr,
+                        decode_replica: Some(j),
+                        migrated_bytes: 0,
+                        migrate_s: 0.0,
+                        output: RequestOutput::rejected(e.to_string()),
+                    });
+                }
+            }
+        }
+        for out in engine.run_to_completion()? {
+            let g = id_to_global[&out.id];
+            let (pr, phalf) = prefill_half.remove(&g).expect("prefill half recorded");
+            let (out_hop, imported) = hops[&g];
+            outputs.push(DisaggOutput {
+                request: g,
+                prefill_replica: pr,
+                decode_replica: Some(j),
+                migrated_bytes: imported,
+                migrate_s: out_hop,
+                output: compose_output(&phalf, out, out_hop),
+            });
+        }
+        decode_snapshots.push(ReplicaSnapshot::of(
+            j,
+            &format!("decode:{}", cfg.decode_specs[j].label()),
+            &engine,
+            n_mine,
+            0,
+            0,
+        ));
+        traces.push((format!("decode:{}", cfg.decode_specs[j].label()), engine.trace_dump()));
+    }
+    if !prefill_half.is_empty() {
+        bail!("{} migrated request(s) were never answered by the decode tier", prefill_half.len());
+    }
+
+    outputs.sort_by_key(|o| o.request);
+    Ok(DisaggRun {
+        prefill_assignments,
+        outputs,
+        prefill_snapshots,
+        decode_snapshots,
+        migrated,
+        recompute_migrations,
+        migrated_bytes,
+        traces,
+    })
+}
+
+/// Stitch the two halves into one end-to-end answer. Tokens come from the
+/// decode half (its generation was seeded with the prefill tier's first
+/// token, so it already carries the full stream); TTFT comes from the
+/// prefill half (the first token was produced there); modeled latency
+/// chains both clocks plus the out-hop (the in-hop is inside the decode
+/// engine's clock, charged at import before the first decode step).
+fn compose_output(prefill: &RequestOutput, decode: RequestOutput, out_hop_s: f64) -> RequestOutput {
+    RequestOutput {
+        id: decode.id,
+        tokens: decode.tokens,
+        finish: decode.finish,
+        ttft: prefill.ttft,
+        latency: prefill.latency + decode.latency,
+        ttft_sim: prefill.ttft_sim,
+        latency_sim: prefill.latency_sim + out_hop_s + decode.latency_sim,
+        prompt_len: prefill.prompt_len,
+        prefix_hit_tokens: prefill.prefix_hit_tokens + decode.prefix_hit_tokens,
+        preempt_count: prefill.preempt_count + decode.preempt_count,
+        swapped_in_blocks: prefill.swapped_in_blocks + decode.swapped_in_blocks,
+        ladder_count: prefill.ladder_count + decode.ladder_count,
+        final_kv_layout: decode.final_kv_layout,
+        abort_reason: decode.abort_reason,
+    }
+}
+
+/// Drain `source` for retirement and resume everything on `target`: the
+/// replica-drain protocol is the migration primitive pointed the other
+/// way. Decoding sequences ship their KV (transcoded to the target's
+/// layout when reachable, dropped to a re-prefill otherwise); queued and
+/// mid-prefill sequences restart. Returns how many requests moved; the
+/// source engine is left empty (`has_work() == false`, pool drained).
+pub fn migrate_all(source: &mut Engine, target: &mut Engine) -> Result<usize> {
+    let target_layout = target.kv_pool().layout().clone();
+    let mut moved = 0;
+    for a in source.drain_resumables()? {
+        let snap = match a.snapshot {
+            Some(s) if s.layout.can_transcode_to(&target_layout) => {
+                Some(s.transcode_to(&target_layout)?)
+            }
+            _ => None,
+        };
+        target
+            .submit_migrated(a.request, a.generated, snap)
+            .with_context(|| format!("resuming drained request {}", a.source_id))?;
+        moved += 1;
+    }
+    Ok(moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn base() -> EngineConfig {
+        EngineConfig {
+            kv_pool_tokens: 16 * 64,
+            prefill_chunk: 32,
+            ..EngineConfig::default()
+        }
+    }
+
+    fn spec(s: &str) -> ReplicaSpec {
+        s.parse().unwrap()
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n).map(|i| Request::new(vec![(i * 37 % 1024) as i32 + 1; 20 + i % 7], 6)).collect()
+    }
+
+    #[test]
+    fn config_validation() {
+        let cfg = DisaggConfig::new(
+            base(),
+            vec![spec("w4a16,kv16,a100")],
+            vec![spec("w4a16,kv8,a100")],
+            RouterPolicy::RoundRobin,
+        );
+        cfg.validate().unwrap();
+        let mut bad = cfg.clone();
+        bad.prefill_specs.clear();
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.decode_specs.clear();
+        assert!(bad.validate().is_err());
+        let mut bad = cfg;
+        bad.decode_specs[0].device = "B200".into();
+        assert!(bad.validate().is_err(), "per-replica config errors surface");
+    }
+
+    #[test]
+    fn disagg_matches_monolithic_at_decode_layout() {
+        // Prefill at kv16, decode at kv8; same W/A format everywhere. The
+        // determinism contract says the composed tokens equal a
+        // single-replica monolithic run at the *decode* layout.
+        let cfg = DisaggConfig::new(
+            base(),
+            vec![spec("w4a16,kv16,a100"), spec("w4a16,kv16,a100")],
+            vec![spec("w4a16,kv8,a100")],
+            RouterPolicy::RoundRobin,
+        );
+        let rs = reqs(8);
+        let run = run_disagg(&cfg, &rs).unwrap();
+        assert_eq!(run.outputs.len(), rs.len(), "every request answered exactly once");
+        assert_eq!(run.completed(), rs.len());
+        assert_eq!(run.migrated, rs.len(), "kv16→kv8 is transcode-reachable");
+        assert_eq!(run.recompute_migrations, 0);
+        assert!(run.migrated_bytes > 0);
+
+        let mono =
+            ClusterConfig::heterogeneous(base(), vec![spec("w4a16,kv8,a100")], cfg.policy);
+        let fleet = crate::cluster::run_fleet(&mono, &rs).unwrap();
+        for (d, m) in run.outputs.iter().zip(&fleet.outputs) {
+            assert_eq!(d.request, m.request);
+            assert_eq!(
+                d.output.tokens, m.output.tokens,
+                "request {} diverged from the monolithic decode-layout run",
+                d.request
+            );
+            assert_eq!(d.output.finish, m.output.finish);
+        }
+        // Modeled latency chains prefill + hop + decode, and TTFT is the
+        // prefill tier's.
+        for d in &run.outputs {
+            assert!(d.decode_replica.is_some());
+            assert!(d.migrate_s > 0.0);
+            assert!(d.output.latency_sim > d.output.ttft_sim);
+        }
+        // Byte accounting flowed into fleet telemetry from both ends.
+        let t = run.fleet_telemetry();
+        assert!(t.migrate_pcie_bytes() > 0, "migration traffic attributed");
+    }
+
+    #[test]
+    fn run_disagg_is_deterministic() {
+        let cfg = DisaggConfig::new(
+            base(),
+            vec![spec("w4a16,kv16,a100")],
+            vec![spec("w4a16,kv8,a100"), spec("w4a16,kv4,h100")],
+            RouterPolicy::LeastLoaded,
+        );
+        let rs = reqs(10);
+        let a = run_disagg(&cfg, &rs).unwrap();
+        let b = run_disagg(&cfg, &rs).unwrap();
+        assert_eq!(a.prefill_assignments, b.prefill_assignments);
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        for (x, y) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(x.decode_replica, y.decode_replica, "replayable placement");
+            assert_eq!(x.output.tokens, y.output.tokens, "replayable outputs");
+            assert_eq!(x.output.latency_sim, y.output.latency_sim, "replayable timing");
+        }
+        // Both decode replicas actually served (least-loaded spreads).
+        let used: std::collections::HashSet<_> =
+            a.outputs.iter().filter_map(|o| o.decode_replica).collect();
+        assert_eq!(used.len(), 2);
+    }
+
+    #[test]
+    fn unreachable_decode_layout_falls_back_to_recompute() {
+        // Prefill at kv4 cannot transcode *up* to a kv16 decode pool: the
+        // request must still complete, via token-only migration.
+        let cfg = DisaggConfig::new(
+            base(),
+            vec![spec("w4a16,kv4,a100")],
+            vec![spec("w4a16,kv16,a100")],
+            RouterPolicy::RoundRobin,
+        );
+        let rs = reqs(4);
+        let run = run_disagg(&cfg, &rs).unwrap();
+        assert_eq!(run.completed(), rs.len(), "no request lost to an unreachable layout");
+        assert_eq!(run.migrated, 0);
+        assert_eq!(run.recompute_migrations, rs.len());
+        assert_eq!(run.migrated_bytes, 0);
+        // Recompute migration is still bit-identical to the monolithic
+        // decode-layout run.
+        let mono =
+            ClusterConfig::heterogeneous(base(), vec![spec("w4a16,kv16,a100")], cfg.policy);
+        let fleet = crate::cluster::run_fleet(&mono, &rs).unwrap();
+        for (d, m) in run.outputs.iter().zip(&fleet.outputs) {
+            assert_eq!(d.output.tokens, m.output.tokens);
+        }
+    }
+
+    #[test]
+    fn terminal_prefill_requests_never_cross_tiers() {
+        let mut rs = reqs(3);
+        rs[1].max_new_tokens = 1; // done at the prefill tier by budget
+        let cfg = DisaggConfig::new(
+            base(),
+            vec![spec("w4a16,kv16,a100")],
+            vec![spec("w4a16,kv8,a100")],
+            RouterPolicy::RoundRobin,
+        );
+        let run = run_disagg(&cfg, &rs).unwrap();
+        assert_eq!(run.outputs.len(), 3);
+        let one = &run.outputs[1];
+        assert_eq!(one.decode_replica, None, "1-token request finished at prefill");
+        assert_eq!(one.output.tokens.len(), 1);
+        assert_eq!(run.migrated, 2);
+    }
+
+    #[test]
+    fn migrate_all_drains_and_resumes_bit_identically() {
+        // Run A to the middle of its generations, drain it into B (same
+        // layout), and check the combined answers equal a full run on B.
+        let mk = || Engine::new(spec("w4a16,kv8,a100").engine_config(&base())).unwrap();
+        // Long generations so a handful of steps leaves everything
+        // mid-decode — the drain must catch live KV, not finished work.
+        let rs: Vec<Request> =
+            (0..5).map(|i| Request::new(vec![(i * 37 % 1024) as i32 + 1; 20 + i], 16)).collect();
+
+        let mut reference = mk();
+        let mut want = HashMap::new();
+        for r in &rs {
+            reference.submit(r.clone()).unwrap();
+        }
+        for out in reference.run_to_completion().unwrap() {
+            want.insert(out.prompt_len, out.tokens);
+        }
+
+        let mut a = mk();
+        for r in &rs {
+            a.submit(r.clone()).unwrap();
+        }
+        for _ in 0..6 {
+            if a.has_work() {
+                a.step().unwrap();
+            }
+        }
+        let mut done: Vec<RequestOutput> = a.take_outputs();
+        let mut b = mk();
+        let moved = migrate_all(&mut a, &mut b).unwrap();
+        assert!(!a.has_work(), "source drained");
+        assert_eq!(a.kv_pool().used_blocks(), 0, "source pool released everything");
+        assert!(a.swap_store().is_empty());
+        assert_eq!(done.len() + moved, rs.len(), "every request finished or moved");
+        done.extend(b.run_to_completion().unwrap());
+        assert_eq!(done.len(), rs.len());
+        for out in &done {
+            assert_eq!(
+                Some(&out.tokens),
+                want.get(&out.prompt_len),
+                "drained request diverged after resume"
+            );
+        }
+        // A drain is placement, not pressure.
+        assert_eq!(a.preemption_summary().preemptions, 0);
+        assert!(b.migration_stats.migrated_in >= 1, "decoding residents shipped KV");
+    }
+}

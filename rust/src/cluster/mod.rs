@@ -19,7 +19,10 @@
 //! * [`run_fleet`] — the deterministic closed-loop runner (`bench router`,
 //!   determinism tests): routes a whole request set first, then drives
 //!   each replica's engine to completion on the caller's thread, so
-//!   modeled per-request times are replayable bit-for-bit.
+//!   modeled per-request times are replayable bit-for-bit;
+//! * [`run_disagg`] — the disaggregated prefill/decode variant: two
+//!   replica tiers with layout-tagged cross-replica KV migration between
+//!   them (see [`disagg`]).
 //!
 //! Replicas share one `seed`, so a request produces **bit-identical
 //! tokens on any replica serving the same precision** — routing is purely
@@ -28,6 +31,7 @@
 //! different tokens, exactly like the paper's per-format accuracy story).
 
 pub mod accounting;
+pub mod disagg;
 pub mod replica;
 pub mod router;
 pub mod stats;
@@ -39,6 +43,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 pub use accounting::ReplicaRecorder;
+pub use disagg::{migrate_all, run_disagg, DisaggConfig, DisaggOutput, DisaggRun};
 pub use replica::{request_cost, ReplicaHandle, ReplicaLoad, ReplicaSpec, ToReplica};
 pub use router::{LoadView, Router, RouterPolicy};
 pub use stats::{merge_prefix, merge_telemetry, ClusterStats, ReplicaSnapshot};

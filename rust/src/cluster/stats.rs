@@ -106,6 +106,22 @@ impl ReplicaSnapshot {
             ("prefix_cache_hit_rate", Json::from(p.hit_rate())),
             ("prefill_tokens_skipped", Json::from(p.prefill_tokens_skipped)),
             ("tokens_generated", Json::from(self.stats.tokens_generated)),
+            // Host swap-store occupancy, unconditionally: `used` is
+            // meaningful whether or not a budget bounds it; utilization
+            // is `null` when unbounded (no denominator — a fake 0 would
+            // hide host pressure).
+            ("swap_blocks_used", Json::from(self.swap_blocks_used)),
+            ("swap_budget_blocks", Json::from(self.swap_budget_blocks)),
+            (
+                "swap_utilization",
+                if self.swap_budget_blocks == 0 {
+                    Json::Null
+                } else {
+                    Json::from(
+                        self.swap_blocks_used as f64 / self.swap_budget_blocks as f64,
+                    )
+                },
+            ),
             ("preemptions", Json::from(self.preempt.preemptions)),
             ("ladder_events", Json::from(self.preempt.ladder_events)),
             ("ladder_preemptions", Json::from(self.preempt.ladder_preemptions)),
@@ -350,6 +366,11 @@ mod tests {
         // Default engine: uniform kv8 admission layout, no ladder events.
         assert_eq!(r0.req_str("kv_layout").unwrap(), "kv8");
         assert_eq!(r0.req_usize("ladder_events").unwrap(), 0);
+        // Swap occupancy rides every replica row; utilization is null for
+        // the default unbounded budget rather than a fake 0.
+        assert_eq!(r0.req_usize("swap_blocks_used").unwrap(), 0);
+        assert_eq!(r0.req_usize("swap_budget_blocks").unwrap(), 0);
+        assert_eq!(r0.get("swap_utilization"), Some(&Json::Null));
         assert_eq!(parsed.req_usize("fleet_ladder_events").unwrap(), 0);
         assert_eq!(parsed.req_usize("fleet_ladder_freed_bytes").unwrap(), 0);
         // Satellite telemetry fields round-trip at both tiers.

@@ -76,6 +76,15 @@ pub struct EngineStats {
     /// Swap-preemption PCIe bytes (out + in, codes + scales), split per
     /// rung of the layout the snapshot was exported at.
     pub swap_pcie_bytes_by_rung: [usize; 3],
+    /// Cross-replica migration PCIe bytes (snapshot export + import,
+    /// codes + scales), split per rung of the snapshot's recorded layout.
+    /// Deliberately separate from `swap_pcie_bytes_by_rung` so the
+    /// swap-event ↔ counter reconciliation stays exact under
+    /// disaggregated serving.
+    pub migrate_pcie_bytes_by_rung: [usize; 3],
+    /// Iterations spent importing a migrated snapshot (not `prefill_iters`,
+    /// not `swap_in_iters`).
+    pub migrate_in_iters: usize,
     /// Modeled device time accumulated by the backend (sim backend only;
     /// the PJRT path is wall-clock-timed by callers instead), plus modeled
     /// PCIe time for swap-preemption transfers.
@@ -116,6 +125,47 @@ pub struct PreemptStats {
     pub oom_aborts: usize,
 }
 
+/// Cross-replica KV-migration counters (disaggregated prefill/decode and
+/// replica drain — DESIGN.md §13). Kept apart from [`PreemptStats`] and
+/// [`SwapStats`](crate::kvcache::SwapStats): migration is a *placement*
+/// mechanism, not a preemption, so the invariant
+/// `preemptions == swap + recompute + ladder` must hold across any number
+/// of migrations.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Snapshots exported for another replica (finish-time handoff or
+    /// drain).
+    pub migrated_out: usize,
+    /// Snapshots imported into this replica's pool.
+    pub migrated_in: usize,
+    /// Migrated arrivals whose import could not fit even after eviction;
+    /// they fell back to a full re-prefill (still bit-identical output,
+    /// just paid in compute instead of PCIe).
+    pub migrate_in_downgrades: usize,
+    /// Total snapshot bytes (codes + scales) shipped out.
+    pub migrated_out_bytes: usize,
+    /// Total snapshot bytes (codes + scales) imported.
+    pub migrated_in_bytes: usize,
+}
+
+/// Everything needed to resume one in-flight request on another replica:
+/// the original request, the tokens already generated, and (when the
+/// sequence had live KV) its layout-tagged snapshot. Produced by
+/// [`Engine::drain_resumables`] and consumed by [`Engine::submit_migrated`].
+#[derive(Debug, Clone)]
+pub struct ResumeArtifact {
+    /// The request's id on the *source* replica (ids are per-engine; the
+    /// destination assigns a fresh one).
+    pub source_id: u64,
+    pub request: Request,
+    /// Tokens generated before the drain (empty when it never decoded).
+    pub generated: Vec<i32>,
+    /// Live KV at the source's layout, or `None` when the sequence held
+    /// none (still queued, or mid-prefill — re-prefill is then cheaper
+    /// than shipping a partial cache).
+    pub snapshot: Option<crate::kvcache::SeqSnapshot>,
+}
+
 /// The engine.
 pub struct Engine {
     backend: Box<dyn ExecutionBackend>,
@@ -126,6 +176,11 @@ pub struct Engine {
     /// Host-side store for swap-preempted sequences' KV (DESIGN.md §8).
     swap: SwapStore,
     pub preempt_stats: PreemptStats,
+    /// Cross-replica migration counters (DESIGN.md §13).
+    pub migration_stats: MigrationStats,
+    /// Snapshots exported at finish for `export_on_finish` sequences,
+    /// awaiting pickup by the disaggregation orchestrator.
+    migration_exports: Vec<(u64, crate::kvcache::SeqSnapshot)>,
     cfg: EngineConfig,
     scheduler: Scheduler,
     sampler: Sampler,
@@ -225,6 +280,8 @@ impl Engine {
             prefix,
             swap,
             preempt_stats: PreemptStats::default(),
+            migration_stats: MigrationStats::default(),
+            migration_exports: Vec::new(),
             scheduler: Scheduler::new(cfg.scheduler),
             sampler,
             rng,
@@ -309,6 +366,196 @@ impl Engine {
         Ok(id)
     }
 
+    /// Submit a request to this engine as the *prefill tier* of a
+    /// disaggregated deployment (DESIGN.md §13): run the prompt, sample
+    /// exactly the first token, then export the sequence's KV as a
+    /// layout-tagged snapshot at finish. The snapshot (picked up via
+    /// [`Engine::take_migration_exports`]) plus the first token are what a
+    /// decode replica needs to continue the generation bit-identically.
+    pub fn submit_prefill_only(&mut self, mut req: Request) -> Result<u64> {
+        req.max_new_tokens = 1;
+        let id = self.submit(req)?;
+        // An oversized request already finished (Aborted) inside `submit`
+        // and has no state left — nothing to export for it.
+        if let Some(s) = self.seqs.get_mut(&id) {
+            s.export_on_finish = true;
+        }
+        Ok(id)
+    }
+
+    /// Submit a request migrated from another replica: the original
+    /// request, the tokens it has generated so far, and (usually) its KV
+    /// snapshot — already transcoded to *this* pool's layout. With a
+    /// snapshot the sequence skips prefill entirely and enters decode on
+    /// import; without one (downgraded or drained mid-prefill) it
+    /// re-prefills its resident stream, which is slower but produces the
+    /// same tokens. Returns the engine-local id (ids never migrate).
+    pub fn submit_migrated(
+        &mut self,
+        req: Request,
+        generated: Vec<i32>,
+        snapshot: Option<crate::kvcache::SeqSnapshot>,
+    ) -> Result<u64> {
+        let total = req.prompt.len() + req.max_new_tokens;
+        let m = &self.model;
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if total > m.max_seq_len {
+            bail!("request needs {total} tokens > context {}", m.max_seq_len);
+        }
+        if let Some(&t) = req
+            .prompt
+            .iter()
+            .chain(generated.iter())
+            .find(|&&t| t < 0 || t as usize >= m.vocab_size)
+        {
+            bail!("token {t} outside vocab {}", m.vocab_size);
+        }
+        if !generated.is_empty() {
+            if generated.len() >= req.max_new_tokens {
+                bail!("migrated request has nothing left to decode");
+            }
+            if req.stop_token.is_some_and(|stop| *generated.last().unwrap() == stop) {
+                bail!("migrated request already sampled its stop token");
+            }
+        }
+        if let Some(snap) = &snapshot {
+            if generated.is_empty() {
+                bail!("a migrated snapshot implies a sampled first token, but none was shipped");
+            }
+            // The cache must hold exactly prompt ++ generated[..g-1]: the
+            // last generated token is the pending decode input.
+            let expect = req.prompt.len() + generated.len() - 1;
+            if snap.len != expect {
+                bail!(
+                    "migrated snapshot holds {} tokens, expected {expect} \
+                     (prompt {} + generated {} - 1)",
+                    snap.len,
+                    req.prompt.len(),
+                    generated.len()
+                );
+            }
+            if snap.kv_heads != m.n_kv_heads || snap.head_dim != m.head_dim {
+                bail!(
+                    "migrated snapshot geometry Hkv={} hd={} does not match this model \
+                     (Hkv={} hd={})",
+                    snap.kv_heads,
+                    snap.head_dim,
+                    m.n_kv_heads,
+                    m.head_dim
+                );
+            }
+            // Reject eagerly with the routing-level message; `import_seq`
+            // would also catch this, but only after admission.
+            if snap.fingerprint() != self.pool.layout().fingerprint() {
+                bail!(
+                    "migrated snapshot layout `{}` does not match this replica's `{}` — \
+                     transcode before shipping",
+                    snap.layout,
+                    self.pool.layout()
+                );
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let oversized = self.pool.blocks_for(total) > self.pool.total_blocks();
+        let mut seq = SeqState::new(id, req, Instant::now());
+        seq.submitted_sim_s = self.stats.sim_time_s;
+        seq.generated = generated;
+        seq.rebuild_seq_tokens();
+        seq.migrate_snapshot = snapshot;
+        self.emit(
+            self.stats.sim_time_s,
+            EventKind::Admit {
+                id,
+                prompt_len: seq.prompt.len() as u64,
+                max_new_tokens: seq.max_new_tokens as u64,
+            },
+        );
+        self.seqs.insert(id, seq);
+        if oversized {
+            self.seqs.get_mut(&id).unwrap().abort_reason = Some(format!(
+                "request needs {} KV blocks but the pool holds {}",
+                self.pool.blocks_for(total),
+                self.pool.total_blocks()
+            ));
+            self.finish(id, FinishReason::Aborted);
+            self.stats.aborted += 1;
+        } else {
+            self.waiting.push_back(id);
+        }
+        Ok(id)
+    }
+
+    /// Drain snapshots exported at finish by
+    /// [`Engine::submit_prefill_only`] sequences, keyed by engine-local id.
+    pub fn take_migration_exports(&mut self) -> Vec<(u64, crate::kvcache::SeqSnapshot)> {
+        std::mem::take(&mut self.migration_exports)
+    }
+
+    /// Drain this replica for retirement: stop serving and turn every
+    /// in-flight request — running, queued, swapped-out, or
+    /// pending-import — into a [`ResumeArtifact`] another replica can
+    /// resume via [`Engine::submit_migrated`]. Decoding sequences (live,
+    /// swapped, or pending-import) ship their KV; queued and mid-prefill
+    /// sequences ship none (re-prefill at the destination restarts them
+    /// bit-identically and is cheaper than shipping a partial cache).
+    /// Preemption and swap counters are untouched: a drain is placement,
+    /// not pressure.
+    pub fn drain_resumables(&mut self) -> Result<Vec<ResumeArtifact>> {
+        let ids: Vec<u64> =
+            self.running.drain(..).chain(self.waiting.drain(..)).collect();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let mut s = self.seqs.remove(&id).expect("queued id has state");
+            let snapshot = if let Some(h) = s.handle.take() {
+                let snap = (s.phase == Phase::Decoding)
+                    .then(|| self.pool.export_seq(h))
+                    .transpose()?;
+                self.pool.free_seq(h);
+                snap
+            } else if s.swapped {
+                s.swapped = false;
+                // `evacuate`, not `take`: leaving the store for another
+                // replica is not a swap-in.
+                self.swap.evacuate(id)
+            } else {
+                s.migrate_snapshot.take()
+            };
+            if let Some(snap) = &snapshot {
+                let by_rung = snap.bytes_by_rung();
+                for (acc, b) in self.stats.migrate_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
+                    *acc += b;
+                }
+                let bytes = snapshot_bytes(snap);
+                let dt = transfer_time_s(bytes);
+                self.emit(
+                    self.stats.sim_time_s,
+                    EventKind::MigrateOut {
+                        id,
+                        bytes_by_rung: by_rung.map(|b| b as u64),
+                        dur_s: dt,
+                    },
+                );
+                self.stats.sim_time_s += dt;
+                self.migration_stats.migrated_out += 1;
+                self.migration_stats.migrated_out_bytes += bytes;
+            }
+            out.push(ResumeArtifact {
+                source_id: id,
+                request: Request {
+                    prompt: s.prompt.clone(),
+                    max_new_tokens: s.max_new_tokens,
+                    stop_token: s.stop_token,
+                },
+                generated: s.generated.clone(),
+                snapshot,
+            });
+        }
+        Ok(out)
+    }
+
     /// Whether any work remains.
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty() || !self.running.is_empty()
@@ -369,6 +616,7 @@ impl Engine {
             gather_hbm_bytes_by_rung: self.stats.gather_hbm_bytes_by_rung,
             transcode_bytes_by_rung: self.stats.transcode_bytes_by_rung,
             swap_pcie_bytes_by_rung: self.stats.swap_pcie_bytes_by_rung,
+            migrate_pcie_bytes_by_rung: self.stats.migrate_pcie_bytes_by_rung,
             occupancy_layers_by_rung: self.pool.layout().rung_histogram(),
         }
     }
@@ -454,8 +702,9 @@ impl Engine {
         if let Some(pc) = &self.prefix {
             let mut evictable = pc.evictable_blocks(&self.pool);
             // A swapped-out head restores its blocks instead of adopting
-            // cached ones, so it earns no prefix credit.
-            if !s.swapped {
+            // cached ones, so it earns no prefix credit. A migrated-in
+            // head imports its snapshot the same way.
+            if !s.swapped && s.migrate_snapshot.is_none() {
                 let hit =
                     pc.peek_hit_tokens(&s.seq_tokens, self.prefix_match_cap(s.seq_tokens.len()));
                 need -= hit;
@@ -646,7 +895,11 @@ impl Engine {
         match mech {
             PreemptMechanism::Swap => {
                 let snap = self.pool.export_seq(h)?;
-                let by_rung = self.pool.token_bytes_by_rung().map(|b| b * snap.len);
+                // Attribute per-rung bytes from the snapshot's own recorded
+                // extents, not the pool's *current* per-token split — the
+                // pool may relayout while this snapshot sits host-side, and
+                // the attribution must describe the bytes actually shipped.
+                let by_rung = snap.bytes_by_rung();
                 for (acc, b) in self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
                     *acc += b;
                 }
@@ -870,6 +1123,17 @@ impl Engine {
             self.preempt_stats.ladder_preemptions += 1;
         }
 
+        // Pending migrated-in snapshots were validated against the
+        // pre-rung layout; transcode them along with the pool so their
+        // fingerprint still matches at import time. A ladder rung is
+        // always a downward move, so the transcode is always legal — and
+        // bit-identical to importing first and laddering after.
+        for s in self.seqs.values_mut() {
+            if let Some(snap) = s.migrate_snapshot.take() {
+                s.migrate_snapshot = Some(snap.transcode_to(target)?);
+            }
+        }
+
         let report = self.pool.relayout(target)?;
         for (acc, b) in
             self.stats.transcode_bytes_by_rung.iter_mut().zip(report.transcoded_bytes_by_rung)
@@ -964,7 +1228,10 @@ impl Engine {
         let snap = self.swap.take(id).expect("swapped head has an entry");
         let handle = self.pool.alloc_seq();
         self.pool.import_seq(handle, &snap)?;
-        let by_rung = self.pool.token_bytes_by_rung().map(|b| b * snap.len);
+        // Same rule as swap-out: bytes come from the snapshot's recorded
+        // extents, so Σ per-rung always equals the headline transfer even
+        // if the pool relayouted while the sequence was swapped.
+        let by_rung = snap.bytes_by_rung();
         for (acc, b) in self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
             *acc += b;
         }
@@ -980,6 +1247,58 @@ impl Engine {
         s.handle = Some(handle);
         s.swapped = false;
         s.swapped_in_blocks += restored;
+        s.phase = Phase::Decoding;
+        self.waiting.pop_front();
+        self.running.push(id);
+        Ok(Some(StepReport { action: Action::SwapIn, emitted: vec![], finished: vec![] }))
+    }
+
+    /// Import a migrated-in head-of-queue sequence's snapshot into the
+    /// pool. Returns `Ok(None)` — after downgrading the arrival to a full
+    /// re-prefill — when the pool cannot take the import even after cache
+    /// eviction. The downgrade touches **no** preemption counter
+    /// (migration is placement, not pressure): only
+    /// `MigrationStats::migrate_in_downgrades` records it, so
+    /// `swap_preemptions` can never underflow on this path.
+    fn try_migrate_in(&mut self, id: u64) -> Result<Option<StepReport>> {
+        let tokens =
+            self.seqs[&id].migrate_snapshot.as_ref().expect("caller checked the head").len;
+        let needed = self.pool.blocks_for(tokens);
+        self.make_room(needed);
+        if self.pool.free_blocks() < needed {
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.migrate_snapshot = None;
+            s.rebuild_seq_tokens();
+            s.prefill_pos = 0;
+            s.indexed_blocks = 0;
+            self.migration_stats.migrate_in_downgrades += 1;
+            return Ok(None);
+        }
+        let snap = self
+            .seqs
+            .get_mut(&id)
+            .unwrap()
+            .migrate_snapshot
+            .take()
+            .expect("checked above");
+        let handle = self.pool.alloc_seq();
+        self.pool.import_seq(handle, &snap)?;
+        let by_rung = snap.bytes_by_rung();
+        for (acc, b) in self.stats.migrate_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
+            *acc += b;
+        }
+        let bytes = snapshot_bytes(&snap);
+        let dt = transfer_time_s(bytes);
+        self.emit(
+            self.stats.sim_time_s,
+            EventKind::MigrateIn { id, bytes_by_rung: by_rung.map(|b| b as u64), dur_s: dt },
+        );
+        self.stats.sim_time_s += dt;
+        self.migration_stats.migrated_in += 1;
+        self.migration_stats.migrated_in_bytes += bytes;
+        let s = self.seqs.get_mut(&id).unwrap();
+        debug_assert!(s.decoding_started(), "a migrated snapshot implies a sampled token");
+        s.handle = Some(handle);
         s.phase = Phase::Decoding;
         self.waiting.pop_front();
         self.running.push(id);
@@ -1091,6 +1410,14 @@ impl Engine {
         if self.seqs[&id].swapped {
             if let Some(report) = self.try_swap_in(id)? {
                 self.stats.swap_in_iters += 1;
+                return Ok(report);
+            }
+        }
+        // A migrated-in head imports its shipped snapshot the same way; a
+        // failed import downgrades to the re-prefill below.
+        if self.seqs[&id].migrate_snapshot.is_some() {
+            if let Some(report) = self.try_migrate_in(id)? {
+                self.stats.migrate_in_iters += 1;
                 return Ok(report);
             }
         }
@@ -1430,10 +1757,38 @@ impl Engine {
                 latency_s: sim_now - self.seqs[&id].submitted_sim_s,
             },
         );
-        let s = self.seqs.get_mut(&id).unwrap();
-        if let Some(h) = s.handle.take() {
+        if let Some(h) = self.seqs.get_mut(&id).unwrap().handle.take() {
+            // Disaggregated handoff: a prefill-tier sequence exports its
+            // byte-exact, layout-tagged KV before the blocks are freed, so
+            // a decode replica can import the very cache this one built.
+            // Aborted sequences ship nothing.
+            if self.seqs[&id].export_on_finish && reason != FinishReason::Aborted {
+                let snap = self
+                    .pool
+                    .export_seq(h)
+                    .expect("exporting a finished sequence's live KV");
+                let by_rung = snap.bytes_by_rung();
+                for (acc, b) in self.stats.migrate_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
+                    *acc += b;
+                }
+                let bytes = snapshot_bytes(&snap);
+                let dt = transfer_time_s(bytes);
+                self.emit(
+                    self.stats.sim_time_s,
+                    EventKind::MigrateOut {
+                        id,
+                        bytes_by_rung: by_rung.map(|b| b as u64),
+                        dur_s: dt,
+                    },
+                );
+                self.stats.sim_time_s += dt;
+                self.migration_stats.migrated_out += 1;
+                self.migration_stats.migrated_out_bytes += bytes;
+                self.migration_exports.push((id, snap));
+            }
             self.pool.free_seq(h);
         }
+        let s = self.seqs.get_mut(&id).unwrap();
         s.phase = Phase::Finished(reason);
         let now = Instant::now();
         self.outputs.push(RequestOutput {

@@ -11,7 +11,7 @@ pub mod request;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineStats, PreemptStats, StepReport};
+pub use engine::{Engine, EngineStats, MigrationStats, PreemptStats, ResumeArtifact, StepReport};
 pub use preempt::{PreemptMechanism, VictimCost};
 pub use request::{FinishReason, Phase, Request, RequestOutput};
 pub use sampler::Sampler;

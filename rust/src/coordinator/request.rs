@@ -142,6 +142,15 @@ pub(crate) struct SeqState {
     /// True while this request's KV lives in the host swap store; resume
     /// restores it instead of prefilling.
     pub swapped: bool,
+    /// A layout-tagged KV snapshot shipped in from another replica
+    /// (disaggregated prefill → decode migration), pending import. Like
+    /// `swapped`, admission restores it instead of prefilling — but the
+    /// payload travels with the sequence, not through the swap store,
+    /// so migration never perturbs the swap accounting.
+    pub migrate_snapshot: Option<crate::kvcache::SeqSnapshot>,
+    /// Export this sequence's KV at finish (prefill-tier contract: the
+    /// snapshot plus the first sampled token migrate to a decode replica).
+    pub export_on_finish: bool,
     /// Times preempted (reported in [`RequestOutput::preempt_count`]).
     pub preempt_count: usize,
     /// Blocks restored from the swap store (cumulative).
@@ -174,6 +183,8 @@ impl SeqState {
             indexed_blocks: 0,
             handle: None,
             swapped: false,
+            migrate_snapshot: None,
+            export_on_finish: false,
             preempt_count: 0,
             swapped_in_blocks: 0,
             ladder_count: 0,

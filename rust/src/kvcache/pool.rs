@@ -82,10 +82,18 @@ impl KvPrecision {
 pub struct SeqHandle(pub usize);
 
 /// A byte-exact host-side copy of one sequence's cached KV — what a
-/// swap-out preemption ships across the (modeled) PCIe link. Token slots
-/// are packed densely in sequence order: `codes[t]` is the `len`-token
-/// slice of `token_code_bytes` each, `scales[t]` the matching
-/// `L × 2 × Hkv` scale row.
+/// swap-out preemption ships across the (modeled) PCIe link, and, since
+/// it is layout-tagged, what cross-replica KV migration ships between
+/// pools. Token slots are packed densely in sequence order: `codes[t]` is
+/// the `len`-token slice of `token_code_bytes` each, `scales[t]` the
+/// matching `L × 2 × Hkv` scale row.
+///
+/// The wire format carries the geometry (`kv_heads`, `head_dim`) and the
+/// per-layer precision `layout` the bytes were exported under. Without
+/// the tag, two layouts with equal total `token_code_bytes` (e.g.
+/// `l0:kv16,l1:kv4` vs `l0:kv4,l1:kv16`) are indistinguishable to the
+/// old aggregate-size check and import "successfully" with every
+/// per-layer offset wrong — the latent bug this tag closes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SeqSnapshot {
     /// Tokens captured.
@@ -94,6 +102,12 @@ pub struct SeqSnapshot {
     pub codes: Vec<u8>,
     /// `len × (L × 2 × Hkv)` dequantization scales.
     pub scales: Vec<f32>,
+    /// KV heads per layer of the exporting pool.
+    pub kv_heads: usize,
+    /// Elements per KV row of the exporting pool.
+    pub head_dim: usize,
+    /// Per-layer precision layout the codes were exported under.
+    pub layout: KvLayout,
 }
 
 impl SeqSnapshot {
@@ -101,6 +115,98 @@ impl SeqSnapshot {
     /// the transfer; scales are a fixed f32 overhead on top).
     pub fn code_bytes(&self) -> usize {
         self.codes.len()
+    }
+
+    /// Order-sensitive fingerprint of the export layout — what
+    /// [`KvPool::import_seq`] checks against the target pool before
+    /// touching any bytes.
+    pub fn fingerprint(&self) -> u64 {
+        self.layout.fingerprint()
+    }
+
+    /// Total wire bytes (codes + f32 scales) split per precision rung of
+    /// the *export* layout, indexed by [`KvPrecision::ladder_rank`]. The
+    /// three entries sum to exactly `code_bytes() + scales.len() * 4`, so
+    /// per-rung transfer attribution reconciles with the headline byte
+    /// counters even when the source pool has relayouted since the
+    /// export.
+    pub fn bytes_by_rung(&self) -> [usize; 3] {
+        let mut by = [0usize; 3];
+        for l in 0..self.layout.n_layers() {
+            let p = self.layout.prec(l);
+            by[p.ladder_rank() as usize] +=
+                2 * self.kv_heads * (p.row_bytes(self.head_dim) + 4) * self.len;
+        }
+        by
+    }
+
+    /// Re-encode the snapshot at `target` (a downward ladder move per
+    /// [`KvLayout::can_transcode_to`]) without touching any pool. The
+    /// per-row kernels are the same ones [`KvPool::relayout`] uses, so an
+    /// import of the transcoded snapshot is bit-identical to admitting
+    /// the original rows directly at `target` — the determinism contract
+    /// cross-replica migration depends on.
+    pub fn transcode_to(&self, target: &KvLayout) -> Result<SeqSnapshot> {
+        if !self.layout.can_transcode_to(target) {
+            bail!(
+                "snapshot transcode from `{}` to `{}` is not a downward ladder move",
+                self.layout,
+                target
+            );
+        }
+        if *target == self.layout {
+            return Ok(self.clone());
+        }
+        let hd = self.head_dim;
+        let kv_heads = self.kv_heads;
+        let n_layers = self.layout.n_layers();
+        let old_tcb = self.layout.token_code_bytes(kv_heads, hd);
+        let new_tcb = target.token_code_bytes(kv_heads, hd);
+        let tsc = n_layers * 2 * kv_heads;
+        let mut codes = vec![0u8; self.len * new_tcb];
+        let mut scales = self.scales.clone();
+        for t in 0..self.len {
+            let so = t * old_tcb;
+            let dn = t * new_tcb;
+            let scale_base = t * tsc;
+            for l in 0..n_layers {
+                let (from, to) = (self.layout.prec(l), target.prec(l));
+                let rb_o = from.row_bytes(hd);
+                let rb_n = to.row_bytes(hd);
+                let ob = 2 * kv_heads * self.layout.prefix_row_bytes(l, hd);
+                let nb = 2 * kv_heads * target.prefix_row_bytes(l, hd);
+                for side in 0..2 {
+                    for hh in 0..kv_heads {
+                        let src = so + ob + (side * kv_heads + hh) * rb_o;
+                        let dst = dn + nb + (side * kv_heads + hh) * rb_n;
+                        let sidx = scale_base + (l * 2 + side) * kv_heads + hh;
+                        if from == to {
+                            codes[dst..dst + rb_n]
+                                .copy_from_slice(&self.codes[src..src + rb_o]);
+                            continue;
+                        }
+                        let row = &self.codes[src..src + rb_o];
+                        let out = &mut codes[dst..dst + rb_n];
+                        scales[sidx] = match (from, to) {
+                            (KvPrecision::F32, KvPrecision::Int8) => f32_row_to_int8(row, out),
+                            (KvPrecision::F32, KvPrecision::Int4) => f32_row_to_int4(row, out),
+                            (KvPrecision::Int8, KvPrecision::Int4) => {
+                                int8_row_to_int4(row, self.scales[sidx], out)
+                            }
+                            _ => unreachable!("validated as a downward ladder move"),
+                        };
+                    }
+                }
+            }
+        }
+        Ok(SeqSnapshot {
+            len: self.len,
+            codes,
+            scales,
+            kv_heads,
+            head_dim: hd,
+            layout: target.clone(),
+        })
     }
 }
 
@@ -695,7 +801,14 @@ impl KvPool {
             let sb = (blk * self.block_tokens + slot) * tsc;
             scales[t * tsc..(t + 1) * tsc].copy_from_slice(&self.scales[sb..sb + tsc]);
         }
-        Ok(SeqSnapshot { len: s.len, codes, scales })
+        Ok(SeqSnapshot {
+            len: s.len,
+            codes,
+            scales,
+            kv_heads: self.kv_heads,
+            head_dim: self.head_dim,
+            layout: self.layout.clone(),
+        })
     }
 
     /// Restore a snapshot into an **empty** sequence (swap-in): allocates
@@ -703,6 +816,29 @@ impl KvPool {
     /// byte-exactly. Fails — leaving the sequence empty — if the free list
     /// cannot cover the allocation.
     pub fn import_seq(&mut self, h: SeqHandle, snap: &SeqSnapshot) -> Result<()> {
+        if snap.kv_heads != self.kv_heads || snap.head_dim != self.head_dim {
+            bail!(
+                "import_seq: snapshot geometry mismatch (snapshot Hkv={} head_dim={}, \
+                 pool Hkv={} head_dim={})",
+                snap.kv_heads,
+                snap.head_dim,
+                self.kv_heads,
+                self.head_dim
+            );
+        }
+        // Layout identity, not just aggregate size: two layouts with equal
+        // total token bytes (`l0:kv16,l1:kv4` vs `l0:kv4,l1:kv16`) would
+        // pass the length check below and silently misinterpret every
+        // per-layer offset. The fingerprint is order-sensitive, so only a
+        // true per-layer match imports.
+        if snap.fingerprint() != self.layout.fingerprint() {
+            bail!(
+                "import_seq: snapshot layout `{}` does not match pool layout `{}` \
+                 (transcode the snapshot to the pool layout first)",
+                snap.layout,
+                self.layout
+            );
+        }
         let tcb = self.token_code_bytes();
         let tsc = self.token_scales();
         if snap.codes.len() != snap.len * tcb || snap.scales.len() != snap.len * tsc {
@@ -1150,7 +1286,7 @@ impl RelayoutReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::proptest::run_prop;
+    use crate::util::proptest::{run_prop, Gen};
 
     fn pool(prec: KvPrecision) -> KvPool {
         // 2 layers, 2 kv heads, head_dim 8, 4-token blocks, 32-token pool.
@@ -1653,6 +1789,199 @@ mod tests {
         assert_eq!(p.seq_len(h3), 8);
         // Exporting a freed handle is an error.
         assert!(p.export_seq(h).is_err());
+    }
+
+    #[test]
+    fn import_rejects_layout_and_geometry_mismatch() {
+        // The trap this guards: two layouts with EQUAL total token bytes
+        // but different per-layer assignment. The aggregate-size check
+        // alone cannot tell them apart, and the import would silently
+        // misinterpret every per-layer offset.
+        let a = KvLayout::parse("l0:kv16,l1:kv4", 2).unwrap();
+        let b = KvLayout::parse("l0:kv4,l1:kv16", 2).unwrap();
+        let mut pa = KvPool::with_layout(a, 2, 8, 4, 32).unwrap();
+        let mut pb = KvPool::with_layout(b, 2, 8, 4, 32).unwrap();
+        assert_eq!(pa.token_code_bytes(), pb.token_code_bytes(), "equal aggregate size");
+
+        let ha = pa.alloc_seq();
+        let sum_rb: usize = (0..2).map(|l| pa.row_bytes_at(l)).sum();
+        let k: Vec<u8> = (0..2 * sum_rb).map(|i| i as u8).collect();
+        let s = vec![1.0f32; 4];
+        for _ in 0..4 {
+            pa.append_token(ha, &k, &s, &k, &s).unwrap();
+        }
+        let snap = pa.export_seq(ha).unwrap();
+        assert_eq!(snap.layout, *pa.layout(), "snapshot carries its export layout");
+
+        let hb = pb.alloc_seq();
+        let err = pb.import_seq(hb, &snap).unwrap_err();
+        assert!(err.to_string().contains("layout"), "{err}");
+        assert_eq!(pb.seq_len(hb), 0, "rejected import leaves the target empty");
+        assert_eq!(pb.free_blocks(), pb.total_blocks(), "no blocks leaked");
+
+        // Same layout string, different geometry (head_dim) — also rejected.
+        let c = KvLayout::parse("l0:kv16,l1:kv4", 2).unwrap();
+        let mut pc = KvPool::with_layout(c, 2, 6, 4, 32).unwrap();
+        let hc = pc.alloc_seq();
+        let err = pc.import_seq(hc, &snap).unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_transcode_matches_relayout_then_export() {
+        // snapshot.transcode_to(target) must be indistinguishable from
+        // laddering the pool itself and re-exporting — same kernels, same
+        // walk order, bit-identical codes and scales.
+        let mut p = pool(KvPrecision::F32);
+        let h = p.alloc_seq();
+        let row = |t: usize, l: usize, hh: usize, side: usize| -> Vec<f32> {
+            (0..8)
+                .map(|i| ((t * 89 + l * 31 + hh * 7 + side * 13 + i) % 19) as f32 * 0.47 - 4.0)
+                .collect()
+        };
+        for t in 0..6 {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            for l in 0..2 {
+                for hh in 0..2 {
+                    k.extend(f32_row_bytes(&row(t, l, hh, 0)));
+                    v.extend(f32_row_bytes(&row(t, l, hh, 1)));
+                }
+            }
+            let s = vec![1.0f32; 4];
+            p.append_token(h, &k, &s, &v, &s).unwrap();
+        }
+        let snap16 = p.export_seq(h).unwrap();
+
+        // Identity transcode is a clone.
+        let same = snap16.transcode_to(&snap16.layout.clone()).unwrap();
+        assert_eq!(same, snap16);
+
+        // Downward mixed move; compare against relayout + export.
+        let mid = KvLayout::parse("l0:kv16,l1:kv4", 2).unwrap();
+        let host = snap16.transcode_to(&mid).unwrap();
+        p.relayout(&mid).unwrap();
+        let direct = p.export_seq(h).unwrap();
+        assert_eq!(host, direct, "host-side transcode == pool relayout, bit for bit");
+
+        // Upward transcode is rejected.
+        let wide = KvLayout::parse("kv16", 2).unwrap();
+        assert!(host.transcode_to(&wide).is_err(), "upward move must fail");
+
+        // Per-rung extents reconcile with the headline wire bytes at both
+        // layouts.
+        for s in [&snap16, &host] {
+            let total: usize = s.bytes_by_rung().iter().sum();
+            assert_eq!(total, s.code_bytes() + s.scales.len() * 4);
+        }
+        // And a transitive step (kv16 → mixed → all-kv4) equals the direct
+        // one-hop transcode — the nested-refinement property.
+        let narrow = KvLayout::parse("kv4", 2).unwrap();
+        assert_eq!(
+            host.transcode_to(&narrow).unwrap(),
+            snap16.transcode_to(&narrow).unwrap(),
+            "two-hop transcode == one-hop"
+        );
+    }
+
+    #[test]
+    fn prop_cross_layout_transcode_import_round_trips_bit_exactly() {
+        // Randomized closure of the migration wire contract: random
+        // geometry (odd head_dims included — Int4 rows pack a ragged
+        // tail), random mixed per-layer target layouts across all three
+        // rungs. For source kv16 and any downward pair B ≥ A (rank-wise):
+        //   * two-hop transcode (via B) == one-hop transcode to A;
+        //   * importing the transcoded snapshot into a pool *at* A and
+        //     re-exporting reproduces it byte for byte;
+        //   * per-rung extents always sum to the headline wire bytes;
+        //   * the strictly-upward move A → B is rejected, and a pool at A
+        //     refuses to import a B-layout snapshot outright.
+        run_prop("snapshot-cross-layout", 0x5EED_CAFE, 12, |g: &mut Gen| {
+            let n_layers = g.usize_in(1, 3);
+            let kv_heads = g.usize_in(1, 2);
+            let head_dim = *g.choose(&[5usize, 7, 8, 9]);
+            let keys = ["kv16", "kv8", "kv4"];
+            // Per-layer ranks: A is the narrow destination, B sits between
+            // the kv16 source and A (rank_B <= rank_A layer-wise).
+            let ranks_a: Vec<usize> = (0..n_layers).map(|_| g.usize_in(0, 2)).collect();
+            let ranks_b: Vec<usize> = ranks_a.iter().map(|&r| g.usize_in(0, r)).collect();
+            let spec = |ranks: &[usize]| {
+                ranks
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &r)| format!("l{l}:{}", keys[r]))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            let lay_a = KvLayout::parse(&spec(&ranks_a), n_layers).unwrap();
+            let lay_b = KvLayout::parse(&spec(&ranks_b), n_layers).unwrap();
+
+            // Fill a kv16 pool with deterministic rows and export.
+            let lay16 = KvLayout::parse("kv16", n_layers).unwrap();
+            let mut p16 = KvPool::with_layout(lay16, kv_heads, head_dim, 4, 48).unwrap();
+            let h = p16.alloc_seq();
+            let tag = g.usize_in(0, 999);
+            let tokens = g.usize_in(1, 10);
+            for t in 0..tokens {
+                let mut k = Vec::new();
+                let mut v = Vec::new();
+                for l in 0..n_layers {
+                    for hh in 0..kv_heads {
+                        for side in 0..2 {
+                            let row: Vec<f32> = (0..head_dim)
+                                .map(|i| {
+                                    ((tag + t * 89 + l * 31 + hh * 7 + side * 13 + i) % 19) as f32
+                                        * 0.47
+                                        - 4.0
+                                })
+                                .collect();
+                            if side == 0 {
+                                k.extend(f32_row_bytes(&row));
+                            } else {
+                                v.extend(f32_row_bytes(&row));
+                            }
+                        }
+                    }
+                }
+                let s = vec![1.0f32; n_layers * kv_heads];
+                p16.append_token(h, &k, &s, &v, &s).unwrap();
+            }
+            let snap16 = p16.export_seq(h).unwrap();
+
+            let direct = snap16.transcode_to(&lay_a).unwrap();
+            let via_b = snap16.transcode_to(&lay_b).unwrap().transcode_to(&lay_a).unwrap();
+            assert_eq!(via_b, direct, "two-hop (via {lay_b}) != one-hop to {lay_a}");
+
+            for s in [&snap16, &direct] {
+                assert_eq!(
+                    s.bytes_by_rung().iter().sum::<usize>(),
+                    s.code_bytes() + s.scales.len() * 4,
+                    "per-rung extents must sum to the wire bytes at {}",
+                    s.layout
+                );
+            }
+
+            // Import into a pool admitted at A, export, compare.
+            let mut pa = KvPool::with_layout(lay_a.clone(), kv_heads, head_dim, 4, 48).unwrap();
+            let ha = pa.alloc_seq();
+            pa.import_seq(ha, &direct).unwrap();
+            assert_eq!(pa.export_seq(ha).unwrap(), direct, "import/export round trip at {lay_a}");
+
+            if ranks_b != ranks_a {
+                // Some layer strictly widens: the reverse transcode and the
+                // cross-layout import must both refuse.
+                assert!(
+                    direct.transcode_to(&lay_b).is_err(),
+                    "upward {lay_a} → {lay_b} must fail"
+                );
+                let snap_b = snap16.transcode_to(&lay_b).unwrap();
+                let hb = pa.alloc_seq();
+                assert!(
+                    pa.import_seq(hb, &snap_b).is_err(),
+                    "pool at {lay_a} must reject a {lay_b} snapshot"
+                );
+            }
+        });
     }
 
     #[test]

@@ -91,13 +91,14 @@ impl SwapStore {
         self.entries.is_empty()
     }
 
-    /// Fraction of the budget in use (0 when unbounded or unused).
-    pub fn utilization(&self) -> f64 {
-        if self.budget_blocks == 0 {
-            0.0
-        } else {
-            self.used_blocks as f64 / self.budget_blocks as f64
-        }
+    /// Fraction of the budget in use, or `None` when the budget is
+    /// unbounded — there is no denominator to report against. Callers
+    /// must not coerce `None` to 0: an unbounded store with resident
+    /// blocks is under real host pressure, and the old fake-zero answer
+    /// hid it from the stats JSON. Pair with
+    /// [`used_blocks`](Self::used_blocks), which is meaningful always.
+    pub fn utilization(&self) -> Option<f64> {
+        (self.budget_blocks > 0).then(|| self.used_blocks as f64 / self.budget_blocks as f64)
     }
 
     fn blocks_of(&self, snap: &SeqSnapshot) -> usize {
@@ -152,6 +153,17 @@ impl SwapStore {
         Some(snap)
     }
 
+    /// Remove and return a snapshot for *migration* (replica drain): the
+    /// payload leaves the store but is neither a swap-in nor a drop, so
+    /// only the residency accounting moves. Keeping [`SwapStats`] untouched
+    /// preserves the engine invariant that swap counters reconcile with
+    /// preemption counters even across a drain.
+    pub fn evacuate(&mut self, id: u64) -> Option<SeqSnapshot> {
+        let (snap, blocks) = self.entries.remove(&id)?;
+        self.used_blocks -= blocks;
+        Some(snap)
+    }
+
     /// Discard a snapshot without restoring it (the victim was downgraded
     /// to recompute).
     pub fn drop_entry(&mut self, id: u64) -> bool {
@@ -171,7 +183,19 @@ mod tests {
     use super::*;
 
     fn snap(tokens: usize) -> SeqSnapshot {
-        SeqSnapshot { len: tokens, codes: vec![0xAB; tokens * 3], scales: vec![1.0; tokens] }
+        // 1 layer × 1 head × head_dim 3 at Int8: 2 × 1 × 3 = 6 code bytes
+        // and 2 scales per token.
+        SeqSnapshot {
+            len: tokens,
+            codes: vec![0xAB; tokens * 6],
+            scales: vec![1.0; tokens * 2],
+            kv_heads: 1,
+            head_dim: 3,
+            layout: crate::kvcache::layout::KvLayout::uniform(
+                crate::kvcache::pool::KvPrecision::Int8,
+                1,
+            ),
+        }
     }
 
     #[test]
@@ -180,7 +204,7 @@ mod tests {
         assert!(s.can_hold(16));
         s.insert(1, snap(9)).unwrap(); // 3 blocks
         assert_eq!(s.used_blocks(), 3);
-        assert_eq!(s.utilization(), 0.75);
+        assert_eq!(s.utilization(), Some(0.75));
         assert!(s.can_hold(4));
         assert!(!s.can_hold(5), "two blocks would overflow");
         assert!(s.insert(2, snap(8)).is_err(), "budget enforced");
@@ -204,12 +228,26 @@ mod tests {
         s.insert(7, snap(12)).unwrap();
         assert_eq!(s.tokens_of(7), 12);
         assert!(s.contains(7));
-        assert_eq!(s.utilization(), 0.0, "no budget, no utilization");
+        assert_eq!(s.utilization(), None, "no budget → no fake 0 utilization");
+        assert_eq!(s.used_blocks(), 3, "…but used blocks always report");
         assert!(s.drop_entry(7));
         assert!(!s.drop_entry(7));
         assert!(s.take(7).is_none());
         assert_eq!(s.stats.dropped, 1);
         assert_eq!(s.used_blocks(), 0);
+    }
+
+    #[test]
+    fn evacuate_moves_blocks_without_touching_stats() {
+        let mut s = SwapStore::new(4, 8);
+        s.insert(3, snap(9)).unwrap(); // 3 blocks
+        let before = s.stats;
+        let got = s.evacuate(3).expect("entry present");
+        assert_eq!(got, snap(9), "payload intact for migration");
+        assert_eq!(s.used_blocks(), 0, "residency released");
+        assert!(s.evacuate(3).is_none(), "gone after evacuation");
+        // Neither a swap-in nor a drop: lifetime counters unchanged.
+        assert_eq!(s.stats, before, "drain must not perturb swap stats");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use anyhow::{bail, ensure, Result};
 use turbomind::bench;
-use turbomind::cluster::{self, Cluster, ClusterConfig, ReplicaSpec, RouterPolicy};
+use turbomind::cluster::{self, Cluster, ClusterConfig, DisaggConfig, ReplicaSpec, RouterPolicy};
 use turbomind::config::{
     BackendKind, DeviceProfile, EngineConfig, LadderPolicy, PrecisionFormat, PreemptionMode,
 };
@@ -30,7 +30,7 @@ use turbomind::util::args::Args;
 use turbomind::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["help", "prefix-cache", "trace"]);
+    let args = Args::from_env(&["help", "prefix-cache", "trace", "disagg"]);
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -60,8 +60,10 @@ USAGE:
                   [--queue-depth N] [--affinity-blocks N]
                   [--trace] [--trace-ring N] [--trace-out FILE]
   turbomind run   [--requests N] [--replicas N] [--seed S] [--trace-out FILE]
+                  [--disagg] [--prefill-replicas N] [--decode-replicas N]
+                  [--prefill-spec fmt,kv,device[,…]]... [--decode-spec fmt,kv,device[,…]]...
                   [engine knobs as for serve]
-  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|hotpath|all>
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|disagg|hotpath|all>
                   [--trace-out FILE]
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
@@ -116,6 +118,19 @@ auto laddering, so preempt/ladder/swap events all fire). It reconciles
 per-rung trace byte sums against the engine counters (exact equality),
 validates the Chrome export, and writes it to `--trace-out`. Same seed ⇒
 byte-identical trace file — the determinism contract CI enforces.
+
+`run --disagg` serves the same workload disaggregated (DESIGN.md §13): a
+prefill tier runs each prompt to its first token and exports the KV as a
+layout-tagged snapshot; a decode tier imports it — transcoded host-side
+to the destination's per-layer layout — and finishes the generation.
+Tiers are sized with `--prefill-replicas`/`--decode-replicas` and typed
+with repeatable `--prefill-spec`/`--decode-spec` (serve's replica-spec
+syntax; specs cycle to fill the count). Defaults: one kv16 prefill
+replica, one decode replica at --precision, so migration transcodes
+kv16 → the decode layout. Migration traffic rides the PCIe model, shows
+up as `migrate_out`/`migrate_in` trace events, and reconciles exactly
+against per-replica telemetry. Because sampling is greedy, composed
+outputs are bit-identical to a monolithic run at the decode layout.
 ";
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
@@ -337,7 +352,154 @@ fn traced_fleet_run(args: &Args, trace_out: Option<&str>) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    traced_fleet_run(args, args.get("trace-out"))
+    if args.flag("disagg") {
+        traced_disagg_run(args, args.get("trace-out"))
+    } else {
+        traced_fleet_run(args, args.get("trace-out"))
+    }
+}
+
+/// Build one tier's replica specs: repeatable `--{tier}-spec` flags,
+/// cycled to fill an explicit `--{tier}-replicas N` (same semantics as
+/// serve's `--replica-spec`/`--replicas`); with no specs, one replica of
+/// the base precision/device, optionally with a tier-default KV layout.
+fn tier_specs(
+    args: &Args,
+    base: &EngineConfig,
+    spec_key: &str,
+    count_key: &str,
+    default_layout: Option<&str>,
+) -> Result<Vec<ReplicaSpec>> {
+    let mut specs: Vec<ReplicaSpec> = args
+        .get_all(spec_key)
+        .iter()
+        .map(|s| s.parse().map_err(|e| anyhow::anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+    if specs.is_empty() {
+        specs.push(ReplicaSpec {
+            precision: base.precision,
+            device: base.device.clone(),
+            tp: base.tp,
+            kv_layout: default_layout.map(str::to_string),
+            ladder: None,
+        });
+    }
+    let n = args.get_usize(count_key, 0);
+    let n = if n > 0 { n } else { specs.len() };
+    Ok((0..n).map(|i| specs[i % specs.len()].clone()).collect())
+}
+
+/// `run --disagg`: the disaggregated analogue of [`traced_fleet_run`] —
+/// same deterministic overload workload, but served by a prefill tier
+/// and a decode tier with layout-tagged KV migration between them
+/// (DESIGN.md §13). Reconciles per-rung *migration* byte sums over the
+/// `migrate_out`/`migrate_in` trace events against each replica's
+/// telemetry counter (exact equality), then validates/writes the Chrome
+/// export like `run` does.
+fn traced_disagg_run(args: &Args, trace_out: Option<&str>) -> Result<()> {
+    let mut base = engine_config(args)?;
+    base.trace = true;
+    // Same pressure defaults as `run` — explicit flags always win. The
+    // prefill tier admits wide (kv16) by default so migration into a
+    // narrower decode pool actually transcodes.
+    if args.get("kv-pool-tokens").is_none() {
+        base.kv_pool_tokens = 16 * 64;
+    }
+    if args.get("preemption").is_none() {
+        base.preemption_mode = PreemptionMode::Swap;
+    }
+    let prefill = tier_specs(args, &base, "prefill-spec", "prefill-replicas", Some("kv16"))?;
+    let decode = tier_specs(args, &base, "decode-spec", "decode-replicas", None)?;
+    let policy: RouterPolicy = args
+        .get_or("router-policy", "round_robin")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n_requests = args.get_usize("requests", 24);
+    let seed = args.get_u64("seed", 0);
+    let mut dcfg = DisaggConfig::new(base, prefill, decode, policy);
+    dcfg.affinity_blocks = args.get_usize("affinity-blocks", 4);
+    for (i, s) in dcfg.prefill_specs.iter().enumerate() {
+        eprintln!("prefill replica {i}: {}", s.label());
+    }
+    for (i, s) in dcfg.decode_specs.iter().enumerate() {
+        eprintln!("decode replica {i}: {}", s.label());
+    }
+
+    // The same deterministic synthetic overload `run` drives.
+    let mut rng = Rng::new(seed ^ 0x7ACE_F1EE7);
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|_| {
+            let plen = 24 + (rng.next_u64() % 48) as usize;
+            let gen = 8 + (rng.next_u64() % 24) as usize;
+            let prompt = (0..plen).map(|_| (rng.next_u64() % 512) as i32).collect();
+            Request::new(prompt, gen)
+        })
+        .collect();
+
+    let run = cluster::run_disagg(&dcfg, &reqs)?;
+    eprintln!(
+        "disagg: {}p + {}d replicas | {} requests ({} completed) | \
+         {} migrated ({} recompute) | {} KV bytes shipped | makespan {:.4}s",
+        dcfg.prefill_specs.len(),
+        dcfg.decode_specs.len(),
+        n_requests,
+        run.completed(),
+        run.migrated,
+        run.recompute_migrations,
+        run.migrated_bytes,
+        run.sim_makespan_s()
+    );
+
+    // Migration attribution contract: per-rung byte sums over the
+    // migrate events equal the telemetry counter exactly, replica by
+    // replica (prefill replicas emit `migrate_out`, decode replicas
+    // `migrate_in`; the counter is one per engine).
+    let add = |acc: &mut [usize; 3], by: &[u64; 3]| {
+        for (a, b) in acc.iter_mut().zip(by) {
+            *a += *b as usize;
+        }
+    };
+    let snaps = run.prefill_snapshots.iter().chain(&run.decode_snapshots);
+    for (snap, (label, dump)) in snaps.zip(&run.traces) {
+        ensure!(
+            dump.dropped == 0,
+            "{label}: ring dropped {} events; raise --trace-ring",
+            dump.dropped
+        );
+        let mut migrate = [0usize; 3];
+        for ev in &dump.events {
+            match &ev.kind {
+                EventKind::MigrateOut { bytes_by_rung, .. }
+                | EventKind::MigrateIn { bytes_by_rung, .. } => add(&mut migrate, bytes_by_rung),
+                _ => {}
+            }
+        }
+        ensure!(
+            migrate == snap.telemetry.migrate_pcie_bytes_by_rung,
+            "{label}: trace migrate bytes {migrate:?} != telemetry {:?}",
+            snap.telemetry.migrate_pcie_bytes_by_rung
+        );
+        eprintln!(
+            "  {label}: {} events | migrate {:?} B — reconciled",
+            dump.events.len(),
+            migrate
+        );
+    }
+    let fleet = run.fleet_telemetry();
+    eprintln!(
+        "fleet telemetry (kv16/kv8/kv4): migrate {:?} | swap {:?}",
+        fleet.migrate_pcie_bytes_by_rung, fleet.swap_pcie_bytes_by_rung
+    );
+
+    let tracks = run.trace_tracks();
+    let json = trace::chrome_trace(&tracks);
+    trace::validate(&json)?;
+    if let Some(path) = trace_out {
+        trace::write_chrome(path, &tracks)?;
+        let total: usize = run.traces.iter().map(|(_, d)| d.events.len()).sum();
+        eprintln!("trace: {total} events across {} tracks -> {path}", tracks.len());
+    }
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -133,6 +133,11 @@ pub struct TelemetrySummary {
     pub transcode_bytes_by_rung: [usize; 3],
     /// Swap-preemption PCIe bytes (out + in, codes + scales) per rung.
     pub swap_pcie_bytes_by_rung: [usize; 3],
+    /// Cross-replica KV-migration PCIe bytes (snapshot export + import,
+    /// codes + scales) per rung, attributed from each snapshot's recorded
+    /// extents. Kept separate from swap traffic so the swap ↔ preemption
+    /// reconciliation stays exact under disaggregated serving.
+    pub migrate_pcie_bytes_by_rung: [usize; 3],
     /// Per-layer resident-precision occupancy: how many of the pool's
     /// layers currently sit at each rung (a `KvLayout::rung_histogram`
     /// snapshot, not a counter — `merge` sums it across replicas into a
@@ -148,6 +153,7 @@ impl TelemetrySummary {
             self.gather_hbm_bytes_by_rung[i] += other.gather_hbm_bytes_by_rung[i];
             self.transcode_bytes_by_rung[i] += other.transcode_bytes_by_rung[i];
             self.swap_pcie_bytes_by_rung[i] += other.swap_pcie_bytes_by_rung[i];
+            self.migrate_pcie_bytes_by_rung[i] += other.migrate_pcie_bytes_by_rung[i];
             self.occupancy_layers_by_rung[i] += other.occupancy_layers_by_rung[i];
         }
     }
@@ -167,6 +173,11 @@ impl TelemetrySummary {
         self.swap_pcie_bytes_by_rung.iter().sum()
     }
 
+    /// All-rung migration PCIe total.
+    pub fn migrate_pcie_bytes(&self) -> usize {
+        self.migrate_pcie_bytes_by_rung.iter().sum()
+    }
+
     /// The stats-probe object: three per-rung byte arrays, the occupancy
     /// histogram, and the rung-name legend.
     pub fn to_json(&self) -> Json {
@@ -178,6 +189,7 @@ impl TelemetrySummary {
             ("gather_hbm_bytes_by_rung", rungs(self.gather_hbm_bytes_by_rung)),
             ("transcode_bytes_by_rung", rungs(self.transcode_bytes_by_rung)),
             ("swap_pcie_bytes_by_rung", rungs(self.swap_pcie_bytes_by_rung)),
+            ("migrate_pcie_bytes_by_rung", rungs(self.migrate_pcie_bytes_by_rung)),
             ("occupancy_layers_by_rung", rungs(self.occupancy_layers_by_rung)),
         ])
     }
@@ -515,6 +527,7 @@ mod tests {
             gather_hbm_bytes_by_rung: [s, 2 * s, 3 * s],
             transcode_bytes_by_rung: [0, s, 0],
             swap_pcie_bytes_by_rung: [s, 0, 7 * s],
+            migrate_pcie_bytes_by_rung: [0, 5 * s, s],
             occupancy_layers_by_rung: [1, 2, 1],
         };
         let parts = [mk(3), mk(11), mk(40)];
@@ -536,6 +549,7 @@ mod tests {
         assert_eq!(total.gather_hbm_bytes(), 324);
         assert_eq!(total.transcode_bytes(), 54);
         assert_eq!(total.swap_pcie_bytes(), 54 + 7 * 54);
+        assert_eq!(total.migrate_pcie_bytes(), 5 * 54 + 54);
         assert_eq!(total.occupancy_layers_by_rung, [3, 6, 3]);
         // The probe object round-trips with the rung legend attached.
         let j = Json::parse(&total.to_json().dump()).unwrap();

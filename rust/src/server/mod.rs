@@ -443,7 +443,13 @@ pub fn stats_json(engine: &Engine, metrics: &MetricsCollector) -> Json {
         ("ladder_dropped_tokens", Json::from(p.ladder_dropped_tokens)),
         ("swap_blocks_used", Json::from(swap.used_blocks())),
         ("swap_budget_blocks", Json::from(swap.budget_blocks())),
-        ("swap_utilization", Json::from(swap.utilization())),
+        // `null` when the budget is unbounded: there is no denominator,
+        // and a fake 0.0 would hide real host pressure (the resident
+        // count above is the always-meaningful signal).
+        (
+            "swap_utilization",
+            swap.utilization().map(Json::from).unwrap_or(Json::Null),
+        ),
         ("preemptions", Json::from(p.preemptions)),
         ("swap_preemptions", Json::from(p.swap_preemptions)),
         ("recompute_preemptions", Json::from(p.recompute_preemptions)),
@@ -740,7 +746,11 @@ mod tests {
         assert_eq!(parsed.req_usize("prefix_cache_invalidated_blocks").unwrap(), 0);
         assert_eq!(parsed.req_usize("swap_blocks_used").unwrap(), 0);
         assert_eq!(parsed.req_usize("preemptions").unwrap(), 0);
-        assert_eq!(parsed.get("swap_utilization").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            parsed.get("swap_utilization"),
+            Some(&Json::Null),
+            "unbounded budget reports null, not a fake 0"
+        );
         assert_eq!(parsed.req_usize("oom_aborts").unwrap(), 0);
         // Percentile fields are present and zero on an idle engine.
         assert_eq!(parsed.req_usize("completed_requests").unwrap(), 0);

@@ -127,6 +127,13 @@ pub enum EventKind {
     SwapOut { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
     /// A swapped victim's blocks restored to the pool.
     SwapIn { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
+    /// A sequence's layout-tagged KV snapshot exported for cross-replica
+    /// migration (disaggregated prefill → decode handoff, or replica
+    /// drain). Bytes are attributed per the *snapshot's* recorded rung
+    /// extents, never the pool's current layout.
+    MigrateOut { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
+    /// A migrated snapshot imported into this replica's pool.
+    MigrateIn { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
     /// The request left the engine (finished or aborted).
     Finish { id: u64, reason: u8, tokens: u64, latency_s: f64 },
 }
@@ -142,6 +149,8 @@ impl EventKind {
             EventKind::Ladder { .. } => "ladder",
             EventKind::SwapOut { .. } => "swap_out",
             EventKind::SwapIn { .. } => "swap_in",
+            EventKind::MigrateOut { .. } => "migrate_out",
+            EventKind::MigrateIn { .. } => "migrate_in",
             EventKind::Finish { .. } => "finish",
         }
     }
@@ -154,6 +163,8 @@ impl EventKind {
             | EventKind::PrefillChunk { id, .. }
             | EventKind::SwapOut { id, .. }
             | EventKind::SwapIn { id, .. }
+            | EventKind::MigrateOut { id, .. }
+            | EventKind::MigrateIn { id, .. }
             | EventKind::Finish { id, .. } => Some(*id),
             _ => None,
         }
@@ -167,7 +178,9 @@ impl EventKind {
             | EventKind::DecodeIter { dur_s, .. }
             | EventKind::Ladder { dur_s, .. }
             | EventKind::SwapOut { dur_s, .. }
-            | EventKind::SwapIn { dur_s, .. } => *dur_s,
+            | EventKind::SwapIn { dur_s, .. }
+            | EventKind::MigrateOut { dur_s, .. }
+            | EventKind::MigrateIn { dur_s, .. } => *dur_s,
             _ => 0.0,
         }
     }
@@ -274,6 +287,22 @@ fn encode(ev: &TraceEvent) -> [u64; WORDS] {
             w[5] = bytes_by_rung[2];
             w[9] = dur_s.to_bits();
         }
+        EventKind::MigrateOut { id, bytes_by_rung, dur_s } => {
+            w[0] = 10;
+            w[2] = *id;
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::MigrateIn { id, bytes_by_rung, dur_s } => {
+            w[0] = 11;
+            w[2] = *id;
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[9] = dur_s.to_bits();
+        }
         EventKind::Finish { id, reason, tokens, latency_s } => {
             w[0] = 9;
             w[2] = *id;
@@ -345,6 +374,16 @@ fn decode(w: &[u64; WORDS]) -> Option<TraceEvent> {
             reason: w[3] as u8,
             tokens: w[4],
             latency_s: f64::from_bits(w[5]),
+        },
+        10 => EventKind::MigrateOut {
+            id: w[2],
+            bytes_by_rung: [w[3], w[4], w[5]],
+            dur_s: f64::from_bits(w[9]),
+        },
+        11 => EventKind::MigrateIn {
+            id: w[2],
+            bytes_by_rung: [w[3], w[4], w[5]],
+            dur_s: f64::from_bits(w[9]),
         },
         _ => return None,
     };
@@ -569,7 +608,9 @@ pub fn args_json(kind: &EventKind) -> Json {
             ("bytes_kv4", Json::from(bytes_by_rung[2])),
             ("dur_s", Json::from(*dur_s)),
         ]),
-        EventKind::SwapIn { id, bytes_by_rung, dur_s } => obj([
+        EventKind::SwapIn { id, bytes_by_rung, dur_s }
+        | EventKind::MigrateOut { id, bytes_by_rung, dur_s }
+        | EventKind::MigrateIn { id, bytes_by_rung, dur_s } => obj([
             ("id", Json::from(*id)),
             ("bytes", Json::from(bytes_by_rung.iter().sum::<u64>())),
             ("bytes_kv16", Json::from(bytes_by_rung[0])),
@@ -680,7 +721,9 @@ fn push_track(track: &TraceTrack, out: &mut Vec<Json>) {
             | EventKind::DecodeIter { dur_s, .. }
             | EventKind::Ladder { dur_s, .. }
             | EventKind::SwapOut { dur_s, .. }
-            | EventKind::SwapIn { dur_s, .. } => {
+            | EventKind::SwapIn { dur_s, .. }
+            | EventKind::MigrateOut { dur_s, .. }
+            | EventKind::MigrateIn { dur_s, .. } => {
                 out.push(chrome_event(
                     "X",
                     ev.kind.name(),
@@ -919,6 +962,14 @@ mod tests {
                 kind: EventKind::SwapIn { id: 1, bytes_by_rung: [0, 2048, 0], dur_s: 1e-4 },
             },
             TraceEvent {
+                sim_time_s: 5.5e-3,
+                kind: EventKind::MigrateOut { id: 1, bytes_by_rung: [0, 2048, 0], dur_s: 2e-4 },
+            },
+            TraceEvent {
+                sim_time_s: 5.7e-3,
+                kind: EventKind::MigrateIn { id: 1, bytes_by_rung: [0, 0, 1024], dur_s: 1e-4 },
+            },
+            TraceEvent {
                 sim_time_s: 6e-3,
                 kind: EventKind::Finish { id: 0, reason: 0, tokens: 8, latency_s: 6e-3 },
             },
@@ -1066,8 +1117,8 @@ mod tests {
         }
         let j = dump_json(&r.dump_last(2));
         let parsed = Json::parse(&j.dump()).unwrap();
-        assert_eq!(parsed.req_usize("recorded").unwrap(), 9);
-        assert_eq!(parsed.req_usize("dropped").unwrap(), 5);
+        assert_eq!(parsed.req_usize("recorded").unwrap(), 11);
+        assert_eq!(parsed.req_usize("dropped").unwrap(), 7);
         assert_eq!(parsed.req_arr("events").unwrap().len(), 2);
         let last = &parsed.req_arr("events").unwrap()[1];
         assert_eq!(last.req_str("kind").unwrap(), "finish");

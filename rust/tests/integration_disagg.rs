@@ -1,0 +1,286 @@
+//! Disaggregated prefill/decode integration tests (DESIGN.md §13).
+//!
+//! Acceptance: the randomized harness (fixed base seed 0xD15A_6600, also
+//! pinned in CI) drives random tier shapes, layouts, policies, and
+//! workloads through `run_disagg` and asserts zero request loss, every
+//! request answered exactly once, fleet accounting drained to zero, and
+//! outputs bit-identical to a single replica running at the decode
+//! layout. Plus the two directed paths the harness cannot hit by
+//! construction: a mismatched-layout import must be rejected before
+//! admission, and a migrate-in that cannot fit must downgrade to
+//! re-prefill without ever touching (or underflowing) the preemption
+//! counters.
+
+use std::collections::HashMap;
+
+use turbomind::cluster::{migrate_all, run_disagg, DisaggConfig, ReplicaSpec, RouterPolicy};
+use turbomind::config::{EngineConfig, PreemptionMode};
+use turbomind::coordinator::{Engine, FinishReason, Request};
+use turbomind::util::proptest::{run_prop, Gen};
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig {
+        precision: "W4A16KV8".parse().unwrap(),
+        kv_pool_tokens: 16 * 64,
+        prefill_chunk: 32,
+        ..EngineConfig::default()
+    }
+}
+
+/// Run every request through a standalone engine of `cfg` and return its
+/// tokens keyed by the caller's index — the bit-identity oracle.
+fn reference_tokens(cfg: EngineConfig, reqs: &[(usize, Request)]) -> HashMap<usize, Vec<i32>> {
+    let mut engine = Engine::new(cfg).expect("reference engine");
+    let mut id_to_idx = HashMap::new();
+    for (idx, req) in reqs {
+        let id = engine.submit(req.clone()).expect("reference submit");
+        id_to_idx.insert(id, *idx);
+    }
+    engine
+        .run_to_completion()
+        .expect("reference run")
+        .into_iter()
+        .map(|o| (id_to_idx[&o.id], o.tokens))
+        .collect()
+}
+
+/// Acceptance harness: random prefill tiers (kv16 or kv8), random decode
+/// tiers (kv8 or kv4), all router policies, lossless preemption modes,
+/// bursty shared-prefix workloads with 1-token terminal requests mixed
+/// in. Every iteration asserts: no loss, no duplication, byte-accounted
+/// migration, drained pools, and token-for-token agreement with a single
+/// replica at each decode layout.
+#[test]
+fn randomized_disagg_harness_zero_loss_bit_identical() {
+    run_prop("disagg-harness", 0xD15A_6600, 8, |g: &mut Gen| {
+        let mut base = base_cfg();
+        base.enable_prefix_cache = g.bool();
+        base.preemption_mode =
+            *g.choose(&[PreemptionMode::Swap, PreemptionMode::Recompute]);
+        let policy = *g.choose(&[
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+        ]);
+        // Prefill admits wide (kv16) or at the base kv8; decode holds the
+        // base kv8 or a narrowed kv4 — every pairing transcodes downward.
+        let pre_pool = ["w4a16,kv8,a100,layout=kv16", "w4a16,kv8,a100"];
+        let dec_pool = ["w4a16,kv8,a100", "w4a16,kv8,h100,layout=kv4"];
+        let pre_specs: Vec<ReplicaSpec> =
+            (0..g.usize_in(1, 2)).map(|_| g.choose(&pre_pool).parse().unwrap()).collect();
+        let dec_specs: Vec<ReplicaSpec> =
+            (0..g.usize_in(1, 2)).map(|_| g.choose(&dec_pool).parse().unwrap()).collect();
+
+        // Bursty multi-tenant mix: shared 32-token tenant prefixes plus
+        // random suffixes; max_new == 1 requests finish at prefill and
+        // must never cross tiers.
+        let n_requests = g.usize_in(6, 14);
+        let n_tenants = g.usize_in(1, 3);
+        let tenant_prefix: Vec<Vec<i32>> = (0..n_tenants)
+            .map(|t| (0..32).map(|j| ((t * 531 + j * 17 + 11) % 2048) as i32).collect())
+            .collect();
+        let reqs: Vec<Request> = (0..n_requests)
+            .map(|_| {
+                let mut prompt = tenant_prefix[g.usize_in(0, n_tenants - 1)].clone();
+                for _ in 0..g.usize_in(1, 40) {
+                    prompt.push(g.usize_in(0, 2047) as i32);
+                }
+                Request::new(prompt, g.usize_in(1, 8))
+            })
+            .collect();
+
+        let cfg = DisaggConfig::new(base.clone(), pre_specs, dec_specs.clone(), policy);
+        let run = run_disagg(&cfg, &reqs).expect("disagg run");
+
+        // Every request answered exactly once, none lost: the outputs
+        // come back sorted and cover 0..n exactly.
+        let got: Vec<usize> = run.outputs.iter().map(|o| o.request).collect();
+        assert_eq!(got, (0..n_requests).collect::<Vec<_>>(), "exactly one output per request");
+        assert_eq!(run.completed(), n_requests, "lossless modes must complete everything");
+
+        // Migration accounting: every decoded-on-the-other-tier request
+        // either shipped KV or fell back to recompute, bytes add up, and
+        // the merged telemetry sees the PCIe traffic.
+        let crossed = run.outputs.iter().filter(|o| o.decode_replica.is_some()).count();
+        assert_eq!(run.migrated + run.recompute_migrations, crossed);
+        let by_output: usize = run.outputs.iter().map(|o| o.migrated_bytes).sum();
+        assert_eq!(by_output, run.migrated_bytes, "per-output bytes must sum to the run total");
+        if run.migrated > 0 {
+            assert!(run.fleet_telemetry().migrate_pcie_bytes() > 0);
+        }
+
+        // Terminal requests (a single sampled token) never cross tiers.
+        for o in &run.outputs {
+            if o.decode_replica.is_none() {
+                assert!(
+                    reqs[o.request].max_new_tokens <= 1,
+                    "request {} stayed on the prefill tier with max_new {}",
+                    o.request,
+                    reqs[o.request].max_new_tokens
+                );
+            }
+            assert_ne!(o.output.finish, FinishReason::Aborted);
+        }
+
+        // Fleet accounting drains to zero on both tiers: pools empty but
+        // for intentional prefix residency, nothing left on the host.
+        for s in run.prefill_snapshots.iter().chain(&run.decode_snapshots) {
+            assert_eq!((s.outstanding_reqs, s.outstanding_tokens), (0, 0), "{}", s.label);
+            assert_eq!(
+                s.pool_total_blocks - s.pool_free_blocks,
+                s.prefix_resident_blocks,
+                "{}: pool holds only intentional prefix residency",
+                s.label
+            );
+            assert_eq!(s.swap_blocks_used, 0, "{}: host store must drain", s.label);
+        }
+
+        // Bit-identity: each migrated request matches a single replica
+        // running the decode spec (its layout included) end to end;
+        // terminal requests match the plain base engine.
+        for (j, spec) in dec_specs.iter().enumerate() {
+            let mine: Vec<(usize, Request)> = run
+                .outputs
+                .iter()
+                .filter(|o| o.decode_replica == Some(j))
+                .map(|o| (o.request, reqs[o.request].clone()))
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            let want = reference_tokens(spec.engine_config(&base), &mine);
+            for o in run.outputs.iter().filter(|o| o.decode_replica == Some(j)) {
+                assert_eq!(
+                    o.output.tokens, want[&o.request],
+                    "request {} diverges from a single replica at the decode layout",
+                    o.request
+                );
+            }
+        }
+        let terminal: Vec<(usize, Request)> = run
+            .outputs
+            .iter()
+            .filter(|o| o.decode_replica.is_none())
+            .map(|o| (o.request, reqs[o.request].clone()))
+            .collect();
+        if !terminal.is_empty() {
+            let want = reference_tokens(base.clone(), &terminal);
+            for o in run.outputs.iter().filter(|o| o.decode_replica.is_none()) {
+                assert_eq!(o.output.tokens, want[&o.request], "terminal request {}", o.request);
+            }
+        }
+    });
+}
+
+/// A snapshot shipped at the wrong layout must be rejected at submit —
+/// before admission, with the routing-level message — and the same
+/// artifact lands cleanly once transcoded, finishing bit-identically to
+/// an undisturbed engine.
+#[test]
+fn mismatched_layout_import_rejected_then_accepted_after_transcode() {
+    let wide: ReplicaSpec = "w4a16,kv8,a100,layout=kv16".parse().unwrap();
+    let mut a = Engine::new(wide.engine_config(&base_cfg())).unwrap();
+    let prompt: Vec<i32> = (0..40).map(|j| (j * 13 + 7) % 2048).collect();
+    a.submit(Request::new(prompt.clone(), 8)).unwrap();
+    for _ in 0..6 {
+        a.step().unwrap();
+    }
+    let mut artifacts = a.drain_resumables().unwrap();
+    assert_eq!(artifacts.len(), 1);
+    let art = artifacts.remove(0);
+    let snap = art.snapshot.expect("six steps sample at least one token");
+    assert!(!art.generated.is_empty());
+
+    let mut b = Engine::new(base_cfg()).unwrap(); // kv8 pool
+    let err = b
+        .submit_migrated(art.request.clone(), art.generated.clone(), Some(snap.clone()))
+        .expect_err("kv16 snapshot must not land in a kv8 pool untranscoded");
+    assert!(
+        err.to_string().contains("transcode before shipping"),
+        "unexpected rejection: {err}"
+    );
+
+    let transcoded = snap.transcode_to(b.kv_pool().layout()).unwrap();
+    b.submit_migrated(art.request, art.generated, Some(transcoded)).unwrap();
+    let out = b.run_to_completion().unwrap().remove(0);
+    assert_eq!(out.finish, FinishReason::Length);
+    assert_eq!(b.migration_stats.migrated_in, 1);
+
+    let want = reference_tokens(base_cfg(), &[(0, Request::new(prompt, 8))]);
+    assert_eq!(out.tokens, want[&0], "resumed tokens diverge from an undisturbed run");
+}
+
+/// Migrate-in under pressure: a target pool too small to import every
+/// shipped snapshot downgrades the overflow arrivals to re-prefill.
+/// The downgrade is placement, not preemption — it must not touch (or
+/// underflow) the swap counters, the per-mechanism buckets must still
+/// sum to `preemptions`, and every request still finishes bit-identical.
+#[test]
+fn migrate_in_downgrade_keeps_counters_consistent_and_outputs_exact() {
+    let mut a = Engine::new(base_cfg()).unwrap();
+    // Distinct prompt lengths (58/60/62) key each output back to its
+    // request regardless of drain order.
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..58 + 2 * i).map(|j| ((i * 101 + j * 13 + 7) % 2048) as i32).collect();
+            Request::new(prompt, 16)
+        })
+        .collect();
+    for r in &reqs {
+        a.submit(r.clone()).unwrap();
+    }
+    // Past prefill (2 chunks × 3 requests) and into decode, so every
+    // sequence ships a live snapshot.
+    for _ in 0..8 {
+        a.step().unwrap();
+    }
+
+    // Six 16-token blocks: each 60-token prompt + 16 generated fits
+    // (5 blocks), but three ~4-block imports cannot coexist — only the
+    // first lands, the rest must downgrade.
+    let mut b = Engine::new(EngineConfig {
+        kv_pool_tokens: 16 * 6,
+        preemption_mode: PreemptionMode::Recompute,
+        ..base_cfg()
+    })
+    .unwrap();
+    let moved = migrate_all(&mut a, &mut b).unwrap();
+    assert_eq!(moved, 3);
+    assert!(!a.has_work(), "source must be fully drained");
+    assert_eq!(a.kv_pool().used_blocks(), 0, "drained source pool must be empty");
+
+    let outs = b.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 3);
+    for o in &outs {
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.tokens.len(), 16);
+    }
+    let want =
+        reference_tokens(base_cfg(), &reqs.iter().cloned().enumerate().collect::<Vec<_>>());
+    for o in &outs {
+        let i = reqs
+            .iter()
+            .position(|r| r.prompt.len() == o.prompt_len)
+            .expect("prompt lengths are distinct by construction");
+        assert_eq!(o.tokens, want[&i], "request {i} diverges after downgrade");
+    }
+
+    // Every artifact hit the import gate exactly once; the pool only had
+    // room for one resident import at a time.
+    let m = b.migration_stats;
+    assert_eq!(m.migrated_in + m.migrate_in_downgrades, 3);
+    assert!(m.migrated_in >= 1, "at least the first import fits");
+    assert!(m.migrate_in_downgrades >= 1, "the overflow arrivals must downgrade");
+
+    // Downgrades are not preemptions: swap buckets stay untouched under
+    // Recompute (an underflow would wrap and break the sum), and the
+    // per-mechanism buckets still account for every preemption.
+    let p = b.preemption_summary();
+    assert_eq!(p.swap_preemptions, 0, "migrate-in downgrade must not touch swap counters");
+    assert_eq!(
+        p.preemptions,
+        p.swap_preemptions + p.recompute_preemptions + p.ladder_preemptions,
+        "per-mechanism buckets must sum to total preemptions"
+    );
+}

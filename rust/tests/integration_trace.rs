@@ -335,6 +335,53 @@ fn tiny_ring_wraparound_drop_count_is_exact() {
 }
 
 #[test]
+fn mixed_layout_swap_bytes_split_per_rung_and_match_headline_exactly() {
+    // Regression: swap PCIe bytes are attributed from each snapshot's own
+    // recorded extents, not from the pool's current (uniform) rung. On a
+    // mixed kv16/kv4 pool every swap event must split its bytes across
+    // both resident rungs, leave the absent kv8 rung untouched, and the
+    // per-rung split must sum to exactly the bytes the event's modeled
+    // duration was priced on.
+    let c = EngineConfig {
+        kv_layout: Some("l0:kv16,l1:kv16,l2:kv4,l3:kv4".into()),
+        ..cfg("W4A16KV8", PreemptionMode::Swap, false, 16, 8)
+    };
+    let (e, outs) = run_burst(c, &engineered_overflow());
+    assert_eq!(outs.len(), 3, "lossless swap mode must complete everything");
+    let p = e.preemption_summary();
+    assert!(p.swap_preemptions > 0, "the engineered shape must force swap-outs");
+    assert!(e.swap_store().stats.swap_ins > 0, "and restore at least one victim");
+
+    use turbomind::kvcache::swap::transfer_time_s;
+    let mut by_rung = [0u64; 3];
+    let mut events = 0usize;
+    for ev in &e.trace_dump().events {
+        let (bytes, dur) = match &ev.kind {
+            EventKind::SwapOut { bytes_by_rung, dur_s, .. }
+            | EventKind::SwapIn { bytes_by_rung, dur_s, .. } => (*bytes_by_rung, *dur_s),
+            _ => continue,
+        };
+        events += 1;
+        let total: u64 = bytes.iter().sum();
+        assert_eq!(
+            transfer_time_s(total as usize),
+            dur,
+            "event's rung split must sum to the bytes its duration was modeled on"
+        );
+        for (acc, b) in by_rung.iter_mut().zip(bytes) {
+            *acc += b;
+        }
+    }
+    assert!(events > 0);
+    assert_eq!(by_rung, e.stats.swap_pcie_bytes_by_rung.map(|b| b as u64));
+    assert_eq!(by_rung[1], 0, "no kv8 layers exist in this pool");
+    assert!(
+        by_rung[0] > 0 && by_rung[2] > 0,
+        "traffic must split across both resident rungs, got {by_rung:?}"
+    );
+}
+
+#[test]
 fn tracing_off_records_nothing_and_dumps_empty() {
     let reqs = engineered_overflow();
     let off = EngineConfig { trace: false, ..cfg("W4A16KV8", PreemptionMode::Swap, false, 16, 8) };
