@@ -7,6 +7,7 @@
 
 pub mod disagg;
 pub mod hotpath;
+pub mod persist;
 pub mod kernel_figures;
 pub mod serving_figures;
 pub mod table;
@@ -37,6 +38,7 @@ pub fn registry() -> Vec<(&'static str, fn() -> Table)> {
         ("ladder", serving_figures::fig_ladder),
         ("disagg", disagg::fig_disagg),
         ("hotpath", hotpath::fig_hotpath),
+        ("persist", persist::fig_persist),
     ]
 }
 

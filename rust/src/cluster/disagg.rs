@@ -48,6 +48,7 @@ use super::router::{argmin_by, LoadView, Router, RouterPolicy};
 use super::stats::{merge_telemetry, ReplicaSnapshot};
 use crate::config::EngineConfig;
 use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use crate::kvcache::SwapBackend;
 use crate::kvcache::swap::{snapshot_bytes, transfer_time_s};
 use crate::kvcache::{KvLayout, SeqSnapshot};
 use crate::metrics::MetricsCollector;

@@ -383,6 +383,15 @@ impl FleetRun {
 /// `(config, requests)` always yields byte-identical outputs, which is
 /// what lets `bench router` *assert* policy orderings instead of
 /// eyeballing them.
+///
+/// When `cfg.base.store` is set, every replica shares that one page-file
+/// store (the `Arc` rides the config clone), so replica *i*+1 adopts the
+/// prefix blocks replica *i* published — and because replicas build and
+/// run sequentially here, the store's evolution (publications, adoptions,
+/// LRU order) is deterministic too. The threaded [`Cluster`] can share a
+/// store the same way, but its publication *order* then depends on thread
+/// interleaving; block contents stay byte-exact either way, so outputs
+/// remain bit-identical.
 pub fn run_fleet(cfg: &ClusterConfig, requests: &[Request]) -> Result<FleetRun> {
     cfg.validate()?;
     let n = cfg.n_replicas();

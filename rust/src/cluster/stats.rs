@@ -11,6 +11,7 @@
 //! replica would add up to.
 
 use crate::coordinator::{Engine, EngineStats};
+use crate::kvcache::SwapBackend;
 use crate::metrics::{
     percentile_fields, MetricsCollector, Percentiles, PrefixCacheSummary, PreemptionSummary,
     TelemetrySummary, LATENCY_PCTL_KEYS, TPOT_PCTL_KEYS, TTFT_PCTL_KEYS,
@@ -130,6 +131,20 @@ impl ReplicaSnapshot {
             ("sim_time_s", Json::from(self.stats.sim_time_s)),
             ("gather_hbm_bytes", Json::from(self.stats.gather_hbm_bytes)),
             ("padded_slots", Json::from(self.stats.padded_slots)),
+            // Host-global page-file store (all zero without `--store-path`).
+            ("store_prefix_hits", Json::from(self.stats.store_prefix_hits)),
+            (
+                "store_prefix_hit_tokens",
+                Json::from(self.stats.store_prefix_hit_tokens),
+            ),
+            (
+                "store_published_blocks",
+                Json::from(self.stats.store_published_blocks),
+            ),
+            (
+                "store_disk_bytes",
+                Json::from(self.stats.store_disk_bytes_by_rung.iter().sum::<usize>()),
+            ),
             ("telemetry", self.telemetry.to_json()),
         ])
     }
@@ -210,6 +225,22 @@ impl ClusterStats {
         self.replicas.iter().map(|r| r.stats.tokens_generated).sum()
     }
 
+    /// Admissions anywhere in the fleet that adopted a prefix chain from
+    /// the shared page-file store (0 without one configured).
+    pub fn fleet_store_prefix_hits(&self) -> usize {
+        self.replicas.iter().map(|r| r.stats.store_prefix_hits).sum()
+    }
+
+    /// Prompt tokens those adoptions skipped re-prefilling.
+    pub fn fleet_store_prefix_hit_tokens(&self) -> usize {
+        self.replicas.iter().map(|r| r.stats.store_prefix_hit_tokens).sum()
+    }
+
+    /// Prefix blocks the fleet published into the shared store.
+    pub fn fleet_store_published_blocks(&self) -> usize {
+        self.replicas.iter().map(|r| r.stats.store_published_blocks).sum()
+    }
+
     /// Requests still queued or in flight anywhere in the fleet.
     pub fn fleet_outstanding_reqs(&self) -> usize {
         self.replicas.iter().map(|r| r.outstanding_reqs).sum()
@@ -267,6 +298,15 @@ impl ClusterStats {
             (
                 "fleet_padded_slots",
                 Json::from(self.replicas.iter().map(|r| r.stats.padded_slots).sum::<usize>()),
+            ),
+            ("fleet_store_prefix_hits", Json::from(self.fleet_store_prefix_hits())),
+            (
+                "fleet_store_prefix_hit_tokens",
+                Json::from(self.fleet_store_prefix_hit_tokens()),
+            ),
+            (
+                "fleet_store_published_blocks",
+                Json::from(self.fleet_store_published_blocks()),
             ),
             ("telemetry", self.fleet_telemetry().to_json()),
         ];

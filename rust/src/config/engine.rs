@@ -191,6 +191,11 @@ pub struct EngineConfig {
     /// Flight-recorder ring capacity in events (oldest events are
     /// overwritten once exceeded; the drop count is exact).
     pub trace_ring_capacity: usize,
+    /// Shared page-file store (DESIGN.md §14). When set, the swap tier is
+    /// page-file-backed (snapshots persist, disk-tier pricing applies) and
+    /// the engine adopts/publishes prefix blocks host-globally. Replicas
+    /// sharing one `Arc` share one store.
+    pub store: Option<std::sync::Arc<crate::store::PageFileStore>>,
 }
 
 /// Iteration-level scheduling policy (§5 serving comparisons; the
@@ -229,6 +234,7 @@ impl Default for EngineConfig {
             ladder_policy: LadderPolicy::Off,
             trace: false,
             trace_ring_capacity: crate::trace::DEFAULT_RING_CAPACITY,
+            store: None,
         }
     }
 }

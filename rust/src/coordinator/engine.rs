@@ -25,9 +25,13 @@ use super::request::{FinishReason, Phase, Request, RequestOutput, SeqState};
 use super::sampler::Sampler;
 use super::scheduler::{Action, Scheduler};
 use crate::config::{layer_importance, BackendKind, EngineConfig, LadderPolicy, PreemptionMode};
-use crate::kvcache::swap::{snapshot_bytes, transfer_time_s};
-use crate::kvcache::{KvLayout, KvPool, PrefixCache, SeqHandle, SwapStore};
+use crate::kvcache::prefix::chain_keys_under;
+use crate::kvcache::swap::{disk_transfer_time_s, snapshot_bytes, transfer_time_s};
+use crate::kvcache::{
+    KvLayout, KvPool, PagedSwapStore, PrefixCache, SeqHandle, SwapBackend, SwapStore,
+};
 use crate::metrics::{PreemptionSummary, PrefixCacheSummary, TelemetrySummary};
+use crate::store::{fetch_chain, resolve_shared_prefix, PageFileStore, StoreReceipt};
 use crate::runtime::{
     DecodeArgs, ExecutionBackend, ModelSpec, PrefillArgs, SimBackend, StepOutputs,
 };
@@ -85,6 +89,18 @@ pub struct EngineStats {
     /// Iterations spent importing a migrated snapshot (not `prefill_iters`,
     /// not `swap_in_iters`).
     pub migrate_in_iters: usize,
+    /// Page-file-store traffic (swap-outs/ins through the paged backend,
+    /// prefix publishes, and shared-prefix fetches), split per rung of
+    /// each payload's recorded layout. Reconciles exactly with the sum of
+    /// `StoreWrite`/`StoreRead` trace event bytes.
+    pub store_disk_bytes_by_rung: [usize; 3],
+    /// Admissions served from the host-global prefix store (as opposed to
+    /// this replica's own in-pool index).
+    pub store_prefix_hits: usize,
+    /// Prompt tokens adopted from the host-global prefix store.
+    pub store_prefix_hit_tokens: usize,
+    /// Full prefix blocks this engine published into the shared store.
+    pub store_published_blocks: usize,
     /// Modeled device time accumulated by the backend (sim backend only;
     /// the PJRT path is wall-clock-timed by callers instead), plus modeled
     /// PCIe time for swap-preemption transfers.
@@ -173,8 +189,14 @@ pub struct Engine {
     pool: KvPool,
     /// Prefix-sharing index over `pool` (None when disabled in config).
     prefix: Option<PrefixCache>,
-    /// Host-side store for swap-preempted sequences' KV (DESIGN.md §8).
-    swap: SwapStore,
+    /// Host-side tier for swap-preempted sequences' KV (DESIGN.md §8):
+    /// in-memory by default, page-file-backed when `cfg.store` is set.
+    swap: Box<dyn SwapBackend>,
+    /// The shared page-file store, when configured (DESIGN.md §14).
+    store: Option<Arc<PageFileStore>>,
+    /// This pool layout's registered root key in `store` (re-registered on
+    /// every ladder rung, since the rung re-keys the chain space).
+    store_root: Option<u64>,
     pub preempt_stats: PreemptStats,
     /// Cross-replica migration counters (DESIGN.md §13).
     pub migration_stats: MigrationStats,
@@ -269,7 +291,33 @@ impl Engine {
             .then(|| PrefixCache::with_layout(layout, cfg.kv_block_tokens, cfg.prefix_cache_blocks));
         let sampler = Sampler { temperature: cfg.temperature, top_k: cfg.top_k };
         let rng = crate::util::rng::Rng::new(cfg.seed);
-        let swap = SwapStore::new(cfg.kv_block_tokens, cfg.swap_budget_blocks);
+        let pool_layout = pool.layout().clone();
+        let store = cfg.store.clone();
+        let (swap, store_root): (Box<dyn SwapBackend>, Option<u64>) = match &store {
+            Some(st) => {
+                // Register this pool's chain-key space so other replicas
+                // (and post-restart processes) can resolve the blocks this
+                // engine publishes.
+                let root = st.register_layout(&pool_layout, cfg.kv_block_tokens)?;
+                // Upper-bound wire bytes/token for capacity probes: the
+                // ladder only narrows, so the admission layout bounds every
+                // later snapshot.
+                let hint = pool_layout.token_code_bytes(m.n_kv_heads, m.head_dim)
+                    + pool_layout.n_layers() * 2 * m.n_kv_heads * 4;
+                let paged = PagedSwapStore::new(
+                    st.clone(),
+                    cfg.kv_block_tokens,
+                    cfg.swap_budget_blocks,
+                    hint,
+                );
+                (Box::new(paged) as Box<dyn SwapBackend>, Some(root))
+            }
+            None => (
+                Box::new(SwapStore::new(cfg.kv_block_tokens, cfg.swap_budget_blocks))
+                    as Box<dyn SwapBackend>,
+                None,
+            ),
+        };
         let trace = cfg
             .trace
             .then(|| Arc::new(TraceRecorder::with_capacity(cfg.trace_ring_capacity)));
@@ -279,6 +327,8 @@ impl Engine {
             pool,
             prefix,
             swap,
+            store,
+            store_root,
             preempt_stats: PreemptStats::default(),
             migration_stats: MigrationStats::default(),
             migration_exports: Vec::new(),
@@ -519,7 +569,7 @@ impl Engine {
                 s.swapped = false;
                 // `evacuate`, not `take`: leaving the store for another
                 // replica is not a swap-in.
-                self.swap.evacuate(id)
+                self.swap.evacuate(id)?
             } else {
                 s.migrate_snapshot.take()
             };
@@ -585,14 +635,19 @@ impl Engine {
         self.prefix.as_ref().map(PrefixCache::cached_blocks).unwrap_or(0)
     }
 
-    /// The host-side swap store (budget/occupancy for the stats probe).
-    pub fn swap_store(&self) -> &SwapStore {
-        &self.swap
+    /// The host-side swap backend (budget/occupancy for the stats probe).
+    pub fn swap_store(&self) -> &dyn SwapBackend {
+        self.swap.as_ref()
+    }
+
+    /// The shared page-file store, when this engine was configured with one.
+    pub fn store(&self) -> Option<&Arc<PageFileStore>> {
+        self.store.as_ref()
     }
 
     /// Preemption effectiveness counters (decisions + swap traffic).
     pub fn preemption_summary(&self) -> PreemptionSummary {
-        PreemptionSummary::new(self.preempt_stats, self.swap.stats)
+        PreemptionSummary::new(self.preempt_stats, self.swap.stats())
     }
 
     /// The flight recorder, when tracing is enabled (`cfg.trace`).
@@ -617,6 +672,7 @@ impl Engine {
             transcode_bytes_by_rung: self.stats.transcode_bytes_by_rung,
             swap_pcie_bytes_by_rung: self.stats.swap_pcie_bytes_by_rung,
             migrate_pcie_bytes_by_rung: self.stats.migrate_pcie_bytes_by_rung,
+            store_disk_bytes_by_rung: self.stats.store_disk_bytes_by_rung,
             occupancy_layers_by_rung: self.pool.layout().rung_histogram(),
         }
     }
@@ -766,14 +822,22 @@ impl Engine {
             }
             None => 0,
         };
-        VictimCost::estimate(
+        let cost = VictimCost::estimate(
             self.pool.seq_blocks(h).len(),
             self.pool.block_tokens(),
             self.pool.token_code_bytes(),
             self.pool.token_scale_bytes(),
             kv_len,
             cached,
-        )
+        );
+        if self.swap.disk_tier() {
+            // A page-file-backed tier pays the disk round trip on top of
+            // PCIe; price it so the swap/recompute choice (and the traced
+            // decision record) reflect the mechanism's real modeled cost.
+            cost.with_disk_tier()
+        } else {
+            cost
+        }
     }
 
     /// The mechanism [`Engine::preempt_one`] would actually use for this
@@ -900,22 +964,49 @@ impl Engine {
                 // pool may relayout while this snapshot sits host-side, and
                 // the attribution must describe the bytes actually shipped.
                 let by_rung = snap.bytes_by_rung();
-                for (acc, b) in self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
-                    *acc += b;
+                let bytes = snapshot_bytes(&snap);
+                match self.swap.insert(id, snap) {
+                    Ok(()) => {
+                        for (acc, b) in
+                            self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung)
+                        {
+                            *acc += b;
+                        }
+                        let dt = transfer_time_s(bytes);
+                        self.emit(
+                            self.stats.sim_time_s,
+                            EventKind::SwapOut {
+                                id,
+                                bytes_by_rung: by_rung.map(|b| b as u64),
+                                dur_s: dt,
+                            },
+                        );
+                        self.stats.sim_time_s += dt;
+                        if self.swap.disk_tier() {
+                            for (acc, b) in
+                                self.stats.store_disk_bytes_by_rung.iter_mut().zip(by_rung)
+                            {
+                                *acc += b;
+                            }
+                            let ddt = disk_transfer_time_s(bytes);
+                            self.emit(
+                                self.stats.sim_time_s,
+                                EventKind::StoreWrite {
+                                    id,
+                                    bytes_by_rung: by_rung.map(|b| b as u64),
+                                    dur_s: ddt,
+                                },
+                            );
+                            self.stats.sim_time_s += ddt;
+                        }
+                        self.preempt_stats.swap_preemptions += 1;
+                        self.seqs.get_mut(&id).unwrap().swapped = true;
+                    }
+                    // A full page file is backpressure, not corruption:
+                    // nothing shipped, so nothing is priced or counted —
+                    // the victim falls back to recompute.
+                    Err(_) => self.release_for_recompute(id),
                 }
-                let dt = transfer_time_s(snapshot_bytes(&snap));
-                self.emit(
-                    self.stats.sim_time_s,
-                    EventKind::SwapOut {
-                        id,
-                        bytes_by_rung: by_rung.map(|b| b as u64),
-                        dur_s: dt,
-                    },
-                );
-                self.stats.sim_time_s += dt;
-                self.swap.insert(id, snap)?;
-                self.preempt_stats.swap_preemptions += 1;
-                self.seqs.get_mut(&id).unwrap().swapped = true;
             }
             PreemptMechanism::Recompute => self.release_for_recompute(id),
         }
@@ -1135,6 +1226,12 @@ impl Engine {
         }
 
         let report = self.pool.relayout(target)?;
+        // The rung re-keys the pool's chain space: re-register it so this
+        // engine's future prefix publications land under the new root (and
+        // so restarted processes at this rung can adopt them).
+        if let Some(store) = &self.store {
+            self.store_root = Some(store.register_layout(target, self.pool.block_tokens())?);
+        }
         for (acc, b) in
             self.stats.transcode_bytes_by_rung.iter_mut().zip(report.transcoded_bytes_by_rung)
         {
@@ -1225,7 +1322,19 @@ impl Engine {
             self.release_for_recompute(id);
             return Ok(None);
         }
-        let snap = self.swap.take(id).expect("swapped head has an entry");
+        let snap = self
+            .swap
+            .take(id)?
+            .ok_or_else(|| anyhow!("swapped head {id} has no store entry"))?;
+        // Ladder rungs drop swapped entries before relayouting, so the
+        // snapshot's layout normally matches the pool; a shared disk store
+        // could still hand back an older-generation extent, so transcode
+        // defensively rather than let import fail.
+        let snap = if snap.layout.fingerprint() == self.pool.layout().fingerprint() {
+            snap
+        } else {
+            snap.transcode_to(self.pool.layout())?
+        };
         let handle = self.pool.alloc_seq();
         self.pool.import_seq(handle, &snap)?;
         // Same rule as swap-out: bytes come from the snapshot's recorded
@@ -1235,7 +1344,24 @@ impl Engine {
         for (acc, b) in self.stats.swap_pcie_bytes_by_rung.iter_mut().zip(by_rung) {
             *acc += b;
         }
-        let dt = transfer_time_s(snapshot_bytes(&snap));
+        let bytes = snapshot_bytes(&snap);
+        if self.swap.disk_tier() {
+            // The disk leg runs first (page file → host), then PCIe.
+            for (acc, b) in self.stats.store_disk_bytes_by_rung.iter_mut().zip(by_rung) {
+                *acc += b;
+            }
+            let ddt = disk_transfer_time_s(bytes);
+            self.emit(
+                self.stats.sim_time_s,
+                EventKind::StoreRead {
+                    id,
+                    bytes_by_rung: by_rung.map(|b| b as u64),
+                    dur_s: ddt,
+                },
+            );
+            self.stats.sim_time_s += ddt;
+        }
+        let dt = transfer_time_s(bytes);
         self.emit(
             self.stats.sim_time_s,
             EventKind::SwapIn { id, bytes_by_rung: by_rung.map(|b| b as u64), dur_s: dt },
@@ -1436,11 +1562,81 @@ impl Engine {
             let cap = self.prefix_match_cap(self.seqs[&id].seq_tokens.len());
             let handle = self.pool.alloc_seq();
             let mut hit_tokens = 0usize;
-            if let Some(pc) = self.prefix.as_mut() {
-                let (tokens, blocks) = pc.lookup(&self.seqs[&id].seq_tokens, cap);
-                if tokens > 0 {
-                    self.pool.adopt_blocks(handle, &blocks, tokens)?;
-                    hit_tokens = tokens;
+            if self.prefix.is_some() {
+                // Host-global store first: adopt its chain when it resolves
+                // strictly deeper than the local in-pool index would — the
+                // bytes then come off disk (priced below) and immediately
+                // seed the local index for this replica's siblings.
+                let local_peek = self
+                    .prefix
+                    .as_ref()
+                    .map(|pc| pc.peek_hit_tokens(&self.seqs[&id].seq_tokens, cap))
+                    .unwrap_or(0);
+                let resolved = self.store.as_ref().and_then(|st| {
+                    resolve_shared_prefix(
+                        st,
+                        &self.seqs[&id].seq_tokens,
+                        self.pool.layout(),
+                        self.pool.block_tokens(),
+                        cap,
+                    )
+                });
+                if let Some(hit) = resolved.filter(|h| h.tokens > local_peek) {
+                    let st = self.store.clone().expect("hit resolved from a store");
+                    // A block evicted between resolve and fetch is a miss,
+                    // not an error; corruption propagates (fail closed).
+                    if let Some((snap, receipt)) = fetch_chain(&st, &hit)? {
+                        if snap.kv_heads == m.n_kv_heads && snap.head_dim == m.head_dim {
+                            let snap = if snap.layout.fingerprint()
+                                == self.pool.layout().fingerprint()
+                            {
+                                snap
+                            } else {
+                                // Cross-layout adoption: a wider replica's
+                                // blocks re-quantize bit-identically to a
+                                // fresh append at this pool's layout.
+                                snap.transcode_to(self.pool.layout())?
+                            };
+                            self.pool.import_seq(handle, &snap)?;
+                            let by_rung = receipt.bytes_by_rung;
+                            for (acc, b) in
+                                self.stats.store_disk_bytes_by_rung.iter_mut().zip(by_rung)
+                            {
+                                *acc += b;
+                            }
+                            let bytes = receipt.snapshot_bytes();
+                            let ddt = disk_transfer_time_s(bytes);
+                            self.emit(
+                                self.stats.sim_time_s,
+                                EventKind::StoreRead {
+                                    id,
+                                    bytes_by_rung: by_rung.map(|b| b as u64),
+                                    dur_s: ddt,
+                                },
+                            );
+                            // Disk → host, then host → device over PCIe.
+                            self.stats.sim_time_s += ddt + transfer_time_s(bytes);
+                            hit_tokens = snap.len;
+                            self.stats.store_prefix_hits += 1;
+                            self.stats.store_prefix_hit_tokens += snap.len;
+                            let n_blocks = snap.len / self.pool.block_tokens();
+                            let blocks: Vec<usize> =
+                                self.pool.seq_blocks(handle)[..n_blocks].to_vec();
+                            let s = &self.seqs[&id];
+                            if let Some(pc) = self.prefix.as_mut() {
+                                pc.insert(&mut self.pool, &s.seq_tokens[..snap.len], &blocks);
+                            }
+                        }
+                    }
+                }
+            }
+            if hit_tokens == 0 {
+                if let Some(pc) = self.prefix.as_mut() {
+                    let (tokens, blocks) = pc.lookup(&self.seqs[&id].seq_tokens, cap);
+                    if tokens > 0 {
+                        self.pool.adopt_blocks(handle, &blocks, tokens)?;
+                        hit_tokens = tokens;
+                    }
                 }
             }
             self.emit(
@@ -1560,6 +1756,61 @@ impl Engine {
                 let s = &self.seqs[&id];
                 if let Some(pc) = self.prefix.as_mut() {
                     pc.insert(&mut self.pool, &s.seq_tokens[..n_full * bt], &blocks);
+                }
+                // Publish the newly completed blocks to the host-global
+                // store so other replicas — and restarted processes — can
+                // adopt them. Chain keys another replica already published
+                // are skipped; a full store skips silently (backpressure,
+                // not failure: `rejected_full` counts it store-side).
+                if let (Some(store), Some(root)) = (self.store.clone(), self.store_root) {
+                    let prev = self.seqs[&id].indexed_blocks;
+                    let keys = chain_keys_under(
+                        root,
+                        &self.seqs[&id].seq_tokens[..n_full * bt],
+                        bt,
+                        n_full,
+                    );
+                    let mut exported: Option<crate::kvcache::SeqSnapshot> = None;
+                    let mut merged: Option<StoreReceipt> = None;
+                    let mut published = 0usize;
+                    for b in prev..n_full {
+                        if store.contains_prefix(keys[b]) {
+                            continue;
+                        }
+                        if exported.is_none() {
+                            exported = Some(self.pool.export_seq(handle)?);
+                        }
+                        let block_snap =
+                            exported.as_ref().unwrap().slice_tokens(b * bt, bt)?;
+                        if let Some(receipt) =
+                            store.publish_prefix_block(root, keys[b], &block_snap)?
+                        {
+                            published += 1;
+                            match merged.as_mut() {
+                                Some(acc) => acc.merge(&receipt),
+                                None => merged = Some(receipt),
+                            }
+                        }
+                    }
+                    if let Some(receipt) = merged {
+                        self.stats.store_published_blocks += published;
+                        let by_rung = receipt.bytes_by_rung;
+                        for (acc, b) in
+                            self.stats.store_disk_bytes_by_rung.iter_mut().zip(by_rung)
+                        {
+                            *acc += b;
+                        }
+                        let ddt = disk_transfer_time_s(receipt.snapshot_bytes());
+                        self.emit(
+                            self.stats.sim_time_s,
+                            EventKind::StoreWrite {
+                                id,
+                                bytes_by_rung: by_rung.map(|b| b as u64),
+                                dur_s: ddt,
+                            },
+                        );
+                        self.stats.sim_time_s += ddt;
+                    }
                 }
                 self.seqs.get_mut(&id).unwrap().indexed_blocks = n_full;
             }
@@ -1787,6 +2038,14 @@ impl Engine {
                 self.migration_exports.push((id, snap));
             }
             self.pool.free_seq(h);
+        } else if self.seqs[&id].swapped {
+            // The sequence ended while its KV sat host-side (e.g. a client
+            // cancel of a swapped victim). Release the entry without a
+            // swap-in: nothing crosses PCIe, so nothing is priced — and the
+            // budget blocks come back instead of leaking. The swap-out
+            // stays counted: those bytes really shipped.
+            self.swap.drop_entry(id);
+            self.seqs.get_mut(&id).unwrap().swapped = false;
         }
         let s = self.seqs.get_mut(&id).unwrap();
         s.phase = Phase::Finished(reason);
@@ -1826,5 +2085,23 @@ impl Engine {
         self.preempt_stats.oom_aborts += 1;
         eprintln!("request {id} aborted: {err}");
         Ok(StepReport { action: Action::Prefill, emitted: vec![], finished: vec![id] })
+    }
+
+    /// Cancel an in-flight request on behalf of the client. Returns `false`
+    /// when `id` is unknown or already finished. The sequence is finished
+    /// with [`FinishReason::Aborted`] from whatever state it is in —
+    /// queued, running, swapped-out, or pending-import — releasing pool
+    /// blocks and (via [`Engine::finish`]) any host-side swap entry
+    /// *without* pricing a swap-in that never happens.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if !self.seqs.contains_key(&id) {
+            return false;
+        }
+        self.waiting.retain(|x| *x != id);
+        self.running.retain(|x| *x != id);
+        self.seqs.get_mut(&id).unwrap().abort_reason = Some("cancelled by client".into());
+        self.finish(id, FinishReason::Aborted);
+        self.stats.aborted += 1;
+        true
     }
 }

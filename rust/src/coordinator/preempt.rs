@@ -22,7 +22,7 @@
 //! Pure functions, unit-tested in isolation; the engine feeds them live
 //! pool/prefix state.
 
-use crate::kvcache::swap::transfer_time_s;
+use crate::kvcache::swap::{disk_transfer_time_s, transfer_time_s};
 
 /// How a preempted victim's KV is preserved.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +162,16 @@ impl VictimCost {
         }
     }
 
+    /// Re-price the swap round-trip for a disk-tier backend: on top of the
+    /// two PCIe hops, the bytes cross the page-file link twice
+    /// ([`disk_transfer_time_s`]). Recompute is unaffected, so a disk tier
+    /// shifts the break-even toward recompute for short victims — exactly
+    /// the behavior the slower-but-bigger tier should buy.
+    pub fn with_disk_tier(mut self) -> Self {
+        self.swap_time_s += 2.0 * disk_transfer_time_s(self.swap_bytes + self.scale_bytes);
+        self
+    }
+
     /// The cheaper mechanism for this victim. Ties go to recompute — it
     /// leaves the swap budget untouched.
     pub fn preferred(&self) -> PreemptMechanism {
@@ -294,6 +304,23 @@ mod tests {
         let adaptive = pick_victim(&[(1, dear), (2, cached)], None);
         assert_eq!(adaptive, Some((2, PreemptMechanism::Recompute)));
         assert_eq!(pick_victim(&[], None), None);
+    }
+
+    #[test]
+    fn disk_tier_adds_a_round_trip_and_spares_recompute() {
+        let base = VictimCost::estimate(4, 16, tcb(KvPrecision::Int8, 8), TSB, 60, 0);
+        let disk = base.with_disk_tier();
+        let extra = 2.0 * crate::kvcache::swap::disk_transfer_time_s(
+            base.swap_bytes + base.scale_bytes,
+        );
+        assert!((disk.swap_time_s - base.swap_time_s - extra).abs() < 1e-12);
+        assert_eq!(disk.recompute_time_s, base.recompute_time_s);
+        assert_eq!(disk.swap_bytes, base.swap_bytes);
+        // A short victim that barely preferred swap flips to recompute
+        // once the disk term lands.
+        let short = VictimCost::estimate(1, 16, tcb(KvPrecision::F32, 8), TSB, 22, 0);
+        assert_eq!(short.preferred(), PreemptMechanism::Swap);
+        assert_eq!(short.with_disk_tier().preferred(), PreemptMechanism::Recompute);
     }
 
     #[test]

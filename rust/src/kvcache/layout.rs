@@ -32,6 +32,15 @@ impl KvLayout {
         Ok(Self::uniform(KvPrecision::from_dtype(dt)?, n_layers))
     }
 
+    /// Layout from an explicit per-layer precision list (the store codec's
+    /// decode path; the list length is the layer count).
+    pub fn from_precs(precs: Vec<KvPrecision>) -> Result<Self> {
+        if precs.is_empty() {
+            bail!("kv layout needs at least one layer");
+        }
+        Ok(Self { precs })
+    }
+
     /// Parse a CLI/config layout spec. Accepted forms:
     ///
     /// * `kv8` — uniform across all layers;

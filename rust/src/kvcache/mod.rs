@@ -22,4 +22,4 @@ pub mod swap;
 pub use layout::KvLayout;
 pub use pool::{KvPool, KvPrecision, RelayoutReport, SeqHandle, SeqSnapshot};
 pub use prefix::{route_key, PrefixCache, PrefixCacheStats};
-pub use swap::{SwapStats, SwapStore};
+pub use swap::{PagedSwapStore, SwapBackend, SwapStats, SwapStore};

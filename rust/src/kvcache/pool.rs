@@ -208,6 +208,30 @@ impl SeqSnapshot {
             layout: target.clone(),
         })
     }
+
+    /// A snapshot of `len` tokens starting at token `start` — both the
+    /// code and scale vectors are dense per-token arrays, so a token range
+    /// is a straight slice of each. The prefix publisher uses this to cut
+    /// one exported sequence into block-sized store entries.
+    pub fn slice_tokens(&self, start: usize, len: usize) -> Result<SeqSnapshot> {
+        if start + len > self.len {
+            bail!(
+                "snapshot slice {start}..{} out of range (snapshot holds {} tokens)",
+                start + len,
+                self.len
+            );
+        }
+        let tcb = self.layout.token_code_bytes(self.kv_heads, self.head_dim);
+        let tsc = self.layout.n_layers() * 2 * self.kv_heads;
+        Ok(SeqSnapshot {
+            len,
+            codes: self.codes[start * tcb..(start + len) * tcb].to_vec(),
+            scales: self.scales[start * tsc..(start + len) * tsc].to_vec(),
+            kv_heads: self.kv_heads,
+            head_dim: self.head_dim,
+            layout: self.layout.clone(),
+        })
+    }
 }
 
 /// One contiguous extent of a [`GatherPlan`]: `len` tokens of batch entry

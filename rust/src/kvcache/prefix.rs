@@ -99,6 +99,29 @@ fn chain_key(prev: u64, tokens: &[i32]) -> u64 {
     h
 }
 
+/// The chain keys of the first `max_blocks` full token blocks of `prompt`
+/// under `root` — the exact key sequence [`PrefixCache::lookup`] walks.
+/// The host-global store (`store::resolve_shared_prefix`) uses this to
+/// probe and publish under the same key space as the per-replica index, so
+/// a block published by one replica resolves on every other.
+pub(crate) fn chain_keys_under(
+    root: u64,
+    prompt: &[i32],
+    block_tokens: usize,
+    max_blocks: usize,
+) -> Vec<u64> {
+    let mut keys = Vec::new();
+    let mut prev = root;
+    for chunk in prompt.chunks_exact(block_tokens) {
+        if keys.len() >= max_blocks {
+            break;
+        }
+        prev = chain_key(prev, chunk);
+        keys.push(prev);
+    }
+    keys
+}
+
 /// Precision-agnostic routing key over the first `max_blocks` full token
 /// blocks of `prompt` — the same chain-hash scheme the index uses, rooted
 /// at a fixed routing constant instead of a precision seed. The cluster's

@@ -1,23 +1,37 @@
-//! Host-side KV swap store: where preempted sequences' quantized blocks
-//! live while the device pool is oversubscribed (DESIGN.md §8).
+//! Host-side KV swap tier: where preempted sequences' quantized blocks
+//! live while the device pool is oversubscribed (DESIGN.md §8, §14).
 //!
-//! The store holds byte-exact [`SeqSnapshot`]s keyed by request id, with a
-//! budget in pool blocks mirroring a pinned-host-memory allocation. Because
-//! snapshots carry the pool's *quantized* codes, swap traffic scales with
-//! [`KvPrecision::row_bytes`] — a kv4 sequence ships ~4× fewer bytes than
-//! the same sequence at kv16, which is exactly why the victim cost model
-//! ([`crate::coordinator::preempt`]) prices low-precision victims cheaper.
+//! The tier is a [`SwapBackend`] with two implementations:
+//!
+//! * [`SwapStore`] — the original in-memory store: byte-exact
+//!   [`SeqSnapshot`]s keyed by request id, budget in pool blocks mirroring
+//!   a pinned-host-memory allocation. Fast, RAM-bounded, dies with the
+//!   process.
+//! * [`PagedSwapStore`] — the same contract backed by a
+//!   [`PageFileStore`](crate::store::PageFileStore) page file: snapshots
+//!   persist across restarts, capacity is disk-bounded, and every read
+//!   re-validates checksums (corruption fails closed instead of feeding
+//!   garbage KV).
+//!
+//! Because snapshots carry the pool's *quantized* codes, swap traffic
+//! scales with [`KvPrecision::row_bytes`] — a kv4 sequence ships ~4× fewer
+//! bytes than the same sequence at kv16, which is exactly why the victim
+//! cost model ([`crate::coordinator::preempt`]) prices low-precision
+//! victims cheaper.
 //!
 //! Transfers are modeled, not executed: [`transfer_time_s`] converts a
 //! payload size into PCIe time that the engine accumulates in
-//! `EngineStats::sim_time_s`, the same bookkeeping the sim backend uses for
-//! device iterations.
+//! `EngineStats::sim_time_s`, and the paged tier adds a
+//! [`disk_transfer_time_s`] term on the same modeled clock (NVMe-class
+//! bandwidth with a deeper latency floor).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use super::pool::SeqSnapshot;
+use crate::store::PageFileStore;
 
 /// Modeled host↔device interconnect bandwidth, bytes/second (PCIe 4.0 x16
 /// effective ≈ 25 GB/s; we model the conservative end).
@@ -25,13 +39,25 @@ pub const PCIE_BANDWIDTH_BPS: f64 = 16.0e9;
 /// Fixed per-transfer latency (DMA setup + driver), seconds.
 pub const PCIE_LATENCY_S: f64 = 10.0e-6;
 
+/// Modeled disk-tier bandwidth, bytes/second (NVMe-class sequential ≈
+/// 6 GB/s).
+pub const DISK_BANDWIDTH_BPS: f64 = 6.0e9;
+/// Fixed per-operation disk latency (submission + flash), seconds.
+pub const DISK_LATENCY_S: f64 = 80.0e-6;
+
 /// Modeled one-way transfer time for `bytes` over the host link.
 pub fn transfer_time_s(bytes: usize) -> f64 {
     PCIE_LATENCY_S + bytes as f64 / PCIE_BANDWIDTH_BPS
 }
 
-/// Total PCIe payload of one snapshot: quantized codes plus the f32 scale
-/// rows — exactly the bytes the engine charges to `sim_time_s` per
+/// Modeled one-way disk time for `bytes` — the extra term a paged-backend
+/// swap pays on top of the PCIe hop.
+pub fn disk_transfer_time_s(bytes: usize) -> f64 {
+    DISK_LATENCY_S + bytes as f64 / DISK_BANDWIDTH_BPS
+}
+
+/// Total transfer payload of one snapshot: quantized codes plus the f32
+/// scale rows — exactly the bytes the engine charges to `sim_time_s` per
 /// transfer (and attributes per rung in trace events).
 pub fn snapshot_bytes(snap: &SeqSnapshot) -> usize {
     snap.code_bytes() + snap.scales.len() * 4
@@ -50,13 +76,88 @@ pub struct SwapStats {
     /// Pool blocks restored device-ward (cumulative).
     pub swapped_in_blocks: usize,
     /// Snapshots discarded without a swap-in (victim downgraded to
-    /// recompute because the pool could not take the restore).
+    /// recompute because the pool could not take the restore, or its
+    /// request ended while parked).
     pub dropped: usize,
     /// High-water mark of resident host blocks.
     pub peak_blocks: usize,
 }
 
-/// The store. One per engine; budget in pool-sized blocks.
+/// The swap-tier contract the engine programs against. Backends differ in
+/// where parked bytes live (RAM vs page file) and what a transfer costs on
+/// the modeled clock; the preemption state machine is backend-agnostic.
+pub trait SwapBackend: std::fmt::Debug + Send {
+    /// Park a victim's snapshot under its request id. Errors if the id is
+    /// already swapped or capacity cannot take it (the caller should have
+    /// checked [`SwapBackend::can_hold`] and fallen back to recompute).
+    fn insert(&mut self, id: u64, snap: SeqSnapshot) -> Result<()>;
+
+    /// Remove and return a snapshot for swap-in. Counts as a swap-in.
+    /// `Err` is the fail-closed path: the parked bytes exist but cannot be
+    /// trusted (paged backend checksum mismatch) — never silently `None`.
+    fn take(&mut self, id: u64) -> Result<Option<SeqSnapshot>>;
+
+    /// Remove and return a snapshot for *migration* (replica drain): the
+    /// payload leaves the store but is neither a swap-in nor a drop, so
+    /// only residency accounting moves. Keeping [`SwapStats`] untouched
+    /// preserves the engine invariant that swap counters reconcile with
+    /// preemption counters even across a drain.
+    fn evacuate(&mut self, id: u64) -> Result<Option<SeqSnapshot>>;
+
+    /// Discard a snapshot without restoring it (the victim was downgraded
+    /// to recompute, or its request ended while parked).
+    fn drop_entry(&mut self, id: u64) -> bool;
+
+    /// Is this request currently swapped out?
+    fn contains(&self, id: u64) -> bool;
+
+    /// KV tokens parked for `id` (0 when not swapped).
+    fn tokens_of(&self, id: u64) -> usize;
+
+    /// Would a `tokens`-token snapshot fit the remaining capacity?
+    fn can_hold(&self, tokens: usize) -> bool;
+
+    /// Host blocks currently resident.
+    fn used_blocks(&self) -> usize;
+
+    /// Max resident blocks (0 = unbounded).
+    fn budget_blocks(&self) -> usize;
+
+    /// Swapped-out sequences currently resident.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fraction of the budget in use, or `None` when the budget is
+    /// unbounded — there is no denominator to report against. Callers
+    /// must not coerce `None` to 0: an unbounded store with resident
+    /// blocks is under real host pressure, and the old fake-zero answer
+    /// hid it from the stats JSON. Pair with
+    /// [`used_blocks`](SwapBackend::used_blocks), meaningful always.
+    fn utilization(&self) -> Option<f64> {
+        (self.budget_blocks() > 0)
+            .then(|| self.used_blocks() as f64 / self.budget_blocks() as f64)
+    }
+
+    /// Lifetime counters.
+    fn stats(&self) -> SwapStats;
+
+    /// Whether transfers through this backend also cross the disk tier
+    /// (the engine adds [`disk_transfer_time_s`] and emits
+    /// `StoreWrite`/`StoreRead` events when true).
+    fn disk_tier(&self) -> bool {
+        false
+    }
+
+    /// The shared page-file store, when this backend is disk-backed.
+    fn store(&self) -> Option<&Arc<PageFileStore>> {
+        None
+    }
+}
+
+/// The in-memory backend. One per engine; budget in pool-sized blocks.
 #[derive(Debug, Default)]
 pub struct SwapStore {
     /// Max resident blocks (0 = unbounded).
@@ -73,48 +174,13 @@ impl SwapStore {
         Self { budget_blocks, block_tokens, ..Self::default() }
     }
 
-    pub fn budget_blocks(&self) -> usize {
-        self.budget_blocks
-    }
-
-    /// Host blocks currently resident.
-    pub fn used_blocks(&self) -> usize {
-        self.used_blocks
-    }
-
-    /// Swapped-out sequences currently resident.
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-
-    /// Fraction of the budget in use, or `None` when the budget is
-    /// unbounded — there is no denominator to report against. Callers
-    /// must not coerce `None` to 0: an unbounded store with resident
-    /// blocks is under real host pressure, and the old fake-zero answer
-    /// hid it from the stats JSON. Pair with
-    /// [`used_blocks`](Self::used_blocks), which is meaningful always.
-    pub fn utilization(&self) -> Option<f64> {
-        (self.budget_blocks > 0).then(|| self.used_blocks as f64 / self.budget_blocks as f64)
-    }
-
     fn blocks_of(&self, snap: &SeqSnapshot) -> usize {
         snap.len.div_ceil(self.block_tokens.max(1))
     }
+}
 
-    /// Would a `tokens`-token snapshot fit the remaining budget?
-    pub fn can_hold(&self, tokens: usize) -> bool {
-        self.budget_blocks == 0
-            || self.used_blocks + tokens.div_ceil(self.block_tokens.max(1)) <= self.budget_blocks
-    }
-
-    /// Park a victim's snapshot under its request id. Errors if the id is
-    /// already swapped or the budget cannot take it (the caller should
-    /// have checked [`SwapStore::can_hold`] and fallen back to recompute).
-    pub fn insert(&mut self, id: u64, snap: SeqSnapshot) -> Result<()> {
+impl SwapBackend for SwapStore {
+    fn insert(&mut self, id: u64, snap: SeqSnapshot) -> Result<()> {
         if self.entries.contains_key(&id) {
             return Err(anyhow!("request {id} is already swapped out"));
         }
@@ -134,39 +200,21 @@ impl SwapStore {
         Ok(())
     }
 
-    /// Is this request currently swapped out?
-    pub fn contains(&self, id: u64) -> bool {
-        self.entries.contains_key(&id)
-    }
-
-    /// KV tokens parked for `id` (0 when not swapped).
-    pub fn tokens_of(&self, id: u64) -> usize {
-        self.entries.get(&id).map(|(s, _)| s.len).unwrap_or(0)
-    }
-
-    /// Remove and return a snapshot for swap-in. Counts as a swap-in.
-    pub fn take(&mut self, id: u64) -> Option<SeqSnapshot> {
-        let (snap, blocks) = self.entries.remove(&id)?;
+    fn take(&mut self, id: u64) -> Result<Option<SeqSnapshot>> {
+        let Some((snap, blocks)) = self.entries.remove(&id) else { return Ok(None) };
         self.used_blocks -= blocks;
         self.stats.swap_ins += 1;
         self.stats.swapped_in_blocks += blocks;
-        Some(snap)
+        Ok(Some(snap))
     }
 
-    /// Remove and return a snapshot for *migration* (replica drain): the
-    /// payload leaves the store but is neither a swap-in nor a drop, so
-    /// only the residency accounting moves. Keeping [`SwapStats`] untouched
-    /// preserves the engine invariant that swap counters reconcile with
-    /// preemption counters even across a drain.
-    pub fn evacuate(&mut self, id: u64) -> Option<SeqSnapshot> {
-        let (snap, blocks) = self.entries.remove(&id)?;
+    fn evacuate(&mut self, id: u64) -> Result<Option<SeqSnapshot>> {
+        let Some((snap, blocks)) = self.entries.remove(&id) else { return Ok(None) };
         self.used_blocks -= blocks;
-        Some(snap)
+        Ok(Some(snap))
     }
 
-    /// Discard a snapshot without restoring it (the victim was downgraded
-    /// to recompute).
-    pub fn drop_entry(&mut self, id: u64) -> bool {
+    fn drop_entry(&mut self, id: u64) -> bool {
         match self.entries.remove(&id) {
             Some((_, blocks)) => {
                 self.used_blocks -= blocks;
@@ -176,11 +224,199 @@ impl SwapStore {
             None => false,
         }
     }
+
+    fn contains(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    fn tokens_of(&self, id: u64) -> usize {
+        self.entries.get(&id).map(|(s, _)| s.len).unwrap_or(0)
+    }
+
+    fn can_hold(&self, tokens: usize) -> bool {
+        self.budget_blocks == 0
+            || self.used_blocks + tokens.div_ceil(self.block_tokens.max(1)) <= self.budget_blocks
+    }
+
+    fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    fn budget_blocks(&self) -> usize {
+        self.budget_blocks
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn stats(&self) -> SwapStats {
+        self.stats
+    }
+}
+
+/// The page-file-backed backend: same contract, parked bytes live in the
+/// shared [`PageFileStore`] under this engine's namespace. Blocks-based
+/// budget still applies (it models pinned staging memory); on top of it
+/// the store's own page capacity backpressures through
+/// [`SwapBackend::can_hold`].
+#[derive(Debug)]
+pub struct PagedSwapStore {
+    store: Arc<PageFileStore>,
+    /// Snapshot namespace in the shared store (one per engine, so replicas
+    /// sharing a file never collide on request ids).
+    ns: u64,
+    block_tokens: usize,
+    budget_blocks: usize,
+    used_blocks: usize,
+    /// id → blocks charged at insert (sizing must not require disk reads).
+    entries: HashMap<u64, usize>,
+    stats: SwapStats,
+    /// Upper-bound wire bytes per token for sizing `can_hold` probes,
+    /// taken from the pool layout at construction. The ladder only ever
+    /// narrows precision, so the construction-time layout bounds every
+    /// later snapshot.
+    bytes_per_token_hint: usize,
+}
+
+impl PagedSwapStore {
+    pub fn new(
+        store: Arc<PageFileStore>,
+        block_tokens: usize,
+        budget_blocks: usize,
+        bytes_per_token_hint: usize,
+    ) -> Self {
+        let ns = store.alloc_namespace();
+        Self {
+            store,
+            ns,
+            block_tokens,
+            budget_blocks,
+            used_blocks: 0,
+            entries: HashMap::new(),
+            stats: SwapStats::default(),
+            bytes_per_token_hint,
+        }
+    }
+
+    /// This backend's snapshot namespace in the shared store.
+    pub fn namespace(&self) -> u64 {
+        self.ns
+    }
+
+    fn blocks_of(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens.max(1))
+    }
+}
+
+impl SwapBackend for PagedSwapStore {
+    fn insert(&mut self, id: u64, snap: SeqSnapshot) -> Result<()> {
+        if self.entries.contains_key(&id) {
+            return Err(anyhow!("request {id} is already swapped out"));
+        }
+        let blocks = self.blocks_of(snap.len);
+        if self.budget_blocks > 0 && self.used_blocks + blocks > self.budget_blocks {
+            return Err(anyhow!(
+                "swap budget full ({} + {blocks} > {} blocks)",
+                self.used_blocks,
+                self.budget_blocks
+            ));
+        }
+        self.store.put_snapshot(self.ns, id, &snap)?;
+        self.used_blocks += blocks;
+        self.stats.swap_outs += 1;
+        self.stats.swapped_out_blocks += blocks;
+        self.stats.peak_blocks = self.stats.peak_blocks.max(self.used_blocks);
+        self.entries.insert(id, blocks);
+        Ok(())
+    }
+
+    fn take(&mut self, id: u64) -> Result<Option<SeqSnapshot>> {
+        let Some(blocks) = self.entries.remove(&id) else { return Ok(None) };
+        self.used_blocks -= blocks;
+        // Fail closed: a checksum mismatch surfaces as Err with the entry
+        // already released — the bytes are untrusted either way.
+        let got = self.store.get_snapshot(self.ns, id)?;
+        let Some((snap, _)) = got else {
+            return Err(anyhow!("swapped request {id} missing from the page file"));
+        };
+        self.store.delete_snapshot(self.ns, id)?;
+        self.stats.swap_ins += 1;
+        self.stats.swapped_in_blocks += blocks;
+        Ok(Some(snap))
+    }
+
+    fn evacuate(&mut self, id: u64) -> Result<Option<SeqSnapshot>> {
+        let Some(blocks) = self.entries.remove(&id) else { return Ok(None) };
+        self.used_blocks -= blocks;
+        let got = self.store.get_snapshot(self.ns, id)?;
+        let Some((snap, _)) = got else {
+            return Err(anyhow!("swapped request {id} missing from the page file"));
+        };
+        self.store.delete_snapshot(self.ns, id)?;
+        Ok(Some(snap))
+    }
+
+    fn drop_entry(&mut self, id: u64) -> bool {
+        match self.entries.remove(&id) {
+            Some(blocks) => {
+                self.used_blocks -= blocks;
+                // Best-effort page free; the entry is gone either way.
+                let _ = self.store.delete_snapshot(self.ns, id);
+                self.stats.dropped += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    fn tokens_of(&self, id: u64) -> usize {
+        if !self.entries.contains_key(&id) {
+            return 0;
+        }
+        self.store.snapshot_tokens(self.ns, id).unwrap_or(0)
+    }
+
+    fn can_hold(&self, tokens: usize) -> bool {
+        let within_budget = self.budget_blocks == 0
+            || self.used_blocks + self.blocks_of(tokens) <= self.budget_blocks;
+        within_budget
+            && self.store.has_room(self.store.pages_for(tokens * self.bytes_per_token_hint))
+    }
+
+    fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    fn budget_blocks(&self) -> usize {
+        self.budget_blocks
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn stats(&self) -> SwapStats {
+        self.stats
+    }
+
+    fn disk_tier(&self) -> bool {
+        true
+    }
+
+    fn store(&self) -> Option<&Arc<PageFileStore>> {
+        Some(&self.store)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::StoreConfig;
 
     fn snap(tokens: usize) -> SeqSnapshot {
         // 1 layer × 1 head × head_dim 3 at Int8: 2 × 1 × 3 = 6 code bytes
@@ -210,7 +446,7 @@ mod tests {
         assert!(s.insert(2, snap(8)).is_err(), "budget enforced");
         assert!(s.insert(1, snap(1)).is_err(), "double swap-out rejected");
 
-        let got = s.take(1).unwrap();
+        let got = s.take(1).unwrap().unwrap();
         assert_eq!(got, snap(9), "snapshot returned intact");
         assert_eq!(s.used_blocks(), 0);
         assert!(s.is_empty());
@@ -232,7 +468,7 @@ mod tests {
         assert_eq!(s.used_blocks(), 3, "…but used blocks always report");
         assert!(s.drop_entry(7));
         assert!(!s.drop_entry(7));
-        assert!(s.take(7).is_none());
+        assert!(s.take(7).unwrap().is_none());
         assert_eq!(s.stats.dropped, 1);
         assert_eq!(s.used_blocks(), 0);
     }
@@ -242,10 +478,10 @@ mod tests {
         let mut s = SwapStore::new(4, 8);
         s.insert(3, snap(9)).unwrap(); // 3 blocks
         let before = s.stats;
-        let got = s.evacuate(3).expect("entry present");
+        let got = s.evacuate(3).unwrap().expect("entry present");
         assert_eq!(got, snap(9), "payload intact for migration");
         assert_eq!(s.used_blocks(), 0, "residency released");
-        assert!(s.evacuate(3).is_none(), "gone after evacuation");
+        assert!(s.evacuate(3).unwrap().is_none(), "gone after evacuation");
         // Neither a swap-in nor a drop: lifetime counters unchanged.
         assert_eq!(s.stats, before, "drain must not perturb swap stats");
     }
@@ -260,5 +496,57 @@ mod tests {
         // 16 MB at 16 GB/s ≈ 1 ms.
         let t = transfer_time_s(16 << 20);
         assert!((0.9e-3..1.2e-3).contains(&t), "{t}");
+        // The disk hop is strictly slower than the PCIe hop.
+        assert!(disk_transfer_time_s(16 << 20) > t);
+        assert!(disk_transfer_time_s(0) >= DISK_LATENCY_S);
+    }
+
+    fn paged(name: &str, budget_blocks: usize, max_pages: usize) -> PagedSwapStore {
+        let dir = std::env::temp_dir().join(format!("tmkv-swap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        let store =
+            crate::store::PageFileStore::open(StoreConfig::with_geometry(path, 512, max_pages))
+                .unwrap();
+        // snap() wire bytes/token: 6 code + 2×4 scale = 14.
+        PagedSwapStore::new(store, 4, budget_blocks, 14)
+    }
+
+    #[test]
+    fn paged_backend_honours_the_swap_contract() {
+        let mut s = paged("contract.pages", 4, 0);
+        assert!(s.disk_tier());
+        s.insert(1, snap(9)).unwrap();
+        assert!(s.contains(1));
+        assert_eq!(s.tokens_of(1), 9);
+        assert_eq!(s.used_blocks(), 3);
+        assert!(s.insert(1, snap(1)).is_err(), "double swap-out rejected");
+        assert!(!s.can_hold(8), "blocks budget still applies on disk");
+        let got = s.take(1).unwrap().unwrap();
+        assert_eq!(got, snap(9), "round-trips byte-exactly through the page file");
+        assert!(s.is_empty());
+        assert_eq!(s.store().unwrap().stats().snapshots, 0, "pages freed after swap-in");
+        let st = s.stats();
+        assert_eq!((st.swap_outs, st.swap_ins, st.swapped_out_blocks), (1, 1, 3));
+        // Drop path frees pages without a swap-in.
+        s.insert(2, snap(4)).unwrap();
+        assert!(s.drop_entry(2));
+        assert_eq!(s.stats().dropped, 1);
+        assert_eq!(s.store().unwrap().stats().snapshots, 0);
+    }
+
+    #[test]
+    fn paged_backend_backpressures_on_page_capacity() {
+        // 2 record pages total; each snap(4) record fits in one page.
+        let mut s = paged("capacity.pages", 0, 2);
+        assert!(s.can_hold(4));
+        s.insert(1, snap(4)).unwrap();
+        s.insert(2, snap(4)).unwrap();
+        assert!(!s.can_hold(4), "page capacity backpressures can_hold");
+        assert!(s.insert(3, snap(4)).is_err(), "store full propagates");
+        assert!(!s.contains(3));
+        s.take(1).unwrap().unwrap();
+        assert!(s.can_hold(4), "freed pages reopen capacity");
     }
 }

@@ -48,6 +48,7 @@ pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod serving_sim;
+pub mod store;
 pub mod trace;
 pub mod util;
 pub mod workload;

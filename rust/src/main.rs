@@ -58,12 +58,13 @@ USAGE:
                   [--replicas N] [--router-policy round_robin|least_loaded|prefix_affinity]
                   [--replica-spec fmt,kv,device[,tpN][,layout=…][,ladder=…]]...
                   [--queue-depth N] [--affinity-blocks N]
+                  [--store-path FILE] [--store-pages N] [--page-size B]
                   [--trace] [--trace-ring N] [--trace-out FILE]
   turbomind run   [--requests N] [--replicas N] [--seed S] [--trace-out FILE]
                   [--disagg] [--prefill-replicas N] [--decode-replicas N]
                   [--prefill-spec fmt,kv,device[,…]]... [--decode-spec fmt,kv,device[,…]]...
                   [engine knobs as for serve]
-  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|disagg|hotpath|all>
+  turbomind bench <fig11|fig12|...|fig28|table2|prefix_cache|preempt|router|ladder|disagg|hotpath|persist|all>
                   [--trace-out FILE]
   turbomind pack  [--k K] [--n N]
   turbomind info  [--artifacts DIR]
@@ -104,6 +105,18 @@ to swap/recompute. Replica specs take the same knobs per replica as
 `layout=l0:kv16;l1:kv8` (`;` between layers) and `ladder=auto` segments.
 Responses report `ladder_count` + `final_kv_layout`, and `{\"stats\":
 true}` reports the pool's current layout and ladder counters.
+
+`--store-path FILE` opens (creating on first use) the page-file-backed KV
+store (DESIGN.md §14). Swap preemption then persists victim snapshots to
+disk instead of RAM, completed prompt blocks publish to a host-global
+prefix store every replica shares (one prefill per *host*, not per
+replica), and rerunning against the same file warm-starts: recovered
+prefix blocks satisfy admissions bit-identically after a restart.
+`--store-pages N` caps the file at N record pages (0 = unbounded; full ⇒
+snapshots fall back to recompute, prefix publishes evict LRU), and
+`--page-size B` sets the page geometry (power of two ≥ 256, default 4096;
+must match the file being reopened). Disk traffic is priced on the
+modeled clock and reported as `store_read`/`store_write` trace events.
 
 `--trace` turns on the flight recorder (DESIGN.md §12): a bounded
 wait-free ring of typed lifecycle events stamped with the modeled clock.
@@ -170,8 +183,27 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         trace: args.flag("trace") || args.get("trace-out").is_some(),
         trace_ring_capacity: args
             .get_usize("trace-ring", turbomind::trace::DEFAULT_RING_CAPACITY),
+        store: open_store(args)?,
         ..EngineConfig::default()
     })
+}
+
+/// `--store-path FILE` opens (or creates) the page-file-backed KV store
+/// (DESIGN.md §14): the swap tier then persists snapshots to disk, prefix
+/// blocks publish to the host-global store, and a restart against the
+/// same file warm-starts from its recovered contents. `--store-pages N`
+/// caps the file (0 = unbounded), `--page-size B` sets the page geometry
+/// (power of two ≥ 256; must match an existing file).
+fn open_store(args: &Args) -> Result<Option<std::sync::Arc<turbomind::store::PageFileStore>>> {
+    let Some(path) = args.get("store-path") else {
+        return Ok(None);
+    };
+    let page_size = args.get_usize("page-size", turbomind::store::DEFAULT_PAGE_SIZE);
+    let max_pages = args.get_usize("store-pages", 0);
+    let cfg = turbomind::store::StoreConfig::with_geometry(path, page_size, max_pages);
+    let store = turbomind::store::PageFileStore::open(cfg)
+        .map_err(|e| anyhow::anyhow!("opening --store-path {path}: {e}"))?;
+    Ok(Some(store))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -299,7 +331,8 @@ fn traced_fleet_run(args: &Args, trace_out: Option<&str>) -> Result<()> {
     };
     for (snap, (label, dump)) in run.snapshots.iter().zip(&run.traces) {
         ensure!(dump.dropped == 0, "{label}: ring dropped {} events; raise --trace-ring", dump.dropped);
-        let (mut gather, mut transcode, mut swapped) = ([0usize; 3], [0usize; 3], [0usize; 3]);
+        let (mut gather, mut transcode, mut swapped, mut stored) =
+            ([0usize; 3], [0usize; 3], [0usize; 3], [0usize; 3]);
         for ev in &dump.events {
             match &ev.kind {
                 EventKind::PrefillChunk { gather_by_rung, .. }
@@ -307,6 +340,8 @@ fn traced_fleet_run(args: &Args, trace_out: Option<&str>) -> Result<()> {
                 EventKind::Ladder { bytes_by_rung, .. } => add(&mut transcode, bytes_by_rung),
                 EventKind::SwapOut { bytes_by_rung, .. }
                 | EventKind::SwapIn { bytes_by_rung, .. } => add(&mut swapped, bytes_by_rung),
+                EventKind::StoreWrite { bytes_by_rung, .. }
+                | EventKind::StoreRead { bytes_by_rung, .. } => add(&mut stored, bytes_by_rung),
                 _ => {}
             }
         }
@@ -326,19 +361,34 @@ fn traced_fleet_run(args: &Args, trace_out: Option<&str>) -> Result<()> {
             "{label}: trace swap bytes {swapped:?} != telemetry {:?}",
             snap.telemetry.swap_pcie_bytes_by_rung
         );
+        ensure!(
+            stored == snap.telemetry.store_disk_bytes_by_rung,
+            "{label}: trace store bytes {stored:?} != telemetry {:?}",
+            snap.telemetry.store_disk_bytes_by_rung
+        );
         eprintln!(
-            "  {label}: {} events | gather {:?} B | transcode {:?} B | swap {:?} B — reconciled",
+            "  {label}: {} events | gather {:?} B | transcode {:?} B | swap {:?} B | store {:?} B — reconciled",
             dump.events.len(),
             gather,
             transcode,
-            swapped
+            swapped,
+            stored
         );
     }
     let fleet = run.fleet_telemetry();
     eprintln!(
-        "fleet telemetry (kv16/kv8/kv4): gather {:?} | transcode {:?} | swap {:?}",
-        fleet.gather_hbm_bytes_by_rung, fleet.transcode_bytes_by_rung, fleet.swap_pcie_bytes_by_rung
+        "fleet telemetry (kv16/kv8/kv4): gather {:?} | transcode {:?} | swap {:?} | store {:?}",
+        fleet.gather_hbm_bytes_by_rung,
+        fleet.transcode_bytes_by_rung,
+        fleet.swap_pcie_bytes_by_rung,
+        fleet.store_disk_bytes_by_rung
     );
+    if ccfg.base.store.is_some() {
+        let hits: usize = run.snapshots.iter().map(|s| s.stats.store_prefix_hits).sum();
+        let published: usize =
+            run.snapshots.iter().map(|s| s.stats.store_published_blocks).sum();
+        eprintln!("store: {hits} prefix adoptions | {published} blocks published");
+    }
 
     let tracks = run.trace_tracks();
     let json = trace::chrome_trace(&tracks);

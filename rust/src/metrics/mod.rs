@@ -138,6 +138,12 @@ pub struct TelemetrySummary {
     /// extents. Kept separate from swap traffic so the swap ↔ preemption
     /// reconciliation stays exact under disaggregated serving.
     pub migrate_pcie_bytes_by_rung: [usize; 3],
+    /// Page-file store disk-tier bytes (disk-tier swap round trips plus
+    /// shared-prefix publications and adoptions) per rung, attributed from
+    /// each snapshot's recorded extents. Disjoint from the PCIe buckets —
+    /// a disk-tier swap shows the same bytes once here and once in
+    /// `swap_pcie_bytes_by_rung`, one per bus the bytes crossed.
+    pub store_disk_bytes_by_rung: [usize; 3],
     /// Per-layer resident-precision occupancy: how many of the pool's
     /// layers currently sit at each rung (a `KvLayout::rung_histogram`
     /// snapshot, not a counter — `merge` sums it across replicas into a
@@ -154,6 +160,7 @@ impl TelemetrySummary {
             self.transcode_bytes_by_rung[i] += other.transcode_bytes_by_rung[i];
             self.swap_pcie_bytes_by_rung[i] += other.swap_pcie_bytes_by_rung[i];
             self.migrate_pcie_bytes_by_rung[i] += other.migrate_pcie_bytes_by_rung[i];
+            self.store_disk_bytes_by_rung[i] += other.store_disk_bytes_by_rung[i];
             self.occupancy_layers_by_rung[i] += other.occupancy_layers_by_rung[i];
         }
     }
@@ -178,6 +185,11 @@ impl TelemetrySummary {
         self.migrate_pcie_bytes_by_rung.iter().sum()
     }
 
+    /// All-rung page-file disk-tier total.
+    pub fn store_disk_bytes(&self) -> usize {
+        self.store_disk_bytes_by_rung.iter().sum()
+    }
+
     /// The stats-probe object: three per-rung byte arrays, the occupancy
     /// histogram, and the rung-name legend.
     pub fn to_json(&self) -> Json {
@@ -190,6 +202,7 @@ impl TelemetrySummary {
             ("transcode_bytes_by_rung", rungs(self.transcode_bytes_by_rung)),
             ("swap_pcie_bytes_by_rung", rungs(self.swap_pcie_bytes_by_rung)),
             ("migrate_pcie_bytes_by_rung", rungs(self.migrate_pcie_bytes_by_rung)),
+            ("store_disk_bytes_by_rung", rungs(self.store_disk_bytes_by_rung)),
             ("occupancy_layers_by_rung", rungs(self.occupancy_layers_by_rung)),
         ])
     }
@@ -528,6 +541,7 @@ mod tests {
             transcode_bytes_by_rung: [0, s, 0],
             swap_pcie_bytes_by_rung: [s, 0, 7 * s],
             migrate_pcie_bytes_by_rung: [0, 5 * s, s],
+            store_disk_bytes_by_rung: [s, s, 0],
             occupancy_layers_by_rung: [1, 2, 1],
         };
         let parts = [mk(3), mk(11), mk(40)];
@@ -550,6 +564,7 @@ mod tests {
         assert_eq!(total.transcode_bytes(), 54);
         assert_eq!(total.swap_pcie_bytes(), 54 + 7 * 54);
         assert_eq!(total.migrate_pcie_bytes(), 5 * 54 + 54);
+        assert_eq!(total.store_disk_bytes(), 2 * 54);
         assert_eq!(total.occupancy_layers_by_rung, [3, 6, 3]);
         // The probe object round-trips with the rung legend attached.
         let j = Json::parse(&total.to_json().dump()).unwrap();

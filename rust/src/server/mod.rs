@@ -35,6 +35,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::Cluster;
 use crate::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use crate::kvcache::SwapBackend;
 use crate::metrics::MetricsCollector;
 use crate::util::json::{arr, obj, Json};
 

@@ -1,0 +1,266 @@
+//! Byte codecs for persisted store payloads: CRC-32 (IEEE), the
+//! [`SeqSnapshot`] wire format, and the [`KvLayout`] registry format.
+//!
+//! Every decode is fail-closed: any length, tag, or geometry that does not
+//! reconcile internally is a [`StoreError::Corrupt`], never a partially
+//! decoded value. The snapshot codec is self-describing (geometry + layout
+//! are inside the payload), so a recovered page can be validated without
+//! consulting any other page.
+
+use anyhow::Result;
+
+use super::StoreError;
+use crate::kvcache::pool::KvPrecision;
+use crate::kvcache::{KvLayout, SeqSnapshot};
+
+/// CRC-32 (IEEE 802.3, reflected 0xEDB88320) lookup table, built at
+/// compile time — the checksum persisted pages carry (satellite: corrupt
+/// pages must fail closed, never feed garbage KV).
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 of `data` (IEEE polynomial, the zlib/PNG variant).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+pub(crate) fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn read_u64(buf: &[u8], at: usize) -> Result<u64, StoreError> {
+    let end = at.checked_add(8).filter(|&e| e <= buf.len()).ok_or_else(|| {
+        StoreError::corrupt("payload", at as u64, "u64 field runs past the payload end")
+    })?;
+    Ok(u64::from_le_bytes(buf[at..end].try_into().unwrap()))
+}
+
+pub(crate) fn read_u32(buf: &[u8], at: usize) -> Result<u32, StoreError> {
+    let end = at.checked_add(4).filter(|&e| e <= buf.len()).ok_or_else(|| {
+        StoreError::corrupt("payload", at as u64, "u32 field runs past the payload end")
+    })?;
+    Ok(u32::from_le_bytes(buf[at..end].try_into().unwrap()))
+}
+
+/// Precision wire tags are the human-readable bit widths, so a hex dump of
+/// a page file reads `10 08 04` for a kv16/kv8/kv4 layout.
+fn prec_tag(p: KvPrecision) -> u8 {
+    match p {
+        KvPrecision::F32 => 16,
+        KvPrecision::Int8 => 8,
+        KvPrecision::Int4 => 4,
+    }
+}
+
+fn prec_from_tag(tag: u8) -> Result<KvPrecision, StoreError> {
+    Ok(match tag {
+        16 => KvPrecision::F32,
+        8 => KvPrecision::Int8,
+        4 => KvPrecision::Int4,
+        other => {
+            return Err(StoreError::corrupt(
+                "layout",
+                0,
+                format!("unknown kv precision tag {other} (expected 16, 8, or 4)"),
+            ))
+        }
+    })
+}
+
+/// Append `layout` in registry form: layer count then one tag byte per
+/// layer.
+pub fn encode_layout_into(out: &mut Vec<u8>, layout: &KvLayout) {
+    push_u64(out, layout.n_layers() as u64);
+    out.extend(layout.precs().iter().map(|&p| prec_tag(p)));
+}
+
+/// Decode a layout from `buf[at..]`; returns the layout and the bytes
+/// consumed.
+pub fn decode_layout_at(buf: &[u8], at: usize) -> Result<(KvLayout, usize), StoreError> {
+    let n = read_u64(buf, at)? as usize;
+    if n == 0 || n > 4096 {
+        return Err(StoreError::corrupt(
+            "layout",
+            at as u64,
+            format!("implausible layer count {n}"),
+        ));
+    }
+    let start = at + 8;
+    if start + n > buf.len() {
+        return Err(StoreError::corrupt(
+            "layout",
+            at as u64,
+            "per-layer precision tags run past the payload end",
+        ));
+    }
+    let mut precs = Vec::with_capacity(n);
+    for &tag in &buf[start..start + n] {
+        precs.push(prec_from_tag(tag)?);
+    }
+    let layout = KvLayout::from_precs(precs)
+        .map_err(|e| StoreError::corrupt("layout", at as u64, e.to_string()))?;
+    Ok((layout, 8 + n))
+}
+
+/// Serialize one layout-tagged snapshot:
+///
+/// ```text
+/// len u64 | kv_heads u64 | head_dim u64 | layout (n_layers u64 + tags)
+/// | codes_len u64 | codes | scales_count u64 | scales (f32 LE each)
+/// ```
+pub fn encode_snapshot(s: &SeqSnapshot) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(48 + s.layout.n_layers() + s.codes.len() + 4 * s.scales.len());
+    push_u64(&mut out, s.len as u64);
+    push_u64(&mut out, s.kv_heads as u64);
+    push_u64(&mut out, s.head_dim as u64);
+    encode_layout_into(&mut out, &s.layout);
+    push_u64(&mut out, s.codes.len() as u64);
+    out.extend_from_slice(&s.codes);
+    push_u64(&mut out, s.scales.len() as u64);
+    for f in &s.scales {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+    out
+}
+
+/// Decode and fully validate a snapshot payload. Both vector lengths must
+/// reconcile with the self-described geometry (`len × token_code_bytes`
+/// codes, `len × L × 2 × Hkv` scales) and the buffer must hold exactly the
+/// declared bytes — anything else is [`StoreError::Corrupt`].
+pub fn decode_snapshot(buf: &[u8]) -> Result<SeqSnapshot, StoreError> {
+    let len = read_u64(buf, 0)? as usize;
+    let kv_heads = read_u64(buf, 8)? as usize;
+    let head_dim = read_u64(buf, 16)? as usize;
+    let (layout, lbytes) = decode_layout_at(buf, 24)?;
+    let mut at = 24 + lbytes;
+    let codes_len = read_u64(buf, at)? as usize;
+    at += 8;
+    let expect_codes = len
+        .checked_mul(layout.token_code_bytes(kv_heads, head_dim))
+        .ok_or_else(|| StoreError::corrupt("snapshot", 0, "code length overflows"))?;
+    if codes_len != expect_codes {
+        return Err(StoreError::corrupt(
+            "snapshot",
+            at as u64,
+            format!(
+                "codes length {codes_len} != {expect_codes} implied by geometry \
+                 (len {len}, layout {layout})"
+            ),
+        ));
+    }
+    if at + codes_len > buf.len() {
+        return Err(StoreError::corrupt("snapshot", at as u64, "codes run past the payload end"));
+    }
+    let codes = buf[at..at + codes_len].to_vec();
+    at += codes_len;
+    let scales_count = read_u64(buf, at)? as usize;
+    at += 8;
+    let expect_scales = len * layout.n_layers() * 2 * kv_heads;
+    if scales_count != expect_scales {
+        return Err(StoreError::corrupt(
+            "snapshot",
+            at as u64,
+            format!("scale count {scales_count} != {expect_scales} implied by geometry"),
+        ));
+    }
+    if at + 4 * scales_count != buf.len() {
+        return Err(StoreError::corrupt(
+            "snapshot",
+            at as u64,
+            format!(
+                "payload is {} bytes, expected exactly {}",
+                buf.len(),
+                at + 4 * scales_count
+            ),
+        ));
+    }
+    let mut scales = Vec::with_capacity(scales_count);
+    for i in 0..scales_count {
+        let o = at + 4 * i;
+        scales.push(f32::from_le_bytes(buf[o..o + 4].try_into().unwrap()));
+    }
+    Ok(SeqSnapshot { len, codes, scales, kv_heads, head_dim, layout })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The canonical IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    fn snap(len: usize) -> SeqSnapshot {
+        let layout = KvLayout::parse("l0:kv16,l1:kv8,l2:kv4", 3).unwrap();
+        let (kv_heads, head_dim) = (2, 8);
+        let tcb = layout.token_code_bytes(kv_heads, head_dim);
+        SeqSnapshot {
+            len,
+            codes: (0..len * tcb).map(|i| (i * 7 + 3) as u8).collect(),
+            scales: (0..len * 3 * 2 * kv_heads).map(|i| i as f32 * 0.5).collect(),
+            kv_heads,
+            head_dim,
+            layout,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_byte_exactly() {
+        let s = snap(5);
+        let buf = encode_snapshot(&s);
+        let back = decode_snapshot(&buf).unwrap();
+        assert_eq!(back, s);
+        // Zero-length snapshots round-trip too.
+        let z = snap(0);
+        assert_eq!(decode_snapshot(&encode_snapshot(&z)).unwrap(), z);
+    }
+
+    #[test]
+    fn truncated_or_padded_payloads_fail_closed() {
+        let buf = encode_snapshot(&snap(3));
+        for cut in [0, 7, 24, buf.len() - 1] {
+            assert!(decode_snapshot(&buf[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut padded = buf.clone();
+        padded.push(0);
+        assert!(decode_snapshot(&padded).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn corrupted_geometry_fields_fail_closed() {
+        let s = snap(3);
+        let buf = encode_snapshot(&s);
+        // Inflate the declared token count: code/scale lengths no longer
+        // reconcile with the geometry.
+        let mut bad = buf.clone();
+        bad[0] = bad[0].wrapping_add(1);
+        assert!(decode_snapshot(&bad).is_err());
+        // Unknown precision tag inside the layout table.
+        let mut bad = buf;
+        bad[32] = 9;
+        let err = decode_snapshot(&bad).unwrap_err();
+        assert!(err.to_string().contains("precision tag"), "{err}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Tiered KV persistence: a page-file-backed store with a host-global
+//! prefix cache and warm restart (DESIGN.md §14).
+//!
+//! The in-memory [`SwapStore`](crate::kvcache::SwapStore) is RAM-bounded,
+//! serves only its owning replica, and dies with the process. This module
+//! is the disk tier underneath it: a single page file (boxerdb-style
+//! layout — `page_size` / `metadata_offset` / `first_page_offset`) holding
+//! layout-tagged [`SeqSnapshot`](crate::kvcache::SeqSnapshot) extents,
+//! each a checksummed page-aligned record, plus a metadata header page.
+//! Because records are self-describing and CRC-guarded, a process can
+//! reopen the file and recover every fully-committed record — sessions
+//! *and* cached prefix blocks survive a bounce (warm restart), and
+//! partially-written extents are quarantined, never served.
+//!
+//! On top of the record log sits a **host-global prefix store**: the
+//! chain-hash prefix keys the per-replica index already uses (content ×
+//! `KvLayout` fingerprint) resolve to on-disk pages, so every replica
+//! sharing one [`PageFileStore`] shares one prefix cache — a tenant system
+//! prompt is prefilled once per host, not once per replica. Replicas adopt
+//! hits through the byte-exact `import_seq`/`transcode_to` path, which
+//! also finally delivers the PR 5 warm-restore follow-up: a kv16 entry
+//! published before the pool laddered down re-inflates into the narrower
+//! pool bit-identically.
+//!
+//! All I/O buffers stage through a shared [`PagePool`] (SpacetimeDB
+//! idiom: an `Arc`'d free-list with allocation reuse on deserialize).
+
+mod codec;
+mod pagefile;
+mod pagepool;
+mod prefix_store;
+
+pub use codec::{crc32, decode_snapshot, encode_snapshot};
+pub use pagefile::{PageFileStore, StoreReceipt, StoreStats};
+pub use pagepool::{PagePool, PagePoolStats};
+pub use prefix_store::{fetch_chain, resolve_shared_prefix, SharedPrefixHit};
+
+use std::path::PathBuf;
+
+/// Default page size, following boxerdb's `StorageConfig` default.
+pub const DEFAULT_PAGE_SIZE: usize = 4096;
+
+/// Page-file geometry + placement (the boxerdb `StorageConfig` shape).
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// The page file's path (created on first open).
+    pub path: PathBuf,
+    /// Fixed page size in bytes; records occupy whole pages. Power of two,
+    /// ≥ 256.
+    pub page_size: usize,
+    /// Byte offset of the metadata region (the header page). Always 0 in
+    /// the current format; kept explicit in the config so the on-disk
+    /// layout is self-documenting.
+    pub metadata_offset: u64,
+    /// Byte offset of the first record page (one page past the metadata
+    /// region).
+    pub first_page_offset: u64,
+    /// Capacity in record pages (0 = unbounded). Live records beyond this
+    /// are rejected (snapshots) or make the prefix tier evict LRU entries.
+    pub max_pages: usize,
+}
+
+impl StoreConfig {
+    /// Default geometry at `path`: 4 KiB pages, header in page 0, records
+    /// from page 1, unbounded.
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self::with_geometry(path, DEFAULT_PAGE_SIZE, 0)
+    }
+
+    /// Custom page size / capacity (the `--page-size` / `--store-pages`
+    /// CLI knobs).
+    pub fn with_geometry(path: impl Into<PathBuf>, page_size: usize, max_pages: usize) -> Self {
+        Self {
+            path: path.into(),
+            page_size,
+            metadata_offset: 0,
+            first_page_offset: page_size as u64,
+            max_pages,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), StoreError> {
+        if !self.page_size.is_power_of_two() || self.page_size < 256 {
+            return Err(StoreError::Geometry(format!(
+                "page size {} must be a power of two >= 256",
+                self.page_size
+            )));
+        }
+        if self.metadata_offset != 0 {
+            return Err(StoreError::Geometry(format!(
+                "metadata offset {} unsupported (format v1 pins it to 0)",
+                self.metadata_offset
+            )));
+        }
+        if self.first_page_offset != self.page_size as u64 {
+            return Err(StoreError::Geometry(format!(
+                "first page offset {} must equal the page size {}",
+                self.first_page_offset, self.page_size
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Structured store failures. `Corrupt` is the fail-closed path: a page
+/// whose checksum, magic, or self-described geometry does not reconcile is
+/// reported — with where and why — and its bytes are never handed to a KV
+/// pool.
+#[derive(Debug)]
+pub enum StoreError {
+    /// A persisted page failed validation (CRC mismatch, bad magic, or
+    /// geometry that does not reconcile with its own header).
+    Corrupt {
+        /// What was being validated (`"header"`, `"payload"`, …).
+        what: &'static str,
+        /// Byte offset in the page file (0 when not file-backed, e.g. a
+        /// payload decoded from memory).
+        offset: u64,
+        detail: String,
+    },
+    /// The store is at `max_pages` and nothing evictable can make room.
+    Full { needed_pages: usize, free_pages: usize },
+    /// Invalid configuration or a geometry mismatch against an existing
+    /// file (e.g. reopening with a different page size).
+    Geometry(String),
+    /// Underlying file I/O failure.
+    Io(std::io::Error),
+}
+
+impl StoreError {
+    pub(crate) fn corrupt(what: &'static str, offset: u64, detail: impl Into<String>) -> Self {
+        StoreError::Corrupt { what, offset, detail: detail.into() }
+    }
+
+    /// Whether this is the fail-closed corruption arm (the negative tests
+    /// assert on this rather than on message text).
+    pub fn is_corrupt(&self) -> bool {
+        matches!(self, StoreError::Corrupt { .. })
+    }
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Corrupt { what, offset, detail } => {
+                write!(f, "store corrupt {what} at byte {offset}: {detail}")
+            }
+            StoreError::Full { needed_pages, free_pages } => write!(
+                f,
+                "store full: need {needed_pages} pages, {free_pages} free"
+            ),
+            StoreError::Geometry(d) => write!(f, "store geometry: {d}"),
+            StoreError::Io(e) => write!(f, "store io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}

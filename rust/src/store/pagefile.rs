@@ -1,0 +1,1095 @@
+//! The page file: a checksummed, page-aligned record log with scan
+//! recovery (DESIGN.md §14).
+//!
+//! ## On-disk format (v1)
+//!
+//! ```text
+//! page 0 (metadata region, boxerdb StorageConfig shape):
+//!   0..8   file magic  "TMKVPGF1"
+//!   8..12  format version u32 = 1
+//!   12..16 page_size u32
+//!   16..24 metadata_offset u64  (= 0)
+//!   24..32 first_page_offset u64 (= page_size)
+//!   32..36 crc32 of bytes 0..32
+//!
+//! pages 1.. (record log): page-aligned extents, each
+//!   0..4   record magic "TKVR"
+//!   4      kind u8   (1 snapshot, 2 prefix entry, 3 layout reg, 4 free)
+//!   5      version u8 = 1
+//!   6..8   reserved u16 = 0
+//!   8..16  seq u64   (monotonic write order; highest seq wins a key)
+//!   16..24 key_a u64 (snapshot: namespace | prefix: chain key | layout: root)
+//!   24..32 key_b u64 (snapshot: id        | prefix: root key  | layout: block_tokens)
+//!   32..40 payload_len u64
+//!   40..44 crc32(payload)
+//!   44..48 crc32(header bytes 0..44)
+//!   48..   payload, zero-padded to the next page boundary
+//! ```
+//!
+//! ## Recovery protocol
+//!
+//! Reopen scans the log sequentially from `first_page_offset`. A page
+//! whose header fails magic/CRC validation, or whose payload is cut by the
+//! file end or fails its payload CRC, is **quarantined** (counted, its
+//! pages returned to the free list, its bytes never served). Valid records
+//! are applied in `seq` order, so when a crash leaves both an old and a
+//! new extent for the same key (an interrupted overwrite), the highest
+//! sequence number wins and the loser's extent is freed. Deletion
+//! overwrites the victim's header with a `free` record in place — the
+//! header is destroyed, so a deleted record can never resurrect on
+//! replay.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::codec::{crc32, decode_layout_at, decode_snapshot, encode_layout_into, encode_snapshot};
+use super::pagepool::{PagePool, PagePoolStats};
+use super::{StoreConfig, StoreError};
+use crate::kvcache::prefix::layout_root_key;
+use crate::kvcache::{KvLayout, SeqSnapshot};
+
+const FILE_MAGIC: &[u8; 8] = b"TMKVPGF1";
+const FORMAT_VERSION: u32 = 1;
+const RECORD_MAGIC: u32 = u32::from_le_bytes(*b"TKVR");
+const RECORD_VERSION: u8 = 1;
+/// Fixed record header size, well under the minimum page.
+pub(crate) const HEADER_BYTES: usize = 48;
+
+const KIND_SNAPSHOT: u8 = 1;
+const KIND_PREFIX: u8 = 2;
+const KIND_LAYOUT: u8 = 3;
+const KIND_FREE: u8 = 4;
+
+/// What one store operation moved — the engine prices its modeled disk
+/// clock and emits `StoreWrite`/`StoreRead` trace events from this.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreReceipt {
+    /// Whole pages the record occupies on disk.
+    pub pages: usize,
+    /// Payload bytes (header and page padding excluded).
+    pub payload_bytes: usize,
+    /// Snapshot wire bytes (codes + f32 scales) split per precision rung
+    /// of the snapshot's recorded layout — sums to `snapshot_bytes`, the
+    /// same attribution rule swap/migration transfers use.
+    pub bytes_by_rung: [usize; 3],
+}
+
+impl StoreReceipt {
+    fn for_snapshot(snap: &SeqSnapshot, pages: usize, payload_bytes: usize) -> Self {
+        Self { pages, payload_bytes, bytes_by_rung: snap.bytes_by_rung() }
+    }
+
+    /// Total attributed snapshot bytes.
+    pub fn snapshot_bytes(&self) -> usize {
+        self.bytes_by_rung.iter().sum()
+    }
+
+    /// Fold another receipt in (per-chunk aggregation of prefix
+    /// publishes/fetches).
+    pub fn merge(&mut self, other: &StoreReceipt) {
+        self.pages += other.pages;
+        self.payload_bytes += other.payload_bytes;
+        for (a, b) in self.bytes_by_rung.iter_mut().zip(other.bytes_by_rung) {
+            *a += b;
+        }
+    }
+}
+
+/// Store effectiveness + durability counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Live session snapshots.
+    pub snapshots: usize,
+    /// Live prefix blocks.
+    pub prefix_blocks: usize,
+    /// Registered layout roots.
+    pub layouts: usize,
+    /// Pages held by live records.
+    pub used_pages: usize,
+    /// Page capacity (0 = unbounded).
+    pub capacity_pages: usize,
+    /// Record writes (snapshots + prefix publishes + layout registrations).
+    pub writes: usize,
+    /// Record reads served (snapshot gets + prefix fetches).
+    pub reads: usize,
+    /// Records deleted (snapshot takes/drops + prefix evictions).
+    pub deletes: usize,
+    /// Padded bytes written to the file.
+    pub write_bytes: usize,
+    /// Padded bytes read from the file.
+    pub read_bytes: usize,
+    /// Live snapshot+prefix payload (codes + scales) per precision rung of
+    /// each record's recorded layout — the on-disk byte table `bench
+    /// persist` reports (kv4's 4× shrink is visible here).
+    pub on_disk_bytes_by_rung: [usize; 3],
+    /// Snapshots recovered live by the last reopen.
+    pub recovered_snapshots: usize,
+    /// Prefix blocks recovered live by the last reopen.
+    pub recovered_prefix_blocks: usize,
+    /// Pages quarantined by the last reopen (invalid header, cut payload,
+    /// or CRC mismatch) — their bytes are never served.
+    pub quarantined_pages: usize,
+    /// Prefix blocks published (first writes, not republish no-ops).
+    pub prefix_publishes: usize,
+    /// Prefix blocks evicted to make room (LRU, leaves capacity to
+    /// snapshots first).
+    pub prefix_evicted: usize,
+    /// Writes rejected because the store was full and nothing evictable
+    /// could make room.
+    pub rejected_full: usize,
+}
+
+impl StoreStats {
+    /// Total live on-disk snapshot payload bytes.
+    pub fn on_disk_bytes(&self) -> usize {
+        self.on_disk_bytes_by_rung.iter().sum()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Extent {
+    offset: u64,
+    pages: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RecordMeta {
+    extent: Extent,
+    payload_len: usize,
+    seq: u64,
+    /// Tokens in the snapshot (swap backends size restores from this
+    /// without touching the disk).
+    tokens: usize,
+    bytes_by_rung: [usize; 3],
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PrefixMeta {
+    meta: RecordMeta,
+    root: u64,
+    last_used: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    file: File,
+    /// Append cursor: page-aligned end of the record log.
+    end: u64,
+    next_seq: u64,
+    /// Free extents, sorted by offset, adjacent runs coalesced.
+    free: Vec<Extent>,
+    snaps: HashMap<(u64, u64), RecordMeta>,
+    prefixes: HashMap<u64, PrefixMeta>,
+    /// Root key → (layout, block_tokens). BTreeMap so every iteration
+    /// order — and therefore every adoption tie-break — is deterministic.
+    layouts: BTreeMap<u64, (KvLayout, usize)>,
+    clock: u64,
+    stats: StoreStats,
+}
+
+/// The page-file-backed KV store. One instance per host path; replicas
+/// share it through `Arc` (every method takes `&self`).
+#[derive(Debug)]
+pub struct PageFileStore {
+    cfg: StoreConfig,
+    pool: PagePool,
+    next_ns: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+fn read_exact_at(file: &File, offset: u64, buf: &mut [u8]) -> Result<(), StoreError> {
+    let mut f = file;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)?;
+    Ok(())
+}
+
+fn write_all_at(file: &File, offset: u64, buf: &[u8]) -> Result<(), StoreError> {
+    let mut f = file;
+    f.seek(SeekFrom::Start(offset))?;
+    f.write_all(buf)?;
+    Ok(())
+}
+
+/// Parsed record header (validation already passed).
+struct Header {
+    kind: u8,
+    seq: u64,
+    key_a: u64,
+    key_b: u64,
+    payload_len: usize,
+    payload_crc: u32,
+}
+
+fn encode_header(h: &Header) -> [u8; HEADER_BYTES] {
+    let mut b = [0u8; HEADER_BYTES];
+    b[0..4].copy_from_slice(&RECORD_MAGIC.to_le_bytes());
+    b[4] = h.kind;
+    b[5] = RECORD_VERSION;
+    b[8..16].copy_from_slice(&h.seq.to_le_bytes());
+    b[16..24].copy_from_slice(&h.key_a.to_le_bytes());
+    b[24..32].copy_from_slice(&h.key_b.to_le_bytes());
+    b[32..40].copy_from_slice(&(h.payload_len as u64).to_le_bytes());
+    b[40..44].copy_from_slice(&h.payload_crc.to_le_bytes());
+    let crc = crc32(&b[0..44]);
+    b[44..48].copy_from_slice(&crc.to_le_bytes());
+    b
+}
+
+fn decode_header(b: &[u8], offset: u64) -> Result<Header, StoreError> {
+    debug_assert!(b.len() >= HEADER_BYTES);
+    let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    if magic != RECORD_MAGIC {
+        return Err(StoreError::corrupt("header", offset, "bad record magic"));
+    }
+    let stored = u32::from_le_bytes(b[44..48].try_into().unwrap());
+    if crc32(&b[0..44]) != stored {
+        return Err(StoreError::corrupt("header", offset, "header crc mismatch"));
+    }
+    let kind = b[4];
+    if !(KIND_SNAPSHOT..=KIND_FREE).contains(&kind) {
+        return Err(StoreError::corrupt("header", offset, format!("unknown kind {kind}")));
+    }
+    if b[5] != RECORD_VERSION {
+        return Err(StoreError::corrupt(
+            "header",
+            offset,
+            format!("unsupported record version {}", b[5]),
+        ));
+    }
+    Ok(Header {
+        kind,
+        seq: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+        key_a: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+        key_b: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+        payload_len: u64::from_le_bytes(b[32..40].try_into().unwrap()) as usize,
+        payload_crc: u32::from_le_bytes(b[40..44].try_into().unwrap()),
+    })
+}
+
+/// One valid record found by the recovery scan, pre-application.
+struct ScanRec {
+    header: Header,
+    extent: Extent,
+    /// Decoded light metadata for snapshot/prefix payloads.
+    tokens: usize,
+    bytes_by_rung: [usize; 3],
+    /// Decoded layout for `KIND_LAYOUT` records.
+    layout: Option<(KvLayout, usize)>,
+}
+
+impl Inner {
+    fn pages_of(&self, bytes: usize, ps: u64) -> u64 {
+        ((bytes as u64) + ps - 1) / ps
+    }
+
+    fn used_pages(&self) -> u64 {
+        let snaps: u64 = self.snaps.values().map(|m| m.extent.pages).sum();
+        let prefixes: u64 = self.prefixes.values().map(|p| p.meta.extent.pages).sum();
+        // Layout registrations are one page each and never freed.
+        snaps + prefixes + self.layouts.len() as u64
+    }
+
+    /// Whether `pages` more live pages fit under `max_pages` (0 =
+    /// unbounded).
+    fn has_room(&self, pages: u64, max_pages: usize) -> bool {
+        max_pages == 0 || self.used_pages() + pages <= max_pages as u64
+    }
+
+    /// Insert a free extent, keeping the list offset-sorted and coalesced.
+    fn release_extent(&mut self, e: Extent, ps: u64) {
+        let i = self.free.partition_point(|f| f.offset < e.offset);
+        self.free.insert(i, e);
+        // Coalesce with neighbours.
+        if i + 1 < self.free.len()
+            && self.free[i].offset + self.free[i].pages * ps == self.free[i + 1].offset
+        {
+            self.free[i].pages += self.free[i + 1].pages;
+            self.free.remove(i + 1);
+        }
+        if i > 0 && self.free[i - 1].offset + self.free[i - 1].pages * ps == self.free[i].offset {
+            self.free[i - 1].pages += self.free[i].pages;
+            self.free.remove(i);
+        }
+    }
+
+    /// First-fit extent for `pages`, splitting a larger free run (the
+    /// remainder gets its own free marker written by the caller) or
+    /// appending at the end of the log.
+    fn alloc_extent(&mut self, pages: u64, ps: u64) -> (Extent, Option<Extent>) {
+        if let Some(i) = self.free.iter().position(|f| f.pages >= pages) {
+            let run = self.free.remove(i);
+            let got = Extent { offset: run.offset, pages };
+            let rest = (run.pages > pages)
+                .then(|| Extent { offset: run.offset + pages * ps, pages: run.pages - pages });
+            return (got, rest);
+        }
+        let got = Extent { offset: self.end, pages };
+        self.end += pages * ps;
+        (got, None)
+    }
+
+    /// Overwrite an extent's header with a `free` record in place: the old
+    /// header is destroyed (no resurrection on replay) and the scanner can
+    /// skip the extent in one hop.
+    fn free_record(&mut self, e: Extent, ps: u64) -> Result<(), StoreError> {
+        let h = Header {
+            kind: KIND_FREE,
+            seq: self.next_seq,
+            key_a: 0,
+            key_b: 0,
+            payload_len: (e.pages * ps) as usize - HEADER_BYTES,
+            payload_crc: 0,
+        };
+        self.next_seq += 1;
+        write_all_at(&self.file, e.offset, &encode_header(&h))?;
+        self.release_extent(e, ps);
+        Ok(())
+    }
+
+    /// Write one record into `extent` through a pooled buffer.
+    fn write_record(
+        &mut self,
+        pool: &PagePool,
+        extent: Extent,
+        kind: u8,
+        key_a: u64,
+        key_b: u64,
+        payload: &[u8],
+        ps: u64,
+    ) -> Result<u64, StoreError> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let h = Header {
+            kind,
+            seq,
+            key_a,
+            key_b,
+            payload_len: payload.len(),
+            payload_crc: crc32(payload),
+        };
+        let bytes = (extent.pages * ps) as usize;
+        let mut buf = pool.take(bytes);
+        buf[0..HEADER_BYTES].copy_from_slice(&encode_header(&h));
+        buf[HEADER_BYTES..HEADER_BYTES + payload.len()].copy_from_slice(payload);
+        write_all_at(&self.file, extent.offset, &buf)?;
+        pool.put(buf);
+        self.stats.writes += 1;
+        self.stats.write_bytes += bytes;
+        Ok(seq)
+    }
+
+    /// Read a record's payload back, re-validating header and payload CRCs
+    /// against the bytes on disk — the fail-closed read path.
+    fn read_payload(
+        &mut self,
+        pool: &PagePool,
+        meta: &RecordMeta,
+        kind: u8,
+        key_a: u64,
+        key_b: u64,
+        ps: u64,
+    ) -> Result<Vec<u8>, StoreError> {
+        let bytes = HEADER_BYTES + meta.payload_len;
+        let mut buf = pool.take(bytes);
+        let take = bytes.min(buf.len());
+        read_exact_at(&self.file, meta.extent.offset, &mut buf[..take])?;
+        let h = decode_header(&buf, meta.extent.offset)?;
+        if h.kind != kind || h.key_a != key_a || h.key_b != key_b || h.seq != meta.seq {
+            pool.put(buf);
+            return Err(StoreError::corrupt(
+                "header",
+                meta.extent.offset,
+                "record header does not match the index entry",
+            ));
+        }
+        if h.payload_len != meta.payload_len {
+            pool.put(buf);
+            return Err(StoreError::corrupt(
+                "header",
+                meta.extent.offset,
+                "record length does not match the index entry",
+            ));
+        }
+        let payload = buf[HEADER_BYTES..HEADER_BYTES + h.payload_len].to_vec();
+        if crc32(&payload) != h.payload_crc {
+            pool.put(buf);
+            return Err(StoreError::corrupt(
+                "payload",
+                meta.extent.offset,
+                "payload crc mismatch",
+            ));
+        }
+        pool.put(buf);
+        self.stats.reads += 1;
+        self.stats.read_bytes += (meta.extent.pages * ps) as usize;
+        Ok(payload)
+    }
+}
+
+impl PageFileStore {
+    /// Open (or create) the page file at `cfg.path`, recovering every
+    /// fully-committed record and quarantining everything else.
+    pub fn open(cfg: StoreConfig) -> Result<Arc<Self>, StoreError> {
+        cfg.validate()?;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&cfg.path)?;
+        let ps = cfg.page_size as u64;
+        let pool = PagePool::new(cfg.page_size, 16);
+        let file_len = file.metadata()?.len();
+        let mut inner = Inner {
+            file,
+            end: ps,
+            next_seq: 1,
+            free: Vec::new(),
+            snaps: HashMap::new(),
+            prefixes: HashMap::new(),
+            layouts: BTreeMap::new(),
+            clock: 0,
+            stats: StoreStats { capacity_pages: cfg.max_pages, ..StoreStats::default() },
+        };
+        if file_len == 0 {
+            let mut page = pool.take(cfg.page_size);
+            page[0..8].copy_from_slice(FILE_MAGIC);
+            page[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+            page[12..16].copy_from_slice(&(cfg.page_size as u32).to_le_bytes());
+            page[16..24].copy_from_slice(&cfg.metadata_offset.to_le_bytes());
+            page[24..32].copy_from_slice(&cfg.first_page_offset.to_le_bytes());
+            let crc = crc32(&page[0..32]);
+            page[32..36].copy_from_slice(&crc.to_le_bytes());
+            write_all_at(&inner.file, 0, &page)?;
+            pool.put(page);
+        } else {
+            let mut head = [0u8; 36];
+            if file_len < 36 {
+                return Err(StoreError::corrupt("header", 0, "file shorter than its header"));
+            }
+            read_exact_at(&inner.file, 0, &mut head)?;
+            if &head[0..8] != FILE_MAGIC {
+                return Err(StoreError::corrupt("header", 0, "bad file magic"));
+            }
+            let stored = u32::from_le_bytes(head[32..36].try_into().unwrap());
+            if crc32(&head[0..32]) != stored {
+                return Err(StoreError::corrupt("header", 0, "file header crc mismatch"));
+            }
+            let ver = u32::from_le_bytes(head[8..12].try_into().unwrap());
+            if ver != FORMAT_VERSION {
+                return Err(StoreError::Geometry(format!("unsupported format version {ver}")));
+            }
+            let file_ps = u32::from_le_bytes(head[12..16].try_into().unwrap()) as usize;
+            if file_ps != cfg.page_size {
+                return Err(StoreError::Geometry(format!(
+                    "file was written with {file_ps}-byte pages, reopened with {}",
+                    cfg.page_size
+                )));
+            }
+            Self::recover(&mut inner, &pool, file_len, ps)?;
+        }
+        let max_ns = inner.snaps.keys().map(|&(ns, _)| ns).max().unwrap_or(0);
+        Ok(Arc::new(Self { cfg, pool, next_ns: AtomicU64::new(max_ns + 1), inner: Mutex::new(inner) }))
+    }
+
+    /// The recovery scan (see the module docs for the protocol).
+    fn recover(
+        inner: &mut Inner,
+        pool: &PagePool,
+        file_len: u64,
+        ps: u64,
+    ) -> Result<(), StoreError> {
+        let mut offset = ps;
+        let mut found: Vec<ScanRec> = Vec::new();
+        let mut quarantined_pages = 0usize;
+        while offset < file_len {
+            if file_len - offset < HEADER_BYTES as u64 {
+                // A cut tail shorter than one header: quarantine it.
+                quarantined_pages += 1;
+                break;
+            }
+            let mut hbuf = [0u8; HEADER_BYTES];
+            read_exact_at(&inner.file, offset, &mut hbuf)?;
+            let header = match decode_header(&hbuf, offset) {
+                Ok(h) => h,
+                Err(_) => {
+                    // Unparseable page: quarantine it, keep scanning at
+                    // the next page boundary (its space is reusable —
+                    // anything written there is overwritten whole).
+                    quarantined_pages += 1;
+                    inner.release_extent(Extent { offset, pages: 1 }, ps);
+                    offset += ps;
+                    continue;
+                }
+            };
+            let extent_bytes = ((HEADER_BYTES + header.payload_len) as u64 + ps - 1) / ps * ps;
+            let pages = extent_bytes / ps;
+            if header.kind == KIND_FREE {
+                let present = (file_len - offset).min(extent_bytes) / ps;
+                inner.release_extent(Extent { offset, pages: present.max(1) }, ps);
+                inner.next_seq = inner.next_seq.max(header.seq + 1);
+                offset += extent_bytes;
+                continue;
+            }
+            if offset + (HEADER_BYTES + header.payload_len) as u64 > file_len {
+                // Truncated mid-extent (the crash-recovery case): every
+                // page the record would span that still exists is
+                // quarantined; nothing can follow it.
+                quarantined_pages += ((file_len - offset + ps - 1) / ps) as usize;
+                break;
+            }
+            let mut buf = pool.take(HEADER_BYTES + header.payload_len);
+            let take = HEADER_BYTES + header.payload_len;
+            read_exact_at(&inner.file, offset, &mut buf[..take])?;
+            let payload = &buf[HEADER_BYTES..HEADER_BYTES + header.payload_len];
+            let valid = crc32(payload) == header.payload_crc;
+            let rec = if !valid {
+                None
+            } else {
+                match header.kind {
+                    KIND_SNAPSHOT | KIND_PREFIX => decode_snapshot(payload).ok().map(|s| ScanRec {
+                        tokens: s.len,
+                        bytes_by_rung: s.bytes_by_rung(),
+                        layout: None,
+                        extent: Extent { offset, pages },
+                        header,
+                    }),
+                    KIND_LAYOUT => decode_layout_at(payload, 0).ok().and_then(|(l, used)| {
+                        (used == payload.len()).then(|| ScanRec {
+                            tokens: 0,
+                            bytes_by_rung: [0; 3],
+                            layout: Some((l, 0)),
+                            extent: Extent { offset, pages },
+                            header,
+                        })
+                    }),
+                    _ => unreachable!("kind validated by decode_header"),
+                }
+            };
+            pool.put(buf);
+            match rec {
+                Some(r) => {
+                    inner.next_seq = inner.next_seq.max(r.header.seq + 1);
+                    found.push(r);
+                }
+                None => {
+                    quarantined_pages += pages as usize;
+                    inner.release_extent(Extent { offset, pages }, ps);
+                }
+            }
+            offset += extent_bytes;
+        }
+        inner.end = offset.min(file_len / ps * ps).max(ps);
+
+        // Apply in write order: the highest sequence number wins a key,
+        // the loser's extent is freed.
+        found.sort_by_key(|r| r.header.seq);
+        for r in found {
+            let meta = RecordMeta {
+                extent: r.extent,
+                payload_len: r.header.payload_len,
+                seq: r.header.seq,
+                tokens: r.tokens,
+                bytes_by_rung: r.bytes_by_rung,
+            };
+            match r.header.kind {
+                KIND_SNAPSHOT => {
+                    if let Some(old) = inner.snaps.insert((r.header.key_a, r.header.key_b), meta) {
+                        inner.free_record(old.extent, ps)?;
+                    }
+                }
+                KIND_PREFIX => {
+                    inner.clock += 1;
+                    let pm = PrefixMeta { meta, root: r.header.key_b, last_used: inner.clock };
+                    if let Some(old) = inner.prefixes.insert(r.header.key_a, pm) {
+                        inner.free_record(old.meta.extent, ps)?;
+                    }
+                }
+                KIND_LAYOUT => {
+                    let (layout, _) = r.layout.expect("layout records carry a layout");
+                    inner.layouts.insert(r.header.key_a, (layout, r.header.key_b as usize));
+                }
+                _ => unreachable!(),
+            }
+        }
+        inner.stats.recovered_snapshots = inner.snaps.len();
+        inner.stats.recovered_prefix_blocks = inner.prefixes.len();
+        inner.stats.quarantined_pages = quarantined_pages;
+        Ok(())
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.cfg.page_size
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.cfg.path
+    }
+
+    /// Pages a payload of `bytes` would occupy.
+    pub fn pages_for(&self, bytes: usize) -> usize {
+        (HEADER_BYTES + bytes).div_ceil(self.cfg.page_size)
+    }
+
+    /// Allocate a fresh snapshot namespace. Each engine sharing the store
+    /// namespaces its request ids so replicas never collide; recovery
+    /// seeds the counter above every persisted namespace, so a warm
+    /// restart cannot collide with pre-crash sessions either.
+    pub fn alloc_namespace(&self) -> u64 {
+        self.next_ns.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Whether `pages` more live pages fit.
+    pub fn has_room(&self, pages: usize) -> bool {
+        self.inner.lock().expect("store lock").has_room(pages as u64, self.cfg.max_pages)
+    }
+
+    /// Persist one session snapshot under `(ns, id)`, replacing any
+    /// previous version. Fails with [`StoreError::Full`] when the capacity
+    /// budget cannot take it.
+    pub fn put_snapshot(
+        &self,
+        ns: u64,
+        id: u64,
+        snap: &SeqSnapshot,
+    ) -> Result<StoreReceipt, StoreError> {
+        let payload = encode_snapshot(snap);
+        let ps = self.cfg.page_size as u64;
+        let pages = self.pages_for(payload.len()) as u64;
+        let mut inner = self.inner.lock().expect("store lock");
+        let replaces = inner.snaps.get(&(ns, id)).map(|m| m.extent.pages).unwrap_or(0);
+        if !inner.has_room(pages.saturating_sub(replaces), self.cfg.max_pages) {
+            inner.stats.rejected_full += 1;
+            let free = self.cfg.max_pages.saturating_sub(inner.used_pages() as usize);
+            return Err(StoreError::Full { needed_pages: pages as usize, free_pages: free });
+        }
+        let (extent, rest) = inner.alloc_extent(pages, ps);
+        if let Some(r) = rest {
+            // The split remainder gets its free marker *before* the record
+            // lands, so a crash between the two writes leaves a scannable
+            // log either way.
+            inner.free_record(r, ps)?;
+        }
+        let seq =
+            inner.write_record(&self.pool, extent, KIND_SNAPSHOT, ns, id, &payload, ps)?;
+        let meta = RecordMeta {
+            extent,
+            payload_len: payload.len(),
+            seq,
+            tokens: snap.len,
+            bytes_by_rung: snap.bytes_by_rung(),
+        };
+        for (acc, b) in inner.stats.on_disk_bytes_by_rung.iter_mut().zip(meta.bytes_by_rung) {
+            *acc += b;
+        }
+        if let Some(old) = inner.snaps.insert((ns, id), meta) {
+            for (acc, b) in inner.stats.on_disk_bytes_by_rung.iter_mut().zip(old.bytes_by_rung) {
+                *acc -= b;
+            }
+            inner.free_record(old.extent, ps)?;
+        }
+        Ok(StoreReceipt::for_snapshot(snap, pages as usize, payload.len()))
+    }
+
+    /// Read a snapshot back, re-validating every checksum on the way —
+    /// corrupt pages fail closed with [`StoreError::Corrupt`], never a
+    /// garbage snapshot.
+    pub fn get_snapshot(
+        &self,
+        ns: u64,
+        id: u64,
+    ) -> Result<Option<(SeqSnapshot, StoreReceipt)>, StoreError> {
+        let ps = self.cfg.page_size as u64;
+        let mut inner = self.inner.lock().expect("store lock");
+        let Some(meta) = inner.snaps.get(&(ns, id)).copied() else { return Ok(None) };
+        let payload = inner.read_payload(&self.pool, &meta, KIND_SNAPSHOT, ns, id, ps)?;
+        let snap = decode_snapshot(&payload)?;
+        Ok(Some((snap, StoreReceipt::for_snapshot(&snap, meta.extent.pages as usize, payload.len()))))
+    }
+
+    pub fn contains_snapshot(&self, ns: u64, id: u64) -> bool {
+        self.inner.lock().expect("store lock").snaps.contains_key(&(ns, id))
+    }
+
+    /// Token count of a stored snapshot without touching the disk.
+    pub fn snapshot_tokens(&self, ns: u64, id: u64) -> Option<usize> {
+        self.inner.lock().expect("store lock").snaps.get(&(ns, id)).map(|m| m.tokens)
+    }
+
+    /// Drop a snapshot (free its pages, destroy its header). Returns
+    /// whether it existed.
+    pub fn delete_snapshot(&self, ns: u64, id: u64) -> Result<bool, StoreError> {
+        let ps = self.cfg.page_size as u64;
+        let mut inner = self.inner.lock().expect("store lock");
+        let Some(meta) = inner.snaps.remove(&(ns, id)) else { return Ok(false) };
+        for (acc, b) in inner.stats.on_disk_bytes_by_rung.iter_mut().zip(meta.bytes_by_rung) {
+            *acc -= b;
+        }
+        inner.free_record(meta.extent, ps)?;
+        inner.stats.deletes += 1;
+        Ok(true)
+    }
+
+    /// Register a writer layout (root = chain-root key of `(layout,
+    /// block_tokens)`), persisting it so readers after a restart still
+    /// know which key spaces exist. Idempotent; returns the root key.
+    pub fn register_layout(
+        &self,
+        layout: &KvLayout,
+        block_tokens: usize,
+    ) -> Result<u64, StoreError> {
+        let root = layout_root_key(layout, block_tokens);
+        let ps = self.cfg.page_size as u64;
+        let mut inner = self.inner.lock().expect("store lock");
+        if inner.layouts.contains_key(&root) {
+            return Ok(root);
+        }
+        let mut payload = Vec::new();
+        encode_layout_into(&mut payload, layout);
+        let pages = self.pages_for(payload.len()) as u64;
+        let (extent, rest) = inner.alloc_extent(pages, ps);
+        if let Some(r) = rest {
+            inner.free_record(r, ps)?;
+        }
+        inner.write_record(
+            &self.pool,
+            extent,
+            KIND_LAYOUT,
+            root,
+            block_tokens as u64,
+            &payload,
+            ps,
+        )?;
+        inner.layouts.insert(root, (layout.clone(), block_tokens));
+        Ok(root)
+    }
+
+    /// Every registered `(root, layout, block_tokens)`, root-ordered
+    /// (deterministic adoption tie-breaks depend on this).
+    pub fn registered_layouts(&self) -> Vec<(u64, KvLayout, usize)> {
+        self.inner
+            .lock()
+            .expect("store lock")
+            .layouts
+            .iter()
+            .map(|(&root, (l, bt))| (root, l.clone(), *bt))
+            .collect()
+    }
+
+    /// Publish one full prefix block (a `block_tokens`-long snapshot)
+    /// under its chain key. Returns `None` without touching the disk when
+    /// the key is already present (another replica won the publish) or
+    /// when the store is full and evicting every unlucky LRU prefix block
+    /// still cannot make room (session snapshots are never evicted for a
+    /// prefix publish).
+    pub fn publish_prefix_block(
+        &self,
+        root: u64,
+        chain_key: u64,
+        snap: &SeqSnapshot,
+    ) -> Result<Option<StoreReceipt>, StoreError> {
+        let payload = encode_snapshot(snap);
+        let ps = self.cfg.page_size as u64;
+        let pages = self.pages_for(payload.len()) as u64;
+        let mut inner = self.inner.lock().expect("store lock");
+        if inner.prefixes.contains_key(&chain_key) {
+            return Ok(None);
+        }
+        while !inner.has_room(pages, self.cfg.max_pages) {
+            let victim = inner
+                .prefixes
+                .iter()
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(&k, _)| k);
+            let Some(k) = victim else {
+                inner.stats.rejected_full += 1;
+                return Ok(None);
+            };
+            let p = inner.prefixes.remove(&k).expect("victim exists");
+            for (acc, b) in
+                inner.stats.on_disk_bytes_by_rung.iter_mut().zip(p.meta.bytes_by_rung)
+            {
+                *acc -= b;
+            }
+            inner.free_record(p.meta.extent, ps)?;
+            inner.stats.prefix_evicted += 1;
+            inner.stats.deletes += 1;
+        }
+        let (extent, rest) = inner.alloc_extent(pages, ps);
+        if let Some(r) = rest {
+            inner.free_record(r, ps)?;
+        }
+        let seq =
+            inner.write_record(&self.pool, extent, KIND_PREFIX, chain_key, root, &payload, ps)?;
+        let meta = RecordMeta {
+            extent,
+            payload_len: payload.len(),
+            seq,
+            tokens: snap.len,
+            bytes_by_rung: snap.bytes_by_rung(),
+        };
+        for (acc, b) in inner.stats.on_disk_bytes_by_rung.iter_mut().zip(meta.bytes_by_rung) {
+            *acc += b;
+        }
+        inner.clock += 1;
+        let last_used = inner.clock;
+        inner.prefixes.insert(chain_key, PrefixMeta { meta, root, last_used });
+        inner.stats.prefix_publishes += 1;
+        Ok(Some(StoreReceipt::for_snapshot(snap, pages as usize, payload.len())))
+    }
+
+    pub fn contains_prefix(&self, chain_key: u64) -> bool {
+        self.inner.lock().expect("store lock").prefixes.contains_key(&chain_key)
+    }
+
+    /// How many leading keys of `keys` are present — the store-side chain
+    /// walk (pure peek: no LRU bump, no I/O).
+    pub fn prefix_chain_depth(&self, keys: &[u64]) -> usize {
+        let inner = self.inner.lock().expect("store lock");
+        keys.iter().take_while(|k| inner.prefixes.contains_key(k)).count()
+    }
+
+    /// Fetch one prefix block, bumping its LRU stamp. Fail-closed like
+    /// [`PageFileStore::get_snapshot`].
+    pub fn get_prefix_block(
+        &self,
+        chain_key: u64,
+    ) -> Result<Option<(SeqSnapshot, StoreReceipt)>, StoreError> {
+        let ps = self.cfg.page_size as u64;
+        let mut inner = self.inner.lock().expect("store lock");
+        let Some(pm) = inner.prefixes.get(&chain_key).copied() else { return Ok(None) };
+        inner.clock += 1;
+        inner.prefixes.get_mut(&chain_key).expect("present above").last_used = inner.clock;
+        let payload =
+            inner.read_payload(&self.pool, &pm.meta, KIND_PREFIX, chain_key, pm.root, ps)?;
+        let snap = decode_snapshot(&payload)?;
+        Ok(Some((
+            snap,
+            StoreReceipt::for_snapshot(&snap, pm.meta.extent.pages as usize, payload.len()),
+        )))
+    }
+
+    /// Flush file contents to stable storage.
+    pub fn sync(&self) -> Result<(), StoreError> {
+        self.inner.lock().expect("store lock").file.sync_all()?;
+        Ok(())
+    }
+
+    /// Counters snapshot (live occupancy filled in at call time).
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().expect("store lock");
+        let mut s = inner.stats;
+        s.snapshots = inner.snaps.len();
+        s.prefix_blocks = inner.prefixes.len();
+        s.layouts = inner.layouts.len();
+        s.used_pages = inner.used_pages() as usize;
+        s.capacity_pages = self.cfg.max_pages;
+        s
+    }
+
+    /// Shared I/O-buffer pool counters.
+    pub fn pool_stats(&self) -> PagePoolStats {
+        self.pool.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::pool::KvPrecision;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tmkv-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn snap(len: usize, prec: KvPrecision, tag: u8) -> SeqSnapshot {
+        let layout = KvLayout::uniform(prec, 2);
+        let (kv_heads, head_dim) = (2, 8);
+        let tcb = layout.token_code_bytes(kv_heads, head_dim);
+        SeqSnapshot {
+            len,
+            codes: (0..len * tcb).map(|i| (i as u8).wrapping_mul(7).wrapping_add(tag)).collect(),
+            scales: (0..len * 2 * 2 * kv_heads).map(|i| i as f32 + tag as f32).collect(),
+            kv_heads,
+            head_dim,
+            layout,
+        }
+    }
+
+    #[test]
+    fn snapshots_roundtrip_and_survive_reopen() {
+        let path = tmp("roundtrip.pages");
+        let _ = std::fs::remove_file(&path);
+        let cfg = StoreConfig::with_geometry(&path, 512, 0);
+        let s1 = snap(5, KvPrecision::Int8, 1);
+        let s2 = snap(3, KvPrecision::F32, 2);
+        {
+            let store = PageFileStore::open(cfg.clone()).unwrap();
+            store.put_snapshot(1, 10, &s1).unwrap();
+            store.put_snapshot(1, 11, &s2).unwrap();
+            assert_eq!(store.snapshot_tokens(1, 10), Some(5));
+            let (got, _) = store.get_snapshot(1, 10).unwrap().unwrap();
+            assert_eq!(got, s1);
+        }
+        // Reopen: both snapshots recovered byte-exactly, fresh namespaces
+        // start above the persisted one.
+        let store = PageFileStore::open(cfg).unwrap();
+        let st = store.stats();
+        assert_eq!(st.recovered_snapshots, 2);
+        assert_eq!(st.quarantined_pages, 0);
+        assert_eq!(store.get_snapshot(1, 10).unwrap().unwrap().0, s1);
+        assert_eq!(store.get_snapshot(1, 11).unwrap().unwrap().0, s2);
+        assert!(store.alloc_namespace() > 1);
+    }
+
+    #[test]
+    fn delete_frees_pages_and_never_resurrects() {
+        let path = tmp("delete.pages");
+        let _ = std::fs::remove_file(&path);
+        let cfg = StoreConfig::with_geometry(&path, 512, 0);
+        {
+            let store = PageFileStore::open(cfg.clone()).unwrap();
+            store.put_snapshot(1, 1, &snap(4, KvPrecision::Int4, 3)).unwrap();
+            store.put_snapshot(1, 2, &snap(4, KvPrecision::Int4, 4)).unwrap();
+            assert!(store.delete_snapshot(1, 1).unwrap());
+            assert!(!store.delete_snapshot(1, 1).unwrap());
+            assert_eq!(store.stats().snapshots, 1);
+        }
+        let store = PageFileStore::open(cfg).unwrap();
+        assert_eq!(store.stats().recovered_snapshots, 1, "deleted record must not resurrect");
+        assert!(store.get_snapshot(1, 1).unwrap().is_none());
+        assert!(store.get_snapshot(1, 2).unwrap().is_some());
+    }
+
+    #[test]
+    fn freed_extents_are_reused_first_fit() {
+        let path = tmp("reuse.pages");
+        let _ = std::fs::remove_file(&path);
+        let store = PageFileStore::open(StoreConfig::with_geometry(&path, 512, 0)).unwrap();
+        store.put_snapshot(1, 1, &snap(8, KvPrecision::F32, 1)).unwrap();
+        let used_after_first = store.stats().used_pages;
+        store.put_snapshot(1, 2, &snap(2, KvPrecision::Int4, 2)).unwrap();
+        store.delete_snapshot(1, 1).unwrap();
+        // A same-or-smaller record lands inside the freed extent: the file
+        // does not grow.
+        let len_before = std::fs::metadata(&path).unwrap().len();
+        store.put_snapshot(1, 3, &snap(2, KvPrecision::Int4, 5)).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), len_before);
+        assert!(store.stats().used_pages < used_after_first + 2 * store.stats().snapshots);
+        assert_eq!(store.get_snapshot(1, 3).unwrap().unwrap().0, snap(2, KvPrecision::Int4, 5));
+    }
+
+    #[test]
+    fn capacity_rejects_snapshots_and_evicts_prefix_lru() {
+        let path = tmp("capacity.pages");
+        let _ = std::fs::remove_file(&path);
+        // Every record here fits in one 512-byte page; capacity 2 pages.
+        let store = PageFileStore::open(StoreConfig::with_geometry(&path, 512, 2)).unwrap();
+        let b = snap(1, KvPrecision::Int4, 1);
+        store.put_snapshot(1, 1, &b).unwrap();
+        store.put_snapshot(1, 2, &b).unwrap();
+        let err = store.put_snapshot(1, 3, &b).unwrap_err();
+        assert!(matches!(err, StoreError::Full { .. }), "{err}");
+        // Prefix publishes cannot evict session snapshots.
+        assert!(store.publish_prefix_block(7, 100, &b).unwrap().is_none());
+        assert_eq!(store.stats().rejected_full, 2);
+        // With room, publishes land and LRU eviction cycles them.
+        store.delete_snapshot(1, 1).unwrap();
+        assert!(store.publish_prefix_block(7, 100, &b).unwrap().is_some());
+        assert!(store.publish_prefix_block(7, 101, &b).unwrap().is_none(), "full again");
+        assert_eq!(store.stats().prefix_blocks, 1, "victim was the only other prefix block");
+    }
+
+    #[test]
+    fn prefix_blocks_walk_and_reopen() {
+        let path = tmp("prefix.pages");
+        let _ = std::fs::remove_file(&path);
+        let cfg = StoreConfig::with_geometry(&path, 512, 0);
+        let layout = KvLayout::uniform(KvPrecision::Int8, 2);
+        let b = snap(4, KvPrecision::Int8, 9);
+        let root = {
+            let store = PageFileStore::open(cfg.clone()).unwrap();
+            let root = store.register_layout(&layout, 4).unwrap();
+            assert_eq!(store.register_layout(&layout, 4).unwrap(), root, "idempotent");
+            assert!(store.publish_prefix_block(root, 1001, &b).unwrap().is_some());
+            assert!(store.publish_prefix_block(root, 1002, &b).unwrap().is_some());
+            assert!(store.publish_prefix_block(root, 1001, &b).unwrap().is_none(), "dup");
+            assert_eq!(store.prefix_chain_depth(&[1001, 1002, 1003]), 2);
+            assert_eq!(store.prefix_chain_depth(&[1003, 1001]), 0);
+            root
+        };
+        let store = PageFileStore::open(cfg).unwrap();
+        assert_eq!(store.stats().recovered_prefix_blocks, 2);
+        let layouts = store.registered_layouts();
+        assert_eq!(layouts, vec![(root, layout, 4)], "registry survives restart");
+        assert_eq!(store.get_prefix_block(1002).unwrap().unwrap().0, b);
+    }
+
+    #[test]
+    fn bit_flip_fails_closed_on_read_and_on_reopen() {
+        let path = tmp("bitflip.pages");
+        let _ = std::fs::remove_file(&path);
+        let cfg = StoreConfig::with_geometry(&path, 512, 0);
+        let store = PageFileStore::open(cfg.clone()).unwrap();
+        store.put_snapshot(1, 1, &snap(4, KvPrecision::Int8, 6)).unwrap();
+        store.sync().unwrap();
+        // Flip one payload bit on disk (page 1, past the record header).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = 512 + HEADER_BYTES + 10;
+        bytes[at] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        // The open handle fails closed on read...
+        let err = store.get_snapshot(1, 1).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+        drop(store);
+        // ...and a reopen quarantines the record instead of serving it.
+        let store = PageFileStore::open(cfg).unwrap();
+        let st = store.stats();
+        assert_eq!(st.recovered_snapshots, 0);
+        assert!(st.quarantined_pages > 0);
+        assert!(store.get_snapshot(1, 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_at_page_boundary_quarantines_the_cut_record() {
+        let path = tmp("truncate.pages");
+        let _ = std::fs::remove_file(&path);
+        let cfg = StoreConfig::with_geometry(&path, 512, 0);
+        let big = snap(16, KvPrecision::F32, 2); // multi-page record
+        let small = snap(1, KvPrecision::Int4, 1);
+        {
+            let store = PageFileStore::open(cfg.clone()).unwrap();
+            store.put_snapshot(1, 1, &small).unwrap();
+            store.put_snapshot(1, 2, &big).unwrap();
+            store.sync().unwrap();
+        }
+        // Cut the file one page into the second (multi-page) record.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let file = OpenOptions::new().write(true).open(&path).unwrap();
+        file.set_len(len - 512).unwrap();
+        drop(file);
+        let store = PageFileStore::open(cfg).unwrap();
+        let st = store.stats();
+        assert_eq!(st.recovered_snapshots, 1, "committed record survives");
+        assert!(st.quarantined_pages > 0, "cut record is quarantined");
+        assert_eq!(store.get_snapshot(1, 1).unwrap().unwrap().0, small);
+        assert!(store.get_snapshot(1, 2).unwrap().is_none());
+    }
+
+    #[test]
+    fn page_size_mismatch_is_a_structured_geometry_error() {
+        let path = tmp("geometry.pages");
+        let _ = std::fs::remove_file(&path);
+        PageFileStore::open(StoreConfig::with_geometry(&path, 512, 0)).unwrap();
+        let err = PageFileStore::open(StoreConfig::with_geometry(&path, 1024, 0)).unwrap_err();
+        assert!(matches!(err, StoreError::Geometry(_)), "{err}");
+        assert!(StoreConfig::with_geometry("/x", 300, 0).validate().is_err(), "non-power-of-two");
+    }
+}

@@ -1,0 +1,156 @@
+//! Shared page-buffer pool: an `Arc`'d free-list that recycles the
+//! page-aligned I/O buffers every store read and write stages through
+//! (SpacetimeDB's `PagePool` idiom — allocation reuse on deserialize).
+//!
+//! Buffers are whole-page multiples, so a buffer retired by one extent is
+//! almost always large enough for the next: in the steady state the store
+//! performs zero I/O-buffer allocations. The pool is shared by every
+//! replica holding the same [`PageFileStore`](super::PageFileStore) — the
+//! host-global store means host-global buffer reuse too.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Allocation-reuse counters (surfaced through
+/// [`StoreStats`](super::StoreStats) and `bench persist`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PagePoolStats {
+    /// Buffers handed out by allocating fresh memory.
+    pub created: usize,
+    /// Buffers handed out by reusing a retired allocation.
+    pub reused: usize,
+    /// Buffers currently parked on the free-list.
+    pub cached: usize,
+}
+
+#[derive(Debug)]
+struct Inner {
+    page_size: usize,
+    /// Free-list cap: retired buffers beyond this are dropped instead of
+    /// parked, bounding idle memory at `max_cached × largest extent`.
+    max_cached: usize,
+    free: Mutex<Vec<Vec<u8>>>,
+    created: AtomicUsize,
+    reused: AtomicUsize,
+}
+
+/// The shared pool. Cloning shares the same free-list (`Arc` semantics).
+#[derive(Debug, Clone)]
+pub struct PagePool {
+    inner: Arc<Inner>,
+}
+
+impl PagePool {
+    pub fn new(page_size: usize, max_cached: usize) -> Self {
+        assert!(page_size.is_power_of_two(), "page size must be a power of two");
+        Self {
+            inner: Arc::new(Inner {
+                page_size,
+                max_cached,
+                free: Mutex::new(Vec::new()),
+                created: AtomicUsize::new(0),
+                reused: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.inner.page_size
+    }
+
+    /// Bytes rounded up to a whole number of pages.
+    pub fn rounded(&self, bytes: usize) -> usize {
+        let ps = self.inner.page_size;
+        bytes.div_ceil(ps).max(1) * ps
+    }
+
+    /// A zeroed buffer of at least `bytes`, page-rounded — reusing a
+    /// retired allocation when one is large enough. Zeroing makes record
+    /// padding deterministic, so byte-comparing two page files written by
+    /// identical operation sequences is meaningful.
+    pub fn take(&self, bytes: usize) -> Vec<u8> {
+        let need = self.rounded(bytes);
+        let reusable = {
+            let mut free = self.inner.free.lock().expect("page pool lock");
+            free.iter()
+                .position(|b| b.capacity() >= need)
+                .map(|i| free.swap_remove(i))
+        };
+        match reusable {
+            Some(mut buf) => {
+                self.inner.reused.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf.resize(need, 0);
+                buf
+            }
+            None => {
+                self.inner.created.fetch_add(1, Ordering::Relaxed);
+                vec![0u8; need]
+            }
+        }
+    }
+
+    /// Retire a buffer back to the free-list (dropped when the list is at
+    /// its cap or the buffer is smaller than one page).
+    pub fn put(&self, buf: Vec<u8>) {
+        if buf.capacity() < self.inner.page_size {
+            return;
+        }
+        let mut free = self.inner.free.lock().expect("page pool lock");
+        if free.len() < self.inner.max_cached {
+            free.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> PagePoolStats {
+        PagePoolStats {
+            created: self.inner.created.load(Ordering::Relaxed),
+            reused: self.inner.reused.load(Ordering::Relaxed),
+            cached: self.inner.free.lock().expect("page pool lock").len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_rounds_to_pages_and_zeroes() {
+        let p = PagePool::new(256, 4);
+        let b = p.take(1);
+        assert_eq!(b.len(), 256);
+        let b2 = p.take(257);
+        assert_eq!(b2.len(), 512);
+        assert!(b2.iter().all(|&x| x == 0));
+        assert_eq!(p.take(0).len(), 256, "zero-byte requests still get one page");
+    }
+
+    #[test]
+    fn retired_buffers_are_reused_and_rezeroed() {
+        let p = PagePool::new(256, 4);
+        let mut b = p.take(512);
+        b[0] = 0xAB;
+        let cap = b.capacity();
+        p.put(b);
+        assert_eq!(p.stats().cached, 1);
+        // A smaller request reuses the larger retired buffer, zeroed.
+        let b2 = p.take(256);
+        assert_eq!(b2.capacity(), cap);
+        assert!(b2.iter().all(|&x| x == 0), "reused buffer must be zeroed");
+        let s = p.stats();
+        assert_eq!((s.created, s.reused, s.cached), (2, 1, 0));
+    }
+
+    #[test]
+    fn free_list_is_bounded_and_shared_across_clones() {
+        let p = PagePool::new(256, 2);
+        let q = p.clone();
+        for _ in 0..5 {
+            q.put(vec![0u8; 256]);
+        }
+        assert_eq!(p.stats().cached, 2, "cap bounds the free-list");
+        p.take(256);
+        assert_eq!(q.stats().reused, 1, "clones share one free-list");
+    }
+}

@@ -1,0 +1,233 @@
+//! Shared-prefix resolution against the host-global store.
+//!
+//! The per-replica [`PrefixCache`](crate::kvcache::PrefixCache) walks
+//! chain-hash keys over *its own pool's* blocks; this module walks the
+//! same key space over the [`PageFileStore`]'s persisted blocks, across
+//! every layout any replica has registered. A replica adopting a hit
+//! fetches the block chain, transcodes to its pool's layout when the
+//! published layout is wider (the one-way ladder), and imports through the
+//! byte-exact `import_seq` path — so a kv16 block published before a pool
+//! laddered down to kv4 re-inflates bit-identically to prefilling at kv4
+//! directly (the PR 5 warm-restore follow-up).
+
+use super::pagefile::{PageFileStore, StoreReceipt};
+use super::StoreError;
+use crate::kvcache::prefix::chain_keys_under;
+use crate::kvcache::{KvLayout, SeqSnapshot};
+
+/// A resolved store-side prefix match: the deepest persisted block chain
+/// covering the head of a prompt, under some registered layout the caller
+/// can adopt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SharedPrefixHit {
+    /// Root key of the winning `(layout, block_tokens)` registry entry.
+    pub root: u64,
+    /// Layout the persisted blocks were published under.
+    pub layout: KvLayout,
+    /// Block geometry of the chain.
+    pub block_tokens: usize,
+    /// Chain keys of the matched blocks, shallowest first.
+    pub keys: Vec<u64>,
+    /// Tokens covered (`keys.len() × block_tokens`).
+    pub tokens: usize,
+}
+
+/// Find the deepest persisted prefix chain for `prompt` that a pool with
+/// `pool_layout`/`block_tokens` can adopt: the published layout must
+/// either equal the pool's or transcode down to it (the one-way ladder).
+/// At most `max_tokens` tokens are matched (callers cap at prompt_len − 1
+/// so at least one token remains to prefill). Ties prefer the pool's exact
+/// layout (no transcode work), then the lowest root key — the registry
+/// iterates root-ordered, so resolution is deterministic across replicas
+/// and restarts.
+pub fn resolve_shared_prefix(
+    store: &PageFileStore,
+    prompt: &[i32],
+    pool_layout: &KvLayout,
+    block_tokens: usize,
+    max_tokens: usize,
+) -> Option<SharedPrefixHit> {
+    let max_blocks = max_tokens / block_tokens.max(1);
+    if max_blocks == 0 {
+        return None;
+    }
+    let mut best: Option<SharedPrefixHit> = None;
+    for (root, layout, bt) in store.registered_layouts() {
+        if bt != block_tokens {
+            continue;
+        }
+        if layout != *pool_layout && !layout.can_transcode_to(pool_layout) {
+            continue;
+        }
+        let keys = chain_keys_under(root, prompt, block_tokens, max_blocks);
+        let depth = store.prefix_chain_depth(&keys);
+        if depth == 0 {
+            continue;
+        }
+        let exact = layout == *pool_layout;
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                let b_exact = b.layout == *pool_layout;
+                depth > b.keys.len() || (depth == b.keys.len() && exact && !b_exact)
+            }
+        };
+        if better {
+            best = Some(SharedPrefixHit {
+                root,
+                layout,
+                block_tokens,
+                keys: keys[..depth].to_vec(),
+                tokens: depth * block_tokens,
+            });
+        }
+    }
+    best
+}
+
+/// Fetch a resolved chain's blocks and concatenate them into one snapshot
+/// (still in the hit's published layout — the caller transcodes if its
+/// pool is narrower). Every block is re-validated: checksums on the read
+/// path, then geometry/layout/length against the chain's registry entry.
+/// A block evicted between resolve and fetch yields `Ok(None)` (the
+/// caller falls back to cold prefill); corruption propagates fail-closed.
+pub fn fetch_chain(
+    store: &PageFileStore,
+    hit: &SharedPrefixHit,
+) -> Result<Option<(SeqSnapshot, StoreReceipt)>, StoreError> {
+    let mut merged: Option<SeqSnapshot> = None;
+    let mut receipt = StoreReceipt::default();
+    for &key in &hit.keys {
+        let Some((block, r)) = store.get_prefix_block(key)? else {
+            return Ok(None);
+        };
+        if block.len != hit.block_tokens || block.layout != hit.layout {
+            return Err(StoreError::corrupt(
+                "prefix",
+                0,
+                format!(
+                    "chain block holds {} tokens of layout {}, registry says {} of {}",
+                    block.len, block.layout, hit.block_tokens, hit.layout
+                ),
+            ));
+        }
+        receipt.merge(&r);
+        match &mut merged {
+            None => merged = Some(block),
+            Some(acc) => {
+                if block.kv_heads != acc.kv_heads || block.head_dim != acc.head_dim {
+                    return Err(StoreError::corrupt(
+                        "prefix",
+                        0,
+                        "chain blocks disagree on kv geometry",
+                    ));
+                }
+                acc.len += block.len;
+                acc.codes.extend_from_slice(&block.codes);
+                acc.scales.extend_from_slice(&block.scales);
+            }
+        }
+    }
+    Ok(merged.map(|s| (s, receipt)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::pool::KvPrecision;
+    use crate::store::StoreConfig;
+
+    const BT: usize = 4;
+
+    fn block(layout: &KvLayout, tag: u8) -> SeqSnapshot {
+        let (kv_heads, head_dim) = (2, 8);
+        let tcb = layout.token_code_bytes(kv_heads, head_dim);
+        SeqSnapshot {
+            len: BT,
+            codes: (0..BT * tcb).map(|i| (i as u8).wrapping_add(tag)).collect(),
+            scales: (0..BT * layout.n_layers() * 2 * kv_heads).map(|i| 1.0 + i as f32).collect(),
+            kv_heads,
+            head_dim,
+            layout: layout.clone(),
+        }
+    }
+
+    fn open(name: &str) -> std::sync::Arc<PageFileStore> {
+        let dir = std::env::temp_dir().join(format!("tmkv-prefix-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        PageFileStore::open(StoreConfig::with_geometry(path, 512, 0)).unwrap()
+    }
+
+    #[test]
+    fn resolves_deepest_chain_and_fetches_concatenated() {
+        let store = open("resolve.pages");
+        let layout = KvLayout::uniform(KvPrecision::Int8, 2);
+        let root = store.register_layout(&layout, BT).unwrap();
+        let prompt: Vec<i32> = (0..12).collect();
+        let keys = chain_keys_under(root, &prompt, BT, 8);
+        let (b0, b1) = (block(&layout, 1), block(&layout, 2));
+        store.publish_prefix_block(root, keys[0], &b0).unwrap();
+        store.publish_prefix_block(root, keys[1], &b1).unwrap();
+
+        let hit = resolve_shared_prefix(&store, &prompt, &layout, BT, prompt.len()).unwrap();
+        assert_eq!((hit.tokens, hit.keys.len(), hit.root), (8, 2, root));
+        let (merged, receipt) = fetch_chain(&store, &hit).unwrap().unwrap();
+        assert_eq!(merged.len, 8);
+        assert_eq!(&merged.codes[..b0.codes.len()], &b0.codes[..]);
+        assert_eq!(&merged.codes[b0.codes.len()..], &b1.codes[..]);
+        assert_eq!(receipt.snapshot_bytes(), b0.bytes_by_rung().iter().sum::<usize>() * 2);
+
+        // max_tokens caps the matched depth (leave one token to prefill).
+        let hit = resolve_shared_prefix(&store, &prompt, &layout, BT, 7).unwrap();
+        assert_eq!(hit.tokens, 4);
+        // A different prompt head misses entirely.
+        let other: Vec<i32> = (100..112).collect();
+        assert!(resolve_shared_prefix(&store, &other, &layout, BT, 12).is_none());
+    }
+
+    #[test]
+    fn cross_layout_adoption_prefers_exact_and_respects_the_ladder() {
+        let store = open("ladder.pages");
+        let kv16 = KvLayout::uniform(KvPrecision::F32, 2);
+        let kv4 = KvLayout::uniform(KvPrecision::Int4, 2);
+        let r16 = store.register_layout(&kv16, BT).unwrap();
+        let r4 = store.register_layout(&kv4, BT).unwrap();
+        let prompt: Vec<i32> = (0..8).collect();
+        let k16 = chain_keys_under(r16, &prompt, BT, 8);
+        let k4 = chain_keys_under(r4, &prompt, BT, 8);
+        store.publish_prefix_block(r16, k16[0], &block(&kv16, 3)).unwrap();
+        store.publish_prefix_block(r4, k4[0], &block(&kv4, 4)).unwrap();
+
+        // A kv4 pool can adopt either chain; equal depth prefers its own.
+        let hit = resolve_shared_prefix(&store, &prompt, &kv4, BT, 8).unwrap();
+        assert_eq!(hit.layout, kv4);
+        // With only the kv16 chain published deeper, the wider chain wins
+        // and the caller transcodes down.
+        store.publish_prefix_block(r16, k16[1], &block(&kv16, 5)).unwrap();
+        let hit = resolve_shared_prefix(&store, &prompt, &kv4, BT, 8).unwrap();
+        assert_eq!((hit.layout.clone(), hit.tokens), (kv16.clone(), 8));
+        let (merged, _) = fetch_chain(&store, &hit).unwrap().unwrap();
+        assert!(merged.transcode_to(&kv4).is_ok());
+        // A kv16 pool cannot adopt kv4 blocks (no upward transcode): only
+        // the kv16 chain resolves for it.
+        let hit = resolve_shared_prefix(&store, &prompt, &kv16, BT, 8).unwrap();
+        assert_eq!(hit.layout, kv16);
+    }
+
+    #[test]
+    fn evicted_block_mid_fetch_falls_back_to_none() {
+        let store = open("evict.pages");
+        let layout = KvLayout::uniform(KvPrecision::Int8, 2);
+        let root = store.register_layout(&layout, BT).unwrap();
+        let prompt: Vec<i32> = (0..4).collect();
+        let keys = chain_keys_under(root, &prompt, BT, 8);
+        store.publish_prefix_block(root, keys[0], &block(&layout, 6)).unwrap();
+        let hit = resolve_shared_prefix(&store, &prompt, &layout, BT, 4).unwrap();
+        // Simulate an eviction racing the fetch by resolving a hit whose
+        // key no longer exists.
+        let stale = SharedPrefixHit { keys: vec![keys[0] ^ 1], ..hit };
+        assert!(fetch_chain(&store, &stale).unwrap().is_none());
+    }
+}

@@ -132,6 +132,16 @@ pub enum EventKind {
     /// drain). Bytes are attributed per the *snapshot's* recorded rung
     /// extents, never the pool's current layout.
     MigrateOut { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
+    /// A snapshot's bytes written to the page-file store's disk tier (a
+    /// swap-out landing on disk, or prefix blocks published to the
+    /// host-global store). Bytes split per the snapshot's recorded rungs;
+    /// `dur_s` is the disk leg only — the PCIe leg is the paired
+    /// `SwapOut`/`SwapIn` event.
+    StoreWrite { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
+    /// A snapshot's bytes read back from the page-file store's disk tier
+    /// (a disk-tier swap-in, or a shared-prefix chain adopted at
+    /// admission).
+    StoreRead { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
     /// A migrated snapshot imported into this replica's pool.
     MigrateIn { id: u64, bytes_by_rung: [u64; 3], dur_s: f64 },
     /// The request left the engine (finished or aborted).
@@ -151,6 +161,8 @@ impl EventKind {
             EventKind::SwapIn { .. } => "swap_in",
             EventKind::MigrateOut { .. } => "migrate_out",
             EventKind::MigrateIn { .. } => "migrate_in",
+            EventKind::StoreWrite { .. } => "store_write",
+            EventKind::StoreRead { .. } => "store_read",
             EventKind::Finish { .. } => "finish",
         }
     }
@@ -165,6 +177,8 @@ impl EventKind {
             | EventKind::SwapIn { id, .. }
             | EventKind::MigrateOut { id, .. }
             | EventKind::MigrateIn { id, .. }
+            | EventKind::StoreWrite { id, .. }
+            | EventKind::StoreRead { id, .. }
             | EventKind::Finish { id, .. } => Some(*id),
             _ => None,
         }
@@ -180,7 +194,9 @@ impl EventKind {
             | EventKind::SwapOut { dur_s, .. }
             | EventKind::SwapIn { dur_s, .. }
             | EventKind::MigrateOut { dur_s, .. }
-            | EventKind::MigrateIn { dur_s, .. } => *dur_s,
+            | EventKind::MigrateIn { dur_s, .. }
+            | EventKind::StoreWrite { dur_s, .. }
+            | EventKind::StoreRead { dur_s, .. } => *dur_s,
             _ => 0.0,
         }
     }
@@ -303,6 +319,22 @@ fn encode(ev: &TraceEvent) -> [u64; WORDS] {
             w[5] = bytes_by_rung[2];
             w[9] = dur_s.to_bits();
         }
+        EventKind::StoreWrite { id, bytes_by_rung, dur_s } => {
+            w[0] = 12;
+            w[2] = *id;
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[9] = dur_s.to_bits();
+        }
+        EventKind::StoreRead { id, bytes_by_rung, dur_s } => {
+            w[0] = 13;
+            w[2] = *id;
+            w[3] = bytes_by_rung[0];
+            w[4] = bytes_by_rung[1];
+            w[5] = bytes_by_rung[2];
+            w[9] = dur_s.to_bits();
+        }
         EventKind::Finish { id, reason, tokens, latency_s } => {
             w[0] = 9;
             w[2] = *id;
@@ -381,6 +413,16 @@ fn decode(w: &[u64; WORDS]) -> Option<TraceEvent> {
             dur_s: f64::from_bits(w[9]),
         },
         11 => EventKind::MigrateIn {
+            id: w[2],
+            bytes_by_rung: [w[3], w[4], w[5]],
+            dur_s: f64::from_bits(w[9]),
+        },
+        12 => EventKind::StoreWrite {
+            id: w[2],
+            bytes_by_rung: [w[3], w[4], w[5]],
+            dur_s: f64::from_bits(w[9]),
+        },
+        13 => EventKind::StoreRead {
             id: w[2],
             bytes_by_rung: [w[3], w[4], w[5]],
             dur_s: f64::from_bits(w[9]),
@@ -610,7 +652,9 @@ pub fn args_json(kind: &EventKind) -> Json {
         ]),
         EventKind::SwapIn { id, bytes_by_rung, dur_s }
         | EventKind::MigrateOut { id, bytes_by_rung, dur_s }
-        | EventKind::MigrateIn { id, bytes_by_rung, dur_s } => obj([
+        | EventKind::MigrateIn { id, bytes_by_rung, dur_s }
+        | EventKind::StoreWrite { id, bytes_by_rung, dur_s }
+        | EventKind::StoreRead { id, bytes_by_rung, dur_s } => obj([
             ("id", Json::from(*id)),
             ("bytes", Json::from(bytes_by_rung.iter().sum::<u64>())),
             ("bytes_kv16", Json::from(bytes_by_rung[0])),
@@ -723,7 +767,9 @@ fn push_track(track: &TraceTrack, out: &mut Vec<Json>) {
             | EventKind::SwapOut { dur_s, .. }
             | EventKind::SwapIn { dur_s, .. }
             | EventKind::MigrateOut { dur_s, .. }
-            | EventKind::MigrateIn { dur_s, .. } => {
+            | EventKind::MigrateIn { dur_s, .. }
+            | EventKind::StoreWrite { dur_s, .. }
+            | EventKind::StoreRead { dur_s, .. } => {
                 out.push(chrome_event(
                     "X",
                     ev.kind.name(),

@@ -22,7 +22,7 @@
 use turbomind::config::engine::{LadderPolicy, PreemptionMode, SchedulerPolicy};
 use turbomind::config::EngineConfig;
 use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
-use turbomind::kvcache::{KvLayout, KvPool, KvPrecision, SeqHandle};
+use turbomind::kvcache::{KvLayout, KvPool, KvPrecision, SeqHandle, SwapBackend};
 use turbomind::quant::{quantize_kv_int4, quantize_kv_int8};
 use turbomind::util::proptest::run_prop;
 
@@ -78,8 +78,8 @@ fn assert_drained(e: &Engine, ctx: &str) {
     let swap = e.swap_store();
     assert!(swap.is_empty(), "{ctx}: swap store must drain");
     assert_eq!(
-        swap.stats.swap_outs,
-        swap.stats.swap_ins + swap.stats.dropped,
+        swap.stats().swap_outs,
+        swap.stats().swap_ins + swap.stats().dropped,
         "{ctx}: every swap-out is either restored or downgraded"
     );
     let p = e.preempt_stats;

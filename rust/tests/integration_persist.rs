@@ -1,0 +1,349 @@
+//! Tiered KV persistence integration tests (DESIGN.md §14) on the
+//! hermetic sim backend: a randomized crash-recovery harness over the
+//! page-file store, end-to-end warm restart (same `--store-path`, fresh
+//! engine, bit-identical replay), cross-layout adoption of shared
+//! prefix blocks (kv16 on disk re-inflating into a kv4 pool), and the
+//! abort-while-swapped accounting regression.
+//!
+//! The load-bearing claims:
+//!   (a) truncating the page file at any page boundary loses only a
+//!       suffix of the committed records — every survivor round-trips
+//!       byte-exactly, nothing resurrects, nothing corrupt is served;
+//!   (b) a reopened store warm-starts a fresh engine: recovered prefix
+//!       blocks are adopted at admission and the replay is bit-identical
+//!       to the cold run (greedy sampling, byte-exact imports);
+//!   (c) adoption transcodes across layouts exactly — a kv4 engine fed
+//!       kv16 blocks from disk matches a storeless kv4 run bit-for-bit;
+//!   (d) cancelling a swapped-out request drops its host/page-file entry
+//!       without pricing a swap-in that never happens: trace events
+//!       reconcile exactly with the PCIe and disk byte counters.
+
+use std::sync::Arc;
+
+use turbomind::config::engine::{PreemptionMode, SchedulerPolicy};
+use turbomind::config::EngineConfig;
+use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use turbomind::kvcache::{KvLayout, KvPrecision, SeqSnapshot, SwapBackend};
+use turbomind::store::{PageFileStore, StoreConfig};
+use turbomind::trace::EventKind;
+use turbomind::util::proptest::{run_prop, Gen};
+use turbomind::workload::SharedPrefixGen;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmkv-itest-persist-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn fresh_store(name: &str) -> (std::path::PathBuf, Arc<PageFileStore>) {
+    let path = tmp(name);
+    let _ = std::fs::remove_file(&path);
+    (path.clone(), PageFileStore::open(StoreConfig::new(path)).unwrap())
+}
+
+/// Arbitrary snapshot with deterministic, case-seeded contents.
+fn rand_snap(g: &mut Gen) -> SeqSnapshot {
+    let prec = *g.choose(&[KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4]);
+    let layout = KvLayout::uniform(prec, 2);
+    let (kv_heads, head_dim) = (2usize, 8usize);
+    let len = g.usize_in(1, 12);
+    let tcb = layout.token_code_bytes(kv_heads, head_dim);
+    let tag = g.usize_in(0, 255) as u8;
+    SeqSnapshot {
+        len,
+        codes: (0..len * tcb).map(|i| (i as u8).wrapping_mul(13).wrapping_add(tag)).collect(),
+        scales: g.f32_vec(len * 2 * 2 * kv_heads, -4.0, 4.0),
+        kv_heads,
+        head_dim,
+        layout,
+    }
+}
+
+/// What one harness case committed, in write order. In a fresh store with
+/// no deletes allocation is append-only, so a page-boundary truncation
+/// must leave the survivors forming a *prefix* of this order.
+enum Written {
+    Snap { id: u64, snap: SeqSnapshot },
+    Pfx { key: u64, snap: SeqSnapshot },
+}
+
+#[test]
+fn randomized_crash_recovery_loses_only_a_suffix_and_serves_survivors_byte_exactly() {
+    run_prop("persist-crash", 0x9A6E_F11E, 12, |g: &mut Gen| {
+        let page_size = *g.choose(&[512usize, 1024, 2048]);
+        let path = tmp("crash.pages");
+        let _ = std::fs::remove_file(&path);
+        let cfg = StoreConfig::with_geometry(&path, page_size, 0);
+        let mut written: Vec<Written> = Vec::new();
+        {
+            let store = PageFileStore::open(cfg.clone()).unwrap();
+            let layout = KvLayout::uniform(KvPrecision::Int8, 2);
+            let root = store.register_layout(&layout, 16).unwrap();
+            let key_base = g.usize_in(1, 1 << 30) as u64;
+            let n = g.usize_in(3, 8);
+            for i in 0..n {
+                let snap = rand_snap(g);
+                if g.bool() {
+                    store.put_snapshot(1, 100 + i as u64, &snap).unwrap();
+                    written.push(Written::Snap { id: 100 + i as u64, snap });
+                } else {
+                    let key = key_base + i as u64;
+                    assert!(store.publish_prefix_block(root, key, &snap).unwrap().is_some());
+                    written.push(Written::Pfx { key, snap });
+                }
+            }
+            store.sync().unwrap();
+        }
+        // Crash: cut the file at a random page boundary (keeping at least
+        // the header page), then reopen.
+        let file_len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(file_len % page_size as u64, 0, "extents are whole pages");
+        let pages_total = (file_len / page_size as u64) as usize;
+        let keep = g.usize_in(1, pages_total);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len((keep * page_size) as u64).unwrap();
+        f.sync_all().unwrap();
+        drop(f);
+
+        let store = PageFileStore::open(cfg).unwrap();
+        let mut alive = 0usize;
+        let mut dead_seen = false;
+        let (mut live_snaps, mut live_pfx) = (0usize, 0usize);
+        for w in &written {
+            let got = match w {
+                Written::Snap { id, snap } => {
+                    store.get_snapshot(1, *id).unwrap().map(|(s, _)| (s, snap))
+                }
+                Written::Pfx { key, snap } => {
+                    store.get_prefix_block(*key).unwrap().map(|(s, _)| (s, snap))
+                }
+            };
+            match got {
+                Some((recovered, original)) => {
+                    assert!(
+                        !dead_seen,
+                        "append-only store: a record after a lost one survived (keep={keep}/{pages_total})"
+                    );
+                    assert_eq!(&recovered, original, "survivor must round-trip byte-exactly");
+                    alive += 1;
+                    match w {
+                        Written::Snap { .. } => live_snaps += 1,
+                        Written::Pfx { .. } => live_pfx += 1,
+                    }
+                }
+                None => dead_seen = true,
+            }
+        }
+        let st = store.stats();
+        assert_eq!(st.recovered_snapshots, live_snaps, "recovery count vs served snapshots");
+        assert_eq!(st.recovered_prefix_blocks, live_pfx, "recovery count vs served prefix blocks");
+        if keep == pages_total {
+            assert_eq!(alive, written.len(), "nothing cut ⇒ everything recovers");
+            assert_eq!(st.quarantined_pages, 0, "clean file must quarantine nothing");
+        }
+        drop(store);
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+fn chat_requests(gen: &SharedPrefixGen, vocab: usize) -> Vec<Request> {
+    gen.generate()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request::new(gen.prompt_tokens(i, vocab), r.gen_tokens))
+        .collect()
+}
+
+fn run_engine(cfg: EngineConfig, reqs: &[Request]) -> (Engine, Vec<RequestOutput>) {
+    let mut e = Engine::new(cfg).unwrap();
+    for r in reqs {
+        e.submit(r.clone()).unwrap();
+    }
+    let mut outs = e.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    (e, outs)
+}
+
+fn streams(outs: &[RequestOutput]) -> Vec<(u64, Vec<i32>, FinishReason)> {
+    outs.iter().map(|o| (o.id, o.tokens.clone(), o.finish)).collect()
+}
+
+fn chat_gen() -> SharedPrefixGen {
+    SharedPrefixGen {
+        shared_tokens: 48,
+        users: 3,
+        turns: 2,
+        turn_tokens: 10,
+        gen_tokens: 8,
+        rate: 32.0,
+        seed: 0xF11E_D00D,
+    }
+}
+
+#[test]
+fn warm_restart_recovers_prefix_blocks_and_replays_bit_identically() {
+    let gen = chat_gen();
+    let reqs = chat_requests(&gen, 2048);
+    let base = EngineConfig {
+        enable_prefix_cache: true,
+        kv_layout: Some("kv8".into()),
+        ..EngineConfig::default()
+    };
+
+    let (path, store) = fresh_store("warm.pages");
+    let cold_cfg = EngineConfig { store: Some(store.clone()), ..base.clone() };
+    let (cold_e, cold_outs) = run_engine(cold_cfg, &reqs);
+    assert!(cold_e.stats.store_published_blocks > 0, "cold run must publish prefix blocks");
+    let committed = store.stats().prefix_blocks;
+    assert!(committed > 0);
+    drop(cold_e);
+    drop(store);
+
+    // The restart: a brand-new handle on the same page file, a brand-new
+    // engine with an empty local prefix cache.
+    let warm_store = PageFileStore::open(StoreConfig::new(path.clone())).unwrap();
+    assert_eq!(
+        warm_store.stats().recovered_prefix_blocks,
+        committed,
+        "reopen must recover every committed prefix block"
+    );
+    assert_eq!(warm_store.stats().quarantined_pages, 0);
+    let warm_cfg = EngineConfig { store: Some(warm_store.clone()), ..base };
+    let (warm_e, warm_outs) = run_engine(warm_cfg, &reqs);
+    assert!(warm_e.stats.store_prefix_hits > 0, "warm engine must adopt recovered blocks");
+    assert!(warm_e.stats.store_prefix_hit_tokens > 0);
+    assert_eq!(streams(&cold_outs), streams(&warm_outs), "warm replay must be bit-identical");
+    // The adopted bytes are disk traffic, attributed to the snapshot's
+    // recorded rung (kv8 here), and never PCIe-swap traffic.
+    assert!(warm_e.stats.store_disk_bytes_by_rung[1] > 0);
+    assert_eq!(warm_e.stats.swap_pcie_bytes_by_rung, [0usize; 3]);
+    drop(warm_e);
+    drop(warm_store);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn kv16_blocks_on_disk_reinflate_into_a_kv4_pool_bit_exactly() {
+    // PR 5's warm-restore follow-up: a wide (kv16) snapshot on disk must
+    // land in a narrower (kv4) pool via the byte-exact transcode, and —
+    // because the sim's codes are a pure function of (token, position) —
+    // match a storeless kv4 run exactly.
+    let gen = chat_gen();
+    let reqs = chat_requests(&gen, 2048);
+    let mk = |layout: &str, store: Option<Arc<PageFileStore>>| EngineConfig {
+        enable_prefix_cache: true,
+        kv_layout: Some(layout.into()),
+        store,
+        ..EngineConfig::default()
+    };
+
+    let (path, store) = fresh_store("xlayout.pages");
+    let (pub_e, _) = run_engine(mk("kv16", Some(store.clone())), &reqs);
+    assert!(pub_e.stats.store_published_blocks > 0);
+    drop(pub_e);
+
+    let (baseline_e, baseline) = run_engine(mk("kv4", None), &reqs);
+    assert_eq!(baseline_e.stats.store_prefix_hits, 0);
+    let (adopt_e, adopted) = run_engine(mk("kv4", Some(store.clone())), &reqs);
+    assert!(adopt_e.stats.store_prefix_hits > 0, "kv4 engine must adopt the kv16 chain");
+    // Disk bytes carry the *stored* layout's rung (kv16 = rung 0).
+    assert!(adopt_e.stats.store_disk_bytes_by_rung[0] > 0);
+    assert_eq!(streams(&adopted), streams(&baseline), "cross-layout adoption must be exact");
+    drop(adopt_e);
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn cancelling_a_swapped_victim_drops_its_entry_without_pricing_a_swap_in() {
+    // Satellite regression: the old SwapStore leaked the aborted victim's
+    // host entry and double-counted nothing back in; with the paged
+    // backend the page-file snapshot must also disappear. Engineered
+    // overflow (3 × 17-prompt/32-gen against an 8×16-token pool) forces a
+    // swap-out; the victim is then cancelled while parked.
+    let (path, store) = fresh_store("cancel.pages");
+    let cfg = EngineConfig {
+        precision: "W4A16KV8".parse().unwrap(),
+        max_batch: 4,
+        kv_block_tokens: 16,
+        kv_pool_tokens: 16 * 8,
+        prefill_chunk: 32,
+        scheduler: SchedulerPolicy::Continuous,
+        preemption_mode: PreemptionMode::Swap,
+        store: Some(store.clone()),
+        trace: true,
+        trace_ring_capacity: 1 << 14,
+        ..EngineConfig::default()
+    };
+    let mut e = Engine::new(cfg).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..3 {
+        let prompt: Vec<i32> = (0..17).map(|j| ((i * 211 + j * 7) % 2048) as i32).collect();
+        ids.push(e.submit(Request::new(prompt, 32)).unwrap());
+    }
+    let mut guard = 0;
+    while e.swap_store().is_empty() {
+        e.step().unwrap();
+        guard += 1;
+        assert!(guard < 10_000, "engineered overflow never swapped");
+    }
+    let victim = ids.iter().copied().find(|&id| e.swap_store().contains(id)).unwrap();
+    assert!(store.stats().snapshots > 0, "paged backend must park the victim on disk");
+
+    let pcie_before = e.stats.swap_pcie_bytes_by_rung;
+    let disk_before = e.stats.store_disk_bytes_by_rung;
+    let ins_before = e.swap_store().stats().swap_ins;
+    assert!(e.cancel(victim), "victim is live");
+    assert!(!e.swap_store().contains(victim), "cancel must drop the parked entry");
+    assert_eq!(e.swap_store().stats().dropped, 1);
+    assert_eq!(e.swap_store().stats().swap_ins, ins_before, "no swap-in may be recorded");
+    assert_eq!(e.stats.swap_pcie_bytes_by_rung, pcie_before, "no PCIe bytes for a drop");
+    assert_eq!(e.stats.store_disk_bytes_by_rung, disk_before, "no disk bytes for a drop");
+
+    let mut outs = e.run_to_completion().unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 3);
+    for o in &outs {
+        if o.id == victim {
+            assert_eq!(o.finish, FinishReason::Aborted);
+            assert_eq!(o.abort_reason.as_deref(), Some("cancelled by client"));
+        } else {
+            assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+            assert_eq!(o.tokens.len(), 32);
+        }
+    }
+    assert!(e.swap_store().is_empty(), "swap store must drain");
+    assert_eq!(e.swap_store().used_blocks(), 0);
+    assert_eq!(store.stats().snapshots, 0, "cancel leaked a page-file snapshot");
+    let s = e.swap_store().stats();
+    assert_eq!(s.swap_outs, s.swap_ins + s.dropped, "entry-level conservation");
+    assert!(s.swap_outs > 0);
+
+    // Event ↔ counter reconciliation: Σ SwapOut/SwapIn bytes == the PCIe
+    // counter, Σ StoreWrite/StoreRead bytes == the disk counter — the
+    // aborted victim's swap-out is in both, its never-run swap-in in
+    // neither.
+    let dump = e.trace_dump();
+    assert_eq!(dump.dropped, 0, "ring sized to hold the whole run");
+    let (mut pcie, mut disk) = ([0u64; 3], [0u64; 3]);
+    let add = |acc: &mut [u64; 3], b: &[u64; 3]| {
+        for (a, v) in acc.iter_mut().zip(b) {
+            *a += v;
+        }
+    };
+    for ev in &dump.events {
+        match &ev.kind {
+            EventKind::SwapOut { bytes_by_rung, .. } | EventKind::SwapIn { bytes_by_rung, .. } => {
+                add(&mut pcie, bytes_by_rung)
+            }
+            EventKind::StoreWrite { bytes_by_rung, .. }
+            | EventKind::StoreRead { bytes_by_rung, .. } => add(&mut disk, bytes_by_rung),
+            _ => {}
+        }
+    }
+    assert_eq!(pcie, e.stats.swap_pcie_bytes_by_rung.map(|b| b as u64), "PCIe reconciliation");
+    assert_eq!(disk, e.stats.store_disk_bytes_by_rung.map(|b| b as u64), "disk reconciliation");
+    drop(e);
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+}

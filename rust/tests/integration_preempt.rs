@@ -16,6 +16,7 @@
 use turbomind::config::engine::{PreemptionMode, SchedulerPolicy};
 use turbomind::config::EngineConfig;
 use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use turbomind::kvcache::SwapBackend;
 use turbomind::util::proptest::run_prop;
 use turbomind::workload::BurstGen;
 
@@ -73,8 +74,8 @@ fn assert_drained(e: &Engine, ctx: &str) {
     assert!(swap.is_empty(), "{ctx}: swap store must drain");
     assert_eq!(swap.used_blocks(), 0, "{ctx}");
     assert_eq!(
-        swap.stats.swap_outs,
-        swap.stats.swap_ins + swap.stats.dropped,
+        swap.stats().swap_outs,
+        swap.stats().swap_ins + swap.stats().dropped,
         "{ctx}: every swap-out is either restored or downgraded"
     );
 }
@@ -235,7 +236,7 @@ fn recompute_mode_regenerates_the_victim_exactly() {
     assert!(e.preempt_stats.recompute_preemptions >= 1);
     // The victim re-prefilled its prompt + generated prefix (32 tokens).
     assert!(e.preempt_stats.recomputed_tokens >= 32);
-    assert_eq!(e.swap_store().stats.swap_outs, 0);
+    assert_eq!(e.swap_store().stats().swap_outs, 0);
     assert_eq!(e.stats.aborted, 0);
     assert_drained(&e, "engineered recompute");
 }

@@ -22,6 +22,7 @@ use std::collections::BTreeMap;
 use turbomind::config::engine::{LadderPolicy, PreemptionMode, SchedulerPolicy};
 use turbomind::config::EngineConfig;
 use turbomind::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use turbomind::kvcache::SwapBackend;
 use turbomind::trace::{chrome_trace, validate, EventKind, TraceTrack};
 use turbomind::util::proptest::run_prop;
 
@@ -181,8 +182,8 @@ fn reconcile(e: &Engine, outs: &[RequestOutput], ctx: &str) {
         p.preemptions - p.ladder_preemptions,
         "{ctx}: one swap/recompute decision per evicted victim"
     );
-    assert_eq!(swap_outs, e.swap_store().stats.swap_outs, "{ctx}: swap-out events");
-    assert_eq!(swap_ins, e.swap_store().stats.swap_ins, "{ctx}: swap-in events");
+    assert_eq!(swap_outs, e.swap_store().stats().swap_outs, "{ctx}: swap-out events");
+    assert_eq!(swap_ins, e.swap_store().stats().swap_ins, "{ctx}: swap-in events");
 
     // Telemetry is the same arrays re-exported (plus live pool occupancy).
     let t = e.telemetry();
@@ -350,7 +351,7 @@ fn mixed_layout_swap_bytes_split_per_rung_and_match_headline_exactly() {
     assert_eq!(outs.len(), 3, "lossless swap mode must complete everything");
     let p = e.preemption_summary();
     assert!(p.swap_preemptions > 0, "the engineered shape must force swap-outs");
-    assert!(e.swap_store().stats.swap_ins > 0, "and restore at least one victim");
+    assert!(e.swap_store().stats().swap_ins > 0, "and restore at least one victim");
 
     use turbomind::kvcache::swap::transfer_time_s;
     let mut by_rung = [0u64; 3];
